@@ -1,0 +1,94 @@
+//! Fig 4(b): IMA circuit output vs ideal MAC value distribution.
+//!
+//! Reproduces the paper's 256-conversion experiment: MAC values drawn
+//! from a realistic score distribution are converted by the noisy
+//! topkima IMA; we report the code-vs-ideal scatter summary, the error
+//! histogram in LSB, and the correlation — the inputs the paper feeds
+//! into its error-injection accuracy run (the accuracy side lives in
+//! `make fig4b`, python, using the same error model; the paper sees
+//! 86.7% → 85.1%).
+
+use topkima::ima::{ColumnNoise, NoiseModel, TopkimaConverter};
+use topkima::util::bench::header;
+use topkima::util::rng::Rng;
+use topkima::util::stats;
+
+fn main() {
+    header("Fig 4b — theoretical vs simulated MAC value (256 conversions)");
+    let columns = 256;
+    let conversions = 256;
+    let mut rng = Rng::new(42);
+
+    let fs = 4000.0;
+    let mut conv = TopkimaConverter::ideal(columns, fs);
+    conv.noise = ColumnNoise::new(NoiseModel::default(), columns, &mut rng);
+
+    let mut ideal_codes = Vec::new();
+    let mut sim_codes = Vec::new();
+    for _ in 0..conversions {
+        let macs: Vec<i64> = (0..columns)
+            .map(|_| (rng.normal() * 1200.0) as i64)
+            .collect();
+        let res = conv.convert_full(&macs, &mut rng);
+        for o in &res.outputs {
+            let ideal =
+                topkima::quant::adc_code(macs[o.column] as f32, fs as f32, 5);
+            ideal_codes.push(ideal as f64);
+            sim_codes.push(o.code as f64);
+        }
+    }
+
+    let err: Vec<f64> = sim_codes
+        .iter()
+        .zip(&ideal_codes)
+        .map(|(s, i)| s - i)
+        .collect();
+    println!("samples                 {}", err.len());
+    println!("mean error (LSB)        {:+.3}", stats::mean(&err));
+    println!("std  error (LSB)        {:.3}", stats::std_dev(&err));
+    println!("correlation sim~ideal   {:.4}",
+             stats::correlation(&sim_codes, &ideal_codes));
+    println!("rmse (LSB)              {:.3}", stats::rmse(&sim_codes, &ideal_codes));
+
+    header("error histogram (LSB)");
+    let (centers, counts) = stats::histogram(&err, -3.0, 3.0, 13);
+    let max = *counts.iter().max().unwrap_or(&1) as f64;
+    for (c, n) in centers.iter().zip(&counts) {
+        let bar = "#".repeat((48.0 * *n as f64 / max) as usize);
+        println!("{c:>+5.1} {n:>7} {bar}");
+    }
+
+    header("noise ablation — selection disturbance of top-5");
+    // How often does conversion noise change the top-k selection set?
+    for (label, nm) in [
+        ("5b quantization only", NoiseModel { sigma_noise: 0.0, sigma_offset: 0.0, p_skip: 0.0 }),
+        ("default (paper-like)", NoiseModel::default()),
+        ("2x noise", NoiseModel { sigma_noise: 1.0, sigma_offset: 0.6, p_skip: 0.04 }),
+    ] {
+        let mut rng2 = Rng::new(7);
+        let mut noisy = TopkimaConverter::ideal(columns, fs);
+        noisy.noise = ColumnNoise::new(nm, columns, &mut rng2);
+        let mut overlap = 0usize;
+        let trials = 200;
+        for _ in 0..trials {
+            let macs: Vec<i64> = (0..columns)
+                .map(|_| (rng2.normal() * 1200.0) as i64)
+                .collect();
+            let got = noisy.convert_topk(&macs, 5, &mut rng2);
+            let mut oracle: Vec<(i64, usize)> =
+                macs.iter().enumerate().map(|(c, &m)| (-m, c)).collect();
+            oracle.sort();
+            let want: Vec<usize> =
+                oracle.iter().take(5).map(|&(_, c)| c).collect();
+            overlap += got
+                .outputs
+                .iter()
+                .filter(|o| want.contains(&o.column))
+                .count();
+        }
+        println!(
+            "{label:<22} mean top-5 overlap {:.2}/5",
+            overlap as f64 / trials as f64
+        );
+    }
+}

@@ -1,0 +1,71 @@
+//! Fig 4(d): scale-implementation comparison.
+//!
+//! One BERT-base attention head (384×384 score block) with the three
+//! scaling strategies of Sec. III-C. The attention-pipeline baseline
+//! latency comes from the system simulator's score stage; each scaling
+//! scheme adds its own cost. Paper: scale-free is 2.4× faster than
+//! left-shift scale [1] and 1.5× faster than Tron's free scale [21].
+
+use topkima::circuits::Timing;
+use topkima::model::TransformerConfig;
+use topkima::scale::ScaleImpl;
+use topkima::util::bench::header;
+
+fn main() {
+    header("Fig 4d — scaling operation implementations");
+    let tc = TransformerConfig::bert_base();
+    let t = Timing::default();
+
+    // Per-score-row conversion stage: PWM + IMA/arbiter, then the
+    // scaling scheme (all d elements of a row rescale before softmax).
+    let row_base = t.t_pwm_input() + t.t_ima_arb(0.31, tc.topk);
+
+    println!(
+        "{:<26} {:>14} {:>14} {:>10}",
+        "scheme", "scale (ns/row)", "stage (ns/row)", "slowdown"
+    );
+    let mut base_total = 0.0;
+    for s in [
+        ScaleImpl::ScaleFree,
+        ScaleImpl::TronFreeScale,
+        ScaleImpl::LeftShift,
+    ] {
+        let cost = s.cost(1, tc.seq_len, &t);
+        let total = row_base + cost.latency_ns;
+        if s == ScaleImpl::ScaleFree {
+            base_total = total;
+        }
+        println!(
+            "{:<26} {:>14.0} {:>14.0} {:>9.2}x",
+            s.name(),
+            cost.latency_ns,
+            total,
+            total / base_total
+        );
+    }
+    println!(
+        "\npaper: scale-free 2.4x faster than left-shift, 1.5x than Tron"
+    );
+
+    header("energy of the scaling stage (pJ per head-block)");
+    for s in [
+        ScaleImpl::ScaleFree,
+        ScaleImpl::TronFreeScale,
+        ScaleImpl::LeftShift,
+    ] {
+        let cost = s.cost(tc.seq_len, tc.seq_len, &t);
+        println!("{:<26} {:>14.0}", s.name(), cost.energy_pj);
+    }
+
+    header("full-block view (SL x SL, rows pipelined)");
+    println!("{:<26} {:>16} {:>16}", "scheme", "latency (ns)", "energy (pJ)");
+    for s in [
+        ScaleImpl::ScaleFree,
+        ScaleImpl::TronFreeScale,
+        ScaleImpl::LeftShift,
+    ] {
+        let cost = s.cost(tc.seq_len, tc.seq_len, &t);
+        println!("{:<26} {:>16.0} {:>16.0}", s.name(), cost.latency_ns,
+                 cost.energy_pj);
+    }
+}

@@ -1,0 +1,34 @@
+//! Fig 4(g)/(h): module latency & energy breakdown by operation.
+//!
+//! Paper findings: X·W_{Q,K,V} is the slowest stage (largest weights, no
+//! head parallelism); Q·K^T and A·V dominate energy (12 heads), with A·V
+//! cheaper than Q·K^T thanks to the k-sparse A after topkima softmax.
+
+use topkima::model::TransformerConfig;
+use topkima::sim::{report, simulate_attention, SimConfig, SoftmaxKind};
+use topkima::util::bench::header;
+
+fn main() {
+    let tc = TransformerConfig::bert_base();
+    for softmax in [SoftmaxKind::Conventional, SoftmaxKind::Topkima] {
+        let sc = SimConfig { softmax, ..SimConfig::default() };
+        let r = simulate_attention(&tc, &sc);
+        header(&format!(
+            "Fig 4g/h — per-operation breakdown ({})",
+            softmax.name()
+        ));
+        print!("{}", report::operation_table(&r));
+    }
+
+    // Sparsity ablation: A·V energy with and without top-k sparsity.
+    header("A·V energy vs k (sparsity ablation)");
+    println!("{:<10} {:>16}", "k", "A·V energy (pJ)");
+    for k in [0usize, 1, 5, 10, 20, 50] {
+        let tc_k = TransformerConfig { topk: k, ..tc };
+        let sc = SimConfig::default();
+        let r = simulate_attention(&tc_k, &sc);
+        let av = r.by_operation()[2];
+        let label = if k == 0 { "dense".to_string() } else { k.to_string() };
+        println!("{label:<10} {:>16.0}", av.2);
+    }
+}

@@ -1,0 +1,58 @@
+//! Table I: comparison with state-of-the-art accelerators.
+//!
+//! Published rows (ELSA, ReTransformer, TranCIM, X-Former, HARDSEA) vs
+//! our simulated Topkima-Former point on the paper's workload (one
+//! BERT-base attention module, 200 MHz, 0.5 V, 256×256 arrays, 5b ADC).
+//! Paper claims: 6.70 TOPS, 16.84 TOPS/W; 1.8×–84× speedup and
+//! 1.3×–35× EE over the prior IMC accelerators.
+
+use topkima::accel;
+use topkima::model::TransformerConfig;
+use topkima::sim::{SimConfig, SoftmaxKind};
+use topkima::util::bench::header;
+
+fn main() {
+    header("Table I — comparison with state-of-the-art");
+    let tc = TransformerConfig::bert_base();
+    let sc = SimConfig::default();
+    let point = accel::system_point(&tc, &sc);
+    print!("{}", accel::render_table(&point));
+
+    header("ratios (this work / baseline)");
+    for (name, speed, ee) in accel::comparison(&point) {
+        println!(
+            "vs {name:<15} speed {}  EE {}",
+            speed.map_or("    - ".into(), |s| format!("{s:6.1}x")),
+            ee.map_or("    - ".into(), |e| format!("{e:6.1}x")),
+        );
+    }
+    println!("\npaper bands: speed 1.8x-84x, EE 1.3x-35x");
+
+    header("ablation: our system with baseline softmax macros");
+    for softmax in [
+        SoftmaxKind::Conventional,
+        SoftmaxKind::Dtopk,
+        SoftmaxKind::Topkima,
+    ] {
+        let p = accel::system_point(
+            &tc,
+            &SimConfig { softmax, ..SimConfig::default() },
+        );
+        println!(
+            "{:<14} {:>8.2} TOPS {:>8.2} TOPS/W",
+            softmax.name(),
+            p.tops,
+            p.ee_tops_w
+        );
+    }
+
+    header("workload scaling (SL sweep, topkima)");
+    println!("{:<8} {:>10} {:>12}", "SL", "TOPS", "TOPS/W");
+    for sl in [197usize, 384, 1024, 4096] {
+        let p = accel::system_point(
+            &tc.with_seq_len(sl),
+            &SimConfig::default(),
+        );
+        println!("{sl:<8} {:>10.2} {:>12.2}", p.tops, p.ee_tops_w);
+    }
+}

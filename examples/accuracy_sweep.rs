@@ -1,0 +1,77 @@
+//! Fig 3 re-check through the full rust stack.
+//!
+//! Runs every exported per-k model executable (trained with TFCBP at
+//! k=5, then masked to each k at export) over the synthetic eval split
+//! via PJRT and prints accuracy vs k — the rust-side confirmation of the
+//! python Fig 3 sweep. Needs `make artifacts`.
+//!
+//! Run: `cargo run --release --example accuracy_sweep [-- --model vit]`
+
+fn main() -> anyhow::Result<()> {
+    use topkima::runtime::Engine;
+
+    let args: Vec<String> = std::env::args().collect();
+    let family = args
+        .iter()
+        .position(|a| a == "--model")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "bert".to_string());
+    let batch = 32usize;
+    let limit = 512usize;
+
+    let engine = Engine::new("artifacts")?;
+    let eval = engine.manifest.eval_set(&family)?;
+    let ks = engine.manifest.k_values(&family);
+    println!(
+        "Fig 3 re-check: {family}, {} eval samples, k in {ks:?}",
+        eval.len()
+    );
+    println!("{:<8} {:>10} {:>14}", "k", "accuracy", "compile (ms)");
+
+    for k in ks {
+        let model = engine.load(&family, k, batch)?;
+        let n = (limit.min(eval.len()) / batch) * batch;
+        let stride = eval.x_stride();
+        let mut correct = 0usize;
+        for b0 in (0..n).step_by(batch) {
+            let out = if eval.kind == "vit" {
+                model.run_f32(&eval.x_f32[b0 * stride..(b0 + batch) * stride])?
+            } else {
+                model.run_i32(&eval.x_i32[b0 * stride..(b0 + batch) * stride])?
+            };
+            let per = out.len() / batch;
+            for i in 0..batch {
+                let o = &out[i * per..(i + 1) * per];
+                let idx = b0 + i;
+                let ok = if eval.kind == "vit" {
+                    argmax(o) as i32 == eval.y_i32[idx]
+                } else {
+                    let sl = o.len() / 2;
+                    let starts: Vec<f32> =
+                        (0..sl).map(|t| o[t * 2]).collect();
+                    let ends: Vec<f32> =
+                        (0..sl).map(|t| o[t * 2 + 1]).collect();
+                    argmax(&starts) as i32 == eval.y_i32[idx * 2]
+                        && argmax(&ends) as i32 == eval.y_i32[idx * 2 + 1]
+                };
+                correct += ok as usize;
+            }
+        }
+        let label = if k == 0 { "full".into() } else { k.to_string() };
+        println!(
+            "{label:<8} {:>10.3} {:>14.0}",
+            correct as f64 / n as f64,
+            model.compile_ms
+        );
+    }
+    Ok(())
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}

@@ -1,0 +1,84 @@
+//! Full hardware evaluation report — every figure/table in one run.
+//!
+//! Prints Fig 4a (macro ratios), Fig 4d (scale schemes), Fig 4e/f
+//! (component breakdown), Fig 4g/h (operation breakdown) and Table I for
+//! the paper's BERT-base workload. `--seq-len N` overrides SL;
+//! `--table1` prints only the comparison table.
+//!
+//! Run: `cargo run --release --example hw_report [-- --seq-len 4096]`
+
+use topkima::accel;
+use topkima::circuits::{BlockDims, Energy, Timing};
+use topkima::model::TransformerConfig;
+use topkima::scale::ScaleImpl;
+use topkima::sim::{report, simulate_attention, SimConfig, SoftmaxKind};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let seq_len = args
+        .iter()
+        .position(|a| a == "--seq-len")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(384usize);
+    let table1_only = args.iter().any(|a| a == "--table1");
+
+    let tc = TransformerConfig::bert_base().with_seq_len(seq_len);
+    let sc = SimConfig::default();
+
+    if !table1_only {
+        let t = Timing::default();
+        let e = Energy::default();
+        let (d, k, alpha) = (seq_len, tc.topk, sc.alpha);
+        let dims = BlockDims { d, rows: 64 * 3, k };
+        println!("== Fig 4a (Eq 3/4, d={d}, k={k}, alpha={alpha}) ==");
+        println!(
+            "speed: {:.1}x vs conv-SM, {:.1}x vs Dtopk-SM",
+            t.conv_sm(d) / t.topkima_sm(d, k, alpha),
+            t.dtopk_sm(d, k) / t.topkima_sm(d, k, alpha)
+        );
+        println!(
+            "energy: {:.1}x vs conv-SM, {:.1}x vs Dtopk-SM\n",
+            e.conv_sm(&dims, &t) / e.topkima_sm(&dims, &t, alpha),
+            e.dtopk_sm(&dims, &t) / e.topkima_sm(&dims, &t, alpha)
+        );
+
+        println!("== Fig 4d (per score row) ==");
+        let row_base = t.t_pwm_input() + t.t_ima_arb(alpha, k);
+        for s in [ScaleImpl::LeftShift, ScaleImpl::TronFreeScale] {
+            let c = s.cost(1, d, &t);
+            println!(
+                "scale-free is {:.2}x faster than {}",
+                (row_base + c.latency_ns) / row_base,
+                s.name()
+            );
+        }
+
+        let r = simulate_attention(&tc, &sc);
+        println!("\n== Fig 4e/f ==\n{}", report::component_table(&r));
+        println!("== Fig 4g/h ==\n{}", report::operation_table(&r));
+        for softmax in [
+            SoftmaxKind::Conventional,
+            SoftmaxKind::Dtopk,
+            SoftmaxKind::Topkima,
+        ] {
+            let r = simulate_attention(
+                &tc,
+                &SimConfig { softmax, ..SimConfig::default() },
+            );
+            println!("{}", report::system_summary(&r));
+        }
+        println!();
+    }
+
+    println!("== Table I ==");
+    let point = accel::system_point(&tc, &sc);
+    print!("{}", accel::render_table(&point));
+    for (name, speed, ee) in accel::comparison(&point) {
+        println!(
+            "vs {name:<15} speed {}  EE {}",
+            speed.map_or("    - ".into(), |s| format!("{s:6.1}x")),
+            ee.map_or("    - ".into(), |e| format!("{e:6.1}x")),
+        );
+    }
+}

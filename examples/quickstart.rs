@@ -1,0 +1,72 @@
+//! Quickstart: the whole stack in one file.
+//!
+//! 1. Circuit level — run the topkima macro on a toy crossbar and watch
+//!    it pick the top-k columns with early stopping.
+//! 2. Architecture level — simulate one BERT-base attention module and
+//!    print the Table-I-style summary.
+//! 3. Serving level (optional) — if `artifacts/` exists, load the AOT
+//!    BERT model through PJRT and answer one synthetic SQuAD query.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use topkima::crossbar::{Crossbar, Tech};
+use topkima::model::TransformerConfig;
+use topkima::sim::{report, simulate_attention, SimConfig};
+use topkima::softmax::macros::MacroParts;
+use topkima::softmax::{SoftmaxMacro, TopkimaSm};
+use topkima::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // ---- 1. circuit level: one topkima-SM conversion --------------------
+    println!("== 1. topkima macro on a toy 8-col crossbar ==");
+    let depth = 4;
+    // K^T codes: column j gets a distinctive weight pattern
+    let kt: Vec<Vec<i32>> = (0..depth)
+        .map(|r| (0..8).map(|c| ((r + c) % 15) as i32 - 7).collect())
+        .collect();
+    let xbar = Crossbar::program(Tech::Sram, 64, 16, 16, &kt);
+    let topkima = TopkimaSm { parts: MacroParts::new(xbar), k: 3 };
+    let q = vec![vec![5, -3, 7, 2]];
+    let (probs, cost) = topkima.run(&q, &mut Rng::new(1));
+    println!("attention row: {:?}", probs[0]
+        .iter().map(|p| (p * 1000.0).round() / 1000.0).collect::<Vec<_>>());
+    println!(
+        "-> exactly 3 non-zero scores, early-stop alpha = {:.2}, \
+         latency {:.0} ns, energy {:.0} pJ\n",
+        cost.alpha, cost.latency_ns, cost.energy_pj
+    );
+
+    // ---- 2. architecture level: one attention module --------------------
+    println!("== 2. BERT-base attention module on the fabric ==");
+    let tc = TransformerConfig::bert_base();
+    let r = simulate_attention(&tc, &SimConfig::default());
+    println!("{}\n", report::system_summary(&r));
+
+    // ---- 3. serving level: PJRT inference (needs `make artifacts`) ------
+    println!("== 3. AOT model through PJRT ==");
+    match topkima::runtime::Engine::new("artifacts") {
+        Ok(engine) => {
+            let eval = engine.manifest.eval_set("bert")?;
+            let model = engine.load("bert", 5, 1)?;
+            let stride = eval.x_stride();
+            let out = model.run_i32(&eval.x_i32[..stride])?;
+            let sl = out.len() / 2;
+            let start = (0..sl)
+                .max_by(|&a, &b| out[a * 2].partial_cmp(&out[b * 2]).unwrap())
+                .unwrap();
+            let end = (0..sl)
+                .max_by(|&a, &b| {
+                    out[a * 2 + 1].partial_cmp(&out[b * 2 + 1]).unwrap()
+                })
+                .unwrap();
+            println!(
+                "predicted span ({start}, {end}); gold ({}, {})",
+                eval.y_i32[0], eval.y_i32[1]
+            );
+        }
+        Err(e) => {
+            println!("artifacts not built ({e}); run `make artifacts` first");
+        }
+    }
+    Ok(())
+}

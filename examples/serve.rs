@@ -1,0 +1,142 @@
+//! End-to-end serving driver (the repo's headline example).
+//!
+//! Loads the TFCBP-trained BERT-tiny artifacts, starts the coordinator
+//! (router + dynamic batcher + PJRT executor), replays the synthetic
+//! SQuAD eval split as a Poisson-ish request trace, and reports:
+//!
+//! * answer exact-match accuracy through the full rust serving path,
+//! * p50/p95/p99 latency, throughput, batch occupancy,
+//! * the co-simulated hardware cost of the same trace on the
+//!   Topkima-Former fabric (TOPS, TOPS/W, softmax-macro speedup) —
+//!   i.e. what this trace would cost on the paper's silicon.
+//!
+//! Run: `make artifacts && cargo run --release --example serve`
+//! Flags: `--requests N` (default 256), `--model bert|vit`, `--k K`.
+
+use std::time::Duration;
+
+use topkima::coordinator::{Coordinator, InputData, PjrtExecutor, Router};
+use topkima::model::TransformerConfig;
+use topkima::runtime::Engine;
+use topkima::sim::{simulate_attention, SimConfig, SoftmaxKind};
+use topkima::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let get = |name: &str, default: &str| -> String {
+        args.iter()
+            .position(|a| a == name)
+            .and_then(|i| args.get(i + 1))
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    };
+    let family = get("--model", "bert");
+    let k: usize = get("--k", "5").parse()?;
+    let n_requests: usize = get("--requests", "256").parse()?;
+
+    // ---- load artifacts + eval trace ------------------------------------
+    let engine = Engine::new("artifacts")?;
+    println!("platform {}", engine.platform());
+    let buckets = engine.manifest.batch_sizes(&family, k);
+    anyhow::ensure!(!buckets.is_empty(), "no artifacts for {family} k={k}");
+    let ckpt = &engine.manifest.checkpoints[&family];
+    println!(
+        "{family} checkpoint: {} params, trained eval acc {:.3}",
+        ckpt.params, ckpt.accuracy
+    );
+    println!("serve buckets {buckets:?}");
+    let eval = engine.manifest.eval_set(&family)?;
+
+    // ---- start coordinator ----------------------------------------------
+    let mut router = Router::new();
+    router.register(&family, k, buckets.clone(), Duration::from_millis(2));
+    let fam2 = family.clone();
+    let mut coord = Coordinator::start(router, move || {
+        let engine = Engine::new("artifacts").expect("engine");
+        Box::new(
+            PjrtExecutor::preload(&engine, &[(fam2, k, buckets)])
+                .expect("preload"),
+        )
+    });
+
+    // ---- replay the trace with jittered arrivals -------------------------
+    let n = n_requests.min(eval.len());
+    let stride = eval.x_stride();
+    let mut rng = Rng::new(2026);
+    let t0 = std::time::Instant::now();
+    let mut rxs = Vec::with_capacity(n);
+    for i in 0..n {
+        let input = if eval.kind == "vit" {
+            InputData::F32(eval.x_f32[i * stride..(i + 1) * stride].to_vec())
+        } else {
+            InputData::I32(eval.x_i32[i * stride..(i + 1) * stride].to_vec())
+        };
+        rxs.push(coord.submit(&family, k, input));
+        // bursty arrivals: occasionally pause so the batcher sees both
+        // full and timeout-formed batches
+        if rng.chance(0.05) {
+            std::thread::sleep(Duration::from_micros(500));
+        }
+    }
+
+    let mut correct = 0usize;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv_timeout(Duration::from_secs(300))?;
+        let o = &resp.output;
+        let ok = if eval.kind == "vit" {
+            argmax(o) as i32 == eval.y_i32[i]
+        } else {
+            let sl = o.len() / 2;
+            let starts: Vec<f32> = (0..sl).map(|t| o[t * 2]).collect();
+            let ends: Vec<f32> = (0..sl).map(|t| o[t * 2 + 1]).collect();
+            argmax(&starts) as i32 == eval.y_i32[i * 2]
+                && argmax(&ends) as i32 == eval.y_i32[i * 2 + 1]
+        };
+        correct += ok as usize;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let metrics = coord.shutdown();
+
+    println!("\n== serving metrics ==\n{}", metrics.summary());
+    println!(
+        "exact match: {:.3} ({correct}/{n}); wall {:.2}s = {:.1} req/s",
+        correct as f64 / n as f64,
+        wall,
+        n as f64 / wall
+    );
+
+    // ---- co-simulate the same trace on the Topkima-Former fabric ---------
+    println!("\n== hardware co-simulation of this trace ==");
+    let tc = TransformerConfig::bert_tiny();
+    for softmax in
+        [SoftmaxKind::Conventional, SoftmaxKind::Dtopk, SoftmaxKind::Topkima]
+    {
+        let sc = SimConfig { softmax, ..SimConfig::default() };
+        let r = simulate_attention(&tc, &sc);
+        let module_ns = r.latency_ns();
+        let module_pj = r.energy_pj();
+        let total_ms =
+            module_ns * tc.n_layers as f64 * n as f64 / 1e6;
+        let total_mj =
+            module_pj * tc.n_layers as f64 * n as f64 / 1e9;
+        println!(
+            "{:<12} {n} requests x {} layers: {:.2} ms, {:.3} mJ \
+             ({:.2} TOPS, {:.2} TOPS/W)",
+            softmax.name(),
+            tc.n_layers,
+            total_ms,
+            total_mj,
+            r.tops(),
+            r.tops_per_watt()
+        );
+    }
+    Ok(())
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}

@@ -1,0 +1,262 @@
+"""AOT pipeline: train (or load) checkpoints, lower to HLO text, emit
+artifacts + manifest for the rust runtime.
+
+Interchange format is **HLO text**, not serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Emitted artifacts (``make artifacts``):
+
+* ``{model}_k{K}_b{B}.hlo.txt`` — full inference graph for model family
+  ``model`` with topkima k=K at batch B, **weights baked in as
+  constants** (the fabric's weights are programmed once; the request path
+  carries only activations). Scale-free folding (Sec. III-C) is applied
+  before lowering, so the exported graph contains no 1/sqrt(d_k) scaling.
+* ``attention_head_k{K}.hlo.txt`` — the fused L1 Pallas topkima attention
+  head on its own (interpret=True → plain HLO), proving the
+  pallas→HLO→PJRT path and used by the rust macro parity tests.
+* ``eval_{task}.{bin,json}`` — the synthetic eval split in a flat
+  little-endian binary + JSON shape header, replayed by the rust serving
+  examples.
+* ``manifest.json`` — index of all of the above with shapes, dtypes,
+  configs and checkpoint eval accuracy.
+
+Python never runs again after this step: the rust binary is self-contained.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as D
+from . import model as M
+from . import train as T
+from .kernels.attention import topkima_attention
+
+# Batch sizes the serving batcher may form; one executable each (bucketed
+# batching, the standard PJRT serving pattern).
+SERVE_BATCH_SIZES = (1, 2, 4, 8, 16)
+# k values exported for the rust-side Fig 3 re-check.
+SWEEP_KS = (1, 2, 5, 10, 0)  # 0 == full softmax baseline
+# batch used by the rust accuracy-sweep example
+EVAL_BATCH = 32
+
+# Trained-model hyperparameters (small enough to train at build time, big
+# enough to show the paper's top-k behaviour).
+VIT_CFG = dataclasses.replace(
+    M.VIT_TINY, d_model=64, n_heads=4, n_layers=3, d_ff=128, n_classes=10)
+BERT_CFG = dataclasses.replace(
+    M.BERT_TINY, d_model=128, n_heads=4, n_layers=3, d_ff=256, seq_len=64)
+
+TRAIN_STEPS = {"vit": 600, "bert": 3000}
+TRAIN_LR = {"vit": 1e-3, "bert": 1e-3}
+
+
+def to_hlo_text(lowered) -> str:
+    """jax Lowered → XLA HLO text (the rust-loadable format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants=True: the default printer ELIDES big weight
+    # literals as `constant({...})`, which the rust-side parser fills
+    # with zeros — the exported graph must carry every weight verbatim.
+    return comp.as_hlo_text(True)
+
+
+def _checkpoint_path(out_dir: Path, name: str) -> Path:
+    return out_dir / "checkpoints" / f"{name}.pkl"
+
+
+def train_or_load(out_dir: Path, name: str, cfg: M.ModelConfig,
+                  force: bool = False):
+    """Train the build-time checkpoint for one model family (cached)."""
+    ckpt = _checkpoint_path(out_dir, name)
+    if ckpt.exists() and not force:
+        params, cfg2, meta = T.load_checkpoint(ckpt)
+        print(f"[aot] loaded cached {name}: acc={meta.get('accuracy'):.3f}")
+        return params, cfg2, meta
+    print(f"[aot] training {name} ({cfg.kind}, topk={cfg.topk}) ...")
+    t0 = time.time()
+    out = T.train_model(cfg, steps=TRAIN_STEPS[cfg.kind],
+                        lr=TRAIN_LR[cfg.kind],
+                        n_train=TRAIN_N[cfg.kind], log_every=200)
+    meta = {"accuracy": out["accuracy"], "train_secs": time.time() - t0,
+            "steps": TRAIN_STEPS[cfg.kind]}
+    print(f"[aot] {name}: eval acc {out['accuracy']:.3f} "
+          f"({meta['train_secs']:.0f}s)")
+    T.save_checkpoint(ckpt, out["params"], cfg, meta)
+    return out["params"], cfg, meta
+
+
+def export_model(out_dir: Path, name: str, params, cfg: M.ModelConfig,
+                 batch: int, k: int) -> dict:
+    """Lower one (model, k, batch) inference graph to HLO text."""
+    kcfg = dataclasses.replace(cfg, topk=k)
+    folded = M.fold_scale_free(params, kcfg)
+
+    def infer(x):
+        return (M.forward(folded, kcfg, x, fold_scale=True),)
+
+    if cfg.kind == "vit":
+        spec = jax.ShapeDtypeStruct(
+            (batch, cfg.image_size, cfg.image_size, 3), jnp.float32)
+        in_meta = {"shape": list(spec.shape), "dtype": "f32"}
+        out_shape = [batch, cfg.n_classes]
+    else:
+        spec = jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.int32)
+        in_meta = {"shape": list(spec.shape), "dtype": "i32"}
+        out_shape = [batch, cfg.seq_len, 2]
+
+    lowered = jax.jit(infer).lower(spec)
+    text = to_hlo_text(lowered)
+    fname = f"{name}_k{k}_b{batch}.hlo.txt"
+    (out_dir / fname).write_text(text)
+    print(f"[aot] wrote {fname} ({len(text) / 1e6:.1f} MB)")
+    return {"file": fname, "model": name, "k": k, "batch": batch,
+            "input": in_meta, "output_shape": out_shape,
+            "kind": cfg.kind, "cfg": dataclasses.asdict(kcfg)}
+
+
+def export_attention_head(out_dir: Path, k: int, sl: int = 64,
+                          d_head: int = 32) -> dict:
+    """Lower the fused Pallas topkima head (interpret=True) to HLO."""
+    def head(q, kt, v):
+        return (topkima_attention(q, kt, v, k),)
+
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32)
+             for s in ((sl, d_head), (d_head, sl), (sl, d_head))]
+    lowered = jax.jit(head).lower(*specs)
+    text = to_hlo_text(lowered)
+    fname = f"attention_head_k{k}.hlo.txt"
+    (out_dir / fname).write_text(text)
+    print(f"[aot] wrote {fname}")
+    return {"file": fname, "model": "attention_head", "k": k,
+            "sl": sl, "d_head": d_head,
+            "input": {"shapes": [[sl, d_head], [d_head, sl], [sl, d_head]],
+                      "dtype": "f32"}}
+
+
+def export_eval_set(out_dir: Path, name: str, cfg: M.ModelConfig,
+                    n_eval: int, seed: int = 0) -> dict:
+    """Write the eval split as raw little-endian + JSON header for rust."""
+    _, (xs, ys) = T.make_dataset(cfg, n_train=TRAIN_N[cfg.kind],
+                                 n_eval=n_eval, seed=seed)
+    xbin = out_dir / f"eval_{name}_x.bin"
+    ybin = out_dir / f"eval_{name}_y.bin"
+    np.asarray(xs).astype("<f4" if cfg.kind == "vit" else "<i4").tofile(xbin)
+    np.asarray(ys).astype("<i4").tofile(ybin)
+    meta = {
+        "x_file": xbin.name, "y_file": ybin.name,
+        "x_shape": list(np.asarray(xs).shape),
+        "y_shape": list(np.asarray(ys).shape),
+        "x_dtype": "f32" if cfg.kind == "vit" else "i32",
+        "y_dtype": "i32", "kind": cfg.kind,
+    }
+    (out_dir / f"eval_{name}.json").write_text(json.dumps(meta, indent=1))
+    print(f"[aot] wrote eval_{name} ({meta['x_shape']})")
+    return meta
+
+
+# must match train_model defaults so the eval split equals the one used to
+# report checkpoint accuracy (train is a prefix, eval the suffix).
+TRAIN_N = {"vit": 4096, "bert": 16384}
+
+
+def export_parity_vectors(out_dir: Path, seed: int = 0) -> None:
+    """Golden vectors for the rust `quant` mirror (rust/tests/parity.rs).
+
+    Random floats + the python-side quantization codes; the rust side must
+    reproduce every code exactly (bit-for-bit contract of DESIGN.md §3).
+    """
+    import numpy as np
+
+    from . import quant
+
+    rng = np.random.RandomState(seed)
+    xs = (rng.randn(64) * 2.0).astype(np.float32)
+    q_scale = float(quant.symmetric_scale(jnp.asarray(xs), quant.N_BITS_INPUT))
+    pwm = quant.quantize_codes(jnp.asarray(xs), quant.N_BITS_INPUT, q_scale)
+
+    ws = (rng.randn(64) * 1.5).astype(np.float32)
+    w_scale = float(quant.symmetric_scale(jnp.asarray(ws), 4))
+    wcodes = jnp.clip(jnp.round(jnp.asarray(ws) / w_scale), -7, 7).astype(
+        jnp.int32)
+
+    vs = (rng.randn(64) * 3.0).astype(np.float32)
+    fs = 4.0
+    adc = quant.adc_codes(jnp.asarray(vs), fs, n_bits=quant.N_BITS_ADC)
+
+    blob = {
+        "pwm": {"x": [float(v) for v in xs], "scale": q_scale,
+                "codes": [int(c) for c in np.asarray(pwm)]},
+        "weight": {"w": [float(v) for v in ws], "scale": w_scale,
+                   "codes": [int(c) for c in np.asarray(wcodes)]},
+        "adc": {"v": [float(v) for v in vs], "full_scale": fs,
+                "codes": [int(c) for c in np.asarray(adc)]},
+    }
+    (out_dir / "parity_vectors.json").write_text(json.dumps(blob))
+    print("[aot] wrote parity_vectors.json")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--retrain", action="store_true",
+                    help="ignore cached checkpoints")
+    ap.add_argument("--quick", action="store_true",
+                    help="minimal artifact set (smoke tests)")
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    if args.quick:  # smoke-test the pipeline, not the accuracy
+        TRAIN_STEPS.update({"vit": 60, "bert": 120})
+        TRAIN_N.update({"vit": 1024, "bert": 2048})
+
+    manifest = {"models": [], "attention_heads": [], "eval_sets": {},
+                "checkpoints": {}}
+
+    families = [("bert", BERT_CFG)] if args.quick else [
+        ("vit", VIT_CFG), ("bert", BERT_CFG)]
+
+    for name, cfg in families:
+        params, cfg, meta = train_or_load(out_dir, name, cfg, args.retrain)
+        manifest["checkpoints"][name] = {
+            "accuracy": meta.get("accuracy"),
+            "params": M.count_params(params),
+            "cfg": dataclasses.asdict(cfg),
+        }
+        manifest["eval_sets"][name] = export_eval_set(
+            out_dir, name, cfg, n_eval=1024)
+
+        ks = (cfg.topk,) if args.quick else SWEEP_KS
+        for k in ks:
+            manifest["models"].append(
+                export_model(out_dir, name, params, cfg, EVAL_BATCH, k))
+        # serving executables at the batcher's bucket sizes (default k)
+        batches = (1, 4) if args.quick else SERVE_BATCH_SIZES
+        for b in batches:
+            manifest["models"].append(
+                export_model(out_dir, name, params, cfg, b, cfg.topk))
+
+    for k in ((5,) if args.quick else (1, 5, 10)):
+        manifest["attention_heads"].append(export_attention_head(out_dir, k))
+
+    export_parity_vectors(out_dir)
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"[aot] manifest with {len(manifest['models'])} model "
+          f"executables -> {out_dir / 'manifest.json'}")
+
+
+if __name__ == "__main__":
+    main()

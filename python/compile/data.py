@@ -1,0 +1,144 @@
+"""Synthetic datasets standing in for the paper's benchmarks.
+
+The paper evaluates ViT on CIFAR-10/CIFAR-100 and DistilBERT/BERT-base on
+SQuAD v1.1. Neither the datasets nor pretrained checkpoints are available
+in this environment, so we substitute procedurally generated tasks that
+exercise the same code paths and — crucially for Fig 3 — the same
+*attention statistics*: softmax rows whose mass concentrates on a few
+winners, which is the property top-k selection exploits.
+
+* **synth-CIFAR-N** (:func:`synth_cifar`): N-class 32×32×3 images. Each
+  class is a fixed mixture of oriented sinusoid "textures" (class
+  prototype) rendered with a random phase shift, amplitude jitter and
+  pixel noise. Classification requires integrating spatial structure
+  across patches — attention, not a single patch, solves it.
+* **synth-SQuAD** (:func:`synth_squad`): span extraction over token
+  sequences. The sequence opens with a query bigram ``[CLS] q1 q2 [SEP]``
+  and the body contains exactly one occurrence of ``q1 q2`` followed by
+  the answer span; single-token distractors (``q1`` alone) force real
+  content-based matching. The model predicts the answer's start/end —
+  SQuAD's exact-match metric applies directly.
+
+Everything is deterministic given a seed, so train/eval splits are
+reproducible across python (training) and rust (serving traces replay the
+same generator via exported .npz files).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Token ids reserved by synth-SQuAD.
+CLS, SEP, PAD, END = 0, 1, 2, 3
+FIRST_CONTENT_TOKEN = 4
+
+
+# ---------------------------------------------------------------------------
+# synth-CIFAR
+# ---------------------------------------------------------------------------
+
+def _class_prototypes(n_classes: int, image_size: int, seed: int) -> np.ndarray:
+    """[n_classes, H, W, 3] fixed texture prototypes."""
+    rng = np.random.RandomState(seed)
+    yy, xx = np.mgrid[0:image_size, 0:image_size].astype(np.float32)
+    protos = np.zeros((n_classes, image_size, image_size, 3), np.float32)
+    for c in range(n_classes):
+        img = np.zeros((image_size, image_size, 3), np.float32)
+        # 3 oriented sinusoid components + a class-colored gradient
+        for _ in range(3):
+            theta = rng.uniform(0, np.pi)
+            freq = rng.uniform(0.2, 1.2)
+            phase = rng.uniform(0, 2 * np.pi)
+            grating = np.sin(freq * (np.cos(theta) * xx + np.sin(theta) * yy)
+                             + phase)
+            color = rng.uniform(-1, 1, size=3)
+            img += grating[:, :, None] * color[None, None, :]
+        protos[c] = img / 3.0
+    return protos
+
+
+def synth_cifar(n_classes: int, n_samples: int, *, seed: int = 0,
+                image_size: int = 32,
+                noise: float = 0.35) -> Tuple[np.ndarray, np.ndarray]:
+    """Generate (images [n, H, W, 3] float32, labels [n] int32)."""
+    rng = np.random.RandomState(seed + 1)
+    protos = _class_prototypes(n_classes, image_size, seed)
+    labels = rng.randint(0, n_classes, size=n_samples).astype(np.int32)
+    images = np.empty((n_samples, image_size, image_size, 3), np.float32)
+    for i, c in enumerate(labels):
+        img = protos[c]
+        # random translation (texture phase shift)
+        img = np.roll(img, shift=(rng.randint(image_size),
+                                  rng.randint(image_size)), axis=(0, 1))
+        amp = rng.uniform(0.7, 1.3)
+        images[i] = amp * img + noise * rng.randn(*img.shape)
+    return images, labels
+
+
+# ---------------------------------------------------------------------------
+# synth-SQuAD
+# ---------------------------------------------------------------------------
+
+def synth_squad(n_samples: int, *, seed: int = 0, seq_len: int = 128,
+                vocab_size: int = 64, max_answer_len: int = 4,
+                n_distractors: int = 4) -> Tuple[np.ndarray, np.ndarray]:
+    """Generate (tokens [n, seq_len] int32, spans [n, 2] int32).
+
+    Layout: ``[CLS] q1 q2 [SEP] body...``. The body is random content
+    tokens with exactly one ``q1 q2`` bigram; the answer span is the
+    1..max_answer tokens that follow it, terminated by the [END] sentinel
+    (so the end position is *predictable* from content, as in SQuAD where
+    answers end at natural boundaries). ``spans`` holds (start, end)
+    inclusive indices. q1-only distractors are scattered in the body.
+    """
+    rng = np.random.RandomState(seed + 2)
+    toks = np.empty((n_samples, seq_len), np.int32)
+    spans = np.empty((n_samples, 2), np.int32)
+    body_start = 4
+    for i in range(n_samples):
+        q1, q2 = rng.choice(
+            np.arange(FIRST_CONTENT_TOKEN, vocab_size), size=2, replace=False)
+        body = rng.randint(FIRST_CONTENT_TOKEN, vocab_size,
+                           size=seq_len - body_start).astype(np.int32)
+        # remove accidental q1 q2 bigrams from the random body
+        for j in range(len(body) - 1):
+            while body[j] == q1 and body[j + 1] == q2:
+                body[j + 1] = rng.randint(FIRST_CONTENT_TOKEN, vocab_size)
+        ans_len = rng.randint(1, max_answer_len + 1)
+        # place the match so bigram + answer + END fit
+        pos = rng.randint(0, len(body) - (3 + ans_len))
+        body[pos], body[pos + 1] = q1, q2
+        body[pos + 2 + ans_len] = END  # sentinel terminates the span
+        # distractors: lone q1 followed by something != q2
+        for _ in range(n_distractors):
+            dpos = rng.randint(0, len(body) - 2)
+            if abs(dpos - pos) <= 3 + ans_len:
+                continue
+            body[dpos] = q1
+            if body[dpos + 1] == q2:
+                body[dpos + 1] = (q2 + 1 - FIRST_CONTENT_TOKEN) % (
+                    vocab_size - FIRST_CONTENT_TOKEN) + FIRST_CONTENT_TOKEN
+        toks[i, 0], toks[i, 1], toks[i, 2], toks[i, 3] = CLS, q1, q2, SEP
+        toks[i, body_start:] = body
+        start = body_start + pos + 2
+        spans[i] = (start, start + ans_len - 1)
+    return toks, spans
+
+
+# ---------------------------------------------------------------------------
+# Batching helpers
+# ---------------------------------------------------------------------------
+
+def batches(arrays, batch_size: int, *, seed: int = 0, epochs: int = 1000):
+    """Endless shuffled mini-batch generator over aligned arrays."""
+    n = arrays[0].shape[0]
+    rng = np.random.RandomState(seed + 3)
+    for _ in range(epochs):
+        order = rng.permutation(n)
+        for i in range(0, n - batch_size + 1, batch_size):
+            idx = order[i:i + batch_size]
+            yield tuple(jnp.asarray(a[idx]) for a in arrays)

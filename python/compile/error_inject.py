@@ -1,0 +1,128 @@
+"""ADC error-injection pipeline (Fig 4b).
+
+The paper measures the distribution of the IMA circuit output against the
+ideal SW MAC value over 256 conversions (SPICE), then injects that error
+distribution into the SW simulation of the SRAM-mapped operations
+(``Q·K^T`` and ``A·V``), observing an accuracy drop 86.7% → 85.1%.
+
+Here the "circuit" is the rust IMA simulator; its noise model (thermal
+bitline noise + SA offset + ramp INL, ``rust/src/ima/noise.rs``) is
+mirrored by :func:`ima_error_model` so the python accuracy pipeline and
+the rust distribution bench draw from the same family. The error is
+expressed in ADC LSBs, which makes it transferable between the SPICE-level
+volts of the paper and our normalized simulator.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+from . import quant
+
+
+@dataclasses.dataclass(frozen=True)
+class ErrorModel:
+    """IMA conversion error, in units of ADC LSBs.
+
+    * ``sigma_noise`` — random per-conversion noise (bitline thermal +
+      comparator); the paper's measured spread is ~0.5 LSB.
+    * ``sigma_offset`` — static per-column offset (SA mismatch), fixed per
+      deployed array; calibration with replica cells cancels most of it.
+    * ``p_skip`` — probability a ramp crossing is latched one cycle late
+      (arbiter contention), adding exactly +1 LSB when it fires.
+    """
+
+    sigma_noise: float = 0.5
+    sigma_offset: float = 0.3
+    p_skip: float = 0.02
+
+
+def ima_error_model(key, shape, em: ErrorModel, lsb: float,
+                    column_axis: int = -1) -> jnp.ndarray:
+    """Sample additive IMA error for a tensor of MAC results."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    noise = em.sigma_noise * jax.random.normal(k1, shape)
+    # static column offset: one draw per column, broadcast over rows
+    col_shape = [1] * len(shape)
+    col_shape[column_axis] = shape[column_axis]
+    offset = em.sigma_offset * jax.random.normal(k2, tuple(col_shape))
+    skip = (jax.random.uniform(k3, shape) < em.p_skip).astype(jnp.float32)
+    return (noise + offset + skip) * lsb
+
+
+def attention_with_ima_error(params, cfg: M.ModelConfig, inputs,
+                             key, em: ErrorModel):
+    """Model forward with IMA error injected on the SRAM-mapped MACs.
+
+    Mirrors ``model._attention`` but perturbs the Q·K^T logits and the
+    A·V output with the conversion-error model — the two operations the
+    paper maps to (error-prone) SRAM IMC. The RRAM projections X·W are
+    left exact, as in the paper's Fig 4b experiment.
+    """
+    def attn(x, p, key):
+        b, sl, d = x.shape
+        h, dh = cfg.n_heads, cfg.d_head
+        q = M._dense(x, p["wq"]) / jnp.sqrt(jnp.asarray(dh, x.dtype))
+        kk = M._dense(x, p["wk"])
+        v = M._dense(x, p["wv"])
+        q = q.reshape(b, sl, h, dh).transpose(0, 2, 1, 3)
+        kk = kk.reshape(b, sl, h, dh).transpose(0, 2, 1, 3)
+        v = v.reshape(b, sl, h, dh).transpose(0, 2, 1, 3)
+
+        logits = q @ kk.transpose(0, 1, 3, 2)
+        k1, k2 = jax.random.split(key)
+        lsb_qkt = jnp.max(jnp.abs(logits)) / (2 ** (quant.N_BITS_ADC - 1) - 1)
+        logits = logits + ima_error_model(k1, logits.shape, em, lsb_qkt)
+
+        segments, ks = cfg.sub_topk()
+        a = M.tfcbp_softmax(logits, cfg.topk, segments, ks)
+        out = a @ v
+        lsb_av = jnp.max(jnp.abs(out)) / (2 ** (quant.N_BITS_ADC - 1) - 1)
+        out = out + ima_error_model(k2, out.shape, em, lsb_av)
+        out = out.transpose(0, 2, 1, 3).reshape(b, sl, d)
+        return M._dense(out, p["wo"])
+
+    if cfg.kind == "vit":
+        x = M._dense(M._patchify(inputs, cfg.patch_size), params["patch"])
+        cls = jnp.broadcast_to(params["cls"], (x.shape[0], 1, cfg.d_model))
+        x = jnp.concatenate([cls, x], axis=1) + params["pos"]
+    else:
+        x = params["tok_emb"][inputs] + params["pos"]
+
+    for i, p in enumerate(params["layers"]):
+        key, sub = jax.random.split(key)
+        x = x + attn(M._layer_norm(x, p["ln1"]), p, sub)
+        hcat = M._dense(M._layer_norm(x, p["ln2"]), p["ff1"])
+        x = x + M._dense(jax.nn.gelu(hcat), p["ff2"])
+    x = M._layer_norm(x, params["ln_f"])
+
+    if cfg.kind == "vit":
+        return M._dense(x[:, 0], params["head"])
+    return M._dense(x, params["span"])
+
+
+def eval_with_error(params, cfg: M.ModelConfig, eval_set, em: ErrorModel,
+                    seed: int = 0, batch_size: int = 128) -> float:
+    """Eval-set accuracy with IMA error injection (Fig 4b right)."""
+    xs, ys = eval_set
+    key = jax.random.PRNGKey(seed)
+    correct, n = 0.0, 0
+    for i in range(0, len(xs), batch_size):
+        xb = jnp.asarray(xs[i:i + batch_size])
+        yb = jnp.asarray(ys[i:i + batch_size])
+        key, sub = jax.random.split(key)
+        logits = attention_with_ima_error(params, cfg, xb, sub, em)
+        if cfg.kind == "vit":
+            correct += float(jnp.sum(jnp.argmax(logits, -1) == yb))
+        else:
+            ps = jnp.argmax(logits[:, :, 0], -1)
+            pe = jnp.argmax(logits[:, :, 1], -1)
+            correct += float(jnp.sum((ps == yb[:, 0]) & (pe == yb[:, 1])))
+        n += len(xb)
+    return correct / max(n, 1)

@@ -1,0 +1,24 @@
+"""L1 Pallas kernels for Topkima-Former (build-time only, interpret=True).
+
+* ``topk_softmax`` — the topkima macro's numerical contract (decreasing
+  ramp + arbiter top-k selection → softmax over k values, zeros elsewhere),
+  plus the per-crossbar ``sub_topk_softmax`` variant.
+* ``imc_qkt`` — the dual-10T SRAM crossbar MAC with PWM inputs, ternary
+  cell weights and the ramp-ADC transfer function.
+* ``topkima_attention`` — the fused scale-free head: QK^T → topk softmax
+  → AV, optionally with the full IMC quantization chain.
+* ``ref`` — pure-jnp oracles for all of the above.
+"""
+
+from .attention import topkima_attention
+from .imc_qkt import calibrate, imc_qkt
+from .topk_softmax import crossbar_split, sub_topk_softmax, topk_softmax
+
+__all__ = [
+    "topkima_attention",
+    "imc_qkt",
+    "calibrate",
+    "topk_softmax",
+    "sub_topk_softmax",
+    "crossbar_split",
+]

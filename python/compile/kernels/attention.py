@@ -1,0 +1,116 @@
+"""Fused scale-free topkima attention Pallas kernel.
+
+One grid step computes one (row-tile × full-d) slice of a single head:
+
+    logits = Q^s · K^T          (scale-free: 1/sqrt(d_k) folded into W_Q)
+    A      = topk_softmax(logits)   (the topkima macro's contract)
+    out    = A · V
+
+Fusing all three keeps the logits tile in VMEM — the paper's macro never
+materializes Q·K^T in a buffer either: the MAC voltages go straight into
+the ramp IMA and only k scores per row ever leave the array. The optional
+``quantized=True`` path inserts the IMC transfer functions (PWM × ternary
+cells × ADC) so the kernel computes bit-exactly what the fabric computes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import quant
+from .topk_softmax import _topk_mask_rows
+
+DEFAULT_ROW_BLOCK = 32
+
+
+def _attention_kernel(q_ref, kt_ref, v_ref, o_ref, *, k: int,
+                      segments: Optional[tuple], ks: Optional[tuple],
+                      quantized: bool, q_scale: float, w_scale: float,
+                      adc_full_scale: float, n_bits_adc: int):
+    """One grid step: fused QK^T → topk-softmax → AV for a row tile."""
+    q = q_ref[...]
+    kt = kt_ref[...]
+    v = v_ref[...]
+
+    if quantized:
+        qq = quant.quantize_pwm(q, scale=q_scale)
+        wq = quant.quantize_ternary_cells(kt, scale=w_scale)
+        logits = quant.adc_quantize(qq @ wq, adc_full_scale,
+                                    n_bits=n_bits_adc)
+    else:
+        logits = q @ kt
+
+    if segments is None:
+        mask = _topk_mask_rows(logits, k)
+    else:
+        masks, start = [], 0
+        for seg, ki in zip(segments, ks):
+            masks.append(_topk_mask_rows(logits[:, start:start + seg], ki))
+            start += seg
+        mask = jnp.concatenate(masks, axis=-1)
+
+    neg = jnp.finfo(logits.dtype).min
+    masked = jnp.where(mask, logits, neg)
+    m = jnp.max(masked, axis=-1, keepdims=True)
+    e = jnp.where(mask, jnp.exp(masked - m), jnp.zeros_like(logits))
+    a = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = a @ v
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "k", "segments", "ks", "quantized", "q_scale", "w_scale",
+    "adc_full_scale", "n_bits_adc", "row_block"))
+def topkima_attention(q: jnp.ndarray, kt: jnp.ndarray, v: jnp.ndarray,
+                      k: int, *,
+                      segments: Optional[Sequence[int]] = None,
+                      ks: Optional[Sequence[int]] = None,
+                      quantized: bool = False,
+                      q_scale: float = 1.0, w_scale: float = 1.0,
+                      adc_full_scale: float = 1.0,
+                      n_bits_adc: int = quant.N_BITS_ADC,
+                      row_block: int = DEFAULT_ROW_BLOCK) -> jnp.ndarray:
+    """One attention head with the topkima softmax, fused in Pallas.
+
+    ``q``: [sl_q, d_k] scale-free queries (Q^s = X·W_Q/sqrt(d_k));
+    ``kt``: [d_k, sl] keys as stored in the crossbar; ``v``: [sl, d_v].
+    ``segments``/``ks`` enable per-crossbar sub-top-k (Fig 4c). With
+    ``quantized=True`` the IMC transfer functions are applied and the
+    result matches the rust circuit simulator bit-for-bit.
+    """
+    if segments is not None:
+        segments = tuple(segments)
+        ks = tuple(ks)
+        assert sum(ks) == k, (ks, k)
+
+    sl_q, d_k = q.shape
+    d_k2, sl = kt.shape
+    sl2, d_v = v.shape
+    assert d_k == d_k2 and sl == sl2, (q.shape, kt.shape, v.shape)
+
+    rb = min(row_block, sl_q)
+    pad = (-sl_q) % rb
+    qp = jnp.pad(q, ((0, pad), (0, 0))) if pad else q
+    grid = (qp.shape[0] // rb,)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _attention_kernel, k=k, segments=segments, ks=ks,
+            quantized=quantized, q_scale=q_scale, w_scale=w_scale,
+            adc_full_scale=adc_full_scale, n_bits_adc=n_bits_adc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rb, d_k), lambda i: (i, 0)),
+            pl.BlockSpec((d_k, sl), lambda i: (0, 0)),
+            pl.BlockSpec((sl, d_v), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((rb, d_v), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((qp.shape[0], d_v), q.dtype),
+        interpret=True,
+    )(qp, kt, v)
+
+    return out[:sl_q]

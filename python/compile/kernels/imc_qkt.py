@@ -1,0 +1,105 @@
+"""Pallas kernel for the IMC Q·K^T macro (dual-10T SRAM crossbar MAC).
+
+Models exactly what the analog macro computes, tile-by-tile:
+
+* Q rows arrive as 5-bit signed PWM word-line pulses (``quantize_pwm``);
+* K^T is stored as 3 ganged ternary cells per weight with 1/2/4 input
+  scaling — a 15-level (-7..7) grid (``quantize_ternary_cells``);
+* bitline charge sharing accumulates the products down each column;
+* the ramp IMA digitizes each column's MAC voltage to 5 bits
+  (``adc_quantize``) over a calibrated full-scale range.
+
+The grid tiles the output [m, n] into (row_block × crossbar_cols) blocks:
+**one output tile per physical crossbar**, with the contraction dimension
+(d = rows of the crossbar) kept resident — SRAM rows are not split in the
+paper (64×3 rows of K^T fit one 256-row array next to the 64 replica
+rows). On TPU the same BlockSpec maps a crossbar tile onto a VMEM tile
+(DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import quant
+
+#: default output tile = one crossbar's worth of columns (Sec. IV-B)
+DEFAULT_COL_BLOCK = 256
+DEFAULT_ROW_BLOCK = 64
+
+
+def _imc_qkt_kernel(q_ref, kt_ref, o_ref, *, q_scale: float, w_scale: float,
+                    adc_full_scale: float, n_bits_adc: int):
+    """One grid step: quantized MAC for an output tile on one crossbar."""
+    q = q_ref[...]
+    kt = kt_ref[...]
+    qq = quant.quantize_pwm(q, scale=q_scale)
+    wq = quant.quantize_ternary_cells(kt, scale=w_scale)
+    # Bitline accumulation: voltage drops add along the column.
+    mac = qq @ wq
+    # Ramp IMA transfer function per column output.
+    o_ref[...] = quant.adc_quantize(mac, adc_full_scale, n_bits=n_bits_adc)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("q_scale", "w_scale", "adc_full_scale",
+                     "n_bits_adc", "row_block", "col_block"))
+def imc_qkt(q: jnp.ndarray, kt: jnp.ndarray, *,
+            q_scale: float, w_scale: float, adc_full_scale: float,
+            n_bits_adc: int = quant.N_BITS_ADC,
+            row_block: int = DEFAULT_ROW_BLOCK,
+            col_block: int = DEFAULT_COL_BLOCK) -> jnp.ndarray:
+    """Quantized Q·K^T as computed by the SRAM IMC macro.
+
+    ``q``: [m, d] activations; ``kt``: [d, n] crossbar weights. Scales are
+    static calibration constants (the hardware's PWM LSB, weight LSB and
+    ADC full-scale are fixed at deploy time, not data-dependent).
+    """
+    m, d = q.shape
+    d2, n = kt.shape
+    assert d == d2, (q.shape, kt.shape)
+
+    rb = min(row_block, m)
+    cb = min(col_block, n)
+    pad_m = (-m) % rb
+    pad_n = (-n) % cb
+    qp = jnp.pad(q, ((0, pad_m), (0, 0))) if pad_m else q
+    ktp = jnp.pad(kt, ((0, 0), (0, pad_n))) if pad_n else kt
+
+    grid = (qp.shape[0] // rb, ktp.shape[1] // cb)
+    out = pl.pallas_call(
+        functools.partial(
+            _imc_qkt_kernel, q_scale=q_scale, w_scale=w_scale,
+            adc_full_scale=adc_full_scale, n_bits_adc=n_bits_adc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rb, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, cb), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((rb, cb), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((qp.shape[0], ktp.shape[1]), q.dtype),
+        interpret=True,
+    )(qp, ktp)
+
+    return out[:m, :n]
+
+
+def calibrate(q_sample: jnp.ndarray, kt_sample: jnp.ndarray) -> dict:
+    """Derive the static hardware calibration constants from sample data.
+
+    Mirrors the macro's one-time calibration (replica-cell ramp setting in
+    [6]): PWM scale from the activation range, weight LSB from the weight
+    range, ADC full-scale from the resulting MAC range.
+    """
+    q_scale = float(quant.symmetric_scale(q_sample, quant.N_BITS_INPUT))
+    w_scale = float(quant.symmetric_scale(kt_sample, quant.CELLS_PER_WEIGHT + 1))
+    qq = quant.quantize_pwm(q_sample, scale=q_scale)
+    wq = quant.quantize_ternary_cells(kt_sample, scale=w_scale)
+    mac = qq @ wq
+    full = float(jnp.maximum(jnp.max(jnp.abs(mac)), 1e-8))
+    return {"q_scale": q_scale, "w_scale": w_scale, "adc_full_scale": full}

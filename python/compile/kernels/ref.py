@@ -1,0 +1,158 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness ground truth: each kernel in this package has a
+reference implementation here written with plain ``jax.numpy`` (no Pallas),
+and ``python/tests`` asserts ``allclose`` between kernel and oracle across
+hypothesis-generated shapes, dtypes and k values.
+
+Semantics follow the topkima hardware (Sec. III-A):
+
+* top-k selection uses the decreasing-ramp crossing order — descending by
+  value, ties broken toward the smaller column address, which is exactly
+  ``jax.lax.top_k``'s tie rule;
+* sub-top-k splits the columns into crossbar-sized segments, selects
+  ``k_i`` per segment with ``sum(k_i) == k``, and unions the selections;
+* non-selected logits contribute nothing to softmax (their probability
+  is exactly zero — the digital softmax core only ever sees k values).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .. import quant
+
+
+# ---------------------------------------------------------------------------
+# Top-k softmax (the topkima numerical contract)
+# ---------------------------------------------------------------------------
+
+def topk_mask_ref(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Boolean mask of the k largest entries along the last axis.
+
+    Ties are broken toward smaller indices (the arbiter's preference for
+    smaller column addresses) — ``argmax`` returns the first occurrence,
+    matching that rule exactly.
+
+    Implemented as k unrolled argmax-and-mask steps rather than
+    ``jax.lax.top_k`` for two reasons: (1) it mirrors the hardware, where
+    the decreasing ramp latches crossings one by one; (2) the ``topk`` HLO
+    op emitted by ``lax.top_k`` post-dates the HLO parser in xla_extension
+    0.5.1 that the rust runtime links against, so AOT-exported graphs must
+    avoid it (argmax lowers to plain reduce/iota/select ops). k is small
+    (≤ 20 in the paper), so the unroll is cheap.
+    """
+    d = x.shape[-1]
+    if k >= d:
+        return jnp.ones(x.shape, dtype=bool)
+    neg = jnp.finfo(x.dtype).min
+    remaining = x
+    mask = jnp.zeros(x.shape, dtype=bool)
+    for _ in range(k):
+        idx = jnp.argmax(remaining, axis=-1)
+        hit = jax.nn.one_hot(idx, d, dtype=jnp.float32) > 0.5
+        mask = mask | hit
+        remaining = jnp.where(hit, neg, remaining)
+    return mask
+
+
+def topk_mask_lax(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Same mask via ``jax.lax.top_k`` — test-only cross-check oracle.
+
+    Not used on any export path (see :func:`topk_mask_ref`); tests assert
+    it agrees with the iterative mask on random and tied inputs.
+    """
+    d = x.shape[-1]
+    if k >= d:
+        return jnp.ones(x.shape, dtype=bool)
+    _, idx = jax.lax.top_k(x, k)
+    onehot = jax.nn.one_hot(idx, d, dtype=jnp.float32)
+    return jnp.sum(onehot, axis=-2) > 0
+
+
+def topk_softmax_ref(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Softmax over only the k largest logits per row; zeros elsewhere."""
+    mask = topk_mask_ref(x, k)
+    neg = jnp.finfo(x.dtype).min
+    masked = jnp.where(mask, x, neg)
+    y = jax.nn.softmax(masked, axis=-1)
+    # Hard zero outside the selection: the digital softmax core never sees
+    # the other d-k values at all.
+    return jnp.where(mask, y, jnp.zeros_like(y))
+
+
+def sub_topk_mask_ref(x: jnp.ndarray, segments: Sequence[int],
+                      ks: Sequence[int]) -> jnp.ndarray:
+    """Mask for sub-top-k over crossbar segments (Sec. III-A, Fig 4c).
+
+    ``segments`` are the column counts of each crossbar split of the row;
+    segment ``i`` independently selects its ``ks[i]`` largest entries
+    (no global information is exchanged between crossbars).
+    """
+    assert sum(segments) == x.shape[-1], (segments, x.shape)
+    assert len(segments) == len(ks)
+    parts, start = [], 0
+    for seg, ki in zip(segments, ks):
+        parts.append(topk_mask_ref(x[..., start:start + seg], ki))
+        start += seg
+    return jnp.concatenate(parts, axis=-1)
+
+
+def sub_topk_softmax_ref(x: jnp.ndarray, segments: Sequence[int],
+                         ks: Sequence[int]) -> jnp.ndarray:
+    """Softmax over the union of per-crossbar sub-top-k selections."""
+    mask = sub_topk_mask_ref(x, segments, ks)
+    neg = jnp.finfo(x.dtype).min
+    y = jax.nn.softmax(jnp.where(mask, x, neg), axis=-1)
+    return jnp.where(mask, y, jnp.zeros_like(y))
+
+
+# ---------------------------------------------------------------------------
+# IMC-quantized Q·K^T (what the SRAM macro computes)
+# ---------------------------------------------------------------------------
+
+def imc_qkt_ref(q: jnp.ndarray, kt: jnp.ndarray, *,
+                q_scale=None, w_scale=None, adc_full_scale=None,
+                n_bits_adc: int = quant.N_BITS_ADC) -> jnp.ndarray:
+    """Reference for the IMC Q·K^T macro: PWM-quantized inputs × 15-level
+    ternary-cell weights, bitline accumulation, then the ramp-ADC transfer
+    function per output.
+
+    ``q``: [..., m, d] activations (rows applied one at a time as PWM).
+    ``kt``: [d, n] weights stored in the crossbar.
+    Returns the ADC-quantized MAC values, same dtype as ``q``.
+    """
+    qq = quant.quantize_pwm(q, scale=q_scale)
+    wq = quant.quantize_ternary_cells(kt, scale=w_scale)
+    mac = qq @ wq
+    if adc_full_scale is None:
+        adc_full_scale = jnp.maximum(jnp.max(jnp.abs(mac)), 1e-8)
+    return quant.adc_quantize(mac, adc_full_scale, n_bits=n_bits_adc)
+
+
+# ---------------------------------------------------------------------------
+# Fused scale-free topkima attention
+# ---------------------------------------------------------------------------
+
+def attention_ref(q: jnp.ndarray, kt: jnp.ndarray, v: jnp.ndarray, k: int,
+                  *, scale_free: bool = True) -> jnp.ndarray:
+    """One attention head with topkima softmax.
+
+    ``scale_free=True`` assumes the 1/sqrt(d_k) factor was already folded
+    into W_Q (Sec. III-C), so no scaling happens here. Otherwise the
+    conventional scaling is applied (used as the baseline in tests).
+    """
+    d_k = q.shape[-1]
+    logits = q @ kt
+    if not scale_free:
+        logits = logits / jnp.sqrt(jnp.asarray(d_k, dtype=q.dtype))
+    a = topk_softmax_ref(logits, k)
+    return a @ v
+
+
+def softmax_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Plain full softmax (the conventional-macro baseline)."""
+    return jax.nn.softmax(x, axis=-1)

@@ -1,0 +1,191 @@
+"""Pallas kernel for the topkima top-k softmax (the paper's L1 hot-spot).
+
+The hardware (Fig 2) never sorts: a *decreasing* ramp ADC lets larger MAC
+voltages cross earlier, an arbiter-encoder latches the first k crossings
+(ties resolved toward smaller column addresses) and a counter stops the
+conversion early. The numerical contract that reaches the digital softmax
+core is therefore exactly "softmax over the k largest logits, hard zero
+elsewhere" — which is what this kernel computes, tiled so that one grid
+row == one softmax row and one block == one crossbar's worth of columns.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; on a real TPU the same BlockSpecs map a crossbar tile to a
+VMEM tile (see DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows of the logits matrix processed per grid step. One softmax row is one
+# set of simultaneous ramp conversions in the macro; blocking several rows
+# amortizes pallas grid overhead in interpret mode.
+DEFAULT_ROW_BLOCK = 8
+
+
+def _topk_mask_rows(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """[rows, d] boolean mask of each row's k largest entries.
+
+    k unrolled argmax-and-mask steps: each step latches one ramp crossing,
+    exactly like the decreasing-ramp arbiter (ties → first occurrence →
+    smaller column address). Avoids the ``topk`` HLO op, which the rust
+    runtime's xla_extension 0.5.1 parser cannot load (see ref.py).
+    """
+    d = x.shape[-1]
+    if k >= d:
+        return jnp.ones(x.shape, dtype=bool)
+    neg = jnp.finfo(x.dtype).min
+    remaining = x
+    mask = jnp.zeros(x.shape, dtype=bool)
+    for _ in range(k):
+        idx = jnp.argmax(remaining, axis=-1)
+        hit = jax.nn.one_hot(idx, d, dtype=jnp.float32) > 0.5
+        mask = mask | hit
+        remaining = jnp.where(hit, neg, remaining)
+    return mask
+
+
+def _topk_softmax_kernel(x_ref, o_ref, *, k: int):
+    """One grid step: top-k softmax over a [row_block, d] tile."""
+    x = x_ref[...]
+    mask = _topk_mask_rows(x, k)
+    neg = jnp.finfo(x.dtype).min
+    masked = jnp.where(mask, x, neg)
+    # Numerically stable softmax over the selected k values only.
+    m = jnp.max(masked, axis=-1, keepdims=True)
+    e = jnp.where(mask, jnp.exp(masked - m), jnp.zeros_like(x))
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "row_block"))
+def topk_softmax(x: jnp.ndarray, k: int,
+                 row_block: int = DEFAULT_ROW_BLOCK) -> jnp.ndarray:
+    """Top-k softmax along the last axis via a Pallas kernel.
+
+    ``x`` may have any leading batch shape; the last axis is the softmax
+    axis (one ramp conversion per element). Rows are tiled ``row_block`` at
+    a time; the full row stays resident (the arbiter sees every column of
+    the crossbar group simultaneously).
+    """
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    rows = 1
+    for s in orig_shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+
+    rb = min(row_block, rows)
+    pad = (-rows) % rb
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    grid = (x2.shape[0] // rb,)
+
+    out = pl.pallas_call(
+        functools.partial(_topk_softmax_kernel, k=k),
+        grid=grid,
+        in_specs=[pl.BlockSpec((rb, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rb, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x2.dtype),
+        interpret=True,
+    )(x2)
+
+    if pad:
+        out = out[:rows]
+    return out.reshape(orig_shape)
+
+
+def _sub_topk_softmax_kernel(x_ref, o_ref, *, segments: tuple, ks: tuple):
+    """One grid step of sub-top-k softmax over a [row_block, d] tile.
+
+    Each segment is one physical crossbar: selection is local (no global
+    information), the union of selections feeds one shared softmax — the
+    digital core receives the concatenated k_i values (Sec. III-A).
+    """
+    x = x_ref[...]
+    masks, start = [], 0
+    for seg, ki in zip(segments, ks):
+        masks.append(_topk_mask_rows(x[:, start:start + seg], ki))
+        start += seg
+    mask = jnp.concatenate(masks, axis=-1)
+    neg = jnp.finfo(x.dtype).min
+    masked = jnp.where(mask, x, neg)
+    m = jnp.max(masked, axis=-1, keepdims=True)
+    e = jnp.where(mask, jnp.exp(masked - m), jnp.zeros_like(x))
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("segments", "ks", "row_block"))
+def sub_topk_softmax(x: jnp.ndarray, segments: Sequence[int],
+                     ks: Sequence[int],
+                     row_block: int = DEFAULT_ROW_BLOCK) -> jnp.ndarray:
+    """Sub-top-k softmax: per-crossbar local top-k_i, union, softmax.
+
+    Models the crossbar-size limitation of Sec. III-A / Fig 4(c): when
+    ``K^T`` is split across crossbars, each array i picks its own top-k_i
+    with ``sum(k_i) == k`` and no global sort ever happens.
+    """
+    segments, ks = tuple(segments), tuple(ks)
+    assert len(segments) == len(ks)
+    assert sum(segments) == x.shape[-1]
+
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    rows = 1
+    for s in orig_shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+
+    rb = min(row_block, rows)
+    pad = (-rows) % rb
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    grid = (x2.shape[0] // rb,)
+
+    out = pl.pallas_call(
+        functools.partial(_sub_topk_softmax_kernel, segments=segments, ks=ks),
+        grid=grid,
+        in_specs=[pl.BlockSpec((rb, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rb, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x2.dtype),
+        interpret=True,
+    )(x2)
+
+    if pad:
+        out = out[:rows]
+    return out.reshape(orig_shape)
+
+
+def crossbar_split(d: int, k: int, crossbar_cols: int) -> tuple:
+    """Split d softmax columns over crossbars and apportion k among them.
+
+    Matches the paper's examples: d=384, 256-wide crossbars, k=5 →
+    segments (256, 128) with sub-k (3, 2); d=384, 128-wide, k=5 →
+    (128, 128, 128) with (2, 2, 1). k is spread proportionally to segment
+    width, remainder to earlier (larger/lower-address) segments, each
+    segment getting at least 1 when k >= n_segments.
+    """
+    n_seg = -(-d // crossbar_cols)
+    segments = tuple(min(crossbar_cols, d - i * crossbar_cols)
+                     for i in range(n_seg))
+    if n_seg == 1:
+        return segments, (k,)
+    # Largest-remainder apportionment of k over segment widths. Matches the
+    # paper: (256,128)+k=5 -> (3,2); (128,128,128)+k=5 -> (2,2,1).
+    base = [k * s // d for s in segments]
+    fracs = [(k * s) % d for s in segments]
+    order = sorted(range(n_seg), key=lambda i: (-fracs[i], i))
+    for i in range(k - sum(base)):
+        base[order[i % n_seg]] += 1
+    # Every crossbar contributes at least one winner when k allows it.
+    if k >= n_seg:
+        for j in range(n_seg):
+            while base[j] == 0:
+                donor = max(range(n_seg), key=lambda t: base[t])
+                base[donor] -= 1
+                base[j] += 1
+    return segments, tuple(base)

@@ -1,0 +1,353 @@
+"""L2: the Topkima-Former transformer in JAX (build-time only).
+
+Pure-functional transformer encoder used for both evaluation model
+families of the paper:
+
+* **ViT-tiny** — patch embedding + class token + classification head
+  (the paper's ViT on CIFAR-10/100, scaled to the synthetic task);
+* **BERT-tiny** — token+position embedding + span-extraction head
+  (the paper's BERT-base/DistilBERT on SQuAD, scaled).
+
+Paper features implemented here:
+
+* **Scale-free attention** (Sec. III-C): `W_Q` is divided by `sqrt(d_k)`
+  once at fold time (:func:`fold_scale_free`), so the attention kernel
+  performs no per-element scaling. Training keeps the conventional
+  parameterization; folding is a deploy-time rewrite, exactly as in HW.
+* **TFCBP** (Sec. III-B): :func:`tfcbp_softmax` — top-k masked softmax in
+  the forward pass, *complete* (all-d) softmax gradient in the backward
+  pass, via ``jax.custom_vjp``.
+* **QAT** (Sec. III-B): activations fake-quantized to 5 bits and attention
+  weights (`K^T` path) to the 15-level ternary-cell grid with STE
+  gradients; FP32 master weights are updated in backward.
+
+The attention hot-spot calls the L1 Pallas kernels when ``use_pallas`` is
+set (the AOT path), and the mathematically identical jnp reference during
+training (pallas interpret mode is too slow to train through).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import quant
+from .kernels import ref
+from .kernels.attention import topkima_attention
+from .kernels.topk_softmax import crossbar_split, topk_softmax
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture + topkima hyper-parameters for one model variant."""
+
+    kind: str = "vit"            # "vit" | "bert"
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 4
+    d_ff: int = 256
+    # topkima
+    topk: int = 5                # k winners per softmax row; 0 = full softmax
+    crossbar_cols: int = 0       # >0 enables sub-top-k with this crossbar width
+    # QAT
+    qat: bool = False            # fake-quant activations/weights on the IMC paths
+    # vit
+    image_size: int = 32
+    patch_size: int = 4
+    n_classes: int = 10
+    # bert
+    vocab_size: int = 64
+    seq_len: int = 128
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def n_patches(self) -> int:
+        return (self.image_size // self.patch_size) ** 2
+
+    @property
+    def tokens(self) -> int:
+        """Sequence length seen by the encoder (incl. cls token for ViT)."""
+        return self.n_patches + 1 if self.kind == "vit" else self.seq_len
+
+    def sub_topk(self) -> Tuple[Optional[tuple], Optional[tuple]]:
+        """(segments, ks) for the configured crossbar width, or (None, None)."""
+        if self.crossbar_cols and 0 < self.crossbar_cols < self.tokens:
+            return crossbar_split(self.tokens, self.topk, self.crossbar_cols)
+        return None, None
+
+
+# Paper-shaped configs for the rust-side workload descriptors; the trained
+# synthetic models use smaller instances of the same families.
+VIT_TINY = ModelConfig(kind="vit", d_model=128, n_heads=4, n_layers=4,
+                       d_ff=256, topk=5, image_size=32, patch_size=4,
+                       n_classes=10)
+BERT_TINY = ModelConfig(kind="bert", d_model=128, n_heads=4, n_layers=4,
+                        d_ff=256, topk=5, vocab_size=64, seq_len=128)
+
+
+# ---------------------------------------------------------------------------
+# TFCBP: top-k forward, complete backward propagation (Sec. III-B)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def tfcbp_softmax(x: jnp.ndarray, k: int,
+                  segments: Optional[tuple] = None,
+                  ks: Optional[tuple] = None) -> jnp.ndarray:
+    """Top-k softmax forward / full-softmax backward.
+
+    Forward: softmax over the k largest logits per row (optionally with
+    per-crossbar sub-top-k), zeros elsewhere — exactly what the topkima
+    hardware produces. Backward: the gradient of the *complete* softmax
+    at the same logits, so all d activations shape the update (TFCBP).
+    """
+    if k <= 0 or k >= x.shape[-1]:
+        return jax.nn.softmax(x, axis=-1)
+    if segments is not None:
+        return ref.sub_topk_softmax_ref(x, segments, ks)
+    return ref.topk_softmax_ref(x, k)
+
+
+def _tfcbp_fwd(x, k, segments, ks):
+    y = tfcbp_softmax(x, k, segments, ks)
+    # Residual is the FULL softmax: the backward pass pretends the forward
+    # was dense, which is what lets tiny k train without collapsing.
+    s = jax.nn.softmax(x, axis=-1)
+    return y, s
+
+
+def _tfcbp_bwd(k, segments, ks, s, g):
+    # d/dx softmax: s * (g - sum(g * s))
+    dot = jnp.sum(g * s, axis=-1, keepdims=True)
+    return (s * (g - dot),)
+
+
+tfcbp_softmax.defvjp(_tfcbp_fwd, _tfcbp_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def _dense_init(key, d_in, d_out):
+    w = jax.random.normal(key, (d_in, d_out)) * (d_in ** -0.5)
+    return {"w": w.astype(jnp.float32),
+            "b": jnp.zeros((d_out,), jnp.float32)}
+
+
+def _layer_init(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    return {
+        "wq": _dense_init(ks[0], d, d),
+        "wk": _dense_init(ks[1], d, d),
+        "wv": _dense_init(ks[2], d, d),
+        "wo": _dense_init(ks[3], d, d),
+        "ff1": _dense_init(ks[4], d, cfg.d_ff),
+        "ff2": _dense_init(ks[5], cfg.d_ff, d),
+        "ln1": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+        "ln2": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+    }
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    """Initialize the full parameter pytree for a model config."""
+    keys = jax.random.split(key, cfg.n_layers + 4)
+    params: Params = {
+        "layers": [_layer_init(keys[i], cfg) for i in range(cfg.n_layers)],
+        "ln_f": {"g": jnp.ones((cfg.d_model,)), "b": jnp.zeros((cfg.d_model,))},
+    }
+    if cfg.kind == "vit":
+        patch_dim = 3 * cfg.patch_size ** 2
+        params["patch"] = _dense_init(keys[-1], patch_dim, cfg.d_model)
+        params["cls"] = jax.random.normal(keys[-2], (1, 1, cfg.d_model)) * 0.02
+        params["pos"] = jax.random.normal(
+            keys[-3], (1, cfg.n_patches + 1, cfg.d_model)) * 0.02
+        params["head"] = _dense_init(keys[-4], cfg.d_model, cfg.n_classes)
+    elif cfg.kind == "bert":
+        params["tok_emb"] = jax.random.normal(
+            keys[-1], (cfg.vocab_size, cfg.d_model)) * 0.02
+        params["pos"] = jax.random.normal(
+            keys[-3], (1, cfg.seq_len, cfg.d_model)) * 0.02
+        # span extraction: start / end logits per token (SQuAD-style)
+        params["span"] = _dense_init(keys[-4], cfg.d_model, 2)
+    else:
+        raise ValueError(cfg.kind)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def _layer_norm(x, p, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * p["g"] + p["b"]
+
+
+def _dense(x, p):
+    return x @ p["w"] + p["b"]
+
+
+def _maybe_qact(x, cfg: ModelConfig):
+    """QAT: 5-bit fake-quant on IMC-path activations (Sec. III-B)."""
+    return quant.fake_quant(x, quant.N_BITS_INPUT) if cfg.qat else x
+
+
+def _attention(x, p, cfg: ModelConfig, *, fold_scale: bool,
+               use_pallas: bool) -> jnp.ndarray:
+    """Multi-head attention with topkima softmax.
+
+    ``fold_scale``: whether `W_Q` already contains the 1/sqrt(d_k) factor
+    (deploy-time scale-free network). During training the factor is
+    applied to Q after projection — mathematically identical, so the
+    trained weights can be folded without retraining (Sec. III-C).
+    """
+    b, sl, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+
+    q = _dense(x, p["wq"])
+    kk = _dense(x, p["wk"])
+    v = _dense(x, p["wv"])
+    if not fold_scale:
+        q = q / jnp.sqrt(jnp.asarray(dh, x.dtype))
+
+    # [b, h, sl, dh]
+    q = q.reshape(b, sl, h, dh).transpose(0, 2, 1, 3)
+    kk = kk.reshape(b, sl, h, dh).transpose(0, 2, 1, 3)
+    v = v.reshape(b, sl, h, dh).transpose(0, 2, 1, 3)
+
+    # The IMC paths see quantized operands under QAT: Q as PWM pulses,
+    # K^T on the ternary-cell grid.
+    q = _maybe_qact(q, cfg)
+    if cfg.qat:
+        kk = quant.quantize_ternary_cells(kk)
+        v = quant.fake_quant(v, quant.N_BITS_INPUT)
+
+    segments, ks = cfg.sub_topk()
+    if use_pallas:
+        # AOT path: fused pallas head, vmapped over batch*heads.
+        def head(qh, kh, vh):
+            return topkima_attention(qh, kh.T, vh, cfg.topk,
+                                     segments=segments, ks=ks)
+        out = jax.vmap(jax.vmap(head))(q, kk, v)
+    else:
+        logits = q @ kk.transpose(0, 1, 3, 2)
+        a = tfcbp_softmax(logits, cfg.topk, segments, ks)
+        out = a @ v
+
+    out = out.transpose(0, 2, 1, 3).reshape(b, sl, d)
+    return _dense(out, p["wo"])
+
+
+def _encoder_layer(x, p, cfg: ModelConfig, *, fold_scale, use_pallas):
+    x = x + _attention(_layer_norm(x, p["ln1"]), p, cfg,
+                       fold_scale=fold_scale, use_pallas=use_pallas)
+    hcat = _dense(_layer_norm(x, p["ln2"]), p["ff1"])
+    x = x + _dense(jax.nn.gelu(hcat), p["ff2"])
+    return x
+
+
+def _patchify(images: jnp.ndarray, patch: int) -> jnp.ndarray:
+    """[b, H, W, 3] → [b, n_patches, patch*patch*3]."""
+    b, hgt, wid, c = images.shape
+    ph, pw = hgt // patch, wid // patch
+    x = images.reshape(b, ph, patch, pw, patch, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, ph * pw, patch * patch * c)
+
+
+def forward(params: Params, cfg: ModelConfig, inputs: jnp.ndarray, *,
+            fold_scale: bool = False, use_pallas: bool = False) -> jnp.ndarray:
+    """Full model forward.
+
+    ViT: ``inputs`` [b, H, W, 3] float images → [b, n_classes] logits.
+    BERT: ``inputs`` [b, seq_len] int32 tokens → [b, seq_len, 2]
+    start/end span logits.
+    """
+    if cfg.kind == "vit":
+        x = _dense(_patchify(inputs, cfg.patch_size), params["patch"])
+        cls = jnp.broadcast_to(params["cls"], (x.shape[0], 1, cfg.d_model))
+        x = jnp.concatenate([cls, x], axis=1) + params["pos"]
+    else:
+        x = params["tok_emb"][inputs] + params["pos"]
+
+    for p in params["layers"]:
+        x = _encoder_layer(x, p, cfg, fold_scale=fold_scale,
+                           use_pallas=use_pallas)
+    x = _layer_norm(x, params["ln_f"])
+
+    if cfg.kind == "vit":
+        return _dense(x[:, 0], params["head"])
+    return _dense(x, params["span"])
+
+
+# ---------------------------------------------------------------------------
+# Scale-free folding (Sec. III-C)
+# ---------------------------------------------------------------------------
+
+def fold_scale_free(params: Params, cfg: ModelConfig) -> Params:
+    """Return params with 1/sqrt(d_k) folded into every W_Q.
+
+    After folding, run :func:`forward` with ``fold_scale=True``; the
+    network computes Q^s·K^T with **zero** scaling hardware. This is the
+    deploy-time rewrite the paper performs on the RRAM-resident W_Q.
+    """
+    scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.d_head, jnp.float32))
+    folded = jax.tree_util.tree_map(lambda x: x, params)  # shallow-ish copy
+    folded["layers"] = [
+        {**layer, "wq": {"w": layer["wq"]["w"] * scale,
+                         "b": layer["wq"]["b"] * scale}}
+        for layer in params["layers"]
+    ]
+    return folded
+
+
+# ---------------------------------------------------------------------------
+# Losses / metrics
+# ---------------------------------------------------------------------------
+
+def vit_loss(params, cfg, images, labels):
+    logits = forward(params, cfg, images)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+def vit_accuracy(params, cfg, images, labels, **fw):
+    logits = forward(params, cfg, images, **fw)
+    return jnp.mean(jnp.argmax(logits, axis=-1) == labels)
+
+
+def bert_span_loss(params, cfg, tokens, spans):
+    """``spans``: [b, 2] start/end token indices."""
+    logits = forward(params, cfg, tokens)          # [b, sl, 2]
+    logp = jax.nn.log_softmax(logits, axis=1)
+    start = jnp.take_along_axis(logp[:, :, 0], spans[:, :1], axis=1)
+    end = jnp.take_along_axis(logp[:, :, 1], spans[:, 1:], axis=1)
+    return -jnp.mean(start + end)
+
+
+def bert_exact_match(params, cfg, tokens, spans, **fw):
+    """SQuAD-style exact match of the argmax span."""
+    logits = forward(params, cfg, tokens, **fw)
+    pred_start = jnp.argmax(logits[:, :, 0], axis=-1)
+    pred_end = jnp.argmax(logits[:, :, 1], axis=-1)
+    return jnp.mean((pred_start == spans[:, 0]) & (pred_end == spans[:, 1]))
+
+
+def count_params(params: Params) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))

@@ -1,0 +1,151 @@
+"""Quantization math shared by the whole stack.
+
+This module is the single numerical contract between
+
+* the L1 Pallas kernels (``kernels/``) that model what the topkima
+  hardware computes,
+* the L2 model (``model.py``) trained with quantization-aware training
+  (QAT), and
+* the L3 rust circuit simulator (``rust/src/quant/``), which mirrors the
+  same functions so the trained network and the simulated fabric agree
+  bit-for-bit on quantized values.
+
+Hardware mapping (Sec. III-A of the paper):
+
+* **Activations / Q inputs** — 5-bit signed, applied to the SRAM word
+  lines as pulse-width-modulated (PWM) pulses: ``quantize_pwm``.
+* **K^T weights** — 15 levels (-7..7, "approximately 4 bits"), stored as
+  three ternary dual-10T cells driven with input pulses scaled 1/2/4:
+  ``quantize_ternary_cells`` / ``pack_ternary_cells``.
+* **ADC** — n-bit ramp in-memory ADC digitizing the bitline MAC voltage:
+  ``adc_quantize``. The decreasing-ramp top-k behaviour itself lives in
+  ``kernels/topk_softmax.py``; here we only model the transfer function.
+
+All fake-quant functions use straight-through estimators (STE) so they can
+sit inside a training graph (QAT, Sec. III-B).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Hardware constants (Sec. III-A / IV-B of the paper)
+# ---------------------------------------------------------------------------
+
+#: bit-width of Q activations applied as PWM word-line pulses
+N_BITS_INPUT = 5
+#: bit-width of the ramp in-memory ADC
+N_BITS_ADC = 5
+#: number of ternary cells ganged per K^T weight (input scales 1, 2, 4)
+CELLS_PER_WEIGHT = 3
+#: resulting weight range: -7 .. +7 (15 levels, "approximately 4 bits")
+WEIGHT_LEVELS = 2 ** CELLS_PER_WEIGHT - 1  # 7
+#: per-cell input pulse scale factors
+CELL_SCALES = (1, 2, 4)
+
+
+def _ste_round(x: jnp.ndarray) -> jnp.ndarray:
+    """Round with a straight-through gradient (identity in backward)."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+# ---------------------------------------------------------------------------
+# Symmetric uniform fake-quant (QAT building block)
+# ---------------------------------------------------------------------------
+
+def symmetric_scale(x: jnp.ndarray, n_bits: int, axis=None) -> jnp.ndarray:
+    """Scale mapping ``max|x|`` to the top code of a signed n-bit grid."""
+    qmax = 2 ** (n_bits - 1) - 1
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    return jnp.maximum(amax, 1e-8) / qmax
+
+
+def fake_quant(x: jnp.ndarray, n_bits: int, scale=None, axis=None) -> jnp.ndarray:
+    """Symmetric uniform fake-quantization with an STE gradient.
+
+    ``q = clip(round(x / s), -qmax, qmax) * s`` — the value grid the
+    hardware sees, kept in float for training.
+    """
+    qmax = 2 ** (n_bits - 1) - 1
+    s = symmetric_scale(x, n_bits, axis=axis) if scale is None else scale
+    q = _ste_round(x / s)
+    q = jnp.clip(q, -qmax, qmax)
+    return q * s
+
+
+def quantize_codes(x: jnp.ndarray, n_bits: int, scale) -> jnp.ndarray:
+    """Integer codes (no STE) — what actually travels on the hardware."""
+    qmax = 2 ** (n_bits - 1) - 1
+    return jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# PWM input quantization (Q activations)
+# ---------------------------------------------------------------------------
+
+def quantize_pwm(x: jnp.ndarray, scale=None) -> jnp.ndarray:
+    """5-bit signed PWM fake-quant of word-line inputs (Q values)."""
+    return fake_quant(x, N_BITS_INPUT, scale=scale)
+
+
+# ---------------------------------------------------------------------------
+# Ternary-cell weight quantization (K^T)
+# ---------------------------------------------------------------------------
+
+def quantize_ternary_cells(w: jnp.ndarray, scale=None) -> jnp.ndarray:
+    """Fake-quant K^T onto the 15-level (-7..7) ternary-cell grid."""
+    if scale is None:
+        scale = symmetric_scale(w, CELLS_PER_WEIGHT + 1)  # qmax == 7
+    q = _ste_round(w / scale)
+    q = jnp.clip(q, -WEIGHT_LEVELS, WEIGHT_LEVELS)
+    return q * scale
+
+
+def pack_ternary_cells(codes: jnp.ndarray) -> jnp.ndarray:
+    """Decompose integer weight codes (-7..7) into 3 ternary cells.
+
+    Cell ``i`` holds a value in {-1, 0, +1} and is driven with an input
+    pulse scaled by ``CELL_SCALES[i]``; ``sum_i cell_i * scale_i`` must
+    reconstruct the code. Mirrors the bit-plane split the hardware uses
+    (sign-magnitude binary over the ganged cells).
+
+    Returns an array with a trailing axis of size ``CELLS_PER_WEIGHT``.
+    """
+    sign = jnp.sign(codes)
+    mag = jnp.abs(codes)
+    cells = [((mag >> i) & 1) * sign for i in range(CELLS_PER_WEIGHT)]
+    return jnp.stack(cells, axis=-1).astype(jnp.int32)
+
+
+def unpack_ternary_cells(cells: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`pack_ternary_cells`."""
+    scales = jnp.asarray(CELL_SCALES, dtype=cells.dtype)
+    return jnp.sum(cells * scales, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Ramp-ADC transfer function
+# ---------------------------------------------------------------------------
+
+def adc_quantize(v: jnp.ndarray, full_scale, n_bits: int = N_BITS_ADC) -> jnp.ndarray:
+    """n-bit ramp-ADC transfer function over a symmetric full-scale range.
+
+    The ramp IMA compares the MAC bitline voltage against ``2**n`` equally
+    spaced ramp steps; the output code is the step index at the crossing.
+    Modeled as a mid-tread uniform quantizer over ``[-full_scale,
+    +full_scale]`` with an STE gradient so it can participate in QAT.
+    """
+    qmax = 2 ** (n_bits - 1) - 1
+    lsb = full_scale / qmax
+    q = _ste_round(v / lsb)
+    q = jnp.clip(q, -(qmax + 1), qmax)
+    return q * lsb
+
+
+def adc_codes(v: jnp.ndarray, full_scale, n_bits: int = N_BITS_ADC) -> jnp.ndarray:
+    """Integer ADC output codes (what the arbiter-encoder latches)."""
+    qmax = 2 ** (n_bits - 1) - 1
+    lsb = full_scale / qmax
+    return jnp.clip(jnp.round(v / lsb), -(qmax + 1), qmax).astype(jnp.int32)

@@ -1,0 +1,169 @@
+"""Training loop for the synthetic Topkima-Former models (build time only).
+
+Implements the paper's training recipe (Sec. III-B):
+
+* **TFCBP** — top-k forward / complete backward, already inside
+  ``model.tfcbp_softmax``; enabled whenever ``cfg.topk > 0``.
+* **QAT** — 5-bit activation / ternary-cell weight fake-quant with STE,
+  enabled by ``cfg.qat``; FP32 master weights are updated in backward.
+
+A small hand-rolled Adam (no optax in this environment) trains ViT-tiny on
+synth-CIFAR and BERT-tiny on synth-SQuAD. ``train_model`` is the single
+entry point used by the Fig 3 sweep (``experiments.py``) and by ``aot.py``
+to produce deployable checkpoints.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import pickle
+from pathlib import Path
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as D
+from . import model as M
+
+
+# ---------------------------------------------------------------------------
+# Minimal Adam
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class AdamState:
+    step: int
+    mu: M.Params
+    nu: M.Params
+
+
+def adam_init(params: M.Params) -> AdamState:
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return AdamState(step=0,
+                     mu=zeros,
+                     nu=jax.tree_util.tree_map(jnp.zeros_like, params))
+
+
+def adam_update(state: AdamState, grads: M.Params, params: M.Params,
+                lr: float, b1=0.9, b2=0.999, eps=1e-8
+                ) -> Tuple[AdamState, M.Params]:
+    step = state.step + 1
+    mu = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g,
+                                state.mu, grads)
+    nu = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                                state.nu, grads)
+    mhat_scale = 1.0 / (1 - b1 ** step)
+    vhat_scale = 1.0 / (1 - b2 ** step)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m, v: p - lr * (m * mhat_scale) /
+        (jnp.sqrt(v * vhat_scale) + eps),
+        params, mu, nu)
+    return AdamState(step=step, mu=mu, nu=nu), new_params
+
+
+# ---------------------------------------------------------------------------
+# Training
+# ---------------------------------------------------------------------------
+
+def _loss_fn(cfg: M.ModelConfig) -> Callable:
+    return M.vit_loss if cfg.kind == "vit" else M.bert_span_loss
+
+
+def _metric_fn(cfg: M.ModelConfig) -> Callable:
+    return M.vit_accuracy if cfg.kind == "vit" else M.bert_exact_match
+
+
+def make_dataset(cfg: M.ModelConfig, n_train: int, n_eval: int, seed: int):
+    """(train arrays, eval arrays) for the config's task."""
+    if cfg.kind == "vit":
+        xs, ys = D.synth_cifar(cfg.n_classes, n_train + n_eval, seed=seed,
+                               image_size=cfg.image_size)
+    else:
+        xs, ys = D.synth_squad(n_train + n_eval, seed=seed,
+                               seq_len=cfg.seq_len, vocab_size=cfg.vocab_size)
+    return (xs[:n_train], ys[:n_train]), (xs[n_train:], ys[n_train:])
+
+
+def evaluate(params: M.Params, cfg: M.ModelConfig, eval_set,
+             batch_size: int = 100, **fw) -> float:
+    """Mean accuracy / exact-match over the eval split."""
+    xs, ys = eval_set
+    metric = _metric_fn(cfg)
+    fn = jax.jit(functools.partial(metric, cfg=cfg, **fw),
+                 static_argnames=())
+    total, n = 0.0, 0
+    for i in range(0, len(xs), batch_size):
+        xb = jnp.asarray(xs[i:i + batch_size])
+        yb = jnp.asarray(ys[i:i + batch_size])
+        total += float(metric(params, cfg, xb, yb, **fw)) * len(xb)
+        n += len(xb)
+    return total / max(n, 1)
+
+
+def train_model(cfg: M.ModelConfig, *, steps: int = 600,
+                batch_size: int = 64, lr: float = 1e-3, seed: int = 0,
+                n_train: int = 4096, n_eval: int = 1024,
+                init: Optional[M.Params] = None,
+                log_every: int = 0) -> Dict:
+    """Train one model; returns dict with params, eval accuracy, history.
+
+    ``init`` warm-starts from existing params (used by the Fig 3 sweep to
+    fine-tune per-k from a full-softmax pretrain, which is how TFCBP is
+    deployed: take a trained network, re-train briefly with top-k
+    forward).
+    """
+    train_set, eval_set = make_dataset(cfg, n_train, n_eval, seed)
+    params = init if init is not None else M.init_params(
+        jax.random.PRNGKey(seed), cfg)
+    opt = adam_init(params)
+    loss_fn = _loss_fn(cfg)
+
+    @jax.jit
+    def step_fn(params, opt_mu, opt_nu, opt_step, xb, yb):
+        loss, grads = jax.value_and_grad(loss_fn)(params, cfg, xb, yb)
+        state = AdamState(step=opt_step, mu=opt_mu, nu=opt_nu)
+        state, params = adam_update(state, grads, params, lr)
+        return params, state.mu, state.nu, state.step, loss
+
+    history = []
+    gen = D.batches(train_set, batch_size, seed=seed)
+    for i in range(steps):
+        xb, yb = next(gen)
+        params, opt.mu, opt.nu, opt.step, loss = step_fn(
+            params, opt.mu, opt.nu, opt.step, xb, yb)
+        if log_every and (i % log_every == 0 or i == steps - 1):
+            history.append((i, float(loss)))
+            print(f"  step {i:5d} loss {float(loss):.4f}")
+
+    acc = evaluate(params, cfg, eval_set)
+    return {"params": params, "cfg": cfg, "accuracy": acc,
+            "history": history, "eval_set": eval_set}
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint I/O (numpy pickle — consumed by aot.py, and exported to the
+# rust side as raw .npz where needed)
+# ---------------------------------------------------------------------------
+
+def save_checkpoint(path: str | Path, params: M.Params,
+                    cfg: M.ModelConfig, meta: Optional[dict] = None) -> None:
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    blob = {
+        "params": jax.tree_util.tree_map(np.asarray, params),
+        "cfg": dataclasses.asdict(cfg),
+        "meta": meta or {},
+    }
+    with open(path, "wb") as f:
+        pickle.dump(blob, f)
+
+
+def load_checkpoint(path: str | Path) -> Tuple[M.Params, M.ModelConfig, dict]:
+    with open(path, "rb") as f:
+        blob = pickle.load(f)
+    params = jax.tree_util.tree_map(jnp.asarray, blob["params"])
+    cfg = M.ModelConfig(**blob["cfg"])
+    return params, cfg, blob["meta"]

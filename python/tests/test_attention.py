@@ -1,0 +1,84 @@
+"""Fused topkima attention Pallas kernel vs oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import topkima_attention
+from compile.kernels.imc_qkt import calibrate
+from compile.kernels.topk_softmax import crossbar_split
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape)
+
+
+def head_inputs(sl=64, d_k=32, d_v=32, seed=0):
+    return (rand((sl, d_k), seed=seed), rand((d_k, sl), seed=seed + 1),
+            rand((sl, d_v), seed=seed + 2))
+
+
+class TestTopkimaAttention:
+    @pytest.mark.parametrize("k", [1, 5, 10])
+    def test_matches_ref(self, k):
+        q, kt, v = head_inputs()
+        got = topkima_attention(q, kt, v, k)
+        want = ref.attention_ref(q, kt, v, k)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_row_block_invariance(self):
+        q, kt, v = head_inputs(sl=50, seed=3)
+        a = topkima_attention(q, kt, v, 5, row_block=7)
+        b = topkima_attention(q, kt, v, 5, row_block=32)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+    def test_sub_topk_variant(self):
+        q, kt, v = head_inputs(sl=96, seed=4)
+        segs, ks = crossbar_split(96, 5, 40)
+        got = topkima_attention(q, kt, v, 5, segments=segs, ks=ks)
+        a = ref.sub_topk_softmax_ref(q @ kt, segs, ks)
+        want = a @ v
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_output_in_value_convex_hull(self):
+        # attention output rows are convex combos of V rows
+        q, kt, v = head_inputs(seed=5)
+        out = np.asarray(topkima_attention(q, kt, v, 5))
+        vn = np.asarray(v)
+        assert out.min() >= vn.min() - 1e-5
+        assert out.max() <= vn.max() + 1e-5
+
+    def test_k1_copies_argmax_value_row(self):
+        q, kt, v = head_inputs(seed=6)
+        out = np.asarray(topkima_attention(q, kt, v, 1))
+        winners = np.argmax(np.asarray(q @ kt), axis=-1)
+        np.testing.assert_allclose(out, np.asarray(v)[winners], rtol=1e-5)
+
+    def test_quantized_path_close_to_fp(self):
+        q, kt, v = head_inputs(seed=7)
+        c = calibrate(q, kt)
+        qz = topkima_attention(q, kt, v, 5, quantized=True,
+                               q_scale=c["q_scale"], w_scale=c["w_scale"],
+                               adc_full_scale=c["adc_full_scale"])
+        fp = topkima_attention(q, kt, v, 5)
+        # winners may shift on near-ties; demand coarse agreement only
+        err = np.abs(np.asarray(qz) - np.asarray(fp)).mean()
+        assert err < 0.6 * np.abs(np.asarray(fp)).mean() + 0.15
+
+    @settings(max_examples=5, deadline=None)
+    @given(sl=st.integers(4, 64), d=st.integers(2, 32),
+           k=st.integers(1, 6), seed=st.integers(0, 2 ** 16))
+    def test_hypothesis_sweep(self, sl, d, k, seed):
+        k = min(k, sl)
+        q, kt, v = head_inputs(sl=sl, d_k=d, d_v=d, seed=seed)
+        got = topkima_attention(q, kt, v, k)
+        want = ref.attention_ref(q, kt, v, k)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-5)

@@ -1,0 +1,95 @@
+"""Synthetic dataset generators: determinism, structure, learnability hooks."""
+
+import numpy as np
+import pytest
+
+from compile import data as D
+
+
+class TestSynthCifar:
+    def test_shapes_and_dtypes(self):
+        xs, ys = D.synth_cifar(10, 64, seed=0)
+        assert xs.shape == (64, 32, 32, 3) and xs.dtype == np.float32
+        assert ys.shape == (64,) and ys.dtype == np.int32
+
+    def test_deterministic(self):
+        a = D.synth_cifar(10, 16, seed=7)
+        b = D.synth_cifar(10, 16, seed=7)
+        np.testing.assert_array_equal(a[0], b[0])
+        np.testing.assert_array_equal(a[1], b[1])
+
+    def test_seed_changes_data(self):
+        a, _ = D.synth_cifar(10, 16, seed=1)
+        b, _ = D.synth_cifar(10, 16, seed=2)
+        assert not np.array_equal(a, b)
+
+    def test_labels_cover_range(self):
+        _, ys = D.synth_cifar(10, 2000, seed=0)
+        assert set(np.unique(ys)) == set(range(10))
+
+    def test_100_classes(self):
+        _, ys = D.synth_cifar(100, 3000, seed=0)
+        assert ys.max() == 99 and ys.min() == 0
+
+    def test_class_signal_exists(self):
+        # same-class images correlate more than cross-class on average
+        xs, ys = D.synth_cifar(4, 400, seed=3)
+        protos = [xs[ys == c].mean(axis=0).ravel() for c in range(4)]
+        # prototypes of distinct classes should be nearly orthogonal
+        # relative to their own norms (random shifts wash phases, so just
+        # demand within-class spread < cross-class distance on centroids)
+        dists = [np.linalg.norm(protos[i] - protos[j])
+                 for i in range(4) for j in range(i + 1, 4)]
+        assert min(dists) > 0.05
+
+
+class TestSynthSquad:
+    def test_shapes(self):
+        toks, spans = D.synth_squad(32, seed=0, seq_len=128)
+        assert toks.shape == (32, 128) and spans.shape == (32, 2)
+
+    def test_header_layout(self):
+        toks, _ = D.synth_squad(16, seed=1)
+        assert (toks[:, 0] == D.CLS).all()
+        assert (toks[:, 3] == D.SEP).all()
+
+    def test_answer_follows_query_bigram(self):
+        toks, spans = D.synth_squad(64, seed=2, seq_len=96)
+        for t, (s, e) in zip(toks, spans):
+            q1, q2 = t[1], t[2]
+            assert t[s - 2] == q1 and t[s - 1] == q2, "span preceded by bigram"
+            assert t[e + 1] == D.END, "span terminated by END sentinel"
+            assert s <= e < 96
+
+    def test_bigram_unique_in_body(self):
+        toks, spans = D.synth_squad(64, seed=3, seq_len=96)
+        for t, (s, _) in zip(toks, spans):
+            q1, q2 = int(t[1]), int(t[2])
+            body = t[4:]
+            hits = [i for i in range(len(body) - 1)
+                    if body[i] == q1 and body[i + 1] == q2]
+            assert len(hits) == 1, hits
+
+    def test_deterministic(self):
+        a = D.synth_squad(8, seed=9)
+        b = D.synth_squad(8, seed=9)
+        np.testing.assert_array_equal(a[0], b[0])
+        np.testing.assert_array_equal(a[1], b[1])
+
+
+class TestBatches:
+    def test_batch_shapes_and_coverage(self):
+        xs = np.arange(100)[:, None].astype(np.float32)
+        ys = np.arange(100).astype(np.int32)
+        gen = D.batches((xs, ys), 10, seed=0)
+        xb, yb = next(gen)
+        assert xb.shape == (10, 1) and yb.shape == (10,)
+
+    def test_alignment_preserved(self):
+        xs = np.arange(50).astype(np.float32)
+        ys = np.arange(50).astype(np.int32)
+        gen = D.batches((xs, ys), 8, seed=1)
+        for _ in range(10):
+            xb, yb = next(gen)
+            np.testing.assert_array_equal(
+                np.asarray(xb).astype(np.int32), np.asarray(yb))

@@ -1,0 +1,70 @@
+"""Error-injection pipeline tests (Fig 4b SW side)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import error_inject as EI
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = dataclasses.replace(M.VIT_TINY, d_model=32, n_heads=2, n_layers=2,
+                          d_ff=64, image_size=16, patch_size=4, topk=5)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = M.init_params(jax.random.PRNGKey(0), CFG)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (8, 16, 16, 3))
+    return params, xs
+
+
+class TestErrorModel:
+    def test_zero_model_is_exact(self, setup):
+        params, xs = setup
+        em = EI.ErrorModel(0.0, 0.0, 0.0)
+        noisy = EI.attention_with_ima_error(
+            params, CFG, xs, jax.random.PRNGKey(2), em)
+        clean = M.forward(params, CFG, xs)
+        np.testing.assert_allclose(np.asarray(noisy), np.asarray(clean),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_noise_perturbs_but_bounded(self, setup):
+        params, xs = setup
+        em = EI.ErrorModel()
+        noisy = EI.attention_with_ima_error(
+            params, CFG, xs, jax.random.PRNGKey(3), em)
+        clean = M.forward(params, CFG, xs)
+        diff = np.abs(np.asarray(noisy) - np.asarray(clean))
+        assert diff.max() > 0, "error model had no effect"
+        # correlation stays high: the error is LSB-scale, not destructive
+        corr = np.corrcoef(np.asarray(noisy).ravel(),
+                           np.asarray(clean).ravel())[0, 1]
+        assert corr > 0.8, corr
+
+    def test_error_sampling_statistics(self):
+        em = EI.ErrorModel(sigma_noise=0.5, sigma_offset=0.0, p_skip=0.0)
+        err = EI.ima_error_model(jax.random.PRNGKey(4), (200, 64), em, 1.0)
+        e = np.asarray(err)
+        assert abs(e.mean()) < 0.05
+        assert abs(e.std() - 0.5) < 0.05
+
+    def test_column_offset_is_static_per_column(self):
+        em = EI.ErrorModel(sigma_noise=0.0, sigma_offset=0.5, p_skip=0.0)
+        err = np.asarray(EI.ima_error_model(
+            jax.random.PRNGKey(5), (100, 16), em, 1.0))
+        # same offset down each column → zero variance within a column
+        assert np.allclose(err.std(axis=0), 0.0, atol=1e-6)
+        assert err.std() > 0.1
+
+    def test_eval_with_error_bounds(self, setup):
+        params, _ = setup
+        from compile import train as T
+        _, eval_set = T.make_dataset(CFG, 64, 64, seed=0)
+        acc = EI.eval_with_error(params, CFG, eval_set, EI.ErrorModel(),
+                                 batch_size=32)
+        assert 0.0 <= acc <= 1.0

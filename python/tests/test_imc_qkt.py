@@ -1,0 +1,99 @@
+"""IMC Q·K^T Pallas kernel vs oracle + hardware-grid invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quant
+from compile.kernels import ref
+from compile.kernels.imc_qkt import calibrate, imc_qkt
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape)
+
+
+@pytest.fixture()
+def calib():
+    q = rand((64, 32), seed=1)
+    kt = rand((32, 96), seed=2)
+    return q, kt, calibrate(q, kt)
+
+
+class TestImcQkt:
+    def test_matches_ref(self, calib):
+        q, kt, c = calib
+        got = imc_qkt(q, kt, **c)
+        want = ref.imc_qkt_ref(q, kt, q_scale=c["q_scale"],
+                               w_scale=c["w_scale"],
+                               adc_full_scale=c["adc_full_scale"])
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_block_invariance(self, calib):
+        q, kt, c = calib
+        a = imc_qkt(q, kt, row_block=8, col_block=32, **c)
+        b = imc_qkt(q, kt, row_block=64, col_block=96, **c)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+    def test_outputs_on_adc_grid(self, calib):
+        q, kt, c = calib
+        out = np.asarray(imc_qkt(q, kt, **c))
+        lsb = c["adc_full_scale"] / (2 ** (quant.N_BITS_ADC - 1) - 1)
+        codes = out / lsb
+        np.testing.assert_allclose(codes, np.round(codes), atol=1e-4)
+
+    def test_quantization_error_small_vs_fp(self, calib):
+        # the whole premise of QAT: the quantized macro tracks FP matmul
+        q, kt, c = calib
+        got = np.asarray(imc_qkt(q, kt, **c))
+        fp = np.asarray(q @ kt)
+        rel = np.abs(got - fp).mean() / np.abs(fp).mean()
+        assert rel < 0.25, rel
+
+    def test_nonsquare_padding(self):
+        q = rand((7, 16), seed=3)
+        kt = rand((16, 33), seed=4)
+        c = calibrate(q, kt)
+        got = imc_qkt(q, kt, **c)
+        assert got.shape == (7, 33)
+        want = ref.imc_qkt_ref(q, kt, q_scale=c["q_scale"],
+                               w_scale=c["w_scale"],
+                               adc_full_scale=c["adc_full_scale"])
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+
+    @settings(max_examples=6, deadline=None)
+    @given(m=st.integers(1, 20), d=st.integers(2, 48), n=st.integers(1, 70),
+           seed=st.integers(0, 2 ** 16))
+    def test_hypothesis_shapes(self, m, d, n, seed):
+        q = rand((m, d), seed=seed)
+        kt = rand((d, n), seed=seed + 1)
+        c = calibrate(q, kt)
+        got = np.asarray(imc_qkt(q, kt, **c))
+        want = np.asarray(ref.imc_qkt_ref(
+            q, kt, q_scale=c["q_scale"], w_scale=c["w_scale"],
+            adc_full_scale=c["adc_full_scale"]))
+        # MACs landing exactly on an ADC decision boundary may round to
+        # adjacent codes depending on f32 accumulation order (pallas
+        # tiles vs single matmul) — allow a one-LSB disagreement there.
+        lsb = c["adc_full_scale"] / 15.0
+        diff = np.abs(got - want)
+        assert (diff <= lsb * 1.001).all(), diff.max()
+        # and at most a tiny fraction of entries may sit on a boundary
+        assert (diff > lsb * 0.5).mean() < 0.05
+
+
+class TestCalibrate:
+    def test_scales_positive(self, calib):
+        _, _, c = calib
+        assert c["q_scale"] > 0 and c["w_scale"] > 0
+        assert c["adc_full_scale"] > 0
+
+    def test_deterministic(self):
+        q, kt = rand((8, 8), seed=5), rand((8, 8), seed=6)
+        assert calibrate(q, kt) == calibrate(q, kt)

@@ -1,0 +1,145 @@
+"""L2 model tests: shapes, TFCBP semantics, scale-free folding, QAT."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+VIT = dataclasses.replace(M.VIT_TINY, d_model=32, n_heads=2, n_layers=2,
+                          d_ff=64, image_size=16, patch_size=4)
+BERT = dataclasses.replace(M.BERT_TINY, d_model=32, n_heads=2, n_layers=2,
+                           d_ff=64, seq_len=32, vocab_size=16)
+
+
+@pytest.fixture(scope="module")
+def vit_params():
+    return M.init_params(jax.random.PRNGKey(0), VIT)
+
+
+@pytest.fixture(scope="module")
+def bert_params():
+    return M.init_params(jax.random.PRNGKey(1), BERT)
+
+
+class TestShapes:
+    def test_vit_logits(self, vit_params):
+        x = jax.random.normal(jax.random.PRNGKey(2), (3, 16, 16, 3))
+        out = M.forward(vit_params, VIT, x)
+        assert out.shape == (3, VIT.n_classes)
+
+    def test_bert_span_logits(self, bert_params):
+        toks = jax.random.randint(jax.random.PRNGKey(3), (3, 32), 0, 16)
+        out = M.forward(bert_params, BERT, toks)
+        assert out.shape == (3, 32, 2)
+
+    def test_tokens_property(self):
+        assert VIT.tokens == (16 // 4) ** 2 + 1
+        assert BERT.tokens == 32
+
+    def test_param_count_nonzero(self, vit_params):
+        assert M.count_params(vit_params) > 10_000
+
+
+class TestTFCBP:
+    def test_forward_is_topk(self):
+        x = jax.random.normal(jax.random.PRNGKey(4), (2, 3, 20))
+        y = M.tfcbp_softmax(x, 4)
+        want = ref.topk_softmax_ref(x, 4)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                                   rtol=1e-6)
+
+    def test_backward_is_full_softmax_grad(self):
+        x = jax.random.normal(jax.random.PRNGKey(5), (4, 16))
+
+        def loss_topk(x):
+            return jnp.sum(M.tfcbp_softmax(x, 3) * jnp.arange(16.0))
+
+        def loss_full(x):
+            return jnp.sum(jax.nn.softmax(x, -1) * jnp.arange(16.0))
+
+        g_topk = jax.grad(loss_topk)(x)
+        g_full = jax.grad(loss_full)(x)
+        np.testing.assert_allclose(np.asarray(g_topk), np.asarray(g_full),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_k0_is_dense_softmax(self):
+        x = jax.random.normal(jax.random.PRNGKey(6), (4, 16))
+        np.testing.assert_allclose(
+            np.asarray(M.tfcbp_softmax(x, 0)),
+            np.asarray(jax.nn.softmax(x, -1)), rtol=1e-6)
+
+    def test_grad_nonzero_outside_topk(self):
+        # TFCBP's point: losers still receive gradient signal
+        x = jnp.array([[5.0, 4.0, 0.0, -1.0]])
+        g = jax.grad(lambda v: M.tfcbp_softmax(v, 1)[0, 0])(x)
+        assert float(jnp.abs(g[0, 2])) > 0
+        assert float(jnp.abs(g[0, 3])) > 0
+
+
+class TestScaleFree:
+    def test_fold_preserves_logits(self, vit_params):
+        x = jax.random.normal(jax.random.PRNGKey(7), (2, 16, 16, 3))
+        base = M.forward(vit_params, VIT, x)
+        folded = M.fold_scale_free(vit_params, VIT)
+        out = M.forward(folded, VIT, x, fold_scale=True)
+        np.testing.assert_allclose(np.asarray(base), np.asarray(out),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_fold_changes_wq_only(self, vit_params):
+        folded = M.fold_scale_free(vit_params, VIT)
+        for orig, fl in zip(vit_params["layers"], folded["layers"]):
+            scale = 1.0 / np.sqrt(VIT.d_head)
+            np.testing.assert_allclose(np.asarray(fl["wq"]["w"]),
+                                       np.asarray(orig["wq"]["w"]) * scale,
+                                       rtol=1e-6)
+            np.testing.assert_allclose(np.asarray(fl["wk"]["w"]),
+                                       np.asarray(orig["wk"]["w"]))
+
+
+class TestQAT:
+    def test_qat_forward_finite_and_close(self, vit_params):
+        x = jax.random.normal(jax.random.PRNGKey(8), (2, 16, 16, 3))
+        qcfg = dataclasses.replace(VIT, qat=True)
+        out = M.forward(vit_params, qcfg, x)
+        assert np.isfinite(np.asarray(out)).all()
+        base = M.forward(vit_params, VIT, x)
+        # fake-quant perturbs but should not destroy the logits
+        corr = np.corrcoef(np.asarray(out).ravel(),
+                           np.asarray(base).ravel())[0, 1]
+        assert corr > 0.7, corr
+
+    def test_qat_grad_flows(self, vit_params):
+        x = jax.random.normal(jax.random.PRNGKey(9), (2, 16, 16, 3))
+        qcfg = dataclasses.replace(VIT, qat=True)
+        g = jax.grad(M.vit_loss)(vit_params, qcfg, x, jnp.array([0, 1]))
+        total = sum(float(jnp.abs(t).sum())
+                    for t in jax.tree_util.tree_leaves(g))
+        assert total > 0
+
+
+class TestLosses:
+    def test_vit_loss_decreases_on_true_label_logit(self, vit_params):
+        x = jax.random.normal(jax.random.PRNGKey(10), (4, 16, 16, 3))
+        y = jnp.array([0, 1, 2, 3])
+        l0 = float(M.vit_loss(vit_params, VIT, x, y))
+        assert l0 > 0
+
+    def test_bert_em_bounds(self, bert_params):
+        toks = jax.random.randint(jax.random.PRNGKey(11), (4, 32), 0, 16)
+        spans = jnp.array([[1, 2], [3, 4], [5, 6], [7, 8]])
+        em = float(M.bert_exact_match(bert_params, BERT, toks, spans))
+        assert 0.0 <= em <= 1.0
+
+    def test_pallas_path_matches_jnp_path(self, vit_params):
+        x = jax.random.normal(jax.random.PRNGKey(12), (1, 16, 16, 3))
+        a = M.forward(vit_params, VIT, x, use_pallas=False)
+        b = M.forward(vit_params, VIT, x, use_pallas=True)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)

@@ -1,0 +1,105 @@
+"""Quantization contract tests (shared numerical grid with the rust side)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quant
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed=0, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), shape)
+
+
+class TestFakeQuant:
+    def test_idempotent(self):
+        x = rand((32,), seed=1)
+        s = quant.symmetric_scale(x, 5)
+        q1 = quant.fake_quant(x, 5, scale=s)
+        q2 = quant.fake_quant(q1, 5, scale=s)
+        np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), rtol=1e-6)
+
+    def test_error_bounded_by_half_lsb(self):
+        x = rand((256,), seed=2)
+        s = float(quant.symmetric_scale(x, 5))
+        q = quant.fake_quant(x, 5, scale=s)
+        err = np.abs(np.asarray(q - x))
+        inside = np.abs(np.asarray(x)) <= 15 * s
+        assert (err[inside] <= s / 2 + 1e-6).all()
+
+    def test_ste_gradient_is_identity(self):
+        x = rand((16,), seed=3)
+        g = jax.grad(lambda v: jnp.sum(quant.fake_quant(v, 5, scale=0.1)))(x)
+        clipped = np.abs(np.asarray(x) / 0.1) <= 15
+        np.testing.assert_allclose(np.asarray(g)[clipped], 1.0)
+
+    def test_codes_in_range(self):
+        x = rand((1024,), seed=4, scale=10)
+        codes = np.asarray(quant.quantize_codes(x, 5, scale=0.3))
+        assert codes.min() >= -15 and codes.max() <= 15
+
+    @settings(max_examples=12, deadline=None)
+    @given(seed=st.integers(0, 2 ** 16), n_bits=st.integers(2, 8))
+    def test_hypothesis_levels(self, seed, n_bits):
+        x = rand((128,), seed=seed, scale=3.0)
+        s = float(quant.symmetric_scale(x, n_bits))
+        q = np.asarray(quant.fake_quant(x, n_bits, scale=s))
+        levels = np.unique(np.round(q / s).astype(int))
+        qmax = 2 ** (n_bits - 1) - 1
+        assert levels.min() >= -qmax and levels.max() <= qmax
+
+
+class TestTernaryCells:
+    def test_grid_is_15_levels(self):
+        x = jnp.linspace(-2, 2, 1001)
+        s = 2.0 / 7
+        q = np.asarray(quant.quantize_ternary_cells(x, scale=s))
+        codes = np.unique(np.round(q / s).astype(int))
+        assert codes.min() == -7 and codes.max() == 7
+        assert len(codes) == 15
+
+    def test_pack_unpack_roundtrip(self):
+        codes = jnp.arange(-7, 8, dtype=jnp.int32)
+        cells = quant.pack_ternary_cells(codes)
+        assert np.asarray(jnp.abs(cells) <= 1).all()
+        back = quant.unpack_ternary_cells(cells)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(codes))
+
+    def test_cells_are_ternary(self):
+        codes = jnp.array([-7, -3, 0, 5, 7])
+        cells = np.asarray(quant.pack_ternary_cells(codes))
+        assert set(np.unique(cells)).issubset({-1, 0, 1})
+
+    def test_cell_scales_binary(self):
+        # 3 cells scaled 1/2/4 span exactly -7..7 (Sec. III-A)
+        assert quant.CELL_SCALES == (1, 2, 4)
+        assert quant.WEIGHT_LEVELS == 7
+
+
+class TestAdc:
+    def test_transfer_monotonic(self):
+        v = jnp.linspace(-1, 1, 201)
+        q = np.asarray(quant.adc_quantize(v, 1.0))
+        assert (np.diff(q) >= -1e-9).all()
+
+    def test_codes_range_5bit(self):
+        v = rand((512,), seed=5, scale=2.0)
+        codes = np.asarray(quant.adc_codes(v, 1.0, n_bits=5))
+        assert codes.min() >= -16 and codes.max() <= 15
+
+    def test_full_scale_hits_top_code(self):
+        codes = quant.adc_codes(jnp.array([1.0, -1.0]), 1.0, n_bits=5)
+        assert codes[0] == 15 and codes[1] == -15
+
+    @pytest.mark.parametrize("n_bits", [3, 5, 8])
+    def test_quantize_matches_codes(self, n_bits):
+        v = rand((64,), seed=6)
+        fs = 1.5
+        lsb = fs / (2 ** (n_bits - 1) - 1)
+        q = np.asarray(quant.adc_quantize(v, fs, n_bits=n_bits))
+        c = np.asarray(quant.adc_codes(v, fs, n_bits=n_bits))
+        np.testing.assert_allclose(q, c * lsb, rtol=1e-6)

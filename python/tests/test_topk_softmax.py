@@ -1,0 +1,158 @@
+"""Pallas topk_softmax kernel vs pure-jnp oracle (the core L1 signal)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.topk_softmax import (
+    crossbar_split, sub_topk_softmax, topk_softmax)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed=0, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, dtype=dtype)
+
+
+class TestTopkMask:
+    def test_matches_lax_topk(self):
+        x = rand((32, 64))
+        np.testing.assert_array_equal(
+            np.asarray(ref.topk_mask_ref(x, 5)),
+            np.asarray(ref.topk_mask_lax(x, 5)))
+
+    def test_matches_lax_topk_with_ties(self):
+        x = jnp.round(rand((32, 64), seed=1) * 2) / 2
+        np.testing.assert_array_equal(
+            np.asarray(ref.topk_mask_ref(x, 7)),
+            np.asarray(ref.topk_mask_lax(x, 7)))
+
+    def test_tie_prefers_smaller_index(self):
+        # all-equal row: the arbiter grants smaller column addresses first
+        x = jnp.zeros((1, 10))
+        mask = np.asarray(ref.topk_mask_ref(x, 3))[0]
+        assert mask.tolist() == [True] * 3 + [False] * 7
+
+    def test_exactly_k_selected(self):
+        x = rand((16, 40), seed=2)
+        for k in (1, 3, 17):
+            mask = np.asarray(ref.topk_mask_ref(x, k))
+            assert (mask.sum(axis=-1) == k).all()
+
+    def test_k_geq_d_selects_all(self):
+        x = rand((4, 8))
+        assert np.asarray(ref.topk_mask_ref(x, 8)).all()
+        assert np.asarray(ref.topk_mask_ref(x, 100)).all()
+
+
+class TestTopkSoftmaxKernel:
+    @pytest.mark.parametrize("k", [1, 2, 5, 10])
+    @pytest.mark.parametrize("shape", [(4, 64), (2, 3, 384), (1, 17)])
+    def test_matches_ref(self, k, shape):
+        if k >= shape[-1]:
+            pytest.skip("k >= d")
+        x = rand(shape, seed=k)
+        got = topk_softmax(x, k)
+        want = ref.topk_softmax_ref(x, k)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6, atol=1e-7)
+
+    def test_rows_sum_to_one(self):
+        y = np.asarray(topk_softmax(rand((8, 128)), 5))
+        np.testing.assert_allclose(y.sum(axis=-1), 1.0, rtol=1e-5)
+
+    def test_nonselected_exactly_zero(self):
+        x = rand((8, 128), seed=3)
+        y = np.asarray(topk_softmax(x, 5))
+        assert ((y > 0).sum(axis=-1) == 5).all()
+
+    def test_full_k_equals_softmax(self):
+        x = rand((8, 32), seed=4)
+        np.testing.assert_allclose(
+            np.asarray(topk_softmax(x, 32)),
+            np.asarray(ref.softmax_ref(x)), rtol=1e-6, atol=1e-7)
+
+    def test_row_block_invariance(self):
+        x = rand((13, 96), seed=5)
+        a = topk_softmax(x, 5, row_block=1)
+        b = topk_softmax(x, 5, row_block=8)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-7)
+
+    @settings(max_examples=8, deadline=None)
+    @given(rows=st.integers(1, 9), d=st.integers(2, 80),
+           k=st.integers(1, 12), seed=st.integers(0, 2 ** 16))
+    def test_hypothesis_sweep(self, rows, d, k, seed):
+        k = min(k, d)
+        x = rand((rows, d), seed=seed)
+        got = topk_softmax(x, k)
+        want = ref.topk_softmax_ref(x, k)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+
+
+class TestSubTopk:
+    def test_matches_ref(self):
+        x = rand((6, 384), seed=6)
+        segs, ks = crossbar_split(384, 5, 256)
+        got = sub_topk_softmax(x, segs, ks)
+        want = ref.sub_topk_softmax_ref(x, segs, ks)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6, atol=1e-7)
+
+    def test_paper_splits(self):
+        # Sec. IV-B: d=384 → 256-wide: (3,2); 128-wide: (2,2,1)
+        assert crossbar_split(384, 5, 256) == ((256, 128), (3, 2))
+        assert crossbar_split(384, 5, 128) == ((128, 128, 128), (2, 2, 1))
+
+    def test_paper_example_selection(self):
+        # Sec. IV: QK^T = [1..384], 128-wide xbars, k=5 → selected values
+        # [127,128], [255,256], [384]
+        x = jnp.arange(1.0, 385.0)[None, :]
+        segs, ks = crossbar_split(384, 5, 128)
+        mask = np.asarray(ref.sub_topk_mask_ref(x, segs, ks))[0]
+        sel = (np.arange(1, 385))[mask]
+        assert sel.tolist() == [127, 128, 255, 256, 384]
+
+    def test_single_segment_equals_global(self):
+        x = rand((4, 100), seed=7)
+        got = sub_topk_softmax(x, (100,), (5,))
+        want = ref.topk_softmax_ref(x, 5)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6, atol=1e-7)
+
+    def test_sum_ki_probability_one(self):
+        x = rand((4, 300), seed=8)
+        y = np.asarray(sub_topk_softmax(x, (128, 128, 44), (2, 2, 1)))
+        np.testing.assert_allclose(y.sum(axis=-1), 1.0, rtol=1e-5)
+        assert ((y > 0).sum(axis=-1) == 5).all()
+
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 2 ** 16), d=st.integers(20, 200),
+           k=st.integers(2, 8), width=st.integers(8, 128))
+    def test_hypothesis_sub_topk(self, seed, d, k, width):
+        segs, ks = crossbar_split(d, k, width)
+        if any(ki > s for s, ki in zip(segs, ks)):
+            return
+        x = rand((3, d), seed=seed)
+        got = sub_topk_softmax(x, segs, ks)
+        want = ref.sub_topk_softmax_ref(x, segs, ks)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+
+
+class TestCrossbarSplit:
+    def test_k_conserved(self):
+        for d, k, w in [(384, 5, 256), (384, 5, 128), (100, 7, 30),
+                        (64, 1, 16), (4096, 5, 256)]:
+            segs, ks = crossbar_split(d, k, w)
+            assert sum(segs) == d
+            assert sum(ks) == k
+            assert all(s > 0 for s in segs)
+            assert all(ki >= 0 for ki in ks)
+
+    def test_each_xbar_wins_when_k_allows(self):
+        segs, ks = crossbar_split(384, 5, 128)
+        assert all(ki >= 1 for ki in ks)

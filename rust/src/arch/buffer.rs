@@ -1,0 +1,73 @@
+//! On-chip SRAM buffer model.
+//!
+//! Buffers stage activations between ops and hold the 12 heads'
+//! intermediate Q/K/V/A tensors. The paper finds the **buffer dominates
+//! energy** at the module level: unlike latency (hidden behind the
+//! parallel heads), every byte of the 12 heads' traffic costs energy.
+//! Dynamic power per cell from [20]: 1.8e-7 mW/MHz → we express it as
+//! energy per byte of access at the system clock.
+
+/// SRAM buffer with per-access energy and bandwidth-limited latency.
+#[derive(Clone, Copy, Debug)]
+pub struct Buffer {
+    /// Energy per byte read or written, pJ.
+    pub e_per_byte: f64,
+    /// Bytes moved per clock (port width).
+    pub bytes_per_cycle: f64,
+    /// Clock period, ns.
+    pub t_clk_ns: f64,
+}
+
+impl Default for Buffer {
+    fn default() -> Self {
+        // [20]: 1.8e-7 mW/MHz per cell at 0.5 V for the cell array;
+        // peripheral decode/drivers/leakage amortization bring practical
+        // buffer access to ~8 pJ/byte at the module level — calibrated so
+        // the Fig 4f energy pie matches the paper (buffer-dominated).
+        Buffer { e_per_byte: 8.0, bytes_per_cycle: 128.0, t_clk_ns: 5.0 }
+    }
+}
+
+impl Buffer {
+    /// Latency to stream `bytes` through the port, ns.
+    pub fn latency_ns(&self, bytes: f64) -> f64 {
+        (bytes / self.bytes_per_cycle).ceil() * self.t_clk_ns
+    }
+
+    /// Energy to move `bytes` (one direction), pJ.
+    pub fn energy_pj(&self, bytes: f64) -> f64 {
+        bytes * self.e_per_byte
+    }
+
+    /// Round-trip (write then read) energy for staging a tensor, pJ.
+    pub fn stage_energy_pj(&self, bytes: f64) -> f64 {
+        2.0 * self.energy_pj(bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_quantized_to_cycles() {
+        let b = Buffer::default();
+        assert_eq!(b.latency_ns(1.0), 5.0);
+        assert_eq!(b.latency_ns(128.0), 5.0);
+        assert_eq!(b.latency_ns(129.0), 10.0);
+    }
+
+    #[test]
+    fn energy_linear_in_bytes() {
+        let b = Buffer::default();
+        assert!((b.energy_pj(1000.0) - 8000.0).abs() < 1e-9);
+        assert_eq!(b.stage_energy_pj(100.0), 2.0 * b.energy_pj(100.0));
+    }
+
+    #[test]
+    fn zero_bytes_free() {
+        let b = Buffer::default();
+        assert_eq!(b.latency_ns(0.0), 0.0);
+        assert_eq!(b.energy_pj(0.0), 0.0);
+    }
+}

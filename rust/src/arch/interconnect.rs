@@ -1,0 +1,66 @@
+//! H-tree interconnect model (NeuroSim-style).
+//!
+//! Tiles sit at the leaves of a binary H-tree; moving a tensor between a
+//! tile and the global buffer traverses `log2(n_tiles)` levels of
+//! progressively wider links. Cost is per byte × hops, with a bandwidth
+//! term for latency.
+
+/// H-tree over `n_tiles` leaf tiles.
+#[derive(Clone, Copy, Debug)]
+pub struct HTree {
+    pub n_tiles: usize,
+    /// Energy per byte per hop, pJ.
+    pub e_per_byte_hop: f64,
+    /// Link bandwidth, bytes per ns (shared bus at the top level).
+    pub bytes_per_ns: f64,
+}
+
+impl Default for HTree {
+    fn default() -> Self {
+        HTree { n_tiles: 16, e_per_byte_hop: 1.0, bytes_per_ns: 32.0 }
+    }
+}
+
+impl HTree {
+    /// Hops between a leaf tile and the root (global buffer).
+    pub fn hops(&self) -> usize {
+        (self.n_tiles.max(2) as f64).log2().ceil() as usize
+    }
+
+    /// Latency to move `bytes` root↔tile, ns.
+    pub fn latency_ns(&self, bytes: f64) -> f64 {
+        bytes / self.bytes_per_ns + self.hops() as f64 * 1.0
+    }
+
+    /// Energy to move `bytes` root↔tile, pJ.
+    pub fn energy_pj(&self, bytes: f64) -> f64 {
+        bytes * self.e_per_byte_hop * self.hops() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hops_log2() {
+        assert_eq!(HTree { n_tiles: 16, ..Default::default() }.hops(), 4);
+        assert_eq!(HTree { n_tiles: 64, ..Default::default() }.hops(), 6);
+        assert_eq!(HTree { n_tiles: 1, ..Default::default() }.hops(), 1);
+    }
+
+    #[test]
+    fn energy_scales_with_hops_and_bytes() {
+        let small = HTree { n_tiles: 4, ..Default::default() };
+        let big = HTree { n_tiles: 64, ..Default::default() };
+        assert!(big.energy_pj(100.0) > small.energy_pj(100.0));
+        assert!((big.energy_pj(200.0) - 2.0 * big.energy_pj(100.0)).abs()
+            < 1e-9);
+    }
+
+    #[test]
+    fn latency_has_bandwidth_term() {
+        let h = HTree::default();
+        assert!(h.latency_ns(3200.0) > h.latency_ns(32.0));
+    }
+}

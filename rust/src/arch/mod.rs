@@ -1,0 +1,227 @@
+//! NeuroSim-style architecture hierarchy (chip → tile → PE → array) with
+//! per-component latency/energy accounting (Sec. III-A "Overall
+//! architecture design", Figs 4e–h).
+//!
+//! The fabric mixes RRAM tiles (static projection weights W_{Q,K,V},
+//! technology from [19]) and SRAM tiles (per-input K^T and V, [5]/[20]),
+//! connected by an H-tree interconnect with SRAM buffers at every level.
+//! As in NeuroSim, costs are analytic: each component contributes a
+//! latency/energy term per unit of work, and the simulator (`crate::sim`)
+//! aggregates them per component and per operation.
+
+pub mod buffer;
+pub mod interconnect;
+
+pub use buffer::Buffer;
+pub use interconnect::HTree;
+
+use crate::circuits::Timing;
+
+/// Hardware component categories for the Fig 4(e)/(f) breakdowns.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Component {
+    /// Synaptic (crossbar) arrays: MAC + weight storage.
+    SynapticArray,
+    /// ADC / IMA conversion (incl. arbiter for topkima).
+    Adc,
+    /// On-chip SRAM buffers (inter-layer activations, head staging).
+    Buffer,
+    /// H-tree interconnect.
+    Interconnect,
+    /// Digital softmax core (+ sorter for Dtopk).
+    Softmax,
+    /// Partial-sum accumulators across row-split arrays.
+    Accumulator,
+    /// Column mux / misc peripheral digital.
+    Mux,
+}
+
+impl Component {
+    pub const ALL: [Component; 7] = [
+        Component::SynapticArray,
+        Component::Adc,
+        Component::Buffer,
+        Component::Interconnect,
+        Component::Softmax,
+        Component::Accumulator,
+        Component::Mux,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Component::SynapticArray => "synaptic array",
+            Component::Adc => "ADC/IMA",
+            Component::Buffer => "buffer",
+            Component::Interconnect => "interconnect",
+            Component::Softmax => "softmax",
+            Component::Accumulator => "accumulator",
+            Component::Mux => "mux/other",
+        }
+    }
+}
+
+/// Technology + organization of the simulated chip.
+#[derive(Clone, Copy, Debug)]
+pub struct ArchConfig {
+    /// System clock, MHz (Table I: 200 MHz at 0.5 V).
+    pub freq_mhz: f64,
+    /// SRAM subarray geometry (paper: 256×256 with 64 replica rows).
+    pub sram_rows: usize,
+    pub sram_cols: usize,
+    pub sram_replica_rows: usize,
+    /// RRAM subarray geometry (paper Table I: 128×128, 2-bit cells).
+    pub rram_rows: usize,
+    pub rram_cols: usize,
+    /// RRAM cell bits; 8-bit weights → 4 cells per weight.
+    pub rram_cell_bits: u32,
+    pub weight_bits_rram: u32,
+    /// Column-mux sharing ratio for RRAM arrays (NeuroSim default 8:
+    /// one shared ADC serves 8 columns → 8 serialized conversion groups).
+    pub rram_mux_ratio: usize,
+    /// RRAM read pulse (ns) and per-conversion SAR ADC time (ns).
+    pub rram_read_pulse_ns: f64,
+    pub rram_adc_ns: f64,
+    /// Energies (pJ): RRAM MAC per cell, RRAM ADC per conversion,
+    /// accumulator per partial-sum add, mux per switch.
+    pub e_rram_cell: f64,
+    pub e_rram_adc: f64,
+    pub e_accum_add: f64,
+    pub e_mux_switch: f64,
+    /// IMA timing (SRAM side) — shared with the macro models.
+    pub timing: Timing,
+}
+
+impl Default for ArchConfig {
+    fn default() -> Self {
+        ArchConfig {
+            freq_mhz: 200.0,
+            sram_rows: 256,
+            sram_cols: 256,
+            sram_replica_rows: 64,
+            rram_rows: 128,
+            rram_cols: 128,
+            rram_cell_bits: 2,
+            weight_bits_rram: 8,
+            rram_mux_ratio: 8,
+            rram_read_pulse_ns: 10.0,
+            rram_adc_ns: 5.0,
+            e_rram_cell: 0.002,
+            e_rram_adc: 1.2,
+            e_accum_add: 0.05,
+            e_mux_switch: 0.01,
+            timing: Timing::default(),
+        }
+    }
+}
+
+impl ArchConfig {
+    /// RRAM cells ganged per 8-bit weight.
+    pub fn rram_cells_per_weight(&self) -> usize {
+        self.weight_bits_rram.div_ceil(self.rram_cell_bits) as usize
+    }
+
+    /// Logical weights per RRAM array column group.
+    pub fn rram_weights_per_row(&self) -> usize {
+        self.rram_cols / self.rram_cells_per_weight()
+    }
+
+    /// SRAM logical weight capacity per column (3 cells / 15-level
+    /// weight after the replica budget).
+    pub fn sram_weight_depth(&self) -> usize {
+        (self.sram_rows - self.sram_replica_rows)
+            / crate::quant::CELLS_PER_WEIGHT
+    }
+
+    /// Clock period, ns.
+    pub fn t_clk_ns(&self) -> f64 {
+        1e3 / self.freq_mhz
+    }
+}
+
+/// A latency/energy ledger keyed by component — the unit the simulator
+/// aggregates everything into.
+#[derive(Clone, Debug, Default)]
+pub struct Ledger {
+    entries: Vec<(Component, f64, f64)>,
+}
+
+impl Ledger {
+    pub fn add(&mut self, c: Component, latency_ns: f64, energy_pj: f64) {
+        self.entries.push((c, latency_ns, energy_pj));
+    }
+
+    pub fn merge(&mut self, other: &Ledger) {
+        self.entries.extend_from_slice(&other.entries);
+    }
+
+    /// Total latency assuming the listed contributions serialize.
+    pub fn latency_ns(&self) -> f64 {
+        self.entries.iter().map(|e| e.1).sum()
+    }
+
+    pub fn energy_pj(&self) -> f64 {
+        self.entries.iter().map(|e| e.2).sum()
+    }
+
+    /// Per-component (latency, energy) sums in `Component::ALL` order.
+    pub fn by_component(&self) -> Vec<(Component, f64, f64)> {
+        Component::ALL
+            .iter()
+            .map(|&c| {
+                let (l, e) = self
+                    .entries
+                    .iter()
+                    .filter(|x| x.0 == c)
+                    .fold((0.0, 0.0), |acc, x| (acc.0 + x.1, acc.1 + x.2));
+                (c, l, e)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rram_packing() {
+        let a = ArchConfig::default();
+        assert_eq!(a.rram_cells_per_weight(), 4); // 8b / 2b cells
+        assert_eq!(a.rram_weights_per_row(), 32); // 128 cols / 4
+    }
+
+    #[test]
+    fn sram_depth_matches_paper() {
+        let a = ArchConfig::default();
+        // 256 rows − 64 replica = 192 → 64 4-bit weights (Sec. IV-B)
+        assert_eq!(a.sram_weight_depth(), 64);
+    }
+
+    #[test]
+    fn clock_period() {
+        assert!((ArchConfig::default().t_clk_ns() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ledger_aggregates_by_component() {
+        let mut l = Ledger::default();
+        l.add(Component::Adc, 10.0, 1.0);
+        l.add(Component::Adc, 5.0, 2.0);
+        l.add(Component::Buffer, 1.0, 30.0);
+        assert_eq!(l.latency_ns(), 16.0);
+        assert_eq!(l.energy_pj(), 33.0);
+        let by = l.by_component();
+        let adc = by.iter().find(|x| x.0 == Component::Adc).unwrap();
+        assert_eq!((adc.1, adc.2), (15.0, 3.0));
+    }
+
+    #[test]
+    fn ledger_merge() {
+        let mut a = Ledger::default();
+        a.add(Component::Mux, 1.0, 1.0);
+        let mut b = Ledger::default();
+        b.add(Component::Mux, 2.0, 2.0);
+        a.merge(&b);
+        assert_eq!(a.latency_ns(), 3.0);
+    }
+}

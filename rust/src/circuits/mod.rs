@@ -1,0 +1,18 @@
+//! Circuit-level behavioral models (the SPICE-equivalent layer).
+//!
+//! * [`timing`] — the paper's extracted delays + Eqs. (3)/(4) latency
+//!   models for the three softmax macros.
+//! * [`energy`] — unit energies + macro energy models.
+//! * [`bitline`] — pre-charged read-bitline discharge (MAC voltage).
+//! * [`sram_cell`] — dual-10T ternary cell truth table and cell columns.
+//! * [`pwm`] — 5-bit pulse-width-modulated word-line input encoding.
+
+pub mod bitline;
+pub mod energy;
+pub mod pwm;
+pub mod sram_cell;
+pub mod timing;
+
+pub use bitline::BitlineModel;
+pub use energy::{BlockDims, Energy};
+pub use timing::Timing;

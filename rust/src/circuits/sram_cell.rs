@@ -1,0 +1,162 @@
+//! Dual 10T SRAM ternary cell — the bit-level truth table of Fig 2(d).
+//!
+//! Each weight cell is a Left/Right pair of 10T bitcells (6T storage +
+//! 4 read-decoupled transistors). The stored ternary value is encoded as
+//! `(Q_L, Q_R)`: `(H, L)` → +1, `(L, H)` → −1, `(L, L)` → 0. During a
+//! read, the side whose transistors conduct discharges its read bitline;
+//! the differential `RBL_L − RBL_R` realizes signed multiplication by the
+//! ±1 input pulse polarity on RWL+/RWL−.
+//!
+//! Three cells ganged with input pulse scales 1/2/4 represent one 15-level
+//! weight (`crate::quant::pack_ternary_cells`).
+
+/// Stored state of one dual-10T ternary cell.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TernaryCell {
+    Plus,  // Q_L = H, Q_R = L
+    Zero,  // Q_L = L, Q_R = L
+    Minus, // Q_L = L, Q_R = H
+}
+
+impl TernaryCell {
+    /// Encode a value in {-1, 0, +1}.
+    pub fn from_value(v: i8) -> TernaryCell {
+        match v {
+            1 => TernaryCell::Plus,
+            -1 => TernaryCell::Minus,
+            0 => TernaryCell::Zero,
+            _ => panic!("ternary cell value out of range: {v}"),
+        }
+    }
+
+    /// Stored value in {-1, 0, +1}.
+    pub fn value(self) -> i8 {
+        match self {
+            TernaryCell::Plus => 1,
+            TernaryCell::Zero => 0,
+            TernaryCell::Minus => -1,
+        }
+    }
+
+    /// `(Q_L, Q_R)` logic levels (true = H).
+    pub fn storage_nodes(self) -> (bool, bool) {
+        match self {
+            TernaryCell::Plus => (true, false),
+            TernaryCell::Zero => (false, false),
+            TernaryCell::Minus => (false, true),
+        }
+    }
+
+    /// Basic multiplication table of Fig 2(d): contribution (in ΔV units,
+    /// signed, positive = discharge of RBL_L) of this cell for one input
+    /// pulse of polarity `rwl` (+1 on RWL+, −1 on RWL−, 0 idle).
+    ///
+    /// Read-disturb-free: the 4 decoupled read transistors never touch the
+    /// storage nodes, so reading cannot flip the cell — modeled by this
+    /// being a pure function of state.
+    pub fn multiply(self, rwl: i8) -> i8 {
+        debug_assert!((-1..=1).contains(&rwl));
+        self.value() * rwl
+    }
+}
+
+/// One column of ternary cells with per-cell input scales — the physical
+/// layout of a K^T weight column (3 cells per logical weight).
+#[derive(Clone, Debug)]
+pub struct CellColumn {
+    pub cells: Vec<TernaryCell>,
+    /// PWM input scale of each cell (1, 2 or 4 within a weight gang).
+    pub scales: Vec<i32>,
+}
+
+impl CellColumn {
+    /// Build the column for a slice of 15-level weight codes.
+    pub fn from_weight_codes(codes: &[i32]) -> CellColumn {
+        let mut cells = Vec::with_capacity(codes.len() * 3);
+        let mut scales = Vec::with_capacity(codes.len() * 3);
+        for &code in codes {
+            let gang = crate::quant::pack_ternary_cells(code);
+            for (i, &c) in gang.iter().enumerate() {
+                cells.push(TernaryCell::from_value(c));
+                scales.push(crate::quant::CELL_SCALES[i]);
+            }
+        }
+        CellColumn { cells, scales }
+    }
+
+    /// Integer MAC of the column against per-weight input codes: each
+    /// weight's three cells see the same input pulse, scaled 1/2/4 —
+    /// charge accumulation on the differential bitline.
+    pub fn mac(&self, input_codes: &[i32]) -> i64 {
+        assert_eq!(self.cells.len(), input_codes.len() * 3);
+        let mut acc: i64 = 0;
+        for (w_idx, &x) in input_codes.iter().enumerate() {
+            for j in 0..3 {
+                let cell = self.cells[w_idx * 3 + j];
+                let scale = self.scales[w_idx * 3 + j] as i64;
+                // PWM pulse width ∝ |x|; polarity selects RWL+/RWL−.
+                acc += cell.value() as i64 * scale * x as i64;
+            }
+        }
+        acc
+    }
+
+    /// Number of physical cells (3 × logical weights).
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn truth_table_matches_fig2d() {
+        // (weight, input) → product for all 9 combinations
+        for w in [-1i8, 0, 1] {
+            for x in [-1i8, 0, 1] {
+                assert_eq!(TernaryCell::from_value(w).multiply(x), w * x);
+            }
+        }
+    }
+
+    #[test]
+    fn storage_nodes_never_both_high() {
+        for c in [TernaryCell::Plus, TernaryCell::Zero, TernaryCell::Minus] {
+            let (l, r) = c.storage_nodes();
+            assert!(!(l && r), "Q_L and Q_R both high would short");
+        }
+    }
+
+    #[test]
+    fn column_mac_equals_integer_dot_product() {
+        let codes = vec![7, -3, 0, 5, -7, 1];
+        let col = CellColumn::from_weight_codes(&codes);
+        let inputs = vec![3, -15, 8, 0, 2, -1];
+        let want: i64 = codes
+            .iter()
+            .zip(&inputs)
+            .map(|(&w, &x)| w as i64 * x as i64)
+            .sum();
+        assert_eq!(col.mac(&inputs), want);
+    }
+
+    #[test]
+    fn three_cells_per_weight() {
+        let col = CellColumn::from_weight_codes(&[1, 2, 3, 4]);
+        assert_eq!(col.len(), 12);
+    }
+
+    #[test]
+    fn gang_scales_are_1_2_4() {
+        let col = CellColumn::from_weight_codes(&[7]);
+        assert_eq!(col.scales, vec![1, 2, 4]);
+        // +7 = all three cells at +1
+        assert!(col.cells.iter().all(|c| *c == TernaryCell::Plus));
+    }
+}

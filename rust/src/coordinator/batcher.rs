@@ -1,0 +1,246 @@
+//! Dynamic batcher with bucketed batch sizes.
+//!
+//! One AOT executable exists per batch size (the PJRT serving pattern:
+//! static shapes, bucketed batching). The batcher keeps one FIFO queue
+//! per (family, k) and forms a batch when either (a) the queue can fill
+//! the largest bucket, or (b) the oldest request has waited longer than
+//! `max_wait`, in which case the largest bucket ≤ queue length is used
+//! and the remainder padded with a repeat of the last request's input
+//! (padding rows are discarded on output).
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use super::request::Request;
+
+/// Batching policy knobs.
+#[derive(Clone, Debug)]
+pub struct BatcherConfig {
+    /// Available bucket sizes, ascending (from the manifest).
+    pub buckets: Vec<usize>,
+    /// Max time the oldest request may wait before a partial batch fires.
+    pub max_wait: Duration,
+}
+
+impl BatcherConfig {
+    pub fn new(mut buckets: Vec<usize>, max_wait: Duration) -> Self {
+        buckets.sort_unstable();
+        buckets.dedup();
+        assert!(!buckets.is_empty(), "need at least one bucket size");
+        BatcherConfig { buckets, max_wait }
+    }
+
+    /// Largest bucket ≤ n, or the smallest bucket when n is tiny.
+    pub fn bucket_for(&self, n: usize) -> usize {
+        self.buckets
+            .iter()
+            .rev()
+            .find(|&&b| b <= n)
+            .copied()
+            .unwrap_or(self.buckets[0])
+    }
+
+    pub fn max_bucket(&self) -> usize {
+        *self.buckets.last().unwrap()
+    }
+}
+
+/// A formed batch: the requests to run plus padding count.
+#[derive(Debug)]
+pub struct BatchPlan {
+    pub requests: Vec<Request>,
+    /// Executable batch size (≥ requests.len()).
+    pub bucket: usize,
+}
+
+impl BatchPlan {
+    pub fn padding(&self) -> usize {
+        self.bucket - self.requests.len()
+    }
+}
+
+/// FIFO queue + batch forming for one (family, k) stream.
+#[derive(Debug)]
+pub struct Batcher {
+    config: BatcherConfig,
+    queue: VecDeque<Request>,
+    /// Total requests admitted (conservation checks).
+    pub admitted: u64,
+    /// Total requests emitted in batches.
+    pub emitted: u64,
+}
+
+impl Batcher {
+    pub fn new(config: BatcherConfig) -> Batcher {
+        Batcher { config, queue: VecDeque::new(), admitted: 0, emitted: 0 }
+    }
+
+    /// Admit one request.
+    pub fn push(&mut self, r: Request) {
+        self.admitted += 1;
+        self.queue.push_back(r);
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Age of the oldest queued request.
+    pub fn oldest_wait(&self, now: Instant) -> Duration {
+        self.queue
+            .front()
+            .map(|r| now.duration_since(r.enqueued))
+            .unwrap_or(Duration::ZERO)
+    }
+
+    /// Form a batch if the policy allows; `now` injected for testability.
+    pub fn pop_batch(&mut self, now: Instant) -> Option<BatchPlan> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let full = self.queue.len() >= self.config.max_bucket();
+        let expired = self.oldest_wait(now) >= self.config.max_wait;
+        if !full && !expired {
+            return None;
+        }
+        let bucket = self.config.bucket_for(self.queue.len());
+        let take = bucket.min(self.queue.len());
+        let requests: Vec<Request> =
+            self.queue.drain(..take).collect();
+        self.emitted += requests.len() as u64;
+        Some(BatchPlan { requests, bucket })
+    }
+
+    /// Drain everything immediately (shutdown path).
+    pub fn flush(&mut self) -> Vec<BatchPlan> {
+        let mut plans = Vec::new();
+        while !self.queue.is_empty() {
+            let bucket = self.config.bucket_for(self.queue.len());
+            let take = bucket.min(self.queue.len());
+            let requests: Vec<Request> = self.queue.drain(..take).collect();
+            self.emitted += requests.len() as u64;
+            plans.push(BatchPlan { requests, bucket });
+        }
+        plans
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::InputData;
+
+    fn req(id: u64) -> Request {
+        Request::new(id, "bert", 5, InputData::I32(vec![0; 8]))
+    }
+
+    fn cfg(buckets: &[usize], wait_ms: u64) -> BatcherConfig {
+        BatcherConfig::new(buckets.to_vec(), Duration::from_millis(wait_ms))
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let c = cfg(&[1, 2, 4, 8, 16], 10);
+        assert_eq!(c.bucket_for(16), 16);
+        assert_eq!(c.bucket_for(9), 8);
+        assert_eq!(c.bucket_for(3), 2);
+        assert_eq!(c.bucket_for(0), 1);
+    }
+
+    #[test]
+    fn fires_when_full() {
+        let mut b = Batcher::new(cfg(&[1, 2, 4], 1000));
+        let now = Instant::now();
+        for i in 0..3 {
+            b.push(req(i));
+            assert!(b.pop_batch(now).is_none(), "fired early at {i}");
+        }
+        b.push(req(3));
+        let plan = b.pop_batch(now).expect("full batch fires");
+        assert_eq!(plan.bucket, 4);
+        assert_eq!(plan.requests.len(), 4);
+        assert_eq!(plan.padding(), 0);
+    }
+
+    #[test]
+    fn fires_on_timeout_with_padding() {
+        let mut b = Batcher::new(cfg(&[1, 2, 4], 0));
+        b.push(req(0));
+        b.push(req(1));
+        b.push(req(2));
+        let plan = b.pop_batch(Instant::now()).expect("timeout fires");
+        assert_eq!(plan.bucket, 2); // largest bucket ≤ 3
+        assert_eq!(plan.requests.len(), 2);
+    }
+
+    #[test]
+    fn preserves_fifo() {
+        let mut b = Batcher::new(cfg(&[1, 2, 4], 0));
+        for i in 0..7 {
+            b.push(req(i));
+        }
+        let mut seen = Vec::new();
+        let now = Instant::now();
+        while let Some(plan) = b.pop_batch(now) {
+            seen.extend(plan.requests.iter().map(|r| r.id));
+        }
+        assert_eq!(seen, (0..7).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn flush_conserves_requests() {
+        let mut b = Batcher::new(cfg(&[4, 8], 1_000_000));
+        for i in 0..13 {
+            b.push(req(i));
+        }
+        let total: usize =
+            b.flush().iter().map(|p| p.requests.len()).sum();
+        assert_eq!(total, 13);
+        assert_eq!(b.admitted, 13);
+        assert_eq!(b.emitted, 13);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn property_batcher_invariants() {
+        use crate::util::{check::property, rng::Rng};
+        property("batcher: capacity, fifo, conservation", 200, 0xBA7C, |rng: &mut Rng| {
+            let n_buckets = 1 + rng.below(4);
+            let mut buckets: Vec<usize> =
+                (0..n_buckets).map(|_| 1 << rng.below(6)).collect();
+            buckets.push(1); // always a unit bucket
+            let c = BatcherConfig::new(buckets, Duration::ZERO);
+            let max_bucket = c.max_bucket();
+            let mut b = Batcher::new(c);
+            let n = rng.below(100);
+            for i in 0..n {
+                b.push(req(i as u64));
+            }
+            let mut out = Vec::new();
+            let now = Instant::now();
+            while let Some(plan) = b.pop_batch(now) {
+                crate::prop_assert!(
+                    plan.requests.len() <= plan.bucket,
+                    "overfilled bucket: {} > {}",
+                    plan.requests.len(), plan.bucket
+                );
+                crate::prop_assert!(
+                    plan.bucket <= max_bucket,
+                    "bucket {} over max {}", plan.bucket, max_bucket
+                );
+                out.extend(plan.requests.iter().map(|r| r.id));
+            }
+            let want: Vec<u64> = (0..n as u64).collect();
+            crate::prop_assert!(out == want, "fifo violated or lost: {:?}", out);
+            crate::prop_assert!(
+                b.admitted == b.emitted,
+                "conservation: admitted {} emitted {}", b.admitted, b.emitted
+            );
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,143 @@
+//! Serving metrics: latency distribution, throughput, batch occupancy.
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+/// Lock-free-enough metrics (single writer — the coordinator thread).
+#[derive(Debug)]
+pub struct Metrics {
+    started: Instant,
+    latencies_us: Vec<f64>,
+    batch_sizes: Vec<usize>,
+    padded_rows: u64,
+    errors: u64,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            started: Instant::now(),
+            latencies_us: Vec::new(),
+            batch_sizes: Vec::new(),
+            padded_rows: 0,
+            errors: 0,
+        }
+    }
+}
+
+impl Metrics {
+    /// Record one completed batch.
+    pub fn record_batch(
+        &mut self,
+        latencies_us: &[f64],
+        bucket: usize,
+        padding: usize,
+    ) {
+        self.latencies_us.extend_from_slice(latencies_us);
+        self.batch_sizes.push(bucket);
+        self.padded_rows += padding as u64;
+    }
+
+    pub fn record_error(&mut self) {
+        self.errors += 1;
+    }
+
+    pub fn completed(&self) -> usize {
+        self.latencies_us.len()
+    }
+
+    pub fn errors(&self) -> u64 {
+        self.errors
+    }
+
+    /// Requests per second since start.
+    pub fn throughput_rps(&self) -> f64 {
+        let elapsed = self.started.elapsed().as_secs_f64();
+        if elapsed == 0.0 {
+            return 0.0;
+        }
+        self.completed() as f64 / elapsed
+    }
+
+    pub fn latency_percentile_us(&self, p: f64) -> f64 {
+        stats::percentile(&self.latencies_us, p)
+    }
+
+    pub fn mean_latency_us(&self) -> f64 {
+        stats::mean(&self.latencies_us)
+    }
+
+    /// Mean executed batch size (bucket, incl. padding).
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batch_sizes.is_empty() {
+            return 0.0;
+        }
+        self.batch_sizes.iter().sum::<usize>() as f64
+            / self.batch_sizes.len() as f64
+    }
+
+    /// Fraction of executed rows that were padding.
+    pub fn padding_fraction(&self) -> f64 {
+        let total: u64 =
+            self.batch_sizes.iter().map(|&b| b as u64).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        self.padded_rows as f64 / total as f64
+    }
+
+    /// Multi-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "requests: {} ({} errors)\n\
+             throughput: {:.1} req/s\n\
+             latency µs: mean {:.0}, p50 {:.0}, p95 {:.0}, p99 {:.0}\n\
+             mean batch {:.2}, padding {:.1}%",
+            self.completed(),
+            self.errors,
+            self.throughput_rps(),
+            self.mean_latency_us(),
+            self.latency_percentile_us(50.0),
+            self.latency_percentile_us(95.0),
+            self.latency_percentile_us(99.0),
+            self.mean_batch_size(),
+            100.0 * self.padding_fraction(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_summarizes() {
+        let mut m = Metrics::default();
+        m.record_batch(&[100.0, 200.0, 300.0, 400.0], 4, 0);
+        m.record_batch(&[500.0], 2, 1);
+        assert_eq!(m.completed(), 5);
+        assert_eq!(m.mean_latency_us(), 300.0);
+        assert_eq!(m.mean_batch_size(), 3.0);
+        assert!((m.padding_fraction() - 1.0 / 6.0).abs() < 1e-12);
+        let s = m.summary();
+        assert!(s.contains("requests: 5"));
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut m = Metrics::default();
+        let lats: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        m.record_batch(&lats, 100, 0);
+        assert!(m.latency_percentile_us(50.0)
+            <= m.latency_percentile_us(99.0));
+    }
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let m = Metrics::default();
+        assert_eq!(m.completed(), 0);
+        assert_eq!(m.mean_batch_size(), 0.0);
+        assert_eq!(m.padding_fraction(), 0.0);
+    }
+}

@@ -1,0 +1,26 @@
+//! L3 coordinator — the serving layer (vLLM-router-style).
+//!
+//! Python is never on this path: requests enter, the [`batcher`] groups
+//! them into bucketed batches (one AOT executable per batch size), the
+//! [`router`] picks the right executable for (family, k), a worker thread
+//! executes on PJRT, and [`metrics`] records per-request latency and
+//! system throughput.
+//!
+//! The executor is a trait so the full coordinator logic is testable
+//! without artifacts (mock executor) and the property tests can drive
+//! invariants: FIFO within a family, conservation of requests, batch
+//! capacity limits.
+
+pub mod batcher;
+pub mod pjrt_exec;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod server;
+
+pub use batcher::{BatchPlan, Batcher, BatcherConfig};
+pub use metrics::Metrics;
+pub use request::{InputData, Request, RequestId, Response};
+pub use router::Router;
+pub use pjrt_exec::PjrtExecutor;
+pub use server::{Coordinator, Executor};

@@ -1,0 +1,115 @@
+//! PJRT-backed [`Executor`]: the production bridge from the coordinator
+//! to the AOT artifacts (one compiled executable per (stream, bucket)).
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::request::InputData;
+use super::router::StreamKey;
+use super::server::Executor;
+use crate::runtime::{Engine, LoadedModel};
+
+/// Executor holding pre-compiled executables for every registered
+/// (family, k, bucket) combination.
+pub struct PjrtExecutor {
+    models: HashMap<(String, usize, usize), LoadedModel>,
+}
+
+impl PjrtExecutor {
+    /// Compile executables for the given streams at all their bucket
+    /// sizes. Done once at startup — the serve path never compiles.
+    pub fn preload(
+        engine: &Engine,
+        streams: &[(String, usize, Vec<usize>)],
+    ) -> Result<PjrtExecutor> {
+        let mut models = HashMap::new();
+        for (family, k, buckets) in streams {
+            for &b in buckets {
+                let lm = engine.load(family, *k, b)?;
+                models.insert((family.clone(), *k, b), lm);
+            }
+        }
+        Ok(PjrtExecutor { models })
+    }
+
+    pub fn loaded(&self) -> usize {
+        self.models.len()
+    }
+}
+
+impl Executor for PjrtExecutor {
+    fn execute(
+        &mut self,
+        stream: &StreamKey,
+        inputs: &[InputData],
+        bucket: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        let key = (stream.0.clone(), stream.1, bucket);
+        let model = self
+            .models
+            .get(&key)
+            .ok_or_else(|| anyhow!("no executable for {key:?}"))?;
+        if inputs.is_empty() || inputs.len() > bucket {
+            bail!("batch of {} for bucket {bucket}", inputs.len());
+        }
+
+        let per_sample = model.input_len() / bucket;
+        let out_per_sample = model.output_len() / bucket;
+
+        // Flatten + pad by repeating the last sample (discarded below).
+        let raw = match &inputs[0] {
+            InputData::F32(_) => {
+                let mut flat = Vec::with_capacity(model.input_len());
+                for i in 0..bucket {
+                    let sample = inputs.get(i).unwrap_or(
+                        inputs.last().expect("nonempty"),
+                    );
+                    match sample {
+                        InputData::F32(v) => {
+                            if v.len() != per_sample {
+                                bail!(
+                                    "sample len {} != expected {per_sample}",
+                                    v.len()
+                                );
+                            }
+                            flat.extend_from_slice(v);
+                        }
+                        _ => bail!("mixed dtypes in batch"),
+                    }
+                }
+                model.run_f32(&flat)?
+            }
+            InputData::I32(_) => {
+                let mut flat = Vec::with_capacity(model.input_len());
+                for i in 0..bucket {
+                    let sample = inputs.get(i).unwrap_or(
+                        inputs.last().expect("nonempty"),
+                    );
+                    match sample {
+                        InputData::I32(v) => {
+                            if v.len() != per_sample {
+                                bail!(
+                                    "sample len {} != expected {per_sample}",
+                                    v.len()
+                                );
+                            }
+                            flat.extend_from_slice(v);
+                        }
+                        _ => bail!("mixed dtypes in batch"),
+                    }
+                }
+                model.run_i32(&flat)?
+            }
+        };
+
+        // Split the batch output back into per-sample slices.
+        Ok(inputs
+            .iter()
+            .enumerate()
+            .map(|(i, _)| {
+                raw[i * out_per_sample..(i + 1) * out_per_sample].to_vec()
+            })
+            .collect())
+    }
+}

@@ -1,0 +1,86 @@
+//! Request/response types flowing through the coordinator.
+
+use std::time::Instant;
+
+/// Monotonically increasing request identifier.
+pub type RequestId = u64;
+
+/// Input payload — one sample, matching the model family's input layout.
+#[derive(Clone, Debug)]
+pub enum InputData {
+    /// ViT: flattened image [H × W × 3] f32.
+    F32(Vec<f32>),
+    /// BERT: token ids [seq_len] i32.
+    I32(Vec<i32>),
+}
+
+impl InputData {
+    pub fn len(&self) -> usize {
+        match self {
+            InputData::F32(v) => v.len(),
+            InputData::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One inference request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: RequestId,
+    /// Model family ("vit" | "bert").
+    pub model: String,
+    /// topkima k to serve with (must exist in the manifest).
+    pub k: usize,
+    pub input: InputData,
+    pub enqueued: Instant,
+}
+
+impl Request {
+    pub fn new(id: RequestId, model: &str, k: usize, input: InputData)
+        -> Request
+    {
+        Request {
+            id,
+            model: model.to_string(),
+            k,
+            input,
+            enqueued: Instant::now(),
+        }
+    }
+}
+
+/// One inference response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: RequestId,
+    /// Raw model output slice for this sample (logits / span logits).
+    pub output: Vec<f32>,
+    /// End-to-end latency from enqueue to completion, µs.
+    pub latency_us: f64,
+    /// Batch size this request was served in.
+    pub batch_size: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn input_len() {
+        assert_eq!(InputData::F32(vec![0.0; 12]).len(), 12);
+        assert_eq!(InputData::I32(vec![1, 2, 3]).len(), 3);
+        assert!(!InputData::I32(vec![1]).is_empty());
+    }
+
+    #[test]
+    fn request_carries_family_and_k() {
+        let r = Request::new(7, "bert", 5, InputData::I32(vec![0; 64]));
+        assert_eq!(r.id, 7);
+        assert_eq!(r.model, "bert");
+        assert_eq!(r.k, 5);
+    }
+}

@@ -1,0 +1,189 @@
+//! Router: maps (family, k) streams to their batchers and executables.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use super::batcher::{BatchPlan, Batcher, BatcherConfig};
+use super::request::Request;
+
+/// Routing key: one independent serving stream per (family, k).
+pub type StreamKey = (String, usize);
+
+/// Owns one batcher per registered stream and dispatches requests.
+#[derive(Debug)]
+pub struct Router {
+    streams: BTreeMap<StreamKey, Batcher>,
+    /// Requests rejected for having no registered stream.
+    pub rejected: u64,
+}
+
+impl Router {
+    pub fn new() -> Router {
+        Router { streams: BTreeMap::new(), rejected: 0 }
+    }
+
+    /// Register a stream with its available batch buckets.
+    pub fn register(
+        &mut self,
+        model: &str,
+        k: usize,
+        buckets: Vec<usize>,
+        max_wait: Duration,
+    ) {
+        self.streams.insert(
+            (model.to_string(), k),
+            Batcher::new(BatcherConfig::new(buckets, max_wait)),
+        );
+    }
+
+    pub fn streams(&self) -> Vec<StreamKey> {
+        self.streams.keys().cloned().collect()
+    }
+
+    /// Route one request to its stream's batcher. Returns false (and
+    /// counts a rejection) if no stream matches.
+    pub fn route(&mut self, r: Request) -> bool {
+        let key = (r.model.clone(), r.k);
+        match self.streams.get_mut(&key) {
+            Some(b) => {
+                b.push(r);
+                true
+            }
+            None => {
+                self.rejected += 1;
+                false
+            }
+        }
+    }
+
+    /// Poll every stream for ready batches.
+    pub fn ready_batches(&mut self, now: std::time::Instant)
+        -> Vec<(StreamKey, BatchPlan)>
+    {
+        let mut out = Vec::new();
+        for (key, b) in self.streams.iter_mut() {
+            while let Some(plan) = b.pop_batch(now) {
+                out.push((key.clone(), plan));
+            }
+        }
+        out
+    }
+
+    /// Drain all queues (shutdown).
+    pub fn flush(&mut self) -> Vec<(StreamKey, BatchPlan)> {
+        let mut out = Vec::new();
+        for (key, b) in self.streams.iter_mut() {
+            for plan in b.flush() {
+                out.push((key.clone(), plan));
+            }
+        }
+        out
+    }
+
+    /// Queued requests across all streams.
+    pub fn queued(&self) -> usize {
+        self.streams.values().map(Batcher::len).sum()
+    }
+}
+
+impl Default for Router {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::InputData;
+    use std::time::Instant;
+
+    fn req(id: u64, model: &str, k: usize) -> Request {
+        Request::new(id, model, k, InputData::I32(vec![0; 4]))
+    }
+
+    fn router() -> Router {
+        let mut r = Router::new();
+        r.register("bert", 5, vec![1, 2, 4], Duration::ZERO);
+        r.register("bert", 1, vec![1, 2], Duration::ZERO);
+        r.register("vit", 5, vec![1, 8], Duration::ZERO);
+        r
+    }
+
+    #[test]
+    fn routes_by_family_and_k() {
+        let mut r = router();
+        assert!(r.route(req(0, "bert", 5)));
+        assert!(r.route(req(1, "bert", 1)));
+        assert!(r.route(req(2, "vit", 5)));
+        assert!(!r.route(req(3, "bert", 99)));
+        assert_eq!(r.rejected, 1);
+        assert_eq!(r.queued(), 3);
+    }
+
+    #[test]
+    fn ready_batches_tagged_with_stream() {
+        let mut r = router();
+        r.route(req(0, "bert", 5));
+        r.route(req(1, "vit", 5));
+        let batches = r.ready_batches(Instant::now());
+        assert_eq!(batches.len(), 2);
+        let keys: Vec<&StreamKey> = batches.iter().map(|b| &b.0).collect();
+        assert!(keys.contains(&&("bert".to_string(), 5)));
+        assert!(keys.contains(&&("vit".to_string(), 5)));
+    }
+
+    #[test]
+    fn streams_are_independent_fifos() {
+        let mut r = router();
+        for i in 0..4 {
+            r.route(req(i, "bert", 5));
+            r.route(req(100 + i, "bert", 1));
+        }
+        let batches = r.flush();
+        let mut bert5 = Vec::new();
+        let mut bert1 = Vec::new();
+        for (key, plan) in batches {
+            let ids: Vec<u64> = plan.requests.iter().map(|r| r.id).collect();
+            if key.1 == 5 {
+                bert5.extend(ids);
+            } else {
+                bert1.extend(ids);
+            }
+        }
+        assert_eq!(bert5, vec![0, 1, 2, 3]);
+        assert_eq!(bert1, vec![100, 101, 102, 103]);
+    }
+
+    #[test]
+    fn property_routing_conserves_requests() {
+        use crate::util::{check::property, rng::Rng};
+        property("router conservation", 150, 0x70073, |rng: &mut Rng| {
+            let mut r = router();
+            let n = rng.below(80);
+            let mut accepted = 0u64;
+            for i in 0..n {
+                let model = if rng.chance(0.5) { "bert" } else { "vit" };
+                let k = [1usize, 5, 99][rng.below(3)];
+                if r.route(req(i as u64, model, k)) {
+                    accepted += 1;
+                }
+            }
+            let drained: u64 = r
+                .flush()
+                .iter()
+                .map(|(_, p)| p.requests.len() as u64)
+                .sum();
+            crate::prop_assert!(
+                drained == accepted,
+                "drained {} != accepted {} (rejected {})",
+                drained, accepted, r.rejected
+            );
+            crate::prop_assert!(
+                accepted + r.rejected == n as u64,
+                "accounting broken"
+            );
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,307 @@
+//! The coordinator event loop: routing → batching → execution → metrics.
+//!
+//! Concurrency model (std::thread, no async runtime in this offline
+//! environment): callers submit requests through a channel; the
+//! coordinator thread routes them, polls for ready batches, executes via
+//! an [`Executor`], and returns responses through per-request channels.
+//! Batch execution is synchronous on the coordinator thread — PJRT CPU
+//! executions are themselves multi-threaded, so a single dispatch thread
+//! keeps ordering simple without starving the CPU.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::batcher::BatchPlan;
+use super::metrics::Metrics;
+use super::request::{InputData, Request, RequestId, Response};
+use super::router::{Router, StreamKey};
+
+/// Executes one batch for a stream. Implemented by the PJRT-backed
+/// executor in production and by mocks in tests.
+///
+/// Deliberately NOT `Send`: PJRT executables hold thread-local handles
+/// (`Rc` internals in the `xla` crate), so the executor is *constructed
+/// inside* the coordinator thread via the factory passed to
+/// [`Coordinator::start`] and never crosses threads.
+pub trait Executor {
+    /// Run a batch of `bucket` rows. `inputs` holds `requests.len()`
+    /// samples; the executor pads to `bucket` itself. Returns one output
+    /// vector per (non-padding) sample.
+    fn execute(
+        &mut self,
+        stream: &StreamKey,
+        inputs: &[InputData],
+        bucket: usize,
+    ) -> Result<Vec<Vec<f32>>>;
+}
+
+enum Msg {
+    Submit(Request, mpsc::Sender<Response>),
+    Shutdown,
+}
+
+/// Handle for submitting work to a running coordinator.
+pub struct Coordinator {
+    tx: mpsc::Sender<Msg>,
+    handle: Option<JoinHandle<Metrics>>,
+    next_id: RequestId,
+}
+
+impl Coordinator {
+    /// Spawn the coordinator thread. `make_executor` runs on the
+    /// coordinator thread (PJRT handles are not `Send`).
+    pub fn start<F>(mut router: Router, make_executor: F) -> Coordinator
+    where
+        F: FnOnce() -> Box<dyn Executor> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let handle = std::thread::spawn(move || {
+            let mut executor = make_executor();
+            let mut metrics = Metrics::default();
+            let mut waiters: Vec<(RequestId, mpsc::Sender<Response>)> =
+                Vec::new();
+            loop {
+                // Block briefly so timeout-based batches still fire.
+                let msg = rx.recv_timeout(Duration::from_millis(1));
+                match msg {
+                    Ok(Msg::Submit(req, reply)) => {
+                        waiters.push((req.id, reply));
+                        if !router.route(req) {
+                            metrics.record_error();
+                        }
+                    }
+                    Ok(Msg::Shutdown) => {
+                        for (key, plan) in router.flush() {
+                            run_batch(
+                                &key, plan, &mut *executor, &mut metrics,
+                                &mut waiters,
+                            );
+                        }
+                        return metrics;
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        return metrics;
+                    }
+                }
+                // Drain the whole backlog before forming batches so a
+                // burst fills real buckets instead of timeout-firing as
+                // singles (arrivals are cheap; batches are not).
+                while let Ok(msg) = rx.try_recv() {
+                    match msg {
+                        Msg::Submit(req, reply) => {
+                            waiters.push((req.id, reply));
+                            if !router.route(req) {
+                                metrics.record_error();
+                            }
+                        }
+                        Msg::Shutdown => {
+                            for (key, plan) in router.flush() {
+                                run_batch(
+                                    &key, plan, &mut *executor,
+                                    &mut metrics, &mut waiters,
+                                );
+                            }
+                            return metrics;
+                        }
+                    }
+                }
+                for (key, plan) in router.ready_batches(Instant::now()) {
+                    run_batch(
+                        &key, plan, &mut *executor, &mut metrics,
+                        &mut waiters,
+                    );
+                }
+            }
+        });
+        Coordinator { tx, handle: Some(handle), next_id: 0 }
+    }
+
+    /// Submit one request; returns the receiver for its response.
+    pub fn submit(
+        &mut self,
+        model: &str,
+        k: usize,
+        input: InputData,
+    ) -> mpsc::Receiver<Response> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let (tx, rx) = mpsc::channel();
+        let req = Request::new(id, model, k, input);
+        self.tx
+            .send(Msg::Submit(req, tx))
+            .expect("coordinator thread alive");
+        rx
+    }
+
+    /// Drain queues, stop the thread, return final metrics.
+    pub fn shutdown(mut self) -> Metrics {
+        let _ = self.tx.send(Msg::Shutdown);
+        self.handle
+            .take()
+            .expect("not yet joined")
+            .join()
+            .expect("coordinator thread panicked")
+    }
+}
+
+fn run_batch(
+    key: &StreamKey,
+    plan: BatchPlan,
+    executor: &mut dyn Executor,
+    metrics: &mut Metrics,
+    waiters: &mut Vec<(RequestId, mpsc::Sender<Response>)>,
+) {
+    let inputs: Vec<InputData> =
+        plan.requests.iter().map(|r| r.input.clone()).collect();
+    match executor.execute(key, &inputs, plan.bucket) {
+        Ok(outputs) => {
+            let now = Instant::now();
+            let mut lats = Vec::with_capacity(plan.requests.len());
+            for (req, output) in plan.requests.iter().zip(outputs) {
+                let latency_us =
+                    now.duration_since(req.enqueued).as_secs_f64() * 1e6;
+                lats.push(latency_us);
+                if let Some(pos) =
+                    waiters.iter().position(|(id, _)| *id == req.id)
+                {
+                    let (_, reply) = waiters.swap_remove(pos);
+                    let _ = reply.send(Response {
+                        id: req.id,
+                        output,
+                        latency_us,
+                        batch_size: plan.bucket,
+                    });
+                }
+            }
+            metrics.record_batch(&lats, plan.bucket, plan.padding());
+        }
+        Err(_) => {
+            for req in &plan.requests {
+                metrics.record_error();
+                if let Some(pos) =
+                    waiters.iter().position(|(id, _)| *id == req.id)
+                {
+                    waiters.swap_remove(pos); // drop sender → Err on recv
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    /// Mock: echoes back the first input element + stream k.
+    struct Echo;
+
+    impl Executor for Echo {
+        fn execute(
+            &mut self,
+            stream: &StreamKey,
+            inputs: &[InputData],
+            _bucket: usize,
+        ) -> Result<Vec<Vec<f32>>> {
+            Ok(inputs
+                .iter()
+                .map(|i| {
+                    let first = match i {
+                        InputData::F32(v) => v[0],
+                        InputData::I32(v) => v[0] as f32,
+                    };
+                    vec![first, stream.1 as f32]
+                })
+                .collect())
+        }
+    }
+
+    fn router() -> Router {
+        let mut r = Router::new();
+        r.register("bert", 5, vec![1, 2, 4], Duration::from_millis(2));
+        r.register("vit", 5, vec![1, 2], Duration::from_millis(2));
+        r
+    }
+
+    #[test]
+    fn end_to_end_roundtrip() {
+        let mut c = Coordinator::start(router(), || Box::new(Echo));
+        let rx1 = c.submit("bert", 5, InputData::I32(vec![7, 0]));
+        let rx2 = c.submit("bert", 5, InputData::I32(vec![9, 0]));
+        let r1 = rx1.recv_timeout(Duration::from_secs(5)).unwrap();
+        let r2 = rx2.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(r1.output, vec![7.0, 5.0]);
+        assert_eq!(r2.output, vec![9.0, 5.0]);
+        assert!(r1.latency_us >= 0.0);
+        let m = c.shutdown();
+        assert_eq!(m.completed(), 2);
+    }
+
+    #[test]
+    fn full_batches_form_quickly() {
+        let mut c = Coordinator::start(router(), || Box::new(Echo));
+        let rxs: Vec<_> = (0..8)
+            .map(|i| c.submit("bert", 5, InputData::I32(vec![i, 0])))
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(r.output[0], i as f32);
+        }
+        let m = c.shutdown();
+        assert_eq!(m.completed(), 8);
+        assert!(m.mean_batch_size() >= 2.0, "batching never engaged");
+    }
+
+    #[test]
+    fn unknown_stream_counts_error() {
+        let mut c = Coordinator::start(router(), || Box::new(Echo));
+        let rx = c.submit("bert", 42, InputData::I32(vec![1]));
+        assert!(rx.recv_timeout(Duration::from_millis(300)).is_err());
+        let m = c.shutdown();
+        assert_eq!(m.errors(), 1);
+    }
+
+    #[test]
+    fn shutdown_drains_pending() {
+        let mut r = Router::new();
+        // huge bucket + long wait: nothing fires until shutdown
+        r.register("bert", 5, vec![64], Duration::from_secs(3600));
+        let mut c = Coordinator::start(r, || Box::new(Echo));
+        let rxs: Vec<_> = (0..5)
+            .map(|i| c.submit("bert", 5, InputData::I32(vec![i, 0])))
+            .collect();
+        let m = c.shutdown();
+        assert_eq!(m.completed(), 5);
+        for rx in rxs {
+            assert!(rx.try_recv().is_ok());
+        }
+    }
+
+    /// Mock that always fails — error path.
+    struct Boom;
+
+    impl Executor for Boom {
+        fn execute(
+            &mut self,
+            _stream: &StreamKey,
+            _inputs: &[InputData],
+            _bucket: usize,
+        ) -> Result<Vec<Vec<f32>>> {
+            anyhow::bail!("hardware fault injected")
+        }
+    }
+
+    #[test]
+    fn executor_failure_reported_as_errors() {
+        let mut c = Coordinator::start(router(), || Box::new(Boom));
+        let rx = c.submit("bert", 5, InputData::I32(vec![1, 0]));
+        assert!(rx.recv_timeout(Duration::from_secs(2)).is_err());
+        let m = c.shutdown();
+        assert_eq!(m.errors(), 1);
+        assert_eq!(m.completed(), 0);
+    }
+}

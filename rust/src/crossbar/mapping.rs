@@ -1,0 +1,212 @@
+//! Mapping a logical K^T onto physical crossbars + sub-top-k planning.
+//!
+//! When the crossbar is narrower than SL, K^T splits column-wise across
+//! arrays and each array runs its own local top-k_i with Σk_i = k
+//! (Sec. III-A "Considerations of crossbar size", Fig 4c). When the array
+//! is shallower than d_k × 3 cells, weight precision drops (the paper's
+//! 128×128 case: only 64 MAC rows → ternary weights instead of 4-bit).
+//!
+//! `split_columns` mirrors `python/compile/kernels/topk_softmax.crossbar_split`
+//! exactly — parity is asserted in tests against the paper's examples.
+
+/// Per-array slice of the sub-top-k plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Segment {
+    /// First logical column of this array's slice.
+    pub start: usize,
+    /// Columns mapped to this array.
+    pub width: usize,
+    /// Local winners this array contributes (k_i).
+    pub k: usize,
+}
+
+/// Split `d` logical columns over arrays `crossbar_cols` wide and
+/// apportion global `k` by largest remainder (ties → earlier segment),
+/// forcing every array ≥1 winner when k allows.
+pub fn split_columns(d: usize, k: usize, crossbar_cols: usize) -> Vec<Segment> {
+    assert!(d > 0 && crossbar_cols > 0);
+    let n_seg = d.div_ceil(crossbar_cols);
+    let widths: Vec<usize> = (0..n_seg)
+        .map(|i| crossbar_cols.min(d - i * crossbar_cols))
+        .collect();
+    let mut ks = vec![0usize; n_seg];
+    if n_seg == 1 {
+        ks[0] = k;
+    } else {
+        let mut base: Vec<usize> =
+            widths.iter().map(|&w| k * w / d).collect();
+        let fracs: Vec<usize> = widths.iter().map(|&w| (k * w) % d).collect();
+        let mut order: Vec<usize> = (0..n_seg).collect();
+        order.sort_by_key(|&i| (std::cmp::Reverse(fracs[i]), i));
+        let rem = k - base.iter().sum::<usize>();
+        for i in 0..rem {
+            base[order[i % n_seg]] += 1;
+        }
+        if k >= n_seg {
+            for j in 0..n_seg {
+                while base[j] == 0 {
+                    let donor = (0..n_seg)
+                        .max_by_key(|&t| base[t])
+                        .expect("nonempty");
+                    base[donor] -= 1;
+                    base[j] += 1;
+                }
+            }
+        }
+        ks = base;
+    }
+    let mut start = 0;
+    widths
+        .into_iter()
+        .zip(ks)
+        .map(|(width, k)| {
+            let s = Segment { start, width, k };
+            start += width;
+            s
+        })
+        .collect()
+}
+
+/// Weight precision (bits incl. sign) affordable on an array with `rows`
+/// physical rows after `replica_rows`: each extra cell in the gang adds
+/// one magnitude bit (1 cell → ternary ≈ 2b, 3 cells → 15 levels ≈ 4b).
+pub fn precision_for(rows: usize, replica_rows: usize, depth: usize) -> u32 {
+    let mac_rows = rows.saturating_sub(replica_rows);
+    let cells_per_weight = (mac_rows / depth.max(1)).clamp(0, 3);
+    match cells_per_weight {
+        0 => 0,          // doesn't fit at all
+        1 => 2,          // ternary {-1,0,1}
+        2 => 3,          // ±3 levels
+        _ => 4,          // full 15-level gang
+    }
+}
+
+/// Apply a precision downgrade to 15-level codes: requantize onto the
+/// coarser grid the smaller array can store.
+pub fn downgrade_codes(codes: &[i32], bits: u32) -> Vec<i32> {
+    assert!((2..=4).contains(&bits));
+    let max_code = match bits {
+        2 => 1,
+        3 => 3,
+        _ => 7,
+    };
+    codes
+        .iter()
+        .map(|&c| {
+            // scale -7..7 onto -max..max, round to nearest
+            let scaled =
+                (c as f64 * max_code as f64 / 7.0).round() as i32;
+            scaled.clamp(-max_code, max_code)
+        })
+        .collect()
+}
+
+/// Global-top-k oracle vs the fragmented plan: selection sets as column
+/// index lists (used by Fig 4c analysis and tests).
+pub fn sub_topk_select(scores: &[f64], segments: &[Segment]) -> Vec<usize> {
+    let mut picked = Vec::new();
+    for seg in segments {
+        let slice = &scores[seg.start..seg.start + seg.width];
+        let mut idx: Vec<usize> = (0..slice.len()).collect();
+        idx.sort_by(|&a, &b| {
+            slice[b].partial_cmp(&slice[a]).unwrap().then(a.cmp(&b))
+        });
+        picked.extend(idx.iter().take(seg.k).map(|&i| i + seg.start));
+    }
+    picked.sort_unstable();
+    picked
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_split_256() {
+        let segs = split_columns(384, 5, 256);
+        assert_eq!(
+            segs,
+            vec![
+                Segment { start: 0, width: 256, k: 3 },
+                Segment { start: 256, width: 128, k: 2 },
+            ]
+        );
+    }
+
+    #[test]
+    fn paper_split_128() {
+        let ks: Vec<usize> =
+            split_columns(384, 5, 128).iter().map(|s| s.k).collect();
+        assert_eq!(ks, vec![2, 2, 1]);
+    }
+
+    #[test]
+    fn k_conserved_widths_cover_d() {
+        for (d, k, w) in [(384, 5, 256), (100, 7, 30), (64, 1, 16),
+                          (4096, 5, 256), (17, 3, 5)] {
+            let segs = split_columns(d, k, w);
+            assert_eq!(segs.iter().map(|s| s.width).sum::<usize>(), d);
+            assert_eq!(segs.iter().map(|s| s.k).sum::<usize>(), k);
+            let mut pos = 0;
+            for s in &segs {
+                assert_eq!(s.start, pos);
+                pos += s.width;
+            }
+        }
+    }
+
+    #[test]
+    fn paper_fig4c_example_selection() {
+        // scores 1..384, 128-wide arrays, k=5 → [127,128,255,256,384]
+        // (1-based values; 0-based indices shifted by one)
+        let scores: Vec<f64> = (1..=384).map(|v| v as f64).collect();
+        let segs = split_columns(384, 5, 128);
+        let sel = sub_topk_select(&scores, &segs);
+        let values: Vec<usize> = sel.iter().map(|&i| i + 1).collect();
+        assert_eq!(values, vec![127, 128, 255, 256, 384]);
+    }
+
+    #[test]
+    fn single_array_equals_global_topk() {
+        let scores = vec![0.3, 9.0, -2.0, 5.5, 5.5, 1.0];
+        let segs = split_columns(6, 3, 6);
+        assert_eq!(sub_topk_select(&scores, &segs), vec![1, 3, 4]);
+    }
+
+    #[test]
+    fn precision_matches_paper_cases() {
+        // 256×256, 64 replica, depth 64 → 192/64 = 3 cells → 4 bits
+        assert_eq!(precision_for(256, 64, 64), 4);
+        // 128×128, 64 replica, depth 64 → 64/64 = 1 cell → ternary
+        assert_eq!(precision_for(128, 64, 64), 2);
+    }
+
+    #[test]
+    fn downgrade_preserves_sign_and_order() {
+        let codes: Vec<i32> = (-7..=7).collect();
+        let tern = downgrade_codes(&codes, 2);
+        assert!(tern.iter().all(|c| (-1..=1).contains(c)));
+        assert_eq!(tern[0], -1);
+        assert_eq!(tern[14], 1);
+        assert_eq!(tern[7], 0);
+        let four = downgrade_codes(&codes, 4);
+        assert_eq!(four, codes);
+    }
+
+    #[test]
+    fn property_split_matches_python_mirror() {
+        // Deterministic cross-check against values generated from the
+        // python crossbar_split for a grid of cases (recorded inline).
+        let cases: &[(usize, usize, usize, &[usize])] = &[
+            (384, 5, 256, &[3, 2]),
+            (384, 5, 128, &[2, 2, 1]),
+            (100, 3, 32, &[1, 1, 1, 0]),
+            (64, 5, 64, &[5]),
+        ];
+        for (d, k, w, want) in cases {
+            let ks: Vec<usize> =
+                split_columns(*d, *k, *w).iter().map(|s| s.k).collect();
+            assert_eq!(&ks, want, "d={d} k={k} w={w}");
+        }
+    }
+}

@@ -1,0 +1,242 @@
+//! SRAM/RRAM crossbar arrays and K^T weight mapping (Sec. III-A).
+//!
+//! * [`Crossbar`] — one physical array: ternary-cell weight storage
+//!   (3 cells per 15-level weight), integer MAC against PWM input codes,
+//!   write latency/energy accounting, replica-row budget for the IMA.
+//! * [`mapping`] — splitting a logical K^T (d_k × SL) across arrays whose
+//!   column/row budget is smaller, and apportioning the global k into
+//!   per-array sub-top-k (`split_columns`, mirroring the python
+//!   `crossbar_split`).
+
+pub mod mapping;
+
+use crate::circuits::sram_cell::CellColumn;
+use crate::circuits::Timing;
+
+/// Technology of an IMC array (Sec. III-A: RRAM for static projection
+/// weights, SRAM for the per-input K^T / V).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tech {
+    Sram,
+    Rram,
+}
+
+/// One physical crossbar array storing a weight tile column-major.
+#[derive(Clone, Debug)]
+pub struct Crossbar {
+    pub tech: Tech,
+    /// Physical rows (bitcells per column), incl. replica rows.
+    pub rows: usize,
+    /// Physical columns.
+    pub cols: usize,
+    /// Replica rows reserved for ramp generation + calibration (64 in the
+    /// paper's 256×256 instance: 32 ramp + 32 calibration).
+    pub replica_rows: usize,
+    /// Stored weight columns (quantized codes, one CellColumn per used
+    /// output column) — the cell-level ground truth.
+    columns: Vec<CellColumn>,
+    /// Flat column-major copy of the weight codes ([col][row]) used by
+    /// the MAC hot path; equals `unpack(columns)` exactly (§Perf: the
+    /// per-cell walk cost ~9× in cache misses and mults — see
+    /// EXPERIMENTS.md §Perf).
+    codes_flat: Vec<i32>,
+    /// Logical contraction depth (weights per column).
+    depth: usize,
+}
+
+impl Crossbar {
+    /// Rows available for MAC weights after the replica budget.
+    pub fn mac_rows(rows: usize, replica_rows: usize) -> usize {
+        rows - replica_rows
+    }
+
+    /// Max logical weights per column at 3 cells/weight.
+    pub fn weight_capacity(rows: usize, replica_rows: usize) -> usize {
+        Self::mac_rows(rows, replica_rows) / crate::quant::CELLS_PER_WEIGHT
+    }
+
+    /// Program a weight tile `kt[depth][n_cols]` (15-level codes) into a
+    /// fresh array. Panics if the tile exceeds the physical budget —
+    /// mapping decisions belong to [`mapping`], not here.
+    pub fn program(
+        tech: Tech,
+        rows: usize,
+        cols: usize,
+        replica_rows: usize,
+        kt_codes: &[Vec<i32>],
+    ) -> Crossbar {
+        let depth = kt_codes.len();
+        assert!(depth <= Self::weight_capacity(rows, replica_rows),
+                "tile depth {depth} exceeds capacity");
+        let n_cols = kt_codes.first().map_or(0, Vec::len);
+        assert!(n_cols <= cols, "tile cols {n_cols} exceed {cols}");
+        let mut codes_flat = Vec::with_capacity(n_cols * depth);
+        let columns = (0..n_cols)
+            .map(|c| {
+                let col: Vec<i32> =
+                    kt_codes.iter().map(|row| row[c]).collect();
+                codes_flat.extend_from_slice(&col);
+                CellColumn::from_weight_codes(&col)
+            })
+            .collect();
+        Crossbar { tech, rows, cols, replica_rows, columns, codes_flat, depth }
+    }
+
+    /// Used output columns.
+    pub fn used_cols(&self) -> usize {
+        self.columns.len()
+    }
+
+    /// Logical contraction depth.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Integer MAC of one input-code vector against every used column —
+    /// what the bitlines present to the IMA for one conversion.
+    pub fn mac_all(&self, input_codes: &[i32]) -> Vec<i64> {
+        let mut out = vec![0i64; self.columns.len()];
+        self.mac_into(input_codes, &mut out);
+        out
+    }
+
+    /// MAC into a caller-provided buffer — the simulator hot path.
+    ///
+    /// Works on the flat per-column weight codes rather than walking the
+    /// three ternary cells of each weight: identical arithmetic (cells
+    /// reconstruct the code exactly — see `mac_matches_cell_level`), one
+    /// contiguous stream per column, i32 products accumulated in i64.
+    pub fn mac_into(&self, input_codes: &[i32], out: &mut [i64]) {
+        assert_eq!(input_codes.len(), self.depth);
+        assert_eq!(out.len(), self.columns.len());
+        let d = self.depth;
+        for (c, o) in out.iter_mut().enumerate() {
+            let col = &self.codes_flat[c * d..(c + 1) * d];
+            let mut acc: i64 = 0;
+            for (&w, &x) in col.iter().zip(input_codes) {
+                acc += (w * x) as i64; // |w|≤7, |x|≤15: no i32 overflow
+            }
+            *o = acc;
+        }
+    }
+
+    /// Cell-level MAC (reference path, used by parity tests).
+    pub fn mac_cells(&self, input_codes: &[i32]) -> Vec<i64> {
+        self.columns.iter().map(|col| col.mac(input_codes)).collect()
+    }
+
+    /// Write latency for (re)programming the used tile, ns. SRAM arrays
+    /// are written row-by-row with column-parallel cells (Sec. IV-B:
+    /// one row per write cycle).
+    pub fn write_latency_ns(&self, t: &Timing) -> f64 {
+        let phys_rows = self.depth * crate::quant::CELLS_PER_WEIGHT;
+        phys_rows as f64 * t.t_write_row
+    }
+
+    /// Write energy, pJ (per-cell dynamic write cost).
+    pub fn write_energy_pj(&self, e_write_cell: f64) -> f64 {
+        let cells =
+            self.depth * crate::quant::CELLS_PER_WEIGHT * self.used_cols();
+        cells as f64 * e_write_cell
+    }
+
+    /// Worst-case |MAC| the stored tile can produce against n-bit inputs;
+    /// the replica-row calibration uses this as the ADC full scale.
+    pub fn full_scale_mac(&self, n_bits_input: u32) -> f64 {
+        let qm = crate::quant::qmax(n_bits_input) as i64;
+        let worst: i64 = self
+            .columns
+            .iter()
+            .map(|col| {
+                (0..col.len())
+                    .map(|i| {
+                        col.cells[i].value().unsigned_abs() as i64
+                            * col.scales[i] as i64
+                    })
+                    .sum::<i64>()
+            })
+            .max()
+            .unwrap_or(1);
+        (worst * qm).max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tile(depth: usize, cols: usize) -> Vec<Vec<i32>> {
+        (0..depth)
+            .map(|r| (0..cols).map(|c| ((r * 7 + c * 3) % 15) as i32 - 7).collect())
+            .collect()
+    }
+
+    #[test]
+    fn capacity_matches_paper_examples() {
+        // 256×256 with 64 replica rows → 192 MAC rows → 64 weights of 4b
+        assert_eq!(Crossbar::weight_capacity(256, 64), 64);
+        // 128×128 with 64 replica rows → 64 MAC rows → 21 full ternary
+        // gangs; the paper instead drops to ternary precision (1 cell per
+        // weight) — that trade-off lives in mapping::precision_for.
+        assert_eq!(Crossbar::weight_capacity(128, 64), 21);
+    }
+
+    #[test]
+    fn mac_matches_integer_oracle() {
+        let kt = tile(8, 5);
+        let xb = Crossbar::program(Tech::Sram, 256, 256, 64, &kt);
+        let x: Vec<i32> = vec![3, -15, 8, 0, 2, -1, 14, 7];
+        let got = xb.mac_all(&x);
+        for c in 0..5 {
+            let want: i64 = (0..8)
+                .map(|r| kt[r][c] as i64 * x[r] as i64)
+                .sum();
+            assert_eq!(got[c], want, "col {c}");
+        }
+    }
+
+    #[test]
+    fn mac_matches_cell_level() {
+        // hot path (flat codes) == ground truth (ternary cell walk)
+        let kt = tile(16, 9);
+        let xb = Crossbar::program(Tech::Sram, 256, 256, 64, &kt);
+        let x: Vec<i32> = (0..16).map(|i| ((i * 11) % 31) as i32 - 15).collect();
+        assert_eq!(xb.mac_all(&x), xb.mac_cells(&x));
+    }
+
+    #[test]
+    fn mac_into_matches_mac_all() {
+        let kt = tile(4, 3);
+        let xb = Crossbar::program(Tech::Sram, 64, 16, 16, &kt);
+        let x = vec![1, -2, 3, -4];
+        let mut buf = vec![0i64; 3];
+        xb.mac_into(&x, &mut buf);
+        assert_eq!(buf, xb.mac_all(&x));
+    }
+
+    #[test]
+    fn write_cost_scales_with_tile() {
+        let t = Timing::default();
+        let small = Crossbar::program(Tech::Sram, 256, 256, 64, &tile(4, 4));
+        let big = Crossbar::program(Tech::Sram, 256, 256, 64, &tile(64, 4));
+        assert!(big.write_latency_ns(&t) > small.write_latency_ns(&t));
+        assert_eq!(big.write_latency_ns(&t), 64.0 * 3.0 * 5.0);
+    }
+
+    #[test]
+    fn full_scale_bounds_every_mac() {
+        let kt = tile(16, 8);
+        let xb = Crossbar::program(Tech::Sram, 256, 256, 64, &kt);
+        let fs = xb.full_scale_mac(5);
+        let x: Vec<i32> = (0..16).map(|i| if i % 2 == 0 { 15 } else { -15 }).collect();
+        for &m in &xb.mac_all(&x) {
+            assert!((m as f64).abs() <= fs);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds capacity")]
+    fn overdeep_tile_rejected() {
+        let _ = Crossbar::program(Tech::Sram, 128, 128, 64, &tile(40, 4));
+    }
+}

@@ -1,0 +1,158 @@
+//! AER arbiter–encoder–counter (Fig 2a/e).
+//!
+//! Latched sense-amp outputs are treated as asynchronous *requests*
+//! (REQ); the arbiter grants one per arbitration slot, the encoder emits
+//! the column address, and the ACK disables that column's SA. A counter
+//! tracks total grants and raises `stop` once it reaches k, ending the
+//! conversion early (before the full 2^n ramp).
+//!
+//! Tie rule (Sec. III-A): if several columns fire in the same ramp cycle
+//! and the count would exceed k, preference goes to **smaller column
+//! addresses** and the output set is trimmed to exactly k.
+
+/// One granted event: which column crossed at which ramp cycle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Grant {
+    pub column: usize,
+    pub cycle: u32,
+}
+
+/// Result of arbitrating one conversion.
+#[derive(Clone, Debug)]
+pub struct ArbiterOutcome {
+    /// The ≤ k granted events, in grant order (cycle, then address).
+    pub grants: Vec<Grant>,
+    /// Ramp cycle at which the counter stopped the conversion (the cycle
+    /// of the k-th grant), or the full ramp length if fewer than k fired.
+    pub stop_cycle: u32,
+    /// Total arbitration slots consumed (each costs `T_arb`).
+    pub arb_events: usize,
+}
+
+/// Arbitrate per-column crossing cycles down to the top-k grants.
+///
+/// `crossings[c]` is the ramp cycle at which column c's SA fires
+/// (`None` = never). `ramp_steps` bounds the conversion when fewer than
+/// k columns fire.
+pub fn arbitrate(crossings: &[Option<u32>], k: usize, ramp_steps: u32)
+    -> ArbiterOutcome
+{
+    // Bucket requests by cycle, preserving column order (addresses are
+    // scanned smallest-first by the arbiter tree).
+    let mut events: Vec<Grant> = crossings
+        .iter()
+        .enumerate()
+        .filter_map(|(c, t)| t.map(|cycle| Grant { column: c, cycle }))
+        .collect();
+    // Stable order: cycle first, then column address (the tie rule).
+    events.sort_by_key(|g| (g.cycle, g.column));
+
+    let grants: Vec<Grant> = events.into_iter().take(k).collect();
+    let stop_cycle = grants
+        .last()
+        .map(|g| g.cycle)
+        .filter(|_| grants.len() == k)
+        .unwrap_or(ramp_steps.saturating_sub(1));
+    let arb_events = grants.len();
+    ArbiterOutcome { grants, stop_cycle, arb_events }
+}
+
+impl ArbiterOutcome {
+    /// Early-stop fraction α for this conversion: cycles actually run
+    /// over the full ramp length.
+    pub fn alpha(&self, ramp_steps: u32) -> f64 {
+        (self.stop_cycle + 1) as f64 / ramp_steps as f64
+    }
+
+    /// Column addresses granted (selection set).
+    pub fn columns(&self) -> Vec<usize> {
+        self.grants.iter().map(|g| g.column).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grants_top_k_by_cycle() {
+        // columns crossing at cycles [5, 1, 9, 3]: top-2 = cols 1, 3
+        let crossings = vec![Some(5), Some(1), Some(9), Some(3)];
+        let out = arbitrate(&crossings, 2, 32);
+        assert_eq!(out.columns(), vec![1, 3]);
+        assert_eq!(out.stop_cycle, 3);
+    }
+
+    #[test]
+    fn tie_prefers_smaller_address() {
+        // three columns all cross at cycle 2; k=2 keeps cols 0 and 1
+        let crossings = vec![Some(2), Some(2), Some(2)];
+        let out = arbitrate(&crossings, 2, 32);
+        assert_eq!(out.columns(), vec![0, 1]);
+    }
+
+    #[test]
+    fn early_stop_cycle_is_kth_crossing() {
+        let crossings = vec![Some(0), Some(4), Some(8), Some(30)];
+        let out = arbitrate(&crossings, 3, 32);
+        assert_eq!(out.stop_cycle, 8);
+        assert!(out.alpha(32) < 0.3);
+    }
+
+    #[test]
+    fn fewer_than_k_runs_full_ramp() {
+        let crossings = vec![Some(3), None, None];
+        let out = arbitrate(&crossings, 2, 32);
+        assert_eq!(out.grants.len(), 1);
+        assert_eq!(out.stop_cycle, 31);
+        assert!((out.alpha(32) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exactly_k_grants_even_with_mass_ties() {
+        let crossings = vec![Some(1); 10];
+        let out = arbitrate(&crossings, 5, 32);
+        assert_eq!(out.grants.len(), 5);
+        assert_eq!(out.columns(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn arb_events_counted() {
+        let crossings = vec![Some(1), Some(2), Some(3)];
+        let out = arbitrate(&crossings, 2, 32);
+        assert_eq!(out.arb_events, 2);
+    }
+
+    #[test]
+    fn property_selection_matches_sorted_topk() {
+        use crate::util::{check::property, rng::Rng};
+        property("arbiter == sort-based top-k", 300, 0xA11CE, |rng: &mut Rng| {
+            let d = 1 + rng.below(200);
+            let k = 1 + rng.below(10.min(d));
+            let cycles: Vec<Option<u32>> = (0..d)
+                .map(|_| {
+                    if rng.chance(0.05) {
+                        None
+                    } else {
+                        Some(rng.below(32) as u32)
+                    }
+                })
+                .collect();
+            let out = arbitrate(&cycles, k, 32);
+            // oracle: sort (cycle, col) pairs, take first k
+            let mut oracle: Vec<(u32, usize)> = cycles
+                .iter()
+                .enumerate()
+                .filter_map(|(c, t)| t.map(|t| (t, c)))
+                .collect();
+            oracle.sort();
+            let want: Vec<usize> =
+                oracle.iter().take(k).map(|&(_, c)| c).collect();
+            crate::prop_assert!(
+                out.columns() == want,
+                "arbiter {:?} != oracle {:?}", out.columns(), want
+            );
+            Ok(())
+        });
+    }
+}

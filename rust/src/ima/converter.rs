@@ -1,0 +1,250 @@
+//! The topkima converter: one full conversion of a crossbar's MAC
+//! voltages into top-k (address, code) pairs, with cycle-accurate latency
+//! and energy accounting.
+//!
+//! Pipeline per conversion (Fig 2):
+//! 1. MAC voltages settle on the bitlines (`BitlineModel`);
+//! 2. the decreasing ramp sweeps; each column's SA fires at its crossing
+//!    cycle (plus noise/offset/late-latch from `ColumnNoise`);
+//! 3. the AER arbiter grants crossings in (cycle, address) order and the
+//!    counter stops the ramp at the k-th grant (early stop, factor α);
+//! 4. granted (address, code) pairs go to the digital softmax core.
+//!
+//! `convert_full` runs the same machinery without early stop — the
+//! conventional-IMA baseline [6] used by Conv-SM and Dtopk-SM.
+
+use super::arbiter::{arbitrate, ArbiterOutcome};
+use super::noise::ColumnNoise;
+use super::ramp::Ramp;
+use crate::circuits::{BitlineModel, Energy, Timing};
+use crate::util::rng::Rng;
+
+/// One converted output: column address + quantized value.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Conversion {
+    pub column: usize,
+    pub code: i32,
+    pub cycle: u32,
+}
+
+/// Result of converting one row of MAC results.
+#[derive(Clone, Debug)]
+pub struct ConversionResult {
+    /// Granted top-k outputs in grant order (or all columns for a full
+    /// conversion), each with its reconstructed code.
+    pub outputs: Vec<Conversion>,
+    /// Early-stop fraction α = cycles run / full ramp.
+    pub alpha: f64,
+    /// Conversion latency (ns): ramp cycles + arbiter drain.
+    pub latency_ns: f64,
+    /// Conversion energy (pJ): per-cycle column ADC + arbiter events.
+    pub energy_pj: f64,
+}
+
+/// The topkima in-memory ADC for one crossbar.
+#[derive(Clone, Debug)]
+pub struct TopkimaConverter {
+    pub ramp: Ramp,
+    pub timing: Timing,
+    pub energy: Energy,
+    pub bitline: BitlineModel,
+    pub noise: ColumnNoise,
+}
+
+impl TopkimaConverter {
+    /// Ideal converter (all noise sources zeroed) over `columns` columns
+    /// with the given ADC full-scale (in MAC units).
+    pub fn ideal(columns: usize, full_scale: f64) -> Self {
+        let mut bitline = BitlineModel::default();
+        bitline.sigma_noise_v = 0.0;
+        TopkimaConverter {
+            ramp: Ramp::topkima(full_scale),
+            timing: Timing::default(),
+            energy: Energy::default(),
+            bitline,
+            noise: ColumnNoise::ideal(columns),
+        }
+    }
+
+    /// Per-column SA crossing cycles for integer MAC values.
+    ///
+    /// Unit convention: the ramp's `full_scale` is calibrated in **MAC
+    /// units** (replica-cell calibration sets it to the max |MAC| the
+    /// array is rated for), so comparisons happen in MAC units. Bitline
+    /// voltage noise is referred back through `dv_per_unit`; converter
+    /// noise (`ColumnNoise`) is specified directly in ADC LSBs.
+    fn crossings(&self, macs: &[i64], rng: &mut Rng) -> Vec<Option<u32>> {
+        let dv = self.bitline.dv_per_unit;
+        macs.iter()
+            .enumerate()
+            .map(|(c, &mac)| {
+                let v_mac_units = self.bitline.sample(mac, rng) / dv;
+                let err_lsb = self.noise.sample_lsb(c, rng);
+                let v = v_mac_units + err_lsb * self.ramp.lsb();
+                self.ramp.crossing_cycle_fast(v)
+            })
+            .collect()
+    }
+
+    /// Convert with top-k early stopping (the topkima macro).
+    pub fn convert_topk(&self, macs: &[i64], k: usize, rng: &mut Rng)
+        -> ConversionResult
+    {
+        assert_eq!(macs.len(), self.noise.columns());
+        let crossings = self.crossings(macs, rng);
+        let out = arbitrate(&crossings, k, self.ramp.steps());
+        self.package(out, k)
+    }
+
+    /// Convert all columns, full ramp (conventional IMA [6] — the ramp
+    /// direction doesn't matter without early stop, but we keep the
+    /// decreasing ramp for one consistent code mapping).
+    pub fn convert_full(&self, macs: &[i64], rng: &mut Rng)
+        -> ConversionResult
+    {
+        assert_eq!(macs.len(), self.noise.columns());
+        let crossings = self.crossings(macs, rng);
+        let d = macs.len();
+        let out = arbitrate(&crossings, d, self.ramp.steps());
+        let mut res = self.package(out, d);
+        // no early stop: full ramp latency/energy, no arbiter drain
+        res.alpha = 1.0;
+        res.latency_ns = self.timing.t_ima();
+        res.energy_pj = d as f64
+            * self.ramp.steps() as f64
+            * self.energy.e_adc_cycle;
+        res
+    }
+
+    fn package(&self, out: ArbiterOutcome, k: usize) -> ConversionResult {
+        let alpha = out.alpha(self.ramp.steps());
+        // Eq (4): T_ima,arb = max(α·T_ima + T_arb, T_clk + k·T_arb)
+        let latency_ns = (alpha * self.timing.t_ima() + self.timing.t_arb)
+            .max(self.timing.t_clk_ima + k as f64 * self.timing.t_arb);
+        let cycles_run = (out.stop_cycle + 1) as f64;
+        let energy_pj = self.noise.columns() as f64
+            * cycles_run
+            * self.energy.e_adc_cycle
+            + out.arb_events as f64 * self.energy.e_arb_event;
+        let outputs = out
+            .grants
+            .iter()
+            .map(|g| Conversion {
+                column: g.column,
+                code: self.ramp.code_at(g.cycle),
+                cycle: g.cycle,
+            })
+            .collect();
+        ConversionResult { outputs, alpha, latency_ns, energy_pj }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn macs_ramp(n: usize) -> Vec<i64> {
+        // distinct values 0..n scaled into the linear region
+        (0..n).map(|i| (i as i64 + 1) * 40).collect()
+    }
+
+    #[test]
+    fn ideal_topk_selects_largest() {
+        let macs = macs_ramp(16);
+        let conv = TopkimaConverter::ideal(16, 16.0 * 40.0);
+        let mut rng = Rng::new(1);
+        let res = conv.convert_topk(&macs, 3, &mut rng);
+        let mut cols = res.outputs.iter().map(|o| o.column).collect::<Vec<_>>();
+        cols.sort_unstable();
+        assert_eq!(cols, vec![13, 14, 15]);
+    }
+
+    #[test]
+    fn early_stop_alpha_below_one_for_topk() {
+        let macs = macs_ramp(64);
+        let conv = TopkimaConverter::ideal(64, 64.0 * 40.0);
+        let mut rng = Rng::new(2);
+        let res = conv.convert_topk(&macs, 5, &mut rng);
+        assert!(res.alpha < 0.5, "alpha {}", res.alpha);
+        let full = conv.convert_full(&macs, &mut rng);
+        assert!(res.latency_ns < full.latency_ns);
+        assert!(res.energy_pj < full.energy_pj);
+    }
+
+    #[test]
+    fn codes_match_adc_transfer_function() {
+        let macs = vec![100i64, -350, 0, 220];
+        let fs = 400.0;
+        let conv = TopkimaConverter::ideal(4, fs);
+        let mut rng = Rng::new(3);
+        let res = conv.convert_full(&macs, &mut rng);
+        for o in &res.outputs {
+            let want =
+                crate::quant::adc_code(macs[o.column] as f32, fs as f32, 5);
+            assert!(
+                (o.code - want).abs() <= 1,
+                "col {} code {} want {}", o.column, o.code, want
+            );
+        }
+    }
+
+    #[test]
+    fn full_conversion_returns_every_column() {
+        let macs = macs_ramp(10);
+        let conv = TopkimaConverter::ideal(10, 400.0);
+        let mut rng = Rng::new(4);
+        let res = conv.convert_full(&macs, &mut rng);
+        assert_eq!(res.outputs.len(), 10);
+        assert_eq!(res.alpha, 1.0);
+    }
+
+    #[test]
+    fn latency_floor_is_arbiter_drain() {
+        // all columns equal & max → all cross at cycle 0; latency floor
+        // T_clk + k·T_arb applies
+        let macs = vec![400i64; 8];
+        let conv = TopkimaConverter::ideal(8, 400.0);
+        let mut rng = Rng::new(5);
+        let res = conv.convert_topk(&macs, 4, &mut rng);
+        let t = Timing::default();
+        assert!((res.latency_ns - (t.t_clk_ima + 4.0 * t.t_arb)).abs() < 1e-9);
+        // ties trimmed to exactly k, smallest addresses first
+        assert_eq!(res.outputs.len(), 4);
+        assert_eq!(
+            res.outputs.iter().map(|o| o.column).collect::<Vec<_>>(),
+            vec![0, 1, 2, 3]
+        );
+    }
+
+    #[test]
+    fn property_ideal_topkima_equals_sw_topk() {
+        use crate::util::{check::property, rng::Rng as R};
+        property("ima top-k == sw top-k", 200, 0xBEEF, |rng: &mut R| {
+            let d = 2 + rng.below(100);
+            let k = 1 + rng.below(8.min(d));
+            let macs: Vec<i64> =
+                (0..d).map(|_| rng.range(-4000, 4000)).collect();
+            let fs = macs.iter().map(|m| m.abs()).max().unwrap().max(1) as f64;
+            let conv = TopkimaConverter::ideal(d, fs);
+            let res = conv.convert_topk(&macs, k, &mut Rng::new(rng.next_u64()));
+            // SW oracle on ADC codes (the hardware sorts by quantized
+            // value, ties by address — so compare code-level selection)
+            let mut oracle: Vec<(i32, usize)> = macs
+                .iter()
+                .enumerate()
+                .map(|(c, &m)| {
+                    (-crate::quant::adc_code(m as f32, fs as f32, 5), c)
+                })
+                .collect();
+            oracle.sort();
+            let want: Vec<usize> =
+                oracle.iter().take(k).map(|&(_, c)| c).collect();
+            let got = res.outputs.iter().map(|o| o.column).collect::<Vec<_>>();
+            crate::prop_assert!(
+                got == want,
+                "d {d} k {k}: got {:?} want {:?} macs {:?}", got, want, macs
+            );
+            Ok(())
+        });
+    }
+}

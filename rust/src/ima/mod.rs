@@ -1,0 +1,20 @@
+//! Topkima in-memory ADC (the paper's circuit contribution).
+//!
+//! * [`ramp`] — decreasing-ramp generator: larger MAC voltages cross
+//!   earlier, turning conversion order into a sort.
+//! * [`arbiter`] — AER arbiter-encoder + counter: grants the first k
+//!   crossings (ties → smaller address) and stops the ramp early.
+//! * [`converter`] — the assembled macro: MAC voltages → top-k (address,
+//!   code) pairs with latency/energy accounting per Eq. (4).
+//! * [`noise`] — conversion-error model mirrored from the python side
+//!   (Fig 4b error-injection pipeline).
+
+pub mod arbiter;
+pub mod converter;
+pub mod noise;
+pub mod ramp;
+
+pub use arbiter::{arbitrate, ArbiterOutcome, Grant};
+pub use converter::{Conversion, ConversionResult, TopkimaConverter};
+pub use noise::{ColumnNoise, NoiseModel};
+pub use ramp::Ramp;

@@ -1,0 +1,129 @@
+//! Conversion-error model (mirror of `python/compile/error_inject.py`).
+//!
+//! Fig 4(b): the paper measures the IMA output distribution against the
+//! ideal MAC over 256 conversions and injects the measured error into the
+//! SW accuracy pipeline. Our simulator produces the same three error
+//! mechanisms, in ADC-LSB units so they transfer between the volt-level
+//! circuit and the normalized model:
+//!
+//! * `sigma_noise` — per-conversion random noise (bitline thermal + SA);
+//! * `sigma_offset` — static per-column offset (SA mismatch, partially
+//!   cancelled by replica-row calibration);
+//! * `p_skip` — chance a crossing is latched one ramp cycle late
+//!   (arbiter contention), contributing exactly −1 LSB on a decreasing
+//!   ramp (the stored code is one step lower).
+
+use crate::util::rng::Rng;
+
+/// Error-model parameters (LSB units). Must match the python defaults in
+/// `error_inject.ErrorModel` — parity is asserted in `rust/tests`.
+#[derive(Clone, Copy, Debug)]
+pub struct NoiseModel {
+    pub sigma_noise: f64,
+    pub sigma_offset: f64,
+    pub p_skip: f64,
+}
+
+impl Default for NoiseModel {
+    fn default() -> Self {
+        NoiseModel { sigma_noise: 0.5, sigma_offset: 0.3, p_skip: 0.02 }
+    }
+}
+
+/// Per-array instantiation: offsets are drawn once (hardware mismatch is
+/// static), noise is drawn per conversion.
+#[derive(Clone, Debug)]
+pub struct ColumnNoise {
+    pub(crate) model: NoiseModel,
+    /// Static per-column offset, LSB.
+    offsets: Vec<f64>,
+}
+
+impl ColumnNoise {
+    /// Draw static offsets for `columns` columns.
+    pub fn new(model: NoiseModel, columns: usize, rng: &mut Rng) -> Self {
+        let offsets =
+            (0..columns).map(|_| model.sigma_offset * rng.normal()).collect();
+        ColumnNoise { model, offsets }
+    }
+
+    /// Disable all error sources (ideal converter).
+    pub fn ideal(columns: usize) -> Self {
+        ColumnNoise {
+            model: NoiseModel { sigma_noise: 0.0, sigma_offset: 0.0, p_skip: 0.0 },
+            offsets: vec![0.0; columns],
+        }
+    }
+
+    pub fn columns(&self) -> usize {
+        self.offsets.len()
+    }
+
+    /// True when every error source is disabled (ideal converter).
+    pub fn is_ideal(&self) -> bool {
+        self.model.sigma_noise == 0.0 && self.model.p_skip == 0.0
+            && self.model.sigma_offset == 0.0
+    }
+
+    /// Error (in LSB) added to column `c`'s analog value for one
+    /// conversion. `skip` events subtract one LSB (late latch on a
+    /// decreasing ramp).
+    pub fn sample_lsb(&self, c: usize, rng: &mut Rng) -> f64 {
+        if self.is_ideal() {
+            return 0.0; // hot path: no RNG draws for the ideal converter
+        }
+        let noise = self.model.sigma_noise * rng.normal();
+        let skip =
+            if rng.chance(self.model.p_skip) { -1.0 } else { 0.0 };
+        self.offsets[c] + noise + skip
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn ideal_is_zero() {
+        let cn = ColumnNoise::ideal(8);
+        let mut rng = Rng::new(1);
+        for c in 0..8 {
+            assert_eq!(cn.sample_lsb(c, &mut rng), 0.0);
+        }
+    }
+
+    #[test]
+    fn offsets_static_noise_fresh() {
+        let mut rng = Rng::new(2);
+        let cn = ColumnNoise::new(
+            NoiseModel { sigma_noise: 0.0, sigma_offset: 0.3, p_skip: 0.0 },
+            4,
+            &mut rng,
+        );
+        // no per-conversion noise → samples repeat exactly
+        let a = cn.sample_lsb(2, &mut rng);
+        let b = cn.sample_lsb(2, &mut rng);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn error_statistics_match_model() {
+        let mut rng = Rng::new(3);
+        let model = NoiseModel::default();
+        let cn = ColumnNoise::new(model, 256, &mut rng);
+        let mut errs = Vec::new();
+        for _ in 0..100 {
+            for c in 0..256 {
+                errs.push(cn.sample_lsb(c, &mut rng));
+            }
+        }
+        // mean ≈ -p_skip (skip is one-sided), sigma ≈ sqrt(noise²+offset²)
+        let m = stats::mean(&errs);
+        assert!((m + model.p_skip).abs() < 0.05, "mean {m}");
+        let sd = stats::std_dev(&errs);
+        let want =
+            (model.sigma_noise.powi(2) + model.sigma_offset.powi(2)).sqrt();
+        assert!((sd - want).abs() < 0.1, "sd {sd} want {want}");
+    }
+}

@@ -1,0 +1,30 @@
+//! # Topkima-Former
+//!
+//! Full-stack reproduction of *"Topkima-Former: Low-energy, Low-Latency
+//! Inference for Transformers using top-k In-memory ADC"* (CS.AR 2024):
+//! a rust serving coordinator + IMC-fabric simulator on top of JAX/Pallas
+//! AOT-compiled model artifacts (loaded via PJRT, python never on the
+//! request path).
+//!
+//! Layer map (see DESIGN.md):
+//! * [`circuits`], [`ima`], [`crossbar`], [`softmax`], [`scale`] — the
+//!   circuit/macro level (SPICE-equivalent behavioral models).
+//! * [`arch`], [`sim`], [`accel`], [`model`] — the architecture/system
+//!   level (NeuroSim-equivalent accounting + Table I baselines).
+//! * [`runtime`], [`coordinator`] — the serving layer (PJRT execution of
+//!   AOT artifacts, routing/batching/scheduling).
+//! * [`quant`], [`util`] — shared contracts and dependency-free support.
+
+pub mod accel;
+pub mod arch;
+pub mod coordinator;
+pub mod circuits;
+pub mod crossbar;
+pub mod ima;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod scale;
+pub mod sim;
+pub mod softmax;
+pub mod util;

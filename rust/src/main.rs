@@ -1,0 +1,281 @@
+//! Topkima-Former CLI — leader entrypoint.
+//!
+//! Subcommands (hand-rolled parsing; no clap in the offline build):
+//!
+//! * `serve [--artifacts DIR] [--model bert|vit] [--k K] [--requests N]`
+//!   — start the coordinator, replay the exported eval split as a
+//!   request trace, report accuracy + latency/throughput.
+//! * `report [--seq-len SL]` — run the hardware simulator for the
+//!   BERT-base attention module and print the Fig 4 breakdowns +
+//!   Table I row.
+//! * `sweep [--artifacts DIR] [--model bert|vit]` — re-check Fig 3 on
+//!   the rust stack: run every exported per-k executable over the eval
+//!   split and print accuracy vs k.
+//! * `check [--artifacts DIR]` — load every artifact, compile, and run
+//!   a one-batch smoke test (CI gate).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use topkima::accel;
+use topkima::model::TransformerConfig;
+use topkima::sim::{report, simulate_attention, SimConfig, SoftmaxKind};
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(name) = args[i].strip_prefix("--") {
+            let val = args
+                .get(i + 1)
+                .filter(|v| !v.starts_with("--"))
+                .cloned()
+                .unwrap_or_else(|| "true".to_string());
+            if val != "true" {
+                i += 1;
+            }
+            flags.insert(name.to_string(), val);
+        }
+        i += 1;
+    }
+    flags
+}
+
+fn flag<'a>(f: &'a HashMap<String, String>, k: &str, default: &'a str)
+    -> &'a str
+{
+    f.get(k).map(String::as_str).unwrap_or(default)
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let flags = parse_flags(&args[1.min(args.len())..]);
+
+    match cmd {
+        "report" => cmd_report(&flags),
+        "serve" => cmd_serve(&flags),
+        "sweep" => cmd_sweep(&flags),
+        "check" => cmd_check(&flags),
+        _ => {
+            eprintln!(
+                "usage: topkima <serve|report|sweep|check> [flags]\n\
+                 see rust/src/main.rs doc comment"
+            );
+            Ok(())
+        }
+    }
+}
+
+/// `report`: hardware simulation of the paper's evaluation workload.
+fn cmd_report(flags: &HashMap<String, String>) -> Result<()> {
+    let sl: usize = flag(flags, "seq-len", "384").parse()?;
+    let tc = TransformerConfig::bert_base().with_seq_len(sl);
+    println!("== Topkima-Former hardware report ({}, SL={sl}) ==\n", tc.name);
+    for softmax in [
+        SoftmaxKind::Conventional,
+        SoftmaxKind::Dtopk,
+        SoftmaxKind::Topkima,
+    ] {
+        let sc = SimConfig { softmax, ..SimConfig::default() };
+        let r = simulate_attention(&tc, &sc);
+        println!("{}", report::system_summary(&r));
+    }
+    let sc = SimConfig::default();
+    let r = simulate_attention(&tc, &sc);
+    println!("\n-- per component (Fig 4e/f) --\n{}", report::component_table(&r));
+    println!("-- per operation (Fig 4g/h) --\n{}", report::operation_table(&r));
+    let point = accel::system_point(&tc, &sc);
+    println!("-- Table I --\n{}", accel::render_table(&point));
+    for (name, speed, ee) in accel::comparison(&point) {
+        println!(
+            "vs {name:<15} speed {}  EE {}",
+            speed.map_or("  -  ".into(), |s| format!("{s:5.1}×")),
+            ee.map_or("  -  ".into(), |e| format!("{e:5.1}×")),
+        );
+    }
+    Ok(())
+}
+
+/// `serve`: coordinator + PJRT over the exported eval trace.
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    use std::time::Duration;
+    use topkima::coordinator::{
+        Coordinator, InputData, PjrtExecutor, Router,
+    };
+    use topkima::runtime::Engine;
+
+    let dir = flag(flags, "artifacts", "artifacts").to_string();
+    let family = flag(flags, "model", "bert").to_string();
+    let k: usize = flag(flags, "k", "5").parse()?;
+    let n_requests: usize = flag(flags, "requests", "256").parse()?;
+
+    let engine = Engine::new(&dir)?;
+    println!("platform: {}", engine.platform());
+    let buckets = engine.manifest.batch_sizes(&family, k);
+    if buckets.is_empty() {
+        bail!("no artifacts for {family} k={k} in {dir}");
+    }
+    println!("serving {family} k={k}, buckets {buckets:?}");
+    let eval = engine.manifest.eval_set(&family)?;
+
+    let mut router = Router::new();
+    router.register(&family, k, buckets.clone(), Duration::from_millis(2));
+
+    let dir2 = dir.clone();
+    let family2 = family.clone();
+    let mut coord = Coordinator::start(router, move || {
+        let engine = Engine::new(&dir2).expect("engine in coordinator");
+        Box::new(
+            PjrtExecutor::preload(
+                &engine,
+                &[(family2.clone(), k, buckets.clone())],
+            )
+            .expect("preload executables"),
+        )
+    });
+
+    let n = n_requests.min(eval.len());
+    let stride = eval.x_stride();
+    let mut rxs = Vec::with_capacity(n);
+    let t0 = std::time::Instant::now();
+    for i in 0..n {
+        let input = if eval.kind == "vit" {
+            InputData::F32(eval.x_f32[i * stride..(i + 1) * stride].to_vec())
+        } else {
+            InputData::I32(eval.x_i32[i * stride..(i + 1) * stride].to_vec())
+        };
+        rxs.push(coord.submit(&family, k, input));
+    }
+    let mut correct = 0usize;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv_timeout(Duration::from_secs(120))?;
+        if prediction_correct(&eval, i, &resp.output) {
+            correct += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let metrics = coord.shutdown();
+    println!("{}", metrics.summary());
+    println!(
+        "accuracy: {:.3} ({correct}/{n}), wall {:.2}s, {:.1} req/s",
+        correct as f64 / n as f64,
+        wall,
+        n as f64 / wall
+    );
+    Ok(())
+}
+
+/// Decode one model output row and compare to the eval label.
+fn prediction_correct(
+    eval: &topkima::runtime::EvalSet,
+    idx: usize,
+    output: &[f32],
+) -> bool {
+    if eval.kind == "vit" {
+        // output = class logits
+        let pred = argmax(output);
+        pred as i32 == eval.y_i32[idx]
+    } else {
+        // output = [seq_len, 2] start/end logits
+        let sl = output.len() / 2;
+        let starts: Vec<f32> = (0..sl).map(|t| output[t * 2]).collect();
+        let ends: Vec<f32> = (0..sl).map(|t| output[t * 2 + 1]).collect();
+        let (ps, pe) = (argmax(&starts), argmax(&ends));
+        ps as i32 == eval.y_i32[idx * 2]
+            && pe as i32 == eval.y_i32[idx * 2 + 1]
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// `sweep`: Fig 3 re-check through the rust stack (per-k executables).
+fn cmd_sweep(flags: &HashMap<String, String>) -> Result<()> {
+    use topkima::runtime::Engine;
+
+    let dir = flag(flags, "artifacts", "artifacts");
+    let family = flag(flags, "model", "bert");
+    let batch: usize = flag(flags, "batch", "32").parse()?;
+    let limit: usize = flag(flags, "limit", "512").parse()?;
+
+    let engine = Engine::new(dir)?;
+    let eval = engine.manifest.eval_set(family)?;
+    let ks = engine.manifest.k_values(family);
+    println!("model={family} eval={} samples, k values {ks:?}", eval.len());
+    println!("{:<8} {:>10}", "k", "accuracy");
+    for k in ks {
+        let model = engine.load(family, k, batch)?;
+        let n = (limit.min(eval.len()) / batch) * batch;
+        let stride = eval.x_stride();
+        let mut correct = 0usize;
+        for b0 in (0..n).step_by(batch) {
+            let out = if eval.kind == "vit" {
+                model.run_f32(
+                    &eval.x_f32[b0 * stride..(b0 + batch) * stride],
+                )?
+            } else {
+                model.run_i32(
+                    &eval.x_i32[b0 * stride..(b0 + batch) * stride],
+                )?
+            };
+            let per = out.len() / batch;
+            for i in 0..batch {
+                if prediction_correct(
+                    &eval,
+                    b0 + i,
+                    &out[i * per..(i + 1) * per],
+                ) {
+                    correct += 1;
+                }
+            }
+        }
+        let label =
+            if k == 0 { "full".to_string() } else { k.to_string() };
+        println!("{label:<8} {:>10.3}", correct as f64 / n as f64);
+    }
+    Ok(())
+}
+
+/// `check`: compile every artifact and smoke-run one batch.
+fn cmd_check(flags: &HashMap<String, String>) -> Result<()> {
+    use topkima::runtime::Engine;
+
+    let dir = flag(flags, "artifacts", "artifacts");
+    let engine = Engine::new(dir)?;
+    println!("platform {}", engine.platform());
+    let entries = engine.manifest.models.clone();
+    for entry in entries {
+        let name = entry.file.clone();
+        let model = engine.load_entry(entry)?;
+        let n_in = model.input_len();
+        let out = if model.entry.input_dtype == "i32" {
+            model.run_i32(&vec![0i32; n_in])?
+        } else {
+            model.run_f32(&vec![0f32; n_in])?
+        };
+        assert_eq!(out.len(), model.output_len(), "{name}");
+        println!(
+            "ok {name} (compile {:.0} ms, out {} f32)",
+            model.compile_ms,
+            out.len()
+        );
+    }
+    for i in 0..engine.manifest.heads.len() {
+        let head = engine.load_head(i)?;
+        let q = vec![0.1f32; head.sl * head.d_head];
+        let kt = vec![0.1f32; head.sl * head.d_head];
+        let v = vec![0.1f32; head.sl * head.d_head];
+        let out = head.run(&q, &kt, &v)?;
+        assert_eq!(out.len(), head.sl * head.d_head);
+        println!("ok attention_head k={} ({} f32)", head.k, out.len());
+    }
+    println!("all artifacts check out");
+    Ok(())
+}

@@ -1,0 +1,237 @@
+//! Transformer workload descriptors (the shapes the fabric executes).
+//!
+//! The paper evaluates one attention module of BERT-base on SQuAD
+//! (SL = 384, d_model = 768, 12 heads, d_k = 64) — "transformer is built
+//! by stacking attention modules", so HW performance is reported for one
+//! module. This module describes that workload (plus DistilBERT / ViT
+//! variants and the small trained models) as a list of GEMM ops tagged
+//! with their fabric placement (RRAM for static weights, SRAM for the
+//! per-input K^T / V), which `crate::sim` executes.
+
+/// Where an operand matrix lives (Sec. III-A mapping).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    /// Static weights, programmed once (W_Q, W_K, W_V): RRAM crossbars.
+    Rram,
+    /// Per-input matrices, rewritten every sample (K^T, V): SRAM.
+    Sram,
+}
+
+/// Operation kind within the attention module.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    /// X·W_{Q,K,V} projection (RRAM).
+    Projection,
+    /// Q·K^T score MAC + softmax (the topkima-SM or a baseline).
+    ScoreSoftmax,
+    /// A·V aggregation (SRAM; A is k-sparse per row after topkima).
+    Aggregate,
+}
+
+/// One GEMM-shaped unit of work: `[m × inner] · [inner × n]`.
+#[derive(Clone, Copy, Debug)]
+pub struct Op {
+    pub kind: OpKind,
+    pub placement: Placement,
+    pub m: usize,
+    pub inner: usize,
+    pub n: usize,
+    /// Concurrent instances (e.g. 12 heads running in parallel).
+    pub instances: usize,
+    /// Fraction of the A operand that is non-zero (1.0 normally;
+    /// k/SL for A·V after top-k sparsification).
+    pub a_density: f64,
+}
+
+impl Op {
+    /// Multiply-accumulate ops (2 per MAC) across all instances.
+    pub fn flops(&self) -> f64 {
+        2.0 * (self.m * self.inner * self.n) as f64 * self.instances as f64
+            * self.a_density.max(1e-12).min(1.0).max(
+                // projections/scores are dense regardless of a_density
+                if self.kind == OpKind::Aggregate { 0.0 } else { 1.0 },
+            )
+    }
+}
+
+/// Transformer architecture description.
+#[derive(Clone, Copy, Debug)]
+pub struct TransformerConfig {
+    pub name: &'static str,
+    pub seq_len: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    /// topkima winners per softmax row (0 = dense softmax).
+    pub topk: usize,
+}
+
+impl TransformerConfig {
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// BERT-base on SQuAD — the paper's HW evaluation workload.
+    pub fn bert_base() -> Self {
+        TransformerConfig {
+            name: "bert-base",
+            seq_len: 384,
+            d_model: 768,
+            n_heads: 12,
+            n_layers: 12,
+            topk: 5,
+        }
+    }
+
+    /// DistilBERT (6 layers, same width).
+    pub fn distilbert() -> Self {
+        TransformerConfig {
+            name: "distilbert",
+            seq_len: 384,
+            d_model: 768,
+            n_heads: 12,
+            n_layers: 6,
+            topk: 5,
+        }
+    }
+
+    /// ViT-base on 224×224/16 (SL = 197).
+    pub fn vit_base() -> Self {
+        TransformerConfig {
+            name: "vit-base",
+            seq_len: 197,
+            d_model: 768,
+            n_heads: 12,
+            n_layers: 12,
+            topk: 5,
+        }
+    }
+
+    /// The small trained model exported by `python/compile/aot.py`.
+    pub fn bert_tiny() -> Self {
+        TransformerConfig {
+            name: "bert-tiny",
+            seq_len: 64,
+            d_model: 128,
+            n_heads: 4,
+            n_layers: 3,
+            topk: 5,
+        }
+    }
+
+    /// Same workload at a different sequence length (SL scaling studies;
+    /// "GPT-3.5 has SL = 4096").
+    pub fn with_seq_len(mut self, sl: usize) -> Self {
+        self.seq_len = sl;
+        self
+    }
+
+    /// The ops of ONE attention module (Fig 4g/h categories).
+    pub fn attention_ops(&self) -> Vec<Op> {
+        let sl = self.seq_len;
+        let d = self.d_model;
+        let dh = self.d_head();
+        let h = self.n_heads;
+        let a_density = if self.topk == 0 {
+            1.0
+        } else {
+            (self.topk as f64 / sl as f64).min(1.0)
+        };
+        vec![
+            // X·W_Q, X·W_K, X·W_V: three [sl×d]·[d×d] projections on RRAM
+            Op {
+                kind: OpKind::Projection,
+                placement: Placement::Rram,
+                m: sl,
+                inner: d,
+                n: d,
+                instances: 3,
+                a_density: 1.0,
+            },
+            // Q·K^T per head: [sl×dh]·[dh×sl] on SRAM (the topkima macro)
+            Op {
+                kind: OpKind::ScoreSoftmax,
+                placement: Placement::Sram,
+                m: sl,
+                inner: dh,
+                n: sl,
+                instances: h,
+                a_density: 1.0,
+            },
+            // A·V per head: [sl×sl]·[sl×dh], A is k-sparse per row
+            Op {
+                kind: OpKind::Aggregate,
+                placement: Placement::Sram,
+                m: sl,
+                inner: sl,
+                n: dh,
+                instances: h,
+                a_density,
+            },
+        ]
+    }
+
+    /// Total MAC flops of one attention module (dense equivalent — the
+    /// basis for TOPS so numbers are comparable to Table I).
+    pub fn attention_flops_dense(&self) -> f64 {
+        let sl = self.seq_len as f64;
+        let d = self.d_model as f64;
+        let dh = self.d_head() as f64;
+        let h = self.n_heads as f64;
+        2.0 * (3.0 * sl * d * d + h * sl * dh * sl + h * sl * sl * dh)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bert_base_matches_paper_shapes() {
+        let c = TransformerConfig::bert_base();
+        assert_eq!(c.d_head(), 64);
+        // Q size of one head: 384×64; K^T: 64×384 (Sec. IV-B)
+        let ops = c.attention_ops();
+        let score = &ops[1];
+        assert_eq!((score.m, score.inner, score.n), (384, 64, 384));
+        assert_eq!(score.instances, 12);
+    }
+
+    #[test]
+    fn a_density_is_k_over_sl() {
+        let c = TransformerConfig::bert_base();
+        let agg = c.attention_ops()[2];
+        assert!((agg.a_density - 5.0 / 384.0).abs() < 1e-12);
+        let dense = TransformerConfig { topk: 0, ..c };
+        assert_eq!(dense.attention_ops()[2].a_density, 1.0);
+    }
+
+    #[test]
+    fn flops_accounting() {
+        let c = TransformerConfig::bert_base();
+        let want = 2.0
+            * (3.0 * 384.0 * 768.0 * 768.0
+                + 12.0 * 384.0 * 64.0 * 384.0
+                + 12.0 * 384.0 * 384.0 * 64.0);
+        assert!((c.attention_flops_dense() - want).abs() < 1.0);
+        // projections dominate the op count
+        let ops = c.attention_ops();
+        assert!(ops[0].flops() > ops[1].flops());
+    }
+
+    #[test]
+    fn seq_len_override() {
+        let c = TransformerConfig::bert_base().with_seq_len(4096);
+        assert_eq!(c.seq_len, 4096);
+        assert_eq!(c.name, "bert-base");
+    }
+
+    #[test]
+    fn aggregate_flops_honors_sparsity() {
+        let c = TransformerConfig::bert_base();
+        let agg = c.attention_ops()[2];
+        let dense_flops =
+            2.0 * (agg.m * agg.inner * agg.n * agg.instances) as f64;
+        assert!(agg.flops() < dense_flops * 0.05);
+    }
+}

@@ -1,0 +1,173 @@
+//! Quantization math — the rust mirror of `python/compile/quant.py`.
+//!
+//! The trained network (QAT in JAX) and the circuit simulator must agree
+//! **bit-for-bit** on quantized values; this module re-implements the same
+//! grids: 5-bit signed PWM inputs, 15-level (-7..7) ternary-cell weights
+//! with 1/2/4 input scaling, and the n-bit ramp-ADC transfer function.
+//! `rust/tests/parity.rs` cross-checks against vectors exported from the
+//! python side.
+
+/// Bit-width of Q activations applied as PWM word-line pulses.
+pub const N_BITS_INPUT: u32 = 5;
+/// Bit-width of the ramp in-memory ADC.
+pub const N_BITS_ADC: u32 = 5;
+/// Ternary cells ganged per K^T weight (input pulse scales 1, 2, 4).
+pub const CELLS_PER_WEIGHT: usize = 3;
+/// Weight magnitude range: -7..=7 (15 levels ≈ 4 bits).
+pub const WEIGHT_LEVELS: i32 = (1 << CELLS_PER_WEIGHT) - 1;
+/// Per-cell input pulse scale factors.
+pub const CELL_SCALES: [i32; CELLS_PER_WEIGHT] = [1, 2, 4];
+
+/// Largest positive code of a signed `n_bits` grid (symmetric).
+pub fn qmax(n_bits: u32) -> i32 {
+    (1 << (n_bits - 1)) - 1
+}
+
+/// Scale mapping `max|x|` onto the top code of a signed n-bit grid.
+pub fn symmetric_scale(xs: &[f32], n_bits: u32) -> f32 {
+    let amax = xs.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    amax.max(1e-8) / qmax(n_bits) as f32
+}
+
+/// Integer code of one value on a signed n-bit grid (round-to-nearest,
+/// clip). `round()` here matches numpy/jax `jnp.round` for our inputs
+/// (ties away from zero vs banker's rounding differ only exactly at .5,
+/// which calibrated scales make measure-zero; parity tests confirm).
+pub fn quantize_code(x: f32, scale: f32, n_bits: u32) -> i32 {
+    let q = (x / scale).round() as i32;
+    q.clamp(-qmax(n_bits), qmax(n_bits))
+}
+
+/// Fake-quant one value: code * scale (the float the network computes).
+pub fn fake_quant(x: f32, scale: f32, n_bits: u32) -> f32 {
+    quantize_code(x, scale, n_bits) as f32 * scale
+}
+
+/// 5-bit signed PWM code of an activation.
+pub fn pwm_code(x: f32, scale: f32) -> i32 {
+    quantize_code(x, scale, N_BITS_INPUT)
+}
+
+/// 15-level ternary-cell weight code (-7..=7).
+pub fn weight_code(w: f32, scale: f32) -> i32 {
+    let q = (w / scale).round() as i32;
+    q.clamp(-WEIGHT_LEVELS, WEIGHT_LEVELS)
+}
+
+/// Decompose a weight code into its 3 ternary cells (sign-magnitude over
+/// bit planes); `sum(cell[i] * CELL_SCALES[i])` reconstructs the code.
+pub fn pack_ternary_cells(code: i32) -> [i8; CELLS_PER_WEIGHT] {
+    debug_assert!((-WEIGHT_LEVELS..=WEIGHT_LEVELS).contains(&code));
+    let sign = code.signum() as i8;
+    let mag = code.unsigned_abs();
+    let mut cells = [0i8; CELLS_PER_WEIGHT];
+    for (i, cell) in cells.iter_mut().enumerate() {
+        *cell = ((mag >> i) & 1) as i8 * sign;
+    }
+    cells
+}
+
+/// Inverse of [`pack_ternary_cells`].
+pub fn unpack_ternary_cells(cells: &[i8; CELLS_PER_WEIGHT]) -> i32 {
+    cells
+        .iter()
+        .zip(CELL_SCALES.iter())
+        .map(|(&c, &s)| c as i32 * s)
+        .sum()
+}
+
+/// Ramp-ADC transfer function: voltage → output code.
+///
+/// Mid-tread quantizer over `[-full_scale, +full_scale]`; the ramp has
+/// `2^n` steps so codes span `-(qmax+1) ..= qmax` like the python mirror.
+pub fn adc_code(v: f32, full_scale: f32, n_bits: u32) -> i32 {
+    let lsb = full_scale / qmax(n_bits) as f32;
+    let q = (v / lsb).round() as i32;
+    q.clamp(-(qmax(n_bits) + 1), qmax(n_bits))
+}
+
+/// Ramp-ADC transfer function returning the reconstructed voltage.
+pub fn adc_quantize(v: f32, full_scale: f32, n_bits: u32) -> f32 {
+    let lsb = full_scale / qmax(n_bits) as f32;
+    adc_code(v, full_scale, n_bits) as f32 * lsb
+}
+
+/// Quantized MAC of one activation row against one weight column —
+/// integer arithmetic exactly as the bitlines accumulate it.
+pub fn mac_codes(acts: &[i32], weights: &[i32]) -> i64 {
+    debug_assert_eq!(acts.len(), weights.len());
+    acts.iter()
+        .zip(weights)
+        .map(|(&a, &w)| a as i64 * w as i64)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qmax_values() {
+        assert_eq!(qmax(5), 15);
+        assert_eq!(qmax(8), 127);
+    }
+
+    #[test]
+    fn codes_clip_to_grid() {
+        assert_eq!(quantize_code(100.0, 1.0, 5), 15);
+        assert_eq!(quantize_code(-100.0, 1.0, 5), -15);
+        assert_eq!(quantize_code(0.49, 1.0, 5), 0);
+        assert_eq!(quantize_code(0.51, 1.0, 5), 1);
+    }
+
+    #[test]
+    fn ternary_roundtrip_all_codes() {
+        for code in -7..=7 {
+            let cells = pack_ternary_cells(code);
+            assert!(cells.iter().all(|c| (-1..=1).contains(c)));
+            assert_eq!(unpack_ternary_cells(&cells), code);
+        }
+    }
+
+    #[test]
+    fn adc_full_scale_hits_top_code() {
+        assert_eq!(adc_code(1.0, 1.0, 5), 15);
+        assert_eq!(adc_code(-1.0, 1.0, 5), -15);
+        assert_eq!(adc_code(0.0, 1.0, 5), 0);
+    }
+
+    #[test]
+    fn adc_monotonic() {
+        let mut last = i32::MIN;
+        for i in -200..=200 {
+            let c = adc_code(i as f32 / 100.0, 1.0, 5);
+            assert!(c >= last);
+            last = c;
+        }
+    }
+
+    #[test]
+    fn fake_quant_error_within_half_lsb() {
+        let scale = 0.1;
+        for i in -150..=150 {
+            let x = i as f32 / 100.0;
+            if x.abs() <= 15.0 * scale {
+                assert!((fake_quant(x, scale, 5) - x).abs() <= scale / 2.0 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn mac_codes_matches_naive() {
+        let a = [1, -3, 15, 0, 7];
+        let w = [7, -7, 2, 5, -1];
+        assert_eq!(mac_codes(&a, &w), 1 * 7 + 21 + 30 + 0 - 7);
+    }
+
+    #[test]
+    fn symmetric_scale_maps_max_to_top() {
+        let xs = [0.3f32, -1.5, 0.7];
+        let s = symmetric_scale(&xs, 5);
+        assert_eq!(quantize_code(-1.5, s, 5), -15);
+    }
+}

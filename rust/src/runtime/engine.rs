@@ -1,0 +1,170 @@
+//! PJRT engine: compile-once executable cache + typed execution.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{Manifest, ModelEntry};
+
+/// A compiled model executable plus its I/O metadata.
+pub struct LoadedModel {
+    pub entry: ModelEntry,
+    exe: xla::PjRtLoadedExecutable,
+    /// Wall time spent parsing + compiling, for the perf log.
+    pub compile_ms: f64,
+}
+
+impl LoadedModel {
+    /// Execute on f32 inputs (ViT family): `x` must have
+    /// `entry.input_shape` elements in row-major order.
+    pub fn run_f32(&self, x: &[f32]) -> Result<Vec<f32>> {
+        let lit = xla::Literal::vec1(x).reshape(&shape_i64(
+            &self.entry.input_shape,
+        ))?;
+        self.execute(lit)
+    }
+
+    /// Execute on i32 inputs (BERT family).
+    pub fn run_i32(&self, x: &[i32]) -> Result<Vec<f32>> {
+        let lit = xla::Literal::vec1(x).reshape(&shape_i64(
+            &self.entry.input_shape,
+        ))?;
+        self.execute(lit)
+    }
+
+    fn execute(&self, lit: xla::Literal) -> Result<Vec<f32>> {
+        let result =
+            self.exe.execute::<xla::Literal>(&[lit])?[0][0]
+                .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → 1-tuple output.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Expected input element count.
+    pub fn input_len(&self) -> usize {
+        self.entry.input_shape.iter().product()
+    }
+
+    /// Expected output element count.
+    pub fn output_len(&self) -> usize {
+        self.entry.output_shape.iter().product()
+    }
+}
+
+fn shape_i64(shape: &[usize]) -> Vec<i64> {
+    shape.iter().map(|&s| s as i64).collect()
+}
+
+/// PJRT CPU client + compiled-executable cache keyed by artifact file.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, ()>>,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifact directory.
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Engine> {
+        let manifest = Manifest::load(&artifact_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("creating PJRT CPU client: {e}"))?;
+        Ok(Engine { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one model executable by (family, k, batch).
+    pub fn load(&self, model: &str, k: usize, batch: usize)
+        -> Result<LoadedModel>
+    {
+        let entry = self
+            .manifest
+            .find(model, k, batch)
+            .ok_or_else(|| {
+                anyhow!("no artifact for model={model} k={k} batch={batch}")
+            })?
+            .clone();
+        self.load_entry(entry)
+    }
+
+    /// Load + compile a specific manifest entry.
+    pub fn load_entry(&self, entry: ModelEntry) -> Result<LoadedModel> {
+        let path = self.manifest.dir.join(&entry.file);
+        if !path.exists() {
+            bail!("artifact file missing: {}", path.display());
+        }
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", path.display()))?;
+        let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(entry.file.clone(), ());
+        Ok(LoadedModel { entry, exe, compile_ms })
+    }
+
+    /// Load the fused Pallas attention-head artifact with index `idx`.
+    pub fn load_head(&self, idx: usize) -> Result<AttentionHead> {
+        let h = self
+            .manifest
+            .heads
+            .get(idx)
+            .ok_or_else(|| anyhow!("no attention head at index {idx}"))?
+            .clone();
+        let path = self.manifest.dir.join(&h.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", path.display()))?;
+        Ok(AttentionHead { sl: h.sl, d_head: h.d_head, k: h.k, exe })
+    }
+
+    /// Artifact files compiled so far (diagnostics).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+/// A compiled fused topkima attention head (the L1 kernel via PJRT).
+pub struct AttentionHead {
+    pub sl: usize,
+    pub d_head: usize,
+    pub k: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl AttentionHead {
+    /// Run one head: q [sl, d], kt [d, sl], v [sl, d] row-major.
+    pub fn run(&self, q: &[f32], kt: &[f32], v: &[f32]) -> Result<Vec<f32>> {
+        let (sl, d) = (self.sl as i64, self.d_head as i64);
+        let ql = xla::Literal::vec1(q).reshape(&[sl, d])?;
+        let ktl = xla::Literal::vec1(kt).reshape(&[d, sl])?;
+        let vl = xla::Literal::vec1(v).reshape(&[sl, d])?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[ql, ktl, vl])?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}

@@ -1,0 +1,363 @@
+//! Artifact manifest + eval-set loading (the contract with `aot.py`).
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One exported model executable: family (vit/bert) × topkima-k × batch.
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub file: String,
+    pub model: String,
+    pub kind: String,
+    pub k: usize,
+    pub batch: usize,
+    pub input_shape: Vec<usize>,
+    pub input_dtype: String,
+    pub output_shape: Vec<usize>,
+}
+
+/// One exported fused Pallas attention head.
+#[derive(Clone, Debug)]
+pub struct HeadEntry {
+    pub file: String,
+    pub k: usize,
+    pub sl: usize,
+    pub d_head: usize,
+}
+
+/// Checkpoint metadata for one model family.
+#[derive(Clone, Debug)]
+pub struct CheckpointInfo {
+    pub accuracy: f64,
+    pub params: usize,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: Vec<ModelEntry>,
+    pub heads: Vec<HeadEntry>,
+    pub checkpoints: BTreeMap<String, CheckpointInfo>,
+    pub eval_sets: BTreeMap<String, String>, // family -> eval json file
+}
+
+impl Manifest {
+    /// Load and validate the manifest in `dir`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let root = Json::parse(&text)
+            .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+
+        let mut models = Vec::new();
+        for m in root.get("models").as_arr().unwrap_or(&[]) {
+            let input = m.get("input");
+            models.push(ModelEntry {
+                file: req_str(m, "file")?,
+                model: req_str(m, "model")?,
+                kind: m.get("kind").as_str().unwrap_or("").to_string(),
+                k: m.get("k").as_usize().unwrap_or(0),
+                batch: m.get("batch").as_usize().unwrap_or(0),
+                input_shape: shape_of(input.get("shape")),
+                input_dtype: input
+                    .get("dtype")
+                    .as_str()
+                    .unwrap_or("f32")
+                    .to_string(),
+                output_shape: shape_of(m.get("output_shape")),
+            });
+        }
+
+        let mut heads = Vec::new();
+        for h in root.get("attention_heads").as_arr().unwrap_or(&[]) {
+            heads.push(HeadEntry {
+                file: req_str(h, "file")?,
+                k: h.get("k").as_usize().unwrap_or(0),
+                sl: h.get("sl").as_usize().unwrap_or(0),
+                d_head: h.get("d_head").as_usize().unwrap_or(0),
+            });
+        }
+
+        let mut checkpoints = BTreeMap::new();
+        if let Some(obj) = root.get("checkpoints").as_obj() {
+            for (name, c) in obj {
+                checkpoints.insert(
+                    name.clone(),
+                    CheckpointInfo {
+                        accuracy: c.get("accuracy").as_f64().unwrap_or(0.0),
+                        params: c.get("params").as_usize().unwrap_or(0),
+                    },
+                );
+            }
+        }
+
+        let mut eval_sets = BTreeMap::new();
+        if let Some(obj) = root.get("eval_sets").as_obj() {
+            for (name, _) in obj {
+                eval_sets
+                    .insert(name.clone(), format!("eval_{name}.json"));
+            }
+        }
+
+        if models.is_empty() {
+            bail!("manifest {} lists no models", path.display());
+        }
+        Ok(Manifest { dir, models, heads, checkpoints, eval_sets })
+    }
+
+    /// Find a model executable by (family, k, batch).
+    pub fn find(&self, model: &str, k: usize, batch: usize)
+        -> Option<&ModelEntry>
+    {
+        self.models
+            .iter()
+            .find(|m| m.model == model && m.k == k && m.batch == batch)
+    }
+
+    /// All batch sizes available for (family, k), ascending — the
+    /// batcher's bucket list.
+    pub fn batch_sizes(&self, model: &str, k: usize) -> Vec<usize> {
+        let mut sizes: Vec<usize> = self
+            .models
+            .iter()
+            .filter(|m| m.model == model && m.k == k)
+            .map(|m| m.batch)
+            .collect();
+        sizes.sort_unstable();
+        sizes.dedup();
+        sizes
+    }
+
+    /// All k values exported for a family.
+    pub fn k_values(&self, model: &str) -> Vec<usize> {
+        let mut ks: Vec<usize> = self
+            .models
+            .iter()
+            .filter(|m| m.model == model)
+            .map(|m| m.k)
+            .collect();
+        ks.sort_unstable();
+        ks.dedup();
+        ks
+    }
+
+    /// Load the exported eval split for a family.
+    pub fn eval_set(&self, model: &str) -> Result<EvalSet> {
+        let file = self
+            .eval_sets
+            .get(model)
+            .ok_or_else(|| anyhow!("no eval set for {model}"))?;
+        EvalSet::load(self.dir.join(file))
+    }
+}
+
+fn req_str(v: &Json, key: &str) -> Result<String> {
+    v.get(key)
+        .as_str()
+        .map(str::to_string)
+        .ok_or_else(|| anyhow!("manifest entry missing '{key}'"))
+}
+
+fn shape_of(v: &Json) -> Vec<usize> {
+    v.as_arr()
+        .map(|a| a.iter().filter_map(Json::as_usize).collect())
+        .unwrap_or_default()
+}
+
+/// The synthetic eval split exported by `aot.py` (x/y flat binaries +
+/// JSON shape header).
+#[derive(Clone, Debug)]
+pub struct EvalSet {
+    pub kind: String,
+    pub x_shape: Vec<usize>,
+    pub y_shape: Vec<usize>,
+    /// f32 inputs (vit) — empty for bert.
+    pub x_f32: Vec<f32>,
+    /// i32 inputs (bert) — empty for vit.
+    pub x_i32: Vec<i32>,
+    pub y_i32: Vec<i32>,
+}
+
+impl EvalSet {
+    pub fn load(header: impl AsRef<Path>) -> Result<EvalSet> {
+        let header = header.as_ref();
+        let dir = header.parent().unwrap_or_else(|| Path::new("."));
+        let text = fs::read_to_string(header)
+            .with_context(|| format!("reading {}", header.display()))?;
+        let meta = Json::parse(&text)
+            .map_err(|e| anyhow!("parsing {}: {e}", header.display()))?;
+        let kind = meta.get("kind").as_str().unwrap_or("").to_string();
+        let x_dtype = meta.get("x_dtype").as_str().unwrap_or("f32");
+        let x_shape = shape_of(meta.get("x_shape"));
+        let y_shape = shape_of(meta.get("y_shape"));
+        let x_file = dir.join(
+            meta.get("x_file").as_str().unwrap_or("missing"));
+        let y_file = dir.join(
+            meta.get("y_file").as_str().unwrap_or("missing"));
+
+        let x_raw = fs::read(&x_file)
+            .with_context(|| format!("reading {}", x_file.display()))?;
+        let y_raw = fs::read(&y_file)
+            .with_context(|| format!("reading {}", y_file.display()))?;
+
+        let n_x: usize = x_shape.iter().product();
+        let (x_f32, x_i32) = match x_dtype {
+            "f32" => (bytes_to_f32(&x_raw, n_x)?, Vec::new()),
+            "i32" => (Vec::new(), bytes_to_i32(&x_raw, n_x)?),
+            other => bail!("unsupported x dtype {other}"),
+        };
+        let n_y: usize = y_shape.iter().product();
+        let y_i32 = bytes_to_i32(&y_raw, n_y)?;
+
+        Ok(EvalSet { kind, x_shape, y_shape, x_f32, x_i32, y_i32 })
+    }
+
+    /// Number of eval samples.
+    pub fn len(&self) -> usize {
+        *self.x_shape.first().unwrap_or(&0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Elements per sample in x.
+    pub fn x_stride(&self) -> usize {
+        self.x_shape.iter().skip(1).product()
+    }
+
+    /// Elements per sample in y (1 for labels, 2 for spans).
+    pub fn y_stride(&self) -> usize {
+        self.y_shape.iter().skip(1).product::<usize>().max(1)
+    }
+}
+
+fn bytes_to_f32(raw: &[u8], n: usize) -> Result<Vec<f32>> {
+    if raw.len() != n * 4 {
+        bail!("expected {} bytes, got {}", n * 4, raw.len());
+    }
+    Ok(raw
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn bytes_to_i32(raw: &[u8], n: usize) -> Result<Vec<i32>> {
+    if raw.len() != n * 4 {
+        bail!("expected {} bytes, got {}", n * 4, raw.len());
+    }
+    Ok(raw
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("topkima_test_{name}"));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn write(path: &Path, bytes: &[u8]) {
+        let mut f = fs::File::create(path).unwrap();
+        f.write_all(bytes).unwrap();
+    }
+
+    #[test]
+    fn manifest_roundtrip() {
+        let d = tmpdir("manifest");
+        write(
+            &d.join("manifest.json"),
+            br#"{
+ "models": [
+  {"file": "bert_k5_b4.hlo.txt", "model": "bert", "kind": "bert",
+   "k": 5, "batch": 4,
+   "input": {"shape": [4, 64], "dtype": "i32"},
+   "output_shape": [4, 64, 2]},
+  {"file": "bert_k1_b4.hlo.txt", "model": "bert", "kind": "bert",
+   "k": 1, "batch": 4,
+   "input": {"shape": [4, 64], "dtype": "i32"},
+   "output_shape": [4, 64, 2]}
+ ],
+ "attention_heads": [{"file": "attention_head_k5.hlo.txt", "k": 5,
+                      "sl": 64, "d_head": 32}],
+ "checkpoints": {"bert": {"accuracy": 0.93, "params": 100}},
+ "eval_sets": {"bert": {"x_file": "eval_bert_x.bin"}}
+}"#,
+        );
+        let m = Manifest::load(&d).unwrap();
+        assert_eq!(m.models.len(), 2);
+        assert!(m.find("bert", 5, 4).is_some());
+        assert!(m.find("bert", 5, 8).is_none());
+        assert_eq!(m.k_values("bert"), vec![1, 5]);
+        assert_eq!(m.batch_sizes("bert", 5), vec![4]);
+        assert_eq!(m.heads.len(), 1);
+        assert!((m.checkpoints["bert"].accuracy - 0.93).abs() < 1e-9);
+    }
+
+    #[test]
+    fn manifest_missing_file_errors() {
+        let d = tmpdir("missing");
+        assert!(Manifest::load(&d).is_err());
+    }
+
+    #[test]
+    fn manifest_empty_models_rejected() {
+        let d = tmpdir("empty");
+        write(&d.join("manifest.json"), br#"{"models": []}"#);
+        assert!(Manifest::load(&d).is_err());
+    }
+
+    #[test]
+    fn eval_set_roundtrip_i32() {
+        let d = tmpdir("eval");
+        let xs: Vec<i32> = (0..8).collect();
+        let ys: Vec<i32> = vec![1, 2, 3, 4];
+        let xb: Vec<u8> =
+            xs.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let yb: Vec<u8> =
+            ys.iter().flat_map(|v| v.to_le_bytes()).collect();
+        write(&d.join("eval_bert_x.bin"), &xb);
+        write(&d.join("eval_bert_y.bin"), &yb);
+        write(
+            &d.join("eval_bert.json"),
+            br#"{"x_file": "eval_bert_x.bin", "y_file": "eval_bert_y.bin",
+                 "x_shape": [2, 4], "y_shape": [2, 2],
+                 "x_dtype": "i32", "y_dtype": "i32", "kind": "bert"}"#,
+        );
+        let e = EvalSet::load(d.join("eval_bert.json")).unwrap();
+        assert_eq!(e.len(), 2);
+        assert_eq!(e.x_stride(), 4);
+        assert_eq!(e.y_stride(), 2);
+        assert_eq!(e.x_i32, xs);
+        assert_eq!(e.y_i32, ys);
+    }
+
+    #[test]
+    fn eval_set_size_mismatch_rejected() {
+        let d = tmpdir("badsize");
+        write(&d.join("x.bin"), &[0u8; 7]);
+        write(&d.join("y.bin"), &[0u8; 8]);
+        write(
+            &d.join("eval.json"),
+            br#"{"x_file": "x.bin", "y_file": "y.bin",
+                 "x_shape": [2, 1], "y_shape": [2],
+                 "x_dtype": "f32", "y_dtype": "i32", "kind": "vit"}"#,
+        );
+        assert!(EvalSet::load(d.join("eval.json")).is_err());
+    }
+}

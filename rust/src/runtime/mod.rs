@@ -1,0 +1,19 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! This is the only module that touches the `xla` crate. The interchange
+//! format is **HLO text** (not serialized protos — xla_extension 0.5.1
+//! rejects jax ≥ 0.5's 64-bit instruction ids; the text parser reassigns
+//! them). Executables are compiled once at load and cached; the request
+//! path is pure rust + PJRT, python never runs.
+//!
+//! * [`Manifest`] — parsed `artifacts/manifest.json` (models per (family,
+//!   k, batch), attention heads, eval sets, checkpoint metadata).
+//! * [`Engine`] — a PJRT CPU client plus the compiled executable cache.
+//! * [`EvalSet`] — the exported synthetic eval split (flat binary + JSON
+//!   header) replayed by the serving examples.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, LoadedModel};
+pub use manifest::{EvalSet, Manifest, ModelEntry};

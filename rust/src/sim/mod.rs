@@ -1,0 +1,543 @@
+//! System-level simulator: one attention module on the Topkima-Former
+//! fabric, with per-component and per-operation breakdowns (Figs 4e–h)
+//! and the Table I system metrics (TOPS, TOPS/W).
+//!
+//! NeuroSim-style analytic accounting: each op contributes latency and
+//! energy terms to a [`Ledger`] keyed by [`Component`]; operations are
+//! `X·W_{Q,K,V}` (RRAM projections), `Q·K^T + softmax` (the SRAM
+//! topkima-SM or a baseline macro), and `A·V` (SRAM, k-sparse A).
+//!
+//! Calibration note (DESIGN.md §2): the macro-level models in
+//! `crate::circuits` carry the paper's 65 nm SPICE constants; the system
+//! level is the paper's 32 nm NeuroSim setup, so `SimConfig::energy`
+//! rescales unit energies — the *structure* of the accounting is shared.
+
+pub mod report;
+
+use crate::arch::{ArchConfig, Buffer, Component, HTree, Ledger};
+use crate::circuits::Energy;
+use crate::model::{Op, OpKind, TransformerConfig};
+use crate::scale::ScaleImpl;
+
+/// Which softmax macro the score stage uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SoftmaxKind {
+    Conventional,
+    Dtopk,
+    Topkima,
+}
+
+impl SoftmaxKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SoftmaxKind::Conventional => "conv-SM",
+            SoftmaxKind::Dtopk => "Dtopk-SM",
+            SoftmaxKind::Topkima => "topkima-SM",
+        }
+    }
+}
+
+/// Simulator configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SimConfig {
+    pub arch: ArchConfig,
+    pub softmax: SoftmaxKind,
+    pub scale: ScaleImpl,
+    /// Measured early-stop fraction (paper: α ≈ 0.31 on SQuAD data).
+    pub alpha: f64,
+    /// Row-parallel weight replicas (NeuroSim speedup-vs-area knob).
+    pub rram_row_parallel: usize,
+    pub sram_row_parallel: usize,
+    /// Unit-energy table for the 32 nm system (see module doc).
+    pub energy: Energy,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            arch: ArchConfig::default(),
+            softmax: SoftmaxKind::Topkima,
+            scale: ScaleImpl::ScaleFree,
+            alpha: 0.31,
+            rram_row_parallel: 1,
+            sram_row_parallel: 1,
+            energy: system_energy(),
+        }
+    }
+}
+
+/// 32 nm system-level unit energies (scaled from the 65 nm macro table;
+/// calibrated so the full module lands near Table I's 6.70 TOPS and
+/// 16.84 TOPS/W — see EXPERIMENTS.md §Table I).
+pub fn system_energy() -> Energy {
+    Energy {
+        e_adc_cycle: 0.05,
+        e_arb_event: 0.02,
+        e_nl_elem: 1.8,
+        e_sort_cmp: 0.02,
+        e_write_cell: 0.003,
+        e_pwm_cell: 0.00001,
+        e_mac_cell: 0.00002,
+    }
+}
+
+/// Per-operation simulation result.
+#[derive(Clone, Debug)]
+pub struct OpReport {
+    pub name: &'static str,
+    pub kind: OpKind,
+    pub ledger: Ledger,
+}
+
+/// Full module simulation result.
+#[derive(Clone, Debug)]
+pub struct ModuleReport {
+    pub ops: Vec<OpReport>,
+    pub flops_dense: f64,
+    pub softmax: SoftmaxKind,
+}
+
+impl ModuleReport {
+    /// Critical-path latency: X·W, then scores, then A·V serialize;
+    /// heads within a stage are parallel (already folded into the op
+    /// ledgers).
+    pub fn latency_ns(&self) -> f64 {
+        self.ops.iter().map(|o| o.ledger.latency_ns()).sum()
+    }
+
+    pub fn energy_pj(&self) -> f64 {
+        self.ops.iter().map(|o| o.ledger.energy_pj()).sum()
+    }
+
+    /// Throughput in TOPS (dense-equivalent ops / module latency).
+    pub fn tops(&self) -> f64 {
+        self.flops_dense / self.latency_ns() * 1e-3
+    }
+
+    /// Energy efficiency in TOPS/W (= ops per pJ × constant).
+    pub fn tops_per_watt(&self) -> f64 {
+        self.flops_dense / self.energy_pj()
+    }
+
+    /// Merged per-component breakdown over all ops (Figs 4e/f).
+    pub fn by_component(&self) -> Vec<(Component, f64, f64)> {
+        let mut total = Ledger::default();
+        for op in &self.ops {
+            total.merge(&op.ledger);
+        }
+        total.by_component()
+    }
+
+    /// Per-operation (latency, energy) rows (Figs 4g/h).
+    pub fn by_operation(&self) -> Vec<(&'static str, f64, f64)> {
+        self.ops
+            .iter()
+            .map(|o| (o.name, o.ledger.latency_ns(), o.ledger.energy_pj()))
+            .collect()
+    }
+}
+
+/// Simulate one attention module.
+pub fn simulate_attention(tc: &TransformerConfig, sc: &SimConfig)
+    -> ModuleReport
+{
+    let ops = tc.attention_ops();
+    let reports = ops
+        .iter()
+        .map(|op| match op.kind {
+            OpKind::Projection => OpReport {
+                name: "X·W_QKV",
+                kind: op.kind,
+                ledger: sim_projection(op, sc),
+            },
+            OpKind::ScoreSoftmax => OpReport {
+                name: "Q·K^T + softmax",
+                kind: op.kind,
+                ledger: sim_scores(op, tc, sc),
+            },
+            OpKind::Aggregate => OpReport {
+                name: "A·V",
+                kind: op.kind,
+                ledger: sim_aggregate(op, tc, sc),
+            },
+        })
+        .collect();
+    ModuleReport {
+        ops: reports,
+        flops_dense: tc.attention_flops_dense(),
+        softmax: sc.softmax,
+    }
+}
+
+/// Activation bytes for n elements at 5-bit precision.
+fn act_bytes(n: f64) -> f64 {
+    n * 5.0 / 8.0
+}
+
+/// X·W projection on RRAM tiles (weights static, 8-bit as 4 ganged
+/// 2-bit cells; bit-serial 1-bit word-line DACs for the 5-bit inputs).
+fn sim_projection(op: &Op, sc: &SimConfig) -> Ledger {
+    let a = &sc.arch;
+    let e = &sc.energy;
+    let mut led = Ledger::default();
+    let buffer = Buffer { t_clk_ns: a.t_clk_ns(), ..Buffer::default() };
+    let htree = HTree::default();
+
+    let row_tiles = op.inner.div_ceil(a.rram_rows);
+    let cells_per_wt = a.rram_cells_per_weight() as f64;
+    let rows = (op.m as f64 / sc.rram_row_parallel as f64).ceil();
+
+    // --- synaptic array: the paper's "4x pulse width for higher weight
+    // precision" (4 ganged cells) x bit-serial input pulses. Row tiles,
+    // column tiles and the 3 W_{Q,K,V} instances all run in parallel on
+    // separate arrays; input rows serialize.
+    let pulse_ns = a.rram_read_pulse_ns
+        * cells_per_wt
+        * a.timing.n_bits_input as f64;
+    led.add(Component::SynapticArray, rows * pulse_ns, {
+        // every active cell discharges once per input row
+        let cells =
+            (op.inner * op.n * op.instances) as f64 * cells_per_wt;
+        op.m as f64 * cells * a.e_rram_cell
+    });
+
+    // --- mux + ADC: each array's ADCs are shared over rram_mux_ratio
+    // columns -> mux_ratio serialized conversion groups per input row.
+    // One SAR conversion per logical weight column per row tile.
+    let adc_ns = a.rram_mux_ratio as f64 * a.rram_adc_ns;
+    let conversions =
+        (op.m * row_tiles * op.n * op.instances) as f64;
+    led.add(Component::Adc, rows * adc_ns, conversions * a.e_rram_adc);
+    led.add(
+        Component::Mux,
+        rows * a.rram_mux_ratio as f64 * 0.1,
+        conversions * a.e_mux_switch * 0.1,
+    );
+
+    // --- accumulator: partial sums across row tiles (PE-local).
+    if row_tiles > 1 {
+        let adds = (op.m * op.n * (row_tiles - 1) * op.instances) as f64;
+        led.add(
+            Component::Accumulator,
+            rows * a.t_clk_ns(),
+            adds * a.e_accum_add,
+        );
+    }
+
+    // --- buffer + interconnect: stream X in, Q/K/V out (partials stay
+    // PE-local and are charged to the accumulator).
+    let x_bytes = act_bytes((op.m * op.inner) as f64);
+    let out_bytes = act_bytes((op.m * op.n * op.instances) as f64);
+    let traffic = x_bytes + out_bytes;
+    led.add(
+        Component::Buffer,
+        buffer.latency_ns(x_bytes) * 0.25, // mostly hidden behind compute
+        buffer.stage_energy_pj(traffic),
+    );
+    led.add(
+        Component::Interconnect,
+        htree.latency_ns(out_bytes) * 0.25,
+        htree.energy_pj(traffic),
+    );
+    let _ = e;
+    led
+}
+
+/// Q·K^T + softmax on the SRAM macro (topkima or a baseline).
+fn sim_scores(op: &Op, tc: &TransformerConfig, sc: &SimConfig) -> Ledger {
+    let a = &sc.arch;
+    let e = &sc.energy;
+    let t = &a.timing;
+    let mut led = Ledger::default();
+    let buffer = Buffer { t_clk_ns: a.t_clk_ns(), ..Buffer::default() };
+    let htree = HTree::default();
+    let d = op.n; // softmax row length = SL
+    let k = tc.topk.max(1);
+    let heads = op.instances as f64;
+    let rows = (op.m as f64 / sc.sram_row_parallel as f64).ceil();
+
+    // K^T write: depth d_k weights x 3 cells, row-by-row, once per input
+    // sample (heads in parallel on separate arrays).
+    let write_rows = op.inner * crate::quant::CELLS_PER_WEIGHT;
+    led.add(
+        Component::SynapticArray,
+        write_rows as f64 * t.t_write_row,
+        write_rows as f64 * d as f64 * heads * e.e_write_cell,
+    );
+
+    // MAC phase per Q row: PWM pulses into the array.
+    led.add(
+        Component::SynapticArray,
+        rows * t.t_pwm_input(),
+        op.m as f64
+            * (op.inner * crate::quant::CELLS_PER_WEIGHT * d) as f64
+            * heads
+            * (e.e_mac_cell + e.e_pwm_cell),
+    );
+
+    // Conversion + softmax, by macro kind.
+    let ramp_cycles = (1u64 << t.n_bits_adc) as f64;
+    let (conv_ns, conv_pj_row, softmax_ns, softmax_pj_row) = match sc.softmax
+    {
+        SoftmaxKind::Conventional => (
+            t.t_ima(),
+            d as f64 * ramp_cycles * e.e_adc_cycle,
+            d as f64 * t.t_nl_dig,
+            d as f64 * e.e_nl_elem,
+        ),
+        SoftmaxKind::Dtopk => (
+            t.t_ima() + t.t_sort(d, k),
+            d as f64 * ramp_cycles * e.e_adc_cycle
+                + crate::softmax::dtopk::sort_compare_bound(d, k)
+                    * e.e_sort_cmp,
+            k as f64 * t.t_nl_dig,
+            k as f64 * e.e_nl_elem,
+        ),
+        SoftmaxKind::Topkima => (
+            t.t_ima_arb(sc.alpha, k),
+            sc.alpha * d as f64 * ramp_cycles * e.e_adc_cycle
+                + k as f64 * e.e_arb_event,
+            k as f64 * t.t_nl_dig,
+            k as f64 * e.e_nl_elem,
+        ),
+    };
+    led.add(
+        Component::Adc,
+        rows * conv_ns,
+        op.m as f64 * heads * conv_pj_row,
+    );
+    led.add(
+        Component::Softmax,
+        rows * softmax_ns,
+        op.m as f64 * heads * softmax_pj_row,
+    );
+
+    // Scaling stage (zero for scale-free).
+    let scost = sc.scale.cost(op.m, d, t);
+    led.add(Component::Softmax, scost.latency_ns, scost.energy_pj * heads);
+
+    // Buffer + interconnect: Q staged in (double-buffered), K^T streamed
+    // to the arrays, scores out. All of it x heads — the 12 heads
+    // multiply ENERGY but not latency (parallel arrays), which is the
+    // paper's explanation for the buffer-dominated energy pie (Fig 4f).
+    let q_bytes = act_bytes((op.m * op.inner) as f64) * 2.0; // dbl-buf
+    let kt_bytes = act_bytes((op.inner * d) as f64) * 2.0;
+    let score_out = match sc.softmax {
+        SoftmaxKind::Conventional => act_bytes((op.m * d) as f64),
+        _ => act_bytes((op.m * k) as f64 * 2.0), // value + address
+    };
+    let traffic = (q_bytes + kt_bytes + score_out) * heads;
+    led.add(
+        Component::Buffer,
+        buffer.latency_ns(q_bytes + kt_bytes) * 0.5,
+        buffer.stage_energy_pj(traffic),
+    );
+    led.add(
+        Component::Interconnect,
+        htree.latency_ns(q_bytes) * 0.25,
+        htree.energy_pj(traffic),
+    );
+    led
+}
+
+/// A·V on SRAM: V written per sample, A rows are k-sparse after topkima.
+fn sim_aggregate(op: &Op, tc: &TransformerConfig, sc: &SimConfig) -> Ledger {
+    let a = &sc.arch;
+    let e = &sc.energy;
+    let t = &a.timing;
+    let mut led = Ledger::default();
+    let buffer = Buffer { t_clk_ns: a.t_clk_ns(), ..Buffer::default() };
+    let htree = HTree::default();
+    let heads = op.instances as f64;
+    let density = op.a_density;
+    let rows = (op.m as f64 / sc.sram_row_parallel as f64).ceil();
+    let _ = tc;
+
+    // V write: depth = SL weights x 3 cells split over row tiles.
+    let phys_rows = op.inner * crate::quant::CELLS_PER_WEIGHT;
+    let row_tiles =
+        phys_rows.div_ceil(a.sram_rows - a.sram_replica_rows);
+    led.add(
+        Component::SynapticArray,
+        (phys_rows as f64 / row_tiles as f64).ceil() * t.t_write_row,
+        (phys_rows * op.n) as f64 * heads * e.e_write_cell,
+    );
+
+    // MAC: sparse A rows -> only ~k word lines pulse per row (energy),
+    // but the PWM frame still spans the full window (latency).
+    led.add(
+        Component::SynapticArray,
+        rows * t.t_pwm_input(),
+        op.m as f64
+            * (op.inner as f64 * density)
+            * crate::quant::CELLS_PER_WEIGHT as f64
+            * op.n as f64
+            * heads
+            * (e.e_mac_cell + e.e_pwm_cell),
+    );
+
+    // Conversion: full ramp over d_v columns per row; row tiles convert
+    // in parallel, partials accumulate digitally.
+    led.add(
+        Component::Adc,
+        rows * t.t_ima(),
+        op.m as f64
+            * op.n as f64
+            * row_tiles as f64
+            * (1u64 << t.n_bits_adc) as f64
+            * e.e_adc_cycle
+            * heads,
+    );
+    if row_tiles > 1 {
+        led.add(
+            Component::Accumulator,
+            rows * a.t_clk_ns(),
+            (op.m * op.n * (row_tiles - 1)) as f64 * heads
+                * a.e_accum_add,
+        );
+    }
+
+    // Buffer + interconnect: sparse A in (k values + addresses per row),
+    // V staged (double-buffered), outputs to the global buffer.
+    let a_bytes =
+        act_bytes((op.m as f64) * (op.inner as f64) * density) * 2.0;
+    let v_bytes = act_bytes((op.inner * op.n) as f64) * 2.0;
+    let out_bytes = act_bytes((op.m * op.n) as f64);
+    let traffic = (a_bytes + v_bytes + out_bytes) * heads;
+    led.add(
+        Component::Buffer,
+        buffer.latency_ns(v_bytes) * 0.5,
+        buffer.stage_energy_pj(traffic),
+    );
+    led.add(
+        Component::Interconnect,
+        htree.latency_ns(out_bytes) * 0.25,
+        htree.energy_pj(traffic),
+    );
+    led
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bert() -> (TransformerConfig, SimConfig) {
+        (TransformerConfig::bert_base(), SimConfig::default())
+    }
+
+    #[test]
+    fn module_report_totals_positive() {
+        let (tc, sc) = bert();
+        let r = simulate_attention(&tc, &sc);
+        assert!(r.latency_ns() > 0.0);
+        assert!(r.energy_pj() > 0.0);
+        assert_eq!(r.ops.len(), 3);
+    }
+
+    #[test]
+    fn fig4g_xw_dominates_latency() {
+        let (tc, sc) = bert();
+        let r = simulate_attention(&tc, &sc);
+        let by_op = r.by_operation();
+        let xw = by_op[0].1;
+        assert!(xw > by_op[1].1, "X·W {} vs scores {}", xw, by_op[1].1);
+        assert!(xw > by_op[2].1, "X·W {} vs A·V {}", xw, by_op[2].1);
+    }
+
+    #[test]
+    fn fig4h_heads_dominate_energy() {
+        // QK^T + A·V energy (12 heads) > X·W energy
+        let (tc, sc) = bert();
+        let r = simulate_attention(&tc, &sc);
+        let by_op = r.by_operation();
+        assert!(
+            by_op[1].2 + by_op[2].2 > by_op[0].2,
+            "heads {} vs X·W {}",
+            by_op[1].2 + by_op[2].2,
+            by_op[0].2
+        );
+    }
+
+    #[test]
+    fn fig4h_av_cheaper_than_qkt() {
+        // sparse A makes A·V more energy-efficient than Q·K^T
+        let (tc, sc) = bert();
+        let r = simulate_attention(&tc, &sc);
+        let by_op = r.by_operation();
+        assert!(by_op[2].2 < by_op[1].2);
+    }
+
+    #[test]
+    fn fig4e_synaptic_array_dominates_latency() {
+        let (tc, sc) = bert();
+        let r = simulate_attention(&tc, &sc);
+        let by_c = r.by_component();
+        let synaptic = by_c
+            .iter()
+            .find(|x| x.0 == Component::SynapticArray)
+            .unwrap()
+            .1;
+        for (c, l, _) in &by_c {
+            if *c != Component::SynapticArray {
+                assert!(synaptic >= *l, "{} {} > synaptic {}",
+                        c.name(), l, synaptic);
+            }
+        }
+    }
+
+    #[test]
+    fn fig4f_buffer_dominates_energy() {
+        let (tc, sc) = bert();
+        let r = simulate_attention(&tc, &sc);
+        let by_c = r.by_component();
+        let buffer =
+            by_c.iter().find(|x| x.0 == Component::Buffer).unwrap().2;
+        for (c, _, e) in &by_c {
+            if *c != Component::Buffer {
+                assert!(buffer >= *e, "{} {} > buffer {}",
+                        c.name(), e, buffer);
+            }
+        }
+    }
+
+    #[test]
+    fn topkima_beats_baselines_at_module_level() {
+        let tc = TransformerConfig::bert_base();
+        let mk = |softmax| {
+            let sc = SimConfig { softmax, ..SimConfig::default() };
+            simulate_attention(&tc, &sc)
+        };
+        let topkima = mk(SoftmaxKind::Topkima);
+        let conv = mk(SoftmaxKind::Conventional);
+        let dtopk = mk(SoftmaxKind::Dtopk);
+        assert!(conv.latency_ns() > topkima.latency_ns());
+        assert!(dtopk.latency_ns() > topkima.latency_ns());
+        assert!(conv.energy_pj() > topkima.energy_pj());
+    }
+
+    #[test]
+    fn table1_ballpark() {
+        let (tc, sc) = bert();
+        let r = simulate_attention(&tc, &sc);
+        let tops = r.tops();
+        let ee = r.tops_per_watt();
+        assert!(tops > 1.0 && tops < 20.0, "TOPS {tops}");
+        assert!(ee > 4.0 && ee < 40.0, "TOPS/W {ee}");
+    }
+
+    #[test]
+    fn speedup_grows_with_seq_len() {
+        let sc_top = SimConfig::default();
+        let sc_conv = SimConfig {
+            softmax: SoftmaxKind::Conventional,
+            scale: ScaleImpl::LeftShift,
+            ..SimConfig::default()
+        };
+        let ratio = |sl: usize| {
+            let tc = TransformerConfig::bert_base().with_seq_len(sl);
+            simulate_attention(&tc, &sc_conv).latency_ns()
+                / simulate_attention(&tc, &sc_top).latency_ns()
+        };
+        assert!(ratio(1024) > ratio(256));
+    }
+}

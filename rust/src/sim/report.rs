@@ -1,0 +1,88 @@
+//! Pretty-printing for simulator results (tables the benches emit).
+
+use super::ModuleReport;
+
+/// Render a per-component breakdown table (Figs 4e/f).
+pub fn component_table(r: &ModuleReport) -> String {
+    let mut s = String::new();
+    let total_l = r.latency_ns();
+    let total_e = r.energy_pj();
+    s.push_str(&format!(
+        "{:<16} {:>14} {:>7} {:>14} {:>7}\n",
+        "component", "latency (ns)", "%", "energy (pJ)", "%"
+    ));
+    for (c, l, e) in r.by_component() {
+        if l == 0.0 && e == 0.0 {
+            continue;
+        }
+        s.push_str(&format!(
+            "{:<16} {:>14.1} {:>6.1}% {:>14.1} {:>6.1}%\n",
+            c.name(),
+            l,
+            100.0 * l / total_l,
+            e,
+            100.0 * e / total_e
+        ));
+    }
+    s.push_str(&format!(
+        "{:<16} {:>14.1} {:>7} {:>14.1}\n",
+        "TOTAL", total_l, "", total_e
+    ));
+    s
+}
+
+/// Render a per-operation breakdown table (Figs 4g/h).
+pub fn operation_table(r: &ModuleReport) -> String {
+    let mut s = String::new();
+    let total_l = r.latency_ns();
+    let total_e = r.energy_pj();
+    s.push_str(&format!(
+        "{:<18} {:>14} {:>7} {:>14} {:>7}\n",
+        "operation", "latency (ns)", "%", "energy (pJ)", "%"
+    ));
+    for (name, l, e) in r.by_operation() {
+        s.push_str(&format!(
+            "{:<18} {:>14.1} {:>6.1}% {:>14.1} {:>6.1}%\n",
+            name,
+            l,
+            100.0 * l / total_l,
+            e,
+            100.0 * e / total_e
+        ));
+    }
+    s
+}
+
+/// One-line system summary (Table I row).
+pub fn system_summary(r: &ModuleReport) -> String {
+    format!(
+        "{}: latency {:.2} µs, energy {:.2} nJ, {:.2} TOPS, {:.2} TOPS/W",
+        r.softmax.name(),
+        r.latency_ns() / 1e3,
+        r.energy_pj() / 1e3,
+        r.tops(),
+        r.tops_per_watt()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::TransformerConfig;
+    use crate::sim::{simulate_attention, SimConfig};
+
+    #[test]
+    fn tables_render() {
+        let r = simulate_attention(
+            &TransformerConfig::bert_base(),
+            &SimConfig::default(),
+        );
+        let ct = component_table(&r);
+        assert!(ct.contains("synaptic array"));
+        assert!(ct.contains("TOTAL"));
+        let ot = operation_table(&r);
+        assert!(ot.contains("X·W_QKV"));
+        let sum = system_summary(&r);
+        assert!(sum.contains("TOPS"));
+    }
+}

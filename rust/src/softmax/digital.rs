@@ -1,0 +1,136 @@
+//! Digital softmax core (Geng et al. [17] — the block downstream of the
+//! topkima macro).
+//!
+//! Functionally: exp + normalize over the values it is handed (k values
+//! from topkima, d values in the conventional macro). Cost model:
+//! `T_NL,dig` = 6.5 ns and `E_NL` = 25 pJ per element (Sec. IV-B,
+//! estimated from [13], [17]).
+
+use crate::circuits::{Energy, Timing};
+
+/// The digital exp/divide pipeline.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DigitalSoftmax {
+    pub timing: Timing,
+    pub energy: Energy,
+}
+
+impl DigitalSoftmax {
+    /// Softmax over `values`, writing probabilities into `out`
+    /// (both length n). Numerically stable (max-subtracted).
+    pub fn compute(&self, values: &[f64], out: &mut [f64]) {
+        assert_eq!(values.len(), out.len());
+        if values.is_empty() {
+            return;
+        }
+        let m = values.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut sum = 0.0;
+        for (o, &v) in out.iter_mut().zip(values) {
+            *o = (v - m).exp();
+            sum += *o;
+        }
+        for o in out.iter_mut() {
+            *o /= sum;
+        }
+    }
+
+    /// Softmax of a sparse top-k selection scattered into a dense row of
+    /// length `d`: non-selected entries are exactly zero (the core never
+    /// sees them).
+    pub fn compute_sparse(
+        &self,
+        selection: &[(usize, f64)],
+        d: usize,
+    ) -> Vec<f64> {
+        let mut dense = vec![0.0; d];
+        if selection.is_empty() {
+            return dense;
+        }
+        let m = selection
+            .iter()
+            .map(|&(_, v)| v)
+            .fold(f64::NEG_INFINITY, f64::max);
+        let mut sum = 0.0;
+        for &(_, v) in selection {
+            sum += (v - m).exp();
+        }
+        for &(i, v) in selection {
+            dense[i] = (v - m).exp() / sum;
+        }
+        dense
+    }
+
+    /// Latency of processing n elements, ns.
+    pub fn latency_ns(&self, n: usize) -> f64 {
+        n as f64 * self.timing.t_nl_dig
+    }
+
+    /// Energy of processing n elements, pJ.
+    pub fn energy_pj(&self, n: usize) -> f64 {
+        n as f64 * self.energy.e_nl_elem
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probabilities_sum_to_one() {
+        let core = DigitalSoftmax::default();
+        let vals = [1.0, 2.0, 3.0, -1.0];
+        let mut out = [0.0; 4];
+        core.compute(&vals, &mut out);
+        assert!((out.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(out[2] > out[1] && out[1] > out[0] && out[0] > out[3]);
+    }
+
+    #[test]
+    fn matches_reference_softmax() {
+        let core = DigitalSoftmax::default();
+        let vals = [0.5, -0.25, 1.75];
+        let mut out = [0.0; 3];
+        core.compute(&vals, &mut out);
+        let exps: Vec<f64> = vals.iter().map(|v| v.exp()).collect();
+        let s: f64 = exps.iter().sum();
+        for (o, e) in out.iter().zip(&exps) {
+            assert!((o - e / s).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn sparse_selection_zeros_elsewhere() {
+        let core = DigitalSoftmax::default();
+        let sel = [(2usize, 1.0), (7usize, 2.0)];
+        let dense = core.compute_sparse(&sel, 10);
+        assert_eq!(dense.iter().filter(|&&p| p > 0.0).count(), 2);
+        assert!((dense.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(dense[7] > dense[2]);
+    }
+
+    #[test]
+    fn stable_under_large_logits() {
+        let core = DigitalSoftmax::default();
+        let vals = [1000.0, 999.0];
+        let mut out = [0.0; 2];
+        core.compute(&vals, &mut out);
+        assert!(out.iter().all(|p| p.is_finite()));
+        assert!((out.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_unit_costs() {
+        let core = DigitalSoftmax::default();
+        assert!((core.latency_ns(1) - 6.5).abs() < 1e-12);
+        assert!((core.latency_ns(384) - 2496.0).abs() < 1e-9);
+        assert!((core.energy_pj(5) - 125.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_input_is_noop() {
+        let core = DigitalSoftmax::default();
+        let mut out: [f64; 0] = [];
+        core.compute(&[], &mut out);
+        assert_eq!(core.compute_sparse(&[], 4), vec![0.0; 4]);
+    }
+}

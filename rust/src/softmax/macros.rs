@@ -1,0 +1,368 @@
+//! The three assembled softmax macros of Fig 4(a).
+//!
+//! Each macro owns a programmed SRAM crossbar holding K^T and answers
+//! "given a stream of Q rows, produce attention probability rows" while
+//! accounting latency and energy:
+//!
+//! * [`ConvSm`] — conventional: full ramp conversion of all d columns,
+//!   digital softmax over all d values (`T_conv-SM`).
+//! * [`DtopkSm`] — full conversion + digital top-k sorter + k-element
+//!   softmax (Eq. 3).
+//! * [`TopkimaSm`] — the paper's macro: decreasing-ramp IMA performs the
+//!   selection during conversion, early-stops at the k-th crossing, and
+//!   hands exactly k values to the softmax (Eq. 4).
+//!
+//! All three share one crossbar + converter substrate so the comparison
+//! isolates the softmax strategy, exactly like the paper's experiment.
+
+use super::digital::DigitalSoftmax;
+use super::dtopk::{digital_topk, sort_compare_bound};
+use crate::circuits::{pwm, Energy, Timing};
+use crate::crossbar::Crossbar;
+use crate::ima::TopkimaConverter;
+use crate::util::rng::Rng;
+
+/// Accumulated latency/energy of a macro run.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MacroCost {
+    pub latency_ns: f64,
+    pub energy_pj: f64,
+    /// Mean early-stop fraction α over conversions (1.0 when no early
+    /// stop applies).
+    pub alpha: f64,
+    /// Conversions performed (rows of Q processed).
+    pub conversions: usize,
+}
+
+impl MacroCost {
+    fn absorb(&mut self, latency_ns: f64, energy_pj: f64, alpha: f64) {
+        self.latency_ns += latency_ns;
+        self.energy_pj += energy_pj;
+        self.alpha += alpha;
+        self.conversions += 1;
+    }
+
+    /// Finalize the running α sum into a mean.
+    fn finish(mut self, write_ns: f64, write_pj: f64) -> MacroCost {
+        if self.conversions > 0 {
+            self.alpha /= self.conversions as f64;
+        } else {
+            self.alpha = 1.0;
+        }
+        self.latency_ns += write_ns;
+        self.energy_pj += write_pj;
+        self
+    }
+}
+
+/// One row of macro output: dense probabilities (zeros outside the
+/// selection for the top-k macros).
+pub type ProbRow = Vec<f64>;
+
+/// Common interface of the three macros.
+pub trait SoftmaxMacro {
+    /// Process a batch of Q rows (integer PWM codes, depth d_k) into
+    /// probability rows over the crossbar's columns, with cost.
+    fn run(&self, q_rows: &[Vec<i32>], rng: &mut Rng) -> (Vec<ProbRow>, MacroCost);
+
+    /// Macro name for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Shared substrate: crossbar + converter + softmax core + unit costs.
+#[derive(Clone, Debug)]
+pub struct MacroParts {
+    pub crossbar: Crossbar,
+    pub converter: TopkimaConverter,
+    pub softmax: DigitalSoftmax,
+    pub timing: Timing,
+    pub energy: Energy,
+}
+
+impl MacroParts {
+    /// Assemble from a programmed crossbar with an ideal converter
+    /// calibrated to the tile's worst-case MAC.
+    pub fn new(crossbar: Crossbar) -> MacroParts {
+        let fs = crossbar.full_scale_mac(crate::quant::N_BITS_INPUT);
+        let converter = TopkimaConverter::ideal(crossbar.used_cols(), fs);
+        MacroParts {
+            crossbar,
+            converter,
+            softmax: DigitalSoftmax::default(),
+            timing: Timing::default(),
+            energy: Energy::default(),
+        }
+    }
+
+    /// Swap in a noisy converter (Fig 4b experiments).
+    pub fn with_noise(mut self, noise: crate::ima::ColumnNoise) -> MacroParts {
+        self.converter.noise = noise;
+        self
+    }
+
+    fn mac_phase_cost(&self, q_row: &[i32]) -> (f64, f64) {
+        let lat = pwm::vector_duration_ns(q_row, &self.timing);
+        let cells = self.crossbar.depth() * crate::quant::CELLS_PER_WEIGHT;
+        let e_mac =
+            (self.crossbar.used_cols() * cells) as f64 * self.energy.e_mac_cell;
+        let e_pwm = pwm::vector_energy_pj(q_row, self.energy.e_pwm_cell)
+            * self.crossbar.used_cols() as f64;
+        (lat, e_mac + e_pwm)
+    }
+
+    fn write_cost(&self) -> (f64, f64) {
+        (
+            self.crossbar.write_latency_ns(&self.timing),
+            self.crossbar.write_energy_pj(self.energy.e_write_cell),
+        )
+    }
+}
+
+/// Conventional softmax macro (`T_conv-SM`).
+pub struct ConvSm(pub MacroParts);
+
+impl SoftmaxMacro for ConvSm {
+    fn run(&self, q_rows: &[Vec<i32>], rng: &mut Rng) -> (Vec<ProbRow>, MacroCost) {
+        let p = &self.0;
+        let d = p.crossbar.used_cols();
+        let mut cost = MacroCost::default();
+        let mut probs = Vec::with_capacity(q_rows.len());
+        let mut macs = vec![0i64; d];
+        let lsb = p.converter.ramp.lsb();
+        for q in q_rows {
+            let (mac_ns, mac_pj) = p.mac_phase_cost(q);
+            p.crossbar.mac_into(q, &mut macs);
+            let conv = p.converter.convert_full(&macs, rng);
+            // all d quantized values through the digital softmax
+            let mut vals = vec![0.0f64; d];
+            for o in &conv.outputs {
+                vals[o.column] = o.code as f64 * lsb;
+            }
+            let mut row = vec![0.0f64; d];
+            p.softmax.compute(&vals, &mut row);
+            probs.push(row);
+            cost.absorb(
+                mac_ns + conv.latency_ns + p.softmax.latency_ns(d),
+                mac_pj + conv.energy_pj + p.softmax.energy_pj(d),
+                1.0,
+            );
+        }
+        let (wns, wpj) = p.write_cost();
+        (probs, cost.finish(wns, wpj))
+    }
+
+    fn name(&self) -> &'static str {
+        "conv-SM"
+    }
+}
+
+/// Digital top-k softmax macro (Eq. 3).
+pub struct DtopkSm {
+    pub parts: MacroParts,
+    pub k: usize,
+}
+
+impl SoftmaxMacro for DtopkSm {
+    fn run(&self, q_rows: &[Vec<i32>], rng: &mut Rng) -> (Vec<ProbRow>, MacroCost) {
+        let p = &self.parts;
+        let d = p.crossbar.used_cols();
+        let mut cost = MacroCost::default();
+        let mut probs = Vec::with_capacity(q_rows.len());
+        let mut macs = vec![0i64; d];
+        let lsb = p.converter.ramp.lsb();
+        for q in q_rows {
+            let (mac_ns, mac_pj) = p.mac_phase_cost(q);
+            p.crossbar.mac_into(q, &mut macs);
+            let conv = p.converter.convert_full(&macs, rng);
+            let mut vals = vec![0.0f64; d];
+            for o in &conv.outputs {
+                vals[o.column] = o.code as f64 * lsb;
+            }
+            let (top, _) = digital_topk(&vals, self.k);
+            let row = p.softmax.compute_sparse(&top, d);
+            probs.push(row);
+            let sort_ns = p.timing.t_sort(d, self.k);
+            let sort_pj =
+                sort_compare_bound(d, self.k) * p.energy.e_sort_cmp;
+            cost.absorb(
+                mac_ns + conv.latency_ns + sort_ns
+                    + p.softmax.latency_ns(self.k),
+                mac_pj + conv.energy_pj + sort_pj
+                    + p.softmax.energy_pj(self.k),
+                1.0,
+            );
+        }
+        let (wns, wpj) = p.write_cost();
+        (probs, cost.finish(wns, wpj))
+    }
+
+    fn name(&self) -> &'static str {
+        "Dtopk-SM"
+    }
+}
+
+/// Topkima softmax macro (Eq. 4) — the paper's design.
+pub struct TopkimaSm {
+    pub parts: MacroParts,
+    pub k: usize,
+}
+
+impl SoftmaxMacro for TopkimaSm {
+    fn run(&self, q_rows: &[Vec<i32>], rng: &mut Rng) -> (Vec<ProbRow>, MacroCost) {
+        let p = &self.parts;
+        let d = p.crossbar.used_cols();
+        let mut cost = MacroCost::default();
+        let mut probs = Vec::with_capacity(q_rows.len());
+        let mut macs = vec![0i64; d];
+        let lsb = p.converter.ramp.lsb();
+        let mut selection: Vec<(usize, f64)> = Vec::with_capacity(self.k);
+        for q in q_rows {
+            let (mac_ns, mac_pj) = p.mac_phase_cost(q);
+            p.crossbar.mac_into(q, &mut macs);
+            let conv = p.converter.convert_topk(&macs, self.k, rng);
+            selection.clear();
+            selection.extend(
+                conv.outputs
+                    .iter()
+                    .map(|o| (o.column, o.code as f64 * lsb)),
+            );
+            let row = p.softmax.compute_sparse(&selection, d);
+            probs.push(row);
+            cost.absorb(
+                mac_ns + conv.latency_ns
+                    + p.softmax.latency_ns(conv.outputs.len()),
+                mac_pj + conv.energy_pj
+                    + p.softmax.energy_pj(conv.outputs.len()),
+                conv.alpha,
+            );
+        }
+        let (wns, wpj) = p.write_cost();
+        (probs, cost.finish(wns, wpj))
+    }
+
+    fn name(&self) -> &'static str {
+        "topkima-SM"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crossbar::Tech;
+
+    /// BERT-base head shaped tile: depth 64, 256 cols (one sub-crossbar).
+    fn parts(cols: usize) -> MacroParts {
+        let depth = 64;
+        let kt: Vec<Vec<i32>> = (0..depth)
+            .map(|r| {
+                (0..cols)
+                    .map(|c| (((r * 13 + c * 7 + 3) % 15) as i32) - 7)
+                    .collect()
+            })
+            .collect();
+        MacroParts::new(Crossbar::program(Tech::Sram, 256, 256, 64, &kt))
+    }
+
+    fn q_rows(n: usize, depth: usize) -> Vec<Vec<i32>> {
+        (0..n)
+            .map(|r| {
+                (0..depth)
+                    .map(|i| (((r * 31 + i * 17) % 31) as i32) - 15)
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn all_macros_produce_prob_rows() {
+        let mut rng = Rng::new(1);
+        let q = q_rows(4, 64);
+        for m in [
+            &ConvSm(parts(128)) as &dyn SoftmaxMacro,
+            &DtopkSm { parts: parts(128), k: 5 },
+            &TopkimaSm { parts: parts(128), k: 5 },
+        ] {
+            let (probs, cost) = m.run(&q, &mut rng);
+            assert_eq!(probs.len(), 4, "{}", m.name());
+            for row in &probs {
+                let s: f64 = row.iter().sum();
+                assert!((s - 1.0).abs() < 1e-9, "{} sum {s}", m.name());
+            }
+            assert!(cost.latency_ns > 0.0 && cost.energy_pj > 0.0);
+        }
+    }
+
+    #[test]
+    fn topkima_and_dtopk_select_identically() {
+        // same substrate, ideal converter → same winners, same probs
+        let mut r1 = Rng::new(2);
+        let mut r2 = Rng::new(2);
+        let q = q_rows(6, 64);
+        let (pa, _) = TopkimaSm { parts: parts(96), k: 5 }.run(&q, &mut r1);
+        let (pb, _) = DtopkSm { parts: parts(96), k: 5 }.run(&q, &mut r2);
+        for (a, b) in pa.iter().zip(&pb) {
+            for (x, y) in a.iter().zip(b) {
+                assert!((x - y).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn fig4a_latency_ordering_and_ratios() {
+        let mut rng = Rng::new(3);
+        let q = q_rows(16, 64);
+        let (_, conv) = ConvSm(parts(256)).run(&q, &mut rng);
+        let (_, dtopk) =
+            DtopkSm { parts: parts(256), k: 5 }.run(&q, &mut rng);
+        let (_, topkima) =
+            TopkimaSm { parts: parts(256), k: 5 }.run(&q, &mut rng);
+        assert!(conv.latency_ns > dtopk.latency_ns);
+        assert!(dtopk.latency_ns > topkima.latency_ns);
+        let speedup_conv = conv.latency_ns / topkima.latency_ns;
+        let speedup_dtopk = dtopk.latency_ns / topkima.latency_ns;
+        assert!(speedup_conv > 5.0, "conv/topkima {speedup_conv}");
+        assert!(speedup_dtopk > 2.0, "dtopk/topkima {speedup_dtopk}");
+    }
+
+    #[test]
+    fn fig4a_energy_ordering() {
+        let mut rng = Rng::new(4);
+        let q = q_rows(16, 64);
+        let (_, conv) = ConvSm(parts(256)).run(&q, &mut rng);
+        let (_, dtopk) = DtopkSm { parts: parts(256), k: 5 }.run(&q, &mut rng);
+        let (_, topkima) =
+            TopkimaSm { parts: parts(256), k: 5 }.run(&q, &mut rng);
+        assert!(conv.energy_pj > dtopk.energy_pj);
+        assert!(dtopk.energy_pj > topkima.energy_pj);
+    }
+
+    #[test]
+    fn topkima_alpha_below_one() {
+        let mut rng = Rng::new(5);
+        let q = q_rows(8, 64);
+        let (_, cost) = TopkimaSm { parts: parts(256), k: 5 }.run(&q, &mut rng);
+        assert!(cost.alpha < 1.0 && cost.alpha > 0.0, "alpha {}", cost.alpha);
+    }
+
+    #[test]
+    fn conv_probs_match_reference_softmax_of_quantized_macs() {
+        let mut rng = Rng::new(6);
+        let p = parts(32);
+        let q = q_rows(1, 64);
+        let lsb = p.converter.ramp.lsb();
+        let mut macs = vec![0i64; p.crossbar.used_cols()];
+        p.crossbar.mac_into(&q[0], &mut macs);
+        let fs = p.crossbar.full_scale_mac(5) as f32;
+        let want_vals: Vec<f64> = macs
+            .iter()
+            .map(|&m| crate::quant::adc_code(m as f32, fs, 5) as f64 * lsb)
+            .collect();
+        let m = want_vals.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let exps: Vec<f64> = want_vals.iter().map(|v| (v - m).exp()).collect();
+        let s: f64 = exps.iter().sum();
+        let (probs, _) = ConvSm(p).run(&q, &mut rng);
+        for (got, e) in probs[0].iter().zip(&exps) {
+            assert!((got - e / s).abs() < 1e-6, "{got} vs {}", e / s);
+        }
+    }
+}

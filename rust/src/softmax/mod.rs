@@ -1,0 +1,17 @@
+//! Softmax macros: the three designs compared in Fig 4(a).
+//!
+//! * [`digital`] — the digital softmax core [17]: exp/divide cost model
+//!   plus an actual fixed-point-ish computation used on serving paths.
+//! * [`dtopk`] — digital top-k sorter baseline (the prior-work approach
+//!   [3]): O(min(d·log d, d·k)) compare-exchange sorting network.
+//! * [`macros`] — the assembled Conv-SM / Dtopk-SM / Topkima-SM macros
+//!   with end-to-end functional output + latency/energy per Eqs. (3)/(4),
+//!   backed by the behavioral converter in `crate::ima`.
+
+pub mod digital;
+pub mod dtopk;
+pub mod macros;
+
+pub use digital::DigitalSoftmax;
+pub use dtopk::digital_topk;
+pub use macros::{ConvSm, DtopkSm, MacroCost, SoftmaxMacro, TopkimaSm};

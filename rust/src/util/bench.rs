@@ -1,0 +1,82 @@
+//! Tiny benchmarking harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets use `harness = false` and call [`bench_fn`] /
+//! [`table`] to time closures with warmup and report mean ± stddev. The
+//! figure-regeneration benches mostly report *simulated* ns/pJ from the
+//! hardware models; wall-clock timing is used for the §Perf hot-path
+//! benches.
+
+use std::time::Instant;
+
+use super::stats;
+
+/// Timing result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub iters: usize,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>12.0} ns/iter (± {:>8.0}, n={})",
+            self.name, self.mean_ns, self.std_ns, self.iters
+        )
+    }
+}
+
+/// Time `f` with warmup; adaptive iteration count targeting ~0.5 s.
+pub fn bench_fn<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    // warmup + calibration
+    let t0 = Instant::now();
+    f();
+    let once_ns = t0.elapsed().as_nanos().max(1) as f64;
+    let iters = ((5e8 / once_ns) as usize).clamp(5, 10_000);
+
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    BenchResult {
+        name: name.to_string(),
+        mean_ns: stats::mean(&samples),
+        std_ns: stats::std_dev(&samples),
+        iters,
+    }
+}
+
+/// Print a standard bench header.
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Print an aligned key/value table row.
+pub fn row(label: &str, value: impl std::fmt::Display) {
+    println!("{label:<44} {value}");
+}
+
+/// Prevent the optimizer from deleting a computed value.
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable; thin wrapper for bench code.
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_fn_returns_positive_mean() {
+        let r = bench_fn("noop-ish", || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.iters >= 5);
+        assert!(r.row().contains("noop-ish"));
+    }
+}

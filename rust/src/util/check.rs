@@ -1,0 +1,90 @@
+//! Mini property-test harness (the offline environment has no proptest).
+//!
+//! `property` runs a closure over `n` randomized cases from a seeded
+//! [`Rng`]; on failure it reports the case index and seed so the exact
+//! case replays deterministically. Used for the coordinator invariants
+//! (routing, batching, state conservation), the IMA top-k equivalence,
+//! and the quantizer bounds — see DESIGN.md §9.
+
+use super::rng::Rng;
+
+/// Run `cases` randomized checks of `prop`. Each case gets a forked,
+/// deterministic RNG. Panics with seed + case number on the first failure.
+pub fn property<F>(name: &str, cases: usize, seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut root = Rng::new(seed);
+    for case in 0..cases {
+        let mut rng = root.fork();
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (seed {seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert-like helper producing `Result` for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+/// Assert two floats agree within an absolute tolerance.
+#[macro_export]
+macro_rules! prop_assert_close {
+    ($a:expr, $b:expr, $tol:expr) => {{
+        let (a, b) = ($a, $b);
+        if (a - b).abs() > $tol {
+            return Err(format!(
+                "{} = {a} differs from {} = {b} by more than {}",
+                stringify!($a), stringify!($b), $tol
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        property("tautology", 50, 1, |rng| {
+            let x = rng.f64();
+            prop_assert!((0.0..1.0).contains(&x), "x out of range: {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_context() {
+        property("fails", 10, 2, |rng| {
+            let x = rng.f64();
+            prop_assert!(x < 0.5, "x too big: {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let mut first = Vec::new();
+        property("record", 5, 3, |rng| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second = Vec::new();
+        property("record", 5, 3, |rng| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,9 @@
+//! Dependency-free utilities: JSON codec, PRNG, statistics, and the mini
+//! property-test harness (offline substitutes for serde_json / rand /
+//! proptest, which are unavailable in this build environment).
+
+pub mod bench;
+pub mod check;
+pub mod json;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,124 @@
+//! Small statistics helpers used by the simulator and the bench harness.
+
+/// Arithmetic mean; 0.0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64)
+        .sqrt()
+}
+
+/// Percentile by linear interpolation on the sorted copy, p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let w = rank - lo as f64;
+        v[lo] * (1.0 - w) + v[hi] * w
+    }
+}
+
+/// Fixed-width histogram over [lo, hi] with `bins` buckets.
+/// Returns (bucket_centers, counts); out-of-range values clamp to edges.
+pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize)
+    -> (Vec<f64>, Vec<usize>)
+{
+    assert!(bins > 0 && hi > lo);
+    let width = (hi - lo) / bins as f64;
+    let centers: Vec<f64> =
+        (0..bins).map(|i| lo + (i as f64 + 0.5) * width).collect();
+    let mut counts = vec![0usize; bins];
+    for &x in xs {
+        let idx = (((x - lo) / width) as isize).clamp(0, bins as isize - 1);
+        counts[idx as usize] += 1;
+    }
+    (centers, counts)
+}
+
+/// Pearson correlation of two equal-length series.
+pub fn correlation(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let (mx, my) = (mean(xs), mean(ys));
+    let mut num = 0.0;
+    let mut dx = 0.0;
+    let mut dy = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        num += (x - mx) * (y - my);
+        dx += (x - mx) * (x - mx);
+        dy += (y - my) * (y - my);
+    }
+    if dx == 0.0 || dy == 0.0 {
+        return 0.0;
+    }
+    num / (dx.sqrt() * dy.sqrt())
+}
+
+/// Root-mean-square error between two series.
+pub fn rmse(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().zip(ys).map(|(x, y)| (x - y) * (x - y)).sum::<f64>()
+        / xs.len() as f64)
+        .sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert!((percentile(&xs, 50.0) - 50.5).abs() < 1e-9);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+    }
+
+    #[test]
+    fn histogram_counts_everything() {
+        let xs = [0.1, 0.2, 0.5, 0.9, 1.5, -0.5];
+        let (_, counts) = histogram(&xs, 0.0, 1.0, 4);
+        assert_eq!(counts.iter().sum::<usize>(), xs.len());
+    }
+
+    #[test]
+    fn correlation_of_identity_is_one() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        assert!((correlation(&xs, &xs) - 1.0).abs() < 1e-12);
+        let neg: Vec<f64> = xs.iter().map(|x| -x).collect();
+        assert!((correlation(&xs, &neg) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rmse_zero_for_equal() {
+        let xs = [1.0, 2.0, 3.0];
+        assert_eq!(rmse(&xs, &xs), 0.0);
+    }
+}

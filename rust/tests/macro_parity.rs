@@ -1,0 +1,116 @@
+//! Integration: the behavioral circuit simulator agrees with the paper's
+//! analytical Eq (3)/(4) models, and the macro stack composes with the
+//! crossbar mapping end-to-end (no artifacts needed).
+
+use topkima::circuits::Timing;
+use topkima::crossbar::mapping::split_columns;
+use topkima::crossbar::{Crossbar, Tech};
+use topkima::softmax::macros::MacroParts;
+use topkima::softmax::{ConvSm, DtopkSm, SoftmaxMacro, TopkimaSm};
+use topkima::util::rng::Rng;
+
+fn parts(cols: usize, seed: u64) -> MacroParts {
+    let mut rng = Rng::new(seed);
+    let kt: Vec<Vec<i32>> = (0..64)
+        .map(|_| {
+            (0..cols)
+                .map(|_| (rng.normal() * 2.5).round().clamp(-7.0, 7.0) as i32)
+                .collect()
+        })
+        .collect();
+    MacroParts::new(Crossbar::program(Tech::Sram, 256, 256, 64, &kt))
+}
+
+fn q_rows(n: usize, seed: u64) -> Vec<Vec<i32>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            (0..64)
+                .map(|_| (rng.normal() * 5.0).round().clamp(-15.0, 15.0) as i32)
+                .collect()
+        })
+        .collect()
+}
+
+/// The behavioral topkima latency per row lands within 25% of Eq (4)
+/// evaluated at the behaviorally-measured alpha.
+#[test]
+fn behavioral_latency_matches_eq4() {
+    let t = Timing::default();
+    let d = 256usize;
+    let k = 5usize;
+    let q = q_rows(32, 11);
+    let topkima = TopkimaSm { parts: parts(d, 12), k };
+    let (_, cost) = topkima.run(&q, &mut Rng::new(13));
+    let eq4 = t.topkima_sm(d, k, cost.alpha) / d as f64; // per conversion
+    // behavioral per-row latency excluding the amortized write
+    let per_row = (cost.latency_ns - t.t_write()) / q.len() as f64;
+    // Eq(4) amortizes the write over d rows; compare compute terms
+    let eq4_row = eq4 - t.t_write() / d as f64;
+    let rel = (per_row - eq4_row).abs() / eq4_row;
+    assert!(rel < 0.25, "per_row {per_row} vs eq4 {eq4_row} (rel {rel})");
+}
+
+/// Speed/energy orderings of Fig 4a hold on the behavioral substrate.
+#[test]
+fn fig4a_orderings_hold() {
+    let q = q_rows(24, 21);
+    let mk_cost = |m: &dyn SoftmaxMacro| {
+        let (_, c) = m.run(&q, &mut Rng::new(22));
+        c
+    };
+    let conv = mk_cost(&ConvSm(parts(256, 23)));
+    let dtopk = mk_cost(&DtopkSm { parts: parts(256, 23), k: 5 });
+    let topkima = mk_cost(&TopkimaSm { parts: parts(256, 23), k: 5 });
+    assert!(conv.latency_ns > dtopk.latency_ns);
+    assert!(dtopk.latency_ns > topkima.latency_ns);
+    assert!(conv.latency_ns / topkima.latency_ns > 8.0);
+    assert!(dtopk.latency_ns / topkima.latency_ns > 3.0);
+    assert!(conv.energy_pj / topkima.energy_pj > 8.0);
+    assert!(topkima.alpha < 0.7);
+}
+
+/// Sub-top-k mapping composes with the macros: running the paper's
+/// (256,128)/(3,2) split on two crossbars selects exactly 5 winners and
+/// the union respects the per-array budgets.
+#[test]
+fn sub_topk_mapping_composes() {
+    let d = 384;
+    let segs = split_columns(d, 5, 256);
+    assert_eq!(segs.len(), 2);
+    let q = q_rows(4, 31);
+    let mut winners_total = 0;
+    for seg in &segs {
+        if seg.k == 0 {
+            continue;
+        }
+        let macro_ = TopkimaSm { parts: parts(seg.width, 32), k: seg.k };
+        let (probs, _) = macro_.run(&q, &mut Rng::new(33));
+        for row in &probs {
+            let nz = row.iter().filter(|&&p| p > 0.0).count();
+            assert_eq!(nz, seg.k, "array must emit exactly k_i winners");
+        }
+        winners_total += seg.k;
+    }
+    assert_eq!(winners_total, 5);
+}
+
+/// Conventional macro probabilities are a valid dense softmax; topkima's
+/// are its k-sparse restriction over the same quantized scores.
+#[test]
+fn topkima_probs_are_sparse_restriction_of_conv() {
+    let q = q_rows(6, 41);
+    let (conv_p, _) = ConvSm(parts(128, 42)).run(&q, &mut Rng::new(43));
+    let (top_p, _) =
+        TopkimaSm { parts: parts(128, 42), k: 5 }.run(&q, &mut Rng::new(43));
+    for (cr, tr) in conv_p.iter().zip(&top_p) {
+        // the winners under topkima are the argmax set of the dense row
+        let mut order: Vec<usize> = (0..cr.len()).collect();
+        order.sort_by(|&a, &b| cr[b].partial_cmp(&cr[a]).unwrap());
+        for &i in order.iter().take(5) {
+            assert!(tr[i] > 0.0, "dense top-5 col {i} missing in topkima");
+        }
+        let s: f64 = tr.iter().sum();
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+}

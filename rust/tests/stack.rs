@@ -1,0 +1,187 @@
+//! Integration over the AOT artifacts: runtime ↔ coordinator ↔ trained
+//! models. All tests skip (with a notice) when `artifacts/` has not been
+//! built — run `make artifacts` first for full coverage.
+
+use std::path::Path;
+use std::time::Duration;
+
+use topkima::coordinator::{Coordinator, InputData, PjrtExecutor, Router};
+use topkima::runtime::Engine;
+use topkima::util::json::Json;
+
+fn artifacts() -> Option<&'static str> {
+    if Path::new("artifacts/manifest.json").exists() {
+        Some("artifacts")
+    } else {
+        eprintln!("[skip] artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn manifest_loads_and_indexes() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::new(dir).expect("engine");
+    assert!(!engine.manifest.models.is_empty());
+    for family in engine.manifest.checkpoints.keys() {
+        assert!(
+            !engine.manifest.k_values(family).is_empty(),
+            "{family} has no k variants"
+        );
+        let eval = engine.manifest.eval_set(family).expect("eval set");
+        assert!(eval.len() >= 256, "{family} eval too small");
+    }
+}
+
+#[test]
+fn bert_single_sample_smoke() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::new(dir).expect("engine");
+    let eval = engine.manifest.eval_set("bert").expect("eval");
+    let model = engine.load("bert", 5, 1).expect("load bert k5 b1");
+    let stride = eval.x_stride();
+    let out = model.run_i32(&eval.x_i32[..stride]).expect("run");
+    assert_eq!(out.len(), model.output_len());
+    assert!(out.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn trained_model_beats_chance_through_pjrt() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::new(dir).expect("engine");
+    let eval = engine.manifest.eval_set("bert").expect("eval");
+    let batch = 32;
+    let model = engine.load("bert", 5, batch).expect("load");
+    let stride = eval.x_stride();
+    let n = 128;
+    let mut correct = 0;
+    for b0 in (0..n).step_by(batch) {
+        let out = model
+            .run_i32(&eval.x_i32[b0 * stride..(b0 + batch) * stride])
+            .expect("run");
+        let per = out.len() / batch;
+        for i in 0..batch {
+            let o = &out[i * per..(i + 1) * per];
+            let sl = o.len() / 2;
+            let am = |f: &dyn Fn(usize) -> f32| -> usize {
+                (0..sl)
+                    .max_by(|&a, &b| f(a).partial_cmp(&f(b)).unwrap())
+                    .unwrap()
+            };
+            let ps = am(&|t| o[t * 2]);
+            let pe = am(&|t| o[t * 2 + 1]);
+            let idx = b0 + i;
+            if ps as i32 == eval.y_i32[idx * 2]
+                && pe as i32 == eval.y_i32[idx * 2 + 1]
+            {
+                correct += 1;
+            }
+        }
+    }
+    let acc = correct as f64 / n as f64;
+    // chance for exact span match is < 1/seq_len^2 ≈ 0.0002
+    assert!(acc > 0.2, "served accuracy {acc} barely above chance");
+}
+
+#[test]
+fn coordinator_end_to_end_with_pjrt() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::new(dir).expect("engine");
+    let eval = engine.manifest.eval_set("bert").expect("eval");
+    let buckets = engine.manifest.batch_sizes("bert", 5);
+    let mut router = Router::new();
+    router.register("bert", 5, buckets.clone(), Duration::from_millis(2));
+    let mut coord = Coordinator::start(router, move || {
+        let engine = Engine::new("artifacts").expect("engine");
+        Box::new(
+            PjrtExecutor::preload(
+                &engine,
+                &[("bert".to_string(), 5, buckets)],
+            )
+            .expect("preload"),
+        )
+    });
+    let stride = eval.x_stride();
+    let n = 16;
+    let rxs: Vec<_> = (0..n)
+        .map(|i| {
+            coord.submit(
+                "bert",
+                5,
+                InputData::I32(
+                    eval.x_i32[i * stride..(i + 1) * stride].to_vec(),
+                ),
+            )
+        })
+        .collect();
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(120)).expect("resp");
+        assert!(!resp.output.is_empty());
+        assert!(resp.output.iter().all(|v| v.is_finite()));
+    }
+    let metrics = coord.shutdown();
+    assert_eq!(metrics.completed(), n);
+    assert_eq!(metrics.errors(), 0);
+}
+
+#[test]
+fn pallas_attention_head_runs_and_is_topk_sparse() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::new(dir).expect("engine");
+    if engine.manifest.heads.is_empty() {
+        return;
+    }
+    let head = engine.load_head(0).expect("head");
+    let n = head.sl * head.d_head;
+    let mut q = vec![0.0f32; n];
+    let mut kt = vec![0.0f32; n];
+    let mut v = vec![0.0f32; n];
+    let mut rng = topkima::util::rng::Rng::new(5);
+    for x in q.iter_mut().chain(kt.iter_mut()).chain(v.iter_mut()) {
+        *x = rng.normal_f32();
+    }
+    let out = head.run(&q, &kt, &v).expect("run head");
+    assert_eq!(out.len(), n);
+    assert!(out.iter().all(|x| x.is_finite()));
+}
+
+/// Bit-for-bit parity of the quantization contract: the rust `quant`
+/// mirror reproduces the python-emitted golden codes exactly.
+#[test]
+fn quant_parity_with_python() {
+    let Some(dir) = artifacts() else { return };
+    let path = Path::new(dir).join("parity_vectors.json");
+    if !path.exists() {
+        eprintln!("[skip] parity_vectors.json missing (re-run make artifacts)");
+        return;
+    }
+    let blob = Json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+
+    let pwm = blob.get("pwm");
+    let scale = pwm.get("scale").as_f64().unwrap() as f32;
+    let xs = pwm.get("x").as_arr().unwrap();
+    let codes = pwm.get("codes").as_arr().unwrap();
+    for (x, c) in xs.iter().zip(codes) {
+        let got = topkima::quant::pwm_code(x.as_f64().unwrap() as f32, scale);
+        assert_eq!(got, c.as_f64().unwrap() as i32, "pwm mismatch at x={x:?}");
+    }
+
+    let w = blob.get("weight");
+    let wscale = w.get("scale").as_f64().unwrap() as f32;
+    for (x, c) in w.get("w").as_arr().unwrap().iter()
+        .zip(w.get("codes").as_arr().unwrap())
+    {
+        let got =
+            topkima::quant::weight_code(x.as_f64().unwrap() as f32, wscale);
+        assert_eq!(got, c.as_f64().unwrap() as i32, "weight mismatch");
+    }
+
+    let adc = blob.get("adc");
+    let fs = adc.get("full_scale").as_f64().unwrap() as f32;
+    for (x, c) in adc.get("v").as_arr().unwrap().iter()
+        .zip(adc.get("codes").as_arr().unwrap())
+    {
+        let got = topkima::quant::adc_code(x.as_f64().unwrap() as f32, fs, 5);
+        assert_eq!(got, c.as_f64().unwrap() as i32, "adc mismatch");
+    }
+}
