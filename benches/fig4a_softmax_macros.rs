@@ -2,7 +2,8 @@
 //!
 //! Regenerates the paper's macro comparison on the behavioral circuit
 //! simulator: a BERT-base head (Q: 384×64, K^T: 64×384, n_b = 5, k = 5)
-//! mapped onto one crossbar tile. Reports simulated ns/pJ per
+//! mapped onto one crossbar tile, with every macro assembled through the
+//! `topkima::pipeline` builder. Reports simulated ns/pJ per
 //! Q·K^T+softmax block, the Eq (3)/(4) analytical ratios at the exact
 //! paper point, the phase breakdown, the measured early-stop α, and the
 //! SL scaling sweep (256 → 4096) the paper argues makes the method scale
@@ -12,28 +13,10 @@
 //! Dtopk-SM; energy ≈ 30× and ≈ 3× lower; α ≈ 0.31.
 
 use topkima::circuits::{BlockDims, Energy, Timing};
-use topkima::crossbar::{Crossbar, Tech};
-use topkima::softmax::macros::MacroParts;
-use topkima::softmax::{ConvSm, DtopkSm, SoftmaxMacro, TopkimaSm};
+use topkima::pipeline::StackConfig;
+use topkima::softmax::SoftmaxKind;
 use topkima::util::bench::{header, row};
 use topkima::util::rng::Rng;
-
-/// BERT-base head-shaped crossbar tile (depth 64, `cols` columns) with
-/// weights drawn from a realistic (roughly normal) code distribution.
-fn parts(cols: usize, rng: &mut Rng) -> MacroParts {
-    let depth = 64;
-    let kt: Vec<Vec<i32>> = (0..depth)
-        .map(|_| {
-            (0..cols)
-                .map(|_| {
-                    let g = rng.normal() * 2.5;
-                    (g.round() as i32).clamp(-7, 7)
-                })
-                .collect()
-        })
-        .collect();
-    MacroParts::new(Crossbar::program(Tech::Sram, 256, 256, 64, &kt))
-}
 
 fn q_rows(n: usize, depth: usize, rng: &mut Rng) -> Vec<Vec<i32>> {
     (0..n)
@@ -53,12 +36,15 @@ fn run_point(d_cols: usize, k: usize, n_rows: usize, seed: u64)
 {
     let mut rng = Rng::new(seed);
     let q = q_rows(n_rows, 64, &mut rng);
-    let conv = ConvSm(parts(d_cols, &mut rng));
-    let dtopk = DtopkSm { parts: parts(d_cols, &mut rng), k };
-    let topkima = TopkimaSm { parts: parts(d_cols, &mut rng), k };
 
     let mut out = Vec::new();
-    for m in [&conv as &dyn SoftmaxMacro, &dtopk, &topkima] {
+    for kind in SoftmaxKind::ALL {
+        let b = StackConfig::default()
+            .with_softmax(kind)
+            .with_k(k)
+            .build()
+            .expect("valid stack config");
+        let m = b.build_macro_gaussian(64, d_cols, &mut rng);
         let mut r = Rng::new(seed ^ 0x5EED);
         let (_, cost) = m.run(&q, &mut r);
         out.push((

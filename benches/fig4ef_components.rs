@@ -1,22 +1,26 @@
 //! Fig 4(e)/(f): module latency & energy breakdown by hardware component.
 //!
-//! One BERT-base attention module on the Topkima-Former fabric. Paper
-//! findings to reproduce: the synaptic array dominates latency (4× pulse
-//! width for weight precision + column mux), and the buffer dominates
-//! energy (12 heads' intermediate staging).
+//! One BERT-base attention module on the Topkima-Former fabric, assembled
+//! through the pipeline builder. Paper findings to reproduce: the
+//! synaptic array dominates latency (4× pulse width for weight precision
+//! + column mux), and the buffer dominates energy (12 heads' intermediate
+//! staging).
 
-use topkima::model::TransformerConfig;
-use topkima::sim::{report, simulate_attention, SimConfig, SoftmaxKind};
+use topkima::pipeline::StackConfig;
+use topkima::sim::report;
+use topkima::softmax::SoftmaxKind;
 use topkima::util::bench::header;
 
 fn main() {
-    let tc = TransformerConfig::bert_base();
-    for softmax in [SoftmaxKind::Conventional, SoftmaxKind::Topkima] {
-        let sc = SimConfig { softmax, ..SimConfig::default() };
-        let r = simulate_attention(&tc, &sc);
+    for kind in [SoftmaxKind::Conventional, SoftmaxKind::Topkima] {
+        let r = StackConfig::default()
+            .with_softmax(kind)
+            .build()
+            .expect("valid stack config")
+            .simulate();
         header(&format!(
             "Fig 4e/f — per-component breakdown ({})",
-            softmax.name()
+            kind.name()
         ));
         print!("{}", report::component_table(&r));
         println!("{}", report::system_summary(&r));

@@ -3,30 +3,38 @@
 //! Paper findings: X·W_{Q,K,V} is the slowest stage (largest weights, no
 //! head parallelism); Q·K^T and A·V dominate energy (12 heads), with A·V
 //! cheaper than Q·K^T thanks to the k-sparse A after topkima softmax.
+//! Every point is assembled through the pipeline builder, so the k knob
+//! sets circuit selection and sim sparsity together.
 
-use topkima::model::TransformerConfig;
-use topkima::sim::{report, simulate_attention, SimConfig, SoftmaxKind};
+use topkima::pipeline::StackConfig;
+use topkima::sim::report;
+use topkima::softmax::SoftmaxKind;
 use topkima::util::bench::header;
 
 fn main() {
-    let tc = TransformerConfig::bert_base();
-    for softmax in [SoftmaxKind::Conventional, SoftmaxKind::Topkima] {
-        let sc = SimConfig { softmax, ..SimConfig::default() };
-        let r = simulate_attention(&tc, &sc);
+    for kind in [SoftmaxKind::Conventional, SoftmaxKind::Topkima] {
+        let r = StackConfig::default()
+            .with_softmax(kind)
+            .build()
+            .expect("valid stack config")
+            .simulate();
         header(&format!(
             "Fig 4g/h — per-operation breakdown ({})",
-            softmax.name()
+            kind.name()
         ));
         print!("{}", report::operation_table(&r));
     }
 
-    // Sparsity ablation: A·V energy with and without top-k sparsity.
+    // Sparsity ablation: A·V energy with and without top-k sparsity
+    // (k = 0 means dense, which requires the conventional softmax).
     header("A·V energy vs k (sparsity ablation)");
     println!("{:<10} {:>16}", "k", "A·V energy (pJ)");
     for k in [0usize, 1, 5, 10, 20, 50] {
-        let tc_k = TransformerConfig { topk: k, ..tc };
-        let sc = SimConfig::default();
-        let r = simulate_attention(&tc_k, &sc);
+        let mut cfg = StackConfig::default().with_k(k);
+        if k == 0 {
+            cfg = cfg.with_softmax(SoftmaxKind::Conventional);
+        }
+        let r = cfg.build().expect("valid stack config").simulate();
         let av = r.by_operation()[2];
         let label = if k == 0 { "dense".to_string() } else { k.to_string() };
         println!("{label:<10} {:>16.0}", av.2);

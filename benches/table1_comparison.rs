@@ -2,20 +2,21 @@
 //!
 //! Published rows (ELSA, ReTransformer, TranCIM, X-Former, HARDSEA) vs
 //! our simulated Topkima-Former point on the paper's workload (one
-//! BERT-base attention module, 200 MHz, 0.5 V, 256×256 arrays, 5b ADC).
-//! Paper claims: 6.70 TOPS, 16.84 TOPS/W; 1.8×–84× speedup and
-//! 1.3×–35× EE over the prior IMC accelerators.
+//! BERT-base attention module, 200 MHz, 0.5 V, 256×256 arrays, 5b ADC),
+//! assembled through the pipeline builder. Paper claims: 6.70 TOPS,
+//! 16.84 TOPS/W; 1.8×–84× speedup and 1.3×–35× EE over the prior IMC
+//! accelerators.
 
 use topkima::accel;
-use topkima::model::TransformerConfig;
-use topkima::sim::{SimConfig, SoftmaxKind};
+use topkima::pipeline::StackConfig;
+use topkima::softmax::SoftmaxKind;
 use topkima::util::bench::header;
 
 fn main() {
     header("Table I — comparison with state-of-the-art");
-    let tc = TransformerConfig::bert_base();
-    let sc = SimConfig::default();
-    let point = accel::system_point(&tc, &sc);
+    let base = StackConfig::default();
+    let b = base.clone().build().expect("valid stack config");
+    let point = accel::system_point(&b.transformer(), &b.sim_config());
     print!("{}", accel::render_table(&point));
 
     header("ratios (this work / baseline)");
@@ -29,18 +30,16 @@ fn main() {
     println!("\npaper bands: speed 1.8x-84x, EE 1.3x-35x");
 
     header("ablation: our system with baseline softmax macros");
-    for softmax in [
-        SoftmaxKind::Conventional,
-        SoftmaxKind::Dtopk,
-        SoftmaxKind::Topkima,
-    ] {
-        let p = accel::system_point(
-            &tc,
-            &SimConfig { softmax, ..SimConfig::default() },
-        );
+    for kind in SoftmaxKind::ALL {
+        let bb = base
+            .clone()
+            .with_softmax(kind)
+            .build()
+            .expect("valid stack config");
+        let p = accel::system_point(&bb.transformer(), &bb.sim_config());
         println!(
             "{:<14} {:>8.2} TOPS {:>8.2} TOPS/W",
-            softmax.name(),
+            kind.name(),
             p.tops,
             p.ee_tops_w
         );
@@ -49,10 +48,12 @@ fn main() {
     header("workload scaling (SL sweep, topkima)");
     println!("{:<8} {:>10} {:>12}", "SL", "TOPS", "TOPS/W");
     for sl in [197usize, 384, 1024, 4096] {
-        let p = accel::system_point(
-            &tc.with_seq_len(sl),
-            &SimConfig::default(),
-        );
+        let bb = base
+            .clone()
+            .with_seq_len(sl)
+            .build()
+            .expect("valid stack config");
+        let p = accel::system_point(&bb.transformer(), &bb.sim_config());
         println!("{sl:<8} {:>10.2} {:>12.2}", p.tops, p.ee_tops_w);
     }
 }

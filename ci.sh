@@ -1,0 +1,72 @@
+#!/usr/bin/env bash
+# CI for the Topkima-Former workspace. Works fully offline (all
+# dependencies are vendored path crates).
+#
+# Steps:
+#   1. cargo fmt --check    (advisory unless CI_STRICT=1)
+#   2. cargo clippy -D warnings (advisory unless CI_STRICT=1)
+#   3. tier-1 gate: cargo build --release && cargo test -q
+#   4. smoke: `topkima check` (skips cleanly when no artifacts exist)
+#
+# Exit code reflects the tier-1 gate + smoke step; fmt/clippy failures
+# only fail the run when CI_STRICT=1 (they may be unavailable offline).
+
+set -u
+cd "$(dirname "$0")"
+
+strict="${CI_STRICT:-0}"
+status=0
+
+note() { printf '\n== %s ==\n' "$*"; }
+
+advisory() {
+    # run "$@"; demote failure to a warning unless CI_STRICT=1
+    if "$@"; then
+        return 0
+    fi
+    if [ "$strict" = "1" ]; then
+        echo "FAIL (strict): $*"
+        status=1
+    else
+        echo "WARN (advisory): $* failed or unavailable"
+    fi
+}
+
+note "rustfmt"
+if cargo fmt --version >/dev/null 2>&1; then
+    advisory cargo fmt --check
+else
+    echo "WARN: rustfmt not installed; skipping"
+fi
+
+note "clippy"
+if cargo clippy --version >/dev/null 2>&1; then
+    advisory cargo clippy --all-targets -- -D warnings
+else
+    echo "WARN: clippy not installed; skipping"
+fi
+
+note "tier-1: build"
+if ! cargo build --release; then
+    echo "FAIL: cargo build --release"
+    exit 1
+fi
+
+note "tier-1: test"
+if ! cargo test -q; then
+    echo "FAIL: cargo test -q"
+    exit 1
+fi
+
+note "smoke: topkima check"
+if ! cargo run --release --quiet -- check; then
+    echo "FAIL: topkima check"
+    status=1
+fi
+
+if [ "$status" = "0" ]; then
+    note "CI green"
+else
+    note "CI failed"
+fi
+exit "$status"

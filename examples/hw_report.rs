@@ -2,34 +2,35 @@
 //!
 //! Prints Fig 4a (macro ratios), Fig 4d (scale schemes), Fig 4e/f
 //! (component breakdown), Fig 4g/h (operation breakdown) and Table I for
-//! the paper's BERT-base workload. `--seq-len N` overrides SL;
-//! `--table1` prints only the comparison table.
+//! the configured workload, all derived from one `StackConfig`.
+//! `--seq-len N` overrides SL; `--table1` prints only the comparison
+//! table; every other pipeline flag (`--k`, `--alpha`, `--model`, ...)
+//! works too.
 //!
 //! Run: `cargo run --release --example hw_report [-- --seq-len 4096]`
 
 use topkima::accel;
 use topkima::circuits::{BlockDims, Energy, Timing};
-use topkima::model::TransformerConfig;
+use topkima::pipeline::StackConfig;
 use topkima::scale::ScaleImpl;
-use topkima::sim::{report, simulate_attention, SimConfig, SoftmaxKind};
+use topkima::sim::report;
+use topkima::softmax::SoftmaxKind;
 
-fn main() {
-    let args: Vec<String> = std::env::args().collect();
-    let seq_len = args
-        .iter()
-        .position(|a| a == "--seq-len")
-        .and_then(|i| args.get(i + 1))
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(384usize);
+fn main() -> anyhow::Result<()> {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
     let table1_only = args.iter().any(|a| a == "--table1");
+    args.retain(|a| a != "--table1");
 
-    let tc = TransformerConfig::bert_base().with_seq_len(seq_len);
-    let sc = SimConfig::default();
+    let cfg = StackConfig::from_args(&args)?;
+    let b = cfg.clone().build()?;
+    let tc = b.transformer();
+    let sc = b.sim_config();
+    let seq_len = tc.seq_len;
 
     if !table1_only {
         let t = Timing::default();
         let e = Energy::default();
-        let (d, k, alpha) = (seq_len, tc.topk, sc.alpha);
+        let (d, k, alpha) = (seq_len, b.config().k, b.config().alpha);
         let dims = BlockDims { d, rows: 64 * 3, k };
         println!("== Fig 4a (Eq 3/4, d={d}, k={k}, alpha={alpha}) ==");
         println!(
@@ -54,19 +55,15 @@ fn main() {
             );
         }
 
-        let r = simulate_attention(&tc, &sc);
+        let r = b.simulate();
         println!("\n== Fig 4e/f ==\n{}", report::component_table(&r));
         println!("== Fig 4g/h ==\n{}", report::operation_table(&r));
-        for softmax in [
-            SoftmaxKind::Conventional,
-            SoftmaxKind::Dtopk,
-            SoftmaxKind::Topkima,
-        ] {
-            let r = simulate_attention(
-                &tc,
-                &SimConfig { softmax, ..SimConfig::default() },
-            );
-            println!("{}", report::system_summary(&r));
+        for kind in SoftmaxKind::ALL {
+            // skip kinds this config can't express (k = 0 is conv-only)
+            let Ok(bb) = cfg.clone().with_softmax(kind).build() else {
+                continue;
+            };
+            println!("{}", report::system_summary(&bb.simulate()));
         }
         println!();
     }
@@ -81,4 +78,5 @@ fn main() {
             ee.map_or("    - ".into(), |e| format!("{e:6.1}x")),
         );
     }
+    Ok(())
 }

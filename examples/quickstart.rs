@@ -1,4 +1,5 @@
-//! Quickstart: the whole stack in one file.
+//! Quickstart: the whole stack in one file, every layer assembled
+//! through the `topkima::pipeline` builder.
 //!
 //! 1. Circuit level — run the topkima macro on a toy crossbar and watch
 //!    it pick the top-k columns with early stopping.
@@ -9,25 +10,26 @@
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use topkima::crossbar::{Crossbar, Tech};
-use topkima::model::TransformerConfig;
-use topkima::sim::{report, simulate_attention, SimConfig};
-use topkima::softmax::macros::MacroParts;
-use topkima::softmax::{SoftmaxMacro, TopkimaSm};
+use topkima::pipeline::StackConfig;
+use topkima::sim::report;
 use topkima::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
     // ---- 1. circuit level: one topkima-SM conversion --------------------
     println!("== 1. topkima macro on a toy 8-col crossbar ==");
+    let toy = StackConfig::default()
+        .with_geometry(64, 16, 16)
+        .with_k(3)
+        .build()?;
     let depth = 4;
     // K^T codes: column j gets a distinctive weight pattern
     let kt: Vec<Vec<i32>> = (0..depth)
         .map(|r| (0..8).map(|c| ((r + c) % 15) as i32 - 7).collect())
         .collect();
-    let xbar = Crossbar::program(Tech::Sram, 64, 16, 16, &kt);
-    let topkima = TopkimaSm { parts: MacroParts::new(xbar), k: 3 };
+    let mut rng = Rng::new(1);
+    let topkima = toy.build_macro(&kt, &mut rng);
     let q = vec![vec![5, -3, 7, 2]];
-    let (probs, cost) = topkima.run(&q, &mut Rng::new(1));
+    let (probs, cost) = topkima.run(&q, &mut rng);
     println!("attention row: {:?}", probs[0]
         .iter().map(|p| (p * 1000.0).round() / 1000.0).collect::<Vec<_>>());
     println!(
@@ -38,13 +40,13 @@ fn main() -> anyhow::Result<()> {
 
     // ---- 2. architecture level: one attention module --------------------
     println!("== 2. BERT-base attention module on the fabric ==");
-    let tc = TransformerConfig::bert_base();
-    let r = simulate_attention(&tc, &SimConfig::default());
+    let base = StackConfig::default().build()?;
+    let r = base.simulate();
     println!("{}\n", report::system_summary(&r));
 
     // ---- 3. serving level: PJRT inference (needs `make artifacts`) ------
     println!("== 3. AOT model through PJRT ==");
-    match topkima::runtime::Engine::new("artifacts") {
+    match base.engine() {
         Ok(engine) => {
             let eval = engine.manifest.eval_set("bert")?;
             let model = engine.load("bert", 5, 1)?;

@@ -1,8 +1,9 @@
 //! End-to-end serving driver (the repo's headline example).
 //!
 //! Loads the TFCBP-trained BERT-tiny artifacts, starts the coordinator
-//! (router + dynamic batcher + PJRT executor), replays the synthetic
-//! SQuAD eval split as a Poisson-ish request trace, and reports:
+//! (router + dynamic batcher + PJRT executor) through the pipeline
+//! builder, replays the synthetic SQuAD eval split as a Poisson-ish
+//! request trace, and reports:
 //!
 //! * answer exact-match accuracy through the full rust serving path,
 //! * p50/p95/p99 latency, throughput, batch occupancy,
@@ -10,57 +11,48 @@
 //!   Topkima-Former fabric (TOPS, TOPS/W, softmax-macro speedup) —
 //!   i.e. what this trace would cost on the paper's silicon.
 //!
+//! Every layer is assembled from ONE `StackConfig`, so the served k, the
+//! co-simulated sparsity, and the coordinator's stream key can't drift.
+//!
 //! Run: `make artifacts && cargo run --release --example serve`
-//! Flags: `--requests N` (default 256), `--model bert|vit`, `--k K`.
+//! Flags: `--requests N` (default 256), `--model bert|vit`, `--k K`,
+//! `--max-wait-us U`, or `--config stack.json`.
 
 use std::time::Duration;
 
-use topkima::coordinator::{Coordinator, InputData, PjrtExecutor, Router};
-use topkima::model::TransformerConfig;
-use topkima::runtime::Engine;
-use topkima::sim::{simulate_attention, SimConfig, SoftmaxKind};
+use topkima::coordinator::InputData;
+use topkima::pipeline::{ModelKind, StackConfig};
+use topkima::softmax::SoftmaxKind;
 use topkima::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
-    let args: Vec<String> = std::env::args().collect();
-    let get = |name: &str, default: &str| -> String {
-        args.iter()
-            .position(|a| a == name)
-            .and_then(|i| args.get(i + 1))
-            .cloned()
-            .unwrap_or_else(|| default.to_string())
-    };
-    let family = get("--model", "bert");
-    let k: usize = get("--k", "5").parse()?;
-    let n_requests: usize = get("--requests", "256").parse()?;
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cfg = StackConfig::from_args_with(
+        StackConfig::default().with_model(ModelKind::BertTiny),
+        &args,
+    )?;
+    let b = cfg.build()?;
+    let family = b.config().model.family();
+    let k = b.config().k;
 
     // ---- load artifacts + eval trace ------------------------------------
-    let engine = Engine::new("artifacts")?;
+    let engine = b.engine()?;
     println!("platform {}", engine.platform());
-    let buckets = engine.manifest.batch_sizes(&family, k);
+    let buckets = b.buckets(&engine);
     anyhow::ensure!(!buckets.is_empty(), "no artifacts for {family} k={k}");
-    let ckpt = &engine.manifest.checkpoints[&family];
+    let ckpt = &engine.manifest.checkpoints[family];
     println!(
         "{family} checkpoint: {} params, trained eval acc {:.3}",
         ckpt.params, ckpt.accuracy
     );
     println!("serve buckets {buckets:?}");
-    let eval = engine.manifest.eval_set(&family)?;
+    let eval = engine.manifest.eval_set(family)?;
 
     // ---- start coordinator ----------------------------------------------
-    let mut router = Router::new();
-    router.register(&family, k, buckets.clone(), Duration::from_millis(2));
-    let fam2 = family.clone();
-    let mut coord = Coordinator::start(router, move || {
-        let engine = Engine::new("artifacts").expect("engine");
-        Box::new(
-            PjrtExecutor::preload(&engine, &[(fam2, k, buckets)])
-                .expect("preload"),
-        )
-    });
+    let mut coord = b.start_coordinator(buckets);
 
     // ---- replay the trace with jittered arrivals -------------------------
-    let n = n_requests.min(eval.len());
+    let n = b.config().serving.requests.min(eval.len());
     let stride = eval.x_stride();
     let mut rng = Rng::new(2026);
     let t0 = std::time::Instant::now();
@@ -71,7 +63,7 @@ fn main() -> anyhow::Result<()> {
         } else {
             InputData::I32(eval.x_i32[i * stride..(i + 1) * stride].to_vec())
         };
-        rxs.push(coord.submit(&family, k, input));
+        rxs.push(coord.submit(family, k, input));
         // bursty arrivals: occasionally pause so the batcher sees both
         // full and timeout-formed batches
         if rng.chance(0.05) {
@@ -107,12 +99,13 @@ fn main() -> anyhow::Result<()> {
 
     // ---- co-simulate the same trace on the Topkima-Former fabric ---------
     println!("\n== hardware co-simulation of this trace ==");
-    let tc = TransformerConfig::bert_tiny();
-    for softmax in
-        [SoftmaxKind::Conventional, SoftmaxKind::Dtopk, SoftmaxKind::Topkima]
-    {
-        let sc = SimConfig { softmax, ..SimConfig::default() };
-        let r = simulate_attention(&tc, &sc);
+    let tc = b.transformer();
+    for kind in SoftmaxKind::ALL {
+        // skip kinds this config can't express (k = 0 is conv-only)
+        let Ok(bb) = b.config().clone().with_softmax(kind).build() else {
+            continue;
+        };
+        let r = bb.simulate();
         let module_ns = r.latency_ns();
         let module_pj = r.energy_pj();
         let total_ms =
@@ -122,7 +115,7 @@ fn main() -> anyhow::Result<()> {
         println!(
             "{:<12} {n} requests x {} layers: {:.2} ms, {:.3} mJ \
              ({:.2} TOPS, {:.2} TOPS/W)",
-            softmax.name(),
+            kind.name(),
             tc.n_layers,
             total_ms,
             total_mj,

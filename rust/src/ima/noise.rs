@@ -17,7 +17,7 @@ use crate::util::rng::Rng;
 
 /// Error-model parameters (LSB units). Must match the python defaults in
 /// `error_inject.ErrorModel` — parity is asserted in `rust/tests`.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct NoiseModel {
     pub sigma_noise: f64,
     pub sigma_offset: f64,

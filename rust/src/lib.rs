@@ -13,6 +13,9 @@
 //!   level (NeuroSim-equivalent accounting + Table I baselines).
 //! * [`runtime`], [`coordinator`] — the serving layer (PJRT execution of
 //!   AOT artifacts, routing/batching/scheduling).
+//! * [`pipeline`] — the one public assembly API: a `StackConfig` +
+//!   `PipelineBuilder` that compose circuit → sim → serving from a
+//!   single configuration value.
 //! * [`quant`], [`util`] — shared contracts and dependency-free support.
 
 pub mod accel;
@@ -22,6 +25,7 @@ pub mod circuits;
 pub mod crossbar;
 pub mod ima;
 pub mod model;
+pub mod pipeline;
 pub mod quant;
 pub mod runtime;
 pub mod scale;

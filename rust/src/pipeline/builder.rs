@@ -1,0 +1,262 @@
+//! [`PipelineBuilder`]: circuit → sim → serving from one validated
+//! [`StackConfig`].
+//!
+//! The builder is the only place in the tree where `MacroParts`,
+//! `SimConfig`, and the `Router`/`Coordinator` wiring are assembled;
+//! every CLI subcommand, example, and figure bench goes through it, so
+//! the three layers can never drift apart (the sim-level `topk`, the
+//! macro-level `k`, and the serving stream's `k` are all `cfg.k`, etc.).
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::arch::ArchConfig;
+use crate::coordinator::{Coordinator, PjrtExecutor, Router};
+use crate::crossbar::Crossbar;
+use crate::ima::ColumnNoise;
+use crate::model::TransformerConfig;
+use crate::runtime::Engine;
+use crate::sim::{simulate_attention, system_energy, ModuleReport, SimConfig};
+use crate::softmax::macros::{macro_for, MacroParts};
+use crate::softmax::SoftmaxMacro;
+use crate::util::rng::Rng;
+
+use super::config::{ConfigError, StackConfig};
+
+/// Assembles every layer of the stack from one validated config.
+#[derive(Clone, Debug)]
+pub struct PipelineBuilder {
+    cfg: StackConfig,
+}
+
+impl PipelineBuilder {
+    /// Validate the config and wrap it for assembly.
+    pub fn new(cfg: StackConfig) -> Result<PipelineBuilder, ConfigError> {
+        cfg.validate()?;
+        Ok(PipelineBuilder { cfg })
+    }
+
+    /// The validated configuration this builder assembles from.
+    pub fn config(&self) -> &StackConfig {
+        &self.cfg
+    }
+
+    // ---- circuit level -------------------------------------------------
+
+    /// Shared macro substrate for a programmed K^T tile: crossbar at the
+    /// configured geometry/technology, converter calibrated to the tile,
+    /// configured noise (if any) drawn from `rng`.
+    pub fn macro_parts(
+        &self,
+        kt_codes: &[Vec<i32>],
+        rng: &mut Rng,
+    ) -> MacroParts {
+        let c = &self.cfg;
+        let xbar =
+            Crossbar::program(c.tech, c.rows, c.cols, c.replica_rows, kt_codes);
+        let cols = xbar.used_cols();
+        let parts = MacroParts::new(xbar);
+        match &c.noise {
+            None => parts,
+            Some(nm) => parts.with_noise(ColumnNoise::new(*nm, cols, rng)),
+        }
+    }
+
+    /// The configured softmax macro over a programmed K^T tile.
+    pub fn build_macro(
+        &self,
+        kt_codes: &[Vec<i32>],
+        rng: &mut Rng,
+    ) -> Box<dyn SoftmaxMacro> {
+        macro_for(
+            self.cfg.softmax,
+            self.macro_parts(kt_codes, rng),
+            self.cfg.k,
+        )
+    }
+
+    /// Head-shaped macro over pseudo-random (roughly normal) K^T codes —
+    /// the workload generator the Fig-4 benches share.
+    pub fn build_macro_gaussian(
+        &self,
+        depth: usize,
+        cols: usize,
+        rng: &mut Rng,
+    ) -> Box<dyn SoftmaxMacro> {
+        let kt = gaussian_kt(depth, cols, rng);
+        self.build_macro(&kt, rng)
+    }
+
+    // ---- architecture level --------------------------------------------
+
+    /// The workload descriptor, with the stack's `k` and sequence-length
+    /// override applied (so the sim-level sparsity always matches the
+    /// circuit-level selection).
+    pub fn transformer(&self) -> TransformerConfig {
+        let mut tc = self.cfg.model.transformer();
+        tc.topk = self.cfg.k;
+        if let Some(sl) = self.cfg.seq_len {
+            tc = tc.with_seq_len(sl);
+        }
+        tc
+    }
+
+    /// The system-simulator configuration derived from the stack config.
+    /// The geometry maps onto the SRAM score arrays — validation pins
+    /// `tech` to SRAM, so this cannot silently diverge from the macro.
+    pub fn sim_config(&self) -> SimConfig {
+        let c = &self.cfg;
+        SimConfig {
+            arch: ArchConfig {
+                sram_rows: c.rows,
+                sram_cols: c.cols,
+                sram_replica_rows: c.replica_rows,
+                ..ArchConfig::default()
+            },
+            softmax: c.softmax,
+            scale: c.scale,
+            alpha: c.alpha,
+            rram_row_parallel: c.rram_row_parallel,
+            sram_row_parallel: c.sram_row_parallel,
+            energy: system_energy(),
+        }
+    }
+
+    /// Simulate one attention module of the configured workload.
+    pub fn simulate(&self) -> ModuleReport {
+        simulate_attention(&self.transformer(), &self.sim_config())
+    }
+
+    // ---- serving level -------------------------------------------------
+
+    /// PJRT engine over the configured artifact directory.
+    pub fn engine(&self) -> Result<Engine> {
+        Engine::new(&self.cfg.serving.artifacts)
+    }
+
+    /// Bucket sizes the manifest exports for this config's stream.
+    pub fn buckets(&self, engine: &Engine) -> Vec<usize> {
+        engine
+            .manifest
+            .batch_sizes(self.cfg.model.family(), self.cfg.k)
+    }
+
+    /// Router with this config's (family, k) stream registered under the
+    /// configured batching deadline.
+    pub fn router(&self, buckets: Vec<usize>) -> Router {
+        let mut router = Router::new();
+        router.register(
+            self.cfg.model.family(),
+            self.cfg.k,
+            buckets,
+            Duration::from_micros(self.cfg.serving.max_wait_us),
+        );
+        router
+    }
+
+    /// Start the serving coordinator: router per config + PJRT executor
+    /// preloaded inside the coordinator thread (PJRT handles are not
+    /// `Send`, so the engine is constructed there).
+    pub fn start_coordinator(&self, buckets: Vec<usize>) -> Coordinator {
+        let router = self.router(buckets.clone());
+        let dir = self.cfg.serving.artifacts.clone();
+        let family = self.cfg.model.family().to_string();
+        let k = self.cfg.k;
+        Coordinator::start(router, move || {
+            let engine =
+                Engine::new(&dir).expect("engine in coordinator thread");
+            Box::new(
+                PjrtExecutor::preload(&engine, &[(family, k, buckets)])
+                    .expect("preload executables"),
+            )
+        })
+    }
+}
+
+/// Roughly-normal 15-level K^T codes (σ ≈ 2.5, clamped to ±7), the
+/// distribution the figure benches draw their tiles from.
+pub fn gaussian_kt(depth: usize, cols: usize, rng: &mut Rng) -> Vec<Vec<i32>> {
+    (0..depth)
+        .map(|_| {
+            (0..cols)
+                .map(|_| (rng.normal() * 2.5).round().clamp(-7.0, 7.0) as i32)
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::softmax::SoftmaxKind;
+
+    #[test]
+    fn sim_layer_mirrors_stack_knobs() {
+        let b = StackConfig::default()
+            .with_k(9)
+            .with_softmax(SoftmaxKind::Dtopk)
+            .with_seq_len(512)
+            .build()
+            .unwrap();
+        let tc = b.transformer();
+        assert_eq!(tc.topk, 9);
+        assert_eq!(tc.seq_len, 512);
+        let sc = b.sim_config();
+        assert_eq!(sc.softmax, SoftmaxKind::Dtopk);
+        assert_eq!(sc.arch.sram_rows, 256);
+        assert_eq!(sc.arch.sram_replica_rows, 64);
+    }
+
+    #[test]
+    fn invalid_config_never_reaches_assembly() {
+        assert!(StackConfig::default().with_k(0).build().is_err());
+    }
+
+    #[test]
+    fn macro_kind_follows_config() {
+        let mut rng = Rng::new(1);
+        for kind in SoftmaxKind::ALL {
+            let b = StackConfig::default()
+                .with_softmax(kind)
+                .build()
+                .unwrap();
+            let m = b.build_macro_gaussian(16, 32, &mut rng);
+            assert_eq!(m.name(), kind.name());
+        }
+    }
+
+    #[test]
+    fn noisy_macro_draws_offsets_deterministically() {
+        let cfg = StackConfig::default()
+            .with_noise(crate::ima::NoiseModel::default());
+        let kt = gaussian_kt(16, 32, &mut Rng::new(2));
+        let q: Vec<Vec<i32>> = vec![vec![3; 16], vec![-5; 16]];
+        let run = |cfg: StackConfig| {
+            let b = cfg.build().unwrap();
+            let m = b.build_macro(&kt, &mut Rng::new(3));
+            m.run(&q, &mut Rng::new(4))
+        };
+        let (pa, ca) = run(cfg.clone());
+        let (pb, cb) = run(cfg);
+        assert_eq!(ca, cb);
+        assert_eq!(pa, pb);
+    }
+
+    #[test]
+    fn simulate_runs_on_default_point() {
+        let r = StackConfig::default().build().unwrap().simulate();
+        assert!(r.latency_ns() > 0.0 && r.energy_pj() > 0.0);
+        assert_eq!(r.softmax, SoftmaxKind::Topkima);
+    }
+
+    #[test]
+    fn router_registers_configured_stream() {
+        let b = StackConfig::default().build().unwrap();
+        let router = b.router(vec![1, 2, 4]);
+        assert_eq!(
+            router.streams(),
+            vec![("bert".to_string(), 5)]
+        );
+    }
+}

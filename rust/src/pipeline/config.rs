@@ -1,0 +1,890 @@
+//! [`StackConfig`]: the single cross-layer configuration contract, with
+//! typed validation, JSON load/save (via `util::json` — no serde in the
+//! offline build), and strict CLI-flag parsing.
+
+use std::fmt;
+use std::path::Path;
+
+use crate::crossbar::{Crossbar, Tech};
+use crate::ima::NoiseModel;
+use crate::model::TransformerConfig;
+use crate::scale::ScaleImpl;
+use crate::softmax::SoftmaxKind;
+use crate::util::json::{self, Json};
+
+use super::builder::PipelineBuilder;
+
+/// Typed configuration errors: flag parsing, JSON decoding, validation.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ConfigError {
+    /// A CLI flag no subcommand knows.
+    UnknownFlag(String),
+    /// A flag was given without a value.
+    MissingValue(String),
+    /// A flag/field value failed to parse.
+    InvalidValue {
+        flag: String,
+        value: String,
+        expected: &'static str,
+    },
+    /// A JSON config key we do not define (rejected loudly, like the
+    /// rest of `util::json`'s inputs).
+    UnknownField(String),
+    /// A structurally valid value that violates a stack invariant.
+    Invalid { field: String, reason: String },
+    /// Filesystem error while loading/saving a config file.
+    Io(String),
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConfigError::UnknownFlag(flag) => {
+                write!(f, "unknown flag '{flag}'")
+            }
+            ConfigError::MissingValue(flag) => {
+                write!(f, "flag --{flag} needs a value")
+            }
+            ConfigError::InvalidValue { flag, value, expected } => write!(
+                f,
+                "invalid value '{value}' for --{flag}: expected {expected}"
+            ),
+            ConfigError::UnknownField(key) => {
+                write!(f, "unknown config field '{key}'")
+            }
+            ConfigError::Invalid { field, reason } => {
+                write!(f, "invalid config: {field} {reason}")
+            }
+            ConfigError::Io(msg) => write!(f, "config i/o: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+fn invalid(field: &str, reason: impl fmt::Display) -> ConfigError {
+    ConfigError::Invalid { field: field.to_string(), reason: reason.to_string() }
+}
+
+/// Known workload shapes (the `TransformerConfig` presets).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    BertBase,
+    DistilBert,
+    VitBase,
+    BertTiny,
+}
+
+impl ModelKind {
+    /// Stable identifier used by CLI flags and the JSON config.
+    pub fn key(self) -> &'static str {
+        match self {
+            ModelKind::BertBase => "bert-base",
+            ModelKind::DistilBert => "distilbert",
+            ModelKind::VitBase => "vit-base",
+            ModelKind::BertTiny => "bert-tiny",
+        }
+    }
+
+    /// Parse an identifier; `bert` / `vit` alias the exported artifact
+    /// families (bert-tiny / vit-base).
+    pub fn parse(s: &str) -> Option<ModelKind> {
+        match s {
+            "bert-base" => Some(ModelKind::BertBase),
+            "distilbert" => Some(ModelKind::DistilBert),
+            "vit-base" | "vit" => Some(ModelKind::VitBase),
+            "bert-tiny" | "bert" => Some(ModelKind::BertTiny),
+            _ => None,
+        }
+    }
+
+    /// Artifact family this workload is served from.
+    pub fn family(self) -> &'static str {
+        match self {
+            ModelKind::VitBase => "vit",
+            _ => "bert",
+        }
+    }
+
+    /// The workload descriptor the simulator executes.
+    pub fn transformer(self) -> TransformerConfig {
+        match self {
+            ModelKind::BertBase => TransformerConfig::bert_base(),
+            ModelKind::DistilBert => TransformerConfig::distilbert(),
+            ModelKind::VitBase => TransformerConfig::vit_base(),
+            ModelKind::BertTiny => TransformerConfig::bert_tiny(),
+        }
+    }
+}
+
+/// Serving-layer knobs: artifact location, batching policy, replay size.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServingConfig {
+    /// AOT artifact directory (`make artifacts` output).
+    pub artifacts: String,
+    /// Dynamic-batcher deadline: max µs the oldest request waits before
+    /// a partial bucket fires.
+    pub max_wait_us: u64,
+    /// Requests to replay in `serve`.
+    pub requests: usize,
+    /// Direct-execution batch size for `sweep`.
+    pub batch: usize,
+    /// Eval-sample cap for `sweep`.
+    pub limit: usize,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            artifacts: "artifacts".to_string(),
+            max_wait_us: 2000,
+            requests: 256,
+            batch: 32,
+            limit: 512,
+        }
+    }
+}
+
+/// The one cross-layer stack description every layer is assembled from.
+///
+/// Defaults mirror the paper's evaluation point: SRAM 256×256 arrays
+/// with 64 replica rows, k = 5, topkima softmax, scale-free attention,
+/// α = 0.31, BERT-base workload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StackConfig {
+    /// Crossbar technology of the score/aggregate arrays.
+    pub tech: Tech,
+    /// Top-k winners per softmax row (0 = dense, Conventional only).
+    pub k: usize,
+    /// Softmax macro design for the score stage.
+    pub softmax: SoftmaxKind,
+    /// Scaling-operation implementation (Fig 4d).
+    pub scale: ScaleImpl,
+    /// Conversion-error model; `None` = ideal converter.
+    pub noise: Option<NoiseModel>,
+    /// Crossbar geometry (rows × cols, replica-row budget).
+    pub rows: usize,
+    pub cols: usize,
+    pub replica_rows: usize,
+    /// Measured early-stop fraction α for the analytic system level.
+    pub alpha: f64,
+    /// Row-parallel weight replicas (NeuroSim speedup-vs-area knobs).
+    pub rram_row_parallel: usize,
+    pub sram_row_parallel: usize,
+    /// Workload shape.
+    pub model: ModelKind,
+    /// Override the preset's sequence length (SL scaling studies).
+    pub seq_len: Option<usize>,
+    /// Serving layer.
+    pub serving: ServingConfig,
+}
+
+impl Default for StackConfig {
+    fn default() -> Self {
+        StackConfig {
+            tech: Tech::Sram,
+            k: 5,
+            softmax: SoftmaxKind::Topkima,
+            scale: ScaleImpl::ScaleFree,
+            noise: None,
+            rows: 256,
+            cols: 256,
+            replica_rows: 64,
+            alpha: 0.31,
+            rram_row_parallel: 1,
+            sram_row_parallel: 1,
+            model: ModelKind::BertBase,
+            seq_len: None,
+            serving: ServingConfig::default(),
+        }
+    }
+}
+
+impl StackConfig {
+    // ---- fluent construction -------------------------------------------
+
+    pub fn with_softmax(mut self, softmax: SoftmaxKind) -> Self {
+        self.softmax = softmax;
+        self
+    }
+
+    pub fn with_k(mut self, k: usize) -> Self {
+        self.k = k;
+        self
+    }
+
+    pub fn with_scale(mut self, scale: ScaleImpl) -> Self {
+        self.scale = scale;
+        self
+    }
+
+    pub fn with_noise(mut self, noise: NoiseModel) -> Self {
+        self.noise = Some(noise);
+        self
+    }
+
+    pub fn with_model(mut self, model: ModelKind) -> Self {
+        self.model = model;
+        self
+    }
+
+    pub fn with_seq_len(mut self, seq_len: usize) -> Self {
+        self.seq_len = Some(seq_len);
+        self
+    }
+
+    pub fn with_geometry(
+        mut self,
+        rows: usize,
+        cols: usize,
+        replica_rows: usize,
+    ) -> Self {
+        self.rows = rows;
+        self.cols = cols;
+        self.replica_rows = replica_rows;
+        self
+    }
+
+    /// Validate and hand the config to the builder.
+    pub fn build(self) -> Result<PipelineBuilder, ConfigError> {
+        PipelineBuilder::new(self)
+    }
+
+    // ---- validation ----------------------------------------------------
+
+    /// Check every stack invariant; the builder refuses configs that
+    /// fail here, so drift between layers is caught at assembly time.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.tech != Tech::Sram {
+            // The score/aggregate arrays are SRAM in the paper's design
+            // and the system simulator models them as such; accepting
+            // RRAM here would let the circuit and sim layers drift.
+            return Err(invalid(
+                "tech",
+                "must be sram: the system level models SRAM score \
+                 arrays (RRAM is the projection path)",
+            ));
+        }
+        if self.cols == 0 {
+            return Err(invalid("cols", "must be ≥ 1"));
+        }
+        if self.rows <= self.replica_rows {
+            return Err(invalid(
+                "rows",
+                format!(
+                    "({}) must exceed replica_rows ({})",
+                    self.rows, self.replica_rows
+                ),
+            ));
+        }
+        if Crossbar::weight_capacity(self.rows, self.replica_rows) == 0 {
+            return Err(invalid(
+                "rows",
+                "leave no room for a single ternary weight gang",
+            ));
+        }
+        if self.k == 0 && self.softmax != SoftmaxKind::Conventional {
+            return Err(invalid(
+                "k",
+                format!("= 0 (dense) requires conv softmax, not {}",
+                        self.softmax.key()),
+            ));
+        }
+        if self.k > self.cols {
+            return Err(invalid(
+                "k",
+                format!("({}) exceeds crossbar columns ({})", self.k, self.cols),
+            ));
+        }
+        if !(self.alpha > 0.0 && self.alpha <= 1.0) {
+            return Err(invalid(
+                "alpha",
+                format!("({}) must lie in (0, 1]", self.alpha),
+            ));
+        }
+        if self.rram_row_parallel == 0 || self.sram_row_parallel == 0 {
+            return Err(invalid("row_parallel", "factors must be ≥ 1"));
+        }
+        if let Some(sl) = self.seq_len {
+            if sl == 0 {
+                return Err(invalid("seq_len", "must be ≥ 1"));
+            }
+        }
+        if let Some(n) = &self.noise {
+            if n.sigma_noise < 0.0 || n.sigma_offset < 0.0 {
+                return Err(invalid("noise", "sigmas must be ≥ 0"));
+            }
+            if !(0.0..=1.0).contains(&n.p_skip) {
+                return Err(invalid(
+                    "noise",
+                    format!("p_skip ({}) must lie in [0, 1]", n.p_skip),
+                ));
+            }
+        }
+        if self.serving.batch == 0 {
+            return Err(invalid("serving.batch", "must be ≥ 1"));
+        }
+        Ok(())
+    }
+
+    // ---- JSON ----------------------------------------------------------
+
+    /// Serialize to the JSON value tree.
+    pub fn to_json(&self) -> Json {
+        let noise = match &self.noise {
+            None => Json::Null,
+            Some(n) => Json::obj(vec![
+                ("sigma_noise", Json::Num(n.sigma_noise)),
+                ("sigma_offset", Json::Num(n.sigma_offset)),
+                ("p_skip", Json::Num(n.p_skip)),
+            ]),
+        };
+        Json::obj(vec![
+            ("tech", Json::Str(tech_key(self.tech).to_string())),
+            ("k", Json::Num(self.k as f64)),
+            ("softmax", Json::Str(self.softmax.key().to_string())),
+            ("scale", Json::Str(scale_key(self.scale).to_string())),
+            ("noise", noise),
+            ("rows", Json::Num(self.rows as f64)),
+            ("cols", Json::Num(self.cols as f64)),
+            ("replica_rows", Json::Num(self.replica_rows as f64)),
+            ("alpha", Json::Num(self.alpha)),
+            ("rram_row_parallel", Json::Num(self.rram_row_parallel as f64)),
+            ("sram_row_parallel", Json::Num(self.sram_row_parallel as f64)),
+            ("model", Json::Str(self.model.key().to_string())),
+            (
+                "seq_len",
+                self.seq_len.map_or(Json::Null, |s| Json::Num(s as f64)),
+            ),
+            (
+                "serving",
+                Json::obj(vec![
+                    (
+                        "artifacts",
+                        Json::Str(self.serving.artifacts.clone()),
+                    ),
+                    ("max_wait_us", Json::Num(self.serving.max_wait_us as f64)),
+                    ("requests", Json::Num(self.serving.requests as f64)),
+                    ("batch", Json::Num(self.serving.batch as f64)),
+                    ("limit", Json::Num(self.serving.limit as f64)),
+                ]),
+            ),
+        ])
+    }
+
+    /// Compact JSON text.
+    pub fn to_json_string(&self) -> String {
+        json::to_string(&self.to_json())
+    }
+
+    /// Decode from a JSON value tree. Unknown keys are rejected; absent
+    /// keys keep their defaults; the result is validated.
+    pub fn from_json(root: &Json) -> Result<StackConfig, ConfigError> {
+        let obj = root
+            .as_obj()
+            .ok_or_else(|| invalid("config", "top level must be an object"))?;
+        let mut cfg = StackConfig::default();
+        for (key, value) in obj {
+            match key.as_str() {
+                "tech" => cfg.tech = tech_from(value)?,
+                "k" => cfg.k = json_usize(value, "k")?,
+                "softmax" => cfg.softmax = softmax_from(value)?,
+                "scale" => cfg.scale = scale_from(value)?,
+                "noise" => cfg.noise = noise_from(value)?,
+                "rows" => cfg.rows = json_usize(value, "rows")?,
+                "cols" => cfg.cols = json_usize(value, "cols")?,
+                "replica_rows" => {
+                    cfg.replica_rows = json_usize(value, "replica_rows")?
+                }
+                "alpha" => cfg.alpha = json_f64(value, "alpha")?,
+                "rram_row_parallel" => {
+                    cfg.rram_row_parallel =
+                        json_usize(value, "rram_row_parallel")?
+                }
+                "sram_row_parallel" => {
+                    cfg.sram_row_parallel =
+                        json_usize(value, "sram_row_parallel")?
+                }
+                "model" => cfg.model = model_from(value)?,
+                "seq_len" => {
+                    cfg.seq_len = match value {
+                        Json::Null => None,
+                        v => Some(json_usize(v, "seq_len")?),
+                    }
+                }
+                "serving" => cfg.serving = serving_from(value)?,
+                other => {
+                    return Err(ConfigError::UnknownField(other.to_string()))
+                }
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Decode from JSON text.
+    pub fn from_json_str(text: &str) -> Result<StackConfig, ConfigError> {
+        let root = Json::parse(text)
+            .map_err(|e| invalid("json", e.to_string()))?;
+        StackConfig::from_json(&root)
+    }
+
+    /// Write the config as JSON to `path`.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), ConfigError> {
+        std::fs::write(path.as_ref(), self.to_json_string()).map_err(|e| {
+            ConfigError::Io(format!("{}: {e}", path.as_ref().display()))
+        })
+    }
+
+    /// Load a config JSON file.
+    pub fn load(path: impl AsRef<Path>) -> Result<StackConfig, ConfigError> {
+        let text = std::fs::read_to_string(path.as_ref()).map_err(|e| {
+            ConfigError::Io(format!("{}: {e}", path.as_ref().display()))
+        })?;
+        StackConfig::from_json_str(&text)
+    }
+
+    // ---- CLI flags -----------------------------------------------------
+
+    /// Parse `--flag value` pairs over the default config. Unknown flags
+    /// and malformed values are rejected with a typed error (the old
+    /// `parse_flags` silently defaulted both).
+    pub fn from_args(args: &[String]) -> Result<StackConfig, ConfigError> {
+        Self::from_args_with(StackConfig::default(), args)
+    }
+
+    /// Same, starting from subcommand-specific defaults. `--config FILE`
+    /// is applied first as the new base regardless of where it appears,
+    /// so every explicit flag overrides the file (never the reverse).
+    pub fn from_args_with(
+        mut cfg: StackConfig,
+        args: &[String],
+    ) -> Result<StackConfig, ConfigError> {
+        // Pass 1: locate --config (validating its value is present) and
+        // make the file the base the remaining flags are applied onto.
+        let mut i = 0;
+        while i < args.len() {
+            if args[i] == "--config" {
+                match args.get(i + 1) {
+                    Some(v) if !v.starts_with("--") => {
+                        cfg = StackConfig::load(v)?;
+                    }
+                    _ => {
+                        return Err(ConfigError::MissingValue(
+                            "config".to_string(),
+                        ))
+                    }
+                }
+                i += 2;
+            } else {
+                i += 1;
+            }
+        }
+        // Pass 2: apply every other flag in order.
+        let mut i = 0;
+        while i < args.len() {
+            let arg = &args[i];
+            let name = match arg.strip_prefix("--") {
+                Some(n) => n,
+                None => return Err(ConfigError::UnknownFlag(arg.clone())),
+            };
+            let val = match args.get(i + 1) {
+                Some(v) if !v.starts_with("--") => v.clone(),
+                _ => return Err(ConfigError::MissingValue(name.to_string())),
+            };
+            i += 2;
+            match name {
+                "config" => {} // consumed in pass 1
+                "model" => {
+                    cfg.model = ModelKind::parse(&val).ok_or_else(|| {
+                        bad_flag("model", &val,
+                                 "bert-base|distilbert|vit-base|bert-tiny \
+                                  (aliases: bert, vit)")
+                    })?
+                }
+                "k" => cfg.k = parse_usize("k", &val)?,
+                "seq-len" => {
+                    cfg.seq_len = Some(parse_usize("seq-len", &val)?)
+                }
+                "softmax" => {
+                    cfg.softmax = SoftmaxKind::parse(&val).ok_or_else(|| {
+                        bad_flag("softmax", &val, "conv|dtopk|topkima")
+                    })?
+                }
+                "scale" => {
+                    cfg.scale = scale_parse(&val).ok_or_else(|| {
+                        bad_flag("scale", &val, "scale-free|left-shift|tron")
+                    })?
+                }
+                "tech" => {
+                    cfg.tech = tech_parse(&val)
+                        .ok_or_else(|| bad_flag("tech", &val, "sram|rram"))?
+                }
+                "alpha" => cfg.alpha = parse_f64("alpha", &val)?,
+                "rows" => cfg.rows = parse_usize("rows", &val)?,
+                "cols" => cfg.cols = parse_usize("cols", &val)?,
+                "replica-rows" => {
+                    cfg.replica_rows = parse_usize("replica-rows", &val)?
+                }
+                "rram-row-parallel" => {
+                    cfg.rram_row_parallel =
+                        parse_usize("rram-row-parallel", &val)?
+                }
+                "sram-row-parallel" => {
+                    cfg.sram_row_parallel =
+                        parse_usize("sram-row-parallel", &val)?
+                }
+                "noise" => {
+                    cfg.noise = match val.as_str() {
+                        "default" => Some(NoiseModel::default()),
+                        "ideal" | "none" => None,
+                        _ => {
+                            return Err(bad_flag(
+                                "noise", &val, "default|ideal",
+                            ))
+                        }
+                    }
+                }
+                "sigma-noise" => {
+                    zeroed_noise(&mut cfg).sigma_noise =
+                        parse_f64("sigma-noise", &val)?
+                }
+                "sigma-offset" => {
+                    zeroed_noise(&mut cfg).sigma_offset =
+                        parse_f64("sigma-offset", &val)?
+                }
+                "p-skip" => {
+                    zeroed_noise(&mut cfg).p_skip = parse_f64("p-skip", &val)?
+                }
+                "artifacts" => cfg.serving.artifacts = val,
+                "max-wait-us" => {
+                    cfg.serving.max_wait_us =
+                        parse_usize("max-wait-us", &val)? as u64
+                }
+                "requests" => {
+                    cfg.serving.requests = parse_usize("requests", &val)?
+                }
+                "batch" => cfg.serving.batch = parse_usize("batch", &val)?,
+                "limit" => cfg.serving.limit = parse_usize("limit", &val)?,
+                other => {
+                    return Err(ConfigError::UnknownFlag(format!("--{other}")))
+                }
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+// ---- parsing helpers ---------------------------------------------------
+
+fn bad_flag(flag: &str, value: &str, expected: &'static str) -> ConfigError {
+    ConfigError::InvalidValue {
+        flag: flag.to_string(),
+        value: value.to_string(),
+        expected,
+    }
+}
+
+fn parse_usize(flag: &str, v: &str) -> Result<usize, ConfigError> {
+    v.parse()
+        .map_err(|_| bad_flag(flag, v, "a non-negative integer"))
+}
+
+fn parse_f64(flag: &str, v: &str) -> Result<f64, ConfigError> {
+    v.parse().map_err(|_| bad_flag(flag, v, "a number"))
+}
+
+/// Mutable access to the noise model, starting (unlike
+/// `NoiseModel::default`) from all-zero so one flag sets one knob.
+fn zeroed_noise(cfg: &mut StackConfig) -> &mut NoiseModel {
+    cfg.noise.get_or_insert(NoiseModel {
+        sigma_noise: 0.0,
+        sigma_offset: 0.0,
+        p_skip: 0.0,
+    })
+}
+
+fn tech_key(t: Tech) -> &'static str {
+    match t {
+        Tech::Sram => "sram",
+        Tech::Rram => "rram",
+    }
+}
+
+fn tech_parse(s: &str) -> Option<Tech> {
+    match s {
+        "sram" => Some(Tech::Sram),
+        "rram" => Some(Tech::Rram),
+        _ => None,
+    }
+}
+
+fn scale_key(s: ScaleImpl) -> &'static str {
+    match s {
+        ScaleImpl::ScaleFree => "scale-free",
+        ScaleImpl::LeftShift => "left-shift",
+        ScaleImpl::TronFreeScale => "tron",
+    }
+}
+
+fn scale_parse(s: &str) -> Option<ScaleImpl> {
+    match s {
+        "scale-free" => Some(ScaleImpl::ScaleFree),
+        "left-shift" => Some(ScaleImpl::LeftShift),
+        "tron" | "tron-free-scale" => Some(ScaleImpl::TronFreeScale),
+        _ => None,
+    }
+}
+
+// ---- JSON field decoders ------------------------------------------------
+
+fn json_usize(v: &Json, field: &str) -> Result<usize, ConfigError> {
+    match v.as_f64() {
+        Some(n) if n >= 0.0 && n.fract() == 0.0 => Ok(n as usize),
+        _ => Err(invalid(field, "must be a non-negative integer")),
+    }
+}
+
+fn json_f64(v: &Json, field: &str) -> Result<f64, ConfigError> {
+    v.as_f64().ok_or_else(|| invalid(field, "must be a number"))
+}
+
+fn json_str<'a>(v: &'a Json, field: &str) -> Result<&'a str, ConfigError> {
+    v.as_str().ok_or_else(|| invalid(field, "must be a string"))
+}
+
+fn tech_from(v: &Json) -> Result<Tech, ConfigError> {
+    let s = json_str(v, "tech")?;
+    tech_parse(s).ok_or_else(|| invalid("tech", format!("'{s}' unknown")))
+}
+
+fn softmax_from(v: &Json) -> Result<SoftmaxKind, ConfigError> {
+    let s = json_str(v, "softmax")?;
+    SoftmaxKind::parse(s)
+        .ok_or_else(|| invalid("softmax", format!("'{s}' unknown")))
+}
+
+fn scale_from(v: &Json) -> Result<ScaleImpl, ConfigError> {
+    let s = json_str(v, "scale")?;
+    scale_parse(s).ok_or_else(|| invalid("scale", format!("'{s}' unknown")))
+}
+
+fn model_from(v: &Json) -> Result<ModelKind, ConfigError> {
+    let s = json_str(v, "model")?;
+    ModelKind::parse(s)
+        .ok_or_else(|| invalid("model", format!("'{s}' unknown")))
+}
+
+fn noise_from(v: &Json) -> Result<Option<NoiseModel>, ConfigError> {
+    let obj = match v {
+        Json::Null => return Ok(None),
+        other => other
+            .as_obj()
+            .ok_or_else(|| invalid("noise", "must be null or an object"))?,
+    };
+    let mut n = NoiseModel { sigma_noise: 0.0, sigma_offset: 0.0, p_skip: 0.0 };
+    for (key, value) in obj {
+        match key.as_str() {
+            "sigma_noise" => n.sigma_noise = json_f64(value, "sigma_noise")?,
+            "sigma_offset" => {
+                n.sigma_offset = json_f64(value, "sigma_offset")?
+            }
+            "p_skip" => n.p_skip = json_f64(value, "p_skip")?,
+            other => {
+                return Err(ConfigError::UnknownField(format!("noise.{other}")))
+            }
+        }
+    }
+    Ok(Some(n))
+}
+
+fn serving_from(v: &Json) -> Result<ServingConfig, ConfigError> {
+    let obj = v
+        .as_obj()
+        .ok_or_else(|| invalid("serving", "must be an object"))?;
+    let mut s = ServingConfig::default();
+    for (key, value) in obj {
+        match key.as_str() {
+            "artifacts" => {
+                s.artifacts = json_str(value, "artifacts")?.to_string()
+            }
+            "max_wait_us" => {
+                s.max_wait_us = json_usize(value, "max_wait_us")? as u64
+            }
+            "requests" => s.requests = json_usize(value, "requests")?,
+            "batch" => s.batch = json_usize(value, "batch")?,
+            "limit" => s.limit = json_usize(value, "limit")?,
+            other => {
+                return Err(ConfigError::UnknownField(format!(
+                    "serving.{other}"
+                )))
+            }
+        }
+    }
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn json_roundtrip_is_identity() {
+        let cfg = StackConfig::default()
+            .with_k(7)
+            .with_softmax(SoftmaxKind::Dtopk)
+            .with_scale(ScaleImpl::LeftShift)
+            .with_noise(NoiseModel::default())
+            .with_seq_len(1024);
+        let back = StackConfig::from_json_str(&cfg.to_json_string()).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn default_roundtrips_with_null_noise() {
+        let cfg = StackConfig::default();
+        let text = cfg.to_json_string();
+        assert!(text.contains("\"noise\":null"));
+        assert_eq!(StackConfig::from_json_str(&text).unwrap(), cfg);
+    }
+
+    #[test]
+    fn unknown_json_field_rejected() {
+        let err =
+            StackConfig::from_json_str(r#"{"topk": 5}"#).unwrap_err();
+        assert_eq!(err, ConfigError::UnknownField("topk".to_string()));
+    }
+
+    #[test]
+    fn from_args_parses_typed_flags() {
+        let cfg = StackConfig::from_args(&args(&[
+            "--softmax", "dtopk", "--k", "9", "--seq-len", "512",
+            "--model", "vit", "--alpha", "0.4", "--scale", "left-shift",
+        ]))
+        .unwrap();
+        assert_eq!(cfg.softmax, SoftmaxKind::Dtopk);
+        assert_eq!(cfg.k, 9);
+        assert_eq!(cfg.seq_len, Some(512));
+        assert_eq!(cfg.model, ModelKind::VitBase);
+        assert_eq!(cfg.scale, ScaleImpl::LeftShift);
+        assert!((cfg.alpha - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let err = StackConfig::from_args(&args(&["--topk", "5"])).unwrap_err();
+        assert_eq!(err, ConfigError::UnknownFlag("--topk".to_string()));
+        let err = StackConfig::from_args(&args(&["report"])).unwrap_err();
+        assert_eq!(err, ConfigError::UnknownFlag("report".to_string()));
+    }
+
+    #[test]
+    fn non_numeric_value_rejected() {
+        let err = StackConfig::from_args(&args(&["--k", "five"])).unwrap_err();
+        assert_eq!(
+            err,
+            ConfigError::InvalidValue {
+                flag: "k".to_string(),
+                value: "five".to_string(),
+                expected: "a non-negative integer",
+            }
+        );
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        let err = StackConfig::from_args(&args(&["--k"])).unwrap_err();
+        assert_eq!(err, ConfigError::MissingValue("k".to_string()));
+        let err = StackConfig::from_args(&args(&["--k", "--seq-len", "4"]))
+            .unwrap_err();
+        assert_eq!(err, ConfigError::MissingValue("k".to_string()));
+    }
+
+    #[test]
+    fn validation_catches_stack_drift() {
+        let mut cfg = StackConfig::default();
+        cfg.tech = Tech::Rram;
+        assert!(cfg.validate().is_err(), "RRAM score arrays not modeled");
+        assert!(StackConfig::default().with_k(0).validate().is_err());
+        assert!(StackConfig::default()
+            .with_k(0)
+            .with_softmax(SoftmaxKind::Conventional)
+            .validate()
+            .is_ok());
+        assert!(StackConfig::default().with_k(300).validate().is_err());
+        assert!(StackConfig::default()
+            .with_geometry(64, 256, 64)
+            .validate()
+            .is_err());
+        let mut cfg = StackConfig::default();
+        cfg.alpha = 0.0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = StackConfig::default();
+        cfg.noise = Some(NoiseModel {
+            sigma_noise: 0.5,
+            sigma_offset: 0.3,
+            p_skip: 1.5,
+        });
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn noise_flags_start_from_zeroed_model() {
+        let cfg = StackConfig::from_args(&args(&["--sigma-noise", "0.25"]))
+            .unwrap();
+        let n = cfg.noise.unwrap();
+        assert_eq!(n.sigma_noise, 0.25);
+        assert_eq!(n.sigma_offset, 0.0);
+        assert_eq!(n.p_skip, 0.0);
+    }
+
+    #[test]
+    fn config_file_roundtrip_with_override() {
+        let dir = std::env::temp_dir().join("topkima_cfg_test");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("stack.json");
+        let cfg = StackConfig::default().with_k(3);
+        cfg.save(&path).unwrap();
+        let loaded = StackConfig::load(&path).unwrap();
+        assert_eq!(loaded, cfg);
+        // --config loads the file, flags override it regardless of
+        // whether they come before or after the --config flag itself
+        let merged = StackConfig::from_args(&args(&[
+            "--config",
+            path.to_str().unwrap(),
+            "--k",
+            "9",
+        ]))
+        .unwrap();
+        assert_eq!(merged.k, 9);
+        let merged = StackConfig::from_args(&args(&[
+            "--k",
+            "9",
+            "--config",
+            path.to_str().unwrap(),
+        ]))
+        .unwrap();
+        assert_eq!(merged.k, 9);
+    }
+
+    #[test]
+    fn model_aliases() {
+        assert_eq!(ModelKind::parse("bert"), Some(ModelKind::BertTiny));
+        assert_eq!(ModelKind::parse("vit"), Some(ModelKind::VitBase));
+        assert_eq!(ModelKind::BertTiny.family(), "bert");
+        assert_eq!(ModelKind::VitBase.family(), "vit");
+        for kind in [
+            ModelKind::BertBase,
+            ModelKind::DistilBert,
+            ModelKind::VitBase,
+            ModelKind::BertTiny,
+        ] {
+            assert_eq!(ModelKind::parse(kind.key()), Some(kind));
+        }
+    }
+}

@@ -1,0 +1,37 @@
+//! The one public API for assembling the stack.
+//!
+//! The paper's argument is cross-layer: circuit-level topkima selection
+//! (Fig 4a), architecture-level scale-free attention (Fig 4d–h), and
+//! system-level serving wins (Table I) only mean something when they are
+//! evaluated on *one consistent configuration*. [`StackConfig`] is that
+//! configuration — tech, k, softmax kind, scale implementation, noise,
+//! crossbar geometry, row-parallelism, model shape, and batching policy
+//! in one value with JSON load/save and typed validation — and
+//! [`PipelineBuilder`] turns it into
+//!
+//! * any circuit-level softmax macro ([`PipelineBuilder::build_macro`]),
+//! * a system simulation ([`PipelineBuilder::simulate`]), and
+//! * a running serving coordinator
+//!   ([`PipelineBuilder::start_coordinator`]),
+//!
+//! so every CLI subcommand, example, and figure bench shares the same
+//! knob set from circuit model to system evaluation.
+//!
+//! ```
+//! use topkima::pipeline::StackConfig;
+//! use topkima::softmax::SoftmaxKind;
+//!
+//! let report = StackConfig::default()
+//!     .with_softmax(SoftmaxKind::Topkima)
+//!     .with_k(5)
+//!     .build()
+//!     .expect("valid config")
+//!     .simulate();
+//! assert!(report.latency_ns() > 0.0);
+//! ```
+
+pub mod builder;
+pub mod config;
+
+pub use builder::PipelineBuilder;
+pub use config::{ConfigError, ModelKind, ServingConfig, StackConfig};

@@ -19,23 +19,10 @@ use crate::circuits::Energy;
 use crate::model::{Op, OpKind, TransformerConfig};
 use crate::scale::ScaleImpl;
 
-/// Which softmax macro the score stage uses.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum SoftmaxKind {
-    Conventional,
-    Dtopk,
-    Topkima,
-}
-
-impl SoftmaxKind {
-    pub fn name(&self) -> &'static str {
-        match self {
-            SoftmaxKind::Conventional => "conv-SM",
-            SoftmaxKind::Dtopk => "Dtopk-SM",
-            SoftmaxKind::Topkima => "topkima-SM",
-        }
-    }
-}
+/// Re-export of the one canonical softmax-design enum (defined in
+/// `crate::softmax`, shared with the circuit macros and the pipeline
+/// config) so existing `sim::SoftmaxKind` imports keep working.
+pub use crate::softmax::SoftmaxKind;
 
 /// Simulator configuration.
 #[derive(Clone, Copy, Debug)]

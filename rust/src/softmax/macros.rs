@@ -12,11 +12,16 @@
 //!   selection during conversion, early-stops at the k-th crossing, and
 //!   hands exactly k values to the softmax (Eq. 4).
 //!
-//! All three share one crossbar + converter substrate so the comparison
-//! isolates the softmax strategy, exactly like the paper's experiment.
+//! All three share one crossbar + converter substrate AND one run-loop
+//! ([`run_macro`]): MAC phase → conversion + selection → sparse softmax →
+//! cost accounting. The only thing that differs between the designs is
+//! *which values reach the softmax core and what the conversion phase
+//! costs* — that is the [`SelectionStrategy`], so the comparison isolates
+//! the softmax strategy exactly like the paper's experiment.
 
 use super::digital::DigitalSoftmax;
 use super::dtopk::{digital_topk, sort_compare_bound};
+use super::SoftmaxKind;
 use crate::circuits::{pwm, Energy, Timing};
 use crate::crossbar::Crossbar;
 use crate::ima::TopkimaConverter;
@@ -118,37 +123,160 @@ impl MacroParts {
     }
 }
 
+/// Conversion-phase cost of one Q row, reported by a strategy.
+#[derive(Clone, Copy, Debug)]
+pub struct RowCost {
+    /// Conversion (+ any sorting) latency, ns.
+    pub latency_ns: f64,
+    /// Conversion (+ any sorting) energy, pJ.
+    pub energy_pj: f64,
+    /// Early-stop fraction for this conversion (1.0 without early stop).
+    pub alpha: f64,
+    /// Elements the digital softmax core processes for this row.
+    pub nl_elems: usize,
+}
+
+/// How a macro converts one row of MAC results and selects the values
+/// that reach the softmax core — the one axis the Fig 4(a) designs vary.
+pub trait SelectionStrategy {
+    /// Convert `macs` and append the selected (column, value) pairs to
+    /// `sel` (cleared by the caller); report the conversion-phase cost.
+    fn select(
+        &self,
+        parts: &MacroParts,
+        macs: &[i64],
+        rng: &mut Rng,
+        sel: &mut Vec<(usize, f64)>,
+    ) -> RowCost;
+}
+
+/// Conventional full conversion: every column's quantized value (0.0 for
+/// columns that never cross) goes to the dense softmax.
+pub struct FullConversion;
+
+impl SelectionStrategy for FullConversion {
+    fn select(
+        &self,
+        parts: &MacroParts,
+        macs: &[i64],
+        rng: &mut Rng,
+        sel: &mut Vec<(usize, f64)>,
+    ) -> RowCost {
+        let d = macs.len();
+        let conv = parts.converter.convert_full(macs, rng);
+        let lsb = parts.converter.ramp.lsb();
+        let mut vals = vec![0.0f64; d];
+        for o in &conv.outputs {
+            vals[o.column] = o.code as f64 * lsb;
+        }
+        sel.extend(vals.iter().copied().enumerate());
+        RowCost {
+            latency_ns: conv.latency_ns,
+            energy_pj: conv.energy_pj,
+            alpha: 1.0,
+            nl_elems: d,
+        }
+    }
+}
+
+/// Full conversion + digital top-k sorter (Eq. 3's selection).
+pub struct DigitalTopkSelect {
+    pub k: usize,
+}
+
+impl SelectionStrategy for DigitalTopkSelect {
+    fn select(
+        &self,
+        parts: &MacroParts,
+        macs: &[i64],
+        rng: &mut Rng,
+        sel: &mut Vec<(usize, f64)>,
+    ) -> RowCost {
+        let d = macs.len();
+        let conv = parts.converter.convert_full(macs, rng);
+        let lsb = parts.converter.ramp.lsb();
+        let mut vals = vec![0.0f64; d];
+        for o in &conv.outputs {
+            vals[o.column] = o.code as f64 * lsb;
+        }
+        let (top, _) = digital_topk(&vals, self.k);
+        sel.extend(top);
+        let sort_ns = parts.timing.t_sort(d, self.k);
+        let sort_pj = sort_compare_bound(d, self.k) * parts.energy.e_sort_cmp;
+        RowCost {
+            latency_ns: conv.latency_ns + sort_ns,
+            energy_pj: conv.energy_pj + sort_pj,
+            alpha: 1.0,
+            nl_elems: self.k,
+        }
+    }
+}
+
+/// In-memory top-k selection during conversion (Eq. 4 — the paper's).
+pub struct TopkimaSelect {
+    pub k: usize,
+}
+
+impl SelectionStrategy for TopkimaSelect {
+    fn select(
+        &self,
+        parts: &MacroParts,
+        macs: &[i64],
+        rng: &mut Rng,
+        sel: &mut Vec<(usize, f64)>,
+    ) -> RowCost {
+        let conv = parts.converter.convert_topk(macs, self.k, rng);
+        let lsb = parts.converter.ramp.lsb();
+        sel.extend(
+            conv.outputs
+                .iter()
+                .map(|o| (o.column, o.code as f64 * lsb)),
+        );
+        RowCost {
+            latency_ns: conv.latency_ns,
+            energy_pj: conv.energy_pj,
+            alpha: conv.alpha,
+            nl_elems: conv.outputs.len(),
+        }
+    }
+}
+
+/// The run-loop all three macros share: MAC phase → conversion +
+/// selection (the strategy) → sparse softmax → cost accounting, then the
+/// amortized K^T write.
+pub fn run_macro<S: SelectionStrategy>(
+    parts: &MacroParts,
+    strategy: &S,
+    q_rows: &[Vec<i32>],
+    rng: &mut Rng,
+) -> (Vec<ProbRow>, MacroCost) {
+    let d = parts.crossbar.used_cols();
+    let mut cost = MacroCost::default();
+    let mut probs = Vec::with_capacity(q_rows.len());
+    let mut macs = vec![0i64; d];
+    let mut sel: Vec<(usize, f64)> = Vec::with_capacity(d);
+    for q in q_rows {
+        let (mac_ns, mac_pj) = parts.mac_phase_cost(q);
+        parts.crossbar.mac_into(q, &mut macs);
+        sel.clear();
+        let rc = strategy.select(parts, &macs, rng, &mut sel);
+        probs.push(parts.softmax.compute_sparse(&sel, d));
+        cost.absorb(
+            mac_ns + rc.latency_ns + parts.softmax.latency_ns(rc.nl_elems),
+            mac_pj + rc.energy_pj + parts.softmax.energy_pj(rc.nl_elems),
+            rc.alpha,
+        );
+    }
+    let (wns, wpj) = parts.write_cost();
+    (probs, cost.finish(wns, wpj))
+}
+
 /// Conventional softmax macro (`T_conv-SM`).
 pub struct ConvSm(pub MacroParts);
 
 impl SoftmaxMacro for ConvSm {
     fn run(&self, q_rows: &[Vec<i32>], rng: &mut Rng) -> (Vec<ProbRow>, MacroCost) {
-        let p = &self.0;
-        let d = p.crossbar.used_cols();
-        let mut cost = MacroCost::default();
-        let mut probs = Vec::with_capacity(q_rows.len());
-        let mut macs = vec![0i64; d];
-        let lsb = p.converter.ramp.lsb();
-        for q in q_rows {
-            let (mac_ns, mac_pj) = p.mac_phase_cost(q);
-            p.crossbar.mac_into(q, &mut macs);
-            let conv = p.converter.convert_full(&macs, rng);
-            // all d quantized values through the digital softmax
-            let mut vals = vec![0.0f64; d];
-            for o in &conv.outputs {
-                vals[o.column] = o.code as f64 * lsb;
-            }
-            let mut row = vec![0.0f64; d];
-            p.softmax.compute(&vals, &mut row);
-            probs.push(row);
-            cost.absorb(
-                mac_ns + conv.latency_ns + p.softmax.latency_ns(d),
-                mac_pj + conv.energy_pj + p.softmax.energy_pj(d),
-                1.0,
-            );
-        }
-        let (wns, wpj) = p.write_cost();
-        (probs, cost.finish(wns, wpj))
+        run_macro(&self.0, &FullConversion, q_rows, rng)
     }
 
     fn name(&self) -> &'static str {
@@ -164,36 +292,7 @@ pub struct DtopkSm {
 
 impl SoftmaxMacro for DtopkSm {
     fn run(&self, q_rows: &[Vec<i32>], rng: &mut Rng) -> (Vec<ProbRow>, MacroCost) {
-        let p = &self.parts;
-        let d = p.crossbar.used_cols();
-        let mut cost = MacroCost::default();
-        let mut probs = Vec::with_capacity(q_rows.len());
-        let mut macs = vec![0i64; d];
-        let lsb = p.converter.ramp.lsb();
-        for q in q_rows {
-            let (mac_ns, mac_pj) = p.mac_phase_cost(q);
-            p.crossbar.mac_into(q, &mut macs);
-            let conv = p.converter.convert_full(&macs, rng);
-            let mut vals = vec![0.0f64; d];
-            for o in &conv.outputs {
-                vals[o.column] = o.code as f64 * lsb;
-            }
-            let (top, _) = digital_topk(&vals, self.k);
-            let row = p.softmax.compute_sparse(&top, d);
-            probs.push(row);
-            let sort_ns = p.timing.t_sort(d, self.k);
-            let sort_pj =
-                sort_compare_bound(d, self.k) * p.energy.e_sort_cmp;
-            cost.absorb(
-                mac_ns + conv.latency_ns + sort_ns
-                    + p.softmax.latency_ns(self.k),
-                mac_pj + conv.energy_pj + sort_pj
-                    + p.softmax.energy_pj(self.k),
-                1.0,
-            );
-        }
-        let (wns, wpj) = p.write_cost();
-        (probs, cost.finish(wns, wpj))
+        run_macro(&self.parts, &DigitalTopkSelect { k: self.k }, q_rows, rng)
     }
 
     fn name(&self) -> &'static str {
@@ -209,39 +308,25 @@ pub struct TopkimaSm {
 
 impl SoftmaxMacro for TopkimaSm {
     fn run(&self, q_rows: &[Vec<i32>], rng: &mut Rng) -> (Vec<ProbRow>, MacroCost) {
-        let p = &self.parts;
-        let d = p.crossbar.used_cols();
-        let mut cost = MacroCost::default();
-        let mut probs = Vec::with_capacity(q_rows.len());
-        let mut macs = vec![0i64; d];
-        let lsb = p.converter.ramp.lsb();
-        let mut selection: Vec<(usize, f64)> = Vec::with_capacity(self.k);
-        for q in q_rows {
-            let (mac_ns, mac_pj) = p.mac_phase_cost(q);
-            p.crossbar.mac_into(q, &mut macs);
-            let conv = p.converter.convert_topk(&macs, self.k, rng);
-            selection.clear();
-            selection.extend(
-                conv.outputs
-                    .iter()
-                    .map(|o| (o.column, o.code as f64 * lsb)),
-            );
-            let row = p.softmax.compute_sparse(&selection, d);
-            probs.push(row);
-            cost.absorb(
-                mac_ns + conv.latency_ns
-                    + p.softmax.latency_ns(conv.outputs.len()),
-                mac_pj + conv.energy_pj
-                    + p.softmax.energy_pj(conv.outputs.len()),
-                conv.alpha,
-            );
-        }
-        let (wns, wpj) = p.write_cost();
-        (probs, cost.finish(wns, wpj))
+        run_macro(&self.parts, &TopkimaSelect { k: self.k }, q_rows, rng)
     }
 
     fn name(&self) -> &'static str {
         "topkima-SM"
+    }
+}
+
+/// Assemble the macro for a [`SoftmaxKind`] over a shared substrate —
+/// the constructor `pipeline::PipelineBuilder` routes through.
+pub fn macro_for(
+    kind: SoftmaxKind,
+    parts: MacroParts,
+    k: usize,
+) -> Box<dyn SoftmaxMacro> {
+    match kind {
+        SoftmaxKind::Conventional => Box::new(ConvSm(parts)),
+        SoftmaxKind::Dtopk => Box::new(DtopkSm { parts, k }),
+        SoftmaxKind::Topkima => Box::new(TopkimaSm { parts, k }),
     }
 }
 
@@ -364,5 +449,30 @@ mod tests {
         for (got, e) in probs[0].iter().zip(&exps) {
             assert!((got - e / s).abs() < 1e-6, "{got} vs {}", e / s);
         }
+    }
+
+    #[test]
+    fn macro_for_maps_kinds_to_designs() {
+        let mut rng = Rng::new(7);
+        let q = q_rows(2, 64);
+        for kind in SoftmaxKind::ALL {
+            let m = macro_for(kind, parts(64), 5);
+            assert_eq!(m.name(), kind.name());
+            let (probs, cost) = m.run(&q, &mut rng);
+            assert_eq!(probs.len(), 2);
+            assert!(cost.latency_ns > 0.0);
+        }
+    }
+
+    #[test]
+    fn boxed_macro_matches_direct_construction() {
+        // the builder path (macro_for) and hand assembly agree bit-for-bit
+        let q = q_rows(3, 64);
+        let (pa, ca) = macro_for(SoftmaxKind::Topkima, parts(96), 5)
+            .run(&q, &mut Rng::new(8));
+        let (pb, cb) =
+            TopkimaSm { parts: parts(96), k: 5 }.run(&q, &mut Rng::new(8));
+        assert_eq!(ca, cb);
+        assert_eq!(pa, pb);
     }
 }

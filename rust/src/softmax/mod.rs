@@ -6,7 +6,12 @@
 //!   [3]): O(min(d·log d, d·k)) compare-exchange sorting network.
 //! * [`macros`] — the assembled Conv-SM / Dtopk-SM / Topkima-SM macros
 //!   with end-to-end functional output + latency/energy per Eqs. (3)/(4),
-//!   backed by the behavioral converter in `crate::ima`.
+//!   backed by the behavioral converter in `crate::ima`. All three share
+//!   one run-loop parameterized by a [`SelectionStrategy`].
+//!
+//! [`SoftmaxKind`] is the one canonical enum naming the three designs;
+//! it is shared by the circuit macros, the system simulator (`crate::sim`
+//! re-exports it), and the pipeline config (`crate::pipeline`).
 
 pub mod digital;
 pub mod dtopk;
@@ -14,4 +19,69 @@ pub mod macros;
 
 pub use digital::DigitalSoftmax;
 pub use dtopk::digital_topk;
-pub use macros::{ConvSm, DtopkSm, MacroCost, SoftmaxMacro, TopkimaSm};
+pub use macros::{
+    macro_for, ConvSm, DtopkSm, MacroCost, SelectionStrategy, SoftmaxMacro,
+    TopkimaSm,
+};
+
+/// Which softmax macro the score stage uses — the single cross-layer
+/// knob of the Fig 4(a) comparison.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SoftmaxKind {
+    Conventional,
+    Dtopk,
+    Topkima,
+}
+
+impl SoftmaxKind {
+    /// All three designs, in the paper's comparison order.
+    pub const ALL: [SoftmaxKind; 3] = [
+        SoftmaxKind::Conventional,
+        SoftmaxKind::Dtopk,
+        SoftmaxKind::Topkima,
+    ];
+
+    /// Display name used in reports and figures.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SoftmaxKind::Conventional => "conv-SM",
+            SoftmaxKind::Dtopk => "Dtopk-SM",
+            SoftmaxKind::Topkima => "topkima-SM",
+        }
+    }
+
+    /// Stable identifier used by CLI flags and the JSON config.
+    pub fn key(&self) -> &'static str {
+        match self {
+            SoftmaxKind::Conventional => "conv",
+            SoftmaxKind::Dtopk => "dtopk",
+            SoftmaxKind::Topkima => "topkima",
+        }
+    }
+
+    /// Parse a CLI/JSON identifier.
+    pub fn parse(s: &str) -> Option<SoftmaxKind> {
+        match s {
+            "conv" | "conventional" | "conv-SM" => {
+                Some(SoftmaxKind::Conventional)
+            }
+            "dtopk" | "Dtopk-SM" => Some(SoftmaxKind::Dtopk),
+            "topkima" | "topkima-SM" => Some(SoftmaxKind::Topkima),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod kind_tests {
+    use super::SoftmaxKind;
+
+    #[test]
+    fn keys_roundtrip() {
+        for kind in SoftmaxKind::ALL {
+            assert_eq!(SoftmaxKind::parse(kind.key()), Some(kind));
+            assert_eq!(SoftmaxKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(SoftmaxKind::parse("softermax"), None);
+    }
+}

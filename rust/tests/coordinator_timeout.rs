@@ -1,0 +1,125 @@
+//! Coordinator deadline + shutdown-flush behavior, observed through a
+//! recording mock `Executor` (no artifacts needed): a partial bucket
+//! fires when the oldest request hits the batcher deadline, and shutdown
+//! flushes every waiter exactly once.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+use topkima::coordinator::router::StreamKey;
+use topkima::coordinator::{Coordinator, Executor, InputData, Router};
+
+/// What the executor actually saw: (real samples, bucket) per batch.
+#[derive(Clone, Debug, Default)]
+struct Recording {
+    batches: Vec<(usize, usize)>,
+}
+
+/// Mock executor: records batch shapes, echoes each sample's first value.
+struct RecordingExec(Arc<Mutex<Recording>>);
+
+impl Executor for RecordingExec {
+    fn execute(
+        &mut self,
+        _stream: &StreamKey,
+        inputs: &[InputData],
+        bucket: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        self.0.lock().unwrap().batches.push((inputs.len(), bucket));
+        Ok(inputs
+            .iter()
+            .map(|i| match i {
+                InputData::I32(v) => vec![v[0] as f32],
+                InputData::F32(v) => vec![v[0]],
+            })
+            .collect())
+    }
+}
+
+#[test]
+fn partial_batch_fires_on_deadline() {
+    let rec = Arc::new(Mutex::new(Recording::default()));
+    let rec2 = rec.clone();
+    let mut router = Router::new();
+    // one oversized bucket: two requests can never fill it, so only the
+    // deadline can fire the batch
+    router.register("bert", 5, vec![4], Duration::from_millis(20));
+    let mut coord = Coordinator::start(router, move || {
+        Box::new(RecordingExec(rec2))
+    });
+
+    let rx1 = coord.submit("bert", 5, InputData::I32(vec![1]));
+    let rx2 = coord.submit("bert", 5, InputData::I32(vec![2]));
+    let r1 = rx1
+        .recv_timeout(Duration::from_secs(5))
+        .expect("deadline batch fired");
+    let r2 = rx2
+        .recv_timeout(Duration::from_secs(5))
+        .expect("deadline batch fired");
+    assert_eq!(r1.output, vec![1.0]);
+    assert_eq!(r2.output, vec![2.0]);
+    assert_eq!(r1.batch_size, 4, "partial batch padded to the bucket");
+
+    let metrics = coord.shutdown();
+    assert_eq!(metrics.completed(), 2);
+    assert_eq!(metrics.errors(), 0);
+    let batches = rec.lock().unwrap().batches.clone();
+    assert_eq!(batches, vec![(2, 4)], "one padded batch of 2 real samples");
+    // 2 of the 4 executed rows were padding
+    assert!((metrics.padding_fraction() - 0.5).abs() < 1e-12);
+}
+
+#[test]
+fn deadline_does_not_fire_early() {
+    let rec = Arc::new(Mutex::new(Recording::default()));
+    let rec2 = rec.clone();
+    let mut router = Router::new();
+    router.register("bert", 5, vec![8], Duration::from_millis(500));
+    let mut coord = Coordinator::start(router, move || {
+        Box::new(RecordingExec(rec2))
+    });
+    // The batcher cannot fire before the oldest request has waited the
+    // full deadline, so the response must take ≥ 500 ms from submit.
+    // (Asserting on elapsed time instead of polling mid-wait keeps this
+    // immune to scheduler delays on loaded CI runners.)
+    let t0 = std::time::Instant::now();
+    let rx = coord.submit("bert", 5, InputData::I32(vec![9]));
+    let r = rx
+        .recv_timeout(Duration::from_secs(5))
+        .expect("deadline batch fired");
+    let waited = t0.elapsed();
+    assert!(
+        waited >= Duration::from_millis(450),
+        "partial batch fired early, after {waited:?}"
+    );
+    assert_eq!(r.output, vec![9.0]);
+    let metrics = coord.shutdown();
+    assert_eq!(metrics.completed(), 1);
+    assert_eq!(rec.lock().unwrap().batches.clone(), vec![(1, 8)]);
+}
+
+#[test]
+fn shutdown_flushes_all_waiters() {
+    let rec = Arc::new(Mutex::new(Recording::default()));
+    let rec2 = rec.clone();
+    let mut router = Router::new();
+    // huge bucket + one-hour deadline: nothing fires until shutdown
+    router.register("bert", 5, vec![8], Duration::from_secs(3600));
+    let mut coord = Coordinator::start(router, move || {
+        Box::new(RecordingExec(rec2))
+    });
+
+    let rxs: Vec<_> = (0..5)
+        .map(|i| coord.submit("bert", 5, InputData::I32(vec![i])))
+        .collect();
+    let metrics = coord.shutdown();
+    assert_eq!(metrics.completed(), 5);
+    assert_eq!(metrics.errors(), 0);
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let r = rx.try_recv().expect("flushed at shutdown");
+        assert_eq!(r.output, vec![i as f32], "FIFO preserved through flush");
+    }
+    let batches = rec.lock().unwrap().batches.clone();
+    assert_eq!(batches, vec![(5, 8)], "one flush batch carries all waiters");
+}

@@ -1,0 +1,113 @@
+//! Acceptance: `StackConfig` → JSON → `StackConfig` reproduces an
+//! identical macro (cost + probabilities) on a fixed seed, and the
+//! builder keeps the circuit and sim layers on the same knob set.
+
+use topkima::ima::NoiseModel;
+use topkima::pipeline::{ConfigError, StackConfig};
+use topkima::softmax::SoftmaxKind;
+use topkima::util::rng::Rng;
+
+fn kt_tile(depth: usize, cols: usize) -> Vec<Vec<i32>> {
+    (0..depth)
+        .map(|r| {
+            (0..cols)
+                .map(|c| (((r * 13 + c * 7 + 3) % 15) as i32) - 7)
+                .collect()
+        })
+        .collect()
+}
+
+fn q_rows(n: usize, depth: usize) -> Vec<Vec<i32>> {
+    (0..n)
+        .map(|r| {
+            (0..depth)
+                .map(|i| (((r * 31 + i * 17) % 31) as i32) - 15)
+                .collect()
+        })
+        .collect()
+}
+
+/// The headline acceptance check: serialize, parse back, and prove the
+/// rebuilt stack produces bit-identical macro cost and probabilities.
+#[test]
+fn json_roundtrip_preserves_macro_cost() {
+    let cfg = StackConfig::default()
+        .with_k(4)
+        .with_softmax(SoftmaxKind::Topkima)
+        .with_noise(NoiseModel::default());
+    let text = cfg.to_json_string();
+    let cfg2 = StackConfig::from_json_str(&text).expect("parse back");
+    assert_eq!(cfg, cfg2);
+    assert_eq!(text, cfg2.to_json_string());
+
+    let kt = kt_tile(32, 96);
+    let q = q_rows(8, 32);
+    let run = |cfg: StackConfig| {
+        let b = cfg.build().expect("valid config");
+        let m = b.build_macro(&kt, &mut Rng::new(42));
+        m.run(&q, &mut Rng::new(43))
+    };
+    let (probs_a, cost_a) = run(cfg);
+    let (probs_b, cost_b) = run(cfg2);
+    assert_eq!(cost_a, cost_b, "macro cost must survive the round trip");
+    assert_eq!(probs_a, probs_b, "probabilities must survive the round trip");
+    assert!(cost_a.latency_ns > 0.0 && cost_a.energy_pj > 0.0);
+}
+
+/// Every softmax kind survives the round trip and builds its own macro.
+#[test]
+fn all_kinds_roundtrip_and_build() {
+    let kt = kt_tile(16, 48);
+    let q = q_rows(4, 16);
+    for kind in SoftmaxKind::ALL {
+        let cfg = StackConfig::default().with_softmax(kind).with_k(3);
+        let cfg2 = StackConfig::from_json_str(&cfg.to_json_string()).unwrap();
+        assert_eq!(cfg, cfg2);
+        let m = cfg2.build().unwrap().build_macro(&kt, &mut Rng::new(7));
+        assert_eq!(m.name(), kind.name());
+        let (probs, _) = m.run(&q, &mut Rng::new(8));
+        for row in &probs {
+            let s: f64 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9, "{} sum {s}", kind.name());
+        }
+    }
+}
+
+/// The builder ties the sim layer to the same k/softmax the macro uses —
+/// the cross-layer consistency the pipeline API exists for.
+#[test]
+fn sim_and_circuit_share_one_knob_set() {
+    let cfg = StackConfig::default().with_k(7).with_seq_len(512);
+    let b = cfg.build().unwrap();
+    let tc = b.transformer();
+    assert_eq!(tc.topk, 7);
+    assert_eq!(tc.seq_len, 512);
+    let sc = b.sim_config();
+    assert_eq!(sc.softmax, b.config().softmax);
+    assert!((sc.alpha - b.config().alpha).abs() < 1e-12);
+    let r = b.simulate();
+    assert_eq!(r.softmax, b.config().softmax);
+}
+
+/// Typed errors, not silent defaults, for malformed configuration.
+#[test]
+fn malformed_configs_fail_loudly() {
+    // invalid stack values never reach assembly
+    assert!(matches!(
+        StackConfig::default().with_k(0).build(),
+        Err(ConfigError::Invalid { .. })
+    ));
+    // garbage JSON is a typed error
+    assert!(StackConfig::from_json_str("{").is_err());
+    // unknown fields are rejected rather than ignored
+    assert!(matches!(
+        StackConfig::from_json_str(r#"{"turbo": true}"#),
+        Err(ConfigError::UnknownField(_))
+    ));
+    // unknown flags are rejected rather than silently defaulted
+    let args = vec!["--turbo".to_string(), "on".to_string()];
+    assert!(matches!(
+        StackConfig::from_args(&args),
+        Err(ConfigError::UnknownFlag(_))
+    ));
+}

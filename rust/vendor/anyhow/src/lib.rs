@@ -1,0 +1,175 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment cannot reach crates.io, so this vendored shim
+//! provides the (small) subset of anyhow's API the workspace uses:
+//! [`Error`], [`Result`], the `anyhow!` / `bail!` / `ensure!` macros,
+//! and the [`Context`] extension trait on `Result` and `Option`.
+//!
+//! Error values are rendered messages — the full `source()` chain is
+//! folded into the message at conversion time — which is all our
+//! diagnostics need. Like the real crate, [`Error`] deliberately does
+//! NOT implement `std::error::Error`, so the blanket `From` impl below
+//! cannot overlap with the reflexive `From<T> for T`.
+
+use std::fmt;
+
+/// A rendered error message, convertible from any std error.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+
+    /// Wrap this error with a higher-level context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut msg = e.to_string();
+        let mut source = e.source();
+        while let Some(s) = source {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            source = s.source();
+        }
+        Error { msg }
+    }
+}
+
+/// `anyhow::Result` — the error type defaults to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context()` / `.with_context()` to `Result`
+/// and `Option`.
+pub trait Context<T> {
+    /// Attach a context message, converting the error to [`Error`].
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Attach a lazily-evaluated context message.
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn from_std_error_renders_chain() {
+        let e: Error = io_err().into();
+        assert!(e.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading manifest").unwrap_err();
+        assert!(e.to_string().starts_with("reading manifest: "));
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("slot {}", 3)).unwrap_err();
+        assert_eq!(e.to_string(), "slot 3");
+    }
+
+    #[test]
+    fn macros_build_and_bail() {
+        fn inner(fail: bool) -> Result<u32> {
+            ensure!(!fail, "failed with {}", 42);
+            Ok(7)
+        }
+        assert_eq!(inner(false).unwrap(), 7);
+        assert_eq!(inner(true).unwrap_err().to_string(), "failed with 42");
+        let e = anyhow!("x = {}", 1);
+        assert_eq!(e.to_string(), "x = 1");
+    }
+}
