@@ -1,22 +1,33 @@
-//! §Perf: wall-clock benches of the three rust hot paths.
+//! §Perf: wall-clock benches of the rust hot paths, emitted both as a
+//! table and as machine-readable `BENCH_hotpath.json`.
 //!
 //! 1. crossbar MAC (`Crossbar::mac_into`) — the inner loop of every
 //!    simulated conversion;
-//! 2. topkima conversion (`convert_topk`) — ramp + arbiter + packaging;
-//! 3. batcher push/pop — the coordinator's request path.
+//! 2. topkima conversion — the allocating wrapper (`convert_topk`) vs
+//!    the scratch-reusing path (`convert_topk_into`), plus the full
+//!    conversion baseline;
+//! 3. batcher push/pop — the coordinator's request path;
+//! 4. the end-to-end macro row (MAC + conversion + softmax).
 //!
 //! Before/after numbers for the optimization pass are recorded in
-//! EXPERIMENTS.md §Perf.
+//! EXPERIMENTS.md §Perf; CI archives the JSON so regressions are
+//! diffable.
 
 use std::time::{Duration, Instant};
 
 use topkima::coordinator::{Batcher, BatcherConfig, InputData, Request};
 use topkima::crossbar::{Crossbar, Tech};
-use topkima::ima::TopkimaConverter;
-use topkima::util::bench::{bench_fn, black_box, header};
+use topkima::ima::{ConversionScratch, TopkimaConverter};
+use topkima::util::bench::{bench_fn, black_box, header, write_json, BenchResult};
 use topkima::util::rng::Rng;
 
 fn main() {
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut record = |r: BenchResult| {
+        println!("{}", r.row());
+        results.push(r);
+    };
+
     header("perf: crossbar MAC (depth 64, 256 cols)");
     let mut rng = Rng::new(1);
     let kt: Vec<Vec<i32>> = (0..64)
@@ -25,26 +36,35 @@ fn main() {
     let xbar = Crossbar::program(Tech::Sram, 256, 256, 64, &kt);
     let q: Vec<i32> = (0..64).map(|_| rng.range(-15, 16) as i32).collect();
     let mut out = vec![0i64; 256];
-    println!("{}", bench_fn("mac_into 64x256", || {
+    record(bench_fn("mac_into 64x256", || {
         xbar.mac_into(black_box(&q), &mut out);
         black_box(&out);
-    }).row());
+    }));
 
     header("perf: topkima conversion (256 cols, k=5)");
     let conv = TopkimaConverter::ideal(256, 4000.0);
     let macs: Vec<i64> =
         (0..256).map(|_| rng.range(-3500, 3500)).collect();
     let mut crng = Rng::new(2);
-    println!("{}", bench_fn("convert_topk 256 cols", || {
+    record(bench_fn("convert_topk 256 cols", || {
         black_box(conv.convert_topk(black_box(&macs), 5, &mut crng));
-    }).row());
-    println!("{}", bench_fn("convert_full 256 cols", || {
+    }));
+    let mut scratch = ConversionScratch::new();
+    record(bench_fn("convert_topk_into 256 cols (scratch)", || {
+        black_box(conv.convert_topk_into(
+            black_box(&macs),
+            5,
+            &mut crng,
+            &mut scratch,
+        ));
+    }));
+    record(bench_fn("convert_full 256 cols", || {
         black_box(conv.convert_full(black_box(&macs), &mut crng));
-    }).row());
+    }));
 
     header("perf: batcher push+pop (bucket 16)");
     let cfg = BatcherConfig::new(vec![1, 2, 4, 8, 16], Duration::ZERO);
-    println!("{}", bench_fn("batcher 64 requests", || {
+    record(bench_fn("batcher 64 requests", || {
         let mut b = Batcher::new(cfg.clone());
         for i in 0..64 {
             b.push(Request::new(i, "bert", 5, InputData::I32(vec![0; 8])));
@@ -53,7 +73,7 @@ fn main() {
         while let Some(plan) = b.pop_batch(now) {
             black_box(plan);
         }
-    }).row());
+    }));
 
     header("perf: end-to-end macro row (MAC + conversion + softmax)");
     use topkima::softmax::macros::MacroParts;
@@ -68,7 +88,11 @@ fn main() {
     };
     let qs = vec![q.clone(); 8];
     let mut mrng = Rng::new(3);
-    println!("{}", bench_fn("topkima-SM 8 rows x 256 cols", || {
+    record(bench_fn("topkima-SM 8 rows x 256 cols", || {
         black_box(topkima.run(black_box(&qs), &mut mrng));
-    }).row());
+    }));
+
+    write_json("BENCH_hotpath.json", "perf_hotpath", &results)
+        .expect("write BENCH_hotpath.json");
+    println!("\nwrote BENCH_hotpath.json ({} cases)", results.len());
 }

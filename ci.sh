@@ -7,8 +7,12 @@
 #   2. cargo clippy -D warnings (advisory unless CI_STRICT=1)
 #   3. tier-1 gate: cargo build --release && cargo test -q
 #   4. smoke: `topkima check` (skips cleanly when no artifacts exist)
+#   5. smoke: `topkima sweep-hw` on a tiny grid (JSON baseline emitted)
+#   6. perf baseline: `cargo bench --bench perf_hotpath` writes
+#      BENCH_hotpath.json (machine-readable numbers for EXPERIMENTS.md
+#      §Perf)
 #
-# Exit code reflects the tier-1 gate + smoke step; fmt/clippy failures
+# Exit code reflects the tier-1 gate + smoke steps; fmt/clippy failures
 # only fail the run when CI_STRICT=1 (they may be unavailable offline).
 
 set -u
@@ -61,6 +65,26 @@ fi
 note "smoke: topkima check"
 if ! cargo run --release --quiet -- check; then
     echo "FAIL: topkima check"
+    status=1
+fi
+
+note "smoke: topkima sweep-hw (tiny grid, 2 threads)"
+if cargo run --release --quiet -- sweep-hw \
+        --threads 2 --ks 1,5 --seq-lens 64 \
+        --kinds dtopk,topkima --noise-points ideal \
+        --q-rows 2 --out BENCH_sweep_smoke.json \
+    && [ -s BENCH_sweep_smoke.json ]; then
+    echo "ok: BENCH_sweep_smoke.json written"
+else
+    echo "FAIL: topkima sweep-hw smoke"
+    status=1
+fi
+
+note "perf baseline: cargo bench --bench perf_hotpath"
+if cargo bench --bench perf_hotpath && [ -s BENCH_hotpath.json ]; then
+    echo "ok: BENCH_hotpath.json written"
+else
+    echo "FAIL: perf_hotpath bench"
     status=1
 fi
 

@@ -97,6 +97,18 @@ impl Batcher {
             .unwrap_or(Duration::ZERO)
     }
 
+    /// Time until the oldest queued request hits `max_wait` (zero once
+    /// expired), or `None` when the queue is empty — how long the
+    /// coordinator may sleep before this stream needs service. Derived
+    /// from [`Self::oldest_wait`] so the sleep bound and `pop_batch`'s
+    /// expiry test can never diverge.
+    pub fn deadline_in(&self, now: Instant) -> Option<Duration> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        Some(self.config.max_wait.saturating_sub(self.oldest_wait(now)))
+    }
+
     /// Form a batch if the policy allows; `now` injected for testability.
     pub fn pop_batch(&mut self, now: Instant) -> Option<BatchPlan> {
         if self.queue.is_empty() {
@@ -189,6 +201,18 @@ mod tests {
             seen.extend(plan.requests.iter().map(|r| r.id));
         }
         assert_eq!(seen, (0..7).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn deadline_in_counts_down_and_saturates() {
+        let mut b = Batcher::new(cfg(&[4], 50));
+        let now = Instant::now();
+        assert_eq!(b.deadline_in(now), None, "empty queue has no deadline");
+        b.push(req(0));
+        let d = b.deadline_in(Instant::now()).expect("queued");
+        assert!(d <= Duration::from_millis(50));
+        let later = Instant::now() + Duration::from_millis(200);
+        assert_eq!(b.deadline_in(later), Some(Duration::ZERO));
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //! to the AOT artifacts (one compiled executable per (stream, bucket)).
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -11,9 +12,11 @@ use super::server::Executor;
 use crate::runtime::{Engine, LoadedModel};
 
 /// Executor holding pre-compiled executables for every registered
-/// (family, k, bucket) combination.
+/// (family, k, bucket) combination. Keys are `Arc<str>` like the stream
+/// keys (matched by content, not pointer), so dispatch lookup clones a
+/// refcounted handle instead of copying the family name per batch.
 pub struct PjrtExecutor {
-    models: HashMap<(String, usize, usize), LoadedModel>,
+    models: HashMap<(Arc<str>, usize, usize), LoadedModel>,
 }
 
 impl PjrtExecutor {
@@ -25,8 +28,9 @@ impl PjrtExecutor {
     ) -> Result<PjrtExecutor> {
         let mut models = HashMap::new();
         for (family, k, buckets) in streams {
+            let family: Arc<str> = Arc::from(family.as_str());
             for &b in buckets {
-                let lm = engine.load(family, *k, b)?;
+                let lm = engine.load(&family, *k, b)?;
                 models.insert((family.clone(), *k, b), lm);
             }
         }
@@ -42,7 +46,7 @@ impl Executor for PjrtExecutor {
     fn execute(
         &mut self,
         stream: &StreamKey,
-        inputs: &[InputData],
+        inputs: &[Arc<InputData>],
         bucket: usize,
     ) -> Result<Vec<Vec<f32>>> {
         let key = (stream.0.clone(), stream.1, bucket);
@@ -58,14 +62,14 @@ impl Executor for PjrtExecutor {
         let out_per_sample = model.output_len() / bucket;
 
         // Flatten + pad by repeating the last sample (discarded below).
-        let raw = match &inputs[0] {
+        let raw = match &*inputs[0] {
             InputData::F32(_) => {
                 let mut flat = Vec::with_capacity(model.input_len());
                 for i in 0..bucket {
                     let sample = inputs.get(i).unwrap_or(
                         inputs.last().expect("nonempty"),
                     );
-                    match sample {
+                    match &**sample {
                         InputData::F32(v) => {
                             if v.len() != per_sample {
                                 bail!(
@@ -86,7 +90,7 @@ impl Executor for PjrtExecutor {
                     let sample = inputs.get(i).unwrap_or(
                         inputs.last().expect("nonempty"),
                     );
-                    match sample {
+                    match &**sample {
                         InputData::I32(v) => {
                             if v.len() != per_sample {
                                 bail!(

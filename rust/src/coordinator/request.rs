@@ -1,5 +1,11 @@
 //! Request/response types flowing through the coordinator.
+//!
+//! Payloads are shared, not owned (§Perf): `model` is an `Arc<str>` and
+//! `input` an `Arc<InputData>`, so routing, batching, and executor
+//! dispatch move refcounted pointers instead of deep-copying the model
+//! name and sample data on every hop.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Monotonically increasing request identifier.
@@ -31,11 +37,13 @@ impl InputData {
 #[derive(Clone, Debug)]
 pub struct Request {
     pub id: RequestId,
-    /// Model family ("vit" | "bert").
-    pub model: String,
+    /// Model family ("vit" | "bert"), shared with the stream key.
+    pub model: Arc<str>,
     /// topkima k to serve with (must exist in the manifest).
     pub k: usize,
-    pub input: InputData,
+    /// Shared payload — cloning a `Request` bumps a refcount, it never
+    /// copies the sample.
+    pub input: Arc<InputData>,
     pub enqueued: Instant,
 }
 
@@ -43,13 +51,19 @@ impl Request {
     pub fn new(id: RequestId, model: &str, k: usize, input: InputData)
         -> Request
     {
-        Request {
-            id,
-            model: model.to_string(),
-            k,
-            input,
-            enqueued: Instant::now(),
-        }
+        Request::shared(id, Arc::from(model), k, Arc::new(input))
+    }
+
+    /// Zero-allocation constructor for callers that already hold shared
+    /// handles (replay loops submitting the same model string many
+    /// times).
+    pub fn shared(
+        id: RequestId,
+        model: Arc<str>,
+        k: usize,
+        input: Arc<InputData>,
+    ) -> Request {
+        Request { id, model, k, input, enqueued: Instant::now() }
     }
 }
 
@@ -80,7 +94,15 @@ mod tests {
     fn request_carries_family_and_k() {
         let r = Request::new(7, "bert", 5, InputData::I32(vec![0; 64]));
         assert_eq!(r.id, 7);
-        assert_eq!(r.model, "bert");
+        assert_eq!(&*r.model, "bert");
         assert_eq!(r.k, 5);
+    }
+
+    #[test]
+    fn clone_shares_payload() {
+        let r = Request::new(1, "bert", 5, InputData::I32(vec![0; 64]));
+        let c = r.clone();
+        assert!(Arc::ptr_eq(&r.input, &c.input));
+        assert!(Arc::ptr_eq(&r.model, &c.model));
     }
 }

@@ -1,13 +1,17 @@
 //! Router: maps (family, k) streams to their batchers and executables.
 
 use std::collections::BTreeMap;
-use std::time::Duration;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use super::batcher::{BatchPlan, Batcher, BatcherConfig};
 use super::request::Request;
 
-/// Routing key: one independent serving stream per (family, k).
-pub type StreamKey = (String, usize);
+/// Routing key: one independent serving stream per (family, k). The
+/// family is an `Arc<str>` shared with every request routed to it, so
+/// key construction on the request path is a refcount bump, not a
+/// string copy (§Perf).
+pub type StreamKey = (Arc<str>, usize);
 
 /// Owns one batcher per registered stream and dispatches requests.
 #[derive(Debug)]
@@ -31,7 +35,7 @@ impl Router {
         max_wait: Duration,
     ) {
         self.streams.insert(
-            (model.to_string(), k),
+            (Arc::from(model), k),
             Batcher::new(BatcherConfig::new(buckets, max_wait)),
         );
     }
@@ -57,7 +61,7 @@ impl Router {
     }
 
     /// Poll every stream for ready batches.
-    pub fn ready_batches(&mut self, now: std::time::Instant)
+    pub fn ready_batches(&mut self, now: Instant)
         -> Vec<(StreamKey, BatchPlan)>
     {
         let mut out = Vec::new();
@@ -67,6 +71,16 @@ impl Router {
             }
         }
         out
+    }
+
+    /// Time until the oldest queued request across all streams hits its
+    /// batching deadline — the coordinator's wake-up bound. `None` when
+    /// every queue is empty (the loop may idle until the next submit).
+    pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        self.streams
+            .values()
+            .filter_map(|b| b.deadline_in(now))
+            .min()
     }
 
     /// Drain all queues (shutdown).
@@ -110,6 +124,10 @@ mod tests {
         r
     }
 
+    fn key(model: &str, k: usize) -> StreamKey {
+        (Arc::from(model), k)
+    }
+
     #[test]
     fn routes_by_family_and_k() {
         let mut r = router();
@@ -129,8 +147,8 @@ mod tests {
         let batches = r.ready_batches(Instant::now());
         assert_eq!(batches.len(), 2);
         let keys: Vec<&StreamKey> = batches.iter().map(|b| &b.0).collect();
-        assert!(keys.contains(&&("bert".to_string(), 5)));
-        assert!(keys.contains(&&("vit".to_string(), 5)));
+        assert!(keys.contains(&&key("bert", 5)));
+        assert!(keys.contains(&&key("vit", 5)));
     }
 
     #[test]
@@ -153,6 +171,20 @@ mod tests {
         }
         assert_eq!(bert5, vec![0, 1, 2, 3]);
         assert_eq!(bert1, vec![100, 101, 102, 103]);
+    }
+
+    #[test]
+    fn next_deadline_tracks_oldest_queue() {
+        let mut r = Router::new();
+        r.register("bert", 5, vec![64], Duration::from_millis(100));
+        let now = Instant::now();
+        assert_eq!(r.next_deadline(now), None, "idle router has no deadline");
+        r.route(req(0, "bert", 5));
+        let d = r.next_deadline(Instant::now()).expect("queued deadline");
+        assert!(d <= Duration::from_millis(100));
+        // an already-expired queue reports a zero deadline, not a panic
+        let later = Instant::now() + Duration::from_millis(500);
+        assert_eq!(r.next_deadline(later), Some(Duration::ZERO));
     }
 
     #[test]

@@ -7,8 +7,18 @@
 //! Batch execution is synchronous on the coordinator thread — PJRT CPU
 //! executions are themselves multi-threaded, so a single dispatch thread
 //! keeps ordering simple without starving the CPU.
+//!
+//! §Perf notes: the loop sleeps until the oldest queued request's
+//! batching deadline (or [`IDLE_WAIT`] when every queue is empty — any
+//! submit wakes the channel immediately) instead of spinning at a fixed
+//! 1 ms tick; waiters are keyed by `RequestId` in a `HashMap` so
+//! response delivery is O(1) per request; and batch dispatch hands the
+//! executor shared `Arc<InputData>` handles rather than deep-copying
+//! every payload.
 
+use std::collections::HashMap;
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -19,6 +29,11 @@ use super::metrics::Metrics;
 use super::request::{InputData, Request, RequestId, Response};
 use super::router::{Router, StreamKey};
 
+/// How long the loop may sleep when no request is queued. Purely an
+/// upper bound on shutdown-by-disconnect latency: submits and shutdowns
+/// arrive on the channel and wake `recv_timeout` immediately.
+const IDLE_WAIT: Duration = Duration::from_millis(250);
+
 /// Executes one batch for a stream. Implemented by the PJRT-backed
 /// executor in production and by mocks in tests.
 ///
@@ -28,12 +43,12 @@ use super::router::{Router, StreamKey};
 /// [`Coordinator::start`] and never crosses threads.
 pub trait Executor {
     /// Run a batch of `bucket` rows. `inputs` holds `requests.len()`
-    /// samples; the executor pads to `bucket` itself. Returns one output
-    /// vector per (non-padding) sample.
+    /// shared samples; the executor pads to `bucket` itself. Returns one
+    /// output vector per (non-padding) sample.
     fn execute(
         &mut self,
         stream: &StreamKey,
-        inputs: &[InputData],
+        inputs: &[Arc<InputData>],
         bucket: usize,
     ) -> Result<Vec<Vec<f32>>>;
 }
@@ -61,15 +76,25 @@ impl Coordinator {
         let handle = std::thread::spawn(move || {
             let mut executor = make_executor();
             let mut metrics = Metrics::default();
-            let mut waiters: Vec<(RequestId, mpsc::Sender<Response>)> =
-                Vec::new();
+            let mut waiters: HashMap<RequestId, mpsc::Sender<Response>> =
+                HashMap::new();
+            let mut inputs: Vec<Arc<InputData>> = Vec::new();
             loop {
-                // Block briefly so timeout-based batches still fire.
-                let msg = rx.recv_timeout(Duration::from_millis(1));
+                // Sleep until the oldest queued request needs a
+                // timeout-based batch; idle indefinitely (modulo
+                // IDLE_WAIT) when no queue holds work.
+                let wait = router
+                    .next_deadline(Instant::now())
+                    .unwrap_or(IDLE_WAIT);
+                let msg = rx.recv_timeout(wait);
                 match msg {
                     Ok(Msg::Submit(req, reply)) => {
-                        waiters.push((req.id, reply));
-                        if !router.route(req) {
+                        let id = req.id;
+                        if router.route(req) {
+                            waiters.insert(id, reply);
+                        } else {
+                            // dropping `reply` fails the caller's recv
+                            // immediately instead of leaking a waiter
                             metrics.record_error();
                         }
                     }
@@ -77,7 +102,7 @@ impl Coordinator {
                         for (key, plan) in router.flush() {
                             run_batch(
                                 &key, plan, &mut *executor, &mut metrics,
-                                &mut waiters,
+                                &mut waiters, &mut inputs,
                             );
                         }
                         return metrics;
@@ -93,8 +118,10 @@ impl Coordinator {
                 while let Ok(msg) = rx.try_recv() {
                     match msg {
                         Msg::Submit(req, reply) => {
-                            waiters.push((req.id, reply));
-                            if !router.route(req) {
+                            let id = req.id;
+                            if router.route(req) {
+                                waiters.insert(id, reply);
+                            } else {
                                 metrics.record_error();
                             }
                         }
@@ -102,7 +129,7 @@ impl Coordinator {
                             for (key, plan) in router.flush() {
                                 run_batch(
                                     &key, plan, &mut *executor,
-                                    &mut metrics, &mut waiters,
+                                    &mut metrics, &mut waiters, &mut inputs,
                                 );
                             }
                             return metrics;
@@ -112,7 +139,7 @@ impl Coordinator {
                 for (key, plan) in router.ready_batches(Instant::now()) {
                     run_batch(
                         &key, plan, &mut *executor, &mut metrics,
-                        &mut waiters,
+                        &mut waiters, &mut inputs,
                     );
                 }
             }
@@ -127,10 +154,21 @@ impl Coordinator {
         k: usize,
         input: InputData,
     ) -> mpsc::Receiver<Response> {
+        self.submit_shared(Arc::from(model), k, Arc::new(input))
+    }
+
+    /// Submit with pre-shared handles — replay loops reuse one
+    /// `Arc<str>` for the model and avoid per-request payload moves.
+    pub fn submit_shared(
+        &mut self,
+        model: Arc<str>,
+        k: usize,
+        input: Arc<InputData>,
+    ) -> mpsc::Receiver<Response> {
         let id = self.next_id;
         self.next_id += 1;
         let (tx, rx) = mpsc::channel();
-        let req = Request::new(id, model, k, input);
+        let req = Request::shared(id, model, k, input);
         self.tx
             .send(Msg::Submit(req, tx))
             .expect("coordinator thread alive");
@@ -153,11 +191,12 @@ fn run_batch(
     plan: BatchPlan,
     executor: &mut dyn Executor,
     metrics: &mut Metrics,
-    waiters: &mut Vec<(RequestId, mpsc::Sender<Response>)>,
+    waiters: &mut HashMap<RequestId, mpsc::Sender<Response>>,
+    inputs: &mut Vec<Arc<InputData>>,
 ) {
-    let inputs: Vec<InputData> =
-        plan.requests.iter().map(|r| r.input.clone()).collect();
-    match executor.execute(key, &inputs, plan.bucket) {
+    inputs.clear();
+    inputs.extend(plan.requests.iter().map(|r| r.input.clone()));
+    match executor.execute(key, inputs, plan.bucket) {
         Ok(outputs) => {
             let now = Instant::now();
             let mut lats = Vec::with_capacity(plan.requests.len());
@@ -165,10 +204,7 @@ fn run_batch(
                 let latency_us =
                     now.duration_since(req.enqueued).as_secs_f64() * 1e6;
                 lats.push(latency_us);
-                if let Some(pos) =
-                    waiters.iter().position(|(id, _)| *id == req.id)
-                {
-                    let (_, reply) = waiters.swap_remove(pos);
+                if let Some(reply) = waiters.remove(&req.id) {
                     let _ = reply.send(Response {
                         id: req.id,
                         output,
@@ -182,11 +218,8 @@ fn run_batch(
         Err(_) => {
             for req in &plan.requests {
                 metrics.record_error();
-                if let Some(pos) =
-                    waiters.iter().position(|(id, _)| *id == req.id)
-                {
-                    waiters.swap_remove(pos); // drop sender → Err on recv
-                }
+                // drop sender → Err on the caller's recv
+                waiters.remove(&req.id);
             }
         }
     }
@@ -204,13 +237,13 @@ mod tests {
         fn execute(
             &mut self,
             stream: &StreamKey,
-            inputs: &[InputData],
+            inputs: &[Arc<InputData>],
             _bucket: usize,
         ) -> Result<Vec<Vec<f32>>> {
             Ok(inputs
                 .iter()
                 .map(|i| {
-                    let first = match i {
+                    let first = match &**i {
                         InputData::F32(v) => v[0],
                         InputData::I32(v) => v[0] as f32,
                     };
@@ -239,6 +272,20 @@ mod tests {
         assert!(r1.latency_us >= 0.0);
         let m = c.shutdown();
         assert_eq!(m.completed(), 2);
+    }
+
+    #[test]
+    fn shared_submit_roundtrip() {
+        let mut c = Coordinator::start(router(), || Box::new(Echo));
+        let model: Arc<str> = Arc::from("bert");
+        let input = Arc::new(InputData::I32(vec![3, 0]));
+        let rx = c.submit_shared(model.clone(), 5, input.clone());
+        let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(r.output, vec![3.0, 5.0]);
+        // the caller's handle is still live and untouched
+        assert_eq!(input.len(), 2);
+        let m = c.shutdown();
+        assert_eq!(m.completed(), 1);
     }
 
     #[test]
@@ -288,7 +335,7 @@ mod tests {
         fn execute(
             &mut self,
             _stream: &StreamKey,
-            _inputs: &[InputData],
+            _inputs: &[Arc<InputData>],
             _bucket: usize,
         ) -> Result<Vec<Vec<f32>>> {
             anyhow::bail!("hardware fault injected")

@@ -70,6 +70,15 @@ impl Crossbar {
                 "tile depth {depth} exceeds capacity");
         let n_cols = kt_codes.first().map_or(0, Vec::len);
         assert!(n_cols <= cols, "tile cols {n_cols} exceed {cols}");
+        // 15-level code contract (|w| ≤ WEIGHT_LEVELS): this bound is
+        // what lets mac_into accumulate in i32 without overflow.
+        debug_assert!(
+            kt_codes
+                .iter()
+                .flatten()
+                .all(|&w| w.abs() <= crate::quant::WEIGHT_LEVELS),
+            "weight code outside ±{}", crate::quant::WEIGHT_LEVELS
+        );
         let mut codes_flat = Vec::with_capacity(n_cols * depth);
         let columns = (0..n_cols)
             .map(|c| {
@@ -105,18 +114,34 @@ impl Crossbar {
     /// Works on the flat per-column weight codes rather than walking the
     /// three ternary cells of each weight: identical arithmetic (cells
     /// reconstruct the code exactly — see `mac_matches_cell_level`), one
-    /// contiguous stream per column, i32 products accumulated in i64.
+    /// contiguous stream per column. The accumulator stays in i32 so the
+    /// loop vectorizes as full-width integer lanes (§Perf): |w·x| ≤ 105
+    /// and depth is bounded by the physical row budget (rows/3), so the
+    /// column sum is far below i32::MAX for any programmable array.
     pub fn mac_into(&self, input_codes: &[i32], out: &mut [i64]) {
         assert_eq!(input_codes.len(), self.depth);
         assert_eq!(out.len(), self.columns.len());
+        // Overflow guard for the i32 accumulator: weights are bounded at
+        // program() time (±WEIGHT_LEVELS), inputs here (±qmax(5) = 15),
+        // so each product is ≤ 105 and the depth bound keeps every
+        // column sum far below i32::MAX.
+        debug_assert!(self.depth < (i32::MAX / 128) as usize);
+        debug_assert!(
+            input_codes
+                .iter()
+                .all(|&x| x.abs() <= crate::quant::qmax(
+                    crate::quant::N_BITS_INPUT
+                )),
+            "input code outside the 5-bit PWM range"
+        );
         let d = self.depth;
         for (c, o) in out.iter_mut().enumerate() {
             let col = &self.codes_flat[c * d..(c + 1) * d];
-            let mut acc: i64 = 0;
+            let mut acc: i32 = 0;
             for (&w, &x) in col.iter().zip(input_codes) {
-                acc += (w * x) as i64; // |w|≤7, |x|≤15: no i32 overflow
+                acc += w * x;
             }
-            *o = acc;
+            *o = acc as i64;
         }
     }
 

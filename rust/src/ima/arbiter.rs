@@ -29,6 +29,23 @@ pub struct ArbiterOutcome {
     pub arb_events: usize,
 }
 
+/// Cost summary of one arbitration when the grants live in a caller
+/// buffer (the allocation-free path).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ArbiterStats {
+    /// Ramp cycle of the k-th grant, or the full ramp if fewer fired.
+    pub stop_cycle: u32,
+    /// Total arbitration slots consumed (each costs `T_arb`).
+    pub arb_events: usize,
+}
+
+impl ArbiterStats {
+    /// Early-stop fraction α: cycles actually run over the full ramp.
+    pub fn alpha(&self, ramp_steps: u32) -> f64 {
+        (self.stop_cycle + 1) as f64 / ramp_steps as f64
+    }
+}
+
 /// Arbitrate per-column crossing cycles down to the top-k grants.
 ///
 /// `crossings[c]` is the ramp cycle at which column c's SA fires
@@ -37,31 +54,84 @@ pub struct ArbiterOutcome {
 pub fn arbitrate(crossings: &[Option<u32>], k: usize, ramp_steps: u32)
     -> ArbiterOutcome
 {
-    // Bucket requests by cycle, preserving column order (addresses are
-    // scanned smallest-first by the arbiter tree).
-    let mut events: Vec<Grant> = crossings
-        .iter()
-        .enumerate()
-        .filter_map(|(c, t)| t.map(|cycle| Grant { column: c, cycle }))
-        .collect();
-    // Stable order: cycle first, then column address (the tie rule).
-    events.sort_by_key(|g| (g.cycle, g.column));
+    let mut grants = Vec::new();
+    let stats = arbitrate_into(crossings, k, ramp_steps, &mut grants);
+    ArbiterOutcome {
+        grants,
+        stop_cycle: stats.stop_cycle,
+        arb_events: stats.arb_events,
+    }
+}
 
-    let grants: Vec<Grant> = events.into_iter().take(k).collect();
+/// Allocation-free arbitration: grants are written into `grants`
+/// (cleared first), in grant order (cycle, then address — the tie rule).
+///
+/// Small k (the topkima case) uses a bounded selection — a sorted buffer
+/// of at most k grants, O(d·k) worst case with k tiny — instead of
+/// sorting all d events. Large k (the full-conversion case) falls back
+/// to an in-place unstable sort of the event buffer; (cycle, column)
+/// keys are distinct per column, so the order is still deterministic.
+/// Both paths produce bit-identical grant sequences.
+pub fn arbitrate_into(
+    crossings: &[Option<u32>],
+    k: usize,
+    ramp_steps: u32,
+    grants: &mut Vec<Grant>,
+) -> ArbiterStats {
+    grants.clear();
+    if k == 0 {
+        return ArbiterStats {
+            stop_cycle: ramp_steps.saturating_sub(1),
+            arb_events: 0,
+        };
+    }
+    let fired = || {
+        crossings
+            .iter()
+            .enumerate()
+            .filter_map(|(c, t)| t.map(|cycle| Grant { column: c, cycle }))
+    };
+    if k.saturating_mul(8) >= crossings.len() {
+        // Large k: collect + sort beats repeated bounded inserts.
+        grants.extend(fired());
+        grants.sort_unstable_by_key(|g| (g.cycle, g.column));
+        grants.truncate(k);
+    } else {
+        // Bounded k-selection: keep the k smallest (cycle, column) pairs
+        // in sorted order. Columns arrive address-ascending, so an event
+        // tying the current worst grant never displaces it.
+        for g in fired() {
+            let key = (g.cycle, g.column);
+            if grants.len() == k {
+                let worst = grants[k - 1];
+                if key >= (worst.cycle, worst.column) {
+                    continue;
+                }
+                grants.pop();
+            }
+            let pos = grants
+                .partition_point(|h| (h.cycle, h.column) < key);
+            grants.insert(pos, g);
+        }
+    }
     let stop_cycle = grants
         .last()
         .map(|g| g.cycle)
         .filter(|_| grants.len() == k)
         .unwrap_or(ramp_steps.saturating_sub(1));
-    let arb_events = grants.len();
-    ArbiterOutcome { grants, stop_cycle, arb_events }
+    ArbiterStats { stop_cycle, arb_events: grants.len() }
 }
 
 impl ArbiterOutcome {
     /// Early-stop fraction α for this conversion: cycles actually run
-    /// over the full ramp length.
+    /// over the full ramp length (one definition, shared with the
+    /// allocation-free path via [`ArbiterStats`]).
     pub fn alpha(&self, ramp_steps: u32) -> f64 {
-        (self.stop_cycle + 1) as f64 / ramp_steps as f64
+        ArbiterStats {
+            stop_cycle: self.stop_cycle,
+            arb_events: self.arb_events,
+        }
+        .alpha(ramp_steps)
     }
 
     /// Column addresses granted (selection set).
@@ -121,6 +191,48 @@ mod tests {
         let crossings = vec![Some(1), Some(2), Some(3)];
         let out = arbitrate(&crossings, 2, 32);
         assert_eq!(out.arb_events, 2);
+    }
+
+    #[test]
+    fn property_bounded_selection_matches_sort_with_reused_buffer() {
+        // both arbitrate_into regimes (bounded insert for small k, sort
+        // for large k) agree with a from-scratch sort oracle, even when
+        // the grant buffer is reused dirty across calls
+        use crate::util::{check::property, rng::Rng};
+        let mut grants = Vec::new();
+        property("arbitrate_into == sort oracle", 300, 0x5C2A7C4, |rng: &mut Rng| {
+            let d = 1 + rng.below(300);
+            let k = 1 + rng.below(d); // spans both regimes
+            let cycles: Vec<Option<u32>> = (0..d)
+                .map(|_| {
+                    if rng.chance(0.1) {
+                        None
+                    } else {
+                        Some(rng.below(32) as u32)
+                    }
+                })
+                .collect();
+            let stats = arbitrate_into(&cycles, k, 32, &mut grants);
+            let mut oracle: Vec<Grant> = cycles
+                .iter()
+                .enumerate()
+                .filter_map(|(c, t)| t.map(|cycle| Grant { column: c, cycle }))
+                .collect();
+            oracle.sort_by_key(|g| (g.cycle, g.column));
+            oracle.truncate(k);
+            crate::prop_assert!(
+                grants == oracle,
+                "d {d} k {k}: grants {:?} oracle {:?}", grants, oracle
+            );
+            let full = arbitrate(&cycles, k, 32);
+            crate::prop_assert!(
+                full.grants == grants
+                    && full.stop_cycle == stats.stop_cycle
+                    && full.arb_events == stats.arb_events,
+                "wrapper drifted from _into path"
+            );
+            Ok(())
+        });
     }
 
     #[test]

@@ -13,7 +13,7 @@
 //! `convert_full` runs the same machinery without early stop — the
 //! conventional-IMA baseline [6] used by Conv-SM and Dtopk-SM.
 
-use super::arbiter::{arbitrate, ArbiterOutcome};
+use super::arbiter::{arbitrate_into, Grant};
 use super::noise::ColumnNoise;
 use super::ramp::Ramp;
 use crate::circuits::{BitlineModel, Energy, Timing};
@@ -39,6 +39,35 @@ pub struct ConversionResult {
     pub latency_ns: f64,
     /// Conversion energy (pJ): per-cycle column ADC + arbiter events.
     pub energy_pj: f64,
+}
+
+/// Cost summary of one conversion when the outputs live in a
+/// [`ConversionScratch`] (the allocation-free path).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ConversionStats {
+    /// Early-stop fraction α = cycles run / full ramp.
+    pub alpha: f64,
+    /// Conversion latency (ns): ramp cycles + arbiter drain.
+    pub latency_ns: f64,
+    /// Conversion energy (pJ): per-cycle column ADC + arbiter events.
+    pub energy_pj: f64,
+}
+
+/// Reusable per-conversion buffers (§Perf): crossing cycles, arbiter
+/// grants, and packaged outputs. One scratch threaded through a row loop
+/// makes the whole conversion path allocation-free after the first row.
+#[derive(Clone, Debug, Default)]
+pub struct ConversionScratch {
+    crossings: Vec<Option<u32>>,
+    grants: Vec<Grant>,
+    /// Outputs of the most recent `convert_*_into` call, in grant order.
+    pub outputs: Vec<Conversion>,
+}
+
+impl ConversionScratch {
+    pub fn new() -> ConversionScratch {
+        ConversionScratch::default()
+    }
 }
 
 /// The topkima in-memory ADC for one crossbar.
@@ -73,27 +102,65 @@ impl TopkimaConverter {
     /// array is rated for), so comparisons happen in MAC units. Bitline
     /// voltage noise is referred back through `dv_per_unit`; converter
     /// noise (`ColumnNoise`) is specified directly in ADC LSBs.
-    fn crossings(&self, macs: &[i64], rng: &mut Rng) -> Vec<Option<u32>> {
+    fn crossings_into(
+        &self,
+        macs: &[i64],
+        rng: &mut Rng,
+        out: &mut Vec<Option<u32>>,
+    ) {
         let dv = self.bitline.dv_per_unit;
-        macs.iter()
-            .enumerate()
-            .map(|(c, &mac)| {
-                let v_mac_units = self.bitline.sample(mac, rng) / dv;
-                let err_lsb = self.noise.sample_lsb(c, rng);
-                let v = v_mac_units + err_lsb * self.ramp.lsb();
-                self.ramp.crossing_cycle_fast(v)
-            })
-            .collect()
+        out.clear();
+        out.extend(macs.iter().enumerate().map(|(c, &mac)| {
+            let v_mac_units = self.bitline.sample(mac, rng) / dv;
+            let err_lsb = self.noise.sample_lsb(c, rng);
+            let v = v_mac_units + err_lsb * self.ramp.lsb();
+            self.ramp.crossing_cycle_fast(v)
+        }));
     }
 
     /// Convert with top-k early stopping (the topkima macro).
     pub fn convert_topk(&self, macs: &[i64], k: usize, rng: &mut Rng)
         -> ConversionResult
     {
+        let mut scratch = ConversionScratch::new();
+        let stats = self.convert_topk_into(macs, k, rng, &mut scratch);
+        ConversionResult {
+            outputs: scratch.outputs,
+            alpha: stats.alpha,
+            latency_ns: stats.latency_ns,
+            energy_pj: stats.energy_pj,
+        }
+    }
+
+    /// Allocation-free [`Self::convert_topk`]: outputs land in
+    /// `scratch.outputs`, buffers are reused across calls. Bit-for-bit
+    /// identical to the allocating wrapper (see `tests/scratch_parity`).
+    pub fn convert_topk_into(
+        &self,
+        macs: &[i64],
+        k: usize,
+        rng: &mut Rng,
+        scratch: &mut ConversionScratch,
+    ) -> ConversionStats {
         assert_eq!(macs.len(), self.noise.columns());
-        let crossings = self.crossings(macs, rng);
-        let out = arbitrate(&crossings, k, self.ramp.steps());
-        self.package(out, k)
+        self.crossings_into(macs, rng, &mut scratch.crossings);
+        let stats = arbitrate_into(
+            &scratch.crossings,
+            k,
+            self.ramp.steps(),
+            &mut scratch.grants,
+        );
+        self.emit_outputs(scratch);
+        // Eq (4): T_ima,arb = max(α·T_ima + T_arb, T_clk + k·T_arb)
+        let alpha = stats.alpha(self.ramp.steps());
+        let latency_ns = (alpha * self.timing.t_ima() + self.timing.t_arb)
+            .max(self.timing.t_clk_ima + k as f64 * self.timing.t_arb);
+        let cycles_run = (stats.stop_cycle + 1) as f64;
+        let energy_pj = self.noise.columns() as f64
+            * cycles_run
+            * self.energy.e_adc_cycle
+            + stats.arb_events as f64 * self.energy.e_arb_event;
+        ConversionStats { alpha, latency_ns, energy_pj }
     }
 
     /// Convert all columns, full ramp (conventional IMA [6] — the ramp
@@ -102,40 +169,51 @@ impl TopkimaConverter {
     pub fn convert_full(&self, macs: &[i64], rng: &mut Rng)
         -> ConversionResult
     {
-        assert_eq!(macs.len(), self.noise.columns());
-        let crossings = self.crossings(macs, rng);
-        let d = macs.len();
-        let out = arbitrate(&crossings, d, self.ramp.steps());
-        let mut res = self.package(out, d);
-        // no early stop: full ramp latency/energy, no arbiter drain
-        res.alpha = 1.0;
-        res.latency_ns = self.timing.t_ima();
-        res.energy_pj = d as f64
-            * self.ramp.steps() as f64
-            * self.energy.e_adc_cycle;
-        res
+        let mut scratch = ConversionScratch::new();
+        let stats = self.convert_full_into(macs, rng, &mut scratch);
+        ConversionResult {
+            outputs: scratch.outputs,
+            alpha: stats.alpha,
+            latency_ns: stats.latency_ns,
+            energy_pj: stats.energy_pj,
+        }
     }
 
-    fn package(&self, out: ArbiterOutcome, k: usize) -> ConversionResult {
-        let alpha = out.alpha(self.ramp.steps());
-        // Eq (4): T_ima,arb = max(α·T_ima + T_arb, T_clk + k·T_arb)
-        let latency_ns = (alpha * self.timing.t_ima() + self.timing.t_arb)
-            .max(self.timing.t_clk_ima + k as f64 * self.timing.t_arb);
-        let cycles_run = (out.stop_cycle + 1) as f64;
-        let energy_pj = self.noise.columns() as f64
-            * cycles_run
-            * self.energy.e_adc_cycle
-            + out.arb_events as f64 * self.energy.e_arb_event;
-        let outputs = out
-            .grants
-            .iter()
-            .map(|g| Conversion {
-                column: g.column,
-                code: self.ramp.code_at(g.cycle),
-                cycle: g.cycle,
-            })
-            .collect();
-        ConversionResult { outputs, alpha, latency_ns, energy_pj }
+    /// Allocation-free [`Self::convert_full`].
+    pub fn convert_full_into(
+        &self,
+        macs: &[i64],
+        rng: &mut Rng,
+        scratch: &mut ConversionScratch,
+    ) -> ConversionStats {
+        assert_eq!(macs.len(), self.noise.columns());
+        self.crossings_into(macs, rng, &mut scratch.crossings);
+        let d = macs.len();
+        arbitrate_into(
+            &scratch.crossings,
+            d,
+            self.ramp.steps(),
+            &mut scratch.grants,
+        );
+        self.emit_outputs(scratch);
+        // no early stop: full ramp latency/energy, no arbiter drain
+        ConversionStats {
+            alpha: 1.0,
+            latency_ns: self.timing.t_ima(),
+            energy_pj: d as f64
+                * self.ramp.steps() as f64
+                * self.energy.e_adc_cycle,
+        }
+    }
+
+    /// Package the arbiter grants into (address, code) outputs.
+    fn emit_outputs(&self, scratch: &mut ConversionScratch) {
+        scratch.outputs.clear();
+        scratch.outputs.extend(scratch.grants.iter().map(|g| Conversion {
+            column: g.column,
+            code: self.ramp.code_at(g.cycle),
+            cycle: g.cycle,
+        }));
     }
 }
 

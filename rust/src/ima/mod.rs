@@ -14,7 +14,10 @@ pub mod converter;
 pub mod noise;
 pub mod ramp;
 
-pub use arbiter::{arbitrate, ArbiterOutcome, Grant};
-pub use converter::{Conversion, ConversionResult, TopkimaConverter};
+pub use arbiter::{arbitrate, arbitrate_into, ArbiterOutcome, ArbiterStats, Grant};
+pub use converter::{
+    Conversion, ConversionResult, ConversionScratch, ConversionStats,
+    TopkimaConverter,
+};
 pub use noise::{ColumnNoise, NoiseModel};
 pub use ramp::Ramp;

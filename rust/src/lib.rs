@@ -16,6 +16,8 @@
 //! * [`pipeline`] — the one public assembly API: a `StackConfig` +
 //!   `PipelineBuilder` that compose circuit → sim → serving from a
 //!   single configuration value.
+//! * [`sweep`] — the parallel hardware-grid search (`topkima sweep-hw`)
+//!   built on the pipeline and the allocation-free hot paths.
 //! * [`quant`], [`util`] — shared contracts and dependency-free support.
 
 pub mod accel;
@@ -31,4 +33,5 @@ pub mod runtime;
 pub mod scale;
 pub mod sim;
 pub mod softmax;
+pub mod sweep;
 pub mod util;

@@ -14,6 +14,13 @@
 //! * `sweep [--artifacts DIR] [--model bert|vit] [--batch N]
 //!   [--limit N]` — re-check Fig 3 on the rust stack: run every exported
 //!   per-k executable over the eval split and print accuracy vs k.
+//! * `sweep-hw [--threads N] [--ks 1,2,5,10] [--seq-lens 128,384]
+//!   [--kinds conv,dtopk,topkima] [--noise-points ideal,default]
+//!   [--q-rows N] [--seed S] [--out FILE] [stack flags...]` — parallel
+//!   hardware grid search: every (k × SL × softmax × noise) point is
+//!   simulated analytically *and* run behaviorally on the circuit
+//!   macro; results land in `BENCH_sweep.json` (byte-identical for any
+//!   `--threads` value).
 //! * `check [--artifacts DIR]` — load every artifact, compile, and run a
 //!   one-batch smoke test (CI gate; skips cleanly when no artifacts
 //!   exist).
@@ -39,12 +46,13 @@ fn main() -> Result<()> {
         "report" => cmd_report(rest),
         "serve" => cmd_serve(rest),
         "sweep" => cmd_sweep(rest),
+        "sweep-hw" => cmd_sweep_hw(rest),
         "check" => cmd_check(rest),
         "config" => cmd_config(rest),
         _ => {
             eprintln!(
-                "usage: topkima <serve|report|sweep|check|config> [flags]\n\
-                 see rust/src/main.rs doc comment"
+                "usage: topkima <serve|report|sweep|sweep-hw|check|config> \
+                 [flags]\nsee rust/src/main.rs doc comment"
             );
             Ok(())
         }
@@ -109,6 +117,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let n = b.config().serving.requests.min(eval.len());
     let stride = eval.x_stride();
     let mut rxs = Vec::with_capacity(n);
+    // One shared model handle for the whole replay — per-request routing
+    // is refcount bumps, never string copies (§Perf).
+    let family_key: std::sync::Arc<str> = std::sync::Arc::from(family);
     let t0 = std::time::Instant::now();
     for i in 0..n {
         let input = if eval.kind == "vit" {
@@ -116,7 +127,11 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         } else {
             InputData::I32(eval.x_i32[i * stride..(i + 1) * stride].to_vec())
         };
-        rxs.push(coord.submit(family, k, input));
+        rxs.push(coord.submit_shared(
+            family_key.clone(),
+            k,
+            std::sync::Arc::new(input),
+        ));
     }
     let mut correct = 0usize;
     for (i, rx) in rxs.into_iter().enumerate() {
@@ -211,6 +226,146 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
         println!("{label:<8} {:>10.3}", correct as f64 / n as f64);
     }
     Ok(())
+}
+
+/// `sweep-hw`: parallel hardware grid search over StackConfig points.
+/// Sweep-axis flags are consumed here; everything left over is parsed
+/// as ordinary stack flags (the base config every point starts from).
+fn cmd_sweep_hw(args: &[String]) -> Result<()> {
+    use topkima::sweep::{run_sweep, SweepGrid, SweepOptions};
+
+    let mut grid = SweepGrid::default();
+    let mut opts = SweepOptions::default();
+    let mut out = "BENCH_sweep.json".to_string();
+    let mut rest: Vec<String> = Vec::new();
+
+    let take = |args: &[String], i: usize, flag: &str| -> Result<String> {
+        match args.get(i + 1) {
+            Some(v) if !v.starts_with("--") => Ok(v.clone()),
+            _ => bail!("--{flag} needs a value"),
+        }
+    };
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--threads" => {
+                opts.threads = take(args, i, "threads")?.parse()?;
+                i += 2;
+            }
+            "--q-rows" => {
+                opts.q_rows = take(args, i, "q-rows")?.parse()?;
+                i += 2;
+            }
+            "--seed" => {
+                opts.seed = take(args, i, "seed")?.parse()?;
+                i += 2;
+            }
+            "--out" => {
+                out = take(args, i, "out")?;
+                i += 2;
+            }
+            "--ks" => {
+                grid.ks = parse_list(&take(args, i, "ks")?, |s| {
+                    s.parse().ok()
+                })?;
+                i += 2;
+            }
+            "--seq-lens" => {
+                grid.seq_lens = parse_list(&take(args, i, "seq-lens")?, |s| {
+                    s.parse().ok()
+                })?;
+                i += 2;
+            }
+            "--kinds" => {
+                grid.softmaxes =
+                    parse_list(&take(args, i, "kinds")?, SoftmaxKind::parse)?;
+                i += 2;
+            }
+            "--noise-points" => {
+                grid.noises =
+                    parse_list(&take(args, i, "noise-points")?, |s| match s {
+                        "ideal" | "none" => Some(None),
+                        "default" => {
+                            Some(Some(topkima::ima::NoiseModel::default()))
+                        }
+                        _ => None,
+                    })?;
+                i += 2;
+            }
+            _ => {
+                rest.push(args[i].clone());
+                i += 1;
+            }
+        }
+    }
+
+    let base = StackConfig::from_args(&rest)?;
+    println!(
+        "sweep-hw: {} points ({} k × {} SL × {} softmax × {} noise), \
+         {} thread(s), {} Q rows/point",
+        grid.len(),
+        grid.ks.len(),
+        grid.seq_lens.len(),
+        grid.softmaxes.len(),
+        grid.noises.len(),
+        opts.threads.max(1),
+        opts.q_rows,
+    );
+    let t0 = std::time::Instant::now();
+    let report = run_sweep(&base, &grid, &opts)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!(
+        "{:<5} {:>4} {:>5} {:<10} {:>6} {:>6} {:>10} {:>10}",
+        "point", "k", "SL", "softmax", "noise", "alpha", "TOPS", "TOPS/W"
+    );
+    for p in &report.points {
+        println!(
+            "{:<5} {:>4} {:>5} {:<10} {:>6} {:>6.3} {:>10.2} {:>10.2}",
+            p.index,
+            p.k,
+            p.seq_len,
+            p.softmax.key(),
+            if p.noisy { "yes" } else { "no" },
+            p.alpha,
+            p.tops,
+            p.tops_per_watt,
+        );
+    }
+    if let Some(best) = report.best_by(|p| p.tops_per_watt) {
+        println!(
+            "best TOPS/W: point {} (k={}, SL={}, {}, noise={}) at {:.2}",
+            best.index,
+            best.k,
+            best.seq_len,
+            best.softmax.key(),
+            best.noisy,
+            best.tops_per_watt,
+        );
+    }
+    report
+        .save(&out)
+        .map_err(|e| anyhow::anyhow!("writing {out}: {e}"))?;
+    println!("{} points in {wall:.2}s → {out}", report.points.len());
+    Ok(())
+}
+
+/// Parse a comma-separated list with a per-item parser.
+fn parse_list<T, F: Fn(&str) -> Option<T>>(
+    text: &str,
+    parse: F,
+) -> Result<Vec<T>> {
+    let mut out = Vec::new();
+    for item in text.split(',').filter(|s| !s.is_empty()) {
+        out.push(
+            parse(item)
+                .ok_or_else(|| anyhow::anyhow!("bad list item '{item}'"))?,
+        );
+    }
+    if out.is_empty() {
+        bail!("empty list '{text}'");
+    }
+    Ok(out)
 }
 
 /// `check`: compile every artifact and smoke-run one batch. Skips

@@ -254,9 +254,11 @@ mod tests {
     fn router_registers_configured_stream() {
         let b = StackConfig::default().build().unwrap();
         let router = b.router(vec![1, 2, 4]);
-        assert_eq!(
-            router.streams(),
-            vec![("bert".to_string(), 5)]
-        );
+        let streams: Vec<(String, usize)> = router
+            .streams()
+            .into_iter()
+            .map(|(m, k)| (m.to_string(), k))
+            .collect();
+        assert_eq!(streams, vec![("bert".to_string(), 5)]);
     }
 }

@@ -42,9 +42,23 @@ impl DigitalSoftmax {
         selection: &[(usize, f64)],
         d: usize,
     ) -> Vec<f64> {
-        let mut dense = vec![0.0; d];
+        let mut dense = Vec::new();
+        self.compute_sparse_into(selection, d, &mut dense);
+        dense
+    }
+
+    /// [`Self::compute_sparse`] into a caller buffer (cleared and
+    /// resized to `d`) — the allocation-free row loop variant.
+    pub fn compute_sparse_into(
+        &self,
+        selection: &[(usize, f64)],
+        d: usize,
+        dense: &mut Vec<f64>,
+    ) {
+        dense.clear();
+        dense.resize(d, 0.0);
         if selection.is_empty() {
-            return dense;
+            return;
         }
         let m = selection
             .iter()
@@ -57,7 +71,6 @@ impl DigitalSoftmax {
         for &(i, v) in selection {
             dense[i] = (v - m).exp() / sum;
         }
-        dense
     }
 
     /// Latency of processing n elements, ns.

@@ -13,16 +13,32 @@
 /// returned in descending value order. Also reports the compare-exchange
 /// count actually performed (the energy-relevant work).
 pub fn digital_topk(values: &[f64], k: usize) -> (Vec<(usize, f64)>, usize) {
+    let mut out = Vec::new();
+    let mut taken = Vec::new();
+    let compares = digital_topk_into(values, k, &mut out, &mut taken);
+    (out, compares)
+}
+
+/// Allocation-free [`digital_topk`]: selected pairs are appended to
+/// `out` (cleared by the caller if desired) and `taken` is a reusable
+/// workspace. Returns the compare count.
+pub fn digital_topk_into(
+    values: &[f64],
+    k: usize,
+    out: &mut Vec<(usize, f64)>,
+    taken: &mut Vec<bool>,
+) -> usize {
     let k = k.min(values.len());
     if k == 0 {
-        return (Vec::new(), 0);
+        return 0;
     }
     // Selection network: k passes of a linear scan, counting compares.
     // (Real implementations use a bitonic partial sort; the compare count
     // is what the paper's min(d·log d, d·k) bounds.)
     let mut compares = 0usize;
-    let mut taken = vec![false; values.len()];
-    let mut out = Vec::with_capacity(k);
+    taken.clear();
+    taken.resize(values.len(), false);
+    out.reserve(k);
     for _ in 0..k {
         let mut best: Option<usize> = None;
         for (i, &v) in values.iter().enumerate() {
@@ -44,7 +60,7 @@ pub fn digital_topk(values: &[f64], k: usize) -> (Vec<(usize, f64)>, usize) {
         taken[b] = true;
         out.push((b, values[b]));
     }
-    (out, compares)
+    compares
 }
 
 /// Sorter cost model: compare-exchanges charged by the paper's bound.

@@ -20,12 +20,32 @@
 //! the softmax strategy exactly like the paper's experiment.
 
 use super::digital::DigitalSoftmax;
-use super::dtopk::{digital_topk, sort_compare_bound};
+use super::dtopk::{digital_topk_into, sort_compare_bound};
 use super::SoftmaxKind;
 use crate::circuits::{pwm, Energy, Timing};
 use crate::crossbar::Crossbar;
-use crate::ima::TopkimaConverter;
+use crate::ima::{ConversionScratch, TopkimaConverter};
 use crate::util::rng::Rng;
+
+/// Reusable per-row buffers threaded through [`run_macro`] and every
+/// [`SelectionStrategy`] (§Perf): the converter scratch plus the dense
+/// value row and sorter workspace the baseline strategies need. One
+/// scratch per run makes the row loop allocation-free.
+#[derive(Clone, Debug, Default)]
+pub struct MacroScratch {
+    /// Converter-level buffers (crossings, grants, outputs).
+    pub conv: ConversionScratch,
+    /// Dense per-column value row (Full/Dtopk strategies).
+    dense: Vec<f64>,
+    /// Digital-sorter selection workspace.
+    taken: Vec<bool>,
+}
+
+impl MacroScratch {
+    pub fn new() -> MacroScratch {
+        MacroScratch::default()
+    }
+}
 
 /// Accumulated latency/energy of a macro run.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -141,13 +161,27 @@ pub struct RowCost {
 pub trait SelectionStrategy {
     /// Convert `macs` and append the selected (column, value) pairs to
     /// `sel` (cleared by the caller); report the conversion-phase cost.
+    /// `scratch` holds the reusable conversion buffers — implementations
+    /// must not allocate per row beyond what `scratch`/`sel` amortize.
     fn select(
         &self,
         parts: &MacroParts,
         macs: &[i64],
         rng: &mut Rng,
+        scratch: &mut MacroScratch,
         sel: &mut Vec<(usize, f64)>,
     ) -> RowCost;
+}
+
+/// Scatter the scratch outputs of a full conversion into the dense
+/// per-column value row (0.0 for columns that never crossed).
+fn scatter_dense(parts: &MacroParts, scratch: &mut MacroScratch, d: usize) {
+    let lsb = parts.converter.ramp.lsb();
+    scratch.dense.clear();
+    scratch.dense.resize(d, 0.0);
+    for o in &scratch.conv.outputs {
+        scratch.dense[o.column] = o.code as f64 * lsb;
+    }
 }
 
 /// Conventional full conversion: every column's quantized value (0.0 for
@@ -160,19 +194,17 @@ impl SelectionStrategy for FullConversion {
         parts: &MacroParts,
         macs: &[i64],
         rng: &mut Rng,
+        scratch: &mut MacroScratch,
         sel: &mut Vec<(usize, f64)>,
     ) -> RowCost {
         let d = macs.len();
-        let conv = parts.converter.convert_full(macs, rng);
-        let lsb = parts.converter.ramp.lsb();
-        let mut vals = vec![0.0f64; d];
-        for o in &conv.outputs {
-            vals[o.column] = o.code as f64 * lsb;
-        }
-        sel.extend(vals.iter().copied().enumerate());
+        let stats =
+            parts.converter.convert_full_into(macs, rng, &mut scratch.conv);
+        scatter_dense(parts, scratch, d);
+        sel.extend(scratch.dense.iter().copied().enumerate());
         RowCost {
-            latency_ns: conv.latency_ns,
-            energy_pj: conv.energy_pj,
+            latency_ns: stats.latency_ns,
+            energy_pj: stats.energy_pj,
             alpha: 1.0,
             nl_elems: d,
         }
@@ -190,22 +222,19 @@ impl SelectionStrategy for DigitalTopkSelect {
         parts: &MacroParts,
         macs: &[i64],
         rng: &mut Rng,
+        scratch: &mut MacroScratch,
         sel: &mut Vec<(usize, f64)>,
     ) -> RowCost {
         let d = macs.len();
-        let conv = parts.converter.convert_full(macs, rng);
-        let lsb = parts.converter.ramp.lsb();
-        let mut vals = vec![0.0f64; d];
-        for o in &conv.outputs {
-            vals[o.column] = o.code as f64 * lsb;
-        }
-        let (top, _) = digital_topk(&vals, self.k);
-        sel.extend(top);
+        let stats =
+            parts.converter.convert_full_into(macs, rng, &mut scratch.conv);
+        scatter_dense(parts, scratch, d);
+        digital_topk_into(&scratch.dense, self.k, sel, &mut scratch.taken);
         let sort_ns = parts.timing.t_sort(d, self.k);
         let sort_pj = sort_compare_bound(d, self.k) * parts.energy.e_sort_cmp;
         RowCost {
-            latency_ns: conv.latency_ns + sort_ns,
-            energy_pj: conv.energy_pj + sort_pj,
+            latency_ns: stats.latency_ns + sort_ns,
+            energy_pj: stats.energy_pj + sort_pj,
             alpha: 1.0,
             nl_elems: self.k,
         }
@@ -223,20 +252,28 @@ impl SelectionStrategy for TopkimaSelect {
         parts: &MacroParts,
         macs: &[i64],
         rng: &mut Rng,
+        scratch: &mut MacroScratch,
         sel: &mut Vec<(usize, f64)>,
     ) -> RowCost {
-        let conv = parts.converter.convert_topk(macs, self.k, rng);
+        let stats = parts.converter.convert_topk_into(
+            macs,
+            self.k,
+            rng,
+            &mut scratch.conv,
+        );
         let lsb = parts.converter.ramp.lsb();
         sel.extend(
-            conv.outputs
+            scratch
+                .conv
+                .outputs
                 .iter()
                 .map(|o| (o.column, o.code as f64 * lsb)),
         );
         RowCost {
-            latency_ns: conv.latency_ns,
-            energy_pj: conv.energy_pj,
-            alpha: conv.alpha,
-            nl_elems: conv.outputs.len(),
+            latency_ns: stats.latency_ns,
+            energy_pj: stats.energy_pj,
+            alpha: stats.alpha,
+            nl_elems: scratch.conv.outputs.len(),
         }
     }
 }
@@ -255,11 +292,14 @@ pub fn run_macro<S: SelectionStrategy>(
     let mut probs = Vec::with_capacity(q_rows.len());
     let mut macs = vec![0i64; d];
     let mut sel: Vec<(usize, f64)> = Vec::with_capacity(d);
+    let mut scratch = MacroScratch::new();
     for q in q_rows {
         let (mac_ns, mac_pj) = parts.mac_phase_cost(q);
         parts.crossbar.mac_into(q, &mut macs);
         sel.clear();
-        let rc = strategy.select(parts, &macs, rng, &mut sel);
+        let rc = strategy.select(parts, &macs, rng, &mut scratch, &mut sel);
+        // the prob row is an owned result, not scratch — this allocation
+        // is the output itself
         probs.push(parts.softmax.compute_sparse(&sel, d));
         cost.absorb(
             mac_ns + rc.latency_ns + parts.softmax.latency_ns(rc.nl_elems),

@@ -1,0 +1,373 @@
+//! `topkima sweep-hw`: parallel grid search over [`StackConfig`] points.
+//!
+//! Related accelerator work justifies design points with hardware-grid
+//! sweeps (ITA's energy/area grids, Hyft's format sweeps); this module
+//! is ours. A [`SweepGrid`] expands (k × seq-len × softmax kind × noise)
+//! into validated `StackConfig` points; [`run_sweep`] fans them out over
+//! `std::thread::scope` workers, evaluating each point at two levels
+//! through the one [`PipelineBuilder`] path:
+//!
+//! * **analytic** — `builder.simulate()`: module latency/energy, TOPS,
+//!   TOPS/W (the Table-I accounting);
+//! * **behavioral** — a head-shaped circuit macro run over pseudo-random
+//!   Q rows on the allocation-free hot path (`run_macro` + scratch):
+//!   measured α, macro latency/energy, and a probability checksum.
+//!
+//! Every point's computation is seeded from (sweep seed, point index)
+//! only, so results are **bit-identical for any worker count** — the
+//! determinism test serializes a grid at 1 and N threads and compares
+//! the JSON byte-for-byte. Results serialize via `util::json` in point
+//! order (`BENCH_sweep.json`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::crossbar::Crossbar;
+use crate::ima::NoiseModel;
+use crate::pipeline::{ConfigError, StackConfig};
+use crate::softmax::SoftmaxKind;
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+
+/// The grid axes. Every combination becomes one `StackConfig` point.
+#[derive(Clone, Debug)]
+pub struct SweepGrid {
+    /// Top-k winners per softmax row.
+    pub ks: Vec<usize>,
+    /// Sequence lengths (softmax row widths at the system level).
+    pub seq_lens: Vec<usize>,
+    /// Softmax macro designs.
+    pub softmaxes: Vec<SoftmaxKind>,
+    /// Converter error models (`None` = ideal).
+    pub noises: Vec<Option<NoiseModel>>,
+}
+
+impl Default for SweepGrid {
+    /// The paper-shaped default: 4 k-values × 2 sequence lengths ×
+    /// 3 softmax designs × {ideal, default-noise} = 48 points.
+    fn default() -> SweepGrid {
+        SweepGrid {
+            ks: vec![1, 2, 5, 10],
+            seq_lens: vec![128, 384],
+            softmaxes: SoftmaxKind::ALL.to_vec(),
+            noises: vec![None, Some(NoiseModel::default())],
+        }
+    }
+}
+
+impl SweepGrid {
+    /// Total grid points.
+    pub fn len(&self) -> usize {
+        self.ks.len()
+            * self.seq_lens.len()
+            * self.softmaxes.len()
+            * self.noises.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Expand into validated configs (k-major, then SL, softmax, noise —
+    /// a stable order the JSON output preserves).
+    pub fn points(&self, base: &StackConfig)
+        -> Result<Vec<StackConfig>, ConfigError>
+    {
+        let mut out = Vec::with_capacity(self.len());
+        for &k in &self.ks {
+            for &sl in &self.seq_lens {
+                for &sm in &self.softmaxes {
+                    for noise in &self.noises {
+                        let mut cfg = base
+                            .clone()
+                            .with_k(k)
+                            .with_seq_len(sl)
+                            .with_softmax(sm);
+                        cfg.noise = *noise;
+                        cfg.validate()?;
+                        out.push(cfg);
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Worker/workload knobs (not part of the result identity: the JSON is
+/// the same for every `threads` value).
+#[derive(Clone, Copy, Debug)]
+pub struct SweepOptions {
+    /// Worker threads (clamped to ≥ 1).
+    pub threads: usize,
+    /// Q rows per behavioral macro run.
+    pub q_rows: usize,
+    /// Root seed; each point derives its own stream from (seed, index).
+    pub seed: u64,
+}
+
+impl Default for SweepOptions {
+    fn default() -> SweepOptions {
+        SweepOptions { threads: 1, q_rows: 8, seed: 0x70D1A }
+    }
+}
+
+/// One evaluated grid point.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PointResult {
+    pub index: usize,
+    pub k: usize,
+    pub seq_len: usize,
+    pub softmax: SoftmaxKind,
+    pub noisy: bool,
+    // analytic system level
+    pub sys_latency_ns: f64,
+    pub sys_energy_pj: f64,
+    pub tops: f64,
+    pub tops_per_watt: f64,
+    // behavioral circuit level
+    pub alpha: f64,
+    pub macro_latency_ns: f64,
+    pub macro_energy_pj: f64,
+    /// Order-weighted probability digest of the behavioral output rows —
+    /// the quantity the determinism test compares across thread counts.
+    pub prob_checksum: f64,
+}
+
+impl PointResult {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("index", Json::Num(self.index as f64)),
+            ("k", Json::Num(self.k as f64)),
+            ("seq_len", Json::Num(self.seq_len as f64)),
+            ("softmax", Json::Str(self.softmax.key().to_string())),
+            ("noisy", Json::Bool(self.noisy)),
+            ("sys_latency_ns", Json::Num(self.sys_latency_ns)),
+            ("sys_energy_pj", Json::Num(self.sys_energy_pj)),
+            ("tops", Json::Num(self.tops)),
+            ("tops_per_watt", Json::Num(self.tops_per_watt)),
+            ("alpha", Json::Num(self.alpha)),
+            ("macro_latency_ns", Json::Num(self.macro_latency_ns)),
+            ("macro_energy_pj", Json::Num(self.macro_energy_pj)),
+            ("prob_checksum", Json::Num(self.prob_checksum)),
+        ])
+    }
+}
+
+/// A completed sweep, serializable to `BENCH_sweep.json`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweepReport {
+    pub seed: u64,
+    pub q_rows: usize,
+    pub points: Vec<PointResult>,
+}
+
+impl SweepReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            // string, not Num: f64 would corrupt seeds ≥ 2^53
+            ("seed", Json::Str(self.seed.to_string())),
+            ("q_rows", Json::Num(self.q_rows as f64)),
+            (
+                "points",
+                Json::Arr(self.points.iter().map(PointResult::to_json).collect()),
+            ),
+        ])
+    }
+
+    pub fn to_json_string(&self) -> String {
+        json::to_string(&self.to_json())
+    }
+
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json_string())
+    }
+
+    /// Best point by a metric extractor (e.g. highest TOPS/W).
+    pub fn best_by<F: Fn(&PointResult) -> f64>(&self, f: F)
+        -> Option<&PointResult>
+    {
+        self.points.iter().max_by(|a, b| {
+            f(a).partial_cmp(&f(b)).expect("finite sweep metrics")
+        })
+    }
+}
+
+/// Evaluate one grid point — pure function of (cfg, seed, index, q_rows),
+/// independent of which worker runs it.
+fn eval_point(
+    cfg: &StackConfig,
+    index: usize,
+    opts: &SweepOptions,
+) -> PointResult {
+    let builder = cfg.clone().build().expect("grid points pre-validated");
+    let sim = builder.simulate();
+
+    // Behavioral macro over a head-shaped tile of the configured
+    // geometry: depth = d_head bounded by the physical row budget, width
+    // = one-array slice of the sequence length.
+    let tc = builder.transformer();
+    let depth = tc
+        .d_head()
+        .min(Crossbar::weight_capacity(cfg.rows, cfg.replica_rows));
+    let width = tc.seq_len.min(cfg.cols).max(cfg.k.max(1));
+    let mut rng = Rng::new(
+        opts.seed ^ (index as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+    );
+    let m = builder.build_macro_gaussian(depth, width, &mut rng);
+    let q: Vec<Vec<i32>> = (0..opts.q_rows)
+        .map(|_| {
+            (0..depth)
+                .map(|_| (rng.normal() * 5.0).round().clamp(-15.0, 15.0) as i32)
+                .collect()
+        })
+        .collect();
+    let (probs, cost) = m.run(&q, &mut rng);
+    let prob_checksum = probs
+        .iter()
+        .enumerate()
+        .map(|(r, row)| {
+            row.iter()
+                .enumerate()
+                .map(|(c, p)| p * (r * width + c + 1) as f64)
+                .sum::<f64>()
+        })
+        .sum();
+
+    PointResult {
+        index,
+        k: cfg.k,
+        seq_len: tc.seq_len,
+        softmax: cfg.softmax,
+        noisy: cfg.noise.is_some(),
+        sys_latency_ns: sim.latency_ns(),
+        sys_energy_pj: sim.energy_pj(),
+        tops: sim.tops(),
+        tops_per_watt: sim.tops_per_watt(),
+        alpha: cost.alpha,
+        macro_latency_ns: cost.latency_ns,
+        macro_energy_pj: cost.energy_pj,
+        prob_checksum,
+    }
+}
+
+/// Run the grid over `opts.threads` scoped workers. Points are pulled
+/// from a shared atomic cursor (dynamic load balancing — noisy Dtopk
+/// points cost more than ideal topkima ones) and written back into
+/// their index slot, so the report order — and its serialized bytes —
+/// never depends on scheduling.
+pub fn run_sweep(
+    base: &StackConfig,
+    grid: &SweepGrid,
+    opts: &SweepOptions,
+) -> Result<SweepReport, ConfigError> {
+    let points = grid.points(base)?;
+    let n = points.len();
+    let threads = opts.threads.clamp(1, n.max(1));
+    let cursor = AtomicUsize::new(0);
+    let slots: Mutex<Vec<Option<PointResult>>> = Mutex::new(vec![None; n]);
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = eval_point(&points[i], i, opts);
+                slots.lock().expect("sweep slot lock")[i] = Some(r);
+            });
+        }
+    });
+
+    let points = slots
+        .into_inner()
+        .expect("sweep slot lock")
+        .into_iter()
+        .map(|r| r.expect("every grid point evaluated"))
+        .collect();
+    Ok(SweepReport { seed: opts.seed, q_rows: opts.q_rows, points })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_grid() -> SweepGrid {
+        SweepGrid {
+            ks: vec![1, 5],
+            seq_lens: vec![64],
+            softmaxes: vec![SoftmaxKind::Topkima],
+            noises: vec![None],
+        }
+    }
+
+    #[test]
+    fn default_grid_meets_acceptance_size() {
+        assert!(SweepGrid::default().len() >= 48);
+    }
+
+    #[test]
+    fn grid_expansion_order_is_stable() {
+        let pts = tiny_grid().points(&StackConfig::default()).unwrap();
+        assert_eq!(pts.len(), 2);
+        assert_eq!(pts[0].k, 1);
+        assert_eq!(pts[1].k, 5);
+        assert_eq!(pts[0].seq_len, Some(64));
+    }
+
+    #[test]
+    fn invalid_grid_point_rejected_up_front() {
+        let mut g = tiny_grid();
+        g.ks = vec![0]; // k = 0 with topkima softmax is invalid
+        assert!(g.points(&StackConfig::default()).is_err());
+    }
+
+    #[test]
+    fn sweep_runs_and_orders_points() {
+        let r = run_sweep(
+            &StackConfig::default(),
+            &tiny_grid(),
+            &SweepOptions { threads: 2, q_rows: 2, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(r.points.len(), 2);
+        for (i, p) in r.points.iter().enumerate() {
+            assert_eq!(p.index, i);
+            assert!(p.sys_latency_ns > 0.0 && p.macro_latency_ns > 0.0);
+            assert!(p.prob_checksum.is_finite());
+        }
+        // topkima points early-stop: α strictly inside (0, 1)
+        for p in &r.points {
+            assert!(p.alpha > 0.0 && p.alpha < 1.0, "alpha {}", p.alpha);
+        }
+    }
+
+    #[test]
+    fn report_json_roundtrips_through_parser() {
+        let r = run_sweep(
+            &StackConfig::default(),
+            &tiny_grid(),
+            &SweepOptions { threads: 1, q_rows: 2, ..Default::default() },
+        )
+        .unwrap();
+        let text = r.to_json_string();
+        let v = Json::parse(&text).unwrap();
+        assert_eq!(v.get("points").as_arr().unwrap().len(), 2);
+        assert_eq!(v.get("points").at(1).get("k").as_usize(), Some(5));
+    }
+
+    #[test]
+    fn best_by_picks_max_metric() {
+        let r = run_sweep(
+            &StackConfig::default(),
+            &tiny_grid(),
+            &SweepOptions { threads: 1, q_rows: 2, ..Default::default() },
+        )
+        .unwrap();
+        let best = r.best_by(|p| p.tops_per_watt).unwrap();
+        for p in &r.points {
+            assert!(best.tops_per_watt >= p.tops_per_watt);
+        }
+    }
+}

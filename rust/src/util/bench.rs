@@ -8,6 +8,7 @@
 
 use std::time::Instant;
 
+use super::json::{self, Json};
 use super::stats;
 
 /// Timing result of one benchmark case.
@@ -26,6 +27,34 @@ impl BenchResult {
             self.name, self.mean_ns, self.std_ns, self.iters
         )
     }
+
+    /// Machine-readable form for perf baselines (`BENCH_*.json`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("mean_ns", Json::Num(self.mean_ns)),
+            ("std_ns", Json::Num(self.std_ns)),
+            ("iters", Json::Num(self.iters as f64)),
+        ])
+    }
+}
+
+/// Write a bench run as `{"bench": <title>, "results": [...]}` JSON —
+/// the machine-readable perf baseline CI archives next to the printed
+/// table.
+pub fn write_json(
+    path: &str,
+    title: &str,
+    results: &[BenchResult],
+) -> std::io::Result<()> {
+    let doc = Json::obj(vec![
+        ("bench", Json::Str(title.to_string())),
+        (
+            "results",
+            Json::Arr(results.iter().map(BenchResult::to_json).collect()),
+        ),
+    ]);
+    std::fs::write(path, json::to_string(&doc))
 }
 
 /// Time `f` with warmup; adaptive iteration count targeting ~0.5 s.
@@ -78,5 +107,28 @@ mod tests {
         assert!(r.mean_ns > 0.0);
         assert!(r.iters >= 5);
         assert!(r.row().contains("noop-ish"));
+    }
+
+    #[test]
+    fn bench_json_roundtrips() {
+        let r = BenchResult {
+            name: "case".to_string(),
+            mean_ns: 120.5,
+            std_ns: 3.25,
+            iters: 42,
+        };
+        let v = r.to_json();
+        assert_eq!(v.get("name").as_str(), Some("case"));
+        assert_eq!(v.get("iters").as_usize(), Some(42));
+
+        let path = std::env::temp_dir().join("topkima_bench_json_test.json");
+        write_json(path.to_str().unwrap(), "unit", &[r]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = Json::parse(&text).unwrap();
+        assert_eq!(doc.get("bench").as_str(), Some("unit"));
+        assert_eq!(
+            doc.get("results").at(0).get("mean_ns").as_f64(),
+            Some(120.5)
+        );
     }
 }

@@ -23,13 +23,13 @@ impl Executor for RecordingExec {
     fn execute(
         &mut self,
         _stream: &StreamKey,
-        inputs: &[InputData],
+        inputs: &[Arc<InputData>],
         bucket: usize,
     ) -> Result<Vec<Vec<f32>>> {
         self.0.lock().unwrap().batches.push((inputs.len(), bucket));
         Ok(inputs
             .iter()
-            .map(|i| match i {
+            .map(|i| match &**i {
                 InputData::I32(v) => vec![v[0] as f32],
                 InputData::F32(v) => vec![v[0]],
             })

@@ -1,0 +1,140 @@
+//! Golden parity of the allocation-free hot path (§Perf): the
+//! scratch-reusing conversion/macro entry points must match the
+//! allocating wrappers bit-for-bit on random (d, k, noise) points —
+//! including when the scratch is reused dirty across conversions of
+//! different widths — and the digital-sorter `_into` variant must match
+//! its allocating twin.
+
+use topkima::ima::{ColumnNoise, ConversionScratch, NoiseModel, TopkimaConverter};
+use topkima::softmax::digital_topk;
+use topkima::softmax::dtopk::digital_topk_into;
+use topkima::util::check::property;
+use topkima::util::rng::Rng;
+
+fn converter(d: usize, fs: f64, noisy: bool, rng: &mut Rng) -> TopkimaConverter {
+    let mut conv = TopkimaConverter::ideal(d, fs);
+    if noisy {
+        conv.noise = ColumnNoise::new(NoiseModel::default(), d, rng);
+    }
+    conv
+}
+
+#[test]
+fn convert_topk_scratch_matches_allocating_path_bit_for_bit() {
+    // one scratch reused (dirty) across every property iteration
+    let mut scratch = ConversionScratch::new();
+    property("convert_topk == convert_topk_into", 300, 0x5CAA7, |rng: &mut Rng| {
+        let d = 2 + rng.below(200);
+        let k = 1 + rng.below(12.min(d));
+        let macs: Vec<i64> = (0..d).map(|_| rng.range(-4000, 4000)).collect();
+        let fs = macs.iter().map(|m| m.abs()).max().unwrap().max(1) as f64;
+        let noisy = rng.chance(0.5);
+        let conv = converter(d, fs, noisy, rng);
+
+        let seed = rng.next_u64();
+        let golden = conv.convert_topk(&macs, k, &mut Rng::new(seed));
+        let stats =
+            conv.convert_topk_into(&macs, k, &mut Rng::new(seed), &mut scratch);
+
+        topkima::prop_assert!(
+            golden.outputs == scratch.outputs,
+            "d {d} k {k} noisy {noisy}: outputs {:?} vs {:?}",
+            golden.outputs, scratch.outputs
+        );
+        topkima::prop_assert!(
+            golden.alpha == stats.alpha
+                && golden.latency_ns == stats.latency_ns
+                && golden.energy_pj == stats.energy_pj,
+            "cost drift: ({}, {}, {}) vs ({}, {}, {})",
+            golden.alpha, golden.latency_ns, golden.energy_pj,
+            stats.alpha, stats.latency_ns, stats.energy_pj
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn convert_full_scratch_matches_allocating_path_bit_for_bit() {
+    let mut scratch = ConversionScratch::new();
+    property("convert_full == convert_full_into", 200, 0xF0CC, |rng: &mut Rng| {
+        let d = 1 + rng.below(150);
+        let macs: Vec<i64> = (0..d).map(|_| rng.range(-4000, 4000)).collect();
+        let fs = macs.iter().map(|m| m.abs()).max().unwrap().max(1) as f64;
+        let noisy = rng.chance(0.5);
+        let conv = converter(d, fs, noisy, rng);
+
+        let seed = rng.next_u64();
+        let golden = conv.convert_full(&macs, &mut Rng::new(seed));
+        let stats =
+            conv.convert_full_into(&macs, &mut Rng::new(seed), &mut scratch);
+
+        topkima::prop_assert!(
+            golden.outputs == scratch.outputs,
+            "d {d} noisy {noisy}: outputs diverged"
+        );
+        topkima::prop_assert!(
+            golden.alpha == stats.alpha
+                && golden.latency_ns == stats.latency_ns
+                && golden.energy_pj == stats.energy_pj,
+            "cost drift on full conversion"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn digital_topk_into_matches_allocating_twin() {
+    let mut out = Vec::new();
+    let mut taken = Vec::new();
+    property("digital_topk == digital_topk_into", 200, 0xD70B, |rng: &mut Rng| {
+        let d = 1 + rng.below(120);
+        let k = rng.below(12.min(d) + 1); // includes k = 0
+        let vals: Vec<f64> =
+            (0..d).map(|_| rng.range(-16, 16) as f64).collect();
+        let (golden, golden_cmp) = digital_topk(&vals, k);
+        out.clear();
+        let cmp = digital_topk_into(&vals, k, &mut out, &mut taken);
+        topkima::prop_assert!(
+            golden == out && golden_cmp == cmp,
+            "d {d} k {k}: {:?}/{} vs {:?}/{}", golden, golden_cmp, out, cmp
+        );
+        Ok(())
+    });
+}
+
+/// The macro run loop (which threads one scratch through every row and
+/// strategy) is deterministic and bit-stable across repeated runs with
+/// a warm scratch — i.e. no state leaks between rows or runs.
+#[test]
+fn macro_run_bit_stable_across_repeats() {
+    use topkima::crossbar::{Crossbar, Tech};
+    use topkima::softmax::macros::MacroParts;
+    use topkima::softmax::{ConvSm, DtopkSm, SoftmaxMacro, TopkimaSm};
+
+    let mut rng = Rng::new(77);
+    let kt: Vec<Vec<i32>> = (0..64)
+        .map(|_| (0..96).map(|_| rng.range(-7, 8) as i32).collect())
+        .collect();
+    let parts = || {
+        MacroParts::new(Crossbar::program(Tech::Sram, 256, 256, 64, &kt))
+            .with_noise(ColumnNoise::new(
+                NoiseModel::default(),
+                96,
+                &mut Rng::new(5),
+            ))
+    };
+    let q: Vec<Vec<i32>> = (0..6)
+        .map(|_| (0..64).map(|_| rng.range(-15, 16) as i32).collect())
+        .collect();
+    let macros: Vec<Box<dyn SoftmaxMacro>> = vec![
+        Box::new(ConvSm(parts())),
+        Box::new(DtopkSm { parts: parts(), k: 5 }),
+        Box::new(TopkimaSm { parts: parts(), k: 5 }),
+    ];
+    for m in &macros {
+        let (pa, ca) = m.run(&q, &mut Rng::new(9));
+        let (pb, cb) = m.run(&q, &mut Rng::new(9));
+        assert_eq!(ca, cb, "{} cost drifted across runs", m.name());
+        assert_eq!(pa, pb, "{} probs drifted across runs", m.name());
+    }
+}

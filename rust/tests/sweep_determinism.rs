@@ -1,0 +1,63 @@
+//! `sweep-hw` determinism: the same grid must serialize to *byte
+//! identical* JSON regardless of worker count — the property that makes
+//! sweep baselines diffable across machines with different core counts.
+
+use topkima::ima::NoiseModel;
+use topkima::pipeline::StackConfig;
+use topkima::softmax::SoftmaxKind;
+use topkima::sweep::{run_sweep, SweepGrid, SweepOptions};
+
+fn grid() -> SweepGrid {
+    SweepGrid {
+        ks: vec![1, 5],
+        seq_lens: vec![64, 128],
+        softmaxes: vec![SoftmaxKind::Dtopk, SoftmaxKind::Topkima],
+        noises: vec![None, Some(NoiseModel::default())],
+    }
+}
+
+#[test]
+fn sweep_json_identical_across_thread_counts() {
+    let base = StackConfig::default();
+    let opts = |threads| SweepOptions { threads, q_rows: 4, seed: 0xBEE };
+    let single = run_sweep(&base, &grid(), &opts(1)).expect("1-thread sweep");
+    let multi = run_sweep(&base, &grid(), &opts(8)).expect("8-thread sweep");
+    assert_eq!(single.points.len(), 16);
+    assert_eq!(
+        single.to_json_string(),
+        multi.to_json_string(),
+        "sweep output depends on worker count"
+    );
+}
+
+#[test]
+fn sweep_points_vary_with_their_knobs() {
+    // sanity that the grid axes actually reach the models: latency
+    // changes with softmax kind and energy with k
+    let base = StackConfig::default();
+    let r = run_sweep(
+        &base,
+        &grid(),
+        &SweepOptions { threads: 2, q_rows: 4, seed: 0xBEE },
+    )
+    .expect("sweep");
+    let find = |k, sl, sm: SoftmaxKind, noisy: bool| {
+        r.points
+            .iter()
+            .find(|p| {
+                p.k == k && p.seq_len == sl && p.softmax == sm
+                    && p.noisy == noisy
+            })
+            .expect("grid point present")
+    };
+    let topkima = find(5, 128, SoftmaxKind::Topkima, false);
+    let dtopk = find(5, 128, SoftmaxKind::Dtopk, false);
+    assert!(dtopk.sys_latency_ns > topkima.sys_latency_ns);
+    assert!(dtopk.macro_latency_ns > topkima.macro_latency_ns);
+    assert!(
+        topkima.alpha > 0.0 && topkima.alpha < 1.0,
+        "behavioral early stop never engaged (alpha {})",
+        topkima.alpha
+    );
+    assert!((dtopk.alpha - 1.0).abs() < 1e-12, "full conversion has no early stop");
+}
