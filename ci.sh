@@ -8,9 +8,17 @@
 #   3. tier-1 gate: cargo build --release && cargo test -q
 #   4. smoke: `topkima check` (skips cleanly when no artifacts exist)
 #   5. smoke: `topkima sweep-hw` on a tiny grid (JSON baseline emitted)
-#   6. perf baseline: `cargo bench --bench perf_hotpath` writes
+#   6. smoke: `topkima serve-fleet` (sharded fleet under synthetic load;
+#      BENCH_fleet.json emitted, fails on any dropped request)
+#   7. perf baseline: `cargo bench --bench perf_hotpath` writes
 #      BENCH_hotpath.json (machine-readable numbers for EXPERIMENTS.md
 #      §Perf)
+#   8. bench-diff: compare the fresh BENCH_hotpath.json and
+#      BENCH_sweep_smoke.json against baselines/ and FAIL on >25%
+#      regressions (missing baselines are seeded from this run — commit
+#      them to arm the gate)
+#   9. refresh the EXPERIMENTS.md §Perf table between the
+#      PERF_TABLE_BEGIN/END markers from the fresh numbers
 #
 # Exit code reflects the tier-1 gate + smoke steps; fmt/clippy failures
 # only fail the run when CI_STRICT=1 (they may be unavailable offline).
@@ -80,12 +88,85 @@ else
     status=1
 fi
 
+note "smoke: topkima serve-fleet (2 shards, 3 streams, synthetic load)"
+if cargo run --release --quiet -- serve-fleet \
+        --duration-ms 200 --seed 7 --out BENCH_fleet.json \
+    && [ -s BENCH_fleet.json ]; then
+    echo "ok: BENCH_fleet.json written (zero dropped requests)"
+else
+    echo "FAIL: topkima serve-fleet smoke"
+    status=1
+fi
+
 note "perf baseline: cargo bench --bench perf_hotpath"
 if cargo bench --bench perf_hotpath && [ -s BENCH_hotpath.json ]; then
     echo "ok: BENCH_hotpath.json written"
 else
     echo "FAIL: perf_hotpath bench"
     status=1
+fi
+
+# -- bench-diff gate: fail on >25% regressions vs committed baselines --
+# A missing baseline is seeded from this run (and should be committed);
+# sweep numbers are deterministic, hotpath numbers are wall-clock, so
+# the 25% band also absorbs machine-to-machine jitter.
+bench_diff() {
+    fresh="$1"
+    base="baselines/$1"
+    if [ ! -s "$fresh" ]; then
+        echo "WARN: $fresh missing; skipping bench-diff"
+        return
+    fi
+    if [ -s "$base" ]; then
+        if cargo run --release --quiet -- bench-diff \
+                --baseline "$base" --fresh "$fresh" --max-regress 0.25; then
+            echo "ok: $fresh within 25% of $base"
+        else
+            echo "FAIL: bench regression in $fresh vs $base"
+            status=1
+        fi
+    else
+        mkdir -p baselines
+        cp "$fresh" "$base"
+        echo "NOTE: no committed baseline for $fresh; seeded $base" \
+             "from this run (commit it to arm the regression gate)"
+    fi
+}
+
+note "bench-diff vs committed baselines (>25% fails)"
+bench_diff BENCH_hotpath.json
+bench_diff BENCH_sweep_smoke.json
+
+# -- EXPERIMENTS.md §Perf table: splice the fresh numbers in ----------
+note "EXPERIMENTS.md §Perf table refresh"
+if [ -s BENCH_hotpath.json ] \
+        && grep -q PERF_TABLE_BEGIN EXPERIMENTS.md \
+        && grep -q PERF_TABLE_END EXPERIMENTS.md; then
+    base_flag=""
+    if [ -s baselines/BENCH_hotpath.json ]; then
+        base_flag="--baseline baselines/BENCH_hotpath.json"
+    fi
+    if cargo run --release --quiet -- bench-diff \
+            --fresh BENCH_hotpath.json $base_flag --markdown \
+            > /tmp/topkima_perf_table.md; then
+        awk '
+            /PERF_TABLE_BEGIN/ {
+                print
+                while ((getline line < "/tmp/topkima_perf_table.md") > 0)
+                    print line
+                skip = 1
+                next
+            }
+            /PERF_TABLE_END/ { skip = 0 }
+            skip == 0 { print }
+        ' EXPERIMENTS.md > EXPERIMENTS.md.tmp \
+            && mv EXPERIMENTS.md.tmp EXPERIMENTS.md
+        echo "ok: EXPERIMENTS.md §Perf table refreshed"
+    else
+        echo "WARN: bench-diff --markdown failed; table left as-is"
+    fi
+else
+    echo "WARN: no BENCH_hotpath.json or no markers; table left as-is"
 fi
 
 if [ "$status" = "0" ]; then

@@ -20,6 +20,9 @@ pub struct BatcherConfig {
     pub buckets: Vec<usize>,
     /// Max time the oldest request may wait before a partial batch fires.
     pub max_wait: Duration,
+    /// Admission control: max queued requests before new arrivals are
+    /// rejected (0 = unbounded).
+    pub max_queue: usize,
 }
 
 impl BatcherConfig {
@@ -27,7 +30,13 @@ impl BatcherConfig {
         buckets.sort_unstable();
         buckets.dedup();
         assert!(!buckets.is_empty(), "need at least one bucket size");
-        BatcherConfig { buckets, max_wait }
+        BatcherConfig { buckets, max_wait, max_queue: 0 }
+    }
+
+    /// Bound the queue depth (admission control); 0 keeps it unbounded.
+    pub fn with_max_queue(mut self, max_queue: usize) -> Self {
+        self.max_queue = max_queue;
+        self
     }
 
     /// Largest bucket ≤ n, or the smallest bucket when n is tiny.
@@ -75,10 +84,22 @@ impl Batcher {
         Batcher { config, queue: VecDeque::new(), admitted: 0, emitted: 0 }
     }
 
-    /// Admit one request.
-    pub fn push(&mut self, r: Request) {
+    /// Admit one request; returns `false` (request dropped) when the
+    /// queue is at its admission bound.
+    pub fn push(&mut self, r: Request) -> bool {
+        if self.config.max_queue != 0
+            && self.queue.len() >= self.config.max_queue
+        {
+            return false;
+        }
         self.admitted += 1;
         self.queue.push_back(r);
+        true
+    }
+
+    /// The policy this batcher enforces.
+    pub fn config(&self) -> &BatcherConfig {
+        &self.config
     }
 
     pub fn len(&self) -> usize {
@@ -227,6 +248,23 @@ mod tests {
         assert_eq!(b.admitted, 13);
         assert_eq!(b.emitted, 13);
         assert!(b.is_empty());
+    }
+
+    #[test]
+    fn max_queue_bounds_admission() {
+        let mut b =
+            Batcher::new(cfg(&[4], 1_000_000).with_max_queue(3));
+        assert!(b.push(req(0)));
+        assert!(b.push(req(1)));
+        assert!(b.push(req(2)));
+        assert!(!b.push(req(3)), "queue at bound must reject");
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.admitted, 3);
+        // draining frees capacity again
+        let drained: usize =
+            b.flush().iter().map(|p| p.requests.len()).sum();
+        assert_eq!(drained, 3);
+        assert!(b.push(req(4)));
     }
 
     #[test]

@@ -1,0 +1,369 @@
+//! The fleet engine front: N shard event loops, streams
+//! hash-partitioned across them, one thin `submit` handle.
+//!
+//! The old single-coordinator design ran every stream through one event
+//! loop; the fleet runs one loop per shard (see [`super::shard`]), each
+//! owning its streams' batchers, executors, and waiter map. The front
+//! handle only (a) assigns request ids, (b) maps a [`StreamKey`] to its
+//! shard, and (c) aggregates per-stream and per-shard [`Metrics`] on
+//! shutdown — it holds no locks on the request path, so submission
+//! scales with shard count.
+//!
+//! Stream→shard assignment is [`shard_of`]: a deterministic FNV-1a hash
+//! of (family, k). A stream lives on exactly one shard, so per-stream
+//! FIFO order and batch composition are independent of the shard count
+//! (asserted by `rust/tests/fleet_determinism.rs`).
+
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use super::metrics::Metrics;
+use super::request::{InputData, Request, RequestId, Response};
+use super::router::{RouteError, Router, StreamDef, StreamKey};
+use super::shard::{start_shard, ShardHandle, ShardMsg};
+
+pub use super::shard::ExecutorFactory;
+
+/// Deterministic stream→shard assignment: FNV-1a over the family bytes
+/// folded with k. Stable across runs and platforms — re-sharding a
+/// fleet only *relocates* whole streams, it never splits one.
+pub fn shard_of(key: &StreamKey, shards: usize) -> usize {
+    debug_assert!(shards > 0);
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in key.0.as_bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h = (h ^ key.1 as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    (h % shards as u64) as usize
+}
+
+/// Handle for submitting work to a running fleet.
+pub struct Fleet {
+    shards: Vec<ShardHandle>,
+    stream_shard: BTreeMap<StreamKey, usize>,
+    next_id: RequestId,
+    front_rejected: u64,
+}
+
+impl Fleet {
+    /// Spawn `factories.len()` shard loops and hash-partition `defs`
+    /// across them. Each factory runs once, inside its shard's thread
+    /// (PJRT handles are not `Send`).
+    pub fn start(
+        defs: Vec<StreamDef>,
+        factories: Vec<ExecutorFactory>,
+    ) -> Fleet {
+        assert!(!factories.is_empty(), "fleet needs at least one shard");
+        let n = factories.len();
+        let mut routers: Vec<Router> = (0..n).map(|_| Router::new()).collect();
+        let mut stream_shard = BTreeMap::new();
+        for def in defs {
+            let key = def.key();
+            let shard = shard_of(&key, n);
+            stream_shard.insert(key, shard);
+            routers[shard].register_def(def);
+        }
+        let shards = routers
+            .into_iter()
+            .zip(factories)
+            .map(|(router, factory)| start_shard(router, factory))
+            .collect();
+        Fleet { shards, stream_shard, next_id: 0, front_rejected: 0 }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Every registered stream, in key order.
+    pub fn streams(&self) -> Vec<StreamKey> {
+        self.stream_shard.keys().cloned().collect()
+    }
+
+    /// Which shard a stream lives on (`None` if unregistered).
+    pub fn shard_for(&self, key: &StreamKey) -> Option<usize> {
+        self.stream_shard.get(key).copied()
+    }
+
+    /// Submit one request; the error carries the stream key so callers
+    /// see *which* stream rejected instead of losing the request.
+    pub fn submit(
+        &mut self,
+        model: &str,
+        k: usize,
+        input: InputData,
+    ) -> Result<mpsc::Receiver<Response>, RouteError> {
+        self.submit_shared(Arc::from(model), k, Arc::new(input))
+    }
+
+    /// Submit with pre-shared handles — replay loops reuse one
+    /// `Arc<str>` for the model and avoid per-request payload moves.
+    pub fn submit_shared(
+        &mut self,
+        model: Arc<str>,
+        k: usize,
+        input: Arc<InputData>,
+    ) -> Result<mpsc::Receiver<Response>, RouteError> {
+        let key: StreamKey = (model, k);
+        let shard = match self.stream_shard.get(&key) {
+            Some(&s) => s,
+            None => {
+                self.front_rejected += 1;
+                return Err(RouteError::UnknownStream(key));
+            }
+        };
+        let id = self.next_id;
+        self.next_id += 1;
+        let (tx, rx) = mpsc::channel();
+        let req = Request::shared(id, key.0, k, input);
+        self.shards[shard]
+            .tx
+            .send(ShardMsg::Submit(req, tx))
+            .expect("shard thread alive");
+        Ok(rx)
+    }
+
+    /// Drain every shard, join the threads, and return the full
+    /// per-stream / per-shard accounting.
+    pub fn shutdown(mut self) -> FleetMetrics {
+        // Signal every shard before joining any, so they drain their
+        // queues concurrently.
+        for shard in &self.shards {
+            let _ = shard.tx.send(ShardMsg::Shutdown);
+        }
+        let mut per_stream = BTreeMap::new();
+        let mut per_shard = Vec::with_capacity(self.shards.len());
+        let mut rejected = self.front_rejected;
+        for shard in self.shards.drain(..) {
+            let report =
+                shard.handle.join().expect("shard thread panicked");
+            let mut shard_agg = Metrics::default();
+            for (key, m) in report.streams {
+                shard_agg.merge_from(&m);
+                per_stream.insert(key, m);
+            }
+            rejected += report.rejected;
+            per_shard.push(shard_agg);
+        }
+        FleetMetrics { per_stream, per_shard, rejected }
+    }
+}
+
+/// Final fleet accounting: per-stream and per-shard metrics plus the
+/// front-side rejection count. [`FleetMetrics::aggregate`] folds it all
+/// into one [`Metrics`] (what the legacy single-coordinator API
+/// returned).
+#[derive(Debug)]
+pub struct FleetMetrics {
+    /// Per-stream metrics; each stream lives on exactly one shard.
+    pub per_stream: BTreeMap<StreamKey, Metrics>,
+    /// Per-shard aggregates (merge of that shard's streams), indexed by
+    /// shard.
+    pub per_shard: Vec<Metrics>,
+    /// Requests rejected with [`RouteError::UnknownStream`] before
+    /// reaching any stream.
+    pub rejected: u64,
+}
+
+impl FleetMetrics {
+    /// Everything folded into one record; rejections count as errors,
+    /// matching the legacy coordinator's accounting.
+    pub fn aggregate(&self) -> Metrics {
+        let mut m = Metrics::default();
+        for sm in self.per_stream.values() {
+            m.merge_from(sm);
+        }
+        m.add_errors(self.rejected);
+        m
+    }
+
+    /// Multi-line human summary: one line per stream, one per shard,
+    /// then the aggregate.
+    pub fn summary(&self) -> String {
+        let mut out = String::new();
+        for ((family, k), m) in &self.per_stream {
+            out.push_str(&format!(
+                "stream {family}/k={k}: {} done, {} errors, \
+                 p50 {:.0} µs, p99 {:.0} µs, mean batch {:.2}, \
+                 padding {:.1}%\n",
+                m.completed(),
+                m.errors(),
+                m.latency_percentile_us(50.0),
+                m.latency_percentile_us(99.0),
+                m.mean_batch_size(),
+                100.0 * m.padding_fraction(),
+            ));
+        }
+        for (i, m) in self.per_shard.iter().enumerate() {
+            out.push_str(&format!(
+                "shard {i}: {} done over {} batches\n",
+                m.completed(),
+                m.batches(),
+            ));
+        }
+        out.push_str(&format!(
+            "== aggregate ({} shards, {} rejected) ==\n{}",
+            self.per_shard.len(),
+            self.rejected,
+            self.aggregate().summary()
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::BatcherConfig;
+    use crate::coordinator::server::Executor;
+    use anyhow::Result;
+    use std::time::Duration;
+
+    /// Mock: echoes back the first input element + stream k.
+    struct Echo;
+
+    impl Executor for Echo {
+        fn execute(
+            &mut self,
+            stream: &StreamKey,
+            inputs: &[Arc<InputData>],
+            _bucket: usize,
+        ) -> Result<Vec<Vec<f32>>> {
+            Ok(inputs
+                .iter()
+                .map(|i| {
+                    let first = match &**i {
+                        InputData::F32(v) => v[0],
+                        InputData::I32(v) => v[0] as f32,
+                    };
+                    vec![first, stream.1 as f32]
+                })
+                .collect())
+        }
+    }
+
+    fn defs() -> Vec<StreamDef> {
+        let policy =
+            BatcherConfig::new(vec![1, 2, 4], Duration::from_millis(2));
+        vec![
+            StreamDef { family: Arc::from("bert"), k: 5, policy: policy.clone() },
+            StreamDef { family: Arc::from("bert"), k: 9, policy: policy.clone() },
+            StreamDef { family: Arc::from("vit"), k: 5, policy },
+        ]
+    }
+
+    fn factories(n: usize) -> Vec<ExecutorFactory> {
+        (0..n)
+            .map(|_| {
+                Box::new(|| Box::new(Echo) as Box<dyn Executor>)
+                    as ExecutorFactory
+            })
+            .collect()
+    }
+
+    #[test]
+    fn shard_of_is_stable_and_in_range() {
+        for shards in [1usize, 2, 3, 4, 7] {
+            for def in defs() {
+                let key = def.key();
+                let s = shard_of(&key, shards);
+                assert!(s < shards);
+                assert_eq!(s, shard_of(&key, shards), "unstable hash");
+            }
+        }
+        // with one shard everything maps to it
+        for def in defs() {
+            assert_eq!(shard_of(&def.key(), 1), 0);
+        }
+    }
+
+    #[test]
+    fn multi_shard_roundtrip_and_per_stream_metrics() {
+        let mut fleet = Fleet::start(defs(), factories(3));
+        assert_eq!(fleet.shard_count(), 3);
+        assert_eq!(fleet.streams().len(), 3);
+
+        let mut rxs = Vec::new();
+        for i in 0..4 {
+            rxs.push((
+                i as f32,
+                5.0,
+                fleet.submit("bert", 5, InputData::I32(vec![i, 0])).unwrap(),
+            ));
+            rxs.push((
+                (10 + i) as f32,
+                9.0,
+                fleet
+                    .submit("bert", 9, InputData::I32(vec![10 + i, 0]))
+                    .unwrap(),
+            ));
+            rxs.push((
+                (20 + i) as f32,
+                5.0,
+                fleet
+                    .submit("vit", 5, InputData::I32(vec![20 + i, 0]))
+                    .unwrap(),
+            ));
+        }
+        for (first, k, rx) in rxs {
+            let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(r.output, vec![first, k]);
+        }
+        let fm = fleet.shutdown();
+        assert_eq!(fm.per_stream.len(), 3);
+        assert_eq!(fm.per_shard.len(), 3);
+        for m in fm.per_stream.values() {
+            assert_eq!(m.completed(), 4);
+        }
+        let agg = fm.aggregate();
+        assert_eq!(agg.completed(), 12);
+        assert_eq!(agg.errors(), 0);
+        // per-shard totals also sum to the aggregate
+        let shard_total: usize =
+            fm.per_shard.iter().map(Metrics::completed).sum();
+        assert_eq!(shard_total, 12);
+        assert!(fm.summary().contains("stream bert/k=5"));
+    }
+
+    #[test]
+    fn unknown_stream_is_typed_and_counted() {
+        let mut fleet = Fleet::start(defs(), factories(2));
+        let err =
+            fleet.submit("bert", 42, InputData::I32(vec![1])).unwrap_err();
+        assert_eq!(
+            err,
+            RouteError::UnknownStream((Arc::from("bert"), 42))
+        );
+        let fm = fleet.shutdown();
+        assert_eq!(fm.rejected, 1);
+        assert_eq!(fm.aggregate().errors(), 1);
+    }
+
+    #[test]
+    fn queue_full_rejections_land_on_stream_metrics() {
+        // bucket 8, 1 h deadline, queue bound 2: the third submit is
+        // rejected by admission control on the shard.
+        let policy =
+            BatcherConfig::new(vec![8], Duration::from_secs(3600))
+                .with_max_queue(2);
+        let defs = vec![StreamDef {
+            family: Arc::from("bert"),
+            k: 5,
+            policy,
+        }];
+        let mut fleet = Fleet::start(defs, factories(1));
+        let rx1 = fleet.submit("bert", 5, InputData::I32(vec![1])).unwrap();
+        let rx2 = fleet.submit("bert", 5, InputData::I32(vec![2])).unwrap();
+        let rx3 = fleet.submit("bert", 5, InputData::I32(vec![3])).unwrap();
+        // give the shard loop time to admit 1, 2 and reject 3
+        assert!(rx3.recv_timeout(Duration::from_secs(5)).is_err());
+        let fm = fleet.shutdown();
+        let key: StreamKey = (Arc::from("bert"), 5);
+        let m = &fm.per_stream[&key];
+        assert_eq!(m.completed(), 2, "bounded queue still served 2");
+        assert_eq!(m.errors(), 1, "admission rejection counted on stream");
+        assert!(rx1.try_recv().is_ok());
+        assert!(rx2.try_recv().is_ok());
+    }
+}

@@ -43,6 +43,33 @@ impl Metrics {
         self.errors += 1;
     }
 
+    /// Count `n` errors at once (fleet-front rejections folded into an
+    /// aggregate).
+    pub fn add_errors(&mut self, n: u64) {
+        self.errors += n;
+    }
+
+    /// Fold another metrics record into this one (fleet aggregation:
+    /// per-stream → per-shard → fleet). Keeps the earliest start so
+    /// throughput spans the whole window.
+    pub fn merge_from(&mut self, other: &Metrics) {
+        self.started = self.started.min(other.started);
+        self.latencies_us.extend_from_slice(&other.latencies_us);
+        self.batch_sizes.extend_from_slice(&other.batch_sizes);
+        self.padded_rows += other.padded_rows;
+        self.errors += other.errors;
+    }
+
+    /// Executed padding rows (fleet padding-waste accounting).
+    pub fn padded_rows(&self) -> u64 {
+        self.padded_rows
+    }
+
+    /// Executed batches.
+    pub fn batches(&self) -> usize {
+        self.batch_sizes.len()
+    }
+
     pub fn completed(&self) -> usize {
         self.latencies_us.len()
     }
@@ -131,6 +158,24 @@ mod tests {
         m.record_batch(&lats, 100, 0);
         assert!(m.latency_percentile_us(50.0)
             <= m.latency_percentile_us(99.0));
+    }
+
+    #[test]
+    fn merge_concatenates_and_sums() {
+        let mut a = Metrics::default();
+        a.record_batch(&[100.0, 200.0], 4, 2);
+        a.record_error();
+        let mut b = Metrics::default();
+        b.record_batch(&[300.0], 2, 1);
+        let mut all = Metrics::default();
+        all.merge_from(&a);
+        all.merge_from(&b);
+        all.add_errors(2);
+        assert_eq!(all.completed(), 3);
+        assert_eq!(all.errors(), 3);
+        assert_eq!(all.batches(), 2);
+        assert_eq!(all.padded_rows(), 3);
+        assert_eq!(all.mean_latency_us(), 200.0);
     }
 
     #[test]

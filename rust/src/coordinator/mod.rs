@@ -1,26 +1,36 @@
-//! L3 coordinator — the serving layer (vLLM-router-style).
+//! L3 coordinator — the serving layer, now a sharded fleet engine.
 //!
-//! Python is never on this path: requests enter, the [`batcher`] groups
-//! them into bucketed batches (one AOT executable per batch size), the
-//! [`router`] picks the right executable for (family, k), a worker thread
-//! executes on PJRT, and [`metrics`] records per-request latency and
-//! system throughput.
+//! Python is never on this path: requests enter through the [`Fleet`]
+//! front (or the legacy single-stream [`Coordinator`] wrapper), are
+//! hash-routed to their stream's shard, the [`batcher`] groups them
+//! into bucketed batches (one AOT executable per batch size) under the
+//! stream's own policy (buckets, deadline, admission bound), the
+//! [`router`] owned by that shard picks the right executable for
+//! (family, k), the shard thread executes on PJRT, and [`metrics`]
+//! records per-request latency per stream plus per-shard and aggregate
+//! throughput.
 //!
-//! The executor is a trait so the full coordinator logic is testable
-//! without artifacts (mock executor) and the property tests can drive
-//! invariants: FIFO within a family, conservation of requests, batch
-//! capacity limits.
+//! The executor is a trait so the full fleet logic is testable without
+//! artifacts (mock executors, and [`SyntheticExecutor`] for hw-cost
+//! load generation) and the property tests can drive invariants: FIFO
+//! within a stream, conservation of requests, batch capacity limits,
+//! shard-count-independent batch assignment.
 
 pub mod batcher;
+pub mod fleet;
 pub mod pjrt_exec;
 pub mod metrics;
 pub mod request;
 pub mod router;
 pub mod server;
+mod shard;
+pub mod synthetic;
 
 pub use batcher::{BatchPlan, Batcher, BatcherConfig};
+pub use fleet::{shard_of, ExecutorFactory, Fleet, FleetMetrics};
 pub use metrics::Metrics;
 pub use request::{InputData, Request, RequestId, Response};
-pub use router::Router;
+pub use router::{RouteError, Router, StreamDef, StreamKey};
 pub use pjrt_exec::PjrtExecutor;
 pub use server::{Coordinator, Executor};
+pub use synthetic::SyntheticExecutor;

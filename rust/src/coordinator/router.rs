@@ -1,6 +1,11 @@
 //! Router: maps (family, k) streams to their batchers and executables.
+//!
+//! One `Router` is the per-shard routing state of the fleet engine:
+//! every shard event loop owns exactly one, holding the batchers of the
+//! streams hash-assigned to that shard (see [`super::fleet`]).
 
 use std::collections::BTreeMap;
+use std::fmt;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -13,11 +18,66 @@ use super::request::Request;
 /// string copy (§Perf).
 pub type StreamKey = (Arc<str>, usize);
 
+/// Why a request could not be admitted to a stream. Carries the
+/// `StreamKey` so callers can report *which* stream rejected instead of
+/// silently losing the request (the old `route` returned a bare bool).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RouteError {
+    /// No stream is registered under this key.
+    UnknownStream(StreamKey),
+    /// The stream's queue is at its admission bound (`max_queue`).
+    QueueFull {
+        stream: StreamKey,
+        depth: usize,
+    },
+}
+
+impl RouteError {
+    /// The stream key the rejected request was addressed to.
+    pub fn stream(&self) -> &StreamKey {
+        match self {
+            RouteError::UnknownStream(key) => key,
+            RouteError::QueueFull { stream, .. } => stream,
+        }
+    }
+}
+
+impl fmt::Display for RouteError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RouteError::UnknownStream((family, k)) => {
+                write!(f, "no stream registered for {family}/k={k}")
+            }
+            RouteError::QueueFull { stream: (family, k), depth } => write!(
+                f,
+                "stream {family}/k={k} queue full ({depth} requests)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for RouteError {}
+
+/// One stream's routing-table entry: key + batching policy. The unit
+/// the fleet partitions across shards.
+#[derive(Clone, Debug)]
+pub struct StreamDef {
+    pub family: Arc<str>,
+    pub k: usize,
+    pub policy: BatcherConfig,
+}
+
+impl StreamDef {
+    pub fn key(&self) -> StreamKey {
+        (self.family.clone(), self.k)
+    }
+}
+
 /// Owns one batcher per registered stream and dispatches requests.
 #[derive(Debug)]
 pub struct Router {
     streams: BTreeMap<StreamKey, Batcher>,
-    /// Requests rejected for having no registered stream.
+    /// Requests rejected (unknown stream or full queue).
     pub rejected: u64,
 }
 
@@ -34,28 +94,62 @@ impl Router {
         buckets: Vec<usize>,
         max_wait: Duration,
     ) {
-        self.streams.insert(
-            (Arc::from(model), k),
-            Batcher::new(BatcherConfig::new(buckets, max_wait)),
-        );
+        self.register_def(StreamDef {
+            family: Arc::from(model),
+            k,
+            policy: BatcherConfig::new(buckets, max_wait),
+        });
+    }
+
+    /// Register a stream from its full definition (per-stream policy,
+    /// including the admission bound).
+    pub fn register_def(&mut self, def: StreamDef) {
+        self.streams
+            .insert((def.family, def.k), Batcher::new(def.policy));
     }
 
     pub fn streams(&self) -> Vec<StreamKey> {
         self.streams.keys().cloned().collect()
     }
 
-    /// Route one request to its stream's batcher. Returns false (and
-    /// counts a rejection) if no stream matches.
-    pub fn route(&mut self, r: Request) -> bool {
+    /// Tear the routing table back into stream definitions (used when
+    /// re-partitioning a router across a fleet). Panics if any request
+    /// is already queued — the definitions cannot carry them, and
+    /// dropping them silently would lose accepted work.
+    pub fn into_defs(self) -> Vec<StreamDef> {
+        assert_eq!(
+            self.queued(),
+            0,
+            "Router::into_defs would drop queued requests — start the \
+             fleet/coordinator before routing any work"
+        );
+        self.streams
+            .into_iter()
+            .map(|((family, k), batcher)| StreamDef {
+                family,
+                k,
+                policy: batcher.config().clone(),
+            })
+            .collect()
+    }
+
+    /// Route one request to its stream's batcher. On rejection the
+    /// request is dropped and a typed [`RouteError`] (carrying the
+    /// stream key) is returned; `rejected` counts both kinds.
+    pub fn route(&mut self, r: Request) -> Result<(), RouteError> {
         let key = (r.model.clone(), r.k);
         match self.streams.get_mut(&key) {
             Some(b) => {
-                b.push(r);
-                true
+                if b.push(r) {
+                    Ok(())
+                } else {
+                    self.rejected += 1;
+                    Err(RouteError::QueueFull { depth: b.len(), stream: key })
+                }
             }
             None => {
                 self.rejected += 1;
-                false
+                Err(RouteError::UnknownStream(key))
             }
         }
     }
@@ -74,7 +168,7 @@ impl Router {
     }
 
     /// Time until the oldest queued request across all streams hits its
-    /// batching deadline — the coordinator's wake-up bound. `None` when
+    /// batching deadline — the shard loop's wake-up bound. `None` when
     /// every queue is empty (the loop may idle until the next submit).
     pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
         self.streams
@@ -131,19 +225,52 @@ mod tests {
     #[test]
     fn routes_by_family_and_k() {
         let mut r = router();
-        assert!(r.route(req(0, "bert", 5)));
-        assert!(r.route(req(1, "bert", 1)));
-        assert!(r.route(req(2, "vit", 5)));
-        assert!(!r.route(req(3, "bert", 99)));
+        assert!(r.route(req(0, "bert", 5)).is_ok());
+        assert!(r.route(req(1, "bert", 1)).is_ok());
+        assert!(r.route(req(2, "vit", 5)).is_ok());
+        let err = r.route(req(3, "bert", 99)).unwrap_err();
+        assert_eq!(err, RouteError::UnknownStream(key("bert", 99)));
+        assert_eq!(err.stream(), &key("bert", 99));
         assert_eq!(r.rejected, 1);
         assert_eq!(r.queued(), 3);
     }
 
     #[test]
+    fn queue_full_is_typed_and_counted() {
+        let mut r = Router::new();
+        r.register_def(StreamDef {
+            family: Arc::from("bert"),
+            k: 5,
+            policy: BatcherConfig::new(vec![8], Duration::from_secs(3600))
+                .with_max_queue(2),
+        });
+        assert!(r.route(req(0, "bert", 5)).is_ok());
+        assert!(r.route(req(1, "bert", 5)).is_ok());
+        let err = r.route(req(2, "bert", 5)).unwrap_err();
+        assert_eq!(
+            err,
+            RouteError::QueueFull { stream: key("bert", 5), depth: 2 }
+        );
+        assert_eq!(r.rejected, 1);
+        assert_eq!(r.queued(), 2, "rejected request never queued");
+    }
+
+    #[test]
+    fn into_defs_roundtrips_registration() {
+        let defs = router().into_defs();
+        assert_eq!(defs.len(), 3);
+        let mut r2 = Router::new();
+        for d in defs {
+            r2.register_def(d);
+        }
+        assert_eq!(r2.streams(), router().streams());
+    }
+
+    #[test]
     fn ready_batches_tagged_with_stream() {
         let mut r = router();
-        r.route(req(0, "bert", 5));
-        r.route(req(1, "vit", 5));
+        r.route(req(0, "bert", 5)).unwrap();
+        r.route(req(1, "vit", 5)).unwrap();
         let batches = r.ready_batches(Instant::now());
         assert_eq!(batches.len(), 2);
         let keys: Vec<&StreamKey> = batches.iter().map(|b| &b.0).collect();
@@ -155,8 +282,8 @@ mod tests {
     fn streams_are_independent_fifos() {
         let mut r = router();
         for i in 0..4 {
-            r.route(req(i, "bert", 5));
-            r.route(req(100 + i, "bert", 1));
+            r.route(req(i, "bert", 5)).unwrap();
+            r.route(req(100 + i, "bert", 1)).unwrap();
         }
         let batches = r.flush();
         let mut bert5 = Vec::new();
@@ -179,7 +306,7 @@ mod tests {
         r.register("bert", 5, vec![64], Duration::from_millis(100));
         let now = Instant::now();
         assert_eq!(r.next_deadline(now), None, "idle router has no deadline");
-        r.route(req(0, "bert", 5));
+        r.route(req(0, "bert", 5)).unwrap();
         let d = r.next_deadline(Instant::now()).expect("queued deadline");
         assert!(d <= Duration::from_millis(100));
         // an already-expired queue reports a zero deadline, not a panic
@@ -197,7 +324,7 @@ mod tests {
             for i in 0..n {
                 let model = if rng.chance(0.5) { "bert" } else { "vit" };
                 let k = [1usize, 5, 99][rng.below(3)];
-                if r.route(req(i as u64, model, k)) {
+                if r.route(req(i as u64, model, k)).is_ok() {
                     accepted += 1;
                 }
             }

@@ -1,46 +1,39 @@
-//! The coordinator event loop: routing → batching → execution → metrics.
+//! The legacy single-coordinator API, reimplemented as a 1-shard fleet.
 //!
-//! Concurrency model (std::thread, no async runtime in this offline
-//! environment): callers submit requests through a channel; the
-//! coordinator thread routes them, polls for ready batches, executes via
-//! an [`Executor`], and returns responses through per-request channels.
-//! Batch execution is synchronous on the coordinator thread — PJRT CPU
-//! executions are themselves multi-threaded, so a single dispatch thread
-//! keeps ordering simple without starving the CPU.
+//! [`Coordinator`] used to own the whole event loop; the loop now lives
+//! in [`super::shard`] and the multi-loop front in [`super::fleet`].
+//! This wrapper keeps every existing call site compiling unchanged
+//! (`Coordinator::start(router, factory)` → `submit` → `shutdown() ->
+//! Metrics`) while routing all of it through the same code path the
+//! fleet engine uses — there is exactly one serving implementation.
 //!
-//! §Perf notes: the loop sleeps until the oldest queued request's
-//! batching deadline (or [`IDLE_WAIT`] when every queue is empty — any
-//! submit wakes the channel immediately) instead of spinning at a fixed
-//! 1 ms tick; waiters are keyed by `RequestId` in a `HashMap` so
-//! response delivery is O(1) per request; and batch dispatch hands the
-//! executor shared `Arc<InputData>` handles rather than deep-copying
-//! every payload.
+//! §Perf notes (inherited by every shard loop): the loop sleeps until
+//! the oldest queued request's batching deadline (or `IDLE_WAIT` when
+//! every queue is empty — any submit wakes the channel immediately)
+//! instead of spinning at a fixed 1 ms tick; waiters are keyed by
+//! `RequestId` in a `HashMap` so response delivery is O(1) per request;
+//! and batch dispatch hands the executor shared `Arc<InputData>`
+//! handles rather than deep-copying every payload.
 
-use std::collections::HashMap;
 use std::sync::mpsc;
 use std::sync::Arc;
-use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use super::batcher::BatchPlan;
+use super::fleet::Fleet;
 use super::metrics::Metrics;
-use super::request::{InputData, Request, RequestId, Response};
-use super::router::{Router, StreamKey};
-
-/// How long the loop may sleep when no request is queued. Purely an
-/// upper bound on shutdown-by-disconnect latency: submits and shutdowns
-/// arrive on the channel and wake `recv_timeout` immediately.
-const IDLE_WAIT: Duration = Duration::from_millis(250);
+use super::request::{InputData, Response};
+use super::router::{RouteError, Router, StreamKey};
+use super::shard::ExecutorFactory;
 
 /// Executes one batch for a stream. Implemented by the PJRT-backed
-/// executor in production and by mocks in tests.
+/// executor in production, the synthetic hw-cost executor for
+/// artifact-free load tests, and mocks in tests.
 ///
 /// Deliberately NOT `Send`: PJRT executables hold thread-local handles
 /// (`Rc` internals in the `xla` crate), so the executor is *constructed
-/// inside* the coordinator thread via the factory passed to
-/// [`Coordinator::start`] and never crosses threads.
+/// inside* its shard thread via the factory passed to
+/// [`Coordinator::start`] / [`Fleet::start`] and never crosses threads.
 pub trait Executor {
     /// Run a batch of `bucket` rows. `inputs` holds `requests.len()`
     /// shared samples; the executor pads to `bucket` itself. Returns one
@@ -53,101 +46,30 @@ pub trait Executor {
     ) -> Result<Vec<Vec<f32>>>;
 }
 
-enum Msg {
-    Submit(Request, mpsc::Sender<Response>),
-    Shutdown,
-}
-
-/// Handle for submitting work to a running coordinator.
+/// Handle for submitting work to a running 1-shard fleet (the legacy
+/// single-coordinator surface).
 pub struct Coordinator {
-    tx: mpsc::Sender<Msg>,
-    handle: Option<JoinHandle<Metrics>>,
-    next_id: RequestId,
+    fleet: Fleet,
 }
 
 impl Coordinator {
-    /// Spawn the coordinator thread. `make_executor` runs on the
-    /// coordinator thread (PJRT handles are not `Send`).
-    pub fn start<F>(mut router: Router, make_executor: F) -> Coordinator
+    /// Spawn the coordinator: the router's streams become a 1-shard
+    /// fleet. `make_executor` runs on the shard thread (PJRT handles
+    /// are not `Send`).
+    pub fn start<F>(router: Router, make_executor: F) -> Coordinator
     where
         F: FnOnce() -> Box<dyn Executor> + Send + 'static,
     {
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let handle = std::thread::spawn(move || {
-            let mut executor = make_executor();
-            let mut metrics = Metrics::default();
-            let mut waiters: HashMap<RequestId, mpsc::Sender<Response>> =
-                HashMap::new();
-            let mut inputs: Vec<Arc<InputData>> = Vec::new();
-            loop {
-                // Sleep until the oldest queued request needs a
-                // timeout-based batch; idle indefinitely (modulo
-                // IDLE_WAIT) when no queue holds work.
-                let wait = router
-                    .next_deadline(Instant::now())
-                    .unwrap_or(IDLE_WAIT);
-                let msg = rx.recv_timeout(wait);
-                match msg {
-                    Ok(Msg::Submit(req, reply)) => {
-                        let id = req.id;
-                        if router.route(req) {
-                            waiters.insert(id, reply);
-                        } else {
-                            // dropping `reply` fails the caller's recv
-                            // immediately instead of leaking a waiter
-                            metrics.record_error();
-                        }
-                    }
-                    Ok(Msg::Shutdown) => {
-                        for (key, plan) in router.flush() {
-                            run_batch(
-                                &key, plan, &mut *executor, &mut metrics,
-                                &mut waiters, &mut inputs,
-                            );
-                        }
-                        return metrics;
-                    }
-                    Err(mpsc::RecvTimeoutError::Timeout) => {}
-                    Err(mpsc::RecvTimeoutError::Disconnected) => {
-                        return metrics;
-                    }
-                }
-                // Drain the whole backlog before forming batches so a
-                // burst fills real buckets instead of timeout-firing as
-                // singles (arrivals are cheap; batches are not).
-                while let Ok(msg) = rx.try_recv() {
-                    match msg {
-                        Msg::Submit(req, reply) => {
-                            let id = req.id;
-                            if router.route(req) {
-                                waiters.insert(id, reply);
-                            } else {
-                                metrics.record_error();
-                            }
-                        }
-                        Msg::Shutdown => {
-                            for (key, plan) in router.flush() {
-                                run_batch(
-                                    &key, plan, &mut *executor,
-                                    &mut metrics, &mut waiters, &mut inputs,
-                                );
-                            }
-                            return metrics;
-                        }
-                    }
-                }
-                for (key, plan) in router.ready_batches(Instant::now()) {
-                    run_batch(
-                        &key, plan, &mut *executor, &mut metrics,
-                        &mut waiters, &mut inputs,
-                    );
-                }
-            }
-        });
-        Coordinator { tx, handle: Some(handle), next_id: 0 }
+        let factory: ExecutorFactory = Box::new(make_executor);
+        Coordinator {
+            fleet: Fleet::start(router.into_defs(), vec![factory]),
+        }
     }
 
-    /// Submit one request; returns the receiver for its response.
+    /// Submit one request; returns the receiver for its response. A
+    /// rejected request (unknown stream, full queue) yields a receiver
+    /// whose `recv` fails immediately — use [`Coordinator::try_submit`]
+    /// to see the typed [`RouteError`] instead.
     pub fn submit(
         &mut self,
         model: &str,
@@ -165,63 +87,39 @@ impl Coordinator {
         k: usize,
         input: Arc<InputData>,
     ) -> mpsc::Receiver<Response> {
-        let id = self.next_id;
-        self.next_id += 1;
-        let (tx, rx) = mpsc::channel();
-        let req = Request::shared(id, model, k, input);
-        self.tx
-            .send(Msg::Submit(req, tx))
-            .expect("coordinator thread alive");
-        rx
+        match self.fleet.submit_shared(model, k, input) {
+            Ok(rx) => rx,
+            // Rejected: hand back a receiver with a dropped sender so
+            // the caller's recv fails immediately (legacy behavior);
+            // the rejection is already counted in the fleet metrics.
+            Err(_) => mpsc::channel().1,
+        }
     }
 
-    /// Drain queues, stop the thread, return final metrics.
-    pub fn shutdown(mut self) -> Metrics {
-        let _ = self.tx.send(Msg::Shutdown);
-        self.handle
-            .take()
-            .expect("not yet joined")
-            .join()
-            .expect("coordinator thread panicked")
+    /// Submit, surfacing rejections as a typed [`RouteError`] that
+    /// carries the stream key instead of silently dropping the request.
+    pub fn try_submit(
+        &mut self,
+        model: &str,
+        k: usize,
+        input: InputData,
+    ) -> Result<mpsc::Receiver<Response>, RouteError> {
+        self.fleet.submit(model, k, input)
     }
-}
 
-fn run_batch(
-    key: &StreamKey,
-    plan: BatchPlan,
-    executor: &mut dyn Executor,
-    metrics: &mut Metrics,
-    waiters: &mut HashMap<RequestId, mpsc::Sender<Response>>,
-    inputs: &mut Vec<Arc<InputData>>,
-) {
-    inputs.clear();
-    inputs.extend(plan.requests.iter().map(|r| r.input.clone()));
-    match executor.execute(key, inputs, plan.bucket) {
-        Ok(outputs) => {
-            let now = Instant::now();
-            let mut lats = Vec::with_capacity(plan.requests.len());
-            for (req, output) in plan.requests.iter().zip(outputs) {
-                let latency_us =
-                    now.duration_since(req.enqueued).as_secs_f64() * 1e6;
-                lats.push(latency_us);
-                if let Some(reply) = waiters.remove(&req.id) {
-                    let _ = reply.send(Response {
-                        id: req.id,
-                        output,
-                        latency_us,
-                        batch_size: plan.bucket,
-                    });
-                }
-            }
-            metrics.record_batch(&lats, plan.bucket, plan.padding());
-        }
-        Err(_) => {
-            for req in &plan.requests {
-                metrics.record_error();
-                // drop sender → Err on the caller's recv
-                waiters.remove(&req.id);
-            }
-        }
+    /// [`Coordinator::try_submit`] with pre-shared handles.
+    pub fn try_submit_shared(
+        &mut self,
+        model: Arc<str>,
+        k: usize,
+        input: Arc<InputData>,
+    ) -> Result<mpsc::Receiver<Response>, RouteError> {
+        self.fleet.submit_shared(model, k, input)
+    }
+
+    /// Drain queues, stop the shard thread, return aggregate metrics.
+    pub fn shutdown(self) -> Metrics {
+        self.fleet.shutdown().aggregate()
     }
 }
 
@@ -309,6 +207,25 @@ mod tests {
         let rx = c.submit("bert", 42, InputData::I32(vec![1]));
         assert!(rx.recv_timeout(Duration::from_millis(300)).is_err());
         let m = c.shutdown();
+        assert_eq!(m.errors(), 1);
+    }
+
+    #[test]
+    fn try_submit_surfaces_typed_route_error() {
+        let mut c = Coordinator::start(router(), || Box::new(Echo));
+        let err =
+            c.try_submit("bert", 42, InputData::I32(vec![1])).unwrap_err();
+        assert_eq!(
+            err,
+            RouteError::UnknownStream((Arc::from("bert"), 42))
+        );
+        // a valid stream still goes through the typed path
+        let rx =
+            c.try_submit("bert", 5, InputData::I32(vec![4, 0])).unwrap();
+        let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(r.output, vec![4.0, 5.0]);
+        let m = c.shutdown();
+        assert_eq!(m.completed(), 1);
         assert_eq!(m.errors(), 1);
     }
 

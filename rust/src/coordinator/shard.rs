@@ -1,0 +1,205 @@
+//! One shard of the fleet engine: an event loop owning its own
+//! [`Router`] (the streams hash-assigned to this shard), executor,
+//! waiter map, and per-stream [`Metrics`].
+//!
+//! This is the former single-coordinator loop, made per-shard: requests
+//! arrive on the shard's channel, the router admits them into their
+//! stream's batcher, and the loop sleeps until the oldest queued
+//! request's batching deadline ([`IDLE_WAIT`] when every queue is
+//! empty — any submit wakes `recv_timeout` immediately). Batch
+//! execution is synchronous on the shard thread — PJRT CPU executions
+//! are themselves multi-threaded, so one dispatch thread per shard
+//! keeps per-stream ordering simple without starving the CPU; shard
+//! parallelism comes from running N of these loops side by side.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::batcher::BatchPlan;
+use super::metrics::Metrics;
+use super::request::{InputData, Request, RequestId, Response};
+use super::router::{RouteError, Router, StreamKey};
+use super::server::Executor;
+
+/// How long a shard loop may sleep when no request is queued. Purely an
+/// upper bound on shutdown-by-disconnect latency: submits and shutdowns
+/// arrive on the channel and wake `recv_timeout` immediately.
+pub(crate) const IDLE_WAIT: Duration = Duration::from_millis(250);
+
+/// Boxed one-shot executor constructor, invoked *inside* the shard
+/// thread: PJRT executables hold thread-local handles (`Rc` internals
+/// in the `xla` crate) and must never cross threads.
+pub type ExecutorFactory = Box<dyn FnOnce() -> Box<dyn Executor> + Send>;
+
+pub(crate) enum ShardMsg {
+    Submit(Request, mpsc::Sender<Response>),
+    Shutdown,
+}
+
+/// Final accounting a shard thread returns on join.
+pub(crate) struct ShardReport {
+    /// Metrics per stream owned by this shard (every registered stream
+    /// appears, even with zero traffic).
+    pub streams: BTreeMap<StreamKey, Metrics>,
+    /// Requests that reached this shard for a stream it does not own.
+    pub rejected: u64,
+}
+
+pub(crate) struct ShardHandle {
+    pub tx: mpsc::Sender<ShardMsg>,
+    pub handle: JoinHandle<ShardReport>,
+}
+
+/// Spawn one shard event loop over the given routing table.
+pub(crate) fn start_shard(
+    router: Router,
+    make_executor: ExecutorFactory,
+) -> ShardHandle {
+    let (tx, rx) = mpsc::channel::<ShardMsg>();
+    let handle =
+        std::thread::spawn(move || shard_loop(router, make_executor, rx));
+    ShardHandle { tx, handle }
+}
+
+fn shard_loop(
+    mut router: Router,
+    make_executor: ExecutorFactory,
+    rx: mpsc::Receiver<ShardMsg>,
+) -> ShardReport {
+    let mut executor = make_executor();
+    let mut streams: BTreeMap<StreamKey, Metrics> = router
+        .streams()
+        .into_iter()
+        .map(|key| (key, Metrics::default()))
+        .collect();
+    let mut rejected = 0u64;
+    let mut waiters: HashMap<RequestId, mpsc::Sender<Response>> =
+        HashMap::new();
+    let mut inputs: Vec<Arc<InputData>> = Vec::new();
+    loop {
+        // Sleep until the oldest queued request needs a timeout-based
+        // batch; idle indefinitely (modulo IDLE_WAIT) when no queue
+        // holds work.
+        let wait = router.next_deadline(Instant::now()).unwrap_or(IDLE_WAIT);
+        match rx.recv_timeout(wait) {
+            Ok(ShardMsg::Submit(req, reply)) => {
+                admit(&mut router, req, reply, &mut streams, &mut rejected,
+                      &mut waiters);
+            }
+            Ok(ShardMsg::Shutdown) => {
+                flush_all(&mut router, &mut *executor, &mut streams,
+                          &mut waiters, &mut inputs);
+                return ShardReport { streams, rejected };
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                return ShardReport { streams, rejected };
+            }
+        }
+        // Drain the whole backlog before forming batches so a burst
+        // fills real buckets instead of timeout-firing as singles
+        // (arrivals are cheap; batches are not).
+        while let Ok(msg) = rx.try_recv() {
+            match msg {
+                ShardMsg::Submit(req, reply) => {
+                    admit(&mut router, req, reply, &mut streams,
+                          &mut rejected, &mut waiters);
+                }
+                ShardMsg::Shutdown => {
+                    flush_all(&mut router, &mut *executor, &mut streams,
+                              &mut waiters, &mut inputs);
+                    return ShardReport { streams, rejected };
+                }
+            }
+        }
+        for (key, plan) in router.ready_batches(Instant::now()) {
+            let metrics =
+                streams.get_mut(&key).expect("batch from registered stream");
+            run_batch(&key, plan, &mut *executor, metrics, &mut waiters,
+                      &mut inputs);
+        }
+    }
+}
+
+/// Route one submission; rejections drop the reply sender (the caller's
+/// `recv` fails immediately instead of leaking a waiter) and are
+/// recorded — on the stream for admission-control rejections, on the
+/// shard for unknown streams.
+fn admit(
+    router: &mut Router,
+    req: Request,
+    reply: mpsc::Sender<Response>,
+    streams: &mut BTreeMap<StreamKey, Metrics>,
+    rejected: &mut u64,
+    waiters: &mut HashMap<RequestId, mpsc::Sender<Response>>,
+) {
+    let id = req.id;
+    match router.route(req) {
+        Ok(()) => {
+            waiters.insert(id, reply);
+        }
+        Err(RouteError::QueueFull { stream, .. }) => {
+            match streams.get_mut(&stream) {
+                Some(m) => m.record_error(),
+                None => *rejected += 1,
+            }
+        }
+        Err(RouteError::UnknownStream(_)) => *rejected += 1,
+    }
+}
+
+fn flush_all(
+    router: &mut Router,
+    executor: &mut dyn Executor,
+    streams: &mut BTreeMap<StreamKey, Metrics>,
+    waiters: &mut HashMap<RequestId, mpsc::Sender<Response>>,
+    inputs: &mut Vec<Arc<InputData>>,
+) {
+    for (key, plan) in router.flush() {
+        let metrics =
+            streams.get_mut(&key).expect("batch from registered stream");
+        run_batch(&key, plan, executor, metrics, waiters, inputs);
+    }
+}
+
+fn run_batch(
+    key: &StreamKey,
+    plan: BatchPlan,
+    executor: &mut dyn Executor,
+    metrics: &mut Metrics,
+    waiters: &mut HashMap<RequestId, mpsc::Sender<Response>>,
+    inputs: &mut Vec<Arc<InputData>>,
+) {
+    inputs.clear();
+    inputs.extend(plan.requests.iter().map(|r| r.input.clone()));
+    match executor.execute(key, inputs, plan.bucket) {
+        Ok(outputs) => {
+            let now = Instant::now();
+            let mut lats = Vec::with_capacity(plan.requests.len());
+            for (req, output) in plan.requests.iter().zip(outputs) {
+                let latency_us =
+                    now.duration_since(req.enqueued).as_secs_f64() * 1e6;
+                lats.push(latency_us);
+                if let Some(reply) = waiters.remove(&req.id) {
+                    let _ = reply.send(Response {
+                        id: req.id,
+                        output,
+                        latency_us,
+                        batch_size: plan.bucket,
+                    });
+                }
+            }
+            metrics.record_batch(&lats, plan.bucket, plan.padding());
+        }
+        Err(_) => {
+            for req in &plan.requests {
+                metrics.record_error();
+                // drop sender → Err on the caller's recv
+                waiters.remove(&req.id);
+            }
+        }
+    }
+}

@@ -1,0 +1,108 @@
+//! Synthetic [`Executor`]: runs the full fleet control plane with no
+//! PJRT artifacts.
+//!
+//! Each batch costs a simulated service time (`base_us` + per-row µs,
+//! by default derived per stream from the analytic hardware simulator —
+//! see `PipelineBuilder::start_fleet`), spent in a real `sleep` so
+//! batching, deadlines, and shard parallelism behave as they would over
+//! a blocking device, and returns a deterministic checksum per sample.
+//! Used by `topkima serve-fleet`'s load generator and the CI fleet
+//! tests.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::request::InputData;
+use super::router::StreamKey;
+use super::server::Executor;
+
+/// Deterministic stand-in for a device-backed executor.
+#[derive(Clone, Debug)]
+pub struct SyntheticExecutor {
+    /// Fixed per-batch overhead, µs (dispatch + readout).
+    base_us: f64,
+    /// Per-stream service cost, µs per executed row (incl. padding).
+    cost_us_per_row: HashMap<StreamKey, f64>,
+    /// Cost for streams with no explicit entry.
+    default_cost_us: f64,
+}
+
+impl SyntheticExecutor {
+    pub fn new(base_us: f64, default_cost_us: f64) -> SyntheticExecutor {
+        SyntheticExecutor {
+            base_us,
+            cost_us_per_row: HashMap::new(),
+            default_cost_us,
+        }
+    }
+
+    /// Set one stream's per-row service cost (µs).
+    pub fn with_stream_cost(
+        mut self,
+        key: StreamKey,
+        us_per_row: f64,
+    ) -> SyntheticExecutor {
+        self.cost_us_per_row.insert(key, us_per_row);
+        self
+    }
+
+    /// The per-row cost this executor would charge a stream.
+    pub fn cost_for(&self, key: &StreamKey) -> f64 {
+        *self.cost_us_per_row.get(key).unwrap_or(&self.default_cost_us)
+    }
+}
+
+impl Executor for SyntheticExecutor {
+    fn execute(
+        &mut self,
+        stream: &StreamKey,
+        inputs: &[Arc<InputData>],
+        bucket: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        let busy_us = self.base_us + self.cost_for(stream) * bucket as f64;
+        if busy_us > 0.0 {
+            std::thread::sleep(Duration::from_micros(busy_us as u64));
+        }
+        Ok(inputs
+            .iter()
+            .map(|input| {
+                let sum: f64 = match &**input {
+                    InputData::F32(v) => {
+                        v.iter().map(|&x| x as f64).sum()
+                    }
+                    InputData::I32(v) => {
+                        v.iter().map(|&x| x as f64).sum()
+                    }
+                };
+                vec![sum as f32, stream.1 as f32]
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checksums_are_deterministic_and_cost_is_per_stream(
+    ) {
+        let key: StreamKey = (Arc::from("bert"), 5);
+        let other: StreamKey = (Arc::from("vit"), 3);
+        let mut e = SyntheticExecutor::new(0.0, 7.0)
+            .with_stream_cost(key.clone(), 11.0);
+        assert_eq!(e.cost_for(&key), 11.0);
+        assert_eq!(e.cost_for(&other), 7.0);
+        let inputs = vec![
+            Arc::new(InputData::I32(vec![1, 2, 3])),
+            Arc::new(InputData::F32(vec![0.5, 0.25])),
+        ];
+        let out = e.execute(&key, &inputs, 4).unwrap();
+        assert_eq!(out, vec![vec![6.0, 5.0], vec![0.75, 5.0]]);
+        let again = e.execute(&key, &inputs, 4).unwrap();
+        assert_eq!(out, again);
+    }
+}

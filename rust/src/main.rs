@@ -14,13 +14,30 @@
 //! * `sweep [--artifacts DIR] [--model bert|vit] [--batch N]
 //!   [--limit N]` — re-check Fig 3 on the rust stack: run every exported
 //!   per-k executable over the eval split and print accuracy vs k.
+//! * `serve-fleet [--seed S] [--duration-ms D] [--out FILE]
+//!   [--shards N] [--config fleet.json] [stack flags...]` — start the
+//!   sharded fleet engine over the configured streams (a 3-stream
+//!   2-shard demo fleet by default) and drive it with a seeded
+//!   multi-stream synthetic load (per-stream Poisson arrivals at each
+//!   stream's `rate_rps`); per-stream p50/p99 latency, batch occupancy,
+//!   and padding waste land in `BENCH_fleet.json`.
 //! * `sweep-hw [--threads N] [--ks 1,2,5,10] [--seq-lens 128,384]
 //!   [--kinds conv,dtopk,topkima] [--noise-points ideal,default]
-//!   [--q-rows N] [--seed S] [--out FILE] [stack flags...]` — parallel
-//!   hardware grid search: every (k × SL × softmax × noise) point is
-//!   simulated analytically *and* run behaviorally on the circuit
-//!   macro; results land in `BENCH_sweep.json` (byte-identical for any
-//!   `--threads` value).
+//!   [--q-rows N] [--seed S] [--shard-index I --shard-count C]
+//!   [--out FILE] [stack flags...]` — parallel hardware grid search:
+//!   every (k × SL × softmax × noise) point is simulated analytically
+//!   *and* run behaviorally on the circuit macro; results land in
+//!   `BENCH_sweep.json` (byte-identical for any `--threads` value).
+//!   `--shard-index/--shard-count` partition the grid deterministically
+//!   across processes/hosts (per-point seeding by global index).
+//! * `sweep-merge [--out FILE] shard0.json shard1.json ...` —
+//!   reassemble per-shard `sweep-hw` outputs into one full
+//!   `BENCH_sweep.json` (validates seed/grid agreement and coverage).
+//! * `bench-diff --fresh FILE [--baseline FILE] [--max-regress 0.25]
+//!   [--markdown]` — compare a fresh `BENCH_*.json` against a committed
+//!   baseline and exit nonzero on regressions beyond the threshold
+//!   (the CI perf gate); `--markdown` renders the EXPERIMENTS.md §Perf
+//!   table instead.
 //! * `check [--artifacts DIR]` — load every artifact, compile, and run a
 //!   one-batch smoke test (CI gate; skips cleanly when no artifacts
 //!   exist).
@@ -45,14 +62,18 @@ fn main() -> Result<()> {
     match cmd {
         "report" => cmd_report(rest),
         "serve" => cmd_serve(rest),
+        "serve-fleet" => cmd_serve_fleet(rest),
         "sweep" => cmd_sweep(rest),
         "sweep-hw" => cmd_sweep_hw(rest),
+        "sweep-merge" => cmd_sweep_merge(rest),
+        "bench-diff" => cmd_bench_diff(rest),
         "check" => cmd_check(rest),
         "config" => cmd_config(rest),
         _ => {
             eprintln!(
-                "usage: topkima <serve|report|sweep|sweep-hw|check|config> \
-                 [flags]\nsee rust/src/main.rs doc comment"
+                "usage: topkima <serve|serve-fleet|report|sweep|sweep-hw|\
+                 sweep-merge|bench-diff|check|config> [flags]\n\
+                 see rust/src/main.rs doc comment"
             );
             Ok(())
         }
@@ -152,6 +173,227 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Value of `--flag` at position `i` in `args`: the next element,
+/// which must not itself be a flag.
+fn flag_value(args: &[String], i: usize, flag: &str) -> Result<String> {
+    match args.get(i + 1) {
+        Some(v) if !v.starts_with("--") => Ok(v.clone()),
+        _ => bail!("--{flag} needs a value"),
+    }
+}
+
+/// `serve-fleet`: sharded multi-stream fleet under a seeded synthetic
+/// load. Uses the synthetic hw-cost executor (per-stream service time
+/// from the analytic simulator), so it needs no artifacts — it measures
+/// the control plane: batching, deadlines, shard parallelism.
+fn cmd_serve_fleet(args: &[String]) -> Result<()> {
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    use topkima::coordinator::{InputData, StreamKey};
+    use topkima::pipeline::StreamSpec;
+    use topkima::util::json::{self, Json};
+    use topkima::util::rng::Rng;
+
+    // local load-generator flags; the rest are stack flags
+    let mut seed: u64 = 7;
+    let mut duration_ms: u64 = 400;
+    let mut out = "BENCH_fleet.json".to_string();
+    let mut rest: Vec<String> = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--seed" => {
+                seed = flag_value(args, i, "seed")?.parse()?;
+                i += 2;
+            }
+            "--duration-ms" => {
+                duration_ms = flag_value(args, i, "duration-ms")?.parse()?;
+                i += 2;
+            }
+            "--out" => {
+                out = flag_value(args, i, "out")?;
+                i += 2;
+            }
+            _ => {
+                rest.push(args[i].clone());
+                i += 1;
+            }
+        }
+    }
+
+    // Default demo fleet: 3 streams with distinct (family, k, softmax)
+    // and rates, 2 shards. A `--config fleet.json` replaces all of it.
+    let defaults = StackConfig::default()
+        .with_model(ModelKind::BertTiny)
+        .with_shards(2)
+        .with_stream(
+            StreamSpec::new(ModelKind::BertTiny, 5, SoftmaxKind::Topkima)
+                .with_rate(900.0),
+        )
+        .with_stream(
+            StreamSpec::new(ModelKind::BertTiny, 10, SoftmaxKind::Dtopk)
+                .with_rate(400.0),
+        )
+        .with_stream(
+            StreamSpec::new(ModelKind::VitBase, 2, SoftmaxKind::Topkima)
+                .with_rate(250.0),
+        );
+    let cfg = StackConfig::from_args_with(defaults, &rest)?;
+    let b = cfg.build()?;
+    let specs = b.fleet_specs();
+    let shards = b.config().fleet.shards;
+    println!(
+        "fleet: {} stream(s) over {} shard(s), {} ms seeded load \
+         (seed {seed})",
+        specs.len(),
+        shards,
+        duration_ms
+    );
+    for s in &specs {
+        println!(
+            "  {}/k={} {:<9} {:>6.0} req/s  buckets {:?}  max_wait {} µs  \
+             max_queue {}",
+            s.family(),
+            s.k,
+            s.softmax.key(),
+            s.rate_rps,
+            s.policy.buckets,
+            s.policy.max_wait_us,
+            s.policy.max_queue,
+        );
+    }
+
+    let mut fleet = b.start_fleet_synthetic()?;
+
+    // Seeded per-stream Poisson arrival schedule over the window.
+    let mut events: Vec<(u64, usize)> = Vec::new(); // (arrival µs, stream)
+    let horizon_us = duration_ms as f64 * 1000.0;
+    for (si, spec) in specs.iter().enumerate() {
+        if spec.rate_rps <= 0.0 {
+            continue;
+        }
+        let mut rng = Rng::new(
+            seed ^ (si as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        let mut t = 0.0f64;
+        loop {
+            let u = rng.f64();
+            t += -(1.0 - u).max(1e-12).ln() * 1e6 / spec.rate_rps;
+            if t >= horizon_us {
+                break;
+            }
+            events.push((t as u64, si));
+        }
+    }
+    events.sort_unstable();
+    println!("load: {} requests scheduled", events.len());
+
+    // Shared handles per stream: routing is refcount bumps (§Perf).
+    let keys: Vec<Arc<str>> =
+        specs.iter().map(|s| Arc::from(s.family())).collect();
+    let inputs: Vec<Arc<InputData>> = specs
+        .iter()
+        .enumerate()
+        .map(|(si, s)| {
+            Arc::new(if s.family() == "vit" {
+                InputData::F32(vec![0.5 + si as f32; 48])
+            } else {
+                InputData::I32(vec![si as i32 + 1; 64])
+            })
+        })
+        .collect();
+
+    let t0 = Instant::now();
+    let mut rxs = Vec::with_capacity(events.len());
+    for &(t_us, si) in &events {
+        let target = Duration::from_micros(t_us);
+        let now = t0.elapsed();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        let rx = fleet
+            .submit_shared(keys[si].clone(), specs[si].k, inputs[si].clone())
+            .map_err(|e| anyhow::anyhow!("fleet rejected request: {e}"))?;
+        rxs.push(rx);
+    }
+    let mut dropped = 0usize;
+    for rx in rxs {
+        if rx.recv_timeout(Duration::from_secs(60)).is_err() {
+            dropped += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    // record the fleet's actual stream placement before shutdown
+    let placements: Vec<Option<usize>> = specs
+        .iter()
+        .enumerate()
+        .map(|(si, s)| fleet.shard_for(&(keys[si].clone(), s.k)))
+        .collect();
+    let fm = fleet.shutdown();
+    println!("\n{}", fm.summary());
+    println!(
+        "{} requests in {wall:.2}s ({dropped} dropped)",
+        events.len()
+    );
+
+    // BENCH_fleet.json: per-stream latency distribution + occupancy.
+    let stream_json: Vec<Json> = specs
+        .iter()
+        .enumerate()
+        .map(|(si, s)| {
+            let key: StreamKey = (keys[si].clone(), s.k);
+            let m = &fm.per_stream[&key];
+            Json::obj(vec![
+                ("family", Json::Str(s.family().to_string())),
+                ("k", Json::Num(s.k as f64)),
+                ("softmax", Json::Str(s.softmax.key().to_string())),
+                ("rate_rps", Json::Num(s.rate_rps)),
+                (
+                    "shard",
+                    placements[si]
+                        .map_or(Json::Null, |p| Json::Num(p as f64)),
+                ),
+                ("completed", Json::Num(m.completed() as f64)),
+                ("errors", Json::Num(m.errors() as f64)),
+                ("p50_us", Json::Num(m.latency_percentile_us(50.0))),
+                ("p99_us", Json::Num(m.latency_percentile_us(99.0))),
+                ("mean_batch", Json::Num(m.mean_batch_size())),
+                ("padding_fraction", Json::Num(m.padding_fraction())),
+            ])
+        })
+        .collect();
+    let agg = fm.aggregate();
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("serve_fleet".to_string())),
+        ("seed", Json::Str(seed.to_string())),
+        ("shards", Json::Num(shards as f64)),
+        ("duration_ms", Json::Num(duration_ms as f64)),
+        ("requests", Json::Num(events.len() as f64)),
+        ("dropped", Json::Num(dropped as f64)),
+        ("wall_s", Json::Num(wall)),
+        ("streams", Json::Arr(stream_json)),
+        (
+            "aggregate",
+            Json::obj(vec![
+                ("completed", Json::Num(agg.completed() as f64)),
+                ("errors", Json::Num(agg.errors() as f64)),
+                ("p50_us", Json::Num(agg.latency_percentile_us(50.0))),
+                ("p99_us", Json::Num(agg.latency_percentile_us(99.0))),
+                ("mean_batch", Json::Num(agg.mean_batch_size())),
+                ("padding_fraction", Json::Num(agg.padding_fraction())),
+            ]),
+        ),
+    ]);
+    std::fs::write(&out, json::to_string(&doc))
+        .map_err(|e| anyhow::anyhow!("writing {out}: {e}"))?;
+    println!("wrote {out}");
+    if dropped > 0 {
+        bail!("{dropped} requests dropped under the synthetic load");
+    }
+    Ok(())
+}
+
 /// Decode one model output row and compare to the eval label.
 fn prediction_correct(
     eval: &topkima::runtime::EvalSet,
@@ -238,52 +480,53 @@ fn cmd_sweep_hw(args: &[String]) -> Result<()> {
     let mut opts = SweepOptions::default();
     let mut out = "BENCH_sweep.json".to_string();
     let mut rest: Vec<String> = Vec::new();
-
-    let take = |args: &[String], i: usize, flag: &str| -> Result<String> {
-        match args.get(i + 1) {
-            Some(v) if !v.starts_with("--") => Ok(v.clone()),
-            _ => bail!("--{flag} needs a value"),
-        }
-    };
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
             "--threads" => {
-                opts.threads = take(args, i, "threads")?.parse()?;
+                opts.threads = flag_value(args, i, "threads")?.parse()?;
                 i += 2;
             }
             "--q-rows" => {
-                opts.q_rows = take(args, i, "q-rows")?.parse()?;
+                opts.q_rows = flag_value(args, i, "q-rows")?.parse()?;
                 i += 2;
             }
             "--seed" => {
-                opts.seed = take(args, i, "seed")?.parse()?;
+                opts.seed = flag_value(args, i, "seed")?.parse()?;
+                i += 2;
+            }
+            "--shard-index" => {
+                opts.shard_index = flag_value(args, i, "shard-index")?.parse()?;
+                i += 2;
+            }
+            "--shard-count" => {
+                opts.shard_count = flag_value(args, i, "shard-count")?.parse()?;
                 i += 2;
             }
             "--out" => {
-                out = take(args, i, "out")?;
+                out = flag_value(args, i, "out")?;
                 i += 2;
             }
             "--ks" => {
-                grid.ks = parse_list(&take(args, i, "ks")?, |s| {
+                grid.ks = parse_list(&flag_value(args, i, "ks")?, |s| {
                     s.parse().ok()
                 })?;
                 i += 2;
             }
             "--seq-lens" => {
-                grid.seq_lens = parse_list(&take(args, i, "seq-lens")?, |s| {
+                grid.seq_lens = parse_list(&flag_value(args, i, "seq-lens")?, |s| {
                     s.parse().ok()
                 })?;
                 i += 2;
             }
             "--kinds" => {
                 grid.softmaxes =
-                    parse_list(&take(args, i, "kinds")?, SoftmaxKind::parse)?;
+                    parse_list(&flag_value(args, i, "kinds")?, SoftmaxKind::parse)?;
                 i += 2;
             }
             "--noise-points" => {
                 grid.noises =
-                    parse_list(&take(args, i, "noise-points")?, |s| match s {
+                    parse_list(&flag_value(args, i, "noise-points")?, |s| match s {
                         "ideal" | "none" => Some(None),
                         "default" => {
                             Some(Some(topkima::ima::NoiseModel::default()))
@@ -302,7 +545,7 @@ fn cmd_sweep_hw(args: &[String]) -> Result<()> {
     let base = StackConfig::from_args(&rest)?;
     println!(
         "sweep-hw: {} points ({} k × {} SL × {} softmax × {} noise), \
-         {} thread(s), {} Q rows/point",
+         {} thread(s), {} Q rows/point, shard {}/{}",
         grid.len(),
         grid.ks.len(),
         grid.seq_lens.len(),
@@ -310,6 +553,8 @@ fn cmd_sweep_hw(args: &[String]) -> Result<()> {
         grid.noises.len(),
         opts.threads.max(1),
         opts.q_rows,
+        opts.shard_index,
+        opts.shard_count.max(1),
     );
     let t0 = std::time::Instant::now();
     let report = run_sweep(&base, &grid, &opts)?;
@@ -347,6 +592,141 @@ fn cmd_sweep_hw(args: &[String]) -> Result<()> {
         .save(&out)
         .map_err(|e| anyhow::anyhow!("writing {out}: {e}"))?;
     println!("{} points in {wall:.2}s → {out}", report.points.len());
+    Ok(())
+}
+
+/// `sweep-merge`: reassemble per-shard `sweep-hw` JSON into one full
+/// report (validates seed/grid agreement and exact index coverage).
+fn cmd_sweep_merge(args: &[String]) -> Result<()> {
+    use topkima::sweep::SweepReport;
+
+    let mut out = "BENCH_sweep.json".to_string();
+    let mut files: Vec<String> = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--out" {
+            out = flag_value(args, i, "out")?;
+            i += 2;
+        } else if args[i].starts_with("--") {
+            bail!("unknown flag '{}'", args[i]);
+        } else {
+            files.push(args[i].clone());
+            i += 1;
+        }
+    }
+    if files.is_empty() {
+        bail!("sweep-merge needs at least one shard JSON file");
+    }
+    let mut reports = Vec::with_capacity(files.len());
+    for f in &files {
+        let text = std::fs::read_to_string(f)
+            .map_err(|e| anyhow::anyhow!("reading {f}: {e}"))?;
+        let r = SweepReport::from_json_str(&text)
+            .map_err(|e| anyhow::anyhow!("parsing {f}: {e}"))?;
+        println!(
+            "  {f}: shard {}/{}, {} of {} points",
+            r.shard_index,
+            r.shard_count,
+            r.points.len(),
+            r.grid_len
+        );
+        reports.push(r);
+    }
+    let merged = SweepReport::merge(reports)
+        .map_err(|e| anyhow::anyhow!("merge failed: {e}"))?;
+    merged
+        .save(&out)
+        .map_err(|e| anyhow::anyhow!("writing {out}: {e}"))?;
+    println!(
+        "merged {} shard file(s) → {} points → {out}",
+        files.len(),
+        merged.points.len()
+    );
+    Ok(())
+}
+
+/// `bench-diff`: compare a fresh bench JSON against a baseline; exit
+/// nonzero on regressions beyond `--max-regress` (CI perf gate).
+fn cmd_bench_diff(args: &[String]) -> Result<()> {
+    use topkima::util::benchdiff;
+    use topkima::util::json::Json;
+
+    let mut baseline: Option<String> = None;
+    let mut fresh: Option<String> = None;
+    let mut max_regress = 0.25f64;
+    let mut markdown = false;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--baseline" => {
+                baseline = Some(flag_value(args, i, "baseline")?);
+                i += 2;
+            }
+            "--fresh" => {
+                fresh = Some(flag_value(args, i, "fresh")?);
+                i += 2;
+            }
+            "--max-regress" => {
+                max_regress = flag_value(args, i, "max-regress")?.parse()?;
+                i += 2;
+            }
+            "--markdown" => {
+                markdown = true;
+                i += 1;
+            }
+            other => bail!("unknown flag '{other}'"),
+        }
+    }
+    let fresh_path = fresh.ok_or_else(|| anyhow::anyhow!("--fresh FILE required"))?;
+    let load = |path: &str| -> Result<Json> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+        Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))
+    };
+    let fresh_doc = load(&fresh_path)?;
+
+    let Some(base_path) = baseline else {
+        // no baseline: markdown absolute table, or nothing to gate
+        if markdown {
+            let metrics = benchdiff::metrics_of(&fresh_doc)
+                .map_err(|e| anyhow::anyhow!("{fresh_path}: {e}"))?;
+            print!("{}", benchdiff::markdown_single(&metrics));
+            return Ok(());
+        }
+        bail!("--baseline FILE required (or pass --markdown for an \
+               absolute table)");
+    };
+    let base_doc = load(&base_path)?;
+    let d = benchdiff::diff(&base_doc, &fresh_doc)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    if markdown {
+        print!("{}", d.markdown());
+        return Ok(());
+    }
+    print!("{}", d.table());
+    let regs = d.regressions(max_regress);
+    if !regs.is_empty() {
+        for r in &regs {
+            eprintln!(
+                "REGRESSION {}: {:.1} → {:.1} ({:+.1}%)",
+                r.name,
+                r.base,
+                r.fresh,
+                100.0 * r.delta()
+            );
+        }
+        bail!(
+            "{} metric(s) regressed more than {:.0}% vs {base_path}",
+            regs.len(),
+            max_regress * 100.0
+        );
+    }
+    println!(
+        "bench-diff ok: {} metric(s) within +{:.0}% of {base_path}",
+        d.rows.len(),
+        max_regress * 100.0
+    );
     Ok(())
 }
 

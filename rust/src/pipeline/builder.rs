@@ -7,12 +7,17 @@
 //! the three layers can never drift apart (the sim-level `topk`, the
 //! macro-level `k`, and the serving stream's `k` are all `cfg.k`, etc.).
 
+use std::path::Path;
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::Result;
 
 use crate::arch::ArchConfig;
-use crate::coordinator::{Coordinator, PjrtExecutor, Router};
+use crate::coordinator::{
+    shard_of, BatcherConfig, Coordinator, Executor, ExecutorFactory, Fleet,
+    PjrtExecutor, Router, StreamDef, StreamKey, SyntheticExecutor,
+};
 use crate::crossbar::Crossbar;
 use crate::ima::ColumnNoise;
 use crate::model::TransformerConfig;
@@ -22,7 +27,7 @@ use crate::softmax::macros::{macro_for, MacroParts};
 use crate::softmax::SoftmaxMacro;
 use crate::util::rng::Rng;
 
-use super::config::{ConfigError, StackConfig};
+use super::config::{ConfigError, StackConfig, StreamSpec};
 
 /// Assembles every layer of the stack from one validated config.
 #[derive(Clone, Debug)]
@@ -157,7 +162,10 @@ impl PipelineBuilder {
 
     /// Start the serving coordinator: router per config + PJRT executor
     /// preloaded inside the coordinator thread (PJRT handles are not
-    /// `Send`, so the engine is constructed there).
+    /// `Send`, so the engine is constructed there). Since the fleet
+    /// refactor this is a 1-stream/1-shard fleet under the hood —
+    /// `Coordinator` wraps [`Fleet`] — so single-stream and fleet
+    /// serving share one code path.
     pub fn start_coordinator(&self, buckets: Vec<usize>) -> Coordinator {
         let router = self.router(buckets.clone());
         let dir = self.cfg.serving.artifacts.clone();
@@ -171,6 +179,128 @@ impl PipelineBuilder {
                     .expect("preload executables"),
             )
         })
+    }
+
+    // ---- fleet serving -------------------------------------------------
+
+    /// The fleet's stream specs: `fleet.streams` when configured, else
+    /// one spec derived from the top-level single-stream knobs (the
+    /// compatibility path).
+    pub fn fleet_specs(&self) -> Vec<StreamSpec> {
+        let c = &self.cfg;
+        if !c.fleet.streams.is_empty() {
+            return c.fleet.streams.clone();
+        }
+        let mut spec = StreamSpec::new(c.model, c.k, c.softmax);
+        spec.policy.max_wait_us = c.serving.max_wait_us;
+        vec![spec]
+    }
+
+    /// Routing-table entries (stream key + batcher policy) for the
+    /// whole fleet.
+    pub fn stream_defs(&self) -> Vec<StreamDef> {
+        self.fleet_specs()
+            .iter()
+            .map(|spec| StreamDef {
+                family: Arc::from(spec.family()),
+                k: spec.k,
+                policy: BatcherConfig::new(
+                    spec.policy.buckets.clone(),
+                    Duration::from_micros(spec.policy.max_wait_us),
+                )
+                .with_max_queue(spec.policy.max_queue),
+            })
+            .collect()
+    }
+
+    /// Start the fleet with caller-supplied executors, one factory per
+    /// shard (mock executors in tests; each factory runs inside its
+    /// shard's thread).
+    pub fn start_fleet_with(&self, factories: Vec<ExecutorFactory>) -> Fleet {
+        Fleet::start(self.stream_defs(), factories)
+    }
+
+    /// Start the configured fleet (`fleet.shards` shard loops): PJRT
+    /// executors when the artifact manifest exists, otherwise the
+    /// synthetic hw-cost executor (per-stream service time from the
+    /// analytic simulator) so load tests and CI exercise the full
+    /// control plane with no artifacts.
+    pub fn start_fleet(&self) -> Result<Fleet, ConfigError> {
+        let manifest =
+            Path::new(&self.cfg.serving.artifacts).join("manifest.json");
+        if manifest.exists() {
+            Ok(self.start_fleet_with(self.pjrt_factories()))
+        } else {
+            self.start_fleet_synthetic()
+        }
+    }
+
+    /// Start the configured fleet over synthetic executors regardless
+    /// of artifacts (what `topkima serve-fleet`'s load generator uses:
+    /// it measures control-plane batching and latency, not model
+    /// accuracy).
+    pub fn start_fleet_synthetic(&self) -> Result<Fleet, ConfigError> {
+        let shards = self.cfg.fleet.shards;
+        let mut exec = SyntheticExecutor::new(20.0, 50.0);
+        for spec in &self.fleet_specs() {
+            let key: StreamKey = (Arc::from(spec.family()), spec.k);
+            exec = exec.with_stream_cost(key, self.stream_cost_us(spec)?);
+        }
+        let factories = (0..shards)
+            .map(|_| {
+                let exec = exec.clone();
+                Box::new(move || Box::new(exec) as Box<dyn Executor>)
+                    as ExecutorFactory
+            })
+            .collect();
+        Ok(self.start_fleet_with(factories))
+    }
+
+    /// One PJRT executor factory per shard, each preloading only the
+    /// streams hash-assigned to that shard.
+    fn pjrt_factories(&self) -> Vec<ExecutorFactory> {
+        let shards = self.cfg.fleet.shards;
+        let mut per_shard: Vec<Vec<(String, usize, Vec<usize>)>> =
+            vec![Vec::new(); shards];
+        for spec in &self.fleet_specs() {
+            let key: StreamKey = (Arc::from(spec.family()), spec.k);
+            per_shard[shard_of(&key, shards)].push((
+                spec.family().to_string(),
+                spec.k,
+                spec.policy.buckets.clone(),
+            ));
+        }
+        let dir = self.cfg.serving.artifacts.clone();
+        per_shard
+            .into_iter()
+            .map(|streams| {
+                let dir = dir.clone();
+                Box::new(move || {
+                    let engine =
+                        Engine::new(&dir).expect("engine in shard thread");
+                    Box::new(
+                        PjrtExecutor::preload(&engine, &streams)
+                            .expect("preload executables"),
+                    ) as Box<dyn Executor>
+                }) as ExecutorFactory
+            })
+            .collect()
+    }
+
+    /// Synthetic per-row service cost for a stream, µs: the analytic
+    /// module latency at the stream's (model, k, softmax) times the
+    /// layer count, clamped to [1, 200] µs so load tests stay fast.
+    fn stream_cost_us(&self, spec: &StreamSpec) -> Result<f64, ConfigError> {
+        let cfg = self
+            .cfg
+            .clone()
+            .with_model(spec.model)
+            .with_k(spec.k)
+            .with_softmax(spec.softmax);
+        let b = cfg.build()?;
+        let layers = b.transformer().n_layers as f64;
+        let module_us = b.simulate().latency_ns() * 1e-3;
+        Ok((module_us * layers).clamp(1.0, 200.0))
     }
 }
 
@@ -248,6 +378,80 @@ mod tests {
         let r = StackConfig::default().build().unwrap().simulate();
         assert!(r.latency_ns() > 0.0 && r.energy_pj() > 0.0);
         assert_eq!(r.softmax, SoftmaxKind::Topkima);
+    }
+
+    #[test]
+    fn fleet_specs_fall_back_to_single_stream() {
+        let b = StackConfig::default().with_k(7).build().unwrap();
+        let specs = b.fleet_specs();
+        assert_eq!(specs.len(), 1);
+        assert_eq!(specs[0].k, 7);
+        assert_eq!(specs[0].family(), "bert");
+        assert_eq!(
+            specs[0].policy.max_wait_us,
+            b.config().serving.max_wait_us
+        );
+        let defs = b.stream_defs();
+        assert_eq!(defs.len(), 1);
+        assert_eq!(&*defs[0].family, "bert");
+        assert_eq!(defs[0].k, 7);
+    }
+
+    #[test]
+    fn configured_fleet_streams_become_defs() {
+        use crate::pipeline::config::{BatchPolicy, StreamSpec};
+        use crate::pipeline::ModelKind;
+        let cfg = StackConfig::default()
+            .with_shards(2)
+            .with_stream(
+                StreamSpec::new(
+                    ModelKind::BertTiny, 5, SoftmaxKind::Topkima)
+                .with_policy(BatchPolicy {
+                    buckets: vec![2, 4],
+                    max_wait_us: 1000,
+                    max_queue: 16,
+                }),
+            )
+            .with_stream(StreamSpec::new(
+                ModelKind::VitBase, 3, SoftmaxKind::Dtopk));
+        let b = cfg.build().unwrap();
+        let defs = b.stream_defs();
+        assert_eq!(defs.len(), 2);
+        assert_eq!(&*defs[0].family, "bert");
+        assert_eq!(defs[0].policy.max_queue, 16);
+        assert_eq!(defs[0].policy.buckets, vec![2, 4]);
+        assert_eq!(&*defs[1].family, "vit");
+        assert_eq!(defs[1].k, 3);
+    }
+
+    #[test]
+    fn synthetic_fleet_serves_configured_streams() {
+        use crate::coordinator::InputData;
+        use crate::pipeline::config::StreamSpec;
+        use crate::pipeline::ModelKind;
+        let cfg = StackConfig::default()
+            .with_shards(2)
+            .with_stream(StreamSpec::new(
+                ModelKind::BertTiny, 5, SoftmaxKind::Topkima))
+            .with_stream(StreamSpec::new(
+                ModelKind::VitBase, 3, SoftmaxKind::Dtopk));
+        let b = cfg.build().unwrap();
+        let mut fleet = b.start_fleet_synthetic().unwrap();
+        assert_eq!(fleet.shard_count(), 2);
+        let rx1 =
+            fleet.submit("bert", 5, InputData::I32(vec![2, 3])).unwrap();
+        let rx2 =
+            fleet.submit("vit", 3, InputData::F32(vec![0.5, 1.5])).unwrap();
+        let r1 = rx1
+            .recv_timeout(std::time::Duration::from_secs(10))
+            .unwrap();
+        let r2 = rx2
+            .recv_timeout(std::time::Duration::from_secs(10))
+            .unwrap();
+        assert_eq!(r1.output, vec![5.0, 5.0]);
+        assert_eq!(r2.output, vec![2.0, 3.0]);
+        let fm = fleet.shutdown();
+        assert_eq!(fm.aggregate().completed(), 2);
     }
 
     #[test]

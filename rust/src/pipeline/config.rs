@@ -117,6 +117,88 @@ impl ModelKind {
     }
 }
 
+/// Per-stream dynamic-batching policy (the fleet engine's admission
+/// and batching knobs for one stream).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BatchPolicy {
+    /// Bucketed batch sizes (one AOT executable per bucket).
+    pub buckets: Vec<usize>,
+    /// Max µs the oldest request waits before a partial bucket fires.
+    pub max_wait_us: u64,
+    /// Admission control: max queued requests before new arrivals are
+    /// rejected (0 = unbounded).
+    pub max_queue: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            buckets: vec![1, 2, 4, 8],
+            max_wait_us: 2000,
+            max_queue: 0,
+        }
+    }
+}
+
+/// One serving stream in the fleet: its workload shape (family, k,
+/// softmax kind), its own batching policy, and its synthetic-load
+/// arrival rate (`topkima serve-fleet`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StreamSpec {
+    pub model: ModelKind,
+    pub k: usize,
+    pub softmax: SoftmaxKind,
+    /// Arrival rate for the seeded synthetic load generator, req/s.
+    pub rate_rps: f64,
+    pub policy: BatchPolicy,
+}
+
+impl StreamSpec {
+    pub fn new(model: ModelKind, k: usize, softmax: SoftmaxKind)
+        -> StreamSpec
+    {
+        StreamSpec {
+            model,
+            k,
+            softmax,
+            rate_rps: 500.0,
+            policy: BatchPolicy::default(),
+        }
+    }
+
+    /// Artifact family this stream is served from — together with `k`
+    /// it forms the routing `StreamKey`.
+    pub fn family(&self) -> &'static str {
+        self.model.family()
+    }
+
+    pub fn with_rate(mut self, rate_rps: f64) -> StreamSpec {
+        self.rate_rps = rate_rps;
+        self
+    }
+
+    pub fn with_policy(mut self, policy: BatchPolicy) -> StreamSpec {
+        self.policy = policy;
+        self
+    }
+}
+
+/// The fleet section of the stack: shard count + stream list. An empty
+/// stream list means "one stream derived from the top-level knobs" —
+/// the single-stream compatibility path `start_coordinator` uses.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetConfig {
+    /// Shard event loops; streams are hash-partitioned across them.
+    pub shards: usize,
+    pub streams: Vec<StreamSpec>,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig { shards: 1, streams: Vec::new() }
+    }
+}
+
 /// Serving-layer knobs: artifact location, batching policy, replay size.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ServingConfig {
@@ -177,6 +259,8 @@ pub struct StackConfig {
     pub seq_len: Option<usize>,
     /// Serving layer.
     pub serving: ServingConfig,
+    /// Fleet serving: shard count + per-stream batching policies.
+    pub fleet: FleetConfig,
 }
 
 impl Default for StackConfig {
@@ -196,6 +280,7 @@ impl Default for StackConfig {
             model: ModelKind::BertBase,
             seq_len: None,
             serving: ServingConfig::default(),
+            fleet: FleetConfig::default(),
         }
     }
 }
@@ -242,6 +327,22 @@ impl StackConfig {
         self.rows = rows;
         self.cols = cols;
         self.replica_rows = replica_rows;
+        self
+    }
+
+    pub fn with_shards(mut self, shards: usize) -> Self {
+        self.fleet.shards = shards;
+        self
+    }
+
+    /// Add one fleet stream (keeps any already configured).
+    pub fn with_stream(mut self, stream: StreamSpec) -> Self {
+        self.fleet.streams.push(stream);
+        self
+    }
+
+    pub fn with_fleet(mut self, fleet: FleetConfig) -> Self {
+        self.fleet = fleet;
         self
     }
 
@@ -324,6 +425,55 @@ impl StackConfig {
         if self.serving.batch == 0 {
             return Err(invalid("serving.batch", "must be ≥ 1"));
         }
+        self.validate_fleet()
+    }
+
+    /// Fleet-section invariants: shard count, per-stream knobs, and
+    /// uniqueness of the (family, k) routing keys.
+    fn validate_fleet(&self) -> Result<(), ConfigError> {
+        if self.fleet.shards == 0 {
+            return Err(invalid("fleet.shards", "must be ≥ 1"));
+        }
+        let mut keys = std::collections::BTreeSet::new();
+        for (i, s) in self.fleet.streams.iter().enumerate() {
+            let field = format!("fleet.streams[{i}]");
+            if s.k == 0 && s.softmax != SoftmaxKind::Conventional {
+                return Err(invalid(
+                    &field,
+                    format!("k = 0 (dense) requires conv softmax, not {}",
+                            s.softmax.key()),
+                ));
+            }
+            if s.k > self.cols {
+                return Err(invalid(
+                    &field,
+                    format!("k ({}) exceeds crossbar columns ({})",
+                            s.k, self.cols),
+                ));
+            }
+            if s.policy.buckets.is_empty() {
+                return Err(invalid(&field, "needs at least one bucket"));
+            }
+            if s.policy.buckets.iter().any(|&b| b == 0) {
+                return Err(invalid(&field, "buckets must be ≥ 1"));
+            }
+            if !(s.rate_rps >= 0.0) {
+                return Err(invalid(
+                    &field,
+                    format!("rate_rps ({}) must be ≥ 0", s.rate_rps),
+                ));
+            }
+            if !keys.insert((s.family(), s.k)) {
+                return Err(invalid(
+                    &field,
+                    format!(
+                        "duplicate stream key {}/k={} (streams are routed \
+                         by (family, k))",
+                        s.family(), s.k
+                    ),
+                ));
+            }
+        }
         Ok(())
     }
 
@@ -367,6 +517,22 @@ impl StackConfig {
                     ("requests", Json::Num(self.serving.requests as f64)),
                     ("batch", Json::Num(self.serving.batch as f64)),
                     ("limit", Json::Num(self.serving.limit as f64)),
+                ]),
+            ),
+            (
+                "fleet",
+                Json::obj(vec![
+                    ("shards", Json::Num(self.fleet.shards as f64)),
+                    (
+                        "streams",
+                        Json::Arr(
+                            self.fleet
+                                .streams
+                                .iter()
+                                .map(stream_to_json)
+                                .collect(),
+                        ),
+                    ),
                 ]),
             ),
         ])
@@ -413,6 +579,7 @@ impl StackConfig {
                     }
                 }
                 "serving" => cfg.serving = serving_from(value)?,
+                "fleet" => cfg.fleet = fleet_from(value)?,
                 other => {
                     return Err(ConfigError::UnknownField(other.to_string()))
                 }
@@ -566,6 +733,9 @@ impl StackConfig {
                 }
                 "batch" => cfg.serving.batch = parse_usize("batch", &val)?,
                 "limit" => cfg.serving.limit = parse_usize("limit", &val)?,
+                "shards" => {
+                    cfg.fleet.shards = parse_usize("shards", &val)?
+                }
                 other => {
                     return Err(ConfigError::UnknownFlag(format!("--{other}")))
                 }
@@ -697,6 +867,116 @@ fn noise_from(v: &Json) -> Result<Option<NoiseModel>, ConfigError> {
         }
     }
     Ok(Some(n))
+}
+
+fn stream_to_json(s: &StreamSpec) -> Json {
+    Json::obj(vec![
+        ("model", Json::Str(s.model.key().to_string())),
+        ("k", Json::Num(s.k as f64)),
+        ("softmax", Json::Str(s.softmax.key().to_string())),
+        ("rate_rps", Json::Num(s.rate_rps)),
+        (
+            "policy",
+            Json::obj(vec![
+                (
+                    "buckets",
+                    Json::Arr(
+                        s.policy
+                            .buckets
+                            .iter()
+                            .map(|&b| Json::Num(b as f64))
+                            .collect(),
+                    ),
+                ),
+                ("max_wait_us", Json::Num(s.policy.max_wait_us as f64)),
+                ("max_queue", Json::Num(s.policy.max_queue as f64)),
+            ]),
+        ),
+    ])
+}
+
+fn fleet_from(v: &Json) -> Result<FleetConfig, ConfigError> {
+    let obj = v
+        .as_obj()
+        .ok_or_else(|| invalid("fleet", "must be an object"))?;
+    let mut fleet = FleetConfig::default();
+    for (key, value) in obj {
+        match key.as_str() {
+            "shards" => fleet.shards = json_usize(value, "fleet.shards")?,
+            "streams" => {
+                let arr = value.as_arr().ok_or_else(|| {
+                    invalid("fleet.streams", "must be an array")
+                })?;
+                fleet.streams = arr
+                    .iter()
+                    .map(stream_from)
+                    .collect::<Result<Vec<_>, _>>()?;
+            }
+            other => {
+                return Err(ConfigError::UnknownField(format!(
+                    "fleet.{other}"
+                )))
+            }
+        }
+    }
+    Ok(fleet)
+}
+
+fn stream_from(v: &Json) -> Result<StreamSpec, ConfigError> {
+    let obj = v
+        .as_obj()
+        .ok_or_else(|| invalid("fleet.streams[]", "must be an object"))?;
+    let mut s = StreamSpec::new(ModelKind::BertBase, 5, SoftmaxKind::Topkima);
+    for (key, value) in obj {
+        match key.as_str() {
+            "model" => s.model = model_from(value)?,
+            "k" => s.k = json_usize(value, "fleet.streams[].k")?,
+            "softmax" => s.softmax = softmax_from(value)?,
+            "rate_rps" => {
+                s.rate_rps = json_f64(value, "fleet.streams[].rate_rps")?
+            }
+            "policy" => s.policy = policy_from(value)?,
+            other => {
+                return Err(ConfigError::UnknownField(format!(
+                    "fleet.streams[].{other}"
+                )))
+            }
+        }
+    }
+    Ok(s)
+}
+
+fn policy_from(v: &Json) -> Result<BatchPolicy, ConfigError> {
+    let obj = v.as_obj().ok_or_else(|| {
+        invalid("fleet.streams[].policy", "must be an object")
+    })?;
+    let mut p = BatchPolicy::default();
+    for (key, value) in obj {
+        match key.as_str() {
+            "buckets" => {
+                let arr = value.as_arr().ok_or_else(|| {
+                    invalid("policy.buckets", "must be an array")
+                })?;
+                p.buckets = arr
+                    .iter()
+                    .map(|b| json_usize(b, "policy.buckets[]"))
+                    .collect::<Result<Vec<_>, _>>()?;
+            }
+            "max_wait_us" => {
+                p.max_wait_us =
+                    json_usize(value, "policy.max_wait_us")? as u64
+            }
+            "max_queue" => {
+                p.max_queue = json_usize(value, "policy.max_queue")?
+            }
+            other => {
+                return Err(ConfigError::UnknownField(format!(
+                    "fleet.streams[].policy.{other}"
+                )))
+            }
+        }
+    }
+    Ok(p)
 }
 
 fn serving_from(v: &Json) -> Result<ServingConfig, ConfigError> {
@@ -870,6 +1150,99 @@ mod tests {
         ]))
         .unwrap();
         assert_eq!(merged.k, 9);
+    }
+
+    fn three_stream_config() -> StackConfig {
+        StackConfig::default()
+            .with_shards(2)
+            .with_stream(
+                StreamSpec::new(ModelKind::BertTiny, 5, SoftmaxKind::Topkima)
+                    .with_rate(800.0)
+                    .with_policy(BatchPolicy {
+                        buckets: vec![1, 2, 8],
+                        max_wait_us: 1500,
+                        max_queue: 64,
+                    }),
+            )
+            .with_stream(
+                StreamSpec::new(ModelKind::BertTiny, 10, SoftmaxKind::Dtopk)
+                    .with_rate(300.0),
+            )
+            .with_stream(
+                StreamSpec::new(ModelKind::VitBase, 0,
+                                SoftmaxKind::Conventional)
+                    .with_rate(100.0),
+            )
+    }
+
+    #[test]
+    fn fleet_json_roundtrip_is_identity() {
+        let cfg = three_stream_config();
+        cfg.validate().unwrap();
+        let text = cfg.to_json_string();
+        let back = StackConfig::from_json_str(&text).unwrap();
+        assert_eq!(cfg, back);
+        assert_eq!(back.fleet.shards, 2);
+        assert_eq!(back.fleet.streams.len(), 3);
+        assert_eq!(back.fleet.streams[0].policy.max_queue, 64);
+    }
+
+    #[test]
+    fn fleet_validation_catches_bad_streams() {
+        // k = 0 with a top-k softmax
+        let mut cfg = StackConfig::default().with_stream(
+            StreamSpec::new(ModelKind::BertTiny, 0, SoftmaxKind::Topkima),
+        );
+        assert!(cfg.validate().is_err());
+        // duplicate (family, k) key: bert-base and distilbert share the
+        // "bert" family
+        cfg = StackConfig::default()
+            .with_stream(StreamSpec::new(
+                ModelKind::BertBase, 5, SoftmaxKind::Topkima))
+            .with_stream(StreamSpec::new(
+                ModelKind::DistilBert, 5, SoftmaxKind::Dtopk));
+        assert!(cfg.validate().is_err());
+        // zero shards
+        cfg = StackConfig::default().with_shards(0);
+        assert!(cfg.validate().is_err());
+        // empty bucket list
+        cfg = StackConfig::default().with_stream(
+            StreamSpec::new(ModelKind::BertTiny, 5, SoftmaxKind::Topkima)
+                .with_policy(BatchPolicy {
+                    buckets: vec![],
+                    max_wait_us: 100,
+                    max_queue: 0,
+                }),
+        );
+        assert!(cfg.validate().is_err());
+        // stream k beyond crossbar columns
+        cfg = StackConfig::default().with_stream(StreamSpec::new(
+            ModelKind::BertTiny, 300, SoftmaxKind::Topkima));
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn unknown_fleet_json_field_rejected() {
+        let err = StackConfig::from_json_str(
+            r#"{"fleet": {"shards": 2, "turbo": true}}"#,
+        )
+        .unwrap_err();
+        assert_eq!(err, ConfigError::UnknownField("fleet.turbo".to_string()));
+        let err = StackConfig::from_json_str(
+            r#"{"fleet": {"streams": [{"model": "bert", "qps": 1}]}}"#,
+        )
+        .unwrap_err();
+        assert_eq!(
+            err,
+            ConfigError::UnknownField("fleet.streams[].qps".to_string())
+        );
+    }
+
+    #[test]
+    fn shards_flag_parses() {
+        let cfg =
+            StackConfig::from_args(&args(&["--shards", "4"])).unwrap();
+        assert_eq!(cfg.fleet.shards, 4);
     }
 
     #[test]

@@ -11,8 +11,10 @@
 //!
 //! * any circuit-level softmax macro ([`PipelineBuilder::build_macro`]),
 //! * a system simulation ([`PipelineBuilder::simulate`]), and
-//! * a running serving coordinator
-//!   ([`PipelineBuilder::start_coordinator`]),
+//! * a running serving fleet ([`PipelineBuilder::start_fleet`]: N shard
+//!   event loops over the `fleet` section's streams, each with its own
+//!   batching policy; [`PipelineBuilder::start_coordinator`] is the
+//!   single-stream compatibility wrapper over the same engine),
 //!
 //! so every CLI subcommand, example, and figure bench shares the same
 //! knob set from circuit model to system evaluation.
@@ -34,4 +36,7 @@ pub mod builder;
 pub mod config;
 
 pub use builder::PipelineBuilder;
-pub use config::{ConfigError, ModelKind, ServingConfig, StackConfig};
+pub use config::{
+    BatchPolicy, ConfigError, FleetConfig, ModelKind, ServingConfig,
+    StackConfig, StreamSpec,
+};

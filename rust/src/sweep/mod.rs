@@ -94,8 +94,11 @@ impl SweepGrid {
     }
 }
 
-/// Worker/workload knobs (not part of the result identity: the JSON is
-/// the same for every `threads` value).
+/// Worker/workload knobs. `threads` is not part of the result identity
+/// (the JSON is the same for every value); the shard pair selects a
+/// deterministic grid subset for multi-host runs (per-point seeding by
+/// *global* index makes shard placement irrelevant to the numbers —
+/// `sweep-merge` reassembles the full report).
 #[derive(Clone, Copy, Debug)]
 pub struct SweepOptions {
     /// Worker threads (clamped to ≥ 1).
@@ -104,11 +107,21 @@ pub struct SweepOptions {
     pub q_rows: usize,
     /// Root seed; each point derives its own stream from (seed, index).
     pub seed: u64,
+    /// This process's shard (0-based) of the grid partition.
+    pub shard_index: usize,
+    /// Total shards the grid is partitioned across (≥ 1).
+    pub shard_count: usize,
 }
 
 impl Default for SweepOptions {
     fn default() -> SweepOptions {
-        SweepOptions { threads: 1, q_rows: 8, seed: 0x70D1A }
+        SweepOptions {
+            threads: 1,
+            q_rows: 8,
+            seed: 0x70D1A,
+            shard_index: 0,
+            shard_count: 1,
+        }
     }
 }
 
@@ -135,6 +148,38 @@ pub struct PointResult {
 }
 
 impl PointResult {
+    /// Decode one serialized point (the `sweep-merge` input path).
+    fn from_json(v: &Json) -> Result<PointResult, String> {
+        let num = |key: &str| {
+            v.get(key)
+                .as_f64()
+                .ok_or_else(|| format!("point field '{key}' missing"))
+        };
+        let softmax_key = v
+            .get("softmax")
+            .as_str()
+            .ok_or("point field 'softmax' missing")?;
+        Ok(PointResult {
+            index: num("index")? as usize,
+            k: num("k")? as usize,
+            seq_len: num("seq_len")? as usize,
+            softmax: SoftmaxKind::parse(softmax_key)
+                .ok_or_else(|| format!("unknown softmax '{softmax_key}'"))?,
+            noisy: v
+                .get("noisy")
+                .as_bool()
+                .ok_or("point field 'noisy' missing")?,
+            sys_latency_ns: num("sys_latency_ns")?,
+            sys_energy_pj: num("sys_energy_pj")?,
+            tops: num("tops")?,
+            tops_per_watt: num("tops_per_watt")?,
+            alpha: num("alpha")?,
+            macro_latency_ns: num("macro_latency_ns")?,
+            macro_energy_pj: num("macro_energy_pj")?,
+            prob_checksum: num("prob_checksum")?,
+        })
+    }
+
     fn to_json(&self) -> Json {
         Json::obj(vec![
             ("index", Json::Num(self.index as f64)),
@@ -154,11 +199,18 @@ impl PointResult {
     }
 }
 
-/// A completed sweep, serializable to `BENCH_sweep.json`.
+/// A completed sweep (possibly one shard of a partitioned grid),
+/// serializable to `BENCH_sweep.json`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SweepReport {
     pub seed: u64,
     pub q_rows: usize,
+    /// Total points in the *full* grid (all shards).
+    pub grid_len: usize,
+    /// Which shard of the partition this report holds (0-based).
+    pub shard_index: usize,
+    /// Total shards in the partition (1 = unsharded).
+    pub shard_count: usize,
     pub points: Vec<PointResult>,
 }
 
@@ -168,11 +220,104 @@ impl SweepReport {
             // string, not Num: f64 would corrupt seeds ≥ 2^53
             ("seed", Json::Str(self.seed.to_string())),
             ("q_rows", Json::Num(self.q_rows as f64)),
+            ("grid_len", Json::Num(self.grid_len as f64)),
+            ("shard_index", Json::Num(self.shard_index as f64)),
+            ("shard_count", Json::Num(self.shard_count as f64)),
             (
                 "points",
                 Json::Arr(self.points.iter().map(PointResult::to_json).collect()),
             ),
         ])
+    }
+
+    /// Decode a serialized report (`sweep-merge` input).
+    pub fn from_json(v: &Json) -> Result<SweepReport, String> {
+        let seed = v
+            .get("seed")
+            .as_str()
+            .ok_or("report field 'seed' missing")?
+            .parse::<u64>()
+            .map_err(|e| format!("bad seed: {e}"))?;
+        let num = |key: &str| {
+            v.get(key)
+                .as_usize()
+                .ok_or_else(|| format!("report field '{key}' missing"))
+        };
+        let points = v
+            .get("points")
+            .as_arr()
+            .ok_or("report field 'points' missing")?
+            .iter()
+            .map(PointResult::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(SweepReport {
+            seed,
+            q_rows: num("q_rows")?,
+            grid_len: num("grid_len")?,
+            shard_index: num("shard_index")?,
+            shard_count: num("shard_count")?,
+            points,
+        })
+    }
+
+    pub fn from_json_str(text: &str) -> Result<SweepReport, String> {
+        let v = Json::parse(text).map_err(|e| e.to_string())?;
+        SweepReport::from_json(&v)
+    }
+
+    /// Reassemble per-shard reports into the full grid. Order of the
+    /// inputs is irrelevant; seeds, q_rows, and grid sizes must agree,
+    /// indices must cover 0..grid_len exactly once.
+    pub fn merge(reports: Vec<SweepReport>) -> Result<SweepReport, String> {
+        let first = reports.first().ok_or("no shard reports to merge")?;
+        let (seed, q_rows, grid_len) =
+            (first.seed, first.q_rows, first.grid_len);
+        let mut slots: Vec<Option<PointResult>> = vec![None; grid_len];
+        for r in &reports {
+            if r.seed != seed || r.q_rows != q_rows {
+                return Err(format!(
+                    "shard {} ran a different sweep (seed {} q_rows {} vs \
+                     seed {seed} q_rows {q_rows})",
+                    r.shard_index, r.seed, r.q_rows
+                ));
+            }
+            if r.grid_len != grid_len {
+                return Err(format!(
+                    "shard {} covers a different grid ({} vs {grid_len} \
+                     points)",
+                    r.shard_index, r.grid_len
+                ));
+            }
+            for p in &r.points {
+                if p.index >= grid_len {
+                    return Err(format!(
+                        "point index {} outside grid of {grid_len}",
+                        p.index
+                    ));
+                }
+                if slots[p.index].replace(p.clone()).is_some() {
+                    return Err(format!(
+                        "point {} appears in more than one shard",
+                        p.index
+                    ));
+                }
+            }
+        }
+        let points = slots
+            .into_iter()
+            .enumerate()
+            .map(|(i, slot)| {
+                slot.ok_or(format!("point {i} missing — shard not merged?"))
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(SweepReport {
+            seed,
+            q_rows,
+            grid_len,
+            shard_index: 0,
+            shard_count: 1,
+            points,
+        })
     }
 
     pub fn to_json_string(&self) -> String {
@@ -256,12 +401,33 @@ fn eval_point(
 /// points cost more than ideal topkima ones) and written back into
 /// their index slot, so the report order — and its serialized bytes —
 /// never depends on scheduling.
+///
+/// With `shard_count > 1` only every `shard_count`-th global point
+/// (starting at `shard_index`) is evaluated; the per-point RNG streams
+/// derive from the *global* index, so a sharded run produces the exact
+/// bytes of the matching slice of an unsharded one and
+/// [`SweepReport::merge`] reassembles them losslessly.
 pub fn run_sweep(
     base: &StackConfig,
     grid: &SweepGrid,
     opts: &SweepOptions,
 ) -> Result<SweepReport, ConfigError> {
-    let points = grid.points(base)?;
+    if opts.shard_count == 0 || opts.shard_index >= opts.shard_count {
+        return Err(ConfigError::Invalid {
+            field: "shard".to_string(),
+            reason: format!(
+                "index {} must lie below count {}",
+                opts.shard_index, opts.shard_count
+            ),
+        });
+    }
+    let grid_len = grid.len();
+    let points: Vec<(usize, StackConfig)> = grid
+        .points(base)?
+        .into_iter()
+        .enumerate()
+        .filter(|(i, _)| i % opts.shard_count == opts.shard_index)
+        .collect();
     let n = points.len();
     let threads = opts.threads.clamp(1, n.max(1));
     let cursor = AtomicUsize::new(0);
@@ -274,7 +440,8 @@ pub fn run_sweep(
                 if i >= n {
                     break;
                 }
-                let r = eval_point(&points[i], i, opts);
+                let (global, cfg) = &points[i];
+                let r = eval_point(cfg, *global, opts);
                 slots.lock().expect("sweep slot lock")[i] = Some(r);
             });
         }
@@ -286,7 +453,14 @@ pub fn run_sweep(
         .into_iter()
         .map(|r| r.expect("every grid point evaluated"))
         .collect();
-    Ok(SweepReport { seed: opts.seed, q_rows: opts.q_rows, points })
+    Ok(SweepReport {
+        seed: opts.seed,
+        q_rows: opts.q_rows,
+        grid_len,
+        shard_index: opts.shard_index,
+        shard_count: opts.shard_count,
+        points,
+    })
 }
 
 #[cfg(test)]
@@ -355,6 +529,96 @@ mod tests {
         let v = Json::parse(&text).unwrap();
         assert_eq!(v.get("points").as_arr().unwrap().len(), 2);
         assert_eq!(v.get("points").at(1).get("k").as_usize(), Some(5));
+    }
+
+    #[test]
+    fn sharded_grid_merges_to_the_unsharded_bytes() {
+        let base = StackConfig::default();
+        let grid = SweepGrid {
+            ks: vec![1, 2, 5],
+            seq_lens: vec![64],
+            softmaxes: vec![SoftmaxKind::Topkima],
+            noises: vec![None],
+        };
+        let full = run_sweep(
+            &base,
+            &grid,
+            &SweepOptions { q_rows: 2, ..Default::default() },
+        )
+        .unwrap();
+        let shard = |index| {
+            run_sweep(
+                &base,
+                &grid,
+                &SweepOptions {
+                    q_rows: 2,
+                    shard_index: index,
+                    shard_count: 2,
+                    ..Default::default()
+                },
+            )
+            .unwrap()
+        };
+        let (s0, s1) = (shard(0), shard(1));
+        assert_eq!(s0.points.len(), 2, "indices 0 and 2");
+        assert_eq!(s1.points.len(), 1, "index 1");
+        assert_eq!(s0.points[1].index, 2, "global indices preserved");
+        // merge is order-independent and reproduces the unsharded run
+        let merged = SweepReport::merge(vec![s1, s0]).unwrap();
+        assert_eq!(merged.to_json_string(), full.to_json_string());
+    }
+
+    #[test]
+    fn merge_rejects_gaps_duplicates_and_mismatches() {
+        let base = StackConfig::default();
+        let grid = tiny_grid();
+        let opts = |index, count| SweepOptions {
+            q_rows: 2,
+            shard_index: index,
+            shard_count: count,
+            ..Default::default()
+        };
+        let s0 = run_sweep(&base, &grid, &opts(0, 2)).unwrap();
+        let s1 = run_sweep(&base, &grid, &opts(1, 2)).unwrap();
+        // a gap (missing shard) is rejected
+        assert!(SweepReport::merge(vec![s0.clone()]).is_err());
+        // a duplicate shard is rejected
+        assert!(
+            SweepReport::merge(vec![s0.clone(), s0.clone(), s1.clone()])
+                .is_err()
+        );
+        // a mismatched seed is rejected
+        let mut other = s1.clone();
+        other.seed ^= 1;
+        assert!(SweepReport::merge(vec![s0.clone(), other]).is_err());
+        // the valid pair merges
+        assert!(SweepReport::merge(vec![s0, s1]).is_ok());
+    }
+
+    #[test]
+    fn report_parses_back_from_its_own_json() {
+        let r = run_sweep(
+            &StackConfig::default(),
+            &tiny_grid(),
+            &SweepOptions { q_rows: 2, ..Default::default() },
+        )
+        .unwrap();
+        let back = SweepReport::from_json_str(&r.to_json_string()).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn invalid_shard_options_rejected() {
+        let err = run_sweep(
+            &StackConfig::default(),
+            &tiny_grid(),
+            &SweepOptions {
+                shard_index: 2,
+                shard_count: 2,
+                ..Default::default()
+            },
+        );
+        assert!(err.is_err());
     }
 
     #[test]

@@ -1,0 +1,277 @@
+//! Bench-baseline diffing (`topkima bench-diff`): compare two
+//! `BENCH_*.json` files metric-by-metric and flag regressions beyond a
+//! threshold — the CI step that fails on large perf regressions instead
+//! of only archiving the numbers.
+//!
+//! Two shapes are understood:
+//! * perf benches (`util::bench::write_json`): `results[]` with
+//!   (`name`, `mean_ns`);
+//! * sweep reports (`sweep::SweepReport`): `points[]`, each expanded
+//!   into its latency/energy metrics keyed by global point index.
+
+use super::json::Json;
+
+/// One metric present in both files.
+#[derive(Clone, Debug)]
+pub struct DiffRow {
+    pub name: String,
+    pub base: f64,
+    pub fresh: f64,
+}
+
+impl DiffRow {
+    /// fresh ÷ base (∞ when the baseline is 0 and fresh is not).
+    pub fn ratio(&self) -> f64 {
+        if self.base > 0.0 {
+            self.fresh / self.base
+        } else if self.fresh == 0.0 {
+            1.0
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// Signed change, e.g. +0.12 = 12% slower/larger than baseline.
+    pub fn delta(&self) -> f64 {
+        self.ratio() - 1.0
+    }
+}
+
+/// A full comparison between a baseline and a fresh bench file.
+#[derive(Clone, Debug, Default)]
+pub struct BenchDiff {
+    pub rows: Vec<DiffRow>,
+    /// Metrics only in the baseline (case removed/renamed).
+    pub only_base: Vec<String>,
+    /// Metrics only in the fresh run (new case).
+    pub only_fresh: Vec<String>,
+}
+
+impl BenchDiff {
+    /// Rows whose fresh value regressed beyond `max_regress`
+    /// (e.g. 0.25 = fail when more than 25% above baseline).
+    pub fn regressions(&self, max_regress: f64) -> Vec<&DiffRow> {
+        self.rows
+            .iter()
+            .filter(|r| r.delta() > max_regress)
+            .collect()
+    }
+
+    /// Aligned text table of every compared metric.
+    pub fn table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<44} {:>14} {:>14} {:>8}\n",
+            "metric", "baseline", "fresh", "delta"
+        ));
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{:<44} {:>14.1} {:>14.1} {:>+7.1}%\n",
+                r.name,
+                r.base,
+                r.fresh,
+                100.0 * r.delta()
+            ));
+        }
+        for name in &self.only_fresh {
+            out.push_str(&format!("{name:<44} (new case, no baseline)\n"));
+        }
+        for name in &self.only_base {
+            out.push_str(&format!("{name:<44} (baseline only — removed?)\n"));
+        }
+        out
+    }
+
+    /// Markdown before/after table (EXPERIMENTS.md §Perf). Headers are
+    /// unit-neutral: hotpath metrics are ns/iter, sweep metrics mix
+    /// ns and pJ (the unit is implied by each metric's name).
+    pub fn markdown(&self) -> String {
+        let mut out = String::from(
+            "| case | baseline | current | Δ |\n\
+             |---|---|---|---|\n",
+        );
+        for r in &self.rows {
+            out.push_str(&format!(
+                "| `{}` | {:.0} | {:.0} | {:+.1}% |\n",
+                r.name,
+                r.base,
+                r.fresh,
+                100.0 * r.delta()
+            ));
+        }
+        for name in &self.only_fresh {
+            out.push_str(&format!("| `{name}` | — | (new case) | — |\n"));
+        }
+        out
+    }
+}
+
+/// Markdown table of one run with no baseline (absolute values only).
+pub fn markdown_single(metrics: &[(String, f64)]) -> String {
+    let mut out = String::from("| case | current |\n|---|---|\n");
+    for (name, v) in metrics {
+        out.push_str(&format!("| `{name}` | {v:.0} |\n"));
+    }
+    out
+}
+
+/// Extract comparable (name, value) metric pairs from a bench JSON.
+pub fn metrics_of(doc: &Json) -> Result<Vec<(String, f64)>, String> {
+    if let Some(results) = doc.get("results").as_arr() {
+        return results
+            .iter()
+            .map(|r| {
+                let name = r
+                    .get("name")
+                    .as_str()
+                    .ok_or("result without 'name'")?
+                    .to_string();
+                let mean = r
+                    .get("mean_ns")
+                    .as_f64()
+                    .ok_or("result without 'mean_ns'")?;
+                Ok((name, mean))
+            })
+            .collect();
+    }
+    if let Some(points) = doc.get("points").as_arr() {
+        let mut out = Vec::with_capacity(points.len() * 4);
+        for p in points {
+            // Key by the point's full identity, not its bare index: if
+            // the sweep grid changes, renamed metrics land in
+            // only_base/only_fresh (reported, not gated) instead of
+            // silently comparing two different design points.
+            let ident = format!(
+                "k={} sl={} {} noise={}",
+                p.get("k")
+                    .as_usize()
+                    .ok_or("sweep point without 'k'")?,
+                p.get("seq_len")
+                    .as_usize()
+                    .ok_or("sweep point without 'seq_len'")?,
+                p.get("softmax")
+                    .as_str()
+                    .ok_or("sweep point without 'softmax'")?,
+                p.get("noisy")
+                    .as_bool()
+                    .ok_or("sweep point without 'noisy'")?,
+            );
+            for field in [
+                "sys_latency_ns",
+                "sys_energy_pj",
+                "macro_latency_ns",
+                "macro_energy_pj",
+            ] {
+                let v = p
+                    .get(field)
+                    .as_f64()
+                    .ok_or_else(|| format!("point without '{field}'"))?;
+                out.push((format!("point[{ident}] {field}"), v));
+            }
+        }
+        return Ok(out);
+    }
+    Err("unrecognized bench JSON (no 'results' or 'points')".to_string())
+}
+
+/// Compare two bench documents metric-by-metric.
+pub fn diff(base: &Json, fresh: &Json) -> Result<BenchDiff, String> {
+    let base_metrics = metrics_of(base)?;
+    let fresh_metrics = metrics_of(fresh)?;
+    let base_map: std::collections::BTreeMap<&str, f64> = base_metrics
+        .iter()
+        .map(|(n, v)| (n.as_str(), *v))
+        .collect();
+    let fresh_names: std::collections::BTreeSet<&str> =
+        fresh_metrics.iter().map(|(n, _)| n.as_str()).collect();
+    let mut d = BenchDiff::default();
+    for (name, fresh_v) in &fresh_metrics {
+        match base_map.get(name.as_str()) {
+            Some(&base_v) => d.rows.push(DiffRow {
+                name: name.clone(),
+                base: base_v,
+                fresh: *fresh_v,
+            }),
+            None => d.only_fresh.push(name.clone()),
+        }
+    }
+    for (name, _) in &base_metrics {
+        if !fresh_names.contains(name.as_str()) {
+            d.only_base.push(name.clone());
+        }
+    }
+    Ok(d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn perf_doc(cases: &[(&str, f64)]) -> Json {
+        Json::obj(vec![
+            ("bench", Json::Str("t".into())),
+            (
+                "results",
+                Json::Arr(
+                    cases
+                        .iter()
+                        .map(|(n, v)| {
+                            Json::obj(vec![
+                                ("name", Json::Str(n.to_string())),
+                                ("mean_ns", Json::Num(*v)),
+                                ("std_ns", Json::Num(1.0)),
+                                ("iters", Json::Num(5.0)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    #[test]
+    fn detects_regressions_over_threshold() {
+        let base = perf_doc(&[("a", 100.0), ("b", 100.0), ("gone", 5.0)]);
+        let fresh = perf_doc(&[("a", 110.0), ("b", 140.0), ("new", 9.0)]);
+        let d = diff(&base, &fresh).unwrap();
+        assert_eq!(d.rows.len(), 2);
+        assert_eq!(d.only_base, vec!["gone".to_string()]);
+        assert_eq!(d.only_fresh, vec!["new".to_string()]);
+        let regs = d.regressions(0.25);
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].name, "b");
+        assert!((regs[0].delta() - 0.4).abs() < 1e-12);
+        // a 10% drift passes a 25% gate
+        assert!(d.regressions(0.45).is_empty());
+        assert!(d.table().contains("new case"));
+        assert!(d.markdown().contains("| `b` |"));
+    }
+
+    #[test]
+    fn sweep_points_expand_into_metrics() {
+        let doc = Json::parse(
+            r#"{"seed":"1","q_rows":2,"grid_len":1,"shard_index":0,
+                "shard_count":1,"points":[{"index":0,"k":1,"seq_len":64,
+                "softmax":"topkima","noisy":false,"sys_latency_ns":10.0,
+                "sys_energy_pj":20.0,"tops":1.0,"tops_per_watt":2.0,
+                "alpha":0.3,"macro_latency_ns":5.0,"macro_energy_pj":7.0,
+                "prob_checksum":1.5}]}"#,
+        )
+        .unwrap();
+        let m = metrics_of(&doc).unwrap();
+        assert_eq!(m.len(), 4);
+        assert_eq!(
+            m[0].0,
+            "point[k=1 sl=64 topkima noise=false] sys_latency_ns"
+        );
+        assert_eq!(m[0].1, 10.0);
+        // identical docs diff clean
+        let d = diff(&doc, &doc).unwrap();
+        assert!(d.regressions(0.0).is_empty());
+    }
+
+    #[test]
+    fn unknown_shape_is_an_error() {
+        assert!(metrics_of(&Json::parse(r#"{"x":1}"#).unwrap()).is_err());
+    }
+}

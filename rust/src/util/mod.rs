@@ -3,6 +3,7 @@
 //! proptest, which are unavailable in this build environment).
 
 pub mod bench;
+pub mod benchdiff;
 pub mod check;
 pub mod json;
 pub mod rng;

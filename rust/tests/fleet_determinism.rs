@@ -1,0 +1,183 @@
+//! Fleet determinism: because every stream lives on exactly one shard
+//! and batch formation is per-stream FIFO + bucket fill, the
+//! request→batch assignment of a seeded multi-stream load must be
+//! *identical* for a 1-shard and a 4-shard fleet — sharding relocates
+//! streams, it never reorders them. Also asserts the metrics
+//! aggregation contract: per-stream metrics sum to the aggregate.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+use topkima::coordinator::{
+    Executor, ExecutorFactory, InputData, Metrics, StreamKey,
+};
+use topkima::pipeline::{
+    BatchPolicy, ModelKind, StackConfig, StreamSpec,
+};
+use topkima::softmax::SoftmaxKind;
+use topkima::util::rng::Rng;
+
+/// Per-stream list of executed batches; each batch is the sequence
+/// numbers its requests carried in their payloads.
+type BatchLog = Arc<Mutex<BTreeMap<(String, usize), Vec<Vec<i32>>>>>;
+
+/// Mock executor shared (via the log) by every shard of one fleet.
+struct Recorder(BatchLog);
+
+impl Executor for Recorder {
+    fn execute(
+        &mut self,
+        stream: &StreamKey,
+        inputs: &[Arc<InputData>],
+        _bucket: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        let seqs: Vec<i32> = inputs
+            .iter()
+            .map(|i| match &**i {
+                InputData::I32(v) => v[0],
+                InputData::F32(v) => v[0] as i32,
+            })
+            .collect();
+        self.0
+            .lock()
+            .unwrap()
+            .entry((stream.0.to_string(), stream.1))
+            .or_default()
+            .push(seqs.clone());
+        Ok(seqs.iter().map(|&s| vec![s as f32]).collect())
+    }
+}
+
+/// Three streams with distinct (family, k, softmax): huge deadlines and
+/// bounded buckets make batch formation a pure function of the
+/// per-stream arrival sequence (full buckets + shutdown flush), so the
+/// assignment cannot depend on event-loop timing or shard count.
+fn fleet_config(shards: usize) -> StackConfig {
+    let slow = |buckets: Vec<usize>| BatchPolicy {
+        buckets,
+        max_wait_us: 3_600_000_000, // only full buckets or flush fire
+        max_queue: 0,
+    };
+    StackConfig::default()
+        .with_shards(shards)
+        .with_stream(
+            StreamSpec::new(ModelKind::BertTiny, 5, SoftmaxKind::Topkima)
+                .with_policy(slow(vec![2, 4])),
+        )
+        .with_stream(
+            StreamSpec::new(ModelKind::BertTiny, 10, SoftmaxKind::Dtopk)
+                .with_policy(slow(vec![1, 2, 8])),
+        )
+        .with_stream(
+            StreamSpec::new(ModelKind::VitBase, 3, SoftmaxKind::Conventional)
+                .with_policy(slow(vec![4])),
+        )
+}
+
+/// Run the same seeded interleaved load against an n-shard fleet;
+/// returns (per-stream batch log, fleet metrics).
+fn run_load(
+    shards: usize,
+) -> (
+    BTreeMap<(String, usize), Vec<Vec<i32>>>,
+    topkima::coordinator::FleetMetrics,
+) {
+    let b = fleet_config(shards).build().expect("valid fleet config");
+    let log: BatchLog = Arc::new(Mutex::new(BTreeMap::new()));
+    let factories: Vec<ExecutorFactory> = (0..shards)
+        .map(|_| {
+            let log = log.clone();
+            Box::new(move || {
+                Box::new(Recorder(log)) as Box<dyn Executor>
+            }) as ExecutorFactory
+        })
+        .collect();
+    let mut fleet = b.start_fleet_with(factories);
+    assert_eq!(fleet.shard_count(), shards);
+
+    let streams: [(&str, usize); 3] = [("bert", 5), ("bert", 10), ("vit", 3)];
+    let keys: Vec<Arc<str>> =
+        streams.iter().map(|(f, _)| Arc::from(*f)).collect();
+    let mut seqs = [0i32; 3];
+    let mut rng = Rng::new(0xF1EE7);
+    let mut rxs = Vec::new();
+    for _ in 0..120 {
+        let si = rng.below(3);
+        let seq = seqs[si];
+        seqs[si] += 1;
+        let rx = fleet
+            .submit_shared(
+                keys[si].clone(),
+                streams[si].1,
+                Arc::new(InputData::I32(vec![seq, si as i32])),
+            )
+            .expect("registered stream");
+        rxs.push((seq, rx));
+    }
+    let n = rxs.len();
+    let fm = {
+        // responses are delivered by full buckets during the run and by
+        // the shutdown flush for the tail, so shut down first…
+        let fm = fleet.shutdown();
+        // …then every receiver must already hold its response.
+        for (seq, rx) in rxs {
+            let r = rx.try_recv().expect("zero dropped requests");
+            assert_eq!(r.output, vec![seq as f32]);
+        }
+        fm
+    };
+    assert_eq!(fm.aggregate().completed(), n);
+    assert_eq!(fm.aggregate().errors(), 0);
+    let log = Arc::try_unwrap(log)
+        .expect("all shard handles joined")
+        .into_inner()
+        .unwrap();
+    (log, fm)
+}
+
+#[test]
+fn one_and_four_shard_fleets_form_identical_batches() {
+    let (log1, fm1) = run_load(1);
+    let (log4, fm4) = run_load(4);
+    assert_eq!(
+        log1, log4,
+        "request→batch assignment must not depend on shard count"
+    );
+    // every stream saw traffic and per-stream FIFO held
+    assert_eq!(log1.len(), 3);
+    for batches in log1.values() {
+        let flat: Vec<i32> =
+            batches.iter().flatten().copied().collect();
+        let want: Vec<i32> = (0..flat.len() as i32).collect();
+        assert_eq!(flat, want, "per-stream FIFO violated");
+    }
+    // per-stream completion counts agree across shard counts
+    for (key, m) in &fm1.per_stream {
+        let other = &fm4.per_stream[key];
+        assert_eq!(m.completed(), other.completed());
+        assert_eq!(m.errors(), other.errors());
+    }
+}
+
+#[test]
+fn per_stream_metrics_sum_to_the_aggregate() {
+    let (_, fm) = run_load(4);
+    let agg = fm.aggregate();
+    let completed: usize =
+        fm.per_stream.values().map(Metrics::completed).sum();
+    let errors: u64 = fm.per_stream.values().map(Metrics::errors).sum();
+    let batches: usize =
+        fm.per_stream.values().map(Metrics::batches).sum();
+    let padded: u64 =
+        fm.per_stream.values().map(Metrics::padded_rows).sum();
+    assert_eq!(agg.completed(), completed);
+    assert_eq!(agg.errors(), errors + fm.rejected);
+    assert_eq!(agg.batches(), batches);
+    assert_eq!(agg.padded_rows(), padded);
+    // shard-level aggregates cover the same totals
+    let shard_completed: usize =
+        fm.per_shard.iter().map(Metrics::completed).sum();
+    assert_eq!(shard_completed, completed);
+    assert_eq!(fm.per_shard.len(), 4);
+}

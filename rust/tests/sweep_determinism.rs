@@ -19,7 +19,12 @@ fn grid() -> SweepGrid {
 #[test]
 fn sweep_json_identical_across_thread_counts() {
     let base = StackConfig::default();
-    let opts = |threads| SweepOptions { threads, q_rows: 4, seed: 0xBEE };
+    let opts = |threads| SweepOptions {
+        threads,
+        q_rows: 4,
+        seed: 0xBEE,
+        ..Default::default()
+    };
     let single = run_sweep(&base, &grid(), &opts(1)).expect("1-thread sweep");
     let multi = run_sweep(&base, &grid(), &opts(8)).expect("8-thread sweep");
     assert_eq!(single.points.len(), 16);
@@ -38,7 +43,12 @@ fn sweep_points_vary_with_their_knobs() {
     let r = run_sweep(
         &base,
         &grid(),
-        &SweepOptions { threads: 2, q_rows: 4, seed: 0xBEE },
+        &SweepOptions {
+            threads: 2,
+            q_rows: 4,
+            seed: 0xBEE,
+            ..Default::default()
+        },
     )
     .expect("sweep");
     let find = |k, sl, sm: SoftmaxKind, noisy: bool| {
