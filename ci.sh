@@ -10,14 +10,19 @@
 #   5. smoke: `topkima sweep-hw` on a tiny grid (JSON baseline emitted)
 #   6. smoke: `topkima serve-fleet` (sharded fleet under synthetic load;
 #      BENCH_fleet.json emitted, fails on any dropped request)
-#   7. perf baseline: `cargo bench --bench perf_hotpath` writes
+#   7. smoke: export a tiny eval trace and replay it twice through a
+#      2-shard stealing fleet in deterministic mode — the two BENCH
+#      files must be byte-identical
+#   8. perf baseline: `cargo bench --bench perf_hotpath` writes
 #      BENCH_hotpath.json (machine-readable numbers for EXPERIMENTS.md
 #      §Perf)
-#   8. bench-diff: compare the fresh BENCH_hotpath.json and
-#      BENCH_sweep_smoke.json against baselines/ and FAIL on >25%
-#      regressions (missing baselines are seeded from this run — commit
-#      them to arm the gate)
-#   9. refresh the EXPERIMENTS.md §Perf table between the
+#   9. bench-diff: compare the fresh BENCH_hotpath.json,
+#      BENCH_sweep_smoke.json, and BENCH_fleet_replay.json (the
+#      deterministic replay — reproducible batching metrics, not
+#      wall-clock tails) against baselines/ and FAIL on >25%
+#      regressions (missing baselines are seeded from this run —
+#      commit them to arm the gate)
+#  10. refresh the EXPERIMENTS.md §Perf table between the
 #      PERF_TABLE_BEGIN/END markers from the fresh numbers
 #
 # Exit code reflects the tier-1 gate + smoke steps; fmt/clippy failures
@@ -98,6 +103,31 @@ else
     status=1
 fi
 
+note "smoke: trace export + stealing replay (byte-identical twice)"
+# export the synthetic schedule, replay it through a 2-shard stealing
+# fleet twice in deterministic mode: the two BENCH files must be
+# byte-identical (the serve-fleet --trace replay guarantee). The first
+# replay is kept as BENCH_fleet_replay.json — its batching metrics are
+# exactly reproducible, so THAT file (not the wall-clock live smoke)
+# joins the bench-diff regression gate below.
+trace=/tmp/topkima_ci_trace.jsonl
+if cargo run --release --quiet -- serve-fleet \
+        --duration-ms 120 --seed 11 --steal on \
+        --export-trace "$trace" --out /tmp/topkima_ci_fleet_live.json \
+    && cargo run --release --quiet -- serve-fleet \
+        --trace "$trace" --steal on --deterministic \
+        --out BENCH_fleet_replay.json \
+    && cargo run --release --quiet -- serve-fleet \
+        --trace "$trace" --steal on --deterministic \
+        --out /tmp/topkima_ci_fleet_replay2.json \
+    && cmp -s BENCH_fleet_replay.json \
+              /tmp/topkima_ci_fleet_replay2.json; then
+    echo "ok: trace replay is deterministic (identical BENCH files)"
+else
+    echo "FAIL: trace export/replay smoke (non-deterministic or dropped)"
+    status=1
+fi
+
 note "perf baseline: cargo bench --bench perf_hotpath"
 if cargo bench --bench perf_hotpath && [ -s BENCH_hotpath.json ]; then
     echo "ok: BENCH_hotpath.json written"
@@ -133,9 +163,14 @@ bench_diff() {
     fi
 }
 
+# Fleet metrics gate on the DETERMINISTIC replay (batch count /
+# padding waste — exactly reproducible from the committed trace seed),
+# not on the live smoke's wall-clock tail latencies, which drift far
+# more than 25% on loaded runners with no code change.
 note "bench-diff vs committed baselines (>25% fails)"
 bench_diff BENCH_hotpath.json
 bench_diff BENCH_sweep_smoke.json
+bench_diff BENCH_fleet_replay.json
 
 # -- EXPERIMENTS.md §Perf table: splice the fresh numbers in ----------
 note "EXPERIMENTS.md §Perf table refresh"

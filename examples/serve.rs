@@ -87,7 +87,7 @@ fn main() -> anyhow::Result<()> {
         correct += ok as usize;
     }
     let wall = t0.elapsed().as_secs_f64();
-    let metrics = coord.shutdown();
+    let metrics = coord.shutdown().expect("coordinator shut down cleanly");
 
     println!("\n== serving metrics ==\n{}", metrics.summary());
     println!(

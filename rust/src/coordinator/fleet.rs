@@ -15,15 +15,111 @@
 //! (asserted by `rust/tests/fleet_determinism.rs`).
 
 use std::collections::BTreeMap;
+use std::fmt;
 use std::sync::mpsc;
 use std::sync::Arc;
 
 use super::metrics::Metrics;
 use super::request::{InputData, Request, RequestId, Response};
 use super::router::{RouteError, Router, StreamDef, StreamKey};
-use super::shard::{start_shard, ShardHandle, ShardMsg};
+use super::shard::{
+    start_shard, start_shard_with, ShardHandle, ShardMsg, StealCtx,
+    StealShared,
+};
 
 pub use super::shard::ExecutorFactory;
+
+/// How a donating shard picks the peer it pokes for a stolen batch.
+/// Donations only ever target an *idle* peer (execution backlog 0);
+/// the batch itself lives on a fleet-wide deque, so selection shapes
+/// *who wakes up first* — `LeastLoaded` pokes the minimum-backlog peer
+/// (ties → lowest index, and only when that minimum is 0), while
+/// `RoundRobin` rotates consecutive donations across idle peers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VictimSelect {
+    LeastLoaded,
+    RoundRobin,
+}
+
+impl VictimSelect {
+    /// Stable identifier used by CLI flags and the JSON config.
+    pub fn key(self) -> &'static str {
+        match self {
+            VictimSelect::LeastLoaded => "least-loaded",
+            VictimSelect::RoundRobin => "round-robin",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<VictimSelect> {
+        match s {
+            "least-loaded" => Some(VictimSelect::LeastLoaded),
+            "round-robin" => Some(VictimSelect::RoundRobin),
+            _ => None,
+        }
+    }
+}
+
+/// Batch-granular work-stealing knobs (the `fleet.steal` config
+/// section). Stealing moves only **formed** batches between shards, so
+/// enabling it never changes FIFO batch *formation* (request→batch
+/// composition); batch *completion* order within a stream may still
+/// interleave, since a stolen batch runs concurrently with the owner's
+/// next one — see `super::shard` and DESIGN.md §10 for the mechanism
+/// and the caveat.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StealPolicy {
+    pub enabled: bool,
+    /// Ready batches a shard keeps for itself per round before donating
+    /// the surplus (≥ 1 when enabled, so a donor never idles itself).
+    pub min_backlog: usize,
+    pub victim: VictimSelect,
+}
+
+impl Default for StealPolicy {
+    fn default() -> Self {
+        StealPolicy {
+            enabled: false,
+            min_backlog: 1,
+            victim: VictimSelect::LeastLoaded,
+        }
+    }
+}
+
+/// Per-shard stealing counters. Over a healthy run the fleet-wide sums
+/// balance: every donated batch is executed by exactly one thief (the
+/// shutdown drain backstops unclaimed donations).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StealStats {
+    /// Donated batches this shard executed for its peers.
+    pub stolen: u64,
+    /// Formed batches this shard handed to the steal deque.
+    pub donated: u64,
+}
+
+/// One or more shard threads panicked: the fleet shutdown completed
+/// without panicking the front, and the surviving shards' accounting is
+/// preserved in `partial`.
+#[derive(Debug)]
+pub struct ShardPanic {
+    /// Indices of the shards whose threads panicked.
+    pub shards: Vec<usize>,
+    /// Metrics from the shards that shut down cleanly.
+    pub partial: FleetMetrics,
+}
+
+impl fmt::Display for ShardPanic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "shard(s) {:?} panicked during the run; partial metrics \
+             cover {} completed request(s)",
+            self.shards,
+            self.partial.aggregate().completed(),
+        )
+    }
+}
+
+impl std::error::Error for ShardPanic {}
 
 /// Deterministic stream→shard assignment: FNV-1a over the family bytes
 /// folded with k. Stable across runs and platforms — re-sharding a
@@ -48,13 +144,33 @@ pub struct Fleet {
 
 impl Fleet {
     /// Spawn `factories.len()` shard loops and hash-partition `defs`
-    /// across them. Each factory runs once, inside its shard's thread
-    /// (PJRT handles are not `Send`).
+    /// across them, with stealing disabled. Each factory runs once,
+    /// inside its shard's thread (PJRT handles are not `Send`).
     pub fn start(
         defs: Vec<StreamDef>,
         factories: Vec<ExecutorFactory>,
     ) -> Fleet {
+        Fleet::start_with(defs, factories, StealPolicy::default())
+    }
+
+    /// [`Fleet::start`] with an explicit [`StealPolicy`]. When stealing
+    /// is enabled (and there is more than one shard), every shard holds
+    /// its peers' channel senders for donation pokes — which means the
+    /// channels only disconnect after an explicit [`Fleet::shutdown`],
+    /// so a stealing fleet must always be shut down, never leaked.
+    pub fn start_with(
+        defs: Vec<StreamDef>,
+        factories: Vec<ExecutorFactory>,
+        mut steal: StealPolicy,
+    ) -> Fleet {
         assert!(!factories.is_empty(), "fleet needs at least one shard");
+        // `StackConfig::validate` rejects min_backlog = 0, but library
+        // callers can build a StealPolicy directly; clamp here (where
+        // the policy is consumed) so a donor always keeps at least one
+        // batch instead of idling itself and re-stealing its own work.
+        if steal.enabled {
+            steal.min_backlog = steal.min_backlog.max(1);
+        }
         let n = factories.len();
         let mut routers: Vec<Router> = (0..n).map(|_| Router::new()).collect();
         let mut stream_shard = BTreeMap::new();
@@ -64,11 +180,34 @@ impl Fleet {
             stream_shard.insert(key, shard);
             routers[shard].register_def(def);
         }
-        let shards = routers
-            .into_iter()
-            .zip(factories)
-            .map(|(router, factory)| start_shard(router, factory))
-            .collect();
+        let shards = if steal.enabled && n > 1 {
+            let shared = Arc::new(StealShared::new(n));
+            let channels: Vec<_> =
+                (0..n).map(|_| mpsc::channel::<ShardMsg>()).collect();
+            let peers: Vec<mpsc::Sender<ShardMsg>> =
+                channels.iter().map(|(tx, _)| tx.clone()).collect();
+            routers
+                .into_iter()
+                .zip(factories)
+                .zip(channels)
+                .enumerate()
+                .map(|(i, ((router, factory), (tx, rx)))| {
+                    let ctx = StealCtx::enabled(
+                        i,
+                        steal,
+                        shared.clone(),
+                        peers.clone(),
+                    );
+                    start_shard_with(router, factory, tx, rx, ctx)
+                })
+                .collect()
+        } else {
+            routers
+                .into_iter()
+                .zip(factories)
+                .map(|(router, factory)| start_shard(router, factory))
+                .collect()
+        };
         Fleet { shards, stream_shard, next_id: 0, front_rejected: 0 }
     }
 
@@ -117,36 +256,65 @@ impl Fleet {
         self.next_id += 1;
         let (tx, rx) = mpsc::channel();
         let req = Request::shared(id, key.0, k, input);
-        self.shards[shard]
-            .tx
-            .send(ShardMsg::Submit(req, tx))
-            .expect("shard thread alive");
+        // A dead shard (panicked executor, early exit) is a typed
+        // rejection, not a front panic — `shutdown()` will additionally
+        // report it as a `ShardPanic`.
+        if let Err(mpsc::SendError(ShardMsg::Submit(req, _))) =
+            self.shards[shard].tx.send(ShardMsg::Submit(req, tx))
+        {
+            self.front_rejected += 1;
+            return Err(RouteError::ShardDown((req.model, req.k)));
+        }
         Ok(rx)
     }
 
     /// Drain every shard, join the threads, and return the full
-    /// per-stream / per-shard accounting.
-    pub fn shutdown(mut self) -> FleetMetrics {
+    /// per-stream / per-shard accounting. A panicked shard thread is
+    /// surfaced as a typed [`ShardPanic`] error (carrying the healthy
+    /// shards' partial metrics) instead of propagating the panic into
+    /// the front — the old `join().expect(..)` took the caller down
+    /// with the shard.
+    pub fn shutdown(mut self) -> Result<FleetMetrics, ShardPanic> {
         // Signal every shard before joining any, so they drain their
         // queues concurrently.
         for shard in &self.shards {
             let _ = shard.tx.send(ShardMsg::Shutdown);
         }
-        let mut per_stream = BTreeMap::new();
+        let mut per_stream: BTreeMap<StreamKey, Metrics> = BTreeMap::new();
         let mut per_shard = Vec::with_capacity(self.shards.len());
+        let mut steal = Vec::with_capacity(self.shards.len());
         let mut rejected = self.front_rejected;
-        for shard in self.shards.drain(..) {
-            let report =
-                shard.handle.join().expect("shard thread panicked");
-            let mut shard_agg = Metrics::default();
-            for (key, m) in report.streams {
-                shard_agg.merge_from(&m);
-                per_stream.insert(key, m);
+        let mut panicked = Vec::new();
+        for (i, shard) in self.shards.drain(..).enumerate() {
+            match shard.handle.join() {
+                Ok(report) => {
+                    let mut shard_agg = Metrics::default();
+                    for (key, m) in report.streams {
+                        shard_agg.merge_from(&m);
+                        // merge, don't insert: with stealing, a stream's
+                        // batches may have executed on several shards
+                        per_stream.entry(key).or_default().merge_from(&m);
+                    }
+                    rejected += report.rejected;
+                    per_shard.push(shard_agg);
+                    steal.push(StealStats {
+                        stolen: report.stolen,
+                        donated: report.donated,
+                    });
+                }
+                Err(_) => {
+                    panicked.push(i);
+                    per_shard.push(Metrics::default());
+                    steal.push(StealStats::default());
+                }
             }
-            rejected += report.rejected;
-            per_shard.push(shard_agg);
         }
-        FleetMetrics { per_stream, per_shard, rejected }
+        let metrics = FleetMetrics { per_stream, per_shard, steal, rejected };
+        if panicked.is_empty() {
+            Ok(metrics)
+        } else {
+            Err(ShardPanic { shards: panicked, partial: metrics })
+        }
     }
 }
 
@@ -156,13 +324,18 @@ impl Fleet {
 /// returned).
 #[derive(Debug)]
 pub struct FleetMetrics {
-    /// Per-stream metrics; each stream lives on exactly one shard.
+    /// Per-stream metrics, merged across every shard that executed the
+    /// stream's batches (the owner, plus thieves when stealing is on).
     pub per_stream: BTreeMap<StreamKey, Metrics>,
-    /// Per-shard aggregates (merge of that shard's streams), indexed by
-    /// shard.
+    /// Per-shard aggregates (merge of the streams that shard
+    /// *executed*), indexed by shard — with stealing on this reflects
+    /// true execution placement, not stream ownership.
     pub per_shard: Vec<Metrics>,
-    /// Requests rejected with [`RouteError::UnknownStream`] before
-    /// reaching any stream.
+    /// Per-shard work-stealing counters, indexed by shard.
+    pub steal: Vec<StealStats>,
+    /// Requests rejected before reaching any stream's batcher:
+    /// [`RouteError::UnknownStream`] at the front or on a shard, plus
+    /// [`RouteError::ShardDown`] submissions to a dead shard.
     pub rejected: u64,
 }
 
@@ -176,6 +349,16 @@ impl FleetMetrics {
         }
         m.add_errors(self.rejected);
         m
+    }
+
+    /// Fleet-wide count of batches executed away from their owner.
+    pub fn stolen_total(&self) -> u64 {
+        self.steal.iter().map(|s| s.stolen).sum()
+    }
+
+    /// Fleet-wide count of batches handed to the steal deque.
+    pub fn donated_total(&self) -> u64 {
+        self.steal.iter().map(|s| s.donated).sum()
     }
 
     /// Multi-line human summary: one line per stream, one per shard,
@@ -196,10 +379,14 @@ impl FleetMetrics {
             ));
         }
         for (i, m) in self.per_shard.iter().enumerate() {
+            let s = self.steal.get(i).copied().unwrap_or_default();
             out.push_str(&format!(
-                "shard {i}: {} done over {} batches\n",
+                "shard {i}: {} done over {} batches \
+                 (stole {}, donated {})\n",
                 m.completed(),
                 m.batches(),
+                s.stolen,
+                s.donated,
             ));
         }
         out.push_str(&format!(
@@ -310,9 +497,12 @@ mod tests {
             let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
             assert_eq!(r.output, vec![first, k]);
         }
-        let fm = fleet.shutdown();
+        let fm = fleet.shutdown().expect("healthy shutdown");
         assert_eq!(fm.per_stream.len(), 3);
         assert_eq!(fm.per_shard.len(), 3);
+        assert_eq!(fm.steal.len(), 3);
+        assert_eq!(fm.stolen_total(), 0, "stealing is off by default");
+        assert_eq!(fm.donated_total(), 0);
         for m in fm.per_stream.values() {
             assert_eq!(m.completed(), 4);
         }
@@ -335,7 +525,7 @@ mod tests {
             err,
             RouteError::UnknownStream((Arc::from("bert"), 42))
         );
-        let fm = fleet.shutdown();
+        let fm = fleet.shutdown().expect("healthy shutdown");
         assert_eq!(fm.rejected, 1);
         assert_eq!(fm.aggregate().errors(), 1);
     }
@@ -358,12 +548,81 @@ mod tests {
         let rx3 = fleet.submit("bert", 5, InputData::I32(vec![3])).unwrap();
         // give the shard loop time to admit 1, 2 and reject 3
         assert!(rx3.recv_timeout(Duration::from_secs(5)).is_err());
-        let fm = fleet.shutdown();
+        let fm = fleet.shutdown().expect("healthy shutdown");
         let key: StreamKey = (Arc::from("bert"), 5);
         let m = &fm.per_stream[&key];
         assert_eq!(m.completed(), 2, "bounded queue still served 2");
         assert_eq!(m.errors(), 1, "admission rejection counted on stream");
         assert!(rx1.try_recv().is_ok());
         assert!(rx2.try_recv().is_ok());
+    }
+
+    /// Mock that panics mid-batch (a poisoned shard).
+    struct Panicker;
+
+    impl Executor for Panicker {
+        fn execute(
+            &mut self,
+            _stream: &StreamKey,
+            _inputs: &[Arc<InputData>],
+            _bucket: usize,
+        ) -> Result<Vec<Vec<f32>>> {
+            panic!("injected executor panic")
+        }
+    }
+
+    #[test]
+    fn poisoned_shard_is_a_typed_shutdown_error_not_a_panic() {
+        // plant the panicking executor on whichever shard owns bert/k=5
+        let poisoned = shard_of(&(Arc::from("bert"), 5), 3);
+        let mut factories = factories(3);
+        factories[poisoned] =
+            Box::new(|| Box::new(Panicker) as Box<dyn Executor>);
+        let mut fleet = Fleet::start(defs(), factories);
+        let rx = fleet.submit("bert", 5, InputData::I32(vec![1, 0])).unwrap();
+        // the poisoned shard never answers; don't hang on it
+        assert!(rx.recv_timeout(Duration::from_secs(5)).is_err());
+        // the shard thread is gone now: submitting to it is a typed
+        // rejection, not a front panic. (The reply senders drop a
+        // moment before the shard's receiver during unwind, so poll
+        // briefly instead of racing that window.)
+        let mut err2 = None;
+        for _ in 0..200 {
+            match fleet.submit("bert", 5, InputData::I32(vec![2, 0])) {
+                Err(e) => {
+                    err2 = Some(e);
+                    break;
+                }
+                Ok(_) => std::thread::sleep(Duration::from_millis(5)),
+            }
+        }
+        let err2 = err2.expect("dead shard eventually rejects submissions");
+        assert!(
+            matches!(err2, RouteError::ShardDown(_)),
+            "dead shard surfaces as ShardDown: {err2:?}"
+        );
+        let err = fleet.shutdown().expect_err("poisoned shard surfaces");
+        assert!(
+            err.shards.contains(&poisoned),
+            "panicked shard index reported: {:?}",
+            err.shards
+        );
+        // the surviving shards' accounting is preserved structurally
+        assert_eq!(err.partial.per_shard.len(), 3);
+        assert_eq!(err.partial.steal.len(), 3);
+        let msg = err.to_string();
+        assert!(msg.contains("panicked"), "display names the failure: {msg}");
+    }
+
+    #[test]
+    fn victim_select_keys_roundtrip() {
+        for v in [VictimSelect::LeastLoaded, VictimSelect::RoundRobin] {
+            assert_eq!(VictimSelect::parse(v.key()), Some(v));
+        }
+        assert_eq!(VictimSelect::parse("nope"), None);
+        let p = StealPolicy::default();
+        assert!(!p.enabled);
+        assert_eq!(p.min_backlog, 1);
+        assert_eq!(p.victim, VictimSelect::LeastLoaded);
     }
 }

@@ -1,32 +1,38 @@
 //! Serving metrics: latency distribution, throughput, batch occupancy.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::util::stats;
 
 /// Lock-free-enough metrics (single writer — the coordinator thread).
-#[derive(Debug)]
+///
+/// The throughput window is **event-frozen**: it spans the first to the
+/// last recorded batch/error, not construction-to-call-time. The old
+/// design stamped `started` at shard spawn and measured `elapsed()`
+/// when `summary()` ran, so the reported rate depended on *when* the
+/// summary was printed, kept decaying after `Fleet::shutdown`, and was
+/// skewed low for streams that saw their first request late.
+#[derive(Debug, Default)]
 pub struct Metrics {
-    started: Instant,
+    /// First recorded event (batch completion or error); `None` until
+    /// any traffic lands.
+    first_event: Option<Instant>,
+    /// Last recorded event — finalized implicitly: once traffic stops
+    /// the window stops growing, whatever time `summary()` runs.
+    last_event: Option<Instant>,
     latencies_us: Vec<f64>,
     batch_sizes: Vec<usize>,
     padded_rows: u64,
     errors: u64,
 }
 
-impl Default for Metrics {
-    fn default() -> Self {
-        Metrics {
-            started: Instant::now(),
-            latencies_us: Vec::new(),
-            batch_sizes: Vec::new(),
-            padded_rows: 0,
-            errors: 0,
-        }
-    }
-}
-
 impl Metrics {
+    fn touch(&mut self) {
+        let now = Instant::now();
+        self.first_event.get_or_insert(now);
+        self.last_event = Some(self.last_event.map_or(now, |t| t.max(now)));
+    }
+
     /// Record one completed batch.
     pub fn record_batch(
         &mut self,
@@ -34,30 +40,50 @@ impl Metrics {
         bucket: usize,
         padding: usize,
     ) {
+        self.touch();
         self.latencies_us.extend_from_slice(latencies_us);
         self.batch_sizes.push(bucket);
         self.padded_rows += padding as u64;
     }
 
     pub fn record_error(&mut self) {
+        self.touch();
         self.errors += 1;
     }
 
     /// Count `n` errors at once (fleet-front rejections folded into an
-    /// aggregate).
+    /// aggregate). Deliberately does NOT stamp the event window: this
+    /// runs at aggregation time, not event time, and must never re-open
+    /// a frozen window (`record_error` is the event-time path).
     pub fn add_errors(&mut self, n: u64) {
         self.errors += n;
     }
 
     /// Fold another metrics record into this one (fleet aggregation:
-    /// per-stream → per-shard → fleet). Keeps the earliest start so
-    /// throughput spans the whole window.
+    /// per-stream → per-shard → fleet). The merged window is the union
+    /// of both frozen windows (earliest first event → latest last
+    /// event), so merging never re-opens a window against wall time.
     pub fn merge_from(&mut self, other: &Metrics) {
-        self.started = self.started.min(other.started);
+        self.first_event = match (self.first_event, other.first_event) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        self.last_event = match (self.last_event, other.last_event) {
+            (Some(a), Some(b)) => Some(a.max(b)),
+            (a, b) => a.or(b),
+        };
         self.latencies_us.extend_from_slice(&other.latencies_us);
         self.batch_sizes.extend_from_slice(&other.batch_sizes);
         self.padded_rows += other.padded_rows;
         self.errors += other.errors;
+    }
+
+    /// The frozen first-to-last-event window (zero with < 2 events).
+    pub fn window(&self) -> Duration {
+        match (self.first_event, self.last_event) {
+            (Some(a), Some(b)) => b.saturating_duration_since(a),
+            _ => Duration::ZERO,
+        }
     }
 
     /// Executed padding rows (fleet padding-waste accounting).
@@ -78,13 +104,17 @@ impl Metrics {
         self.errors
     }
 
-    /// Requests per second since start.
+    /// Requests per second over the frozen event window. Stable no
+    /// matter when it is read: a `summary()` printed a minute after
+    /// shutdown reports the same rate as one printed immediately.
+    /// Zero until the window has nonzero width (fewer than two distinct
+    /// event instants cannot define a rate).
     pub fn throughput_rps(&self) -> f64 {
-        let elapsed = self.started.elapsed().as_secs_f64();
-        if elapsed == 0.0 {
+        let window = self.window().as_secs_f64();
+        if window == 0.0 {
             return 0.0;
         }
-        self.completed() as f64 / elapsed
+        self.completed() as f64 / window
     }
 
     pub fn latency_percentile_us(&self, p: f64) -> f64 {
@@ -184,5 +214,60 @@ mod tests {
         assert_eq!(m.completed(), 0);
         assert_eq!(m.mean_batch_size(), 0.0);
         assert_eq!(m.padding_fraction(), 0.0);
+        assert_eq!(m.throughput_rps(), 0.0);
+        assert_eq!(m.window(), std::time::Duration::ZERO);
+    }
+
+    #[test]
+    fn throughput_window_freezes_at_last_event() {
+        // regression: the old `started.elapsed()` made throughput a
+        // function of *when the summary was printed* — it kept decaying
+        // after the last request completed
+        let mut m = Metrics::default();
+        m.record_batch(&[100.0], 1, 0);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        m.record_batch(&[100.0, 100.0], 2, 0);
+        let first = m.throughput_rps();
+        assert!(first > 0.0, "two spaced events define a rate");
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(
+            m.throughput_rps(),
+            first,
+            "window must not keep growing after the last event"
+        );
+    }
+
+    #[test]
+    fn throughput_window_starts_at_first_event_not_construction() {
+        // regression: per-stream Metrics::default() used to stamp the
+        // start at shard spawn, skewing every stream that saw its first
+        // request late
+        let m = Metrics::default();
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        let mut m = m;
+        m.record_batch(&[50.0], 1, 0);
+        // a single event instant has zero width: no rate yet, instead
+        // of a tiny rate over the idle spawn-to-traffic gap
+        assert!(m.window() < std::time::Duration::from_millis(10));
+        assert_eq!(m.throughput_rps(), 0.0);
+    }
+
+    #[test]
+    fn merged_window_is_the_union_of_frozen_windows() {
+        let mut a = Metrics::default();
+        a.record_batch(&[10.0], 1, 0);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let mut b = Metrics::default();
+        b.record_batch(&[10.0], 1, 0);
+        let (wa, wb) = (a.window(), b.window());
+        let mut all = Metrics::default();
+        all.merge_from(&a);
+        all.merge_from(&b);
+        assert!(all.window() >= wa.max(wb));
+        assert!(all.window() >= std::time::Duration::from_millis(5));
+        assert!(all.throughput_rps() > 0.0);
+        let frozen = all.throughput_rps();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert_eq!(all.throughput_rps(), frozen, "merge must not re-open");
     }
 }

@@ -10,6 +10,12 @@
 //! records per-request latency per stream plus per-shard and aggregate
 //! throughput.
 //!
+//! Under skewed stream mixes the fleet can move **formed batches**
+//! between shards (batch-granular work-stealing, [`StealPolicy`]) —
+//! execution placement changes, batch composition never does. Real
+//! workloads replay through the versioned JSONL [`trace`] format
+//! (`topkima serve-fleet --trace`).
+//!
 //! The executor is a trait so the full fleet logic is testable without
 //! artifacts (mock executors, and [`SyntheticExecutor`] for hw-cost
 //! load generation) and the property tests can drive invariants: FIFO
@@ -25,12 +31,17 @@ pub mod router;
 pub mod server;
 mod shard;
 pub mod synthetic;
+pub mod trace;
 
 pub use batcher::{BatchPlan, Batcher, BatcherConfig};
-pub use fleet::{shard_of, ExecutorFactory, Fleet, FleetMetrics};
+pub use fleet::{
+    shard_of, ExecutorFactory, Fleet, FleetMetrics, ShardPanic, StealPolicy,
+    StealStats, VictimSelect,
+};
 pub use metrics::Metrics;
 pub use request::{InputData, Request, RequestId, Response};
 pub use router::{RouteError, Router, StreamDef, StreamKey};
 pub use pjrt_exec::PjrtExecutor;
 pub use server::{Coordinator, Executor};
 pub use synthetic::SyntheticExecutor;
+pub use trace::{Trace, TraceError, TraceEvent, TraceStream};

@@ -30,6 +30,10 @@ pub enum RouteError {
         stream: StreamKey,
         depth: usize,
     },
+    /// The stream's shard thread is gone (it panicked or already shut
+    /// down), so the submission could not be delivered. Returned by the
+    /// fleet front — `Router::route` itself never produces it.
+    ShardDown(StreamKey),
 }
 
 impl RouteError {
@@ -38,6 +42,7 @@ impl RouteError {
         match self {
             RouteError::UnknownStream(key) => key,
             RouteError::QueueFull { stream, .. } => stream,
+            RouteError::ShardDown(key) => key,
         }
     }
 }
@@ -51,6 +56,11 @@ impl fmt::Display for RouteError {
             RouteError::QueueFull { stream: (family, k), depth } => write!(
                 f,
                 "stream {family}/k={k} queue full ({depth} requests)"
+            ),
+            RouteError::ShardDown((family, k)) => write!(
+                f,
+                "stream {family}/k={k}: its shard thread is no longer \
+                 running"
             ),
         }
     }

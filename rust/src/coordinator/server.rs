@@ -2,10 +2,12 @@
 //!
 //! [`Coordinator`] used to own the whole event loop; the loop now lives
 //! in [`super::shard`] and the multi-loop front in [`super::fleet`].
-//! This wrapper keeps every existing call site compiling unchanged
-//! (`Coordinator::start(router, factory)` → `submit` → `shutdown() ->
-//! Metrics`) while routing all of it through the same code path the
-//! fleet engine uses — there is exactly one serving implementation.
+//! This wrapper keeps the legacy call shape
+//! (`Coordinator::start(router, factory)` → `submit` → `shutdown()`,
+//! now returning `Result<Metrics, ShardPanic>` so a poisoned shard is
+//! an error rather than a propagated panic) while routing all of it
+//! through the same code path the fleet engine uses — there is exactly
+//! one serving implementation.
 //!
 //! §Perf notes (inherited by every shard loop): the loop sleeps until
 //! the oldest queued request's batching deadline (or `IDLE_WAIT` when
@@ -20,7 +22,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use super::fleet::Fleet;
+use super::fleet::{Fleet, ShardPanic};
 use super::metrics::Metrics;
 use super::request::{InputData, Response};
 use super::router::{RouteError, Router, StreamKey};
@@ -118,8 +120,11 @@ impl Coordinator {
     }
 
     /// Drain queues, stop the shard thread, return aggregate metrics.
-    pub fn shutdown(self) -> Metrics {
-        self.fleet.shutdown().aggregate()
+    /// A panicked shard thread comes back as a typed [`ShardPanic`]
+    /// (with the partial accounting inside) instead of re-panicking the
+    /// caller.
+    pub fn shutdown(self) -> Result<Metrics, ShardPanic> {
+        self.fleet.shutdown().map(|fm| fm.aggregate())
     }
 }
 
@@ -168,7 +173,7 @@ mod tests {
         assert_eq!(r1.output, vec![7.0, 5.0]);
         assert_eq!(r2.output, vec![9.0, 5.0]);
         assert!(r1.latency_us >= 0.0);
-        let m = c.shutdown();
+        let m = c.shutdown().expect("healthy shutdown");
         assert_eq!(m.completed(), 2);
     }
 
@@ -182,7 +187,7 @@ mod tests {
         assert_eq!(r.output, vec![3.0, 5.0]);
         // the caller's handle is still live and untouched
         assert_eq!(input.len(), 2);
-        let m = c.shutdown();
+        let m = c.shutdown().expect("healthy shutdown");
         assert_eq!(m.completed(), 1);
     }
 
@@ -196,7 +201,7 @@ mod tests {
             let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
             assert_eq!(r.output[0], i as f32);
         }
-        let m = c.shutdown();
+        let m = c.shutdown().expect("healthy shutdown");
         assert_eq!(m.completed(), 8);
         assert!(m.mean_batch_size() >= 2.0, "batching never engaged");
     }
@@ -206,7 +211,7 @@ mod tests {
         let mut c = Coordinator::start(router(), || Box::new(Echo));
         let rx = c.submit("bert", 42, InputData::I32(vec![1]));
         assert!(rx.recv_timeout(Duration::from_millis(300)).is_err());
-        let m = c.shutdown();
+        let m = c.shutdown().expect("healthy shutdown");
         assert_eq!(m.errors(), 1);
     }
 
@@ -224,7 +229,7 @@ mod tests {
             c.try_submit("bert", 5, InputData::I32(vec![4, 0])).unwrap();
         let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(r.output, vec![4.0, 5.0]);
-        let m = c.shutdown();
+        let m = c.shutdown().expect("healthy shutdown");
         assert_eq!(m.completed(), 1);
         assert_eq!(m.errors(), 1);
     }
@@ -238,7 +243,7 @@ mod tests {
         let rxs: Vec<_> = (0..5)
             .map(|i| c.submit("bert", 5, InputData::I32(vec![i, 0])))
             .collect();
-        let m = c.shutdown();
+        let m = c.shutdown().expect("healthy shutdown");
         assert_eq!(m.completed(), 5);
         for rx in rxs {
             assert!(rx.try_recv().is_ok());
@@ -264,8 +269,44 @@ mod tests {
         let mut c = Coordinator::start(router(), || Box::new(Boom));
         let rx = c.submit("bert", 5, InputData::I32(vec![1, 0]));
         assert!(rx.recv_timeout(Duration::from_secs(2)).is_err());
-        let m = c.shutdown();
+        let m = c.shutdown().expect("healthy shutdown");
         assert_eq!(m.errors(), 1);
         assert_eq!(m.completed(), 0);
+    }
+
+    /// Mock that drops the last sample's output (a buggy device path).
+    struct ShortOutput;
+
+    impl Executor for ShortOutput {
+        fn execute(
+            &mut self,
+            _stream: &StreamKey,
+            inputs: &[Arc<InputData>],
+            _bucket: usize,
+        ) -> Result<Vec<Vec<f32>>> {
+            Ok(inputs.iter().skip(1).map(|_| vec![1.0]).collect())
+        }
+    }
+
+    #[test]
+    fn short_executor_output_is_a_batch_error_not_a_hang() {
+        // regression: run_batch zipped requests with outputs, so an
+        // executor returning fewer outputs than requests silently
+        // dropped the tail — those waiters leaked until the caller's
+        // full recv timeout, with no error recorded
+        let mut c = Coordinator::start(router(), || Box::new(ShortOutput));
+        let rx1 = c.submit("bert", 5, InputData::I32(vec![1, 0]));
+        let rx2 = c.submit("bert", 5, InputData::I32(vec![2, 0]));
+        let t0 = std::time::Instant::now();
+        // both fail fast: senders dropped when the batch is rejected
+        assert!(rx1.recv_timeout(Duration::from_secs(5)).is_err());
+        assert!(rx2.recv_timeout(Duration::from_secs(5)).is_err());
+        assert!(
+            t0.elapsed() < Duration::from_secs(4),
+            "mismatch must fail the batch, not leak waiters to timeout"
+        );
+        let m = c.shutdown().expect("healthy shutdown");
+        assert_eq!(m.completed(), 0, "no request may report success");
+        assert_eq!(m.errors(), 2, "every request in the batch errored");
     }
 }

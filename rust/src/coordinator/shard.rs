@@ -11,23 +11,48 @@
 //! are themselves multi-threaded, so one dispatch thread per shard
 //! keeps per-stream ordering simple without starving the CPU; shard
 //! parallelism comes from running N of these loops side by side.
+//!
+//! ## Work-stealing (batch-granular)
+//!
+//! Under a skewed stream mix one shard can saturate while its peers
+//! idle. When the fleet's [`StealPolicy`] is enabled, a shard that
+//! forms more ready batches in one round than `min_backlog` donates the
+//! surplus — **whole formed [`BatchPlan`]s, never individual
+//! requests** — to a fleet-wide deque ([`StealShared`]) and pokes an
+//! idle peer. Batch *formation* stays entirely on the owning shard's
+//! per-stream FIFO queues, so request→batch composition is byte-
+//! identical whether stealing is on or off and for any shard count
+//! (the `fleet_determinism` guarantee); stealing only relocates the
+//! *execution* of already-formed batches. Each donated batch carries
+//! its reply senders, and the thief records the batch on its own
+//! metrics entry for that stream — the fleet front merges per-stream
+//! metrics across shards on shutdown, so per-stream totals are exact
+//! while per-shard metrics reflect true execution placement.
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::batcher::BatchPlan;
+use super::fleet::{StealPolicy, VictimSelect};
 use super::metrics::Metrics;
 use super::request::{InputData, Request, RequestId, Response};
 use super::router::{RouteError, Router, StreamKey};
 use super::server::Executor;
 
 /// How long a shard loop may sleep when no request is queued. Purely an
-/// upper bound on shutdown-by-disconnect latency: submits and shutdowns
-/// arrive on the channel and wake `recv_timeout` immediately.
+/// upper bound on shutdown-by-disconnect latency: submits, pokes, and
+/// shutdowns arrive on the channel and wake `recv_timeout` immediately.
 pub(crate) const IDLE_WAIT: Duration = Duration::from_millis(250);
+
+/// Published execution backlog of a shard that has shut down: never a
+/// donation target again (the gauge is advisory — a stale poke is just
+/// a failed send, and the donor's own shutdown drain backstops the
+/// queue).
+const BACKLOG_GONE: usize = usize::MAX;
 
 /// Boxed one-shot executor constructor, invoked *inside* the shard
 /// thread: PJRT executables hold thread-local handles (`Rc` internals
@@ -36,16 +61,166 @@ pub type ExecutorFactory = Box<dyn FnOnce() -> Box<dyn Executor> + Send>;
 
 pub(crate) enum ShardMsg {
     Submit(Request, mpsc::Sender<Response>),
+    /// Advisory wake-up from a donating peer: "the steal deque has
+    /// work". Carries nothing — the batch lives in [`StealShared`].
+    Poke,
     Shutdown,
+}
+
+/// A formed batch relocated for execution: the plan plus the reply
+/// senders of its requests (pulled out of the donor's waiter map).
+pub(crate) struct StolenBatch {
+    pub key: StreamKey,
+    pub plan: BatchPlan,
+    pub waiters: HashMap<RequestId, mpsc::Sender<Response>>,
+}
+
+/// Fleet-wide stealing state shared by every shard: the ready-batch
+/// deque plus per-shard execution-backlog gauges (formed batches
+/// pending execution this round — *not* queued requests, which may be
+/// unbatchable for a long time and say nothing about idleness).
+pub(crate) struct StealShared {
+    queue: Mutex<VecDeque<StolenBatch>>,
+    /// Cached `queue.len()` so peers can test for work without taking
+    /// the lock on every loop iteration.
+    queue_len: AtomicUsize,
+    backlog: Vec<AtomicUsize>,
+}
+
+impl StealShared {
+    pub fn new(shards: usize) -> StealShared {
+        StealShared {
+            queue: Mutex::new(VecDeque::new()),
+            queue_len: AtomicUsize::new(0),
+            backlog: (0..shards).map(|_| AtomicUsize::new(0)).collect(),
+        }
+    }
+
+    fn lock_queue(&self) -> std::sync::MutexGuard<'_, VecDeque<StolenBatch>> {
+        // a panicking executor can never poison this lock (batches are
+        // executed after the guard drops), but stay robust anyway
+        self.queue.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn push(&self, batch: StolenBatch) {
+        let mut q = self.lock_queue();
+        q.push_back(batch);
+        self.queue_len.store(q.len(), Ordering::Release);
+    }
+
+    fn pop(&self) -> Option<StolenBatch> {
+        if self.queue_len.load(Ordering::Acquire) == 0 {
+            return None;
+        }
+        let mut q = self.lock_queue();
+        let batch = q.pop_front();
+        self.queue_len.store(q.len(), Ordering::Release);
+        batch
+    }
+
+    fn pending(&self) -> usize {
+        self.queue_len.load(Ordering::Acquire)
+    }
+}
+
+/// Per-shard stealing context: identity, policy, the shared state, and
+/// peer channels for pokes. `peers` is empty when stealing is disabled,
+/// so the disabled path has no channel cycle between shard threads and
+/// keeps the legacy disconnect-to-exit behavior.
+pub(crate) struct StealCtx {
+    pub index: usize,
+    pub policy: StealPolicy,
+    pub shared: Arc<StealShared>,
+    pub peers: Vec<mpsc::Sender<ShardMsg>>,
+    next_rr: usize,
+}
+
+impl StealCtx {
+    /// A context that never donates nor steals (single-coordinator and
+    /// stealing-off fleets).
+    pub fn disabled(index: usize) -> StealCtx {
+        StealCtx {
+            index,
+            policy: StealPolicy::default(),
+            shared: Arc::new(StealShared::new(1)),
+            peers: Vec::new(),
+            next_rr: 0,
+        }
+    }
+
+    pub fn enabled(
+        index: usize,
+        policy: StealPolicy,
+        shared: Arc<StealShared>,
+        peers: Vec<mpsc::Sender<ShardMsg>>,
+    ) -> StealCtx {
+        StealCtx { index, policy, shared, peers, next_rr: 0 }
+    }
+
+    fn stealing(&self) -> bool {
+        self.policy.enabled && !self.peers.is_empty()
+    }
+
+    fn publish_backlog(&self, batches: usize) {
+        if self.stealing() {
+            self.shared.backlog[self.index].store(batches, Ordering::Release);
+        }
+    }
+
+    /// The peer to poke for a donation. Donations only target *idle*
+    /// peers (published execution backlog 0): parking batches on the
+    /// deque while every shard is busy would starve them, since a
+    /// saturated shard services its own streams before stealing.
+    /// `None` when every peer is busy — the donor then executes the
+    /// batch itself. Selection among candidates follows the policy:
+    /// `LeastLoaded` takes the minimum-backlog peer (ties → lowest
+    /// index) and donates only if that minimum is 0; `RoundRobin`
+    /// rotates across idle peers so consecutive donations wake
+    /// different thieves.
+    fn pick_idle_peer(&mut self) -> Option<usize> {
+        let n = self.peers.len();
+        let me = self.index;
+        let shared = &self.shared;
+        let load = move |i: usize| shared.backlog[i].load(Ordering::Acquire);
+        match self.policy.victim {
+            VictimSelect::LeastLoaded => (0..n)
+                .filter(|&i| i != me)
+                .min_by_key(|&i| load(i))
+                .filter(|&i| load(i) == 0),
+            VictimSelect::RoundRobin => {
+                for step in 0..n {
+                    let i = (self.next_rr + step) % n;
+                    if i != me && load(i) == 0 {
+                        self.next_rr = (i + 1) % n;
+                        return Some(i);
+                    }
+                }
+                None
+            }
+        }
+    }
+
+    fn donate(&self, batch: StolenBatch, thief: usize) {
+        self.shared.push(batch);
+        // advisory: a dead peer just fails the send; the deque (and
+        // every shard's shutdown drain) still owns the batch
+        let _ = self.peers[thief].send(ShardMsg::Poke);
+    }
 }
 
 /// Final accounting a shard thread returns on join.
 pub(crate) struct ShardReport {
-    /// Metrics per stream owned by this shard (every registered stream
-    /// appears, even with zero traffic).
+    /// Metrics per stream *executed* on this shard: every stream it
+    /// owns (even with zero traffic), plus entries for foreign streams
+    /// whose stolen batches it ran. The fleet front merges these across
+    /// shards into exact per-stream totals.
     pub streams: BTreeMap<StreamKey, Metrics>,
     /// Requests that reached this shard for a stream it does not own.
     pub rejected: u64,
+    /// Donated batches this shard executed for overloaded peers.
+    pub stolen: u64,
+    /// Formed batches this shard handed to the steal deque.
+    pub donated: u64,
 }
 
 pub(crate) struct ShardHandle {
@@ -59,8 +234,26 @@ pub(crate) fn start_shard(
     make_executor: ExecutorFactory,
 ) -> ShardHandle {
     let (tx, rx) = mpsc::channel::<ShardMsg>();
-    let handle =
-        std::thread::spawn(move || shard_loop(router, make_executor, rx));
+    let ctx = StealCtx::disabled(0);
+    let handle = std::thread::spawn(move || {
+        shard_loop(router, make_executor, rx, ctx)
+    });
+    ShardHandle { tx, handle }
+}
+
+/// Spawn one shard event loop with an explicit stealing context and a
+/// pre-built channel (the fleet front creates all channels first so
+/// every shard can hold its peers' senders).
+pub(crate) fn start_shard_with(
+    router: Router,
+    make_executor: ExecutorFactory,
+    tx: mpsc::Sender<ShardMsg>,
+    rx: mpsc::Receiver<ShardMsg>,
+    ctx: StealCtx,
+) -> ShardHandle {
+    let handle = std::thread::spawn(move || {
+        shard_loop(router, make_executor, rx, ctx)
+    });
     ShardHandle { tx, handle }
 }
 
@@ -68,6 +261,7 @@ fn shard_loop(
     mut router: Router,
     make_executor: ExecutorFactory,
     rx: mpsc::Receiver<ShardMsg>,
+    mut ctx: StealCtx,
 ) -> ShardReport {
     let mut executor = make_executor();
     let mut streams: BTreeMap<StreamKey, Metrics> = router
@@ -76,27 +270,55 @@ fn shard_loop(
         .map(|key| (key, Metrics::default()))
         .collect();
     let mut rejected = 0u64;
+    let mut stolen = 0u64;
+    let mut donated = 0u64;
     let mut waiters: HashMap<RequestId, mpsc::Sender<Response>> =
         HashMap::new();
     let mut inputs: Vec<Arc<InputData>> = Vec::new();
+    let finish = |router: &mut Router,
+                  executor: &mut Box<dyn Executor>,
+                  streams: &mut BTreeMap<StreamKey, Metrics>,
+                  waiters: &mut HashMap<RequestId, mpsc::Sender<Response>>,
+                  inputs: &mut Vec<Arc<InputData>>,
+                  ctx: &StealCtx,
+                  stolen: &mut u64| {
+        // never a donation target again; then run everything left:
+        // our own queues, and whatever sits in the steal deque (our
+        // own unclaimed donations included — nothing is ever lost)
+        ctx.publish_backlog(BACKLOG_GONE);
+        flush_all(router, &mut **executor, streams, waiters, inputs);
+        if ctx.stealing() {
+            while let Some(batch) = ctx.shared.pop() {
+                exec_stolen(batch, &mut **executor, streams, inputs);
+                *stolen += 1;
+            }
+        }
+    };
     loop {
         // Sleep until the oldest queued request needs a timeout-based
-        // batch; idle indefinitely (modulo IDLE_WAIT) when no queue
-        // holds work.
-        let wait = router.next_deadline(Instant::now()).unwrap_or(IDLE_WAIT);
+        // batch; skip the sleep entirely while the steal deque holds
+        // work; idle indefinitely (modulo IDLE_WAIT) otherwise.
+        let wait = if ctx.stealing() && ctx.shared.pending() > 0 {
+            Duration::ZERO
+        } else {
+            router.next_deadline(Instant::now()).unwrap_or(IDLE_WAIT)
+        };
         match rx.recv_timeout(wait) {
             Ok(ShardMsg::Submit(req, reply)) => {
                 admit(&mut router, req, reply, &mut streams, &mut rejected,
                       &mut waiters);
             }
+            Ok(ShardMsg::Poke) => {}
             Ok(ShardMsg::Shutdown) => {
-                flush_all(&mut router, &mut *executor, &mut streams,
-                          &mut waiters, &mut inputs);
-                return ShardReport { streams, rejected };
+                finish(&mut router, &mut executor, &mut streams,
+                       &mut waiters, &mut inputs, &ctx, &mut stolen);
+                return ShardReport { streams, rejected, stolen, donated };
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {}
             Err(mpsc::RecvTimeoutError::Disconnected) => {
-                return ShardReport { streams, rejected };
+                finish(&mut router, &mut executor, &mut streams,
+                       &mut waiters, &mut inputs, &ctx, &mut stolen);
+                return ShardReport { streams, rejected, stolen, donated };
             }
         }
         // Drain the whole backlog before forming batches so a burst
@@ -108,18 +330,62 @@ fn shard_loop(
                     admit(&mut router, req, reply, &mut streams,
                           &mut rejected, &mut waiters);
                 }
+                ShardMsg::Poke => {}
                 ShardMsg::Shutdown => {
-                    flush_all(&mut router, &mut *executor, &mut streams,
-                              &mut waiters, &mut inputs);
-                    return ShardReport { streams, rejected };
+                    finish(&mut router, &mut executor, &mut streams,
+                           &mut waiters, &mut inputs, &ctx, &mut stolen);
+                    return ShardReport { streams, rejected, stolen, donated };
                 }
             }
         }
-        for (key, plan) in router.ready_batches(Instant::now()) {
+        let mut ready = router.ready_batches(Instant::now());
+        // Donor: keep `min_backlog` of this round's batches, hand the
+        // surplus to idle peers *in formation order* (so a stream's
+        // donated batches drain the deque oldest-first). Formation
+        // already happened — only the execution site moves, so
+        // composition is steal-invariant.
+        if ctx.stealing() && ready.len() > ctx.policy.min_backlog {
+            let surplus = ready.split_off(ctx.policy.min_backlog);
+            for (key, plan) in surplus {
+                let Some(thief) = ctx.pick_idle_peer() else {
+                    // every peer busy: execute the rest ourselves
+                    ready.push((key, plan));
+                    continue;
+                };
+                let batch_waiters = plan
+                    .requests
+                    .iter()
+                    .filter_map(|r| {
+                        waiters.remove(&r.id).map(|tx| (r.id, tx))
+                    })
+                    .collect();
+                ctx.donate(
+                    StolenBatch { key, plan, waiters: batch_waiters },
+                    thief,
+                );
+                donated += 1;
+            }
+        }
+        ctx.publish_backlog(ready.len());
+        for (key, plan) in ready {
             let metrics =
                 streams.get_mut(&key).expect("batch from registered stream");
             run_batch(&key, plan, &mut *executor, metrics, &mut waiters,
                       &mut inputs);
+        }
+        ctx.publish_backlog(0);
+        // Thief: with no batch of our own due, execute one donated
+        // batch per iteration (the channel is re-drained in between, so
+        // local admissions never starve behind a long steal run).
+        if ctx.stealing()
+            && router
+                .next_deadline(Instant::now())
+                .map_or(true, |d| d > Duration::ZERO)
+        {
+            if let Some(batch) = ctx.shared.pop() {
+                exec_stolen(batch, &mut *executor, &mut streams, &mut inputs);
+                stolen += 1;
+            }
         }
     }
 }
@@ -147,7 +413,8 @@ fn admit(
                 None => *rejected += 1,
             }
         }
-        Err(RouteError::UnknownStream(_)) => *rejected += 1,
+        // UnknownStream; ShardDown is front-side only, never from route()
+        Err(_) => *rejected += 1,
     }
 }
 
@@ -165,6 +432,21 @@ fn flush_all(
     }
 }
 
+/// Execute one donated batch on the thief shard: its reply senders
+/// travel with the plan, and the batch lands on this shard's metrics
+/// entry for the stream (created on demand — the fleet front merges
+/// per-stream entries across shards).
+fn exec_stolen(
+    batch: StolenBatch,
+    executor: &mut dyn Executor,
+    streams: &mut BTreeMap<StreamKey, Metrics>,
+    inputs: &mut Vec<Arc<InputData>>,
+) {
+    let StolenBatch { key, plan, mut waiters } = batch;
+    let metrics = streams.entry(key.clone()).or_default();
+    run_batch(&key, plan, executor, metrics, &mut waiters, inputs);
+}
+
 fn run_batch(
     key: &StreamKey,
     plan: BatchPlan,
@@ -176,7 +458,11 @@ fn run_batch(
     inputs.clear();
     inputs.extend(plan.requests.iter().map(|r| r.input.clone()));
     match executor.execute(key, inputs, plan.bucket) {
-        Ok(outputs) => {
+        // An executor must answer every request it was handed. A short
+        // (or long) output vector is a *batch* error: the old zip
+        // silently skipped trailing requests, leaking their waiters
+        // until the caller's full recv timeout with no error recorded.
+        Ok(outputs) if outputs.len() == plan.requests.len() => {
             let now = Instant::now();
             let mut lats = Vec::with_capacity(plan.requests.len());
             for (req, output) in plan.requests.iter().zip(outputs) {
@@ -194,10 +480,10 @@ fn run_batch(
             }
             metrics.record_batch(&lats, plan.bucket, plan.padding());
         }
-        Err(_) => {
+        Ok(_) | Err(_) => {
             for req in &plan.requests {
                 metrics.record_error();
-                // drop sender → Err on the caller's recv
+                // drop sender → Err on the caller's recv, immediately
                 waiters.remove(&req.id);
             }
         }

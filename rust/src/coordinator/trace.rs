@@ -1,0 +1,418 @@
+//! Versioned JSONL eval traces for the fleet (`serve-fleet --trace`).
+//!
+//! Accelerator serving papers evaluate on *measured* workload traces,
+//! not just synthetic arrivals; this module is the fleet's trace
+//! contract. A trace file is one header line followed by one JSON
+//! object per request, timestamps in µs from the window start,
+//! non-decreasing:
+//!
+//! ```text
+//! {"events":3,"format":"topkima-trace","version":1}
+//! {"family":"bert","input_len":64,"k":5,"t_us":132}
+//! {"family":"vit","input_len":48,"k":2,"t_us":407}
+//! {"family":"bert","input_len":64,"k":5,"t_us":988}
+//! ```
+//!
+//! Traces are self-bootstrapping: [`Trace::poisson`] is the *one*
+//! synthetic schedule generator `topkima serve-fleet` uses, so
+//! `--export-trace` writes exactly the schedule a synthetic run
+//! submitted, and replaying that file reproduces the arrival sequence
+//! through `Fleet::submit_shared`. Parsing follows the repo's JSON
+//! policy: unknown fields, missing fields, version skew, and unsorted
+//! timestamps are rejected loudly rather than guessed at.
+
+use std::fmt;
+use std::path::Path;
+
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+
+/// Format revision this build reads and writes.
+pub const TRACE_VERSION: u64 = 1;
+const TRACE_FORMAT: &str = "topkima-trace";
+
+/// One request arrival: when, for which (family, k) stream, and how
+/// large a payload.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Arrival time, µs from the start of the trace window.
+    pub t_us: u64,
+    /// Artifact family ("bert" | "vit") — with `k` this is the routing
+    /// `StreamKey`.
+    pub family: String,
+    pub k: usize,
+    /// Payload length (tokens for bert-style i32 inputs, floats for
+    /// vit-style f32 inputs).
+    pub input_len: usize,
+}
+
+/// A full arrival schedule, sorted by `t_us`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+}
+
+/// One stream's parameters for the seeded synthetic generator.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceStream {
+    pub family: String,
+    pub k: usize,
+    pub input_len: usize,
+    /// Poisson arrival rate, req/s (≤ 0 generates nothing).
+    pub rate_rps: f64,
+}
+
+/// Typed trace-format errors.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TraceError {
+    /// Filesystem error while loading/saving.
+    Io(String),
+    /// Malformed or incompatible header line.
+    Header(String),
+    /// Malformed event line (1-based line number).
+    Line { line: usize, msg: String },
+}
+
+impl fmt::Display for TraceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TraceError::Io(msg) => write!(f, "trace i/o: {msg}"),
+            TraceError::Header(msg) => write!(f, "trace header: {msg}"),
+            TraceError::Line { line, msg } => {
+                write!(f, "trace line {line}: {msg}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TraceError {}
+
+impl Trace {
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Timestamp of the last event (0 for an empty trace).
+    pub fn duration_us(&self) -> u64 {
+        self.events.last().map_or(0, |e| e.t_us)
+    }
+
+    /// Seeded per-stream Poisson arrivals over `duration_ms`,
+    /// interleaved in timestamp order. Deterministic: stream `si` draws
+    /// from `Rng::new(seed ^ (si+1)·φ64)`, so the schedule is a pure
+    /// function of (streams, seed, duration) — the property every
+    /// `BENCH_fleet.json` reproduction relies on.
+    pub fn poisson(
+        streams: &[TraceStream],
+        seed: u64,
+        duration_ms: u64,
+    ) -> Trace {
+        let horizon_us = duration_ms as f64 * 1000.0;
+        let mut tagged: Vec<(u64, usize)> = Vec::new();
+        for (si, s) in streams.iter().enumerate() {
+            if s.rate_rps <= 0.0 {
+                continue;
+            }
+            let mut rng = Rng::new(
+                seed ^ (si as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            );
+            let mut t = 0.0f64;
+            loop {
+                let u = rng.f64();
+                t += -(1.0 - u).max(1e-12).ln() * 1e6 / s.rate_rps;
+                if t >= horizon_us {
+                    break;
+                }
+                tagged.push((t as u64, si));
+            }
+        }
+        tagged.sort_unstable();
+        Trace {
+            events: tagged
+                .into_iter()
+                .map(|(t_us, si)| {
+                    let s = &streams[si];
+                    TraceEvent {
+                        t_us,
+                        family: s.family.clone(),
+                        k: s.k,
+                        input_len: s.input_len,
+                    }
+                })
+                .collect(),
+        }
+    }
+
+    /// Serialize to JSONL (header line + one object per event).
+    pub fn to_jsonl(&self) -> String {
+        let mut out = json::to_string(&Json::obj(vec![
+            ("format", Json::Str(TRACE_FORMAT.to_string())),
+            ("version", Json::Num(TRACE_VERSION as f64)),
+            ("events", Json::Num(self.events.len() as f64)),
+        ]));
+        out.push('\n');
+        for e in &self.events {
+            out.push_str(&json::to_string(&Json::obj(vec![
+                ("t_us", Json::Num(e.t_us as f64)),
+                ("family", Json::Str(e.family.clone())),
+                ("k", Json::Num(e.k as f64)),
+                ("input_len", Json::Num(e.input_len as f64)),
+            ])));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Parse a JSONL trace; the inverse of [`Trace::to_jsonl`].
+    pub fn from_jsonl(text: &str) -> Result<Trace, TraceError> {
+        let mut lines = text
+            .lines()
+            .enumerate()
+            .filter(|(_, l)| !l.trim().is_empty());
+        let (_, header) = lines
+            .next()
+            .ok_or_else(|| TraceError::Header("empty trace".to_string()))?;
+        let h = Json::parse(header)
+            .map_err(|e| TraceError::Header(e.to_string()))?;
+        if h.get("format").as_str() != Some(TRACE_FORMAT) {
+            return Err(TraceError::Header(format!(
+                "first line must declare \"format\":\"{TRACE_FORMAT}\""
+            )));
+        }
+        let version = h.get("version").as_f64().unwrap_or(0.0) as u64;
+        if version != TRACE_VERSION {
+            return Err(TraceError::Header(format!(
+                "unsupported version {version} (this build reads \
+                 {TRACE_VERSION})"
+            )));
+        }
+        let declared = h.get("events").as_usize();
+        let mut events = Vec::new();
+        let mut prev_t = 0u64;
+        for (i, line) in lines {
+            let lineno = i + 1; // 1-based, counting skipped blanks
+            let bad = |msg: String| TraceError::Line { line: lineno, msg };
+            let v = Json::parse(line).map_err(|e| bad(e.to_string()))?;
+            let obj = v
+                .as_obj()
+                .ok_or_else(|| bad("must be an object".to_string()))?;
+            let (mut t_us, mut family, mut k, mut input_len) =
+                (None, None, None, None);
+            for (key, value) in obj {
+                match key.as_str() {
+                    "t_us" => t_us = Some(field_u64(value, "t_us", lineno)?),
+                    "family" => {
+                        family = Some(
+                            value
+                                .as_str()
+                                .ok_or_else(|| {
+                                    bad("family must be a string".to_string())
+                                })?
+                                .to_string(),
+                        )
+                    }
+                    "k" => {
+                        k = Some(field_u64(value, "k", lineno)? as usize)
+                    }
+                    "input_len" => {
+                        input_len =
+                            Some(field_u64(value, "input_len", lineno)?
+                                as usize)
+                    }
+                    other => {
+                        return Err(bad(format!("unknown field '{other}'")))
+                    }
+                }
+            }
+            let (Some(t_us), Some(family), Some(k), Some(input_len)) =
+                (t_us, family, k, input_len)
+            else {
+                return Err(bad(
+                    "needs t_us, family, k, input_len".to_string(),
+                ));
+            };
+            if input_len == 0 {
+                return Err(bad("input_len must be ≥ 1".to_string()));
+            }
+            if t_us < prev_t {
+                return Err(bad(format!(
+                    "timestamps must be non-decreasing ({t_us} < {prev_t})"
+                )));
+            }
+            prev_t = t_us;
+            events.push(TraceEvent { t_us, family, k, input_len });
+        }
+        if let Some(n) = declared {
+            if n != events.len() {
+                return Err(TraceError::Header(format!(
+                    "header declares {n} event(s), file has {}",
+                    events.len()
+                )));
+            }
+        }
+        Ok(Trace { events })
+    }
+
+    /// Write the trace to `path`.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), TraceError> {
+        std::fs::write(path.as_ref(), self.to_jsonl()).map_err(|e| {
+            TraceError::Io(format!("{}: {e}", path.as_ref().display()))
+        })
+    }
+
+    /// Load a trace file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Trace, TraceError> {
+        let text = std::fs::read_to_string(path.as_ref()).map_err(|e| {
+            TraceError::Io(format!("{}: {e}", path.as_ref().display()))
+        })?;
+        Trace::from_jsonl(&text)
+    }
+}
+
+fn field_u64(v: &Json, name: &str, line: usize) -> Result<u64, TraceError> {
+    match v.as_f64() {
+        Some(n) if n >= 0.0 && n.fract() == 0.0 => Ok(n as u64),
+        _ => Err(TraceError::Line {
+            line,
+            msg: format!("{name} must be a non-negative integer"),
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn streams() -> Vec<TraceStream> {
+        vec![
+            TraceStream {
+                family: "bert".to_string(),
+                k: 5,
+                input_len: 64,
+                rate_rps: 900.0,
+            },
+            TraceStream {
+                family: "vit".to_string(),
+                k: 2,
+                input_len: 48,
+                rate_rps: 250.0,
+            },
+        ]
+    }
+
+    #[test]
+    fn poisson_is_seeded_sorted_and_mixed() {
+        let a = Trace::poisson(&streams(), 7, 50);
+        let b = Trace::poisson(&streams(), 7, 50);
+        assert_eq!(a, b, "same seed, same schedule");
+        assert_ne!(
+            a,
+            Trace::poisson(&streams(), 8, 50),
+            "different seed, different schedule"
+        );
+        assert!(!a.is_empty());
+        assert!(a.events.windows(2).all(|w| w[0].t_us <= w[1].t_us));
+        assert!(a.events.iter().any(|e| e.family == "bert"));
+        assert!(a.events.iter().any(|e| e.family == "vit"));
+        assert!(a.duration_us() < 50_000);
+    }
+
+    #[test]
+    fn zero_rate_streams_generate_nothing() {
+        let mut s = streams();
+        s[1].rate_rps = 0.0;
+        let t = Trace::poisson(&s, 7, 50);
+        assert!(t.events.iter().all(|e| e.family == "bert"));
+    }
+
+    #[test]
+    fn jsonl_roundtrip_is_identity() {
+        let t = Trace::poisson(&streams(), 11, 40);
+        let text = t.to_jsonl();
+        assert!(text.starts_with('{'), "header line present");
+        assert_eq!(text.lines().count(), t.len() + 1);
+        let back = Trace::from_jsonl(&text).unwrap();
+        assert_eq!(t, back);
+        // an empty trace still round-trips (header only)
+        let empty = Trace::default();
+        assert_eq!(Trace::from_jsonl(&empty.to_jsonl()).unwrap(), empty);
+    }
+
+    #[test]
+    fn header_violations_are_loud() {
+        assert!(matches!(
+            Trace::from_jsonl(""),
+            Err(TraceError::Header(_))
+        ));
+        assert!(matches!(
+            Trace::from_jsonl("{\"format\":\"other\",\"version\":1}"),
+            Err(TraceError::Header(_))
+        ));
+        let future =
+            "{\"events\":0,\"format\":\"topkima-trace\",\"version\":99}";
+        assert!(matches!(
+            Trace::from_jsonl(future),
+            Err(TraceError::Header(_))
+        ));
+        // declared event count must match the body
+        let short = "{\"events\":2,\"format\":\"topkima-trace\",\
+                     \"version\":1}\n\
+                     {\"family\":\"bert\",\"input_len\":4,\"k\":5,\
+                     \"t_us\":1}\n";
+        assert!(matches!(
+            Trace::from_jsonl(short),
+            Err(TraceError::Header(_))
+        ));
+    }
+
+    #[test]
+    fn event_violations_carry_line_numbers() {
+        let head = "{\"events\":1,\"format\":\"topkima-trace\",\
+                    \"version\":1}\n";
+        let unknown = format!(
+            "{head}{{\"family\":\"bert\",\"input_len\":4,\"k\":5,\
+             \"t_us\":1,\"qos\":2}}\n"
+        );
+        assert_eq!(
+            Trace::from_jsonl(&unknown),
+            Err(TraceError::Line {
+                line: 2,
+                msg: "unknown field 'qos'".to_string()
+            })
+        );
+        let missing =
+            format!("{head}{{\"family\":\"bert\",\"k\":5,\"t_us\":1}}\n");
+        assert!(matches!(
+            Trace::from_jsonl(&missing),
+            Err(TraceError::Line { line: 2, .. })
+        ));
+        let unsorted = "{\"events\":2,\"format\":\"topkima-trace\",\
+                        \"version\":1}\n\
+                        {\"family\":\"bert\",\"input_len\":4,\"k\":5,\
+                        \"t_us\":9}\n\
+                        {\"family\":\"bert\",\"input_len\":4,\"k\":5,\
+                        \"t_us\":3}\n";
+        assert!(matches!(
+            Trace::from_jsonl(unsorted),
+            Err(TraceError::Line { line: 3, .. })
+        ));
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("topkima_trace_test");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("t.jsonl");
+        let t = Trace::poisson(&streams(), 3, 30);
+        t.save(&path).unwrap();
+        assert_eq!(Trace::load(&path).unwrap(), t);
+        assert!(matches!(
+            Trace::load(dir.join("missing.jsonl")),
+            Err(TraceError::Io(_))
+        ));
+    }
+}

@@ -15,12 +15,21 @@
 //!   [--limit N]` — re-check Fig 3 on the rust stack: run every exported
 //!   per-k executable over the eval split and print accuracy vs k.
 //! * `serve-fleet [--seed S] [--duration-ms D] [--out FILE]
-//!   [--shards N] [--config fleet.json] [stack flags...]` — start the
-//!   sharded fleet engine over the configured streams (a 3-stream
-//!   2-shard demo fleet by default) and drive it with a seeded
-//!   multi-stream synthetic load (per-stream Poisson arrivals at each
-//!   stream's `rate_rps`); per-stream p50/p99 latency, batch occupancy,
-//!   and padding waste land in `BENCH_fleet.json`.
+//!   [--shards N] [--steal on|off] [--steal-min-backlog N]
+//!   [--steal-victim least-loaded|round-robin] [--trace FILE]
+//!   [--export-trace FILE] [--deterministic] [--config fleet.json]
+//!   [stack flags...]` — start the sharded fleet engine over the
+//!   configured streams (a 3-stream 2-shard demo fleet by default) and
+//!   drive it with a seeded multi-stream synthetic load (per-stream
+//!   Poisson arrivals at each stream's `rate_rps`) or a replayed JSONL
+//!   trace (`--trace`; `--export-trace` writes the schedule actually
+//!   submitted, so traces are self-bootstrapping). `--steal on` lets
+//!   overloaded shards donate formed batches to idle peers;
+//!   `--deterministic` replays with lifted deadlines and emits only
+//!   schedule-determined fields, so the same trace always produces a
+//!   byte-identical `BENCH_fleet.json`. Per-stream p50/p99 latency,
+//!   batch occupancy, padding waste, and per-shard stolen/donated
+//!   counters land in `BENCH_fleet.json`.
 //! * `sweep-hw [--threads N] [--ks 1,2,5,10] [--seq-lens 128,384]
 //!   [--kinds conv,dtopk,topkima] [--noise-points ideal,default]
 //!   [--q-rows N] [--seed S] [--shard-index I --shard-count C]
@@ -162,7 +171,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         }
     }
     let wall = t0.elapsed().as_secs_f64();
-    let metrics = coord.shutdown();
+    let metrics = coord.shutdown().map_err(anyhow::Error::from)?;
     println!("{}", metrics.summary());
     println!(
         "accuracy: {:.3} ({correct}/{n}), wall {:.2}s, {:.1} req/s",
@@ -183,22 +192,33 @@ fn flag_value(args: &[String], i: usize, flag: &str) -> Result<String> {
 }
 
 /// `serve-fleet`: sharded multi-stream fleet under a seeded synthetic
-/// load. Uses the synthetic hw-cost executor (per-stream service time
-/// from the analytic simulator), so it needs no artifacts — it measures
-/// the control plane: batching, deadlines, shard parallelism.
+/// load or a replayed JSONL trace. Uses the synthetic hw-cost executor
+/// (per-stream service time from the analytic simulator), so it needs
+/// no artifacts — it measures the control plane: batching, deadlines,
+/// shard parallelism, work-stealing.
 fn cmd_serve_fleet(args: &[String]) -> Result<()> {
+    use std::collections::HashMap;
     use std::sync::Arc;
     use std::time::Instant;
 
+    use topkima::coordinator::trace::{Trace, TraceStream};
     use topkima::coordinator::{InputData, StreamKey};
     use topkima::pipeline::StreamSpec;
     use topkima::util::json::{self, Json};
-    use topkima::util::rng::Rng;
+
+    // Deterministic replay lifts deadlines and admission bounds so
+    // batch formation is a pure function of per-stream arrival order
+    // (full buckets during the run + shutdown flush) — same policy the
+    // `fleet_determinism` test uses.
+    const DET_WAIT_US: u64 = 3_600_000_000;
 
     // local load-generator flags; the rest are stack flags
     let mut seed: u64 = 7;
     let mut duration_ms: u64 = 400;
     let mut out = "BENCH_fleet.json".to_string();
+    let mut trace_in: Option<String> = None;
+    let mut trace_out: Option<String> = None;
+    let mut deterministic = false;
     let mut rest: Vec<String> = Vec::new();
     let mut i = 0;
     while i < args.len() {
@@ -214,6 +234,18 @@ fn cmd_serve_fleet(args: &[String]) -> Result<()> {
             "--out" => {
                 out = flag_value(args, i, "out")?;
                 i += 2;
+            }
+            "--trace" => {
+                trace_in = Some(flag_value(args, i, "trace")?);
+                i += 2;
+            }
+            "--export-trace" => {
+                trace_out = Some(flag_value(args, i, "export-trace")?);
+                i += 2;
+            }
+            "--deterministic" => {
+                deterministic = true;
+                i += 1;
             }
             _ => {
                 rest.push(args[i].clone());
@@ -239,16 +271,27 @@ fn cmd_serve_fleet(args: &[String]) -> Result<()> {
             StreamSpec::new(ModelKind::VitBase, 2, SoftmaxKind::Topkima)
                 .with_rate(250.0),
         );
-    let cfg = StackConfig::from_args_with(defaults, &rest)?;
+    let mut cfg = StackConfig::from_args_with(defaults, &rest)?;
+    if deterministic {
+        cfg.serving.max_wait_us = DET_WAIT_US;
+        for s in &mut cfg.fleet.streams {
+            s.policy.max_wait_us = DET_WAIT_US;
+            s.policy.max_queue = 0;
+        }
+    }
     let b = cfg.build()?;
     let specs = b.fleet_specs();
     let shards = b.config().fleet.shards;
+    let steal = b.config().fleet.steal;
     println!(
-        "fleet: {} stream(s) over {} shard(s), {} ms seeded load \
-         (seed {seed})",
+        "fleet: {} stream(s) over {} shard(s), stealing {} \
+         (min_backlog {}, victim {}){}",
         specs.len(),
         shards,
-        duration_ms
+        if steal.enabled { "on" } else { "off" },
+        steal.min_backlog,
+        steal.victim.key(),
+        if deterministic { ", deterministic replay" } else { "" },
     );
     for s in &specs {
         println!(
@@ -264,87 +307,139 @@ fn cmd_serve_fleet(args: &[String]) -> Result<()> {
         );
     }
 
-    let mut fleet = b.start_fleet_synthetic()?;
-
-    // Seeded per-stream Poisson arrival schedule over the window.
-    let mut events: Vec<(u64, usize)> = Vec::new(); // (arrival µs, stream)
-    let horizon_us = duration_ms as f64 * 1000.0;
-    for (si, spec) in specs.iter().enumerate() {
-        if spec.rate_rps <= 0.0 {
-            continue;
+    // The arrival schedule: a replayed trace file, or the seeded
+    // Poisson generator (whose schedule `--export-trace` writes out, so
+    // traces are self-bootstrapping).
+    let default_len = |s: &StreamSpec| -> usize {
+        if s.family() == "vit" { 48 } else { 64 }
+    };
+    let trace = match &trace_in {
+        Some(path) => Trace::load(path)
+            .map_err(|e| anyhow::anyhow!("loading {path}: {e}"))?,
+        None => {
+            let streams: Vec<TraceStream> = specs
+                .iter()
+                .map(|s| TraceStream {
+                    family: s.family().to_string(),
+                    k: s.k,
+                    input_len: default_len(s),
+                    rate_rps: s.rate_rps,
+                })
+                .collect();
+            Trace::poisson(&streams, seed, duration_ms)
         }
-        let mut rng = Rng::new(
-            seed ^ (si as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
-        );
-        let mut t = 0.0f64;
-        loop {
-            let u = rng.f64();
-            t += -(1.0 - u).max(1e-12).ln() * 1e6 / spec.rate_rps;
-            if t >= horizon_us {
-                break;
-            }
-            events.push((t as u64, si));
-        }
+    };
+    if let Some(path) = &trace_out {
+        trace
+            .save(path)
+            .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+        println!("exported trace ({} events) → {path}", trace.len());
     }
-    events.sort_unstable();
-    println!("load: {} requests scheduled", events.len());
-
-    // Shared handles per stream: routing is refcount bumps (§Perf).
-    let keys: Vec<Arc<str>> =
-        specs.iter().map(|s| Arc::from(s.family())).collect();
-    let inputs: Vec<Arc<InputData>> = specs
+    // Map every event onto its configured stream (loud failure for a
+    // trace that names a stream this fleet does not serve).
+    let spec_index: HashMap<(&str, usize), usize> = specs
         .iter()
         .enumerate()
-        .map(|(si, s)| {
-            Arc::new(if s.family() == "vit" {
-                InputData::F32(vec![0.5 + si as f32; 48])
-            } else {
-                InputData::I32(vec![si as i32 + 1; 64])
-            })
-        })
+        .map(|(si, s)| ((s.family(), s.k), si))
         .collect();
+    let mut schedule = Vec::with_capacity(trace.len());
+    for ev in &trace.events {
+        let si = spec_index
+            .get(&(ev.family.as_str(), ev.k))
+            .copied()
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "trace stream {}/k={} is not in the fleet config",
+                    ev.family,
+                    ev.k
+                )
+            })?;
+        schedule.push((ev.t_us, si, ev.input_len));
+    }
+    let source = if trace_in.is_some() { "trace" } else { "synthetic" };
+    println!("load: {} requests scheduled ({source})", schedule.len());
+
+    let mut fleet = b.start_fleet_synthetic()?;
+
+    // Shared handles per stream: routing is refcount bumps (§Perf).
+    // Payloads are cached per (stream, input_len) so replaying a trace
+    // with varying lengths still avoids per-request allocation.
+    let keys: Vec<Arc<str>> =
+        specs.iter().map(|s| Arc::from(s.family())).collect();
+    let mut payloads: HashMap<(usize, usize), Arc<InputData>> =
+        HashMap::new();
 
     let t0 = Instant::now();
-    let mut rxs = Vec::with_capacity(events.len());
-    for &(t_us, si) in &events {
-        let target = Duration::from_micros(t_us);
-        let now = t0.elapsed();
-        if target > now {
-            std::thread::sleep(target - now);
+    let mut rxs = Vec::with_capacity(schedule.len());
+    for &(t_us, si, input_len) in &schedule {
+        if !deterministic {
+            let target = Duration::from_micros(t_us);
+            let now = t0.elapsed();
+            if target > now {
+                std::thread::sleep(target - now);
+            }
         }
+        let input = payloads
+            .entry((si, input_len))
+            .or_insert_with(|| {
+                Arc::new(if specs[si].family() == "vit" {
+                    InputData::F32(vec![0.5 + si as f32; input_len])
+                } else {
+                    InputData::I32(vec![si as i32 + 1; input_len])
+                })
+            })
+            .clone();
         let rx = fleet
-            .submit_shared(keys[si].clone(), specs[si].k, inputs[si].clone())
+            .submit_shared(keys[si].clone(), specs[si].k, input)
             .map_err(|e| anyhow::anyhow!("fleet rejected request: {e}"))?;
         rxs.push(rx);
     }
-    let mut dropped = 0usize;
-    for rx in rxs {
-        if rx.recv_timeout(Duration::from_secs(60)).is_err() {
-            dropped += 1;
-        }
-    }
-    let wall = t0.elapsed().as_secs_f64();
     // record the fleet's actual stream placement before shutdown
     let placements: Vec<Option<usize>> = specs
         .iter()
         .enumerate()
         .map(|(si, s)| fleet.shard_for(&(keys[si].clone(), s.k)))
         .collect();
-    let fm = fleet.shutdown();
+    let mut dropped = 0usize;
+    let (wall, fm) = if deterministic {
+        // partial tail buckets only fire at the shutdown flush, so shut
+        // down first — every receiver must already hold its response
+        let fm = fleet.shutdown().map_err(anyhow::Error::from)?;
+        for rx in &rxs {
+            if rx.try_recv().is_err() {
+                dropped += 1;
+            }
+        }
+        (t0.elapsed().as_secs_f64(), fm)
+    } else {
+        for rx in &rxs {
+            if rx.recv_timeout(Duration::from_secs(60)).is_err() {
+                dropped += 1;
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let fm = fleet.shutdown().map_err(anyhow::Error::from)?;
+        (wall, fm)
+    };
     println!("\n{}", fm.summary());
     println!(
-        "{} requests in {wall:.2}s ({dropped} dropped)",
-        events.len()
+        "{} requests in {wall:.2}s ({dropped} dropped, {} batch(es) \
+         stolen)",
+        schedule.len(),
+        fm.stolen_total(),
     );
 
-    // BENCH_fleet.json: per-stream latency distribution + occupancy.
+    // BENCH_fleet.json. In deterministic replay mode only schedule-
+    // determined, order-independent fields are written (no wall-clock
+    // latencies, no steal placement), so the same trace always produces
+    // a byte-identical file.
     let stream_json: Vec<Json> = specs
         .iter()
         .enumerate()
         .map(|(si, s)| {
             let key: StreamKey = (keys[si].clone(), s.k);
             let m = &fm.per_stream[&key];
-            Json::obj(vec![
+            let mut fields = vec![
                 ("family", Json::Str(s.family().to_string())),
                 ("k", Json::Num(s.k as f64)),
                 ("softmax", Json::Str(s.softmax.key().to_string())),
@@ -356,40 +451,79 @@ fn cmd_serve_fleet(args: &[String]) -> Result<()> {
                 ),
                 ("completed", Json::Num(m.completed() as f64)),
                 ("errors", Json::Num(m.errors() as f64)),
-                ("p50_us", Json::Num(m.latency_percentile_us(50.0))),
-                ("p99_us", Json::Num(m.latency_percentile_us(99.0))),
+                ("batches", Json::Num(m.batches() as f64)),
                 ("mean_batch", Json::Num(m.mean_batch_size())),
                 ("padding_fraction", Json::Num(m.padding_fraction())),
-            ])
+            ];
+            if !deterministic {
+                fields.push((
+                    "p50_us",
+                    Json::Num(m.latency_percentile_us(50.0)),
+                ));
+                fields.push((
+                    "p99_us",
+                    Json::Num(m.latency_percentile_us(99.0)),
+                ));
+            }
+            Json::obj(fields)
         })
         .collect();
     let agg = fm.aggregate();
-    let doc = Json::obj(vec![
+    let mut agg_fields = vec![
+        ("completed", Json::Num(agg.completed() as f64)),
+        ("errors", Json::Num(agg.errors() as f64)),
+        ("mean_batch", Json::Num(agg.mean_batch_size())),
+        ("padding_fraction", Json::Num(agg.padding_fraction())),
+    ];
+    if !deterministic {
+        agg_fields.push(("p50_us", Json::Num(agg.latency_percentile_us(50.0))));
+        agg_fields.push(("p99_us", Json::Num(agg.latency_percentile_us(99.0))));
+        agg_fields.push(("throughput_rps", Json::Num(agg.throughput_rps())));
+    }
+    let mut doc_fields = vec![
         ("bench", Json::Str("serve_fleet".to_string())),
+        ("source", Json::Str(source.to_string())),
+        ("deterministic", Json::Bool(deterministic)),
         ("seed", Json::Str(seed.to_string())),
         ("shards", Json::Num(shards as f64)),
-        ("duration_ms", Json::Num(duration_ms as f64)),
-        ("requests", Json::Num(events.len() as f64)),
-        ("dropped", Json::Num(dropped as f64)),
-        ("wall_s", Json::Num(wall)),
-        ("streams", Json::Arr(stream_json)),
         (
-            "aggregate",
-            Json::obj(vec![
-                ("completed", Json::Num(agg.completed() as f64)),
-                ("errors", Json::Num(agg.errors() as f64)),
-                ("p50_us", Json::Num(agg.latency_percentile_us(50.0))),
-                ("p99_us", Json::Num(agg.latency_percentile_us(99.0))),
-                ("mean_batch", Json::Num(agg.mean_batch_size())),
-                ("padding_fraction", Json::Num(agg.padding_fraction())),
-            ]),
+            "duration_ms",
+            Json::Num(if trace_in.is_some() {
+                ((trace.duration_us() + 999) / 1000) as f64
+            } else {
+                duration_ms as f64
+            }),
         ),
-    ]);
+        ("requests", Json::Num(schedule.len() as f64)),
+        ("dropped", Json::Num(dropped as f64)),
+        ("streams", Json::Arr(stream_json)),
+        ("aggregate", Json::obj(agg_fields)),
+    ];
+    if !deterministic {
+        doc_fields.push(("wall_s", Json::Num(wall)));
+        doc_fields.push((
+            "steal",
+            Json::Arr(
+                fm.steal
+                    .iter()
+                    .enumerate()
+                    .map(|(i, s)| {
+                        Json::obj(vec![
+                            ("shard", Json::Num(i as f64)),
+                            ("stolen", Json::Num(s.stolen as f64)),
+                            ("donated", Json::Num(s.donated as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ));
+    }
+    let doc = Json::obj(doc_fields);
     std::fs::write(&out, json::to_string(&doc))
         .map_err(|e| anyhow::anyhow!("writing {out}: {e}"))?;
     println!("wrote {out}");
     if dropped > 0 {
-        bail!("{dropped} requests dropped under the synthetic load");
+        bail!("{dropped} requests dropped under the {source} load");
     }
     Ok(())
 }
@@ -416,9 +550,11 @@ fn prediction_correct(
 }
 
 fn argmax(xs: &[f32]) -> usize {
+    // total_cmp: a NaN logit from a misbehaving executor must not
+    // panic the serving CLI mid-replay
     xs.iter()
         .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .max_by(|a, b| a.1.total_cmp(b.1))
         .map(|(i, _)| i)
         .unwrap_or(0)
 }

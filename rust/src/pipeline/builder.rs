@@ -215,9 +215,13 @@ impl PipelineBuilder {
 
     /// Start the fleet with caller-supplied executors, one factory per
     /// shard (mock executors in tests; each factory runs inside its
-    /// shard's thread).
+    /// shard's thread). The config's `fleet.steal` policy applies.
     pub fn start_fleet_with(&self, factories: Vec<ExecutorFactory>) -> Fleet {
-        Fleet::start(self.stream_defs(), factories)
+        Fleet::start_with(
+            self.stream_defs(),
+            factories,
+            self.cfg.fleet.steal,
+        )
     }
 
     /// Start the configured fleet (`fleet.shards` shard loops): PJRT
@@ -450,7 +454,7 @@ mod tests {
             .unwrap();
         assert_eq!(r1.output, vec![5.0, 5.0]);
         assert_eq!(r2.output, vec![2.0, 3.0]);
-        let fm = fleet.shutdown();
+        let fm = fleet.shutdown().expect("healthy shutdown");
         assert_eq!(fm.aggregate().completed(), 2);
     }
 

@@ -5,6 +5,7 @@
 use std::fmt;
 use std::path::Path;
 
+use crate::coordinator::{StealPolicy, VictimSelect};
 use crate::crossbar::{Crossbar, Tech};
 use crate::ima::NoiseModel;
 use crate::model::TransformerConfig;
@@ -183,19 +184,29 @@ impl StreamSpec {
     }
 }
 
-/// The fleet section of the stack: shard count + stream list. An empty
-/// stream list means "one stream derived from the top-level knobs" —
-/// the single-stream compatibility path `start_coordinator` uses.
+/// The fleet section of the stack: shard count + stream list + the
+/// batch-granular work-stealing policy. An empty stream list means
+/// "one stream derived from the top-level knobs" — the single-stream
+/// compatibility path `start_coordinator` uses.
 #[derive(Clone, Debug, PartialEq)]
 pub struct FleetConfig {
     /// Shard event loops; streams are hash-partitioned across them.
     pub shards: usize,
     pub streams: Vec<StreamSpec>,
+    /// Batch-granular work-stealing between shards (off by default).
+    /// Stealing relocates *formed* batches only, so enabling it never
+    /// changes request→batch composition; within a stream, completion
+    /// order of neighboring batches may interleave (DESIGN.md §10).
+    pub steal: StealPolicy,
 }
 
 impl Default for FleetConfig {
     fn default() -> Self {
-        FleetConfig { shards: 1, streams: Vec::new() }
+        FleetConfig {
+            shards: 1,
+            streams: Vec::new(),
+            steal: StealPolicy::default(),
+        }
     }
 }
 
@@ -346,6 +357,11 @@ impl StackConfig {
         self
     }
 
+    pub fn with_steal(mut self, steal: StealPolicy) -> Self {
+        self.fleet.steal = steal;
+        self
+    }
+
     /// Validate and hand the config to the builder.
     pub fn build(self) -> Result<PipelineBuilder, ConfigError> {
         PipelineBuilder::new(self)
@@ -433,6 +449,13 @@ impl StackConfig {
     fn validate_fleet(&self) -> Result<(), ConfigError> {
         if self.fleet.shards == 0 {
             return Err(invalid("fleet.shards", "must be ≥ 1"));
+        }
+        if self.fleet.steal.enabled && self.fleet.steal.min_backlog == 0 {
+            return Err(invalid(
+                "fleet.steal.min_backlog",
+                "must be ≥ 1 when stealing is enabled (a donor keeping \
+                 zero batches would idle itself and thrash the deque)",
+            ));
         }
         let mut keys = std::collections::BTreeSet::new();
         for (i, s) in self.fleet.streams.iter().enumerate() {
@@ -523,6 +546,27 @@ impl StackConfig {
                 "fleet",
                 Json::obj(vec![
                     ("shards", Json::Num(self.fleet.shards as f64)),
+                    (
+                        "steal",
+                        Json::obj(vec![
+                            (
+                                "enabled",
+                                Json::Bool(self.fleet.steal.enabled),
+                            ),
+                            (
+                                "min_backlog",
+                                Json::Num(
+                                    self.fleet.steal.min_backlog as f64,
+                                ),
+                            ),
+                            (
+                                "victim",
+                                Json::Str(
+                                    self.fleet.steal.victim.key().to_string(),
+                                ),
+                            ),
+                        ]),
+                    ),
                     (
                         "streams",
                         Json::Arr(
@@ -736,6 +780,27 @@ impl StackConfig {
                 "shards" => {
                     cfg.fleet.shards = parse_usize("shards", &val)?
                 }
+                "steal" => {
+                    cfg.fleet.steal.enabled = match val.as_str() {
+                        "on" | "true" => true,
+                        "off" | "false" => false,
+                        _ => return Err(bad_flag("steal", &val, "on|off")),
+                    }
+                }
+                "steal-min-backlog" => {
+                    cfg.fleet.steal.min_backlog =
+                        parse_usize("steal-min-backlog", &val)?
+                }
+                "steal-victim" => {
+                    cfg.fleet.steal.victim = VictimSelect::parse(&val)
+                        .ok_or_else(|| {
+                            bad_flag(
+                                "steal-victim",
+                                &val,
+                                "least-loaded|round-robin",
+                            )
+                        })?
+                }
                 other => {
                     return Err(ConfigError::UnknownFlag(format!("--{other}")))
                 }
@@ -903,6 +968,7 @@ fn fleet_from(v: &Json) -> Result<FleetConfig, ConfigError> {
     for (key, value) in obj {
         match key.as_str() {
             "shards" => fleet.shards = json_usize(value, "fleet.shards")?,
+            "steal" => fleet.steal = steal_from(value)?,
             "streams" => {
                 let arr = value.as_arr().ok_or_else(|| {
                     invalid("fleet.streams", "must be an array")
@@ -920,6 +986,42 @@ fn fleet_from(v: &Json) -> Result<FleetConfig, ConfigError> {
         }
     }
     Ok(fleet)
+}
+
+fn steal_from(v: &Json) -> Result<StealPolicy, ConfigError> {
+    let obj = v
+        .as_obj()
+        .ok_or_else(|| invalid("fleet.steal", "must be an object"))?;
+    let mut p = StealPolicy::default();
+    for (key, value) in obj {
+        match key.as_str() {
+            "enabled" => {
+                p.enabled = value.as_bool().ok_or_else(|| {
+                    invalid("fleet.steal.enabled", "must be a boolean")
+                })?
+            }
+            "min_backlog" => {
+                p.min_backlog = json_usize(value, "fleet.steal.min_backlog")?
+            }
+            "victim" => {
+                let s = json_str(value, "fleet.steal.victim")?;
+                p.victim = VictimSelect::parse(s).ok_or_else(|| {
+                    invalid(
+                        "fleet.steal.victim",
+                        format!(
+                            "'{s}' unknown (least-loaded | round-robin)"
+                        ),
+                    )
+                })?
+            }
+            other => {
+                return Err(ConfigError::UnknownField(format!(
+                    "fleet.steal.{other}"
+                )))
+            }
+        }
+    }
+    Ok(p)
 }
 
 fn stream_from(v: &Json) -> Result<StreamSpec, ConfigError> {
@@ -1243,6 +1345,81 @@ mod tests {
         let cfg =
             StackConfig::from_args(&args(&["--shards", "4"])).unwrap();
         assert_eq!(cfg.fleet.shards, 4);
+    }
+
+    #[test]
+    fn steal_policy_json_roundtrip_and_default() {
+        // default (disabled) round-trips
+        let cfg = StackConfig::default();
+        assert!(!cfg.fleet.steal.enabled);
+        let back = StackConfig::from_json_str(&cfg.to_json_string()).unwrap();
+        assert_eq!(back.fleet.steal, StealPolicy::default());
+        // an enabled, fully-specified policy round-trips
+        let cfg = three_stream_config().with_steal(StealPolicy {
+            enabled: true,
+            min_backlog: 3,
+            victim: VictimSelect::RoundRobin,
+        });
+        cfg.validate().unwrap();
+        let back = StackConfig::from_json_str(&cfg.to_json_string()).unwrap();
+        assert_eq!(cfg, back);
+        assert!(back.fleet.steal.enabled);
+        assert_eq!(back.fleet.steal.min_backlog, 3);
+        assert_eq!(back.fleet.steal.victim, VictimSelect::RoundRobin);
+        // absent steal section keeps the default
+        let cfg =
+            StackConfig::from_json_str(r#"{"fleet": {"shards": 2}}"#)
+                .unwrap();
+        assert_eq!(cfg.fleet.steal, StealPolicy::default());
+    }
+
+    #[test]
+    fn steal_policy_validation_and_unknown_fields() {
+        let cfg = StackConfig::default().with_steal(StealPolicy {
+            enabled: true,
+            min_backlog: 0,
+            victim: VictimSelect::LeastLoaded,
+        });
+        assert!(cfg.validate().is_err(), "enabled stealing needs backlog ≥ 1");
+        // disabled stealing may carry min_backlog 0 (it is inert)
+        let cfg = StackConfig::default().with_steal(StealPolicy {
+            enabled: false,
+            min_backlog: 0,
+            victim: VictimSelect::LeastLoaded,
+        });
+        assert!(cfg.validate().is_ok());
+        let err = StackConfig::from_json_str(
+            r#"{"fleet": {"steal": {"enabled": true, "turbo": 1}}}"#,
+        )
+        .unwrap_err();
+        assert_eq!(
+            err,
+            ConfigError::UnknownField("fleet.steal.turbo".to_string())
+        );
+        let err = StackConfig::from_json_str(
+            r#"{"fleet": {"steal": {"victim": "chaos"}}}"#,
+        )
+        .unwrap_err();
+        assert!(matches!(err, ConfigError::Invalid { .. }));
+    }
+
+    #[test]
+    fn steal_flags_parse() {
+        let cfg = StackConfig::from_args(&args(&[
+            "--steal", "on",
+            "--steal-min-backlog", "2",
+            "--steal-victim", "round-robin",
+        ]))
+        .unwrap();
+        assert!(cfg.fleet.steal.enabled);
+        assert_eq!(cfg.fleet.steal.min_backlog, 2);
+        assert_eq!(cfg.fleet.steal.victim, VictimSelect::RoundRobin);
+        let cfg = StackConfig::from_args(&args(&["--steal", "off"])).unwrap();
+        assert!(!cfg.fleet.steal.enabled);
+        assert!(StackConfig::from_args(&args(&["--steal", "maybe"])).is_err());
+        assert!(
+            StackConfig::from_args(&args(&["--steal-victim", "x"])).is_err()
+        );
     }
 
     #[test]

@@ -40,3 +40,6 @@ pub use config::{
     BatchPolicy, ConfigError, FleetConfig, ModelKind, ServingConfig,
     StackConfig, StreamSpec,
 };
+// the fleet's runtime stealing types are part of the config surface
+// (`FleetConfig.steal`), so re-export them here too
+pub use crate::coordinator::{StealPolicy, VictimSelect};

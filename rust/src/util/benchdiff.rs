@@ -3,11 +3,18 @@
 //! threshold — the CI step that fails on large perf regressions instead
 //! of only archiving the numbers.
 //!
-//! Two shapes are understood:
+//! Three shapes are understood:
 //! * perf benches (`util::bench::write_json`): `results[]` with
 //!   (`name`, `mean_ns`);
 //! * sweep reports (`sweep::SweepReport`): `points[]`, each expanded
-//!   into its latency/energy metrics keyed by global point index.
+//!   into its latency/energy metrics keyed by global point index;
+//! * fleet benches (`topkima serve-fleet`): `streams[]` keyed by
+//!   (family, k) — deterministic replays expand into batch count +
+//!   padding fraction (exactly reproducible, the CI-gated pair), live
+//!   runs into per-stream/aggregate p50/p99 latency (manual
+//!   comparisons). All chosen metrics are lower-is-better, matching
+//!   the regression direction; higher-is-better occupancy metrics are
+//!   deliberately excluded.
 
 use super::json::Json;
 
@@ -133,6 +140,53 @@ pub fn metrics_of(doc: &Json) -> Result<Vec<(String, f64)>, String> {
                 Ok((name, mean))
             })
             .collect();
+    }
+    if doc.get("bench").as_str() == Some("serve_fleet") {
+        let streams = doc
+            .get("streams")
+            .as_arr()
+            .ok_or("serve_fleet bench without 'streams'")?;
+        // Deterministic replays gate on batching efficiency (batch
+        // count and padding waste — both lower-is-better and exactly
+        // reproducible from the trace, so the 25% band only ever trips
+        // on a real batching change). Live runs expose wall-clock
+        // p50/p99 instead — useful for manual comparisons, too noisy
+        // for short smoke runs to gate CI on.
+        let deterministic =
+            doc.get("deterministic").as_bool().unwrap_or(false);
+        let fields: &[&str] = if deterministic {
+            &["batches", "padding_fraction"]
+        } else {
+            &["p50_us", "p99_us"]
+        };
+        let mut out = Vec::with_capacity(streams.len() * 2 + 2);
+        for s in streams {
+            let ident = format!(
+                "{}/k={}",
+                s.get("family")
+                    .as_str()
+                    .ok_or("fleet stream without 'family'")?,
+                s.get("k").as_usize().ok_or("fleet stream without 'k'")?,
+            );
+            for field in fields {
+                if let Some(v) = s.get(field).as_f64() {
+                    out.push((format!("stream[{ident}] {field}"), v));
+                }
+            }
+        }
+        if !deterministic {
+            for field in fields {
+                if let Some(v) = doc.get("aggregate").get(field).as_f64() {
+                    out.push((format!("aggregate {field}"), v));
+                }
+            }
+        }
+        if out.is_empty() {
+            return Err(
+                "serve_fleet bench carries no comparable metrics".to_string()
+            );
+        }
+        return Ok(out);
     }
     if let Some(points) = doc.get("points").as_arr() {
         let mut out = Vec::with_capacity(points.len() * 4);
@@ -273,5 +327,48 @@ mod tests {
     #[test]
     fn unknown_shape_is_an_error() {
         assert!(metrics_of(&Json::parse(r#"{"x":1}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn fleet_streams_expand_into_latency_metrics() {
+        let doc = Json::parse(
+            r#"{"bench":"serve_fleet","seed":"7","shards":2,
+                "requests":100,"dropped":0,
+                "streams":[{"family":"bert","k":5,"softmax":"topkima",
+                "rate_rps":900,"shard":0,"completed":50,"errors":0,
+                "batches":10,"mean_batch":4.0,"padding_fraction":0.1,
+                "p50_us":900.0,"p99_us":2100.0}],
+                "aggregate":{"completed":50,"errors":0,"mean_batch":4.0,
+                "padding_fraction":0.1,"p50_us":900.0,"p99_us":2100.0,
+                "throughput_rps":1000.0}}"#,
+        )
+        .unwrap();
+        let m = metrics_of(&doc).unwrap();
+        assert_eq!(m.len(), 4);
+        assert_eq!(m[0].0, "stream[bert/k=5] p50_us");
+        assert_eq!(m[0].1, 900.0);
+        assert_eq!(m[3].0, "aggregate p99_us");
+        let d = diff(&doc, &doc).unwrap();
+        assert!(d.regressions(0.0).is_empty());
+        // a deterministic-replay doc gates on batching efficiency, not
+        // wall-clock latency (the reproducible CI-safe metrics)
+        let det = Json::parse(
+            r#"{"bench":"serve_fleet","deterministic":true,
+                "streams":[{"family":"bert","k":5,"completed":50,
+                "batches":10,"padding_fraction":0.125,
+                "mean_batch":4.0}],
+                "aggregate":{"completed":50,"mean_batch":4.0}}"#,
+        )
+        .unwrap();
+        let m = metrics_of(&det).unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[0].0, "stream[bert/k=5] batches");
+        assert_eq!(m[1].0, "stream[bert/k=5] padding_fraction");
+        // a doc with neither shape of comparable metric is an error
+        let empty = Json::parse(
+            r#"{"bench":"serve_fleet","streams":[],"aggregate":{}}"#,
+        )
+        .unwrap();
+        assert!(metrics_of(&empty).is_err());
     }
 }

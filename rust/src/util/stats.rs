@@ -19,12 +19,17 @@ pub fn std_dev(xs: &[f64]) -> f64 {
 }
 
 /// Percentile by linear interpolation on the sorted copy, p in [0, 100].
+///
+/// Sorts with `f64::total_cmp`, so a stray NaN (e.g. a corrupted
+/// latency sample) sorts to the high end instead of panicking the
+/// caller's thread — serving metrics run on shard event loops, where a
+/// panic would poison the whole fleet shutdown.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -99,6 +104,18 @@ mod tests {
         assert!((percentile(&xs, 50.0) - 50.5).abs() < 1e-9);
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 100.0);
+    }
+
+    #[test]
+    fn percentile_tolerates_nan_samples() {
+        // regression: partial_cmp(..).unwrap() panicked on NaN, taking
+        // the shard thread (and then the fleet shutdown join) with it
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        let p50 = percentile(&xs, 50.0);
+        assert!(p50.is_finite(), "NaN must sort aside, not poison p50");
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        // the NaN itself lands at the top of the distribution
+        assert!(percentile(&xs, 100.0).is_nan());
     }
 
     #[test]

@@ -61,7 +61,7 @@ fn partial_batch_fires_on_deadline() {
     assert_eq!(r2.output, vec![2.0]);
     assert_eq!(r1.batch_size, 4, "partial batch padded to the bucket");
 
-    let metrics = coord.shutdown();
+    let metrics = coord.shutdown().expect("healthy shutdown");
     assert_eq!(metrics.completed(), 2);
     assert_eq!(metrics.errors(), 0);
     let batches = rec.lock().unwrap().batches.clone();
@@ -94,7 +94,7 @@ fn deadline_does_not_fire_early() {
         "partial batch fired early, after {waited:?}"
     );
     assert_eq!(r.output, vec![9.0]);
-    let metrics = coord.shutdown();
+    let metrics = coord.shutdown().expect("healthy shutdown");
     assert_eq!(metrics.completed(), 1);
     assert_eq!(rec.lock().unwrap().batches.clone(), vec![(1, 8)]);
 }
@@ -113,7 +113,7 @@ fn shutdown_flushes_all_waiters() {
     let rxs: Vec<_> = (0..5)
         .map(|i| coord.submit("bert", 5, InputData::I32(vec![i])))
         .collect();
-    let metrics = coord.shutdown();
+    let metrics = coord.shutdown().expect("healthy shutdown");
     assert_eq!(metrics.completed(), 5);
     assert_eq!(metrics.errors(), 0);
     for (i, rx) in rxs.into_iter().enumerate() {

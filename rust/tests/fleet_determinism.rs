@@ -119,7 +119,7 @@ fn run_load(
     let fm = {
         // responses are delivered by full buckets during the run and by
         // the shutdown flush for the tail, so shut down first…
-        let fm = fleet.shutdown();
+        let fm = fleet.shutdown().expect("healthy shutdown");
         // …then every receiver must already hold its response.
         for (seq, rx) in rxs {
             let r = rx.try_recv().expect("zero dropped requests");

@@ -86,7 +86,7 @@ fn three_stream_json_roundtrips_and_serves_on_two_shards() {
     assert!(matches!(err, RouteError::UnknownStream(_)));
 
     // ---- metrics: per-stream sums = aggregate ---------------------------
-    let fm = fleet.shutdown();
+    let fm = fleet.shutdown().expect("healthy shutdown");
     assert_eq!(fm.per_stream.len(), 3);
     assert_eq!(fm.per_shard.len(), 2);
     let agg = fm.aggregate();
@@ -131,7 +131,7 @@ fn start_coordinator_surface_is_unchanged() {
     );
     assert!(rx.recv_timeout(Duration::from_secs(5)).is_ok());
     assert!(rx2.recv_timeout(Duration::from_secs(5)).is_ok());
-    let metrics = coord.shutdown();
+    let metrics = coord.shutdown().expect("healthy shutdown");
     assert_eq!(metrics.completed(), 2);
     assert_eq!(metrics.errors(), 0);
 }

@@ -1,0 +1,224 @@
+//! Batch-granular work-stealing under a skewed stream mix: one hot
+//! stream saturates its shard while the other shard idles. With
+//! stealing ON, formed batches must migrate to the idle shard; with
+//! stealing OFF they must not — and in *both* cases per-stream batch
+//! composition must be the identical FIFO chunking, because stealing
+//! relocates execution only, never formation (the `fleet_determinism`
+//! guarantee).
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+use topkima::coordinator::{
+    shard_of, Executor, ExecutorFactory, FleetMetrics, InputData,
+    StealPolicy, StreamKey, VictimSelect,
+};
+use topkima::pipeline::{BatchPolicy, ModelKind, StackConfig, StreamSpec};
+use topkima::softmax::SoftmaxKind;
+
+const HOT_REQUESTS: i32 = 64;
+
+/// Per-stream list of executed batches: (executing shard, request seqs).
+type BatchLog =
+    Arc<Mutex<BTreeMap<(String, usize), Vec<(usize, Vec<i32>)>>>>;
+
+/// Mock executor: records (shard, batch) and burns ~1 ms per batch so
+/// the hot shard's backlog builds and donation actually triggers.
+struct Recorder {
+    log: BatchLog,
+    shard: usize,
+}
+
+impl Executor for Recorder {
+    fn execute(
+        &mut self,
+        stream: &StreamKey,
+        inputs: &[Arc<InputData>],
+        _bucket: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        let seqs: Vec<i32> = inputs
+            .iter()
+            .map(|i| match &**i {
+                InputData::I32(v) => v[0],
+                InputData::F32(v) => v[0] as i32,
+            })
+            .collect();
+        self.log
+            .lock()
+            .unwrap()
+            .entry((stream.0.to_string(), stream.1))
+            .or_default()
+            .push((self.shard, seqs.clone()));
+        std::thread::sleep(Duration::from_millis(1));
+        Ok(seqs.iter().map(|&s| vec![s as f32]).collect())
+    }
+}
+
+/// Two shards, one hot stream (all traffic), one cold stream (none):
+/// the most skewed mix there is. Huge deadlines + bucket 4 make batch
+/// formation a pure function of the arrival sequence.
+fn config(steal: StealPolicy) -> StackConfig {
+    let slow = |buckets: Vec<usize>| BatchPolicy {
+        buckets,
+        max_wait_us: 3_600_000_000,
+        max_queue: 0,
+    };
+    StackConfig::default()
+        .with_shards(2)
+        .with_steal(steal)
+        .with_stream(
+            StreamSpec::new(ModelKind::BertTiny, 5, SoftmaxKind::Topkima)
+                .with_policy(slow(vec![4])),
+        )
+        .with_stream(
+            StreamSpec::new(ModelKind::VitBase, 3, SoftmaxKind::Conventional)
+                .with_policy(slow(vec![4])),
+        )
+}
+
+fn run(
+    steal: StealPolicy,
+) -> (BTreeMap<(String, usize), Vec<(usize, Vec<i32>)>>, FleetMetrics) {
+    let b = config(steal).build().expect("valid config");
+    let log: BatchLog = Arc::new(Mutex::new(BTreeMap::new()));
+    let factories: Vec<ExecutorFactory> = (0..2)
+        .map(|shard| {
+            let log = log.clone();
+            Box::new(move || {
+                Box::new(Recorder { log, shard }) as Box<dyn Executor>
+            }) as ExecutorFactory
+        })
+        .collect();
+    let mut fleet = b.start_fleet_with(factories);
+    let key: Arc<str> = Arc::from("bert");
+    let mut rxs = Vec::new();
+    for seq in 0..HOT_REQUESTS {
+        let rx = fleet
+            .submit_shared(
+                key.clone(),
+                5,
+                Arc::new(InputData::I32(vec![seq, 0])),
+            )
+            .expect("registered stream");
+        rxs.push((seq, rx));
+    }
+    // Collect every response BEFORE shutdown: 64 requests fill 16 full
+    // buckets, so all batches form and execute during the run — this
+    // both proves nothing is lost and keeps the steal window open (a
+    // shutdown racing the submissions would just flush everything
+    // locally and the skew would never be observed).
+    for (seq, rx) in rxs {
+        let r = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("zero dropped requests");
+        assert_eq!(r.output, vec![seq as f32], "response routed correctly");
+    }
+    let fm = fleet.shutdown().expect("healthy shutdown");
+    let log = Arc::try_unwrap(log)
+        .expect("all shard handles joined")
+        .into_inner()
+        .unwrap();
+    (log, fm)
+}
+
+/// Shard-agnostic view of the log: per-stream batches sorted by
+/// content (execution *order* across shards is timing-dependent under
+/// stealing; the *partition* of requests into batches must not be).
+fn composition(
+    log: &BTreeMap<(String, usize), Vec<(usize, Vec<i32>)>>,
+) -> BTreeMap<(String, usize), Vec<Vec<i32>>> {
+    log.iter()
+        .map(|(key, batches)| {
+            let mut b: Vec<Vec<i32>> =
+                batches.iter().map(|(_, seqs)| seqs.clone()).collect();
+            b.sort();
+            (key.clone(), b)
+        })
+        .collect()
+}
+
+#[test]
+fn skewed_mix_stealing_moves_batches_but_not_composition() {
+    let stealing = StealPolicy {
+        enabled: true,
+        min_backlog: 1,
+        victim: VictimSelect::LeastLoaded,
+    };
+    let (log_on, fm_on) = run(stealing);
+    let (log_off, fm_off) = run(StealPolicy::default());
+
+    // -- composition: identical with stealing on/off, and exactly the
+    //    FIFO chunking of the arrival sequence -------------------------
+    assert_eq!(
+        composition(&log_on),
+        composition(&log_off),
+        "stealing must never change request→batch composition"
+    );
+    let hot = ("bert".to_string(), 5usize);
+    let want: Vec<Vec<i32>> = (0..HOT_REQUESTS / 4)
+        .map(|b| (b * 4..(b + 1) * 4).collect())
+        .collect();
+    assert_eq!(
+        composition(&log_on)[&hot],
+        want,
+        "batches are pure FIFO chunks of the hot stream"
+    );
+
+    // -- stealing off: every batch executes on the owning shard --------
+    let owner = shard_of(&(Arc::from("bert"), 5), 2);
+    assert!(
+        log_off[&hot].iter().all(|(shard, _)| *shard == owner),
+        "without stealing, execution stays on the owner"
+    );
+    assert_eq!(fm_off.stolen_total(), 0);
+    assert_eq!(fm_off.donated_total(), 0);
+
+    // -- stealing on: ≥1 batch migrated, counters balance --------------
+    assert!(
+        fm_on.stolen_total() >= 1,
+        "skewed mix must move at least one batch across shards"
+    );
+    assert_eq!(
+        fm_on.stolen_total(),
+        fm_on.donated_total(),
+        "every donated batch is executed by exactly one thief"
+    );
+    assert!(
+        log_on[&hot].iter().any(|(shard, _)| *shard != owner),
+        "the idle shard executed stolen work"
+    );
+    assert_eq!(
+        fm_on.steal[owner].donated,
+        fm_on.donated_total(),
+        "only the hot shard donates"
+    );
+
+    // -- per-stream totals are exact despite cross-shard execution -----
+    for fm in [&fm_on, &fm_off] {
+        let key: StreamKey = (Arc::from("bert"), 5);
+        let m = &fm.per_stream[&key];
+        assert_eq!(m.completed(), HOT_REQUESTS as usize);
+        assert_eq!(m.errors(), 0);
+        assert_eq!(m.batches(), (HOT_REQUESTS / 4) as usize);
+        let shard_total: usize =
+            fm.per_shard.iter().map(|m| m.completed()).sum();
+        assert_eq!(shard_total, HOT_REQUESTS as usize);
+    }
+}
+
+#[test]
+fn round_robin_victim_selection_also_balances() {
+    let (_, fm) = run(StealPolicy {
+        enabled: true,
+        min_backlog: 1,
+        victim: VictimSelect::RoundRobin,
+    });
+    assert_eq!(fm.stolen_total(), fm.donated_total());
+    assert_eq!(
+        fm.aggregate().completed(),
+        HOT_REQUESTS as usize,
+        "no request lost through the deque"
+    );
+}

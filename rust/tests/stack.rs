@@ -119,7 +119,7 @@ fn coordinator_end_to_end_with_pjrt() {
         assert!(!resp.output.is_empty());
         assert!(resp.output.iter().all(|v| v.is_finite()));
     }
-    let metrics = coord.shutdown();
+    let metrics = coord.shutdown().expect("healthy shutdown");
     assert_eq!(metrics.completed(), n);
     assert_eq!(metrics.errors(), 0);
 }

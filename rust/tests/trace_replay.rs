@@ -1,0 +1,173 @@
+//! Eval-trace replay determinism: an exported JSONL trace, replayed
+//! under lifted deadlines (the `serve-fleet --deterministic` policy),
+//! must produce identical schedule-determined metrics on every run —
+//! with or without work-stealing — because batch formation is a pure
+//! function of each stream's arrival sequence. This is the lib-level
+//! half of the acceptance criterion; ci.sh additionally `cmp`s two
+//! whole `BENCH_fleet.json` files from the CLI replay path.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
+
+use anyhow::Result;
+use topkima::coordinator::trace::{Trace, TraceStream};
+use topkima::coordinator::{
+    Executor, ExecutorFactory, InputData, StealPolicy, StreamKey,
+    VictimSelect,
+};
+use topkima::pipeline::{BatchPolicy, ModelKind, StackConfig, StreamSpec};
+use topkima::softmax::SoftmaxKind;
+
+/// Trivial executor: the deterministic metrics under test (completed,
+/// batches, occupancy, padding) do not depend on what the device
+/// computes, only on batch formation.
+struct Echo;
+
+impl Executor for Echo {
+    fn execute(
+        &mut self,
+        _stream: &StreamKey,
+        inputs: &[Arc<InputData>],
+        _bucket: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        Ok(inputs.iter().map(|_| vec![1.0]).collect())
+    }
+}
+
+/// The `--deterministic` replay policy: deadlines lifted so only full
+/// buckets (during the run) and the shutdown flush form batches.
+fn fleet_config(steal_on: bool) -> StackConfig {
+    let slow = |buckets: Vec<usize>| BatchPolicy {
+        buckets,
+        max_wait_us: 3_600_000_000,
+        max_queue: 0,
+    };
+    StackConfig::default()
+        .with_shards(2)
+        .with_steal(StealPolicy {
+            enabled: steal_on,
+            min_backlog: 1,
+            victim: VictimSelect::LeastLoaded,
+        })
+        .with_stream(
+            StreamSpec::new(ModelKind::BertTiny, 5, SoftmaxKind::Topkima)
+                .with_rate(900.0)
+                .with_policy(slow(vec![1, 2, 4])),
+        )
+        .with_stream(
+            StreamSpec::new(ModelKind::BertTiny, 10, SoftmaxKind::Dtopk)
+                .with_rate(400.0)
+                .with_policy(slow(vec![2, 8])),
+        )
+        .with_stream(
+            StreamSpec::new(ModelKind::VitBase, 2, SoftmaxKind::Topkima)
+                .with_rate(250.0)
+                .with_policy(slow(vec![4])),
+        )
+}
+
+fn trace_streams(cfg: &StackConfig) -> Vec<TraceStream> {
+    cfg.fleet
+        .streams
+        .iter()
+        .map(|s| TraceStream {
+            family: s.family().to_string(),
+            k: s.k,
+            input_len: 16,
+            rate_rps: s.rate_rps,
+        })
+        .collect()
+}
+
+/// The schedule-determined per-stream record a deterministic
+/// `BENCH_fleet.json` is built from.
+type StreamRecord = (usize, u64, usize, f64, f64);
+
+fn replay(
+    trace: &Trace,
+    steal_on: bool,
+) -> BTreeMap<(String, usize), StreamRecord> {
+    let b = fleet_config(steal_on).build().expect("valid config");
+    let specs = b.fleet_specs();
+    let factories: Vec<ExecutorFactory> = (0..2)
+        .map(|_| {
+            Box::new(|| Box::new(Echo) as Box<dyn Executor>)
+                as ExecutorFactory
+        })
+        .collect();
+    let mut fleet = b.start_fleet_with(factories);
+    let keys: Vec<Arc<str>> =
+        specs.iter().map(|s| Arc::from(s.family())).collect();
+    let index: HashMap<(&str, usize), usize> = specs
+        .iter()
+        .enumerate()
+        .map(|(si, s)| ((s.family(), s.k), si))
+        .collect();
+    let mut rxs = Vec::new();
+    for ev in &trace.events {
+        let si = index[&(ev.family.as_str(), ev.k)];
+        let rx = fleet
+            .submit_shared(
+                keys[si].clone(),
+                ev.k,
+                Arc::new(InputData::I32(vec![1; ev.input_len])),
+            )
+            .expect("trace stream registered");
+        rxs.push(rx);
+    }
+    let fm = fleet.shutdown().expect("healthy shutdown");
+    for rx in rxs {
+        rx.try_recv().expect("zero dropped requests after flush");
+    }
+    fm.per_stream
+        .iter()
+        .map(|((family, k), m)| {
+            (
+                (family.to_string(), *k),
+                (
+                    m.completed(),
+                    m.errors(),
+                    m.batches(),
+                    m.mean_batch_size(),
+                    m.padding_fraction(),
+                ),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn exported_trace_replays_deterministically() {
+    let cfg = fleet_config(false);
+    let trace = Trace::poisson(&trace_streams(&cfg), 42, 60);
+    assert!(trace.len() > 20, "enough load to form real batches");
+
+    // same trace, same deterministic metrics — run to run
+    let r1 = replay(&trace, false);
+    let r2 = replay(&trace, false);
+    assert_eq!(r1, r2, "replay must be a pure function of the trace");
+
+    // the export/import cycle changes nothing
+    let reloaded = Trace::from_jsonl(&trace.to_jsonl()).expect("roundtrip");
+    assert_eq!(reloaded, trace);
+    assert_eq!(replay(&reloaded, false), r1);
+
+    // stealing relocates execution, not formation: the deterministic
+    // record is identical with stealing on
+    let stolen = replay(&trace, true);
+    assert_eq!(stolen, r1, "stealing must not leak into the record");
+
+    // completion totals match the trace exactly, per stream
+    let mut want: BTreeMap<(String, usize), usize> = BTreeMap::new();
+    for ev in &trace.events {
+        *want.entry((ev.family.clone(), ev.k)).or_default() += 1;
+    }
+    for (key, (completed, errors, ..)) in &r1 {
+        assert_eq!(
+            *completed,
+            want.get(key).copied().unwrap_or(0),
+            "stream {key:?} completion equals its trace arrivals"
+        );
+        assert_eq!(*errors, 0);
+    }
+}
