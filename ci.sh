@@ -10,9 +10,13 @@
 #   5. smoke: `topkima sweep-hw` on a tiny grid (JSON baseline emitted)
 #   6. smoke: `topkima serve-fleet` (sharded fleet under synthetic load;
 #      BENCH_fleet.json emitted, fails on any dropped request)
-#   7. smoke: export a tiny eval trace and replay it twice through a
-#      2-shard stealing fleet in deterministic mode — the two BENCH
-#      files must be byte-identical
+#   7. smoke: export a tiny eval trace and replay it through BOTH
+#      fleet↔shard transports in deterministic mode — twice over the
+#      local transport (stealing on), once over the process transport
+#      (shard-worker subprocesses + wire protocol) — and `cmp` all
+#      three BENCH files: replay must be deterministic AND
+#      transport-invariant (the ShardTransport redesign is
+#      behavior-preserving)
 #   8. perf baseline: `cargo bench --bench perf_hotpath` writes
 #      BENCH_hotpath.json (machine-readable numbers for EXPERIMENTS.md
 #      §Perf)
@@ -103,13 +107,18 @@ else
     status=1
 fi
 
-note "smoke: trace export + stealing replay (byte-identical twice)"
-# export the synthetic schedule, replay it through a 2-shard stealing
-# fleet twice in deterministic mode: the two BENCH files must be
-# byte-identical (the serve-fleet --trace replay guarantee). The first
-# replay is kept as BENCH_fleet_replay.json — its batching metrics are
-# exactly reproducible, so THAT file (not the wall-clock live smoke)
-# joins the bench-diff regression gate below.
+note "smoke: trace replay, both transports (byte-identical BENCH files)"
+# export the synthetic schedule, then replay it deterministically three
+# ways: twice through the 2-shard *local* transport with stealing on
+# (the determinism guarantee), and once through the *process* transport
+# (shard-worker subprocesses over the wire protocol; stealing off — the
+# config validator rejects steal × process). All three BENCH files must
+# be byte-identical: deterministic replay metrics are schedule-
+# determined, so they prove the ShardTransport boundary (and stealing)
+# is behavior-invariant. The first replay is kept as
+# BENCH_fleet_replay.json — its batching metrics are exactly
+# reproducible, so THAT file (not the wall-clock live smoke) joins the
+# bench-diff regression gate below.
 trace=/tmp/topkima_ci_trace.jsonl
 if cargo run --release --quiet -- serve-fleet \
         --duration-ms 120 --seed 11 --steal on \
@@ -125,6 +134,31 @@ if cargo run --release --quiet -- serve-fleet \
     echo "ok: trace replay is deterministic (identical BENCH files)"
 else
     echo "FAIL: trace export/replay smoke (non-deterministic or dropped)"
+    status=1
+fi
+
+if cargo run --release --quiet -- serve-fleet \
+        --trace "$trace" --transport process --deterministic \
+        --out /tmp/topkima_ci_fleet_replay_proc.json \
+    && cmp -s BENCH_fleet_replay.json \
+              /tmp/topkima_ci_fleet_replay_proc.json; then
+    echo "ok: process-transport replay matches the local transport" \
+         "byte-for-byte"
+else
+    echo "FAIL: process-transport replay diverges from local (or dropped)"
+    status=1
+fi
+
+note "smoke: unknown subcommand fails loudly"
+# a typo'd subcommand must exit nonzero (it used to print usage and
+# exit 0, letting broken CI steps pass silently)
+if cargo run --release --quiet -- no-such-subcommand >/dev/null 2>&1; then
+    echo "FAIL: unknown subcommand exited 0"
+    status=1
+elif cargo run --release --quiet -- help serve-fleet >/dev/null; then
+    echo "ok: unknown subcommand fails, topkima help works"
+else
+    echo "FAIL: topkima help serve-fleet"
     status=1
 fi
 

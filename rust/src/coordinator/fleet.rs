@@ -9,10 +9,18 @@
 //! shutdown — it holds no locks on the request path, so submission
 //! scales with shard count.
 //!
+//! *How* a request reaches its shard is the [`ShardTransport`] behind
+//! the front: in-process channels ([`LocalTransport`], the default) or
+//! `topkima shard-worker` subprocesses speaking the versioned wire
+//! protocol (`transport::proc`). The front is transport-agnostic — every
+//! guarantee below holds for both.
+//!
 //! Stream→shard assignment is [`shard_of`]: a deterministic FNV-1a hash
 //! of (family, k). A stream lives on exactly one shard, so per-stream
 //! FIFO order and batch composition are independent of the shard count
-//! (asserted by `rust/tests/fleet_determinism.rs`).
+//! (asserted by `rust/tests/fleet_determinism.rs`) *and* of the
+//! transport (asserted by `rust/tests/transport_proc.rs` and the ci.sh
+//! dual-transport replay gate).
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -22,10 +30,8 @@ use std::sync::Arc;
 use super::metrics::Metrics;
 use super::request::{InputData, Request, RequestId, Response};
 use super::router::{RouteError, Router, StreamDef, StreamKey};
-use super::shard::{
-    start_shard, start_shard_with, ShardHandle, ShardMsg, StealCtx,
-    StealShared,
-};
+use super::transport::{LocalTransport, ShardTransport};
+use crate::util::json::Json;
 
 pub use super::shard::ExecutorFactory;
 
@@ -96,12 +102,47 @@ pub struct StealStats {
     pub donated: u64,
 }
 
-/// One or more shard threads panicked: the fleet shutdown completed
-/// without panicking the front, and the surviving shards' accounting is
-/// preserved in `partial`.
+impl StealStats {
+    /// Wire form: `{"stolen":...,"donated":...}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("stolen", Json::Num(self.stolen as f64)),
+            ("donated", Json::Num(self.donated as f64)),
+        ])
+    }
+
+    /// Parse the wire form; unknown fields are rejected.
+    pub fn from_json(v: &Json) -> Result<StealStats, String> {
+        let obj = v.as_obj().ok_or("steal stats must be an object")?;
+        let mut s = StealStats::default();
+        for (key, value) in obj {
+            let int = || {
+                value.as_u64().ok_or_else(|| {
+                    format!("{key} must be a non-negative integer")
+                })
+            };
+            match key.as_str() {
+                "stolen" => s.stolen = int()?,
+                "donated" => s.donated = int()?,
+                other => {
+                    return Err(format!(
+                        "unknown steal-stats field '{other}'"
+                    ))
+                }
+            }
+        }
+        Ok(s)
+    }
+}
+
+/// One or more shards died before reporting: a panicked shard thread
+/// (local transport) or a worker subprocess that was killed, crashed,
+/// or spoke a bad protocol (process transport). The fleet shutdown
+/// completed without panicking the front, and the surviving shards'
+/// accounting is preserved in `partial`.
 #[derive(Debug)]
 pub struct ShardPanic {
-    /// Indices of the shards whose threads panicked.
+    /// Indices of the shards that died.
     pub shards: Vec<usize>,
     /// Metrics from the shards that shut down cleanly.
     pub partial: FleetMetrics,
@@ -111,8 +152,8 @@ impl fmt::Display for ShardPanic {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(
             f,
-            "shard(s) {:?} panicked during the run; partial metrics \
-             cover {} completed request(s)",
+            "shard(s) {:?} panicked or died during the run; partial \
+             metrics cover {} completed request(s)",
             self.shards,
             self.partial.aggregate().completed(),
         )
@@ -134,18 +175,22 @@ pub fn shard_of(key: &StreamKey, shards: usize) -> usize {
     (h % shards as u64) as usize
 }
 
-/// Handle for submitting work to a running fleet.
+/// Handle for submitting work to a running fleet. The front is
+/// transport-agnostic: shards may be threads in this process
+/// ([`LocalTransport`]) or `topkima shard-worker` subprocesses
+/// ([`super::transport::ProcessTransport`]).
 pub struct Fleet {
-    shards: Vec<ShardHandle>,
+    transport: Box<dyn ShardTransport>,
     stream_shard: BTreeMap<StreamKey, usize>,
     next_id: RequestId,
     front_rejected: u64,
 }
 
 impl Fleet {
-    /// Spawn `factories.len()` shard loops and hash-partition `defs`
-    /// across them, with stealing disabled. Each factory runs once,
-    /// inside its shard's thread (PJRT handles are not `Send`).
+    /// Spawn `factories.len()` in-process shard loops and
+    /// hash-partition `defs` across them, with stealing disabled. Each
+    /// factory runs once, inside its shard's thread (PJRT handles are
+    /// not `Send`).
     pub fn start(
         defs: Vec<StreamDef>,
         factories: Vec<ExecutorFactory>,
@@ -161,16 +206,9 @@ impl Fleet {
     pub fn start_with(
         defs: Vec<StreamDef>,
         factories: Vec<ExecutorFactory>,
-        mut steal: StealPolicy,
+        steal: StealPolicy,
     ) -> Fleet {
         assert!(!factories.is_empty(), "fleet needs at least one shard");
-        // `StackConfig::validate` rejects min_backlog = 0, but library
-        // callers can build a StealPolicy directly; clamp here (where
-        // the policy is consumed) so a donor always keeps at least one
-        // batch instead of idling itself and re-stealing its own work.
-        if steal.enabled {
-            steal.min_backlog = steal.min_backlog.max(1);
-        }
         let n = factories.len();
         let mut routers: Vec<Router> = (0..n).map(|_| Router::new()).collect();
         let mut stream_shard = BTreeMap::new();
@@ -180,39 +218,52 @@ impl Fleet {
             stream_shard.insert(key, shard);
             routers[shard].register_def(def);
         }
-        let shards = if steal.enabled && n > 1 {
-            let shared = Arc::new(StealShared::new(n));
-            let channels: Vec<_> =
-                (0..n).map(|_| mpsc::channel::<ShardMsg>()).collect();
-            let peers: Vec<mpsc::Sender<ShardMsg>> =
-                channels.iter().map(|(tx, _)| tx.clone()).collect();
-            routers
-                .into_iter()
-                .zip(factories)
-                .zip(channels)
-                .enumerate()
-                .map(|(i, ((router, factory), (tx, rx)))| {
-                    let ctx = StealCtx::enabled(
-                        i,
-                        steal,
-                        shared.clone(),
-                        peers.clone(),
-                    );
-                    start_shard_with(router, factory, tx, rx, ctx)
-                })
-                .collect()
-        } else {
-            routers
-                .into_iter()
-                .zip(factories)
-                .map(|(router, factory)| start_shard(router, factory))
-                .collect()
-        };
-        Fleet { shards, stream_shard, next_id: 0, front_rejected: 0 }
+        let transport = LocalTransport::spawn(routers, factories, steal);
+        Fleet {
+            transport: Box::new(transport),
+            stream_shard,
+            next_id: 0,
+            front_rejected: 0,
+        }
+    }
+
+    /// Run the fleet front over an explicit [`ShardTransport`] — the
+    /// entry point the pipeline builder uses for the process transport
+    /// (and a future cross-host one). `defs` define the streams the
+    /// front routes; the transport's shards must already serve exactly
+    /// these streams under the same [`shard_of`] partitioning (the
+    /// process transport guarantees it by shipping the same validated
+    /// config to every worker).
+    pub fn start_transport(
+        defs: &[StreamDef],
+        transport: Box<dyn ShardTransport>,
+    ) -> Fleet {
+        let n = transport.shard_count();
+        assert!(n > 0, "fleet needs at least one shard");
+        let stream_shard = defs
+            .iter()
+            .map(|def| {
+                let key = def.key();
+                let shard = shard_of(&key, n);
+                (key, shard)
+            })
+            .collect();
+        Fleet { transport, stream_shard, next_id: 0, front_rejected: 0 }
     }
 
     pub fn shard_count(&self) -> usize {
-        self.shards.len()
+        self.transport.shard_count()
+    }
+
+    /// The transport's stable identifier ("local", "process").
+    pub fn transport_kind(&self) -> &'static str {
+        self.transport.kind()
+    }
+
+    /// OS pid of a shard's worker subprocess (`None` for in-process
+    /// shard threads).
+    pub fn worker_pid(&self, shard: usize) -> Option<u32> {
+        self.transport.worker_pid(shard)
     }
 
     /// Every registered stream, in key order.
@@ -254,40 +305,34 @@ impl Fleet {
         };
         let id = self.next_id;
         self.next_id += 1;
-        let (tx, rx) = mpsc::channel();
         let req = Request::shared(id, key.0, k, input);
-        // A dead shard (panicked executor, early exit) is a typed
-        // rejection, not a front panic — `shutdown()` will additionally
-        // report it as a `ShardPanic`.
-        if let Err(mpsc::SendError(ShardMsg::Submit(req, _))) =
-            self.shards[shard].tx.send(ShardMsg::Submit(req, tx))
-        {
-            self.front_rejected += 1;
-            return Err(RouteError::ShardDown((req.model, req.k)));
+        // A dead shard (panicked executor, killed worker subprocess) is
+        // a typed rejection from the transport, not a front panic —
+        // `shutdown()` will additionally report it as a `ShardPanic`.
+        match self.transport.submit(shard, req) {
+            Ok(rx) => Ok(rx),
+            Err(e) => {
+                self.front_rejected += 1;
+                Err(e)
+            }
         }
-        Ok(rx)
     }
 
-    /// Drain every shard, join the threads, and return the full
-    /// per-stream / per-shard accounting. A panicked shard thread is
-    /// surfaced as a typed [`ShardPanic`] error (carrying the healthy
-    /// shards' partial metrics) instead of propagating the panic into
-    /// the front — the old `join().expect(..)` took the caller down
-    /// with the shard.
-    pub fn shutdown(mut self) -> Result<FleetMetrics, ShardPanic> {
-        // Signal every shard before joining any, so they drain their
-        // queues concurrently.
-        for shard in &self.shards {
-            let _ = shard.tx.send(ShardMsg::Shutdown);
-        }
+    /// Drain every shard through the transport and return the full
+    /// per-stream / per-shard accounting. A shard that died — panicked
+    /// thread or killed worker subprocess — is surfaced as a typed
+    /// [`ShardPanic`] error (carrying the healthy shards' partial
+    /// metrics) instead of propagating the failure into the front.
+    pub fn shutdown(self) -> Result<FleetMetrics, ShardPanic> {
+        let outcomes = self.transport.shutdown();
         let mut per_stream: BTreeMap<StreamKey, Metrics> = BTreeMap::new();
-        let mut per_shard = Vec::with_capacity(self.shards.len());
-        let mut steal = Vec::with_capacity(self.shards.len());
+        let mut per_shard = Vec::with_capacity(outcomes.len());
+        let mut steal = Vec::with_capacity(outcomes.len());
         let mut rejected = self.front_rejected;
         let mut panicked = Vec::new();
-        for (i, shard) in self.shards.drain(..).enumerate() {
-            match shard.handle.join() {
-                Ok(report) => {
+        for (i, outcome) in outcomes.into_iter().enumerate() {
+            match outcome {
+                Some(report) => {
                     let mut shard_agg = Metrics::default();
                     for (key, m) in report.streams {
                         shard_agg.merge_from(&m);
@@ -302,7 +347,7 @@ impl Fleet {
                         donated: report.donated,
                     });
                 }
-                Err(_) => {
+                None => {
                     panicked.push(i);
                     per_shard.push(Metrics::default());
                     steal.push(StealStats::default());
@@ -359,6 +404,135 @@ impl FleetMetrics {
     /// Fleet-wide count of batches handed to the steal deque.
     pub fn donated_total(&self) -> u64 {
         self.steal.iter().map(|s| s.donated).sum()
+    }
+
+    /// Wire form of the full fleet accounting. Unlike the BENCH output
+    /// (emit-only, shaped for bench-diff), this round-trips through
+    /// [`FleetMetrics::from_json`] — the contract cross-process
+    /// aggregation (and any future multi-front federation) builds on.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "per_stream",
+                Json::Arr(
+                    self.per_stream
+                        .iter()
+                        .map(|((family, k), m)| {
+                            Json::obj(vec![
+                                ("family", Json::Str(family.to_string())),
+                                ("k", Json::Num(*k as f64)),
+                                ("metrics", m.to_json()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "per_shard",
+                Json::Arr(
+                    self.per_shard.iter().map(Metrics::to_json).collect(),
+                ),
+            ),
+            (
+                "steal",
+                Json::Arr(
+                    self.steal.iter().map(StealStats::to_json).collect(),
+                ),
+            ),
+            ("rejected", Json::Num(self.rejected as f64)),
+        ])
+    }
+
+    /// Parse the wire form; unknown fields are rejected. Metrics event
+    /// windows are re-anchored at parse time (widths preserved) — see
+    /// [`Metrics::from_json`].
+    pub fn from_json(v: &Json) -> Result<FleetMetrics, String> {
+        let obj = v.as_obj().ok_or("fleet metrics must be an object")?;
+        let mut fm = FleetMetrics {
+            per_stream: BTreeMap::new(),
+            per_shard: Vec::new(),
+            steal: Vec::new(),
+            rejected: 0,
+        };
+        for (key, value) in obj {
+            match key.as_str() {
+                "per_stream" => {
+                    for s in value
+                        .as_arr()
+                        .ok_or("per_stream must be an array")?
+                    {
+                        let entry = s
+                            .as_obj()
+                            .ok_or("per_stream entry must be an object")?;
+                        let (mut family, mut k, mut metrics) =
+                            (None, None, None);
+                        for (key, value) in entry {
+                            match key.as_str() {
+                                "family" => {
+                                    family = Some(
+                                        value.as_str().ok_or(
+                                            "family must be a string",
+                                        )?,
+                                    )
+                                }
+                                "k" => {
+                                    k = Some(value.as_u64().ok_or(
+                                        "k must be a non-negative integer",
+                                    )?
+                                        as usize)
+                                }
+                                "metrics" => {
+                                    metrics =
+                                        Some(Metrics::from_json(value)?)
+                                }
+                                other => {
+                                    return Err(format!(
+                                        "unknown per_stream field \
+                                         '{other}'"
+                                    ))
+                                }
+                            }
+                        }
+                        let (Some(family), Some(k), Some(m)) =
+                            (family, k, metrics)
+                        else {
+                            return Err(
+                                "per_stream entry needs family, k, metrics"
+                                    .to_string(),
+                            );
+                        };
+                        fm.per_stream.insert((Arc::from(family), k), m);
+                    }
+                }
+                "per_shard" => {
+                    fm.per_shard = value
+                        .as_arr()
+                        .ok_or("per_shard must be an array")?
+                        .iter()
+                        .map(Metrics::from_json)
+                        .collect::<Result<_, _>>()?;
+                }
+                "steal" => {
+                    fm.steal = value
+                        .as_arr()
+                        .ok_or("steal must be an array")?
+                        .iter()
+                        .map(StealStats::from_json)
+                        .collect::<Result<_, _>>()?;
+                }
+                "rejected" => {
+                    fm.rejected = value.as_u64().ok_or(
+                        "rejected must be a non-negative integer",
+                    )?
+                }
+                other => {
+                    return Err(format!(
+                        "unknown fleet-metrics field '{other}'"
+                    ))
+                }
+            }
+        }
+        Ok(fm)
     }
 
     /// Multi-line human summary: one line per stream, one per shard,
@@ -612,6 +786,81 @@ mod tests {
         assert_eq!(err.partial.steal.len(), 3);
         let msg = err.to_string();
         assert!(msg.contains("panicked"), "display names the failure: {msg}");
+    }
+
+    #[test]
+    fn steal_stats_json_roundtrip_and_rejections() {
+        let s = StealStats { stolen: 7, donated: 9 };
+        assert_eq!(StealStats::from_json(&s.to_json()).unwrap(), s);
+        assert_eq!(
+            StealStats::from_json(&Json::parse("{}").unwrap()).unwrap(),
+            StealStats::default()
+        );
+        let bad = Json::parse(r#"{"stolen":1,"borrowed":2}"#).unwrap();
+        assert!(StealStats::from_json(&bad)
+            .unwrap_err()
+            .contains("borrowed"));
+        let bad = Json::parse(r#"{"stolen":1.5}"#).unwrap();
+        assert!(StealStats::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn fleet_metrics_json_roundtrip_preserves_accounting() {
+        // drive a real fleet so the metrics carry actual samples
+        let mut fleet = Fleet::start(defs(), factories(2));
+        for i in 0..6 {
+            let rx = fleet
+                .submit("bert", 5, InputData::I32(vec![i, 0]))
+                .unwrap();
+            rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        }
+        let _ = fleet.submit("bert", 42, InputData::I32(vec![1]));
+        let fm = fleet.shutdown().expect("healthy shutdown");
+        let back = FleetMetrics::from_json(&fm.to_json()).unwrap();
+        assert_eq!(back.rejected, fm.rejected);
+        assert_eq!(back.per_shard.len(), fm.per_shard.len());
+        assert_eq!(back.steal, fm.steal);
+        assert_eq!(
+            back.per_stream.keys().collect::<Vec<_>>(),
+            fm.per_stream.keys().collect::<Vec<_>>()
+        );
+        for (key, m) in &fm.per_stream {
+            let b = &back.per_stream[key];
+            assert_eq!(b.completed(), m.completed());
+            assert_eq!(b.batches(), m.batches());
+            assert_eq!(b.errors(), m.errors());
+            assert_eq!(b.mean_batch_size(), m.mean_batch_size());
+            assert_eq!(b.padding_fraction(), m.padding_fraction());
+        }
+        let (a, b) =
+            (fm.aggregate(), back.aggregate());
+        assert_eq!(a.completed(), b.completed());
+        assert_eq!(a.errors(), b.errors());
+        assert_eq!(a.mean_latency_us(), b.mean_latency_us());
+        // violations are loud
+        let bad = Json::parse(r#"{"rejected":1,"stolen_total":0}"#).unwrap();
+        assert!(FleetMetrics::from_json(&bad)
+            .unwrap_err()
+            .contains("stolen_total"));
+        let bad = Json::parse(r#"{"per_stream":[{"k":5}]}"#).unwrap();
+        assert!(FleetMetrics::from_json(&bad).is_err());
+        // nested stream entries reject unknown fields like the top level
+        let bad = Json::parse(
+            r#"{"per_stream":[{"family":"bert","k":5,"metrics":{},
+                "shard":0}]}"#,
+        )
+        .unwrap();
+        assert!(FleetMetrics::from_json(&bad)
+            .unwrap_err()
+            .contains("shard"));
+    }
+
+    #[test]
+    fn local_fleet_reports_transport_kind_and_no_pids() {
+        let fleet = Fleet::start(defs(), factories(2));
+        assert_eq!(fleet.transport_kind(), "local");
+        assert_eq!(fleet.worker_pid(0), None);
+        fleet.shutdown().expect("healthy shutdown");
     }
 
     #[test]

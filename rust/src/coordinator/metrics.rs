@@ -2,6 +2,7 @@
 
 use std::time::{Duration, Instant};
 
+use crate::util::json::Json;
 use crate::util::stats;
 
 /// Lock-free-enough metrics (single writer — the coordinator thread).
@@ -144,6 +145,124 @@ impl Metrics {
         self.padded_rows as f64 / total as f64
     }
 
+    /// Wire form for the shard-transport `MetricsSnapshot` frame: the
+    /// raw samples (latencies, batch sizes) plus counters, with the
+    /// frozen event window flattened to two relative measurements —
+    /// its width (`window_us`) and how long ago it closed (`idle_us`,
+    /// serialization time minus last event). `Instant`s cannot cross a
+    /// process boundary, so [`Metrics::from_json`] re-anchors at parse
+    /// time as `last = now - idle_us`, `first = last - window_us`:
+    /// counts, percentiles, batch statistics, and the window width
+    /// (hence per-record throughput) are preserved exactly, and
+    /// *relative* window positions survive too — merging snapshots
+    /// parsed at the same instant reproduces the true union window to
+    /// within the serialize→parse latency skew, instead of collapsing
+    /// disjoint windows onto one anchor (which would overstate merged
+    /// throughput).
+    pub fn to_json(&self) -> Json {
+        let idle_us = self
+            .last_event
+            .map_or(0.0, |t| t.elapsed().as_secs_f64() * 1e6);
+        Json::obj(vec![
+            (
+                "latencies_us",
+                Json::Arr(
+                    self.latencies_us.iter().map(|&v| Json::Num(v)).collect(),
+                ),
+            ),
+            (
+                "batch_sizes",
+                Json::Arr(
+                    self.batch_sizes
+                        .iter()
+                        .map(|&b| Json::Num(b as f64))
+                        .collect(),
+                ),
+            ),
+            ("padded_rows", Json::Num(self.padded_rows as f64)),
+            ("errors", Json::Num(self.errors as f64)),
+            (
+                "window_us",
+                Json::Num(self.window().as_secs_f64() * 1e6),
+            ),
+            ("idle_us", Json::Num(idle_us)),
+        ])
+    }
+
+    /// Parse the wire form; unknown fields are rejected. See
+    /// [`Metrics::to_json`] for the window re-anchoring caveat.
+    pub fn from_json(v: &Json) -> Result<Metrics, String> {
+        let obj = v.as_obj().ok_or("metrics must be an object")?;
+        let mut m = Metrics::default();
+        let mut window_us = 0.0f64;
+        let mut idle_us = 0.0f64;
+        let int = |x: &Json, field: &str| -> Result<u64, String> {
+            x.as_u64().ok_or_else(|| {
+                format!("{field} must be a non-negative integer")
+            })
+        };
+        let micros = |x: &Json, field: &str| -> Result<f64, String> {
+            x.as_f64()
+                .filter(|n| *n >= 0.0 && n.is_finite())
+                .ok_or_else(|| format!("{field} must be a non-negative number"))
+        };
+        for (key, value) in obj {
+            match key.as_str() {
+                "latencies_us" => {
+                    m.latencies_us = value
+                        .as_arr()
+                        .ok_or("latencies_us must be an array")?
+                        .iter()
+                        .map(|x| {
+                            // as strict as every other field: a NaN or
+                            // negative sample would silently poison
+                            // merged fleet percentiles
+                            x.as_f64()
+                                .filter(|n| n.is_finite() && *n >= 0.0)
+                                .ok_or_else(|| {
+                                    "latencies_us must be non-negative \
+                                     finite numbers"
+                                        .to_string()
+                                })
+                        })
+                        .collect::<Result<_, _>>()?;
+                }
+                "batch_sizes" => {
+                    m.batch_sizes = value
+                        .as_arr()
+                        .ok_or("batch_sizes must be an array")?
+                        .iter()
+                        .map(|x| int(x, "batch_sizes[]").map(|n| n as usize))
+                        .collect::<Result<_, _>>()?;
+                }
+                "padded_rows" => {
+                    m.padded_rows = int(value, "padded_rows")?
+                }
+                "errors" => m.errors = int(value, "errors")?,
+                "window_us" => window_us = micros(value, "window_us")?,
+                "idle_us" => idle_us = micros(value, "idle_us")?,
+                other => {
+                    return Err(format!("unknown metrics field '{other}'"))
+                }
+            }
+        }
+        if !m.latencies_us.is_empty()
+            || !m.batch_sizes.is_empty()
+            || m.errors > 0
+        {
+            let now = Instant::now();
+            let last = now
+                .checked_sub(Duration::from_secs_f64(idle_us * 1e-6))
+                .unwrap_or(now);
+            m.last_event = Some(last);
+            m.first_event = Some(
+                last.checked_sub(Duration::from_secs_f64(window_us * 1e-6))
+                    .unwrap_or(last),
+            );
+        }
+        Ok(m)
+    }
+
     /// Multi-line human summary.
     pub fn summary(&self) -> String {
         format!(
@@ -250,6 +369,89 @@ mod tests {
         // of a tiny rate over the idle spawn-to-traffic gap
         assert!(m.window() < std::time::Duration::from_millis(10));
         assert_eq!(m.throughput_rps(), 0.0);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_samples_counters_and_window_width() {
+        let mut m = Metrics::default();
+        m.record_batch(&[100.5, 200.25, 300.0], 4, 1);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        m.record_batch(&[42.0], 2, 1);
+        m.record_error();
+        let back = Metrics::from_json(&m.to_json()).unwrap();
+        assert_eq!(back.completed(), m.completed());
+        assert_eq!(back.batches(), m.batches());
+        assert_eq!(back.errors(), m.errors());
+        assert_eq!(back.padded_rows(), m.padded_rows());
+        assert_eq!(back.mean_latency_us(), m.mean_latency_us());
+        assert_eq!(back.mean_batch_size(), m.mean_batch_size());
+        assert_eq!(back.padding_fraction(), m.padding_fraction());
+        assert_eq!(
+            back.latency_percentile_us(99.0),
+            m.latency_percentile_us(99.0)
+        );
+        // window width (and hence throughput) survives, ±1 µs of
+        // float-duration conversion
+        let (a, b) = (m.window().as_secs_f64(), back.window().as_secs_f64());
+        assert!((a - b).abs() < 2e-6, "window drifted: {a} vs {b}");
+        // an empty metrics record stays windowless
+        let empty = Metrics::from_json(&Metrics::default().to_json()).unwrap();
+        assert_eq!(empty.window(), std::time::Duration::ZERO);
+        assert_eq!(empty.completed(), 0);
+    }
+
+    #[test]
+    fn parsed_windows_keep_relative_positions_when_merged() {
+        // regression: re-anchoring every parsed window at "ends now"
+        // collapsed disjoint per-shard windows onto one instant, so the
+        // merged union shrank to max(width) and merged throughput was
+        // overstated. idle_us preserves each window's distance from its
+        // serialization instant, so the union survives the wire.
+        let mut early = Metrics::default();
+        early.record_batch(&[10.0], 1, 0);
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        let mut late = Metrics::default();
+        late.record_batch(&[10.0], 1, 0);
+        // snapshot both at the same instant (what workers do at
+        // shutdown): early's idle_us is ~30 ms, late's ~0
+        let early_json = early.to_json();
+        let late_json = late.to_json();
+        // parse both at (nearly) the same instant, as the fleet front
+        // does with its workers' snapshots
+        let a = Metrics::from_json(&early_json).unwrap();
+        let b = Metrics::from_json(&late_json).unwrap();
+        let mut merged = Metrics::default();
+        merged.merge_from(&a);
+        merged.merge_from(&b);
+        // both windows are zero-width, but ~30 ms apart: the union must
+        // reflect the gap, not collapse to zero
+        assert!(
+            merged.window() >= std::time::Duration::from_millis(25),
+            "union window collapsed: {:?}",
+            merged.window()
+        );
+        assert!(merged.throughput_rps() > 0.0);
+        assert!(
+            merged.throughput_rps() < 1000.0,
+            "rate over a collapsed window would explode: {}",
+            merged.throughput_rps()
+        );
+    }
+
+    #[test]
+    fn json_violations_are_loud() {
+        use crate::util::json::Json;
+        let bad = Json::parse(r#"{"errors":-1}"#).unwrap();
+        assert!(Metrics::from_json(&bad).is_err());
+        let bad = Json::parse(r#"{"qos":1}"#).unwrap();
+        assert!(Metrics::from_json(&bad).unwrap_err().contains("qos"));
+        let bad = Json::parse(r#"{"batch_sizes":[1.5]}"#).unwrap();
+        assert!(Metrics::from_json(&bad).is_err());
+        let bad = Json::parse(r#"{"idle_us":-4}"#).unwrap();
+        assert!(Metrics::from_json(&bad).is_err());
+        let bad = Json::parse(r#"{"latencies_us":[-1e300]}"#).unwrap();
+        assert!(Metrics::from_json(&bad).is_err());
+        assert!(Metrics::from_json(&Json::Num(3.0)).is_err());
     }
 
     #[test]

@@ -21,6 +21,13 @@
 //! load generation) and the property tests can drive invariants: FIFO
 //! within a stream, conservation of requests, batch capacity limits,
 //! shard-count-independent batch assignment.
+//!
+//! How requests cross the fleet↔shard boundary is the [`transport`]
+//! layer's concern: [`ShardTransport`] abstracts it, with an in-process
+//! channel implementation (the default) and a cross-process one that
+//! spawns `topkima shard-worker` subprocesses speaking a versioned,
+//! length-prefixed JSONL wire protocol. The front — and every guarantee
+//! above — is identical over both.
 
 pub mod batcher;
 pub mod fleet;
@@ -32,6 +39,7 @@ pub mod server;
 mod shard;
 pub mod synthetic;
 pub mod trace;
+pub mod transport;
 
 pub use batcher::{BatchPlan, Batcher, BatcherConfig};
 pub use fleet::{
@@ -45,3 +53,7 @@ pub use pjrt_exec::PjrtExecutor;
 pub use server::{Coordinator, Executor};
 pub use synthetic::SyntheticExecutor;
 pub use trace::{Trace, TraceError, TraceEvent, TraceStream};
+pub use transport::{
+    LocalTransport, ProcessTransport, ShardReport, ShardTransport,
+    WireError,
+};

@@ -8,6 +8,8 @@
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::util::json::Json;
+
 /// Monotonically increasing request identifier.
 pub type RequestId = u64;
 
@@ -30,6 +32,85 @@ impl InputData {
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Wire form: `{"dtype":"f32"|"i32","data":[...]}`. Payloads cross
+    /// the process-transport boundary through this encoding; both
+    /// dtypes round-trip exactly (f32 → f64 → f32 is lossless, the
+    /// JSON writer prints shortest-round-trip floats, and non-finite
+    /// samples use [`Json::from_f32`]'s string encoding — JSON has no
+    /// NaN/inf numbers, and emitting them bare would make the whole
+    /// frame unparseable).
+    pub fn to_json(&self) -> Json {
+        let (dtype, data) = match self {
+            InputData::F32(v) => (
+                "f32",
+                v.iter().map(|&x| Json::from_f32(x)).collect(),
+            ),
+            InputData::I32(v) => (
+                "i32",
+                v.iter().map(|&x| Json::Num(x as f64)).collect(),
+            ),
+        };
+        Json::obj(vec![
+            ("dtype", Json::Str(dtype.to_string())),
+            ("data", Json::Arr(data)),
+        ])
+    }
+
+    /// Parse the wire form; unknown fields and dtypes are rejected.
+    pub fn from_json(v: &Json) -> Result<InputData, String> {
+        let obj = v.as_obj().ok_or("input must be an object")?;
+        let (mut dtype, mut data) = (None, None);
+        for (key, value) in obj {
+            match key.as_str() {
+                "dtype" => {
+                    dtype = Some(
+                        value.as_str().ok_or("dtype must be a string")?,
+                    )
+                }
+                "data" => {
+                    data = Some(
+                        value.as_arr().ok_or("data must be an array")?,
+                    )
+                }
+                other => {
+                    return Err(format!("unknown input field '{other}'"))
+                }
+            }
+        }
+        let (Some(dtype), Some(data)) = (dtype, data) else {
+            return Err("input needs dtype and data".to_string());
+        };
+        match dtype {
+            "f32" => Ok(InputData::F32(
+                data.iter()
+                    .map(|x| {
+                        x.as_f32().ok_or_else(|| {
+                            "f32 data must be numbers (or the NaN/inf \
+                             encodings)"
+                                .to_string()
+                        })
+                    })
+                    .collect::<Result<_, _>>()?,
+            )),
+            "i32" => Ok(InputData::I32(
+                data.iter()
+                    .map(|x| match x.as_f64() {
+                        // not as_u64: token ids may legitimately be
+                        // negative (padding/sentinel conventions)
+                        Some(n) if n.fract() == 0.0
+                            && (i32::MIN as f64..=i32::MAX as f64)
+                                .contains(&n) =>
+                        {
+                            Ok(n as i32)
+                        }
+                        _ => Err("i32 data must be integers".to_string()),
+                    })
+                    .collect::<Result<_, _>>()?,
+            )),
+            other => Err(format!("unknown dtype '{other}'")),
+        }
     }
 }
 
@@ -96,6 +177,54 @@ mod tests {
         assert_eq!(r.id, 7);
         assert_eq!(&*r.model, "bert");
         assert_eq!(r.k, 5);
+    }
+
+    #[test]
+    fn input_json_roundtrip_is_exact() {
+        let f = InputData::F32(vec![0.5, -1.25, 3.1415927]);
+        let back = InputData::from_json(&f.to_json()).unwrap();
+        match (&f, &back) {
+            (InputData::F32(a), InputData::F32(b)) => assert_eq!(a, b),
+            _ => panic!("dtype changed in roundtrip"),
+        }
+        let i = InputData::I32(vec![i32::MIN, -1, 0, 7, i32::MAX]);
+        let back = InputData::from_json(&i.to_json()).unwrap();
+        match (&i, &back) {
+            (InputData::I32(a), InputData::I32(b)) => assert_eq!(a, b),
+            _ => panic!("dtype changed in roundtrip"),
+        }
+        // non-finite samples (masked -inf logits, NaN from a buggy
+        // model) survive bit-for-bit instead of corrupting the frame
+        let weird = InputData::F32(vec![
+            f32::NAN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            1.5,
+        ]);
+        let back = InputData::from_json(&weird.to_json()).unwrap();
+        match back {
+            InputData::F32(v) => {
+                assert!(v[0].is_nan());
+                assert_eq!(v[1], f32::INFINITY);
+                assert_eq!(v[2], f32::NEG_INFINITY);
+                assert_eq!(v[3], 1.5);
+            }
+            _ => panic!("dtype changed in roundtrip"),
+        }
+    }
+
+    #[test]
+    fn input_json_violations_are_loud() {
+        use crate::util::json::Json;
+        let bad = Json::parse(r#"{"dtype":"f64","data":[1]}"#).unwrap();
+        assert!(InputData::from_json(&bad).unwrap_err().contains("f64"));
+        let bad = Json::parse(r#"{"dtype":"i32","data":[1.5]}"#).unwrap();
+        assert!(InputData::from_json(&bad).is_err());
+        let bad =
+            Json::parse(r#"{"dtype":"i32","data":[1],"pad":0}"#).unwrap();
+        assert!(InputData::from_json(&bad).unwrap_err().contains("pad"));
+        let bad = Json::parse(r#"{"dtype":"i32"}"#).unwrap();
+        assert!(InputData::from_json(&bad).is_err());
     }
 
     #[test]

@@ -11,6 +11,7 @@ use std::time::{Duration, Instant};
 
 use super::batcher::{BatchPlan, Batcher, BatcherConfig};
 use super::request::Request;
+use crate::util::json::Json;
 
 /// Routing key: one independent serving stream per (family, k). The
 /// family is an `Arc<str>` shared with every request routed to it, so
@@ -43,6 +44,73 @@ impl RouteError {
             RouteError::UnknownStream(key) => key,
             RouteError::QueueFull { stream, .. } => stream,
             RouteError::ShardDown(key) => key,
+        }
+    }
+
+    /// Wire form: `{"kind":..., "family":..., "k":..., ["depth":...]}`.
+    /// The process transport carries rejections back to the front as
+    /// typed errors, so this must round-trip (not just render).
+    pub fn to_json(&self) -> Json {
+        let (kind, (family, k), depth) = match self {
+            RouteError::UnknownStream(key) => ("unknown_stream", key, None),
+            RouteError::QueueFull { stream, depth } => {
+                ("queue_full", stream, Some(*depth))
+            }
+            RouteError::ShardDown(key) => ("shard_down", key, None),
+        };
+        let mut fields = vec![
+            ("kind", Json::Str(kind.to_string())),
+            ("family", Json::Str(family.to_string())),
+            ("k", Json::Num(*k as f64)),
+        ];
+        if let Some(depth) = depth {
+            fields.push(("depth", Json::Num(depth as f64)));
+        }
+        Json::obj(fields)
+    }
+
+    /// Parse the wire form; unknown kinds and fields are rejected.
+    pub fn from_json(v: &Json) -> Result<RouteError, String> {
+        let obj = v.as_obj().ok_or("route error must be an object")?;
+        let (mut kind, mut family, mut k, mut depth) =
+            (None, None, None, None);
+        let int = |x: &Json, field: &str| -> Result<usize, String> {
+            x.as_u64().map(|n| n as usize).ok_or_else(|| {
+                format!("{field} must be a non-negative integer")
+            })
+        };
+        for (key, value) in obj {
+            match key.as_str() {
+                "kind" => {
+                    kind =
+                        Some(value.as_str().ok_or("kind must be a string")?)
+                }
+                "family" => {
+                    family = Some(
+                        value.as_str().ok_or("family must be a string")?,
+                    )
+                }
+                "k" => k = Some(int(value, "k")?),
+                "depth" => depth = Some(int(value, "depth")?),
+                other => {
+                    return Err(format!(
+                        "unknown route-error field '{other}'"
+                    ))
+                }
+            }
+        }
+        let (Some(kind), Some(family), Some(k)) = (kind, family, k) else {
+            return Err("route error needs kind, family, k".to_string());
+        };
+        let stream: StreamKey = (Arc::from(family), k);
+        match kind {
+            "unknown_stream" => Ok(RouteError::UnknownStream(stream)),
+            "queue_full" => Ok(RouteError::QueueFull {
+                stream,
+                depth: depth.ok_or("queue_full needs depth")?,
+            }),
+            "shard_down" => Ok(RouteError::ShardDown(stream)),
+            other => Err(format!("unknown route-error kind '{other}'")),
         }
     }
 }
@@ -263,6 +331,39 @@ mod tests {
         );
         assert_eq!(r.rejected, 1);
         assert_eq!(r.queued(), 2, "rejected request never queued");
+    }
+
+    #[test]
+    fn route_error_json_roundtrip_is_identity() {
+        let errs = [
+            RouteError::UnknownStream(key("bert", 42)),
+            RouteError::QueueFull { stream: key("vit", 3), depth: 17 },
+            RouteError::ShardDown(key("bert", 5)),
+        ];
+        for e in errs {
+            let back = RouteError::from_json(&e.to_json()).unwrap();
+            assert_eq!(back, e);
+        }
+    }
+
+    #[test]
+    fn route_error_json_violations_are_loud() {
+        use crate::util::json::Json;
+        let bad =
+            Json::parse(r#"{"kind":"meltdown","family":"bert","k":5}"#)
+                .unwrap();
+        assert!(RouteError::from_json(&bad)
+            .unwrap_err()
+            .contains("meltdown"));
+        let bad = Json::parse(r#"{"kind":"queue_full","family":"b","k":5}"#)
+            .unwrap();
+        assert!(RouteError::from_json(&bad).unwrap_err().contains("depth"));
+        let bad = Json::parse(
+            r#"{"kind":"shard_down","family":"b","k":5,"why":"x"}"#,
+        )
+        .unwrap();
+        assert!(RouteError::from_json(&bad).unwrap_err().contains("why"));
+        assert!(RouteError::from_json(&Json::Null).is_err());
     }
 
     #[test]

@@ -208,8 +208,14 @@ impl StealCtx {
     }
 }
 
-/// Final accounting a shard thread returns on join.
-pub(crate) struct ShardReport {
+/// Final accounting a shard returns on shutdown — the report half of
+/// the [`ShardTransport`] contract (re-exported from
+/// `coordinator::transport`): thread-backed shards return it on join,
+/// process-backed shards ship it back as the wire protocol's
+/// `metrics_snapshot` frame.
+///
+/// [`ShardTransport`]: super::transport::ShardTransport
+pub struct ShardReport {
     /// Metrics per stream *executed* on this shard: every stream it
     /// owns (even with zero traffic), plus entries for foreign streams
     /// whose stolen batches it ran. The fleet front merges these across

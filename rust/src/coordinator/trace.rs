@@ -274,13 +274,10 @@ impl Trace {
 }
 
 fn field_u64(v: &Json, name: &str, line: usize) -> Result<u64, TraceError> {
-    match v.as_f64() {
-        Some(n) if n >= 0.0 && n.fract() == 0.0 => Ok(n as u64),
-        _ => Err(TraceError::Line {
-            line,
-            msg: format!("{name} must be a non-negative integer"),
-        }),
-    }
+    v.as_u64().ok_or_else(|| TraceError::Line {
+        line,
+        msg: format!("{name} must be a non-negative integer"),
+    })
 }
 
 #[cfg(test)]

@@ -1,0 +1,122 @@
+//! [`LocalTransport`]: the in-process shard wiring, extracted from the
+//! pre-trait `Fleet::start_with` unchanged — shard threads, `mpsc`
+//! channels, and (when stealing is enabled) the fleet-wide steal deque
+//! plus peer-poke senders. This is the behavior-preserving half of the
+//! transport redesign: batch composition, metrics accounting, and
+//! deterministic replay are byte-identical to the channel-era fleet,
+//! which the existing fleet tests and the ci.sh replay gate assert.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use crate::coordinator::fleet::StealPolicy;
+use crate::coordinator::request::{Request, Response};
+use crate::coordinator::router::{RouteError, Router};
+use crate::coordinator::shard::{
+    start_shard, start_shard_with, ExecutorFactory, ShardHandle, ShardMsg,
+    ShardReport, StealCtx, StealShared,
+};
+
+use super::ShardTransport;
+
+/// In-process transport: one OS thread per shard, channel-delivered
+/// requests, in-memory work-stealing.
+pub struct LocalTransport {
+    shards: Vec<ShardHandle>,
+}
+
+impl LocalTransport {
+    /// Spawn one shard event loop per router/factory pair. When
+    /// stealing is enabled (and there is more than one shard), every
+    /// shard holds its peers' channel senders for donation pokes —
+    /// which means the channels only disconnect after an explicit
+    /// shutdown, so a stealing fleet must always be shut down, never
+    /// leaked.
+    pub(crate) fn spawn(
+        routers: Vec<Router>,
+        factories: Vec<ExecutorFactory>,
+        mut steal: StealPolicy,
+    ) -> LocalTransport {
+        assert_eq!(
+            routers.len(),
+            factories.len(),
+            "one router per shard factory"
+        );
+        // `StackConfig::validate` rejects min_backlog = 0, but library
+        // callers can build a StealPolicy directly; clamp here (where
+        // the policy is consumed) so a donor always keeps at least one
+        // batch instead of idling itself and re-stealing its own work.
+        if steal.enabled {
+            steal.min_backlog = steal.min_backlog.max(1);
+        }
+        let n = factories.len();
+        let shards = if steal.enabled && n > 1 {
+            let shared = Arc::new(StealShared::new(n));
+            let channels: Vec<_> =
+                (0..n).map(|_| mpsc::channel::<ShardMsg>()).collect();
+            let peers: Vec<mpsc::Sender<ShardMsg>> =
+                channels.iter().map(|(tx, _)| tx.clone()).collect();
+            routers
+                .into_iter()
+                .zip(factories)
+                .zip(channels)
+                .enumerate()
+                .map(|(i, ((router, factory), (tx, rx)))| {
+                    let ctx = StealCtx::enabled(
+                        i,
+                        steal,
+                        shared.clone(),
+                        peers.clone(),
+                    );
+                    start_shard_with(router, factory, tx, rx, ctx)
+                })
+                .collect()
+        } else {
+            routers
+                .into_iter()
+                .zip(factories)
+                .map(|(router, factory)| start_shard(router, factory))
+                .collect()
+        };
+        LocalTransport { shards }
+    }
+}
+
+impl ShardTransport for LocalTransport {
+    fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn kind(&self) -> &'static str {
+        "local"
+    }
+
+    fn submit(
+        &mut self,
+        shard: usize,
+        req: Request,
+    ) -> Result<mpsc::Receiver<Response>, RouteError> {
+        let (tx, rx) = mpsc::channel();
+        // A dead shard (panicked executor, early exit) is a typed
+        // rejection, not a panic — shutdown will additionally report it
+        // as a `ShardPanic`.
+        if let Err(mpsc::SendError(ShardMsg::Submit(req, _))) =
+            self.shards[shard].tx.send(ShardMsg::Submit(req, tx))
+        {
+            return Err(RouteError::ShardDown((req.model, req.k)));
+        }
+        Ok(rx)
+    }
+
+    fn shutdown(self: Box<Self>) -> Vec<Option<ShardReport>> {
+        // Signal every shard before joining any, so they drain their
+        // queues concurrently.
+        for shard in &self.shards {
+            let _ = shard.tx.send(ShardMsg::Shutdown);
+        }
+        self.shards
+            .into_iter()
+            .map(|shard| shard.handle.join().ok())
+            .collect()
+    }
+}

@@ -1,0 +1,87 @@
+//! The fleet↔shard boundary, as an API: [`ShardTransport`].
+//!
+//! PRs 3–4 built the fleet as N shard event loops behind one front, but
+//! the boundary between them was hard-wired to in-memory `mpsc`
+//! channels and a shared steal deque — no amount of incremental work on
+//! that wiring reaches cross-*process* (and later cross-host) serving.
+//! This module turns the boundary into a trait the front programs
+//! against:
+//!
+//! * [`local::LocalTransport`] — today's wiring, extracted verbatim:
+//!   shard threads, channels, and the in-process work-stealing deque.
+//!   Behavior-preserving: batch composition, metrics, and deterministic
+//!   replay are byte-identical to the pre-trait fleet.
+//! * [`proc::ProcessTransport`] — `topkima shard-worker` subprocesses
+//!   speaking the versioned, length-prefixed JSONL protocol in
+//!   [`wire`] over stdin/stdout. Same `Fleet` front, same per-stream
+//!   guarantees; a dead worker surfaces as typed
+//!   [`RouteError::ShardDown`] submissions and a `ShardPanic`-style
+//!   shutdown error instead of a hang.
+//!
+//! The trait is deliberately narrow — deliver one request to one shard,
+//! tear everything down and collect the per-shard reports — because
+//! that is the whole contract the front needs. Work-stealing stays a
+//! transport concern: the local transport mediates it in-process, the
+//! process transport rejects steal-enabled configs at validation (the
+//! wire protocol reserves `donate`/`steal`/`poke` frames so a future
+//! transport-mediated implementation is not a format break). A future
+//! cross-host transport (sockets instead of pipes) slots in behind the
+//! same trait.
+//!
+//! [`RouteError::ShardDown`]: crate::coordinator::RouteError::ShardDown
+
+pub mod local;
+pub mod proc;
+pub mod wire;
+
+use std::sync::mpsc;
+
+use super::request::{Request, Response};
+use super::router::RouteError;
+pub use super::shard::ShardReport;
+
+pub use local::LocalTransport;
+pub use proc::{run_shard_worker, ProcessOptions, ProcessTransport};
+pub use wire::{Frame, WireError, WIRE_FORMAT, WIRE_VERSION};
+
+/// How requests reach a shard and reports come back — the one interface
+/// between the `Fleet` front and its shard event loops.
+///
+/// Implementations own the shards' lifecycle: the front never sees
+/// threads, channels, pipes, or processes, only this contract:
+///
+/// * `submit` delivers one request to shard `shard` (the front already
+///   resolved the stream→shard assignment via `shard_of`) and returns
+///   the receiver its [`Response`] will arrive on. A shard that can no
+///   longer accept work is a typed [`RouteError::ShardDown`], never a
+///   panic; a request that is accepted but later fails has its reply
+///   sender dropped, so the caller's `recv` fails promptly.
+/// * `shutdown` drains every shard and returns one entry per shard:
+///   `Some(report)` for a clean exit, `None` for a shard that panicked
+///   or died (the front turns those into a `ShardPanic` error carrying
+///   the healthy shards' partial metrics).
+pub trait ShardTransport: Send {
+    /// Number of shards this transport runs.
+    fn shard_count(&self) -> usize;
+
+    /// Stable identifier for logs and BENCH output ("local", "process").
+    fn kind(&self) -> &'static str;
+
+    /// Deliver one request to `shard`; its reply arrives on the
+    /// returned receiver.
+    fn submit(
+        &mut self,
+        shard: usize,
+        req: Request,
+    ) -> Result<mpsc::Receiver<Response>, RouteError>;
+
+    /// OS pid of the shard's worker process, when it has one (the
+    /// process transport; `None` for in-process shard threads).
+    fn worker_pid(&self, _shard: usize) -> Option<u32> {
+        None
+    }
+
+    /// Tear down every shard and collect final reports, one per shard
+    /// in index order; `None` marks a shard that panicked or died.
+    fn shutdown(self: Box<Self>) -> Vec<Option<ShardReport>>;
+}

@@ -1,0 +1,722 @@
+//! [`ProcessTransport`]: shards as `topkima shard-worker` subprocesses.
+//!
+//! The front spawns one worker per shard and speaks the versioned,
+//! length-prefixed JSONL protocol of [`super::wire`] over the worker's
+//! stdin/stdout (stderr is inherited, so worker diagnostics land in the
+//! front's log). The handshake ships the *entire* `StackConfig` to the
+//! worker, which rebuilds the pipeline from it — front and worker
+//! derive stream policies, bucket lists, and executor costs from the
+//! same validated value, so the two processes cannot drift.
+//!
+//! Per shard the front keeps a writer (submits + shutdown), a reader
+//! thread (replies + the final metrics snapshot), and a waiter map from
+//! request id to reply sender. Failure is typed end to end: a worker
+//! that dies mid-load trips the shard's `down` flag (EOF or a framing
+//! error on either pipe), the reader drops every pending waiter so
+//! blocked `recv`s fail promptly instead of hanging, subsequent submits
+//! return [`RouteError::ShardDown`], and `Fleet::shutdown` reports the
+//! shard like a panicked thread (`ShardPanic` with partial metrics).
+//!
+//! Work-stealing is not mediated over this transport (config validation
+//! rejects `fleet.steal.enabled` with the process transport); the wire
+//! protocol reserves the `donate`/`steal`/`poke` frames so adding it
+//! later is a behavior change, not a format break.
+//!
+//! [`RouteError::ShardDown`]: crate::coordinator::RouteError::ShardDown
+
+use std::collections::{BTreeMap, HashMap};
+use std::io::{BufReader, BufWriter, Write};
+use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::batcher::BatchPlan;
+use crate::coordinator::fleet::shard_of;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{InputData, Request, RequestId, Response};
+use crate::coordinator::router::{RouteError, Router, StreamKey};
+use crate::coordinator::server::Executor;
+use crate::coordinator::shard::{ShardReport, IDLE_WAIT};
+use crate::util::json::Json;
+
+use super::wire::{self, Frame, ReplyError, ReplyOk, WireError};
+use super::ShardTransport;
+
+type Waiters = Arc<Mutex<HashMap<RequestId, mpsc::Sender<Response>>>>;
+
+fn lock<'a, T>(m: &'a Mutex<T>) -> std::sync::MutexGuard<'a, T> {
+    // a reader thread can only die between frames; never lose the map
+    // to lock poisoning
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Wall-clock µs since the UNIX epoch (0 when the clock is unusable) —
+/// the cross-process timestamp submit frames carry so worker-side
+/// latency accounting can include pipe transit (front and workers
+/// share one host clock).
+fn unix_us() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_micros() as u64)
+        .unwrap_or(0)
+}
+
+/// Everything [`ProcessTransport::spawn`] needs, already resolved from
+/// `StackConfig.fleet.transport` by the pipeline builder.
+#[derive(Clone, Debug)]
+pub struct ProcessOptions {
+    /// Worker subprocesses to spawn. Must equal the shipped config's
+    /// `fleet.shards` — routing and executor preload both partition by
+    /// it, and every worker verifies the two agree before going ready.
+    pub shards: usize,
+    /// The full stack configuration, shipped verbatim in the `init`
+    /// frame.
+    pub config: Json,
+    /// Worker binary path; `None` runs the current executable (the
+    /// usual case: `topkima` spawning `topkima shard-worker`).
+    pub worker: Option<String>,
+    /// Extra environment variables for every worker.
+    pub env: Vec<(String, String)>,
+    /// Force the synthetic executor in workers (serve-fleet's load
+    /// generator measures the control plane, not model accuracy).
+    pub synthetic: bool,
+}
+
+/// One worker subprocess: pipes, waiter map, reader thread, liveness.
+struct ProcShard {
+    child: Child,
+    writer: Option<BufWriter<ChildStdin>>,
+    waiters: Waiters,
+    down: Arc<AtomicBool>,
+    reader: Option<JoinHandle<Result<ShardReport, WireError>>>,
+}
+
+impl Drop for ProcShard {
+    fn drop(&mut self) {
+        // closing stdin is the EOF backstop: the worker's event loop
+        // treats it like a shutdown frame, so the child always exits
+        self.writer = None;
+        if let Some(handle) = self.reader.take() {
+            let _ = handle.join();
+        }
+        let _ = self.child.wait();
+    }
+}
+
+/// Cross-process shard transport (see the module docs).
+pub struct ProcessTransport {
+    shards: Vec<ProcShard>,
+}
+
+impl ProcessTransport {
+    /// Spawn one `shard-worker` subprocess per shard and complete the
+    /// wire handshake asynchronously (each shard's reader thread
+    /// validates the `ready` frame). Fails loudly when a worker binary
+    /// cannot be spawned at all; a worker that starts and then dies is
+    /// a per-shard [`RouteError::ShardDown`], not a spawn failure.
+    ///
+    /// [`RouteError::ShardDown`]: crate::coordinator::RouteError::ShardDown
+    pub fn spawn(opts: &ProcessOptions) -> Result<ProcessTransport, WireError> {
+        assert!(opts.shards > 0, "process transport needs at least one shard");
+        let exe = match &opts.worker {
+            Some(path) => std::path::PathBuf::from(path),
+            None => std::env::current_exe().map_err(|e| {
+                WireError::Io(format!("resolving current executable: {e}"))
+            })?,
+        };
+        let mut shards = Vec::with_capacity(opts.shards);
+        for shard in 0..opts.shards {
+            let mut child = Command::new(&exe)
+                .arg("shard-worker")
+                .stdin(Stdio::piped())
+                .stdout(Stdio::piped())
+                .stderr(Stdio::inherit())
+                .envs(opts.env.iter().map(|(k, v)| (k.clone(), v.clone())))
+                .spawn()
+                .map_err(|e| {
+                    WireError::Io(format!(
+                        "spawning shard worker {} ({}): {e}",
+                        shard,
+                        exe.display()
+                    ))
+                })?;
+            let stdin = child.stdin.take().expect("piped stdin");
+            let stdout = child.stdout.take().expect("piped stdout");
+            let mut writer = BufWriter::new(stdin);
+            let waiters: Waiters = Arc::new(Mutex::new(HashMap::new()));
+            let down = Arc::new(AtomicBool::new(false));
+            let init = Frame::Init {
+                shard,
+                shards: opts.shards,
+                synthetic: opts.synthetic,
+                config: opts.config.clone(),
+            };
+            if let Err(e) = wire::write_frame(&mut writer, &init) {
+                // a worker dead on arrival is a down shard, not a spawn
+                // failure — submissions get typed ShardDown rejections
+                eprintln!("shard worker {shard}: init not delivered: {e}");
+                down.store(true, Ordering::Release);
+            }
+            let reader = {
+                let waiters = waiters.clone();
+                let down = down.clone();
+                std::thread::spawn(move || {
+                    reader_loop(stdout, waiters, down, shard)
+                })
+            };
+            shards.push(ProcShard {
+                child,
+                writer: Some(writer),
+                waiters,
+                down,
+                reader: Some(reader),
+            });
+        }
+        Ok(ProcessTransport { shards })
+    }
+}
+
+impl ShardTransport for ProcessTransport {
+    fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn kind(&self) -> &'static str {
+        "process"
+    }
+
+    fn submit(
+        &mut self,
+        shard: usize,
+        req: Request,
+    ) -> Result<mpsc::Receiver<Response>, RouteError> {
+        let s = &mut self.shards[shard];
+        let key: StreamKey = (req.model.clone(), req.k);
+        if s.down.load(Ordering::Acquire) || s.writer.is_none() {
+            return Err(RouteError::ShardDown(key));
+        }
+        let (tx, rx) = mpsc::channel();
+        // insert before writing: the reply may race back before this
+        // thread would regain the lock
+        lock(&s.waiters).insert(req.id, tx);
+        let frame = Frame::Submit {
+            id: req.id,
+            family: req.model.to_string(),
+            k: req.k,
+            t_unix_us: unix_us(),
+            input: req.input,
+        };
+        if let Err(e) = wire::write_frame(s.writer.as_mut().unwrap(), &frame)
+        {
+            eprintln!("shard worker {shard}: submit not delivered: {e}");
+            s.down.store(true, Ordering::Release);
+            lock(&s.waiters).remove(&req.id);
+            return Err(RouteError::ShardDown(key));
+        }
+        // Close the race with the reader's exit cleanup: the reader stores
+        // `down` *before* clearing the waiter map, so if `down` still
+        // reads false here our waiter either survives (live worker) or
+        // was just swept by the clear (recv fails promptly) — but if it
+        // reads true, our insert may have landed *after* the sweep and
+        // would leak until transport drop. Never leave a waiter behind
+        // on a dead shard.
+        if s.down.load(Ordering::Acquire) {
+            lock(&s.waiters).remove(&req.id);
+            return Err(RouteError::ShardDown(key));
+        }
+        Ok(rx)
+    }
+
+    fn worker_pid(&self, shard: usize) -> Option<u32> {
+        self.shards.get(shard).map(|s| s.child.id())
+    }
+
+    fn shutdown(mut self: Box<Self>) -> Vec<Option<ShardReport>> {
+        // Signal every worker before joining any, so they drain their
+        // queues concurrently; dropping the writer closes stdin, which
+        // backstops the frame for a worker that missed it.
+        for s in &mut self.shards {
+            if let Some(writer) = s.writer.as_mut() {
+                let _ = wire::write_frame(writer, &Frame::Shutdown);
+            }
+            s.writer = None;
+        }
+        self.shards
+            .iter_mut()
+            .map(|s| {
+                let report = s
+                    .reader
+                    .take()
+                    .and_then(|handle| handle.join().ok())
+                    .and_then(|result| result.ok());
+                let _ = s.child.wait();
+                report
+            })
+            .collect()
+    }
+}
+
+/// Parse the worker's stdout until its final metrics snapshot: `ready`
+/// handshake (version-checked), then replies dispatched to waiters.
+/// Whatever the exit path — snapshot, EOF, framing error, version skew
+/// — the shard is marked down and every pending waiter is dropped, so
+/// blocked callers fail promptly instead of hanging on a dead worker.
+fn reader_loop(
+    stdout: ChildStdout,
+    waiters: Waiters,
+    down: Arc<AtomicBool>,
+    shard: usize,
+) -> Result<ShardReport, WireError> {
+    let mut reader = BufReader::new(stdout);
+    let result = (|| {
+        match wire::read_frame(&mut reader)? {
+            Some(Frame::Ready { shard: s }) if s == shard => {}
+            Some(Frame::Ready { shard: s }) => {
+                return Err(WireError::Protocol(format!(
+                    "worker identifies as shard {s}, expected {shard}"
+                )))
+            }
+            Some(Frame::Fatal { msg }) => {
+                return Err(WireError::Protocol(format!("worker: {msg}")))
+            }
+            Some(other) => {
+                return Err(WireError::Protocol(format!(
+                    "expected ready handshake, got '{}'",
+                    other.kind()
+                )))
+            }
+            None => {
+                return Err(WireError::Protocol(
+                    "worker exited before the ready handshake".to_string(),
+                ))
+            }
+        }
+        loop {
+            match wire::read_frame(&mut reader)? {
+                Some(Frame::Reply { id, result }) => {
+                    let tx = lock(&waiters).remove(&id);
+                    if let (Some(tx), Ok(ok)) = (tx, result) {
+                        let _ = tx.send(Response {
+                            id,
+                            output: ok.output,
+                            latency_us: ok.latency_us,
+                            batch_size: ok.batch_size,
+                        });
+                    }
+                    // an error reply just dropped the sender: the
+                    // caller's recv fails immediately, matching the
+                    // local shard loop's rejection behavior
+                }
+                Some(Frame::MetricsSnapshot {
+                    streams,
+                    rejected,
+                    stolen,
+                    donated,
+                }) => {
+                    let streams: BTreeMap<StreamKey, Metrics> = streams
+                        .into_iter()
+                        .map(|(family, k, m)| {
+                            ((Arc::from(family.as_str()), k), m)
+                        })
+                        .collect();
+                    return Ok(ShardReport {
+                        streams,
+                        rejected,
+                        stolen,
+                        donated,
+                    });
+                }
+                Some(Frame::Fatal { msg }) => {
+                    return Err(WireError::Protocol(format!("worker: {msg}")))
+                }
+                Some(other) => {
+                    return Err(WireError::Protocol(format!(
+                        "unexpected '{}' frame from worker",
+                        other.kind()
+                    )))
+                }
+                None => {
+                    return Err(WireError::Protocol(
+                        "worker exited without a metrics snapshot \
+                         (killed or crashed)"
+                            .to_string(),
+                    ))
+                }
+            }
+        }
+    })();
+    if let Err(e) = &result {
+        eprintln!("shard worker {shard}: {e}");
+    }
+    down.store(true, Ordering::Release);
+    // dropping the senders fails every pending recv — no hangs
+    lock(&waiters).clear();
+    result
+}
+
+// ---- the worker side ----------------------------------------------------
+
+enum WorkerMsg {
+    Frame(Frame),
+    Bad(WireError),
+}
+
+enum Flow {
+    Continue,
+    Finish,
+}
+
+/// Entry point of `topkima shard-worker`: one shard event loop speaking
+/// the wire protocol on stdin/stdout. Internal — the process transport
+/// spawns it; it is not meant for interactive use (it blocks reading
+/// the `init` frame).
+///
+/// The loop mirrors the in-process shard loop: sleep until the oldest
+/// queued request's batching deadline, drain the whole arrival backlog
+/// before forming batches, execute ready batches synchronously, flush
+/// everything on shutdown (or EOF), then emit the final
+/// `metrics_snapshot`. Batch *formation* is the same `Router`/`Batcher`
+/// code the local transport runs, which is what makes deterministic
+/// replay byte-identical across transports.
+pub fn run_shard_worker() -> Result<()> {
+    let (tx, rx) = mpsc::channel::<WorkerMsg>();
+    // All reading happens on the forwarder thread (one buffered reader
+    // owns stdin); the main loop multiplexes frames and batching
+    // deadlines through the channel, exactly like a shard thread.
+    std::thread::spawn(move || {
+        let mut reader = BufReader::new(std::io::stdin());
+        loop {
+            match wire::read_frame(&mut reader) {
+                Ok(Some(frame)) => {
+                    if tx.send(WorkerMsg::Frame(frame)).is_err() {
+                        return;
+                    }
+                }
+                Ok(None) => return, // EOF → channel disconnect
+                Err(e) => {
+                    let _ = tx.send(WorkerMsg::Bad(e));
+                    return;
+                }
+            }
+        }
+    });
+    let mut out = BufWriter::new(std::io::stdout());
+
+    // -- handshake --------------------------------------------------------
+    let (shard, shards, synthetic, config) = match rx.recv() {
+        Ok(WorkerMsg::Frame(Frame::Init {
+            shard,
+            shards,
+            synthetic,
+            config,
+        })) => (shard, shards, synthetic, config),
+        Ok(WorkerMsg::Frame(other)) => {
+            let msg =
+                format!("expected init handshake, got '{}'", other.kind());
+            fatal(&mut out, &msg);
+            bail!("{msg}");
+        }
+        Ok(WorkerMsg::Bad(e)) => {
+            fatal(&mut out, &e.to_string());
+            bail!("{e}");
+        }
+        Err(_) => bail!("front closed the pipe before the init handshake"),
+    };
+    if shards == 0 || shard >= shards {
+        let msg = format!("init names shard {shard} of {shards}");
+        fatal(&mut out, &msg);
+        bail!("{msg}");
+    }
+    let builder = match crate::pipeline::StackConfig::from_json(&config)
+        .and_then(|cfg| cfg.build())
+    {
+        Ok(b) => b,
+        Err(e) => {
+            let msg = format!("init config rejected: {e}");
+            fatal(&mut out, &msg);
+            bail!("{msg}");
+        }
+    };
+    // The init frame's shard count must be the config's own: routing
+    // (here) and executor preload (build_shard_executor) both partition
+    // by shard count, and a disagreement would desync them silently —
+    // streams routed to this shard whose executables were never loaded.
+    if shards != builder.config().fleet.shards {
+        let msg = format!(
+            "init names {shards} shard(s) but the shipped config says \
+             fleet.shards = {}",
+            builder.config().fleet.shards
+        );
+        fatal(&mut out, &msg);
+        bail!("{msg}");
+    }
+    let mut router = Router::new();
+    for def in builder.stream_defs() {
+        if shard_of(&def.key(), shards) == shard {
+            router.register_def(def);
+        }
+    }
+    // The executor is built *in this process* (PJRT handles never cross
+    // threads, let alone processes) — artifacts when present and not
+    // forced synthetic, the analytic-cost synthetic executor otherwise.
+    let mut executor: Box<dyn Executor> =
+        match builder.build_shard_executor(shard, synthetic) {
+            Ok(e) => e,
+            Err(e) => {
+                let msg = format!("shard executor: {e}");
+                fatal(&mut out, &msg);
+                bail!("{msg}");
+            }
+        };
+    wire::write_frame(&mut out, &Frame::Ready { shard })
+        .map_err(|e| anyhow!("ready handshake: {e}"))?;
+
+    // -- event loop -------------------------------------------------------
+    let mut streams: BTreeMap<StreamKey, Metrics> = router
+        .streams()
+        .into_iter()
+        .map(|key| (key, Metrics::default()))
+        .collect();
+    let mut rejected = 0u64;
+    let mut families: HashMap<String, Arc<str>> = HashMap::new();
+    let mut inputs: Vec<Arc<InputData>> = Vec::new();
+    loop {
+        let wait = router.next_deadline(Instant::now()).unwrap_or(IDLE_WAIT);
+        let mut finish = false;
+        match rx.recv_timeout(wait) {
+            Ok(msg) => {
+                if let Flow::Finish = handle_msg(
+                    msg, &mut router, &mut streams, &mut rejected,
+                    &mut families, &mut out,
+                )? {
+                    finish = true;
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => finish = true,
+        }
+        // Drain the whole backlog before forming batches so a burst
+        // fills real buckets instead of timeout-firing as singles
+        // (mirrors the local shard loop).
+        while !finish {
+            match rx.try_recv() {
+                Ok(msg) => {
+                    if let Flow::Finish = handle_msg(
+                        msg, &mut router, &mut streams, &mut rejected,
+                        &mut families, &mut out,
+                    )? {
+                        finish = true;
+                    }
+                }
+                Err(_) => break,
+            }
+        }
+        let plans = if finish {
+            router.flush()
+        } else {
+            router.ready_batches(Instant::now())
+        };
+        for (key, plan) in plans {
+            let metrics = streams
+                .get_mut(&key)
+                .expect("batch from registered stream");
+            run_wire_batch(
+                &key, plan, executor.as_mut(), metrics, &mut inputs,
+                &mut out,
+            )?;
+        }
+        if finish {
+            let snapshot = Frame::MetricsSnapshot {
+                streams: streams
+                    .into_iter()
+                    .map(|((family, k), m)| (family.to_string(), k, m))
+                    .collect(),
+                rejected,
+                stolen: 0,
+                donated: 0,
+            };
+            // the front may already be gone on the EOF path; the
+            // snapshot is then moot, not an error worth a nonzero exit
+            let _ = wire::write_frame(&mut out, &snapshot);
+            return Ok(());
+        }
+    }
+}
+
+/// Handle one frame from the front. Submissions are routed exactly like
+/// the local shard loop's `admit`, except a rejection additionally
+/// crosses the wire as a typed error reply (the front drops the waiter
+/// so the caller's `recv` fails immediately).
+fn handle_msg(
+    msg: WorkerMsg,
+    router: &mut Router,
+    streams: &mut BTreeMap<StreamKey, Metrics>,
+    rejected: &mut u64,
+    families: &mut HashMap<String, Arc<str>>,
+    out: &mut impl Write,
+) -> Result<Flow> {
+    match msg {
+        WorkerMsg::Frame(Frame::Submit { id, family, k, t_unix_us, input }) => {
+            // intern the family once; the steady-state path is a map hit
+            // with no allocation (§Perf: the event loop is a hot path)
+            let model = match families.get(&family) {
+                Some(model) => model.clone(),
+                None => {
+                    let model: Arc<str> = Arc::from(family.as_str());
+                    families.insert(family, model.clone());
+                    model
+                }
+            };
+            // Back-date the enqueue instant by the observed pipe
+            // transit, so end-to-end latency matches the local
+            // transport's semantics (which times from front submission,
+            // not shard receipt). Guarded: a zero/askew front clock or
+            // an un-subtractable Instant falls back to "now", i.e. the
+            // worker-side-only measurement.
+            let now = Instant::now();
+            let enqueued = match t_unix_us {
+                0 => now,
+                sent => now
+                    .checked_sub(std::time::Duration::from_micros(
+                        unix_us().saturating_sub(sent),
+                    ))
+                    .unwrap_or(now),
+            };
+            let req = Request { id, model, k, input, enqueued };
+            if let Err(e) = router.route(req) {
+                match &e {
+                    // mirror the local admit(): admission-control
+                    // rejections land on the stream, unknown streams on
+                    // the shard counter
+                    RouteError::QueueFull { stream, .. } => {
+                        match streams.get_mut(stream) {
+                            Some(m) => m.record_error(),
+                            None => *rejected += 1,
+                        }
+                    }
+                    _ => *rejected += 1,
+                }
+                wire::write_frame(
+                    out,
+                    &Frame::Reply {
+                        id,
+                        result: Err(ReplyError::Route(e)),
+                    },
+                )
+                .map_err(|e| anyhow!("reply: {e}"))?;
+            }
+            Ok(Flow::Continue)
+        }
+        WorkerMsg::Frame(Frame::Poke) => Ok(Flow::Continue),
+        WorkerMsg::Frame(Frame::Shutdown) => Ok(Flow::Finish),
+        WorkerMsg::Frame(frame @ (Frame::Donate { .. } | Frame::Steal)) => {
+            let msg = format!(
+                "'{}' frame received, but work-stealing is not mediated \
+                 over the process transport (config validation rejects \
+                 fleet.steal with it)",
+                frame.kind()
+            );
+            fatal(out, &msg);
+            bail!("{msg}");
+        }
+        WorkerMsg::Frame(Frame::Fatal { msg }) => {
+            bail!("front reported fatal: {msg}");
+        }
+        WorkerMsg::Frame(other) => {
+            let msg =
+                format!("unexpected '{}' frame from front", other.kind());
+            fatal(out, &msg);
+            bail!("{msg}");
+        }
+        WorkerMsg::Bad(e) => {
+            fatal(out, &e.to_string());
+            bail!("{e}");
+        }
+    }
+}
+
+/// Execute one formed batch and stream the replies back. The
+/// output-arity contract matches the local shard loop: a short (or
+/// long) output vector fails the *batch* — every request gets a typed
+/// error reply and an error count, none may report success.
+fn run_wire_batch(
+    key: &StreamKey,
+    plan: BatchPlan,
+    executor: &mut dyn Executor,
+    metrics: &mut Metrics,
+    inputs: &mut Vec<Arc<InputData>>,
+    out: &mut impl Write,
+) -> Result<()> {
+    inputs.clear();
+    inputs.extend(plan.requests.iter().map(|r| r.input.clone()));
+    let outcome = executor.execute(key, inputs, plan.bucket);
+    match outcome {
+        Ok(outputs) if outputs.len() == plan.requests.len() => {
+            let now = Instant::now();
+            let mut lats = Vec::with_capacity(plan.requests.len());
+            for (req, output) in plan.requests.iter().zip(outputs) {
+                let latency_us =
+                    now.duration_since(req.enqueued).as_secs_f64() * 1e6;
+                lats.push(latency_us);
+                wire::write_frame(
+                    out,
+                    &Frame::Reply {
+                        id: req.id,
+                        result: Ok(ReplyOk {
+                            output,
+                            latency_us,
+                            batch_size: plan.bucket,
+                        }),
+                    },
+                )
+                .map_err(|e| anyhow!("reply: {e}"))?;
+            }
+            metrics.record_batch(&lats, plan.bucket, plan.padding());
+        }
+        Ok(short) => {
+            fail_batch(
+                &plan,
+                format!(
+                    "executor answered {} of {} requests",
+                    short.len(),
+                    plan.requests.len()
+                ),
+                metrics,
+                out,
+            )?;
+        }
+        Err(e) => {
+            fail_batch(&plan, format!("executor failed: {e}"), metrics, out)?;
+        }
+    }
+    Ok(())
+}
+
+fn fail_batch(
+    plan: &BatchPlan,
+    msg: String,
+    metrics: &mut Metrics,
+    out: &mut impl Write,
+) -> Result<()> {
+    for req in &plan.requests {
+        metrics.record_error();
+        wire::write_frame(
+            out,
+            &Frame::Reply {
+                id: req.id,
+                result: Err(ReplyError::Batch(msg.clone())),
+            },
+        )
+        .map_err(|e| anyhow!("reply: {e}"))?;
+    }
+    Ok(())
+}
+
+/// Best-effort fatal frame (the peer may already be gone).
+fn fatal(out: &mut impl Write, msg: &str) {
+    let _ = wire::write_frame(out, &Frame::Fatal { msg: msg.to_string() });
+}

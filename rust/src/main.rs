@@ -15,7 +15,8 @@
 //!   [--limit N]` — re-check Fig 3 on the rust stack: run every exported
 //!   per-k executable over the eval split and print accuracy vs k.
 //! * `serve-fleet [--seed S] [--duration-ms D] [--out FILE]
-//!   [--shards N] [--steal on|off] [--steal-min-backlog N]
+//!   [--shards N] [--transport local|process] [--transport-worker PATH]
+//!   [--transport-env K=V] [--steal on|off] [--steal-min-backlog N]
 //!   [--steal-victim least-loaded|round-robin] [--trace FILE]
 //!   [--export-trace FILE] [--deterministic] [--config fleet.json]
 //!   [stack flags...]` — start the sharded fleet engine over the
@@ -23,13 +24,19 @@
 //!   drive it with a seeded multi-stream synthetic load (per-stream
 //!   Poisson arrivals at each stream's `rate_rps`) or a replayed JSONL
 //!   trace (`--trace`; `--export-trace` writes the schedule actually
-//!   submitted, so traces are self-bootstrapping). `--steal on` lets
-//!   overloaded shards donate formed batches to idle peers;
+//!   submitted, so traces are self-bootstrapping). `--transport process`
+//!   runs each shard as a `topkima shard-worker` subprocess speaking
+//!   the versioned wire protocol (DESIGN.md §11) — a deterministic
+//!   replay produces a byte-identical BENCH file on either transport,
+//!   which ci.sh asserts. `--steal on` lets overloaded shards donate
+//!   formed batches to idle peers (local transport only);
 //!   `--deterministic` replays with lifted deadlines and emits only
 //!   schedule-determined fields, so the same trace always produces a
 //!   byte-identical `BENCH_fleet.json`. Per-stream p50/p99 latency,
 //!   batch occupancy, padding waste, and per-shard stolen/donated
 //!   counters land in `BENCH_fleet.json`.
+//! * `shard-worker` — internal: one fleet shard driven over
+//!   stdin/stdout by the process transport; never invoked by hand.
 //! * `sweep-hw [--threads N] [--ks 1,2,5,10] [--seq-lens 128,384]
 //!   [--kinds conv,dtopk,topkima] [--noise-points ideal,default]
 //!   [--q-rows N] [--seed S] [--shard-index I --shard-count C]
@@ -52,6 +59,9 @@
 //!   exist).
 //! * `config [--save FILE] [flags...]` — print (or save) the resolved
 //!   `StackConfig` as JSON.
+//! * `help [cmd]` — subcommand overview, or one subcommand's full flag
+//!   list. An *unknown* subcommand prints the overview and exits
+//!   nonzero (a typo in CI must fail the step, not pass silently).
 
 use std::path::Path;
 use std::time::Duration;
@@ -72,18 +82,158 @@ fn main() -> Result<()> {
         "report" => cmd_report(rest),
         "serve" => cmd_serve(rest),
         "serve-fleet" => cmd_serve_fleet(rest),
+        "shard-worker" => topkima::coordinator::transport::run_shard_worker(),
         "sweep" => cmd_sweep(rest),
         "sweep-hw" => cmd_sweep_hw(rest),
         "sweep-merge" => cmd_sweep_merge(rest),
         "bench-diff" => cmd_bench_diff(rest),
         "check" => cmd_check(rest),
         "config" => cmd_config(rest),
-        _ => {
-            eprintln!(
-                "usage: topkima <serve|serve-fleet|report|sweep|sweep-hw|\
-                 sweep-merge|bench-diff|check|config> [flags]\n\
-                 see rust/src/main.rs doc comment"
-            );
+        "help" | "--help" | "-h" => cmd_help(rest),
+        other => {
+            // A typo'd subcommand must FAIL the invocation (the old `_`
+            // arm printed usage and exited 0, so a broken CI step
+            // passed silently).
+            eprintln!("{}", usage());
+            bail!("unknown subcommand '{other}' (see `topkima help`)");
+        }
+    }
+}
+
+fn usage() -> String {
+    let mut out = String::from(
+        "usage: topkima <subcommand> [flags]\n\nsubcommands:\n",
+    );
+    for (name, summary, _) in SUBCOMMANDS {
+        out.push_str(&format!("  {name:<13} {summary}\n"));
+    }
+    out.push_str("\n`topkima help <subcommand>` prints its flags.");
+    out
+}
+
+/// (name, one-line summary, flags) — the `topkima help [cmd]` table.
+const SUBCOMMANDS: &[(&str, &str, &str)] = &[
+    (
+        "serve",
+        "coordinator + PJRT over the exported eval split",
+        "--artifacts DIR    AOT artifact directory (default: artifacts)\n\
+         --model bert|vit   artifact family to serve\n\
+         --k K              topkima k to serve with\n\
+         --requests N       eval samples to replay (default: 256)\n\
+         --max-wait-us U    batching deadline, µs (default: 2000)\n\
+         --config FILE      load a StackConfig JSON (flags override it)",
+    ),
+    (
+        "serve-fleet",
+        "sharded multi-stream fleet under synthetic or replayed load",
+        "--shards N                 shard event loops (default: 2)\n\
+         --transport local|process  fleet\u{2194}shard transport (default: \
+         local)\n\
+         --transport-worker PATH    worker binary for the process \
+         transport (default: this executable)\n\
+         --transport-env K=V        extra env for worker subprocesses \
+         (repeatable)\n\
+         --duration-ms D            synthetic load window (default: 400)\n\
+         --seed S                   load-generator seed (default: 7)\n\
+         --out FILE                 BENCH output (default: \
+         BENCH_fleet.json)\n\
+         --trace FILE               replay a JSONL eval trace\n\
+         --export-trace FILE        write the schedule actually submitted\n\
+         --deterministic            lifted deadlines; byte-identical BENCH \
+         per trace\n\
+         --steal on|off             batch-granular work-stealing (local \
+         transport only)\n\
+         --steal-min-backlog N      batches a donor keeps per round\n\
+         --steal-victim least-loaded|round-robin\n\
+         --config FILE              load a StackConfig JSON (flags \
+         override it)",
+    ),
+    (
+        "shard-worker",
+        "internal: one fleet shard speaking the wire protocol on \
+         stdin/stdout",
+        "(no flags — spawned by `serve-fleet --transport process`; \
+         handshake arrives on stdin)",
+    ),
+    (
+        "report",
+        "hardware report: Fig 4 breakdowns + Table I row",
+        "--model M          bert-base|distilbert|vit-base|bert-tiny\n\
+         --seq-len SL       override the preset sequence length\n\
+         --k K              top-k winners per softmax row\n\
+         --softmax KIND     conv|dtopk|topkima\n\
+         --alpha A          measured early-stop fraction\n\
+         --config FILE      load a StackConfig JSON (flags override it)",
+    ),
+    (
+        "sweep",
+        "Fig 3 accuracy-vs-k re-check over exported artifacts",
+        "--artifacts DIR    AOT artifact directory\n\
+         --model bert|vit   artifact family\n\
+         --batch N          direct-execution batch size (default: 32)\n\
+         --limit N          eval-sample cap (default: 512)",
+    ),
+    (
+        "sweep-hw",
+        "parallel hardware grid search (k × SL × softmax × noise)",
+        "--threads N              worker threads\n\
+         --ks 1,2,5,10            k axis\n\
+         --seq-lens 128,384       sequence-length axis\n\
+         --kinds conv,dtopk,topkima\n\
+         --noise-points ideal,default\n\
+         --q-rows N               behavioral Q rows per point\n\
+         --seed S                 per-point seeding base\n\
+         --shard-index I --shard-count C   partition the grid\n\
+         --out FILE               BENCH output (default: BENCH_sweep.json)\n\
+         [stack flags...]         base config for every point",
+    ),
+    (
+        "sweep-merge",
+        "reassemble per-shard sweep-hw outputs into one report",
+        "--out FILE         merged output (default: BENCH_sweep.json)\n\
+         shard0.json ...    per-shard sweep-hw files (positional)",
+    ),
+    (
+        "bench-diff",
+        "compare a fresh BENCH_*.json against a baseline (CI perf gate)",
+        "--fresh FILE        fresh bench JSON (required)\n\
+         --baseline FILE     committed baseline to diff against\n\
+         --max-regress R     failure threshold (default: 0.25)\n\
+         --markdown          render the EXPERIMENTS.md table instead",
+    ),
+    (
+        "check",
+        "compile + smoke-run every artifact (skips without artifacts)",
+        "--artifacts DIR    AOT artifact directory",
+    ),
+    (
+        "config",
+        "print or save the resolved StackConfig as JSON",
+        "--save FILE        write instead of printing\n\
+         [stack flags...]   any stack flag, applied over the defaults",
+    ),
+    (
+        "help",
+        "this overview, or `help <subcommand>` for its flags",
+        "(takes an optional subcommand name)",
+    ),
+];
+
+/// `help [cmd]`: the general usage, or one subcommand's full flag list.
+fn cmd_help(args: &[String]) -> Result<()> {
+    match args.first() {
+        None => {
+            println!("{}", usage());
+            Ok(())
+        }
+        Some(name) => {
+            let Some((_, summary, flags)) =
+                SUBCOMMANDS.iter().find(|(n, _, _)| *n == name.as_str())
+            else {
+                eprintln!("{}", usage());
+                bail!("unknown subcommand '{name}'");
+            };
+            println!("topkima {name} — {summary}\n\n{flags}");
             Ok(())
         }
     }
@@ -283,11 +433,13 @@ fn cmd_serve_fleet(args: &[String]) -> Result<()> {
     let specs = b.fleet_specs();
     let shards = b.config().fleet.shards;
     let steal = b.config().fleet.steal;
+    let transport = b.config().fleet.transport.kind;
     println!(
-        "fleet: {} stream(s) over {} shard(s), stealing {} \
+        "fleet: {} stream(s) over {} shard(s), transport {}, stealing {} \
          (min_backlog {}, victim {}){}",
         specs.len(),
         shards,
+        transport.key(),
         if steal.enabled { "on" } else { "off" },
         steal.min_backlog,
         steal.victim.key(),
@@ -482,6 +634,10 @@ fn cmd_serve_fleet(args: &[String]) -> Result<()> {
     }
     let mut doc_fields = vec![
         ("bench", Json::Str("serve_fleet".to_string())),
+        (
+            "version",
+            Json::Str(topkima::util::bench::version_string()),
+        ),
         ("source", Json::Str(source.to_string())),
         ("deterministic", Json::Bool(deterministic)),
         ("seed", Json::Str(seed.to_string())),
@@ -834,6 +990,9 @@ fn cmd_bench_diff(args: &[String]) -> Result<()> {
                absolute table)");
     };
     let base_doc = load(&base_path)?;
+    if let Some(note) = benchdiff::version_note(&base_doc, &fresh_doc) {
+        eprintln!("WARN: {note}");
+    }
     let d = benchdiff::diff(&base_doc, &fresh_doc)
         .map_err(|e| anyhow::anyhow!("{e}"))?;
     if markdown {

@@ -14,6 +14,7 @@ use std::time::Duration;
 use anyhow::Result;
 
 use crate::arch::ArchConfig;
+use crate::coordinator::transport::{ProcessOptions, ProcessTransport};
 use crate::coordinator::{
     shard_of, BatcherConfig, Coordinator, Executor, ExecutorFactory, Fleet,
     PjrtExecutor, Router, StreamDef, StreamKey, SyntheticExecutor,
@@ -27,7 +28,7 @@ use crate::softmax::macros::{macro_for, MacroParts};
 use crate::softmax::SoftmaxMacro;
 use crate::util::rng::Rng;
 
-use super::config::{ConfigError, StackConfig, StreamSpec};
+use super::config::{ConfigError, StackConfig, StreamSpec, TransportKind};
 
 /// Assembles every layer of the stack from one validated config.
 #[derive(Clone, Debug)]
@@ -215,7 +216,9 @@ impl PipelineBuilder {
 
     /// Start the fleet with caller-supplied executors, one factory per
     /// shard (mock executors in tests; each factory runs inside its
-    /// shard's thread). The config's `fleet.steal` policy applies.
+    /// shard's thread). Executor factories are inherently in-process,
+    /// so this always runs the local transport; the config's
+    /// `fleet.steal` policy applies.
     pub fn start_fleet_with(&self, factories: Vec<ExecutorFactory>) -> Fleet {
         Fleet::start_with(
             self.stream_defs(),
@@ -224,32 +227,42 @@ impl PipelineBuilder {
         )
     }
 
-    /// Start the configured fleet (`fleet.shards` shard loops): PJRT
-    /// executors when the artifact manifest exists, otherwise the
-    /// synthetic hw-cost executor (per-stream service time from the
-    /// analytic simulator) so load tests and CI exercise the full
-    /// control plane with no artifacts.
+    /// Start the configured fleet (`fleet.shards` shards) over the
+    /// configured transport (`fleet.transport`). Executors are PJRT
+    /// when the artifact manifest exists, otherwise the synthetic
+    /// hw-cost executor (per-stream service time from the analytic
+    /// simulator) so load tests and CI exercise the full control plane
+    /// with no artifacts — on the process transport each worker makes
+    /// that choice in its own process via [`Self::build_shard_executor`].
     pub fn start_fleet(&self) -> Result<Fleet, ConfigError> {
-        let manifest =
-            Path::new(&self.cfg.serving.artifacts).join("manifest.json");
-        if manifest.exists() {
-            Ok(self.start_fleet_with(self.pjrt_factories()))
-        } else {
-            self.start_fleet_synthetic()
+        match self.cfg.fleet.transport.kind {
+            TransportKind::Process => self.start_fleet_process(false),
+            TransportKind::Local => {
+                let manifest = Path::new(&self.cfg.serving.artifacts)
+                    .join("manifest.json");
+                if manifest.exists() {
+                    Ok(self.start_fleet_with(self.pjrt_factories()))
+                } else {
+                    self.start_fleet_local_synthetic()
+                }
+            }
         }
     }
 
     /// Start the configured fleet over synthetic executors regardless
     /// of artifacts (what `topkima serve-fleet`'s load generator uses:
     /// it measures control-plane batching and latency, not model
-    /// accuracy).
+    /// accuracy). Honors `fleet.transport` like [`Self::start_fleet`].
     pub fn start_fleet_synthetic(&self) -> Result<Fleet, ConfigError> {
-        let shards = self.cfg.fleet.shards;
-        let mut exec = SyntheticExecutor::new(20.0, 50.0);
-        for spec in &self.fleet_specs() {
-            let key: StreamKey = (Arc::from(spec.family()), spec.k);
-            exec = exec.with_stream_cost(key, self.stream_cost_us(spec)?);
+        match self.cfg.fleet.transport.kind {
+            TransportKind::Process => self.start_fleet_process(true),
+            TransportKind::Local => self.start_fleet_local_synthetic(),
         }
+    }
+
+    fn start_fleet_local_synthetic(&self) -> Result<Fleet, ConfigError> {
+        let shards = self.cfg.fleet.shards;
+        let exec = self.synthetic_executor()?;
         let factories = (0..shards)
             .map(|_| {
                 let exec = exec.clone();
@@ -258,6 +271,89 @@ impl PipelineBuilder {
             })
             .collect();
         Ok(self.start_fleet_with(factories))
+    }
+
+    /// Spawn `fleet.shards` `topkima shard-worker` subprocesses and run
+    /// the fleet front over the wire protocol. The workers receive this
+    /// exact config in the handshake and rebuild their shard of the
+    /// pipeline from it, so stream policies cannot drift between front
+    /// and worker.
+    fn start_fleet_process(
+        &self,
+        synthetic: bool,
+    ) -> Result<Fleet, ConfigError> {
+        let t = &self.cfg.fleet.transport;
+        let opts = ProcessOptions {
+            shards: self.cfg.fleet.shards,
+            config: self.cfg.to_json(),
+            worker: t.worker.clone(),
+            env: t
+                .env
+                .iter()
+                .map(|(k, v)| (k.clone(), v.clone()))
+                .collect(),
+            synthetic,
+        };
+        let transport = ProcessTransport::spawn(&opts).map_err(|e| {
+            ConfigError::Io(format!("process transport: {e}"))
+        })?;
+        Ok(Fleet::start_transport(
+            &self.stream_defs(),
+            Box::new(transport),
+        ))
+    }
+
+    /// The synthetic hw-cost executor for the configured streams
+    /// (per-stream per-row service time from the analytic simulator) —
+    /// shared by the local synthetic fleet and the `shard-worker`
+    /// subprocess.
+    pub fn synthetic_executor(
+        &self,
+    ) -> Result<SyntheticExecutor, ConfigError> {
+        let mut exec = SyntheticExecutor::new(20.0, 50.0);
+        for spec in &self.fleet_specs() {
+            let key: StreamKey = (Arc::from(spec.family()), spec.k);
+            exec = exec.with_stream_cost(key, self.stream_cost_us(spec)?);
+        }
+        Ok(exec)
+    }
+
+    /// Build the executor for one shard of the configured fleet, in the
+    /// calling thread — the `topkima shard-worker` entry point (PJRT
+    /// handles never cross threads, let alone processes). `synthetic`
+    /// forces the hw-cost executor; otherwise artifacts are used when
+    /// the manifest exists, mirroring [`Self::start_fleet`].
+    pub fn build_shard_executor(
+        &self,
+        shard: usize,
+        synthetic: bool,
+    ) -> Result<Box<dyn Executor>, ConfigError> {
+        let manifest =
+            Path::new(&self.cfg.serving.artifacts).join("manifest.json");
+        if synthetic || !manifest.exists() {
+            return Ok(Box::new(self.synthetic_executor()?));
+        }
+        let shards = self.cfg.fleet.shards;
+        let streams: Vec<(String, usize, Vec<usize>)> = self
+            .fleet_specs()
+            .iter()
+            .filter(|spec| {
+                let key: StreamKey = (Arc::from(spec.family()), spec.k);
+                shard_of(&key, shards) == shard
+            })
+            .map(|spec| {
+                (
+                    spec.family().to_string(),
+                    spec.k,
+                    spec.policy.buckets.clone(),
+                )
+            })
+            .collect();
+        let engine = Engine::new(&self.cfg.serving.artifacts)
+            .map_err(|e| ConfigError::Io(format!("engine: {e}")))?;
+        let exec = PjrtExecutor::preload(&engine, &streams)
+            .map_err(|e| ConfigError::Io(format!("preload: {e}")))?;
+        Ok(Box::new(exec))
     }
 
     /// One PJRT executor factory per shard, each preloading only the

@@ -184,10 +184,59 @@ impl StreamSpec {
     }
 }
 
+/// Which [`ShardTransport`] carries requests between the fleet front
+/// and its shards (DESIGN.md §11).
+///
+/// [`ShardTransport`]: crate::coordinator::ShardTransport
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TransportKind {
+    /// Shard event loops as threads in this process (channels + the
+    /// in-memory steal deque) — the default, and the only transport
+    /// that mediates work-stealing today.
+    #[default]
+    Local,
+    /// One `topkima shard-worker` subprocess per shard, speaking the
+    /// versioned length-prefixed JSONL wire protocol over pipes.
+    Process,
+}
+
+impl TransportKind {
+    /// Stable identifier used by CLI flags and the JSON config.
+    pub fn key(self) -> &'static str {
+        match self {
+            TransportKind::Local => "local",
+            TransportKind::Process => "process",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<TransportKind> {
+        match s {
+            "local" => Some(TransportKind::Local),
+            "process" => Some(TransportKind::Process),
+            _ => None,
+        }
+    }
+}
+
+/// The `fleet.transport` config section: transport kind plus the
+/// process transport's knobs (worker binary, per-worker environment).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TransportConfig {
+    pub kind: TransportKind,
+    /// Worker binary path for the process transport; `None` spawns the
+    /// current executable (`topkima shard-worker`). Ignored by the
+    /// local transport.
+    pub worker: Option<String>,
+    /// Extra environment variables for every worker subprocess
+    /// (sorted map — JSON round-trips are order-stable).
+    pub env: std::collections::BTreeMap<String, String>,
+}
+
 /// The fleet section of the stack: shard count + stream list + the
-/// batch-granular work-stealing policy. An empty stream list means
-/// "one stream derived from the top-level knobs" — the single-stream
-/// compatibility path `start_coordinator` uses.
+/// batch-granular work-stealing policy + the fleet↔shard transport. An
+/// empty stream list means "one stream derived from the top-level
+/// knobs" — the single-stream compatibility path `start_coordinator`
+/// uses.
 #[derive(Clone, Debug, PartialEq)]
 pub struct FleetConfig {
     /// Shard event loops; streams are hash-partitioned across them.
@@ -197,7 +246,12 @@ pub struct FleetConfig {
     /// Stealing relocates *formed* batches only, so enabling it never
     /// changes request→batch composition; within a stream, completion
     /// order of neighboring batches may interleave (DESIGN.md §10).
+    /// Only the local transport mediates stealing — validation rejects
+    /// it combined with the process transport.
     pub steal: StealPolicy,
+    /// How requests reach the shards: in-process channels (default) or
+    /// `shard-worker` subprocesses (DESIGN.md §11).
+    pub transport: TransportConfig,
 }
 
 impl Default for FleetConfig {
@@ -206,6 +260,7 @@ impl Default for FleetConfig {
             shards: 1,
             streams: Vec::new(),
             steal: StealPolicy::default(),
+            transport: TransportConfig::default(),
         }
     }
 }
@@ -362,6 +417,11 @@ impl StackConfig {
         self
     }
 
+    pub fn with_transport(mut self, transport: TransportConfig) -> Self {
+        self.fleet.transport = transport;
+        self
+    }
+
     /// Validate and hand the config to the builder.
     pub fn build(self) -> Result<PipelineBuilder, ConfigError> {
         PipelineBuilder::new(self)
@@ -456,6 +516,26 @@ impl StackConfig {
                 "must be ≥ 1 when stealing is enabled (a donor keeping \
                  zero batches would idle itself and thrash the deque)",
             ));
+        }
+        if self.fleet.steal.enabled
+            && self.fleet.transport.kind == TransportKind::Process
+        {
+            return Err(invalid(
+                "fleet.transport",
+                "work-stealing is not mediated over the process transport \
+                 (the wire protocol reserves donate/steal frames, but only \
+                 the local transport implements them) — disable \
+                 fleet.steal or use the local transport",
+            ));
+        }
+        if let Some(worker) = &self.fleet.transport.worker {
+            if worker.is_empty() {
+                return Err(invalid(
+                    "fleet.transport.worker",
+                    "must be a non-empty path (or null for the current \
+                     executable)",
+                ));
+            }
         }
         let mut keys = std::collections::BTreeSet::new();
         for (i, s) in self.fleet.streams.iter().enumerate() {
@@ -576,6 +656,47 @@ impl StackConfig {
                                 .map(stream_to_json)
                                 .collect(),
                         ),
+                    ),
+                    (
+                        "transport",
+                        Json::obj(vec![
+                            (
+                                "kind",
+                                Json::Str(
+                                    self.fleet
+                                        .transport
+                                        .kind
+                                        .key()
+                                        .to_string(),
+                                ),
+                            ),
+                            (
+                                "worker",
+                                self.fleet
+                                    .transport
+                                    .worker
+                                    .as_ref()
+                                    .map_or(Json::Null, |w| {
+                                        Json::Str(w.clone())
+                                    }),
+                            ),
+                            (
+                                "env",
+                                Json::Obj(
+                                    self.fleet
+                                        .transport
+                                        .env
+                                        .iter()
+                                        .map(|(k, v)| {
+                                            (
+                                                k.clone(),
+                                                Json::Str(v.clone()),
+                                            )
+                                        })
+                                        .collect(),
+                                ),
+                            ),
+                        ]),
                     ),
                 ]),
             ),
@@ -801,6 +922,25 @@ impl StackConfig {
                             )
                         })?
                 }
+                "transport" => {
+                    cfg.fleet.transport.kind = TransportKind::parse(&val)
+                        .ok_or_else(|| {
+                            bad_flag("transport", &val, "local|process")
+                        })?
+                }
+                "transport-worker" => {
+                    cfg.fleet.transport.worker = Some(val)
+                }
+                "transport-env" => {
+                    // repeatable KEY=VALUE pairs for worker subprocesses
+                    let (k, v) = val.split_once('=').ok_or_else(|| {
+                        bad_flag("transport-env", &val, "KEY=VALUE")
+                    })?;
+                    cfg.fleet
+                        .transport
+                        .env
+                        .insert(k.to_string(), v.to_string());
+                }
                 other => {
                     return Err(ConfigError::UnknownFlag(format!("--{other}")))
                 }
@@ -875,10 +1015,9 @@ fn scale_parse(s: &str) -> Option<ScaleImpl> {
 // ---- JSON field decoders ------------------------------------------------
 
 fn json_usize(v: &Json, field: &str) -> Result<usize, ConfigError> {
-    match v.as_f64() {
-        Some(n) if n >= 0.0 && n.fract() == 0.0 => Ok(n as usize),
-        _ => Err(invalid(field, "must be a non-negative integer")),
-    }
+    v.as_u64()
+        .map(|n| n as usize)
+        .ok_or_else(|| invalid(field, "must be a non-negative integer"))
 }
 
 fn json_f64(v: &Json, field: &str) -> Result<f64, ConfigError> {
@@ -969,6 +1108,7 @@ fn fleet_from(v: &Json) -> Result<FleetConfig, ConfigError> {
         match key.as_str() {
             "shards" => fleet.shards = json_usize(value, "fleet.shards")?,
             "steal" => fleet.steal = steal_from(value)?,
+            "transport" => fleet.transport = transport_from(value)?,
             "streams" => {
                 let arr = value.as_arr().ok_or_else(|| {
                     invalid("fleet.streams", "must be an array")
@@ -986,6 +1126,56 @@ fn fleet_from(v: &Json) -> Result<FleetConfig, ConfigError> {
         }
     }
     Ok(fleet)
+}
+
+fn transport_from(v: &Json) -> Result<TransportConfig, ConfigError> {
+    let obj = v
+        .as_obj()
+        .ok_or_else(|| invalid("fleet.transport", "must be an object"))?;
+    let mut t = TransportConfig::default();
+    for (key, value) in obj {
+        match key.as_str() {
+            "kind" => {
+                let s = json_str(value, "fleet.transport.kind")?;
+                t.kind = TransportKind::parse(s).ok_or_else(|| {
+                    invalid(
+                        "fleet.transport.kind",
+                        format!("'{s}' unknown (local | process)"),
+                    )
+                })?;
+            }
+            "worker" => {
+                t.worker = match value {
+                    Json::Null => None,
+                    other => Some(
+                        json_str(other, "fleet.transport.worker")?
+                            .to_string(),
+                    ),
+                }
+            }
+            "env" => {
+                let env = value.as_obj().ok_or_else(|| {
+                    invalid("fleet.transport.env", "must be an object")
+                })?;
+                t.env = env
+                    .iter()
+                    .map(|(k, v)| {
+                        Ok((
+                            k.clone(),
+                            json_str(v, "fleet.transport.env value")?
+                                .to_string(),
+                        ))
+                    })
+                    .collect::<Result<_, ConfigError>>()?;
+            }
+            other => {
+                return Err(ConfigError::UnknownField(format!(
+                    "fleet.transport.{other}"
+                )))
+            }
+        }
+    }
+    Ok(t)
 }
 
 fn steal_from(v: &Json) -> Result<StealPolicy, ConfigError> {
@@ -1420,6 +1610,126 @@ mod tests {
         assert!(
             StackConfig::from_args(&args(&["--steal-victim", "x"])).is_err()
         );
+    }
+
+    #[test]
+    fn transport_json_roundtrip_is_identity() {
+        // default (local, no worker, no env) round-trips
+        let cfg = StackConfig::default();
+        assert_eq!(cfg.fleet.transport, TransportConfig::default());
+        let back = StackConfig::from_json_str(&cfg.to_json_string()).unwrap();
+        assert_eq!(back.fleet.transport, TransportConfig::default());
+        // a fully-specified process transport round-trips
+        let mut env = std::collections::BTreeMap::new();
+        env.insert("RUST_LOG".to_string(), "warn".to_string());
+        env.insert("TOPKIMA_X".to_string(), "1".to_string());
+        let cfg = three_stream_config().with_transport(TransportConfig {
+            kind: TransportKind::Process,
+            worker: Some("/usr/bin/topkima".to_string()),
+            env,
+        });
+        cfg.validate().unwrap();
+        let back = StackConfig::from_json_str(&cfg.to_json_string()).unwrap();
+        assert_eq!(cfg, back);
+        assert_eq!(back.fleet.transport.kind, TransportKind::Process);
+        assert_eq!(
+            back.fleet.transport.env.get("RUST_LOG").map(String::as_str),
+            Some("warn")
+        );
+        // absent transport section keeps the default
+        let cfg =
+            StackConfig::from_json_str(r#"{"fleet": {"shards": 2}}"#)
+                .unwrap();
+        assert_eq!(cfg.fleet.transport, TransportConfig::default());
+    }
+
+    #[test]
+    fn transport_validation_and_unknown_fields() {
+        // stealing over the process transport is a typed rejection
+        let cfg = StackConfig::default()
+            .with_transport(TransportConfig {
+                kind: TransportKind::Process,
+                ..TransportConfig::default()
+            })
+            .with_steal(StealPolicy {
+                enabled: true,
+                min_backlog: 1,
+                victim: VictimSelect::LeastLoaded,
+            });
+        let err = cfg.validate().unwrap_err();
+        assert!(
+            matches!(&err, ConfigError::Invalid { field, .. }
+                     if field == "fleet.transport"),
+            "steal × process must be typed: {err:?}"
+        );
+        // stealing over the local transport stays fine
+        let cfg = StackConfig::default().with_steal(StealPolicy {
+            enabled: true,
+            min_backlog: 1,
+            victim: VictimSelect::LeastLoaded,
+        });
+        assert!(cfg.validate().is_ok());
+        // empty worker path is rejected (use null for current exe)
+        let cfg = StackConfig::default().with_transport(TransportConfig {
+            kind: TransportKind::Process,
+            worker: Some(String::new()),
+            ..TransportConfig::default()
+        });
+        assert!(cfg.validate().is_err());
+        // unknown fields / kinds are loud
+        let err = StackConfig::from_json_str(
+            r#"{"fleet": {"transport": {"kind": "local", "socket": 1}}}"#,
+        )
+        .unwrap_err();
+        assert_eq!(
+            err,
+            ConfigError::UnknownField(
+                "fleet.transport.socket".to_string()
+            )
+        );
+        let err = StackConfig::from_json_str(
+            r#"{"fleet": {"transport": {"kind": "carrier-pigeon"}}}"#,
+        )
+        .unwrap_err();
+        assert!(matches!(err, ConfigError::Invalid { .. }));
+    }
+
+    #[test]
+    fn transport_flags_parse() {
+        let cfg = StackConfig::from_args(&args(&[
+            "--transport", "process",
+            "--transport-worker", "/tmp/topkima",
+            "--transport-env", "A=1",
+            "--transport-env", "B=x=y",
+        ]))
+        .unwrap();
+        assert_eq!(cfg.fleet.transport.kind, TransportKind::Process);
+        assert_eq!(
+            cfg.fleet.transport.worker.as_deref(),
+            Some("/tmp/topkima")
+        );
+        assert_eq!(
+            cfg.fleet.transport.env.get("A").map(String::as_str),
+            Some("1")
+        );
+        // split on the first '=' only
+        assert_eq!(
+            cfg.fleet.transport.env.get("B").map(String::as_str),
+            Some("x=y")
+        );
+        assert!(
+            StackConfig::from_args(&args(&["--transport", "tcp"])).is_err()
+        );
+        assert!(StackConfig::from_args(&args(&[
+            "--transport-env",
+            "NOEQUALS"
+        ]))
+        .is_err());
+        // the steal × process rejection also fires from flags
+        assert!(StackConfig::from_args(&args(&[
+            "--transport", "process", "--steal", "on",
+        ]))
+        .is_err());
     }
 
     #[test]

@@ -38,7 +38,7 @@ pub mod config;
 pub use builder::PipelineBuilder;
 pub use config::{
     BatchPolicy, ConfigError, FleetConfig, ModelKind, ServingConfig,
-    StackConfig, StreamSpec,
+    StackConfig, StreamSpec, TransportConfig, TransportKind,
 };
 // the fleet's runtime stealing types are part of the config surface
 // (`FleetConfig.steal`), so re-export them here too

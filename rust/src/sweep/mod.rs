@@ -217,6 +217,12 @@ pub struct SweepReport {
 impl SweepReport {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
+            // build stamp: bench-diff warns when a comparison crosses
+            // builds (from_json tolerates its absence in old files)
+            (
+                "version",
+                Json::Str(crate::util::bench::version_string()),
+            ),
             // string, not Num: f64 would corrupt seeds ≥ 2^53
             ("seed", Json::Str(self.seed.to_string())),
             ("q_rows", Json::Num(self.q_rows as f64)),

@@ -39,9 +39,22 @@ impl BenchResult {
     }
 }
 
-/// Write a bench run as `{"bench": <title>, "results": [...]}` JSON —
-/// the machine-readable perf baseline CI archives next to the printed
-/// table.
+/// Crate version + build profile, stamped into every `BENCH_*.json`
+/// (perf benches here, the sweep report, the fleet bench) so
+/// `bench-diff` can warn when a comparison crosses builds — a
+/// debug-vs-release or cross-version diff reads as a perf change when
+/// it is really a build change.
+pub fn version_string() -> String {
+    format!(
+        "{}+{}",
+        env!("CARGO_PKG_VERSION"),
+        if cfg!(debug_assertions) { "debug" } else { "release" }
+    )
+}
+
+/// Write a bench run as `{"bench": <title>, "version": ...,
+/// "results": [...]}` JSON — the machine-readable perf baseline CI
+/// archives next to the printed table.
 pub fn write_json(
     path: &str,
     title: &str,
@@ -49,6 +62,7 @@ pub fn write_json(
 ) -> std::io::Result<()> {
     let doc = Json::obj(vec![
         ("bench", Json::Str(title.to_string())),
+        ("version", Json::Str(version_string())),
         (
             "results",
             Json::Arr(results.iter().map(BenchResult::to_json).collect()),
@@ -130,5 +144,17 @@ mod tests {
             doc.get("results").at(0).get("mean_ns").as_f64(),
             Some(120.5)
         );
+        // every bench JSON is stamped with the build that produced it
+        assert_eq!(
+            doc.get("version").as_str(),
+            Some(version_string().as_str())
+        );
+    }
+
+    #[test]
+    fn version_string_names_crate_and_profile() {
+        let v = version_string();
+        assert!(v.starts_with(env!("CARGO_PKG_VERSION")), "{v}");
+        assert!(v.contains('+'), "{v}");
     }
 }

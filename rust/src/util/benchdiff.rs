@@ -122,6 +122,27 @@ pub fn markdown_single(metrics: &[(String, f64)]) -> String {
     out
 }
 
+/// Warning text when two bench docs were produced by different builds
+/// (`None` when the stamps match). A missing `version` field — benches
+/// written before stamping landed, or hand-built files — reads as
+/// "unversioned", which still warns against a stamped file: the whole
+/// point is that cross-build deltas may reflect the build, not the
+/// change under test.
+pub fn version_note(base: &Json, fresh: &Json) -> Option<String> {
+    let stamp = |doc: &Json| {
+        doc.get("version").as_str().unwrap_or("unversioned").to_string()
+    };
+    let (b, f) = (stamp(base), stamp(fresh));
+    if b == f {
+        None
+    } else {
+        Some(format!(
+            "comparing across builds: baseline is {b}, fresh is {f} — \
+             deltas may reflect the build, not the change"
+        ))
+    }
+}
+
 /// Extract comparable (name, value) metric pairs from a bench JSON.
 pub fn metrics_of(doc: &Json) -> Result<Vec<(String, f64)>, String> {
     if let Some(results) = doc.get("results").as_arr() {
@@ -327,6 +348,23 @@ mod tests {
     #[test]
     fn unknown_shape_is_an_error() {
         assert!(metrics_of(&Json::parse(r#"{"x":1}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn version_note_warns_only_across_builds() {
+        let v1 = Json::parse(r#"{"version":"0.1.0+release"}"#).unwrap();
+        let v1b = Json::parse(r#"{"version":"0.1.0+release"}"#).unwrap();
+        let v2 = Json::parse(r#"{"version":"0.2.0+release"}"#).unwrap();
+        let unstamped = Json::parse("{}").unwrap();
+        assert_eq!(version_note(&v1, &v1b), None);
+        let note = version_note(&v1, &v2).expect("cross-version warns");
+        assert!(note.contains("0.1.0+release"), "{note}");
+        assert!(note.contains("0.2.0+release"), "{note}");
+        // a pre-stamping baseline vs a stamped fresh file warns too
+        let note =
+            version_note(&unstamped, &v1).expect("unversioned warns");
+        assert!(note.contains("unversioned"), "{note}");
+        assert_eq!(version_note(&unstamped, &Json::parse("{}").unwrap()), None);
     }
 
     #[test]

@@ -44,6 +44,48 @@ impl Json {
         self.as_f64().map(|n| n as usize)
     }
 
+    /// Strict non-negative integer view: `Some` only for a whole number
+    /// ≥ 0 (the codec stores every number as f64, so all strict
+    /// decoders — config, trace, wire protocol — share this one check
+    /// instead of re-implementing it).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self.as_f64() {
+            Some(n) if n >= 0.0 && n.fract() == 0.0 => Some(n as u64),
+            _ => None,
+        }
+    }
+
+    /// Encode one f32 sample losslessly, including the values JSON has
+    /// no number for: NaN and ±infinity become the strings `"NaN"` /
+    /// `"inf"` / `"-inf"`. Model outputs legitimately contain -inf
+    /// (masked logits); serializing them as bare numbers would emit
+    /// unparseable JSON and poison the whole document/frame.
+    pub fn from_f32(x: f32) -> Json {
+        if x.is_finite() {
+            Json::Num(x as f64)
+        } else if x.is_nan() {
+            Json::Str("NaN".to_string())
+        } else if x > 0.0 {
+            Json::Str("inf".to_string())
+        } else {
+            Json::Str("-inf".to_string())
+        }
+    }
+
+    /// Decode [`Json::from_f32`]'s encoding; `None` for anything else.
+    pub fn as_f32(&self) -> Option<f32> {
+        match self {
+            Json::Num(n) => Some(*n as f32),
+            Json::Str(s) => match s.as_str() {
+                "NaN" => Some(f32::NAN),
+                "inf" => Some(f32::INFINITY),
+                "-inf" => Some(f32::NEG_INFINITY),
+                _ => None,
+            },
+            _ => None,
+        }
+    }
+
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -367,6 +409,38 @@ mod tests {
     fn missing_key_is_null() {
         let v = Json::parse("{}").unwrap();
         assert_eq!(v.get("nope"), &Json::Null);
+    }
+
+    #[test]
+    fn as_u64_is_strict() {
+        assert_eq!(Json::Num(7.0).as_u64(), Some(7));
+        assert_eq!(Json::Num(0.0).as_u64(), Some(0));
+        assert_eq!(Json::Num(1.5).as_u64(), None);
+        assert_eq!(Json::Num(-1.0).as_u64(), None);
+        assert_eq!(Json::Str("7".into()).as_u64(), None);
+        assert_eq!(Json::Null.as_u64(), None);
+    }
+
+    #[test]
+    fn f32_codec_survives_non_finite_values() {
+        for x in [0.5f32, -1.25, 0.0, f32::MAX, f32::MIN_POSITIVE] {
+            assert_eq!(Json::from_f32(x).as_f32(), Some(x));
+        }
+        assert!(Json::from_f32(f32::NAN).as_f32().unwrap().is_nan());
+        assert_eq!(
+            Json::from_f32(f32::INFINITY).as_f32(),
+            Some(f32::INFINITY)
+        );
+        assert_eq!(
+            Json::from_f32(f32::NEG_INFINITY).as_f32(),
+            Some(f32::NEG_INFINITY)
+        );
+        // the encodings parse as valid JSON text (a bare NaN would not)
+        let text = to_string(&Json::from_f32(f32::NEG_INFINITY));
+        assert_eq!(Json::parse(&text).unwrap().as_f32(),
+                   Some(f32::NEG_INFINITY));
+        assert_eq!(Json::Str("fast".into()).as_f32(), None);
+        assert_eq!(Json::Null.as_f32(), None);
     }
 
     #[test]

@@ -1,0 +1,281 @@
+//! Process-transport acceptance: the fleet front over `topkima
+//! shard-worker` subprocesses must (a) round-trip requests and metrics
+//! through the wire protocol, (b) form byte-identical batch
+//! compositions to the local transport under a deterministic load, and
+//! (c) degrade *typed*, not hung, when a worker is killed mid-load —
+//! `RouteError::ShardDown` on submit, a `ShardPanic`-style error from
+//! shutdown, and prompt failures on every pending receiver.
+//!
+//! The worker binary is this crate's own `topkima` bin, resolved via
+//! `CARGO_BIN_EXE_topkima` (cargo builds it for integration tests).
+
+use std::time::Duration;
+
+use topkima::coordinator::{shard_of, InputData, RouteError, StreamKey};
+use topkima::pipeline::{
+    BatchPolicy, ModelKind, StackConfig, StreamSpec, TransportConfig,
+    TransportKind,
+};
+use topkima::softmax::SoftmaxKind;
+
+fn worker_bin() -> String {
+    env!("CARGO_BIN_EXE_topkima").to_string()
+}
+
+fn process_transport() -> TransportConfig {
+    TransportConfig {
+        kind: TransportKind::Process,
+        worker: Some(worker_bin()),
+        env: Default::default(),
+    }
+}
+
+/// Two streams, realistic buckets, short deadlines — the live-serving
+/// shape.
+fn live_config() -> StackConfig {
+    StackConfig::default()
+        .with_shards(2)
+        .with_stream(StreamSpec::new(
+            ModelKind::BertTiny,
+            5,
+            SoftmaxKind::Topkima,
+        ))
+        .with_stream(StreamSpec::new(
+            ModelKind::VitBase,
+            3,
+            SoftmaxKind::Dtopk,
+        ))
+}
+
+/// Lifted deadlines and full-bucket-only forming: batch composition
+/// becomes a pure function of per-stream arrival order (the
+/// fleet_determinism policy), so local and process fleets must agree
+/// exactly.
+fn deterministic_config() -> StackConfig {
+    let slow = |buckets: Vec<usize>| BatchPolicy {
+        buckets,
+        max_wait_us: 3_600_000_000,
+        max_queue: 0,
+    };
+    StackConfig::default()
+        .with_shards(2)
+        .with_stream(
+            StreamSpec::new(ModelKind::BertTiny, 5, SoftmaxKind::Topkima)
+                .with_policy(slow(vec![2, 4])),
+        )
+        .with_stream(
+            StreamSpec::new(ModelKind::BertTiny, 10, SoftmaxKind::Dtopk)
+                .with_policy(slow(vec![1, 2, 8])),
+        )
+        .with_stream(
+            StreamSpec::new(ModelKind::VitBase, 3, SoftmaxKind::Conventional)
+                .with_policy(slow(vec![4])),
+        )
+}
+
+#[test]
+fn process_fleet_round_trips_requests_and_metrics() {
+    let cfg = live_config().with_transport(process_transport());
+    let b = cfg.build().expect("valid config");
+    let mut fleet = b.start_fleet_synthetic().expect("workers spawn");
+    assert_eq!(fleet.transport_kind(), "process");
+    assert_eq!(fleet.shard_count(), 2);
+    for shard in 0..2 {
+        assert!(
+            fleet.worker_pid(shard).is_some(),
+            "process shards expose worker pids"
+        );
+    }
+    // the synthetic executor answers [sum(input), k] per sample
+    let mut rxs = Vec::new();
+    for i in 0..6 {
+        rxs.push((
+            (i + (i + 1)) as f32,
+            5.0,
+            fleet
+                .submit("bert", 5, InputData::I32(vec![i, i + 1]))
+                .expect("bert stream accepts"),
+        ));
+    }
+    rxs.push((
+        2.0,
+        3.0,
+        fleet
+            .submit("vit", 3, InputData::F32(vec![0.5, 1.5]))
+            .expect("vit stream accepts"),
+    ));
+    for (sum, k, rx) in rxs {
+        let r = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("reply crosses the wire");
+        assert_eq!(r.output, vec![sum, k]);
+        assert!(r.batch_size >= 1);
+    }
+    // an unknown stream is still a typed front-side rejection
+    let err = fleet
+        .submit("bert", 99, InputData::I32(vec![1]))
+        .expect_err("unknown stream rejects");
+    assert!(matches!(err, RouteError::UnknownStream(_)));
+    let fm = fleet.shutdown().expect("healthy shutdown");
+    assert_eq!(fm.per_shard.len(), 2);
+    assert_eq!(fm.rejected, 1);
+    let bert: StreamKey = (std::sync::Arc::from("bert"), 5);
+    let vit: StreamKey = (std::sync::Arc::from("vit"), 3);
+    assert_eq!(fm.per_stream[&bert].completed(), 6);
+    assert_eq!(fm.per_stream[&vit].completed(), 1);
+    assert_eq!(fm.aggregate().completed(), 7);
+    assert_eq!(fm.aggregate().errors(), 1);
+    assert_eq!(fm.stolen_total(), 0);
+}
+
+/// Run one fixed interleaved load against a fleet and return its
+/// per-stream (completed, batches, mean batch, padding) tuples.
+fn run_load(cfg: StackConfig) -> Vec<(String, usize, usize, usize, f64, f64)> {
+    let b = cfg.build().expect("valid config");
+    let mut fleet = b.start_fleet_synthetic().expect("fleet starts");
+    let mut rxs = Vec::new();
+    for i in 0..23i32 {
+        let (family, k, input) = match i % 3 {
+            0 => ("bert", 5usize, InputData::I32(vec![i, 0])),
+            1 => ("bert", 10, InputData::I32(vec![i, 1])),
+            _ => ("vit", 3, InputData::F32(vec![i as f32])),
+        };
+        rxs.push(fleet.submit(family, k, input).expect("accepted"));
+    }
+    // deadlines are lifted: partial tail buckets only fire at the
+    // shutdown flush, so shut down before draining receivers
+    let fm = fleet.shutdown().expect("healthy shutdown");
+    for rx in &rxs {
+        assert!(rx.try_recv().is_ok(), "every request answered");
+    }
+    fm.per_stream
+        .iter()
+        .map(|(key, m)| {
+            (
+                key.0.to_string(),
+                key.1,
+                m.completed(),
+                m.batches(),
+                m.mean_batch_size(),
+                m.padding_fraction(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn deterministic_composition_is_transport_invariant() {
+    let local = run_load(deterministic_config());
+    let process =
+        run_load(deterministic_config().with_transport(process_transport()));
+    assert_eq!(
+        local, process,
+        "local and process transports must form identical batches"
+    );
+}
+
+#[test]
+fn killed_worker_is_typed_shard_down_not_a_hang() {
+    // one stream, bucket 8, huge deadline: the queued request never
+    // forms a batch, so it is in flight when the worker dies
+    let cfg = StackConfig::default()
+        .with_shards(2)
+        .with_stream(
+            StreamSpec::new(ModelKind::BertTiny, 5, SoftmaxKind::Topkima)
+                .with_policy(BatchPolicy {
+                    buckets: vec![8],
+                    max_wait_us: 3_600_000_000,
+                    max_queue: 0,
+                }),
+        )
+        .with_transport(process_transport());
+    let victim = shard_of(&(std::sync::Arc::from("bert"), 5), 2);
+    let b = cfg.build().expect("valid config");
+    let mut fleet = b.start_fleet_synthetic().expect("workers spawn");
+    let rx = fleet
+        .submit("bert", 5, InputData::I32(vec![1, 0]))
+        .expect("accepted while the worker lives");
+    let pid = fleet.worker_pid(victim).expect("worker pid");
+    let killed = std::process::Command::new("kill")
+        .args(["-9", &pid.to_string()])
+        .status()
+        .expect("kill runs");
+    assert!(killed.success(), "kill -9 {pid}");
+    // the pending receiver fails promptly (the reader drops every
+    // waiter when the pipe breaks) instead of hanging to a timeout
+    assert!(
+        rx.recv_timeout(Duration::from_secs(10)).is_err(),
+        "pending request must fail, not hang"
+    );
+    // submissions to the dead shard become typed ShardDown rejections
+    let mut err = None;
+    for _ in 0..400 {
+        match fleet.submit("bert", 5, InputData::I32(vec![2, 0])) {
+            Err(e) => {
+                err = Some(e);
+                break;
+            }
+            Ok(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+    let err = err.expect("dead worker eventually rejects submissions");
+    assert!(
+        matches!(err, RouteError::ShardDown(_)),
+        "killed worker surfaces as ShardDown: {err:?}"
+    );
+    // shutdown reports the dead shard like a panicked one, with the
+    // survivors' accounting preserved — and it returns (no hang)
+    let panic = fleet.shutdown().expect_err("dead worker surfaces");
+    assert!(
+        panic.shards.contains(&victim),
+        "dead shard index reported: {:?}",
+        panic.shards
+    );
+    assert_eq!(panic.partial.per_shard.len(), 2);
+    let msg = panic.to_string();
+    assert!(msg.contains("died"), "display names the failure: {msg}");
+}
+
+#[test]
+fn worker_dead_on_arrival_degrades_typed() {
+    // /bin/true exits immediately without speaking the protocol: every
+    // shard is down from the start, but nothing panics or hangs
+    let cfg = live_config().with_transport(TransportConfig {
+        kind: TransportKind::Process,
+        worker: Some("/bin/true".to_string()),
+        env: Default::default(),
+    });
+    let b = cfg.build().expect("valid config");
+    let mut fleet = b.start_fleet_synthetic().expect("spawn itself succeeds");
+    let mut err = None;
+    for _ in 0..400 {
+        match fleet.submit("bert", 5, InputData::I32(vec![1, 0])) {
+            Err(e) => {
+                err = Some(e);
+                break;
+            }
+            Ok(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+    assert!(
+        matches!(err, Some(RouteError::ShardDown(_))),
+        "mute worker rejects typed: {err:?}"
+    );
+    let panic = fleet.shutdown().expect_err("both shards report dead");
+    assert_eq!(panic.shards, vec![0, 1]);
+}
+
+#[test]
+fn missing_worker_binary_fails_spawn_loudly() {
+    let cfg = live_config().with_transport(TransportConfig {
+        kind: TransportKind::Process,
+        worker: Some("/nonexistent/topkima-worker".to_string()),
+        env: Default::default(),
+    });
+    let b = cfg.build().expect("config itself is valid");
+    let err = b
+        .start_fleet_synthetic()
+        .expect_err("unspawnable worker binary is a startup error");
+    let msg = format!("{err}");
+    assert!(msg.contains("process transport"), "{msg}");
+}
