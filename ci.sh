@@ -6,6 +6,10 @@
 #   1. cargo fmt --check    (advisory unless CI_STRICT=1)
 #   2. cargo clippy -D warnings (advisory unless CI_STRICT=1)
 #   3. tier-1 gate: cargo build --release && cargo test -q
+#   3b. lint gate (HARD): `topkima lint --format json` — the in-repo
+#      static analyzer (DESIGN.md §12: schema-sync, panic-path,
+#      lock-discipline, unknown-field). Any unsuppressed finding fails
+#      the run; the JSON report lands in BENCH_lint.json
 #   4. smoke: `topkima check` (skips cleanly when no artifacts exist)
 #   5. smoke: `topkima sweep-hw` on a tiny grid (JSON baseline emitted)
 #   6. smoke: `topkima serve-fleet` (sharded fleet under synthetic load;
@@ -29,8 +33,9 @@
 #  10. refresh the EXPERIMENTS.md §Perf table between the
 #      PERF_TABLE_BEGIN/END markers from the fresh numbers
 #
-# Exit code reflects the tier-1 gate + smoke steps; fmt/clippy failures
-# only fail the run when CI_STRICT=1 (they may be unavailable offline).
+# Exit code reflects the tier-1 gate + the lint gate + smoke steps;
+# fmt/clippy failures only fail the run when CI_STRICT=1 (they may be
+# unavailable offline — the skip is loud when they are).
 
 set -u
 cd "$(dirname "$0")"
@@ -57,14 +62,18 @@ note "rustfmt"
 if cargo fmt --version >/dev/null 2>&1; then
     advisory cargo fmt --check
 else
-    echo "WARN: rustfmt not installed; skipping"
+    echo "WARN: rustfmt NOT INSTALLED — formatting was NOT checked this" \
+         "run (install the rustfmt component, or rely on a CI runner" \
+         "that has it; CI_STRICT=1 still cannot check what is absent)"
 fi
 
 note "clippy"
 if cargo clippy --version >/dev/null 2>&1; then
     advisory cargo clippy --all-targets -- -D warnings
 else
-    echo "WARN: clippy not installed; skipping"
+    echo "WARN: clippy NOT INSTALLED — lints were NOT checked this run" \
+         "(the in-repo \`topkima lint\` gate below still runs; install" \
+         "the clippy component to restore the full surface)"
 fi
 
 note "tier-1: build"
@@ -76,6 +85,20 @@ fi
 note "tier-1: test"
 if ! cargo test -q; then
     echo "FAIL: cargo test -q"
+    exit 1
+fi
+
+note "lint gate: topkima lint (hard — any finding fails the run)"
+# The self-hosted analyzer (DESIGN.md §12). Machine-readable report is
+# kept next to the BENCH files; on failure the human-readable fix list
+# is printed so the offending lines are one click away.
+if cargo run --release --quiet -- lint --format json > BENCH_lint.json; then
+    echo "ok: lint clean (report in BENCH_lint.json)"
+else
+    echo "lint findings:"
+    cargo run --release --quiet -- lint --fix-list || true
+    echo "FAIL: topkima lint (fix the findings above, or suppress with"
+    echo "      '// lint:allow(<checker>): <reason>' — see DESIGN.md §12)"
     exit 1
 fi
 
@@ -155,10 +178,11 @@ note "smoke: unknown subcommand fails loudly"
 if cargo run --release --quiet -- no-such-subcommand >/dev/null 2>&1; then
     echo "FAIL: unknown subcommand exited 0"
     status=1
-elif cargo run --release --quiet -- help serve-fleet >/dev/null; then
+elif cargo run --release --quiet -- help serve-fleet >/dev/null \
+        && cargo run --release --quiet -- help lint >/dev/null; then
     echo "ok: unknown subcommand fails, topkima help works"
 else
-    echo "FAIL: topkima help serve-fleet"
+    echo "FAIL: topkima help serve-fleet / help lint"
     status=1
 fi
 

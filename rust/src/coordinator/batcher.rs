@@ -29,6 +29,7 @@ impl BatcherConfig {
     pub fn new(mut buckets: Vec<usize>, max_wait: Duration) -> Self {
         buckets.sort_unstable();
         buckets.dedup();
+        // lint:allow(panic-path): construction-time invariant — config validation rejects empty bucket lists before a batcher exists
         assert!(!buckets.is_empty(), "need at least one bucket size");
         BatcherConfig { buckets, max_wait, max_queue: 0 }
     }
@@ -50,6 +51,7 @@ impl BatcherConfig {
     }
 
     pub fn max_bucket(&self) -> usize {
+        // lint:allow(panic-path): buckets is non-empty by the constructor assert above
         *self.buckets.last().unwrap()
     }
 }

@@ -166,6 +166,7 @@ impl std::error::Error for ShardPanic {}
 /// folded with k. Stable across runs and platforms — re-sharding a
 /// fleet only *relocates* whole streams, it never splits one.
 pub fn shard_of(key: &StreamKey, shards: usize) -> usize {
+    // lint:allow(panic-path): debug-only guard on an invariant config validation enforces; release builds take the modulo unconditionally
     debug_assert!(shards > 0);
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     for &b in key.0.as_bytes() {
@@ -208,6 +209,7 @@ impl Fleet {
         factories: Vec<ExecutorFactory>,
         steal: StealPolicy,
     ) -> Fleet {
+        // lint:allow(panic-path): startup invariant checked before any thread spawns, not a request-path condition
         assert!(!factories.is_empty(), "fleet needs at least one shard");
         let n = factories.len();
         let mut routers: Vec<Router> = (0..n).map(|_| Router::new()).collect();
@@ -216,6 +218,7 @@ impl Fleet {
             let key = def.key();
             let shard = shard_of(&key, n);
             stream_shard.insert(key, shard);
+            // lint:allow(panic-path): shard_of takes n = routers.len() modulo, so the index is always in range
             routers[shard].register_def(def);
         }
         let transport = LocalTransport::spawn(routers, factories, steal);
@@ -239,6 +242,7 @@ impl Fleet {
         transport: Box<dyn ShardTransport>,
     ) -> Fleet {
         let n = transport.shard_count();
+        // lint:allow(panic-path): startup invariant — a zero-shard transport cannot exist past config validation
         assert!(n > 0, "fleet needs at least one shard");
         let stream_shard = defs
             .iter()

@@ -67,6 +67,7 @@ impl Executor for PjrtExecutor {
                 let mut flat = Vec::with_capacity(model.input_len());
                 for i in 0..bucket {
                     let sample = inputs.get(i).unwrap_or(
+                        // lint:allow(panic-path): the is_empty() bail above guarantees at least one sample
                         inputs.last().expect("nonempty"),
                     );
                     match &**sample {
@@ -88,6 +89,7 @@ impl Executor for PjrtExecutor {
                 let mut flat = Vec::with_capacity(model.input_len());
                 for i in 0..bucket {
                     let sample = inputs.get(i).unwrap_or(
+                        // lint:allow(panic-path): the is_empty() bail above guarantees at least one sample
                         inputs.last().expect("nonempty"),
                     );
                     match &**sample {

@@ -195,6 +195,7 @@ impl Router {
     /// is already queued — the definitions cannot carry them, and
     /// dropping them silently would lose accepted work.
     pub fn into_defs(self) -> Vec<StreamDef> {
+        // lint:allow(panic-path): deliberate — silently dropping queued requests would lose accepted work; the doc comment above requires an undrained router
         assert_eq!(
             self.queued(),
             0,

@@ -163,6 +163,7 @@ impl StealCtx {
 
     fn publish_backlog(&self, batches: usize) {
         if self.stealing() {
+            // lint:allow(panic-path): StealShared::new(n) sizes backlog to the shard count, and index < n by construction in LocalTransport::spawn
             self.shared.backlog[self.index].store(batches, Ordering::Release);
         }
     }
@@ -181,6 +182,7 @@ impl StealCtx {
         let n = self.peers.len();
         let me = self.index;
         let shared = &self.shared;
+        // lint:allow(panic-path): i ranges over 0..peers.len() == backlog.len() (both sized to the shard count)
         let load = move |i: usize| shared.backlog[i].load(Ordering::Acquire);
         match self.policy.victim {
             VictimSelect::LeastLoaded => (0..n)
@@ -204,6 +206,7 @@ impl StealCtx {
         self.shared.push(batch);
         // advisory: a dead peer just fails the send; the deque (and
         // every shard's shutdown drain) still owns the batch
+        // lint:allow(panic-path): thief comes from pick_idle_peer, which scans 0..peers.len()
         let _ = self.peers[thief].send(ShardMsg::Poke);
     }
 }
@@ -375,6 +378,7 @@ fn shard_loop(
         ctx.publish_backlog(ready.len());
         for (key, plan) in ready {
             let metrics =
+                // lint:allow(panic-path): the router only forms batches for streams registered at shard startup; a miss is a shard bug, and the panic surfaces as ShardPanic at shutdown
                 streams.get_mut(&key).expect("batch from registered stream");
             run_batch(&key, plan, &mut *executor, metrics, &mut waiters,
                       &mut inputs);
@@ -433,6 +437,7 @@ fn flush_all(
 ) {
     for (key, plan) in router.flush() {
         let metrics =
+            // lint:allow(panic-path): the router only forms batches for streams registered at shard startup; a miss is a shard bug, and the panic surfaces as ShardPanic at shutdown
             streams.get_mut(&key).expect("batch from registered stream");
         run_batch(&key, plan, executor, metrics, waiters, inputs);
     }

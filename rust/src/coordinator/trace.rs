@@ -135,6 +135,7 @@ impl Trace {
             events: tagged
                 .into_iter()
                 .map(|(t_us, si)| {
+                    // lint:allow(panic-path): si comes from enumerate() over this same streams slice
                     let s = &streams[si];
                     TraceEvent {
                         t_us,

@@ -37,6 +37,7 @@ impl LocalTransport {
         factories: Vec<ExecutorFactory>,
         mut steal: StealPolicy,
     ) -> LocalTransport {
+        // lint:allow(panic-path): spawn-time invariant — both vecs come from the same fleet-config loop, and a mismatch is a construction bug, not a request-path condition
         assert_eq!(
             routers.len(),
             factories.len(),
@@ -97,11 +98,15 @@ impl ShardTransport for LocalTransport {
         req: Request,
     ) -> Result<mpsc::Receiver<Response>, RouteError> {
         let (tx, rx) = mpsc::channel();
-        // A dead shard (panicked executor, early exit) is a typed
-        // rejection, not a panic — shutdown will additionally report it
+        // A dead or unknown shard (panicked executor, early exit, a
+        // router pointing past the shard list) is a typed rejection,
+        // not a panic — shutdown will additionally report a dead shard
         // as a `ShardPanic`.
+        let Some(handle) = self.shards.get(shard) else {
+            return Err(RouteError::ShardDown((req.model, req.k)));
+        };
         if let Err(mpsc::SendError(ShardMsg::Submit(req, _))) =
-            self.shards[shard].tx.send(ShardMsg::Submit(req, tx))
+            handle.tx.send(ShardMsg::Submit(req, tx))
         {
             return Err(RouteError::ShardDown((req.model, req.k)));
         }

@@ -121,6 +121,7 @@ impl ProcessTransport {
     ///
     /// [`RouteError::ShardDown`]: crate::coordinator::RouteError::ShardDown
     pub fn spawn(opts: &ProcessOptions) -> Result<ProcessTransport, WireError> {
+        // lint:allow(panic-path): spawn-time invariant — config validation rejects zero shards before any transport is built
         assert!(opts.shards > 0, "process transport needs at least one shard");
         let exe = match &opts.worker {
             Some(path) => std::path::PathBuf::from(path),
@@ -144,7 +145,9 @@ impl ProcessTransport {
                         exe.display()
                     ))
                 })?;
+            // lint:allow(panic-path): Stdio::piped() above guarantees both handles exist on a freshly spawned child
             let stdin = child.stdin.take().expect("piped stdin");
+            // lint:allow(panic-path): Stdio::piped() above guarantees both handles exist on a freshly spawned child
             let stdout = child.stdout.take().expect("piped stdout");
             let mut writer = BufWriter::new(stdin);
             let waiters: Waiters = Arc::new(Mutex::new(HashMap::new()));
@@ -194,8 +197,12 @@ impl ShardTransport for ProcessTransport {
         shard: usize,
         req: Request,
     ) -> Result<mpsc::Receiver<Response>, RouteError> {
-        let s = &mut self.shards[shard];
         let key: StreamKey = (req.model.clone(), req.k);
+        let Some(s) = self.shards.get_mut(shard) else {
+            // a router pointing at a shard this transport never had is
+            // a routing bug; reject the request instead of panicking
+            return Err(RouteError::ShardDown(key));
+        };
         if s.down.load(Ordering::Acquire) || s.writer.is_none() {
             return Err(RouteError::ShardDown(key));
         }
@@ -210,8 +217,13 @@ impl ShardTransport for ProcessTransport {
             t_unix_us: unix_us(),
             input: req.input,
         };
-        if let Err(e) = wire::write_frame(s.writer.as_mut().unwrap(), &frame)
-        {
+        let delivered = match s.writer.as_mut() {
+            Some(w) => wire::write_frame(w, &frame),
+            // checked non-None above, but a typed error beats a panic
+            // if that invariant ever drifts
+            None => Err(WireError::Io("writer already closed".to_string())),
+        };
+        if let Err(e) = delivered {
             eprintln!("shard worker {shard}: submit not delivered: {e}");
             s.down.store(true, Ordering::Release);
             lock(&s.waiters).remove(&req.id);
@@ -523,6 +535,7 @@ pub fn run_shard_worker() -> Result<()> {
         for (key, plan) in plans {
             let metrics = streams
                 .get_mut(&key)
+                // lint:allow(panic-path): the router only forms batches for streams registered from the init frame; a miss is a worker bug worth a crash, not a recoverable error
                 .expect("batch from registered stream");
             run_wire_batch(
                 &key, plan, executor.as_mut(), metrics, &mut inputs,

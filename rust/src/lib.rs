@@ -19,6 +19,9 @@
 //! * [`sweep`] — the parallel hardware-grid search (`topkima sweep-hw`)
 //!   built on the pipeline and the allocation-free hot paths.
 //! * [`quant`], [`util`] — shared contracts and dependency-free support.
+//! * [`lint`] — self-hosted static analysis (`topkima lint`, the CI
+//!   hygiene gate): schema-sync, panic-path, lock-discipline, and
+//!   unknown-field checkers over this repo's own sources.
 
 pub mod accel;
 pub mod arch;
@@ -26,6 +29,7 @@ pub mod coordinator;
 pub mod circuits;
 pub mod crossbar;
 pub mod ima;
+pub mod lint;
 pub mod model;
 pub mod pipeline;
 pub mod quant;

@@ -1,0 +1,281 @@
+//! lock-discipline: no `Mutex`/`RwLock` guard live across a channel
+//! `.send()` or blocking `recv` in the same scope.
+//!
+//! The steal deque (`StealShared::lock_queue`) and the process
+//! transport's waiter map are exactly where this deadlock would hide:
+//! a shard that pokes a peer while still holding the deque lock can
+//! deadlock against that peer draining the deque. The checker tracks
+//! `let`-bound guards per brace scope and flags any channel operation
+//! before the guard's scope closes (or an explicit `drop(guard)`).
+//!
+//! A binding only counts as a guard when the lock call is the *end* of
+//! the right-hand side (optionally chained through
+//! `.unwrap()`/`.expect(..)`/`.unwrap_or_else(..)`, which return the
+//! guard itself). `let tx = lock(&w).remove(&id);` binds the removed
+//! value, not the guard — the guard is a statement temporary, dropped
+//! at the `;`.
+
+use super::scan::{match_paren, SourceFile};
+use super::RawHit;
+
+/// Channel operations that must not run under a lock. `try_recv` is
+/// non-blocking and exempt.
+const CHANNEL_OPS: &[&str] =
+    &[".send(", ".recv()", ".recv_timeout(", ".recv_deadline("];
+
+/// Lock acquisitions: (needle, the args between the parens must be
+/// empty). Empty-args disambiguates `Mutex::lock()` / `RwLock::read()`
+/// / `RwLock::write()` from `io::Read::read(buf)` and
+/// `io::Write::write(buf)`. `lock(` (the proc-transport helper) and
+/// `.lock_queue(` (the steal deque accessor) take arguments.
+const LOCK_CALLS: &[(&str, bool)] = &[
+    (".lock(", true),
+    (".read(", true),
+    (".write(", true),
+    (".lock_queue(", false),
+    ("lock(", false),
+];
+
+struct Guard {
+    name: String,
+    depth: usize,
+    line_no: usize,
+}
+
+pub(crate) fn check(file: &SourceFile) -> Vec<RawHit> {
+    let mut hits = Vec::new();
+    let mut guards: Vec<Guard> = Vec::new();
+    for (idx, line) in file.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        // 1. channel ops against every guard still live in scope
+        if !guards.is_empty()
+            && CHANNEL_OPS.iter().any(|op| line.code.contains(op))
+        {
+            for g in &guards {
+                hits.push((
+                    idx,
+                    "lock-discipline",
+                    format!(
+                        "channel send/recv while lock guard `{}` (taken \
+                         at line {}) is still live — drop the guard \
+                         before touching the channel",
+                        g.name, g.line_no
+                    ),
+                ));
+            }
+        }
+        // 2. explicit drop(guard)
+        if let Some(dropped) = dropped_ident(&line.code) {
+            guards.retain(|g| g.name != dropped);
+        }
+        // 3. scope closes kill guards (depth_min catches `} else {`)
+        guards.retain(|g| line.depth_min >= g.depth);
+        // 4. new guard bindings
+        if let Some(name) = guard_binding(&line.code) {
+            guards.push(Guard {
+                name,
+                depth: line.depth_after,
+                line_no: line.no,
+            });
+        }
+    }
+    hits
+}
+
+/// `drop(ident)` — with a word boundary before `drop`.
+fn dropped_ident(code: &str) -> Option<String> {
+    let pos = code.find("drop(")?;
+    if pos > 0 {
+        let prev = code[..pos].chars().next_back()?;
+        if prev.is_alphanumeric() || prev == '_' || prev == '.' {
+            return None;
+        }
+    }
+    let inner = &code[pos + 5..code[pos..].find(')')? + pos];
+    let ident = inner.trim();
+    if !ident.is_empty()
+        && ident
+            .chars()
+            .all(|c| c.is_alphanumeric() || c == '_')
+    {
+        Some(ident.to_string())
+    } else {
+        None
+    }
+}
+
+/// The bound name when this line binds a lock guard, per the module
+/// docs' "lock call ends the right-hand side" rule.
+fn guard_binding(code: &str) -> Option<String> {
+    let let_pos = find_word(code, "let ")?;
+    let eq = code[let_pos..].find('=')? + let_pos;
+    let rhs = &code[eq + 1..];
+    let open = lock_call_paren(rhs)?;
+    let close = match_paren(rhs, open)?;
+    // guard-preserving chains
+    let mut rest = rhs[char_to_byte(rhs, close + 1)..].trim_start();
+    loop {
+        if let Some(r) = rest.strip_prefix(".unwrap()") {
+            rest = r.trim_start();
+            continue;
+        }
+        if rest.starts_with(".expect(") || rest.starts_with(".unwrap_or_else(")
+        {
+            let o = rest.find('(')?;
+            let c = match_paren(rest, o)?;
+            rest = rest[char_to_byte(rest, c + 1)..].trim_start();
+            continue;
+        }
+        break;
+    }
+    if !(rest.is_empty() || rest.starts_with(';')) {
+        return None; // chained onward: the guard is a temporary
+    }
+    // left-hand side: a plain (possibly `mut`) identifier
+    let mut lhs = code[let_pos + 4..eq].trim();
+    lhs = lhs.strip_prefix("mut ").unwrap_or(lhs).trim();
+    if let Some(colon) = lhs.find(':') {
+        lhs = lhs[..colon].trim();
+    }
+    let ok = !lhs.is_empty()
+        && lhs != "_"
+        && lhs.chars().all(|c| c.is_alphanumeric() || c == '_')
+        && lhs.chars().next().is_some_and(|c| !c.is_numeric());
+    if ok {
+        Some(lhs.to_string())
+    } else {
+        None
+    }
+}
+
+/// Char index of the `(` of the first lock call in `s`, if any.
+fn lock_call_paren(s: &str) -> Option<usize> {
+    let chars: Vec<char> = s.chars().collect();
+    let mut best: Option<usize> = None;
+    for (pat, empty_args) in LOCK_CALLS {
+        let mut from = 0;
+        while let Some(rel) = s[from..].find(pat) {
+            let byte = from + rel;
+            let pos = s[..byte].chars().count();
+            from = byte + 1;
+            // bare `lock(` needs a word boundary and must not be a
+            // method call (those are matched by `.lock(`)
+            if !pat.starts_with('.') && pos > 0 {
+                let prev = chars[pos - 1];
+                if prev.is_alphanumeric() || prev == '_' || prev == '.' {
+                    continue;
+                }
+            }
+            let open = pos + pat.chars().count() - 1;
+            if *empty_args {
+                match match_paren(&chars.iter().collect::<String>(), open) {
+                    Some(close) if close == open + 1 => {}
+                    _ => continue,
+                }
+            }
+            best = Some(best.map_or(open, |b: usize| b.min(open)));
+            break;
+        }
+    }
+    best
+}
+
+fn char_to_byte(s: &str, char_idx: usize) -> usize {
+    s.char_indices()
+        .nth(char_idx)
+        .map(|(b, _)| b)
+        .unwrap_or(s.len())
+}
+
+fn find_word(code: &str, word: &str) -> Option<usize> {
+    let pos = code.find(word)?;
+    if pos > 0 {
+        let prev = code[..pos].chars().next_back()?;
+        if prev.is_alphanumeric() || prev == '_' {
+            return None;
+        }
+    }
+    Some(pos)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hits(src: &str) -> Vec<RawHit> {
+        check(&SourceFile::parse("rust/src/coordinator/x.rs", src))
+    }
+
+    #[test]
+    fn guard_across_send_is_flagged() {
+        let h = hits(
+            "fn f() {\n    let q = self.queue.lock().unwrap_or_else(|e| \
+             e.into_inner());\n    q.push_back(b);\n    \
+             peer.send(Msg::Poke);\n}\n",
+        );
+        assert_eq!(h.len(), 1);
+        assert!(h[0].2.contains("`q`"));
+        assert!(h[0].2.contains("line 2"));
+    }
+
+    #[test]
+    fn dropped_guard_is_clean() {
+        assert!(hits(
+            "fn f() {\n    let q = self.queue.lock().unwrap();\n    \
+             q.push_back(b);\n    drop(q);\n    peer.send(Msg::Poke);\n}\n"
+        )
+        .is_empty());
+    }
+
+    #[test]
+    fn scope_close_frees_the_guard() {
+        assert!(hits(
+            "fn f() {\n    {\n        let g = m.lock().unwrap();\n        \
+             g.insert(k, v);\n    }\n    tx.send(x);\n}\n"
+        )
+        .is_empty());
+    }
+
+    #[test]
+    fn chained_consumption_is_a_temporary_not_a_guard() {
+        // binds the removed value; the guard dies at the semicolon
+        assert!(hits(
+            "fn f() {\n    let tx = lock(&waiters).remove(&id);\n    \
+             tx.send(reply);\n}\n"
+        )
+        .is_empty());
+    }
+
+    #[test]
+    fn helper_and_rwlock_guards_are_tracked() {
+        let h = hits(
+            "fn f() {\n    let mut q = self.lock_queue();\n    \
+             tx.send(x);\n}\n",
+        );
+        assert_eq!(h.len(), 1);
+        let h = hits(
+            "fn f() {\n    let map = self.state.read();\n    \
+             tx.send(x);\n}\n",
+        );
+        assert_eq!(h.len(), 1);
+    }
+
+    #[test]
+    fn io_write_with_args_is_not_a_lock() {
+        assert!(hits(
+            "fn f() {\n    let n = w.write(buf);\n    tx.send(n);\n}\n"
+        )
+        .is_empty());
+    }
+
+    #[test]
+    fn try_recv_is_exempt() {
+        assert!(hits(
+            "fn f() {\n    let g = m.lock().unwrap();\n    let r = \
+             rx.try_recv();\n}\n"
+        )
+        .is_empty());
+    }
+}

@@ -1,0 +1,314 @@
+//! Self-hosted static analysis (`topkima lint`, DESIGN.md §12).
+//!
+//! PRs 3–5 turned the stack into a sharded fleet whose correctness
+//! rests on hand-enforced conventions; this module checks them by
+//! tool. Four checkers, all dependency-free line scanners over
+//! [`scan::SourceFile`] (no `syn` — the offline vendored-deps
+//! constraint):
+//!
+//! * **schema-sync** — frame kinds in `wire.rs` vs serializer/parser
+//!   arms, tests, and DESIGN.md §11; config-struct fields vs
+//!   `to_json`/`from_json`/`from_args`/help text; `invalid(..)`
+//!   literals vs real field names.
+//! * **panic-path** — no panic-capable construct (`unwrap`, `expect`,
+//!   `panic!`, asserts, computed indexing) in non-test
+//!   `coordinator/**` code.
+//! * **lock-discipline** — no Mutex/RwLock guard live across a channel
+//!   send or blocking recv in the same scope.
+//! * **unknown-field** — every object decoder in
+//!   `wire.rs`/`config.rs`/`trace.rs` rejects unknown fields.
+//!
+//! Any finding can be silenced with `// lint:allow(<checker>):
+//! <reason>` (trailing, or standalone on the line above); the reason
+//! is mandatory — a reasonless marker becomes its own finding. Output
+//! is deterministic: findings sort by (file, line, checker, message)
+//! and the JSON form serializes through the order-stable
+//! [`util::json`], stamped with the same `version` field every
+//! `BENCH_*.json` carries.
+//!
+//! [`util::json`]: crate::util::json
+
+pub mod scan;
+
+mod lock_discipline;
+mod panic_path;
+mod schema_sync;
+mod unknown_field;
+
+use std::collections::BTreeMap;
+use std::io;
+use std::path::Path;
+
+use crate::util::bench;
+use crate::util::json::{self, Json};
+
+use self::scan::SourceFile;
+
+/// (line idx, checker, message) before suppression filtering.
+pub(crate) type RawHit = (usize, &'static str, String);
+
+/// Stable checker names, sorted — also the JSON `checkers` field.
+pub const CHECKERS: [&str; 4] =
+    ["lock-discipline", "panic-path", "schema-sync", "unknown-field"];
+
+/// One active lint finding.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub checker: &'static str,
+    pub message: String,
+}
+
+/// A full lint run: active findings plus the count of hits silenced by
+/// reasoned suppressions.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub suppressed: usize,
+}
+
+impl Report {
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Machine-readable form — byte-stable across runs for identical
+    /// sources (sorted findings, order-stable JSON objects).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "checkers",
+                Json::Arr(
+                    CHECKERS
+                        .iter()
+                        .map(|c| Json::Str(c.to_string()))
+                        .collect(),
+                ),
+            ),
+            (
+                "findings",
+                Json::Arr(
+                    self.findings
+                        .iter()
+                        .map(|f| {
+                            Json::obj(vec![
+                                ("checker", Json::Str(f.checker.to_string())),
+                                ("file", Json::Str(f.file.clone())),
+                                ("line", Json::Num(f.line as f64)),
+                                ("message", Json::Str(f.message.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("suppressed", Json::Num(self.suppressed as f64)),
+            ("version", Json::Str(bench::version_string())),
+        ])
+    }
+
+    pub fn to_json_string(&self) -> String {
+        json::to_string(&self.to_json())
+    }
+
+    /// `file:line: [checker] message` lines — the `--fix-list` form.
+    pub fn fix_list(&self) -> String {
+        self.findings
+            .iter()
+            .map(|f| {
+                format!(
+                    "{}:{}: [{}] {}\n",
+                    f.file, f.line, f.checker, f.message
+                )
+            })
+            .collect()
+    }
+}
+
+/// The sources a lint run sees: repo-relative path → scanned file.
+#[derive(Default)]
+pub struct SourceSet {
+    files: BTreeMap<String, SourceFile>,
+}
+
+impl SourceSet {
+    pub fn insert(&mut self, path: &str, text: &str) {
+        self.files
+            .insert(path.to_string(), SourceFile::parse(path, text));
+    }
+
+    /// The file whose path ends with `suffix`, if any.
+    pub fn find(&self, suffix: &str) -> Option<&SourceFile> {
+        self.files
+            .iter()
+            .find(|(p, _)| p.ends_with(suffix))
+            .map(|(_, f)| f)
+    }
+
+    /// Load the repo surfaces the checkers cover: the whole
+    /// `rust/src/coordinator/` tree plus the schema files
+    /// (`pipeline/config.rs`, `main.rs`, `tests/transport_proc.rs`,
+    /// `DESIGN.md`).
+    pub fn from_repo(root: &Path) -> io::Result<SourceSet> {
+        let mut set = SourceSet::default();
+        for rel in [
+            "rust/src/pipeline/config.rs",
+            "rust/src/main.rs",
+            "rust/tests/transport_proc.rs",
+            "DESIGN.md",
+        ] {
+            let text = std::fs::read_to_string(root.join(rel))?;
+            set.insert(rel, &text);
+        }
+        let mut stack = vec![root.join("rust/src/coordinator")];
+        while let Some(dir) = stack.pop() {
+            let mut entries: Vec<_> = std::fs::read_dir(&dir)?
+                .collect::<io::Result<Vec<_>>>()?
+                .into_iter()
+                .map(|e| e.path())
+                .collect();
+            entries.sort();
+            for path in entries {
+                if path.is_dir() {
+                    stack.push(path);
+                } else if path.extension().is_some_and(|e| e == "rs") {
+                    let text = std::fs::read_to_string(&path)?;
+                    let rel = path
+                        .strip_prefix(root)
+                        .unwrap_or(&path)
+                        .to_string_lossy()
+                        .replace('\\', "/");
+                    set.insert(&rel, &text);
+                }
+            }
+        }
+        Ok(set)
+    }
+}
+
+/// Run every checker over the set; suppression filtering and the
+/// deterministic sort happen here so the checkers stay pure scanners.
+pub fn run(set: &SourceSet) -> Report {
+    let mut report = Report::default();
+    for (path, file) in &set.files {
+        if path.contains("rust/src/coordinator/") && path.ends_with(".rs") {
+            apply(file, panic_path::check(file), &mut report);
+            apply(file, lock_discipline::check(file), &mut report);
+        }
+        if path.ends_with("coordinator/transport/wire.rs")
+            || path.ends_with("pipeline/config.rs")
+            || path.ends_with("coordinator/trace.rs")
+        {
+            apply(file, unknown_field::check(file), &mut report);
+        }
+    }
+    for (path, idx, checker, message) in schema_sync::check(set) {
+        if let Some(file) = set.files.get(&path) {
+            apply(file, vec![(idx, checker, message)], &mut report);
+        }
+    }
+    report.findings.sort();
+    report.findings.dedup();
+    report
+}
+
+fn apply(file: &SourceFile, hits: Vec<RawHit>, report: &mut Report) {
+    for (idx, checker, message) in hits {
+        let line = file.lines.get(idx).map(|l| l.no).unwrap_or(idx + 1);
+        match file.suppression_for(idx, checker) {
+            Some(s) if !s.reason.is_empty() => report.suppressed += 1,
+            Some(_) => report.findings.push(Finding {
+                file: file.path.clone(),
+                line,
+                checker,
+                message: format!(
+                    "{message} [the suppression here has no reason — \
+                     `// lint:allow({checker}): <why>` requires one]"
+                ),
+            }),
+            None => report.findings.push(Finding {
+                file: file.path.clone(),
+                line,
+                checker,
+                message,
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reasoned_suppression_silences_reasonless_does_not() {
+        let mut set = SourceSet::default();
+        set.insert(
+            "rust/src/coordinator/a.rs",
+            "fn f() {\n    // lint:allow(panic-path): bounded by the \
+             constructor\n    x.unwrap();\n}\n",
+        );
+        let r = run(&set);
+        assert!(r.is_clean(), "{:?}", r.findings);
+        assert_eq!(r.suppressed, 1);
+
+        let mut set = SourceSet::default();
+        set.insert(
+            "rust/src/coordinator/a.rs",
+            "fn f() {\n    x.unwrap(); // lint:allow(panic-path):\n}\n",
+        );
+        let r = run(&set);
+        assert_eq!(r.findings.len(), 1);
+        assert!(r.findings[0].message.contains("no reason"));
+    }
+
+    #[test]
+    fn wrong_checker_suppression_does_not_silence() {
+        let mut set = SourceSet::default();
+        set.insert(
+            "rust/src/coordinator/a.rs",
+            "fn f() {\n    x.unwrap(); // lint:allow(lock-discipline): \
+             not the right checker\n}\n",
+        );
+        let r = run(&set);
+        assert_eq!(r.findings.len(), 1);
+    }
+
+    #[test]
+    fn findings_sort_and_json_is_stable() {
+        let mut set = SourceSet::default();
+        set.insert(
+            "rust/src/coordinator/b.rs",
+            "fn f() {\n    b.unwrap();\n}\n",
+        );
+        set.insert(
+            "rust/src/coordinator/a.rs",
+            "fn f() {\n    a.unwrap();\n}\n",
+        );
+        let r = run(&set);
+        assert_eq!(r.findings.len(), 2);
+        assert!(r.findings[0].file < r.findings[1].file);
+        assert_eq!(r.to_json_string(), r.to_json_string());
+        let doc = Json::parse(&r.to_json_string()).unwrap();
+        assert_eq!(
+            doc.get("version").as_str(),
+            Some(bench::version_string().as_str())
+        );
+        assert_eq!(
+            doc.get("findings").as_arr().map(|a| a.len()),
+            Some(2)
+        );
+    }
+
+    #[test]
+    fn fix_list_names_file_line_checker() {
+        let mut set = SourceSet::default();
+        set.insert(
+            "rust/src/coordinator/a.rs",
+            "fn f() {\n    a.unwrap();\n}\n",
+        );
+        let r = run(&set);
+        let list = r.fix_list();
+        assert!(list.contains("rust/src/coordinator/a.rs:2: [panic-path]"));
+    }
+}

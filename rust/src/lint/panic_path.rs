@@ -1,0 +1,180 @@
+//! panic-path: no panic-capable construct on the serving path.
+//!
+//! Scope: non-test code under `rust/src/coordinator/` (the fleet
+//! front, shards, transports, wire protocol). A stray `unwrap()` there
+//! turns one bad request into a dead shard — exactly the failure the
+//! `RouteError::ShardDown` / `ShardPanic` machinery exists to avoid.
+//! Every hit must become a typed error or carry
+//! `// lint:allow(panic-path): <reason>`.
+
+use super::scan::SourceFile;
+use super::RawHit;
+
+/// (needle in the blanked-code view, display name, why it panics)
+const CALLS: &[(&str, &str, &str)] = &[
+    (".unwrap()", "unwrap()", "panics on Err/None"),
+    (".expect(", "expect(..)", "panics on Err/None"),
+    ("panic!(", "panic!", "panics unconditionally"),
+    ("unreachable!(", "unreachable!", "panics when reached"),
+    ("todo!(", "todo!", "panics when reached"),
+    ("unimplemented!(", "unimplemented!", "panics when reached"),
+    ("assert!(", "assert!", "panics when false"),
+    ("assert_eq!(", "assert_eq!", "panics on mismatch"),
+    ("assert_ne!(", "assert_ne!", "panics on match"),
+    ("debug_assert", "debug_assert*", "panics in debug builds"),
+];
+
+pub(crate) fn check(file: &SourceFile) -> Vec<RawHit> {
+    let mut hits = Vec::new();
+    for (idx, line) in file.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let dbg = line.code.contains("debug_assert");
+        for (pat, name, why) in CALLS {
+            // debug_assert_eq! textually contains assert_eq!; report
+            // the debug_ variant only
+            if dbg && pat.starts_with("assert") {
+                continue;
+            }
+            if line.code.contains(pat) {
+                hits.push((
+                    idx,
+                    "panic-path",
+                    format!(
+                        "`{name}` {why} on the serving path — return a \
+                         typed error or add `// lint:allow(panic-path): \
+                         <reason>`"
+                    ),
+                ));
+            }
+        }
+        for msg in index_sites(&line.code) {
+            hits.push((idx, "panic-path", msg));
+        }
+    }
+    hits
+}
+
+/// Indexing with a computed (identifier-based) index: `xs[i]`,
+/// `backlog[self.index]`. Literal indices (`xs[0]`), ranges
+/// (`buf[..n]`), and attribute brackets (`#[cfg(...)]`) are exempt —
+/// the hazard is an index whose bound is not visible on the line.
+fn index_sites(code: &str) -> Vec<String> {
+    let chars: Vec<char> = code.chars().collect();
+    let mut out = Vec::new();
+    for (i, &c) in chars.iter().enumerate() {
+        if c != '[' || i == 0 {
+            continue;
+        }
+        let prev = chars[i - 1];
+        if !(prev.is_alphanumeric() || prev == '_' || prev == ']') {
+            continue;
+        }
+        let Some(close) = match_bracket(&chars, i) else {
+            continue;
+        };
+        let inner: String = chars[i + 1..close].iter().collect();
+        let inner = inner.trim();
+        if inner.is_empty() || inner.contains("..") {
+            continue;
+        }
+        let first = match inner.chars().next() {
+            Some(f) => f,
+            None => continue,
+        };
+        if !(first.is_alphabetic() || first == '_') {
+            continue;
+        }
+        // the indexed expression, for the message
+        let mut start = i;
+        while start > 0 {
+            let p = chars[start - 1];
+            if p.is_alphanumeric() || p == '_' || p == '.' {
+                start -= 1;
+            } else {
+                break;
+            }
+        }
+        let target: String = chars[start..i].iter().collect();
+        out.push(format!(
+            "`{target}[{inner}]` indexes with a computed value and \
+             panics out of bounds — use `.get(..)` with a typed error \
+             or add `// lint:allow(panic-path): <reason>`"
+        ));
+    }
+    out
+}
+
+fn match_bracket(chars: &[char], open: usize) -> Option<usize> {
+    let mut depth = 0usize;
+    for (j, &c) in chars.iter().enumerate().skip(open) {
+        match c {
+            '[' => depth += 1,
+            ']' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(j);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hits(src: &str) -> Vec<RawHit> {
+        check(&SourceFile::parse("rust/src/coordinator/x.rs", src))
+    }
+
+    #[test]
+    fn flags_the_panic_family() {
+        let h = hits(
+            "fn f() {\n    let x = y.unwrap();\n    z.expect(\"msg\");\n    \
+             panic!(\"boom\");\n    assert!(ok);\n    debug_assert!(ok);\n}\n",
+        );
+        assert_eq!(h.len(), 5);
+        assert!(h[0].2.contains("unwrap"));
+        assert!(h[4].2.contains("debug_assert"));
+    }
+
+    #[test]
+    fn unwrap_or_else_is_not_unwrap() {
+        assert!(hits(
+            "fn f() {\n    let g = m.lock().unwrap_or_else(|e| \
+             e.into_inner());\n}\n"
+        )
+        .is_empty());
+    }
+
+    #[test]
+    fn test_modules_are_exempt() {
+        assert!(hits(
+            "#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\n"
+        )
+        .is_empty());
+    }
+
+    #[test]
+    fn computed_indexing_flagged_literals_exempt() {
+        let h = hits(
+            "fn f() {\n    let a = xs[i];\n    let b = xs[0];\n    let c = \
+             buf[..n];\n    let d = backlog[self.index];\n}\n",
+        );
+        assert_eq!(h.len(), 2);
+        assert!(h[0].2.contains("xs[i]"));
+        assert!(h[1].2.contains("backlog[self.index]"));
+    }
+
+    #[test]
+    fn attributes_and_macros_are_not_indexing() {
+        assert!(hits(
+            "#[derive(Clone)]\nfn f() {\n    let v = vec![a, b];\n}\n"
+        )
+        .is_empty());
+    }
+}

@@ -1,0 +1,301 @@
+//! Line-level Rust source scanner shared by every checker.
+//!
+//! Deliberately *not* a parser (the offline vendored-deps constraint
+//! rules out `syn`): each line is pre-processed into a `code` view with
+//! string/char literals, `//` comments, and `/* */` comments blanked
+//! out, plus brace-depth bookkeeping and `#[cfg(test)] mod` region
+//! tracking. String state carries across lines, so multi-line string
+//! literals (including `\`-continued `format!` text) never corrupt the
+//! brace counts. Checkers that *need* literal text (schema-sync) read
+//! the `raw` view instead.
+//!
+//! Known limitations, accepted for a line-based tool: raw strings
+//! (`r#"…"#`) are treated as ordinary strings, and a lock guard
+//! returned by a helper the scanner does not know about is invisible
+//! to lock-discipline. DESIGN.md §12 documents both.
+
+/// One `// lint:allow(<checker>): <reason>` marker.
+#[derive(Clone, Debug)]
+pub struct Suppression {
+    pub checker: String,
+    pub reason: String,
+}
+
+/// One pre-processed source line.
+#[derive(Clone, Debug)]
+pub struct Line {
+    /// 1-based line number.
+    pub no: usize,
+    /// The original text (string literals intact).
+    pub raw: String,
+    /// The text with literals and comments blanked to spaces.
+    pub code: String,
+    /// Brace depth entering the line.
+    pub depth_before: usize,
+    /// Brace depth leaving the line.
+    pub depth_after: usize,
+    /// Minimum depth reached while scanning the line (`} else {` dips).
+    pub depth_min: usize,
+    /// Inside a `#[cfg(test)] mod …` region.
+    pub in_test: bool,
+    /// Suppression marker found on this line, if any.
+    pub suppress: Option<Suppression>,
+}
+
+/// A scanned file: path + pre-processed lines.
+pub struct SourceFile {
+    pub path: String,
+    pub lines: Vec<Line>,
+}
+
+#[derive(PartialEq)]
+enum Mode {
+    Code,
+    Str,
+    Block,
+}
+
+impl SourceFile {
+    pub fn parse(path: &str, text: &str) -> SourceFile {
+        let mut mode = Mode::Code;
+        let mut depth: usize = 0;
+        let mut in_test = false;
+        let mut test_depth = 0usize;
+        let mut pending_test_attr = false;
+        let mut lines = Vec::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let code = blank_literals(raw, &mut mode);
+            let depth_before = depth;
+            let mut depth_min = depth;
+            for c in code.chars() {
+                match c {
+                    '{' => depth += 1,
+                    '}' => {
+                        depth = depth.saturating_sub(1);
+                        depth_min = depth_min.min(depth);
+                        if in_test && depth < test_depth {
+                            in_test = false;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            if !in_test {
+                if pending_test_attr {
+                    if code.contains("mod ") {
+                        in_test = true;
+                        test_depth = depth;
+                        pending_test_attr = false;
+                    } else if !code.trim().is_empty() {
+                        pending_test_attr = false;
+                    }
+                }
+                if code.contains("#[cfg(test)]") {
+                    pending_test_attr = true;
+                }
+            }
+            lines.push(Line {
+                no: idx + 1,
+                raw: raw.to_string(),
+                code,
+                depth_before,
+                depth_after: depth,
+                depth_min,
+                in_test,
+                suppress: parse_suppression(raw),
+            });
+        }
+        SourceFile {
+            path: path.to_string(),
+            lines,
+        }
+    }
+
+    /// The suppression governing a finding on line index `idx`
+    /// (0-based): a trailing marker on the line itself, or a standalone
+    /// marker on the line directly above.
+    pub fn suppression_for(
+        &self,
+        idx: usize,
+        checker: &str,
+    ) -> Option<&Suppression> {
+        let on = |i: usize| {
+            self.lines
+                .get(i)
+                .and_then(|l| l.suppress.as_ref())
+                .filter(|s| s.checker == checker)
+        };
+        on(idx).or_else(|| if idx > 0 { on(idx - 1) } else { None })
+    }
+}
+
+/// Blank string/char literals and comments to spaces, carrying string
+/// state across lines via `mode`.
+fn blank_literals(raw: &str, mode: &mut Mode) -> String {
+    let chars: Vec<char> = raw.chars().collect();
+    let mut out = String::with_capacity(raw.len());
+    let mut i = 0;
+    while i < chars.len() {
+        match *mode {
+            Mode::Str => {
+                if chars[i] == '\\' {
+                    out.push_str("  ");
+                    i += 2;
+                } else if chars[i] == '"' {
+                    out.push(' ');
+                    *mode = Mode::Code;
+                    i += 1;
+                } else {
+                    out.push(' ');
+                    i += 1;
+                }
+            }
+            Mode::Block => {
+                if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                    out.push_str("  ");
+                    *mode = Mode::Code;
+                    i += 2;
+                } else {
+                    out.push(' ');
+                    i += 1;
+                }
+            }
+            Mode::Code => {
+                let c = chars[i];
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    break;
+                }
+                if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    out.push_str("  ");
+                    *mode = Mode::Block;
+                    i += 2;
+                } else if c == '"' {
+                    out.push(' ');
+                    *mode = Mode::Str;
+                    i += 1;
+                } else if c == '\'' {
+                    // char literal vs lifetime: a literal closes within
+                    // two ('x') or three ('\n') characters
+                    if chars.get(i + 1) == Some(&'\\')
+                        && chars.get(i + 3) == Some(&'\'')
+                    {
+                        out.push_str("    ");
+                        i += 4;
+                    } else if chars.get(i + 2) == Some(&'\'') {
+                        out.push_str("   ");
+                        i += 3;
+                    } else {
+                        out.push(c);
+                        i += 1;
+                    }
+                } else {
+                    out.push(c);
+                    i += 1;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Parse `// lint:allow(<checker>): <reason>` anywhere in the line.
+/// A marker without a reason parses with `reason == ""` — the runner
+/// turns that into its own finding instead of suppressing.
+fn parse_suppression(raw: &str) -> Option<Suppression> {
+    let pos = raw.find("// lint:allow(")?;
+    let rest = &raw[pos + "// lint:allow(".len()..];
+    let close = rest.find(')')?;
+    let checker = rest[..close].trim().to_string();
+    let reason = rest[close + 1..]
+        .trim_start()
+        .strip_prefix(':')
+        .map(|r| r.trim().to_string())
+        .unwrap_or_default();
+    Some(Suppression { checker, reason })
+}
+
+/// Find the `)` matching the `(` at byte-char index `open` in `s`
+/// (same-line only). Returns `None` when the call spans lines.
+pub fn match_paren(s: &str, open: usize) -> Option<usize> {
+    let chars: Vec<char> = s.chars().collect();
+    if chars.get(open) != Some(&'(') {
+        return None;
+    }
+    let mut depth = 0usize;
+    for (i, c) in chars.iter().enumerate().skip(open) {
+        match c {
+            '(' => depth += 1,
+            ')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(i);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_are_blanked() {
+        let mut m = Mode::Code;
+        let c = blank_literals(r#"let x = "a { b"; // } brace"#, &mut m);
+        assert!(!c.contains('{'));
+        assert!(!c.contains('}'));
+        assert!(c.contains("let x ="));
+    }
+
+    #[test]
+    fn multiline_strings_do_not_corrupt_depth() {
+        let f = SourceFile::parse(
+            "x.rs",
+            "fn f() {\n    let s = \"open {\n    still } in string\";\n}\n",
+        );
+        assert_eq!(f.lines[3].depth_after, 0);
+        assert_eq!(f.lines[1].depth_after, 1);
+        // the in-string braces were blanked, not counted
+        assert_eq!(f.lines[2].depth_after, 1);
+    }
+
+    #[test]
+    fn test_regions_are_tracked() {
+        let f = SourceFile::parse(
+            "x.rs",
+            "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\n\
+             fn after() {}\n",
+        );
+        assert!(!f.lines[0].in_test);
+        assert!(f.lines[3].in_test);
+        assert!(!f.lines[5].in_test);
+    }
+
+    #[test]
+    fn suppression_grammar_parses() {
+        let s =
+            parse_suppression("x(); // lint:allow(panic-path): bounded above")
+                .unwrap();
+        assert_eq!(s.checker, "panic-path");
+        assert_eq!(s.reason, "bounded above");
+        let empty =
+            parse_suppression("// lint:allow(panic-path):").unwrap();
+        assert_eq!(empty.reason, "");
+        assert!(parse_suppression("plain code").is_none());
+    }
+
+    #[test]
+    fn depth_min_sees_else_dips() {
+        let f = SourceFile::parse(
+            "x.rs",
+            "fn f() {\n    if a {\n        x();\n    } else {\n        \
+             y();\n    }\n}\n",
+        );
+        // `} else {` dips to depth 1 before reopening
+        assert_eq!(f.lines[3].depth_min, 1);
+        assert_eq!(f.lines[3].depth_after, 2);
+    }
+}

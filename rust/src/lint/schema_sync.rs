@@ -1,0 +1,469 @@
+//! schema-sync: the hand-enforced sync surfaces between the wire
+//! protocol, the config schema, the CLI, and the docs — checked by
+//! tool instead of reviewer.
+//!
+//! Wire side (`coordinator/transport/wire.rs`): every frame kind named
+//! in `Frame::kind()` must have a serializer tuple (`kind("<k>")`), a
+//! parser arm (`"<k>" =>`), test coverage (its `Frame::<Variant>`
+//! constructed in the wire tests, or the kind string exercised in
+//! `tests/transport_proc.rs`), and a DESIGN.md §11 mention.
+//!
+//! Config side (`pipeline/config.rs` + `coordinator/fleet.rs`): every
+//! field of the config structs must have a serializer mention, a
+//! `from_json` parser arm, and — when it maps to a CLI flag — a
+//! `from_args` arm plus `--<flag>` help text in `main.rs`. Every
+//! `invalid("<path>", ..)` literal in validation must name real
+//! fields, so error messages never point users at knobs that do not
+//! exist.
+//!
+//! All findings anchor at the declaration site (the `kind()` match arm
+//! or the struct field), which is also where a suppression would go.
+
+use super::scan::SourceFile;
+use super::SourceSet;
+
+/// (path, line idx, checker, message)
+pub(crate) type PathHit = (String, usize, &'static str, String);
+
+/// Config structs checked field-by-field: (name, defined in fleet.rs
+/// rather than config.rs).
+const CONFIG_STRUCTS: &[(&str, bool)] = &[
+    ("StackConfig", false),
+    ("ServingConfig", false),
+    ("FleetConfig", false),
+    ("TransportConfig", false),
+    ("StreamSpec", false),
+    ("BatchPolicy", false),
+    ("StealPolicy", true),
+];
+
+pub(crate) fn check(set: &SourceSet) -> Vec<PathHit> {
+    let mut hits = Vec::new();
+    if let Some(wire) = set.find("coordinator/transport/wire.rs") {
+        check_wire(set, wire, &mut hits);
+    }
+    if let Some(cfg) = set.find("pipeline/config.rs") {
+        check_config(set, cfg, &mut hits);
+    }
+    hits
+}
+
+// ---- wire ---------------------------------------------------------------
+
+fn check_wire(set: &SourceSet, wire: &SourceFile, hits: &mut Vec<PathHit>) {
+    let proc_tests = set.find("tests/transport_proc.rs");
+    let design = set.find("DESIGN.md");
+    let section = design.map(design_section_11);
+    for (idx, kind, variant) in kind_arms(wire) {
+        let anchor = |msg: String| {
+            (wire.path.clone(), idx, "schema-sync", msg)
+        };
+        if !any_raw(wire, |l| l.contains(&format!("kind(\"{kind}\")"))) {
+            hits.push(anchor(format!(
+                "frame kind \"{kind}\" has no serializer — `to_json` \
+                 never emits `kind(\"{kind}\")`"
+            )));
+        }
+        if !any_raw(wire, |l| l.contains(&format!("\"{kind}\" =>"))) {
+            hits.push(anchor(format!(
+                "frame kind \"{kind}\" has no parser arm — `from_json` \
+                 has no `\"{kind}\" =>`"
+            )));
+        }
+        let in_wire_tests = wire
+            .lines
+            .iter()
+            .any(|l| l.in_test && l.raw.contains(&format!("Frame::{variant}")));
+        let in_proc_tests = proc_tests.is_some_and(|f| {
+            any_raw(f, |l| l.contains(&format!("\"{kind}\"")))
+        });
+        if !in_wire_tests && !in_proc_tests {
+            hits.push(anchor(format!(
+                "frame kind \"{kind}\" is untested — no wire test \
+                 constructs `Frame::{variant}` and transport_proc.rs \
+                 never exercises it"
+            )));
+        }
+        if let Some(sec) = &section {
+            if !sec.contains(&kind) {
+                hits.push(anchor(format!(
+                    "frame kind \"{kind}\" is undocumented — DESIGN.md \
+                     §11 never mentions it"
+                )));
+            }
+        }
+    }
+}
+
+/// `(line idx, kind string, variant name)` from the `fn kind()` match.
+fn kind_arms(wire: &SourceFile) -> Vec<(usize, String, String)> {
+    let mut arms = Vec::new();
+    let Some(start) = wire
+        .lines
+        .iter()
+        .position(|l| l.code.contains("fn kind(") && !l.in_test)
+    else {
+        return arms;
+    };
+    let base = wire.lines[start].depth_before;
+    for (idx, line) in wire.lines.iter().enumerate().skip(start + 1) {
+        if line.depth_after <= base {
+            break;
+        }
+        let Some(vpos) = line.raw.find("Frame::") else { continue };
+        let variant: String = line.raw[vpos + 7..]
+            .chars()
+            .take_while(|c| c.is_alphanumeric() || *c == '_')
+            .collect();
+        let Some(kpos) = line.raw.find("=> \"") else { continue };
+        let kind: String = line.raw[kpos + 4..]
+            .chars()
+            .take_while(|c| *c != '"')
+            .collect();
+        if !variant.is_empty() && !kind.is_empty() {
+            arms.push((idx, kind, variant));
+        }
+    }
+    arms
+}
+
+/// DESIGN.md §11 body: from the `## §11` heading to the next `## `.
+fn design_section_11(design: &SourceFile) -> String {
+    let mut out = String::new();
+    let mut inside = false;
+    for line in &design.lines {
+        if line.raw.starts_with("## ") {
+            inside = line.raw.starts_with("## §11");
+            continue;
+        }
+        if inside {
+            out.push_str(&line.raw);
+            out.push('\n');
+        }
+    }
+    out
+}
+
+// ---- config -------------------------------------------------------------
+
+fn check_config(set: &SourceSet, cfg: &SourceFile, hits: &mut Vec<PathHit>) {
+    let fleet = set.find("coordinator/fleet.rs");
+    let main = set.find("src/main.rs");
+    let mut known_segments: Vec<String> =
+        vec!["config".to_string(), "json".to_string()];
+    let mut fields: Vec<(&SourceFile, usize, &str, String)> = Vec::new();
+    for (name, in_fleet) in CONFIG_STRUCTS {
+        let file = if *in_fleet {
+            match fleet {
+                Some(f) => f,
+                None => continue,
+            }
+        } else {
+            cfg
+        };
+        for (idx, field) in struct_fields(file, name) {
+            known_segments.push(field.clone());
+            fields.push((file, idx, name, field));
+        }
+    }
+    for (file, idx, struct_name, field) in &fields {
+        let anchor = |msg: String| {
+            (file.path.clone(), *idx, "schema-sync", msg)
+        };
+        let quoted = format!("\"{field}\"");
+        if !any_raw(cfg, |l| l.contains(&quoted) && !l.contains("=>")) {
+            hits.push(anchor(format!(
+                "{struct_name}.{field} is never serialized — no \
+                 `\"{field}\"` tuple outside a match arm in config.rs"
+            )));
+        }
+        if !any_raw(cfg, |l| l.contains(&format!("\"{field}\" =>"))) {
+            hits.push(anchor(format!(
+                "{struct_name}.{field} has no `from_json` arm — \
+                 config files could not set it"
+            )));
+        }
+        if let Some(flag) = flag_for(struct_name, field) {
+            if !any_raw(cfg, |l| l.contains(&format!("\"{flag}\" =>"))) {
+                hits.push(anchor(format!(
+                    "{struct_name}.{field} has no `--{flag}` arm in \
+                     `from_args_with`"
+                )));
+            }
+            if let Some(m) = main {
+                if !any_raw(m, |l| l.contains(&format!("--{flag}"))) {
+                    hits.push(anchor(format!(
+                        "{struct_name}.{field} is undocumented — \
+                         `--{flag}` appears nowhere in the main.rs \
+                         help text"
+                    )));
+                }
+            }
+        }
+    }
+    check_invalid_literals(cfg, &known_segments, hits);
+}
+
+/// `(line idx, field name)` for every `pub` field of `name`.
+fn struct_fields(file: &SourceFile, name: &str) -> Vec<(usize, String)> {
+    let needle = format!("pub struct {name} ");
+    let alt = format!("pub struct {name}{{");
+    let Some(start) = file.lines.iter().position(|l| {
+        !l.in_test && (l.code.contains(&needle) || l.code.contains(&alt))
+    }) else {
+        return Vec::new();
+    };
+    let base = file.lines[start].depth_before;
+    let mut fields = Vec::new();
+    for (idx, line) in file.lines.iter().enumerate().skip(start + 1) {
+        if line.depth_after <= base {
+            break;
+        }
+        let t = line.code.trim();
+        if let Some(rest) = t.strip_prefix("pub ") {
+            if let Some(colon) = rest.find(':') {
+                let field = rest[..colon].trim();
+                if !field.is_empty()
+                    && field
+                        .chars()
+                        .all(|c| c.is_alphanumeric() || c == '_')
+                {
+                    fields.push((idx, field.to_string()));
+                }
+            }
+        }
+    }
+    fields
+}
+
+/// The CLI flag a config field maps to, if any. Composite sections
+/// (`serving`, `fleet.streams`, …) and config-file-only structs have
+/// no flag; the transport/steal knobs use prefixed flag names.
+fn flag_for(struct_name: &str, field: &str) -> Option<String> {
+    match (struct_name, field) {
+        ("StackConfig", "serving" | "fleet") => None,
+        ("FleetConfig", "streams" | "steal" | "transport") => None,
+        ("StreamSpec", _) | ("BatchPolicy", _) => None,
+        ("TransportConfig", "kind") => Some("transport".to_string()),
+        ("TransportConfig", f) => Some(format!("transport-{f}")),
+        ("StealPolicy", "enabled") => Some("steal".to_string()),
+        ("StealPolicy", f) => {
+            Some(format!("steal-{}", f.replace('_', "-")))
+        }
+        (_, f) => Some(f.replace('_', "-")),
+    }
+}
+
+/// Every `invalid("<path>", ..)` literal must resolve against the known
+/// field names (dot-separated; `[..]` and trailing words stripped).
+fn check_invalid_literals(
+    cfg: &SourceFile,
+    known: &[String],
+    hits: &mut Vec<PathHit>,
+) {
+    for (idx, line) in cfg.lines.iter().enumerate() {
+        if line.in_test
+            || !line.code.contains("invalid(")
+            || line.code.contains("fn invalid")
+        {
+            continue;
+        }
+        let Some(pos) = line.raw.find("invalid(") else { continue };
+        let rest = line.raw[pos + "invalid(".len()..].trim();
+        let literal = if rest.is_empty() {
+            // the call broke at the paren: the literal opens the next line
+            cfg.lines
+                .get(idx + 1)
+                .map(|l| l.raw.trim())
+                .filter(|t| t.starts_with('"'))
+                .and_then(extract_literal)
+        } else if rest.starts_with('"') {
+            extract_literal(rest)
+        } else {
+            None // first argument is an expression, not a literal path
+        };
+        let Some(path) = literal else { continue };
+        for segment in path.split('.') {
+            let seg = segment
+                .split(['[', ' ', '/'])
+                .next()
+                .unwrap_or("")
+                .trim();
+            if seg.is_empty() {
+                continue;
+            }
+            if !known.iter().any(|k| k == seg) {
+                hits.push((
+                    cfg.path.clone(),
+                    idx,
+                    "schema-sync",
+                    format!(
+                        "`invalid(\"{path}\")` names `{seg}`, which is \
+                         not a config field — the error message points \
+                         at a knob that does not exist"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+fn extract_literal(s: &str) -> Option<String> {
+    let body = s.strip_prefix('"')?;
+    let end = body.find('"')?;
+    Some(body[..end].to_string())
+}
+
+fn any_raw(file: &SourceFile, pred: impl Fn(&str) -> bool) -> bool {
+    file.lines.iter().any(|l| pred(&l.raw))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn set(files: &[(&str, &str)]) -> SourceSet {
+        let mut s = SourceSet::default();
+        for (p, t) in files {
+            s.insert(p, t);
+        }
+        s
+    }
+
+    const WIRE_OK: &str = r#"
+impl Frame {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Frame::Init { .. } => "init",
+        }
+    }
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![kind("init")])
+    }
+    pub fn from_json(v: &Json) -> Result<Frame, WireError> {
+        match k {
+            "init" => {}
+        }
+    }
+}
+#[cfg(test)]
+mod tests {
+    fn t() { let f = Frame::Init {}; }
+}
+"#;
+
+    #[test]
+    fn complete_wire_schema_is_clean() {
+        let s = set(&[("rust/src/coordinator/transport/wire.rs", WIRE_OK)]);
+        assert!(check(&s).is_empty());
+    }
+
+    #[test]
+    fn missing_parser_arm_serializer_and_test_are_flagged() {
+        let bad = WIRE_OK.replace(
+            "Frame::Init { .. } => \"init\",",
+            "Frame::Init { .. } => \"init\",\n            \
+             Frame::Ghost { .. } => \"ghost\",",
+        );
+        let s = set(&[(
+            "rust/src/coordinator/transport/wire.rs",
+            bad.as_str(),
+        )]);
+        let hits = check(&s);
+        assert_eq!(hits.len(), 3, "{hits:?}");
+        assert!(hits.iter().all(|h| h.3.contains("ghost")));
+    }
+
+    #[test]
+    fn design_mention_is_required_when_design_present() {
+        let s = set(&[
+            ("rust/src/coordinator/transport/wire.rs", WIRE_OK),
+            ("DESIGN.md", "## §11 Wire\n\nframes: `init`.\n"),
+        ]);
+        assert!(check(&s).is_empty());
+        let s = set(&[
+            ("rust/src/coordinator/transport/wire.rs", WIRE_OK),
+            ("DESIGN.md", "## §11 Wire\n\nframes: none listed.\n"),
+        ]);
+        let hits = check(&s);
+        assert_eq!(hits.len(), 1);
+        assert!(hits[0].3.contains("undocumented"));
+    }
+
+    const CONFIG_OK: &str = r#"
+pub struct StackConfig {
+    pub k: usize,
+}
+impl StackConfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![("k", Json::Num(self.k as f64))])
+    }
+    pub fn from_json(v: &Json) -> Result<StackConfig, ConfigError> {
+        match key.as_str() {
+            "k" => cfg.k = json_usize(value, "k")?,
+        }
+    }
+    pub fn from_args_with() {
+        match name {
+            "k" => cfg.k = parse_usize("k", &val)?,
+        }
+    }
+}
+"#;
+
+    #[test]
+    fn complete_config_schema_is_clean() {
+        let s = set(&[
+            ("rust/src/pipeline/config.rs", CONFIG_OK),
+            ("rust/src/main.rs", "const HELP: &str = \"--k K\";"),
+        ]);
+        assert!(check(&s).is_empty());
+    }
+
+    #[test]
+    fn field_without_parser_arm_or_help_is_flagged() {
+        let bad = CONFIG_OK
+            .replace("pub k: usize,", "pub k: usize,\n    pub bogus: usize,");
+        let s = set(&[
+            ("rust/src/pipeline/config.rs", bad.as_str()),
+            ("rust/src/main.rs", "const HELP: &str = \"--k K\";"),
+        ]);
+        let hits = check(&s);
+        // bogus: no serializer, no from_json arm, no flag arm, no help
+        assert_eq!(hits.len(), 4, "{hits:?}");
+        assert!(hits.iter().all(|h| h.3.contains("bogus")));
+    }
+
+    #[test]
+    fn invalid_literal_naming_a_ghost_field_is_flagged() {
+        let bad = CONFIG_OK.replace(
+            "pub fn from_args_with() {",
+            "pub fn validate(&self) -> Result<(), ConfigError> {\n        \
+             return Err(invalid(\"row_parallel\", \"nope\"));\n    }\n    \
+             pub fn from_args_with() {",
+        );
+        let s = set(&[
+            ("rust/src/pipeline/config.rs", bad.as_str()),
+            ("rust/src/main.rs", "const HELP: &str = \"--k K\";"),
+        ]);
+        let hits = check(&s);
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        assert!(hits[0].3.contains("row_parallel"));
+    }
+
+    #[test]
+    fn dotted_and_bracketed_invalid_paths_resolve() {
+        let ok = CONFIG_OK.replace(
+            "pub fn from_args_with() {",
+            "pub fn validate(&self) {\n        \
+             invalid(\"k\", \"x\");\n        \
+             invalid(\"config\", \"x\");\n    }\n    \
+             pub fn from_args_with() {",
+        );
+        let s = set(&[
+            ("rust/src/pipeline/config.rs", ok.as_str()),
+            ("rust/src/main.rs", "const HELP: &str = \"--k K\";"),
+        ]);
+        assert!(check(&s).is_empty());
+    }
+}

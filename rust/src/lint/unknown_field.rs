@@ -1,0 +1,144 @@
+//! unknown-field: every object-decoding `from_json`-family function in
+//! the wire/config/trace schema files must reject unknown fields.
+//!
+//! The rejection idiom (a final `other =>` arm producing an
+//! `UnknownField` error or an "unknown … field" message) is what makes
+//! schema typos loud instead of silently ignored — a config file with
+//! a misspelled knob must fail, not quietly run with the default. The
+//! checker finds every function whose name contains `from_json` or
+//! ends in `_from`, and — when its body actually iterates object
+//! entries (`.as_obj()` + a `for (` loop) — requires the idiom in the
+//! body. Scalar decoders (`tech_from`, …) have no entry loop and are
+//! exempt.
+
+use super::scan::SourceFile;
+use super::RawHit;
+
+pub(crate) fn check(file: &SourceFile) -> Vec<RawHit> {
+    let mut hits = Vec::new();
+    for (idx, name) in decoder_fns(file) {
+        let body = body_range(file, idx);
+        let iterates = body.clone().any(|i| {
+            file.lines[i].code.contains(".as_obj()")
+        }) && body.clone().any(|i| file.lines[i].code.contains("for ("));
+        if !iterates {
+            continue;
+        }
+        let rejects = body.clone().any(|i| {
+            let raw = &file.lines[i].raw;
+            raw.contains("UnknownField")
+                || (raw.contains("unknown") && raw.contains("field"))
+        });
+        if !rejects {
+            hits.push((
+                idx,
+                "unknown-field",
+                format!(
+                    "`{name}` iterates object entries but never rejects \
+                     unknown fields — add an `other =>` arm returning \
+                     an unknown-field error"
+                ),
+            ));
+        }
+    }
+    hits
+}
+
+/// `(line idx, fn name)` for every non-test decoder candidate.
+fn decoder_fns(file: &SourceFile) -> Vec<(usize, String)> {
+    let mut fns = Vec::new();
+    for (idx, line) in file.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let Some(pos) = line.code.find("fn ") else { continue };
+        if pos > 0 {
+            let prev = line.code[..pos].chars().next_back();
+            if prev.is_some_and(|c| c.is_alphanumeric() || c == '_') {
+                continue;
+            }
+        }
+        let name: String = line.code[pos + 3..]
+            .chars()
+            .take_while(|c| c.is_alphanumeric() || *c == '_')
+            .collect();
+        if name.contains("from_json") || name.ends_with("_from") {
+            fns.push((idx, name));
+        }
+    }
+    fns
+}
+
+/// Line-index range of the function body starting at `fn_idx`.
+fn body_range(
+    file: &SourceFile,
+    fn_idx: usize,
+) -> std::ops::Range<usize> {
+    let base = file.lines[fn_idx].depth_before;
+    let mut end = fn_idx + 1;
+    for (idx, line) in file.lines.iter().enumerate().skip(fn_idx + 1) {
+        end = idx + 1;
+        if line.depth_after <= base && line.code.contains('}') {
+            break;
+        }
+    }
+    fn_idx..end
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hits(src: &str) -> Vec<RawHit> {
+        check(&SourceFile::parse("rust/src/coordinator/trace.rs", src))
+    }
+
+    const GOOD: &str = r#"
+fn thing_from(v: &Json) -> Result<Thing, String> {
+    let obj = v.as_obj().ok_or("object")?;
+    for (key, value) in obj {
+        match key.as_str() {
+            "a" => {}
+            other => return Err(format!("unknown thing field '{other}'")),
+        }
+    }
+    Ok(t)
+}
+"#;
+
+    #[test]
+    fn rejecting_decoder_is_clean() {
+        assert!(hits(GOOD).is_empty());
+    }
+
+    #[test]
+    fn silent_decoder_is_flagged() {
+        let bad = GOOD.replace(
+            "            other => return Err(format!(\"unknown thing \
+             field '{other}'\")),\n",
+            "",
+        );
+        assert_ne!(bad, GOOD, "replacement must take");
+        let h = hits(&bad);
+        assert_eq!(h.len(), 1, "{h:?}");
+        assert!(h[0].2.contains("thing_from"));
+    }
+
+    #[test]
+    fn scalar_decoders_without_entry_loops_are_exempt() {
+        assert!(hits(
+            "fn tech_from(v: &Json) -> Result<Tech, String> {\n    \
+             parse(v.as_str())\n}\n"
+        )
+        .is_empty());
+    }
+
+    #[test]
+    fn unknown_field_error_type_counts_as_rejection() {
+        let alt = GOOD.replace(
+            "return Err(format!(\"unknown thing field '{other}'\"))",
+            "return Err(ConfigError::UnknownField(other.to_string()))",
+        );
+        assert!(hits(&alt).is_empty());
+    }
+}

@@ -59,6 +59,10 @@
 //!   exist).
 //! * `config [--save FILE] [flags...]` — print (or save) the resolved
 //!   `StackConfig` as JSON.
+//! * `lint [--format json] [--fix-list]` — self-hosted static analysis
+//!   (DESIGN.md §12): schema-sync, panic-path, lock-discipline, and
+//!   unknown-field checkers over the repo sources; nonzero exit on any
+//!   finding (the CI hygiene gate).
 //! * `help [cmd]` — subcommand overview, or one subcommand's full flag
 //!   list. An *unknown* subcommand prints the overview and exits
 //!   nonzero (a typo in CI must fail the step, not pass silently).
@@ -89,6 +93,7 @@ fn main() -> Result<()> {
         "bench-diff" => cmd_bench_diff(rest),
         "check" => cmd_check(rest),
         "config" => cmd_config(rest),
+        "lint" => cmd_lint(rest),
         "help" | "--help" | "-h" => cmd_help(rest),
         other => {
             // A typo'd subcommand must FAIL the invocation (the old `_`
@@ -210,7 +215,33 @@ const SUBCOMMANDS: &[(&str, &str, &str)] = &[
         "config",
         "print or save the resolved StackConfig as JSON",
         "--save FILE        write instead of printing\n\
-         [stack flags...]   any stack flag, applied over the defaults",
+         [stack flags...]   any stack flag, applied over the defaults:\n\
+         --tech rram|sram           crossbar technology\n\
+         --model M                  bert-base|distilbert|vit-base|bert-tiny\n\
+         --seq-len SL               sequence length\n\
+         --k K                      top-k winners per softmax row\n\
+         --softmax KIND             conv|dtopk|topkima\n\
+         --alpha A                  measured early-stop fraction\n\
+         --scale S                  voltage/frequency scale preset\n\
+         --rows N --cols N          crossbar tile geometry\n\
+         --replica-rows N           kima replica rows per tile\n\
+         --rram-row-parallel N      rows activated per RRAM cycle\n\
+         --sram-row-parallel N      rows activated per SRAM cycle\n\
+         --noise ideal|default      noise preset (or --sigma-noise,\n\
+         --sigma-offset, --p-skip to set components individually)",
+    ),
+    (
+        "lint",
+        "self-hosted static analysis over the repo sources (CI gate)",
+        "--format json      machine-readable report (byte-stable, \
+         version-stamped)\n\
+         --fix-list         one `file:line: [checker] message` per \
+         finding\n\
+         \n\
+         checkers: schema-sync, panic-path, lock-discipline, \
+         unknown-field\n\
+         suppress: `// lint:allow(<checker>): <reason>` (reason \
+         mandatory) — see DESIGN.md §12",
     ),
     (
         "help",
@@ -1118,4 +1149,56 @@ fn cmd_config(args: &[String]) -> Result<()> {
         None => println!("{}", cfg.to_json_string()),
     }
     Ok(())
+}
+
+/// `lint`: self-hosted static analysis (DESIGN.md §12). Exit is
+/// nonzero exactly when findings survive suppression, so ci.sh can use
+/// it as a hard gate.
+fn cmd_lint(args: &[String]) -> Result<()> {
+    let mut format_json = false;
+    let mut fix_list = false;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--format" => match args.get(i + 1).map(String::as_str) {
+                Some("json") => {
+                    format_json = true;
+                    i += 2;
+                }
+                Some("text") => i += 2,
+                other => bail!(
+                    "--format takes `json` or `text`, got {other:?}"
+                ),
+            },
+            "--fix-list" => {
+                fix_list = true;
+                i += 1;
+            }
+            other => bail!("unknown lint flag '{other}'"),
+        }
+    }
+    let set = topkima::lint::SourceSet::from_repo(Path::new("."))?;
+    let report = topkima::lint::run(&set);
+    if format_json {
+        println!("{}", report.to_json_string());
+    } else if fix_list {
+        print!("{}", report.fix_list());
+    } else if report.is_clean() {
+        println!(
+            "lint: clean ({} suppressed) — checkers: {}",
+            report.suppressed,
+            topkima::lint::CHECKERS.join(", ")
+        );
+    } else {
+        print!("{}", report.fix_list());
+    }
+    if report.is_clean() {
+        Ok(())
+    } else {
+        bail!(
+            "lint: {} finding(s) ({} suppressed)",
+            report.findings.len(),
+            report.suppressed
+        );
+    }
 }

@@ -479,8 +479,11 @@ impl StackConfig {
                 format!("({}) must lie in (0, 1]", self.alpha),
             ));
         }
-        if self.rram_row_parallel == 0 || self.sram_row_parallel == 0 {
-            return Err(invalid("row_parallel", "factors must be ≥ 1"));
+        if self.rram_row_parallel == 0 {
+            return Err(invalid("rram_row_parallel", "must be ≥ 1"));
+        }
+        if self.sram_row_parallel == 0 {
+            return Err(invalid("sram_row_parallel", "must be ≥ 1"));
         }
         if let Some(sl) = self.seq_len {
             if sl == 0 {

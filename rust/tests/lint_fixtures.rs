@@ -1,0 +1,143 @@
+//! Lint fixture suite: one embedded known-bad snippet per checker (the
+//! lint must flag it) plus a clean fixture (the lint must stay silent)
+//! and the self-test that the repo's own sources are lint-clean — the
+//! same invariant ci.sh gates with `topkima lint --format json`.
+
+use std::path::Path;
+
+use topkima::lint::{run, SourceSet, CHECKERS};
+
+fn single(path: &str, text: &str) -> SourceSet {
+    let mut set = SourceSet::default();
+    set.insert(path, text);
+    set
+}
+
+/// A minimal wire.rs whose `kind()` names a frame the serializer,
+/// parser, and tests never saw.
+const WIRE_MISSING_PARSER_ARM: &str = r#"
+impl Frame {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Frame::Init { .. } => "init",
+            Frame::Ghost { .. } => "ghost",
+        }
+    }
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![kind("init")])
+    }
+    pub fn from_json(v: &Json) -> Result<Frame, WireError> {
+        match k {
+            "init" => {}
+        }
+    }
+}
+#[cfg(test)]
+mod tests {
+    fn t() { let f = Frame::Init {}; }
+}
+"#;
+
+#[test]
+fn schema_sync_catches_a_frame_kind_missing_its_parser_arm() {
+    let set = single(
+        "rust/src/coordinator/transport/wire.rs",
+        WIRE_MISSING_PARSER_ARM,
+    );
+    let report = run(&set);
+    assert!(!report.is_clean());
+    // no serializer, no parser arm, no test coverage — all for "ghost"
+    assert_eq!(report.findings.len(), 3, "{:?}", report.findings);
+    assert!(report
+        .findings
+        .iter()
+        .all(|f| f.checker == "schema-sync" && f.message.contains("ghost")));
+}
+
+#[test]
+fn panic_path_catches_a_naked_unwrap_on_the_serving_path() {
+    let set = single(
+        "rust/src/coordinator/shard.rs",
+        "fn submit(&mut self) {\n    let w = self.writer.unwrap();\n}\n",
+    );
+    let report = run(&set);
+    assert_eq!(report.findings.len(), 1, "{:?}", report.findings);
+    assert_eq!(report.findings[0].checker, "panic-path");
+    assert_eq!(report.findings[0].line, 2);
+}
+
+#[test]
+fn lock_discipline_catches_a_guard_held_across_a_send() {
+    let set = single(
+        "rust/src/coordinator/shard.rs",
+        "fn donate(&self) {\n    let mut q = self.queue.lock()\
+         .unwrap_or_else(|e| e.into_inner());\n    q.push_back(b);\n    \
+         self.peer.send(Msg::Poke);\n}\n",
+    );
+    let report = run(&set);
+    assert_eq!(report.findings.len(), 1, "{:?}", report.findings);
+    assert_eq!(report.findings[0].checker, "lock-discipline");
+    assert!(report.findings[0].message.contains("`q`"));
+}
+
+#[test]
+fn unknown_field_catches_a_decoder_that_ignores_unknown_keys() {
+    let set = single(
+        "rust/src/coordinator/trace.rs",
+        "fn header_from_json(v: &Json) -> Result<Header, String> {\n    \
+         let obj = v.as_obj().ok_or(\"object\")?;\n    \
+         for (key, value) in obj {\n        match key.as_str() {\n            \
+         \"format\" => {}\n            _ => {}\n        }\n    }\n    \
+         Ok(h)\n}\n",
+    );
+    let report = run(&set);
+    assert_eq!(report.findings.len(), 1, "{:?}", report.findings);
+    assert_eq!(report.findings[0].checker, "unknown-field");
+    assert!(report.findings[0].message.contains("header_from_json"));
+}
+
+#[test]
+fn clean_fixture_produces_no_findings() {
+    let set = single(
+        "rust/src/coordinator/shard.rs",
+        "fn submit(&mut self) -> Result<(), RouteError> {\n    \
+         let Some(w) = self.writer.as_mut() else {\n        \
+         return Err(RouteError::ShardDown(key));\n    };\n    \
+         w.send(frame)\n}\n",
+    );
+    let report = run(&set);
+    assert!(report.is_clean(), "{:?}", report.findings);
+    assert_eq!(report.suppressed, 0);
+}
+
+#[test]
+fn reasoned_suppression_counts_without_failing() {
+    let set = single(
+        "rust/src/coordinator/shard.rs",
+        "fn f(&self) {\n    // lint:allow(panic-path): sized to the \
+         shard count at construction\n    self.backlog[i].store(1);\n}\n",
+    );
+    let report = run(&set);
+    assert!(report.is_clean(), "{:?}", report.findings);
+    assert_eq!(report.suppressed, 1);
+}
+
+#[test]
+fn repo_sources_are_lint_clean_and_json_is_byte_stable() {
+    let set = SourceSet::from_repo(Path::new("."))
+        .expect("repo sources readable");
+    let report = run(&set);
+    assert!(
+        report.is_clean(),
+        "repo must lint clean (ci.sh gates on this):\n{}",
+        report.fix_list()
+    );
+    // byte-stable machine output: same sources, same bytes
+    let again = run(&set);
+    assert_eq!(report.to_json_string(), again.to_json_string());
+    let json = report.to_json_string();
+    for checker in CHECKERS {
+        assert!(json.contains(checker), "checker list names {checker}");
+    }
+    assert!(json.contains("\"version\""));
+}
