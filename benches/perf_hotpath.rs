@@ -1,13 +1,21 @@
 //! §Perf: wall-clock benches of the rust hot paths, emitted both as a
 //! table and as machine-readable `BENCH_hotpath.json`.
 //!
-//! 1. crossbar MAC (`Crossbar::mac_into`) — the inner loop of every
-//!    simulated conversion;
+//! 1. crossbar MAC (`Crossbar::mac_into`) and the batched, cache-tiled
+//!    `mac_rows_into` — the inner loop of every simulated conversion;
 //! 2. topkima conversion — the allocating wrapper (`convert_topk`) vs
-//!    the scratch-reusing path (`convert_topk_into`), plus the full
-//!    conversion baseline;
-//! 3. batcher push/pop — the coordinator's request path;
-//! 4. the end-to-end macro row (MAC + conversion + softmax).
+//!    the scratch-reusing path (`convert_topk_into`), the full
+//!    conversion baseline, and the batched `convert_topk_rows_into`;
+//! 3. the arbiter's grant selection (`arbitrate_into`) and the sparse
+//!    softmax (`compute_sparse_into`) — the SIMD compare/threshold
+//!    kernels;
+//! 4. batcher push/pop — the coordinator's request path;
+//! 5. the end-to-end macro row (MAC + conversion + softmax).
+//!
+//! The JSON records the SIMD dispatch decision (`avx2` / `scalar` /
+//! `forced-off`, see `util::simd`) so `bench-diff` never silently
+//! compares numbers across ISAs. `--out FILE` redirects the JSON (CI
+//! runs the bench twice, default and `TOPKIMA_SIMD=off`).
 //!
 //! Before/after numbers for the optimization pass are recorded in
 //! EXPERIMENTS.md §Perf; CI archives the JSON so regressions are
@@ -17,16 +25,38 @@ use std::time::{Duration, Instant};
 
 use topkima::coordinator::{Batcher, BatcherConfig, InputData, Request};
 use topkima::crossbar::{Crossbar, Tech};
-use topkima::ima::{ConversionScratch, TopkimaConverter};
-use topkima::util::bench::{bench_fn, black_box, header, write_json, BenchResult};
+use topkima::ima::{
+    arbitrate_into, BatchConversionScratch, ConversionScratch, Grant,
+    TopkimaConverter, NEVER,
+};
+use topkima::softmax::DigitalSoftmax;
+use topkima::util::bench::{
+    bench_fn, black_box, header, write_json_with, BenchResult,
+};
+use topkima::util::json::Json;
 use topkima::util::rng::Rng;
+use topkima::util::simd;
 
 fn main() {
+    // cargo bench --bench perf_hotpath -- --out FILE
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut out_path = "BENCH_hotpath.json".to_string();
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--out" && i + 1 < args.len() {
+            out_path = args[i + 1].clone();
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+
     let mut results: Vec<BenchResult> = Vec::new();
     let mut record = |r: BenchResult| {
         println!("{}", r.row());
         results.push(r);
     };
+    println!("simd dispatch: {}", simd::dispatch_key());
 
     header("perf: crossbar MAC (depth 64, 256 cols)");
     let mut rng = Rng::new(1);
@@ -39,6 +69,14 @@ fn main() {
     record(bench_fn("mac_into 64x256", || {
         xbar.mac_into(black_box(&q), &mut out);
         black_box(&out);
+    }));
+    let q_batch: Vec<Vec<i32>> = (0..8)
+        .map(|_| (0..64).map(|_| rng.range(-15, 16) as i32).collect())
+        .collect();
+    let mut rows_out: Vec<i64> = Vec::new();
+    record(bench_fn("mac_rows_into 8x64x256 (tiled)", || {
+        xbar.mac_rows_into(black_box(&q_batch), &mut rows_out);
+        black_box(&rows_out);
     }));
 
     header("perf: topkima conversion (256 cols, k=5)");
@@ -60,6 +98,45 @@ fn main() {
     }));
     record(bench_fn("convert_full 256 cols", || {
         black_box(conv.convert_full(black_box(&macs), &mut crng));
+    }));
+    let macs_batch: Vec<i64> = (0..8 * 256)
+        .map(|_| rng.range(-3500, 3500))
+        .collect();
+    let mut batch_scratch = BatchConversionScratch::new();
+    record(bench_fn("convert_topk_rows_into 8x256 (batched)", || {
+        conv.convert_topk_rows_into(
+            black_box(&macs_batch),
+            8,
+            5,
+            &mut crng,
+            &mut batch_scratch,
+        );
+        black_box(&batch_scratch.ranges);
+    }));
+
+    header("perf: arbiter grant selection (256 cols, k=5)");
+    let steps = 32u32;
+    let crossings: Vec<u32> = (0..256)
+        .map(|c| if c % 7 == 0 { NEVER } else { (c as u32 * 13) % steps })
+        .collect();
+    let mut grants: Vec<Grant> = Vec::new();
+    record(bench_fn("arbitrate_into 256 cols k=5", || {
+        black_box(arbitrate_into(
+            black_box(&crossings),
+            5,
+            steps,
+            &mut grants,
+        ));
+    }));
+
+    header("perf: sparse softmax (k=16 of d=256)");
+    let softmax = DigitalSoftmax::default();
+    let selection: Vec<(usize, f64)> =
+        (0..16).map(|i| (i * 16, (i as f64) * 0.17 - 1.0)).collect();
+    let mut dense: Vec<f64> = Vec::new();
+    record(bench_fn("compute_sparse_into k=16 d=256", || {
+        softmax.compute_sparse_into(black_box(&selection), 256, &mut dense);
+        black_box(&dense);
     }));
 
     header("perf: batcher push+pop (bucket 16)");
@@ -92,7 +169,16 @@ fn main() {
         black_box(topkima.run(black_box(&qs), &mut mrng));
     }));
 
-    write_json("BENCH_hotpath.json", "perf_hotpath", &results)
-        .expect("write BENCH_hotpath.json");
-    println!("\nwrote BENCH_hotpath.json ({} cases)", results.len());
+    write_json_with(
+        &out_path,
+        "perf_hotpath",
+        &[("dispatch", Json::Str(simd::dispatch_key().to_string()))],
+        &results,
+    )
+    .expect("write hotpath bench JSON");
+    println!(
+        "\nwrote {out_path} ({} cases, dispatch {})",
+        results.len(),
+        simd::dispatch_key()
+    );
 }

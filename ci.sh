@@ -14,24 +14,36 @@
 #   5. smoke: `topkima sweep-hw` on a tiny grid (JSON baseline emitted)
 #   6. smoke: `topkima serve-fleet` (sharded fleet under synthetic load;
 #      BENCH_fleet.json emitted, fails on any dropped request)
+#   3c. SIMD parity gate (HARD): rerun the parity suites
+#      (scratch_parity, sweep_determinism, simd_parity, macro_parity)
+#      with TOPKIMA_SIMD=off — the default-mode run is covered by
+#      tier-1, so together both dispatch decisions are proven
+#      bit-identical
 #   7. smoke: export a tiny eval trace and replay it through BOTH
 #      fleet↔shard transports in deterministic mode — twice over the
 #      local transport (stealing on), once over the process transport
 #      (shard-worker subprocesses + wire protocol) — and `cmp` all
 #      three BENCH files: replay must be deterministic AND
 #      transport-invariant (the ShardTransport redesign is
-#      behavior-preserving)
-#   8. perf baseline: `cargo bench --bench perf_hotpath` writes
-#      BENCH_hotpath.json (machine-readable numbers for EXPERIMENTS.md
-#      §Perf)
+#      behavior-preserving). The same trace is then replayed with
+#      `--behavioral` (real circuit-macro batches) under BOTH SIMD
+#      modes and cmp'ed against the synthetic replay: deterministic
+#      metrics are schedule-determined, so the behavioral executor and
+#      the SIMD dispatch decision must not move them
+#   8. perf baseline: `cargo bench --bench perf_hotpath` runs twice —
+#      default dispatch → BENCH_hotpath.json, TOPKIMA_SIMD=off →
+#      BENCH_hotpath_scalar.json — each stamped with its dispatch
+#      decision (machine-readable numbers for EXPERIMENTS.md §Perf)
 #   9. bench-diff: compare the fresh BENCH_hotpath.json,
 #      BENCH_sweep_smoke.json, and BENCH_fleet_replay.json (the
 #      deterministic replay — reproducible batching metrics, not
 #      wall-clock tails) against baselines/ and FAIL on >25%
 #      regressions (missing baselines are seeded from this run —
-#      commit them to arm the gate)
+#      commit them to arm the gate). A metric present in the baseline
+#      but missing from the fresh run is a hard failure
 #  10. refresh the EXPERIMENTS.md §Perf table between the
-#      PERF_TABLE_BEGIN/END markers from the fresh numbers
+#      PERF_TABLE_BEGIN/END markers, and the scalar-vs-SIMD table
+#      between the SIMD_TABLE_BEGIN/END markers, from the fresh numbers
 #
 # Exit code reflects the tier-1 gate + the lint gate + smoke steps;
 # fmt/clippy failures only fail the run when CI_STRICT=1 (they may be
@@ -87,6 +99,19 @@ if ! cargo test -q; then
     echo "FAIL: cargo test -q"
     exit 1
 fi
+
+note "simd parity gate: parity suites under TOPKIMA_SIMD=off (hard)"
+# Tier-1 above ran every test under the default dispatch decision
+# (AVX2 where detected). Rerunning the parity suites with the SIMD
+# layer forced off proves both code paths produce bit-identical
+# results — the acceptance harness of the vectorization pass.
+if ! TOPKIMA_SIMD=off cargo test -q \
+        --test scratch_parity --test sweep_determinism \
+        --test simd_parity --test macro_parity; then
+    echo "FAIL: parity suites diverge under TOPKIMA_SIMD=off"
+    exit 1
+fi
+echo "ok: parity suites bit-identical with SIMD forced off"
 
 note "lint gate: topkima lint (hard — any finding fails the run)"
 # The self-hosted analyzer (DESIGN.md §12). Machine-readable report is
@@ -172,6 +197,29 @@ else
     status=1
 fi
 
+# Behavioral executors do real circuit-macro work per batch (batched
+# MAC + batched top-k conversion — the §Perf hot paths) instead of a
+# modeled sleep. Deterministic-replay metrics are schedule-determined,
+# so the behavioral BENCH must match the synthetic one byte-for-byte —
+# and must do so under BOTH SIMD dispatch decisions, which is the
+# fleet-level leg of the scalar-vs-SIMD parity contract.
+if cargo run --release --quiet -- serve-fleet \
+        --trace "$trace" --steal on --deterministic --behavioral \
+        --out /tmp/topkima_ci_fleet_replay_behav.json \
+    && cmp -s BENCH_fleet_replay.json \
+              /tmp/topkima_ci_fleet_replay_behav.json \
+    && TOPKIMA_SIMD=off cargo run --release --quiet -- serve-fleet \
+        --trace "$trace" --steal on --deterministic --behavioral \
+        --out /tmp/topkima_ci_fleet_replay_behav_scalar.json \
+    && cmp -s BENCH_fleet_replay.json \
+              /tmp/topkima_ci_fleet_replay_behav_scalar.json; then
+    echo "ok: behavioral replay matches synthetic under both SIMD modes"
+else
+    echo "FAIL: behavioral replay diverges (executor or SIMD mode moved" \
+         "schedule-determined metrics)"
+    status=1
+fi
+
 note "smoke: unknown subcommand fails loudly"
 # a typo'd subcommand must exit nonzero (it used to print usage and
 # exit 0, letting broken CI steps pass silently)
@@ -186,11 +234,23 @@ else
     status=1
 fi
 
-note "perf baseline: cargo bench --bench perf_hotpath"
-if cargo bench --bench perf_hotpath && [ -s BENCH_hotpath.json ]; then
+note "perf baseline: cargo bench --bench perf_hotpath (both SIMD modes)"
+# Two runs, each JSON stamped with its dispatch decision (avx2 /
+# scalar / forced-off) so bench-diff warns instead of silently
+# comparing numbers across ISAs.
+if cargo bench --bench perf_hotpath -- --out BENCH_hotpath.json \
+    && [ -s BENCH_hotpath.json ]; then
     echo "ok: BENCH_hotpath.json written"
 else
     echo "FAIL: perf_hotpath bench"
+    status=1
+fi
+if TOPKIMA_SIMD=off cargo bench --bench perf_hotpath -- \
+        --out BENCH_hotpath_scalar.json \
+    && [ -s BENCH_hotpath_scalar.json ]; then
+    echo "ok: BENCH_hotpath_scalar.json written (TOPKIMA_SIMD=off)"
+else
+    echo "FAIL: perf_hotpath bench (TOPKIMA_SIMD=off)"
     status=1
 fi
 
@@ -260,6 +320,38 @@ if [ -s BENCH_hotpath.json ] \
     fi
 else
     echo "WARN: no BENCH_hotpath.json or no markers; table left as-is"
+fi
+
+# -- EXPERIMENTS.md scalar-vs-SIMD table: speedup of the dispatched ----
+# -- build over the forced-scalar build, same binary, same machine  ----
+note "EXPERIMENTS.md §Perf scalar-vs-SIMD table refresh"
+if [ -s BENCH_hotpath.json ] && [ -s BENCH_hotpath_scalar.json ] \
+        && grep -q SIMD_TABLE_BEGIN EXPERIMENTS.md \
+        && grep -q SIMD_TABLE_END EXPERIMENTS.md; then
+    # baseline = scalar, fresh = dispatched: negative deltas are the
+    # SIMD speedup. bench-diff prints the expected cross-dispatch WARN.
+    if cargo run --release --quiet -- bench-diff \
+            --baseline BENCH_hotpath_scalar.json \
+            --fresh BENCH_hotpath.json --markdown \
+            > /tmp/topkima_simd_table.md; then
+        awk '
+            /SIMD_TABLE_BEGIN/ {
+                print
+                while ((getline line < "/tmp/topkima_simd_table.md") > 0)
+                    print line
+                skip = 1
+                next
+            }
+            /SIMD_TABLE_END/ { skip = 0 }
+            skip == 0 { print }
+        ' EXPERIMENTS.md > EXPERIMENTS.md.tmp \
+            && mv EXPERIMENTS.md.tmp EXPERIMENTS.md
+        echo "ok: EXPERIMENTS.md scalar-vs-SIMD table refreshed"
+    else
+        echo "WARN: bench-diff --markdown failed; SIMD table left as-is"
+    fi
+else
+    echo "WARN: missing BENCH files or markers; SIMD table left as-is"
 fi
 
 if [ "$status" = "0" ]; then

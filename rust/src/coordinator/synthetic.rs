@@ -8,12 +8,24 @@
 //! a blocking device, and returns a deterministic checksum per sample.
 //! Used by `topkima serve-fleet`'s load generator and the CI fleet
 //! tests.
+//!
+//! [`BehavioralExecutor`] is the opt-in (`serve-fleet --behavioral`)
+//! variant that replaces the modeled sleep with *real* circuit-macro
+//! work: every batch runs through the programmed crossbar's batched MAC
+//! ([`Crossbar::mac_rows_into`]) and the converter's batched top-k
+//! conversion, so fleet load exercises the §Perf hot paths end to end
+//! while staying deterministic (ideal converter — no RNG draws — and
+//! per-sample outputs independent of batch composition).
 
 use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::Result;
+
+use crate::crossbar::{Crossbar, Tech};
+use crate::softmax::macros::{run_macro, MacroParts, TopkimaSelect};
+use crate::util::rng::Rng;
 
 use super::request::InputData;
 use super::router::StreamKey;
@@ -83,6 +95,154 @@ impl Executor for SyntheticExecutor {
     }
 }
 
+/// Crossbar depth (rows of K^T) of the behavioral streams — one PWM
+/// code per input feature.
+const BEHAVIORAL_DEPTH: usize = 64;
+/// Score columns per behavioral stream tile.
+const BEHAVIORAL_COLS: usize = 64;
+
+/// One stream's circuit substrate inside a [`BehavioralExecutor`]: a
+/// deterministically programmed K^T tile plus the stream's top-k.
+#[derive(Clone, Debug)]
+pub struct BehavioralMacro {
+    parts: MacroParts,
+    k: usize,
+}
+
+impl BehavioralMacro {
+    /// Program the stream's tile from a fixed pseudo-pattern seeded by
+    /// the stream key, so every shard (and every run) builds the same
+    /// substrate.
+    fn new(key: &StreamKey, k: usize) -> BehavioralMacro {
+        let salt = key
+            .0
+            .bytes()
+            .fold(key.1 as u64, |h, b| h.wrapping_mul(31).wrapping_add(b as u64));
+        let kt: Vec<Vec<i32>> = (0..BEHAVIORAL_DEPTH)
+            .map(|r| {
+                (0..BEHAVIORAL_COLS)
+                    .map(|c| {
+                        let x = salt
+                            .wrapping_add(r as u64 * 13)
+                            .wrapping_add(c as u64 * 7);
+                        ((x % 15) as i32) - 7
+                    })
+                    .collect()
+            })
+            .collect();
+        let parts = MacroParts::new(Crossbar::program(
+            Tech::Sram,
+            256,
+            256,
+            BEHAVIORAL_DEPTH,
+            &kt,
+        ));
+        BehavioralMacro { parts, k: k.min(BEHAVIORAL_COLS) }
+    }
+
+    /// Embed one request sample into a Q row of PWM codes (±15, the
+    /// 5-bit input range) — deterministic in the sample alone.
+    fn embed(&self, input: &InputData) -> Vec<i32> {
+        let d = self.parts.crossbar.depth();
+        let code = |i: usize, v: i64| -> i32 {
+            ((v.wrapping_add(i as i64 * 7)).rem_euclid(31) - 15) as i32
+        };
+        match input {
+            InputData::I32(v) if v.is_empty() => vec![0; d],
+            InputData::F32(v) if v.is_empty() => vec![0; d],
+            InputData::I32(v) => (0..d)
+                .map(|i| {
+                    let s = v.get(i % v.len()).copied().unwrap_or(0);
+                    code(i, s as i64)
+                })
+                .collect(),
+            InputData::F32(v) => (0..d)
+                .map(|i| {
+                    let s = v.get(i % v.len()).copied().unwrap_or(0.0);
+                    code(i, (s * 16.0) as i64)
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Device stand-in that does real circuit-macro work per batch instead
+/// of sleeping a modeled service time (`serve-fleet --behavioral`).
+///
+/// Batches are padded to the bucket with zero rows (padding costs real
+/// MAC/conversion work, like a device), and each sample's output is a
+/// checksum of its attention-probability row plus the stream's k — so
+/// replayed traces can be compared across SIMD modes byte for byte.
+#[derive(Clone, Debug)]
+pub struct BehavioralExecutor {
+    streams: HashMap<StreamKey, BehavioralMacro>,
+}
+
+impl BehavioralExecutor {
+    pub fn new() -> BehavioralExecutor {
+        BehavioralExecutor { streams: HashMap::new() }
+    }
+
+    /// Register a stream's substrate (programmed deterministically from
+    /// the key).
+    pub fn with_stream(mut self, key: StreamKey, k: usize) -> BehavioralExecutor {
+        let m = BehavioralMacro::new(&key, k);
+        self.streams.insert(key, m);
+        self
+    }
+}
+
+impl Default for BehavioralExecutor {
+    fn default() -> BehavioralExecutor {
+        BehavioralExecutor::new()
+    }
+}
+
+impl Executor for BehavioralExecutor {
+    fn execute(
+        &mut self,
+        stream: &StreamKey,
+        inputs: &[Arc<InputData>],
+        bucket: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        let m = self
+            .streams
+            .get(stream)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "behavioral executor has no stream {}/k={}",
+                    stream.0,
+                    stream.1
+                )
+            })?;
+        let d = m.parts.crossbar.depth();
+        let rows = bucket.max(inputs.len());
+        let mut q_rows: Vec<Vec<i32>> = Vec::with_capacity(rows);
+        q_rows.extend(inputs.iter().map(|input| m.embed(input)));
+        q_rows.resize(rows, vec![0; d]);
+        // Ideal converter → the RNG is never drawn from; a fresh one per
+        // batch keeps that explicit.
+        let (probs, _cost) = run_macro(
+            &m.parts,
+            &TopkimaSelect { k: m.k },
+            &q_rows,
+            &mut Rng::new(0),
+        );
+        Ok(probs
+            .iter()
+            .take(inputs.len())
+            .map(|row| {
+                let sum: f64 = row
+                    .iter()
+                    .enumerate()
+                    .map(|(c, &p)| (c + 1) as f64 * p)
+                    .sum();
+                vec![sum as f32, stream.1 as f32]
+            })
+            .collect())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -104,5 +264,31 @@ mod tests {
         assert_eq!(out, vec![vec![6.0, 5.0], vec![0.75, 5.0]]);
         let again = e.execute(&key, &inputs, 4).unwrap();
         assert_eq!(out, again);
+    }
+
+    #[test]
+    fn behavioral_outputs_are_deterministic_and_batch_independent() {
+        let key: StreamKey = (Arc::from("bert"), 5);
+        let mut e = BehavioralExecutor::new().with_stream(key.clone(), 5);
+        let a = Arc::new(InputData::I32(vec![3, -2, 9]));
+        let b = Arc::new(InputData::F32(vec![0.25, -1.5]));
+        let batch =
+            e.execute(&key, &[a.clone(), b.clone()], 4).unwrap();
+        assert_eq!(batch.len(), 2);
+        for row in &batch {
+            assert_eq!(row[1], 5.0);
+            assert!(row[0].is_finite());
+        }
+        // re-running the same batch is byte-identical
+        assert_eq!(batch, e.execute(&key, &[a.clone(), b.clone()], 4).unwrap());
+        // per-sample outputs do not depend on batch composition or
+        // padding bucket (ideal converter, row-independent macro)
+        let solo_a = e.execute(&key, &[a.clone()], 1).unwrap();
+        let solo_b = e.execute(&key, &[b.clone()], 8).unwrap();
+        assert_eq!(batch[0], solo_a[0]);
+        assert_eq!(batch[1], solo_b[0]);
+        // unknown stream is a loud error, not a panic
+        let other: StreamKey = (Arc::from("vit"), 3);
+        assert!(e.execute(&other, &[a], 1).is_err());
     }
 }

@@ -12,6 +12,13 @@ pub mod mapping;
 
 use crate::circuits::sram_cell::CellColumn;
 use crate::circuits::Timing;
+use crate::util::simd;
+
+/// Target size of one column tile of weight codes in `mac_rows_into` —
+/// small enough to stay L1-resident while every query row of a batch
+/// streams over it (i32 codes: 16 KiB ≈ half a typical 32 KiB L1d,
+/// leaving room for the input row and outputs).
+const L1_TILE_BYTES: usize = 16 * 1024;
 
 /// Technology of an IMC array (Sec. III-A: RRAM for static projection
 /// weights, SRAM for the per-input K^T / V).
@@ -137,11 +144,48 @@ impl Crossbar {
         let d = self.depth;
         for (c, o) in out.iter_mut().enumerate() {
             let col = &self.codes_flat[c * d..(c + 1) * d];
-            let mut acc: i32 = 0;
-            for (&w, &x) in col.iter().zip(input_codes) {
-                acc += w * x;
+            // SIMD i32 lanes, widened to the i64 output here. Wrapping
+            // lane sums are exact under the |w·x| ≤ 105 / bounded-depth
+            // contract asserted above.
+            *o = simd::dot_i32(col, input_codes) as i64;
+        }
+    }
+
+    /// Batched MAC of several input rows against every used column,
+    /// into a row-major flat buffer (`out[r·cols + c]`), resized by the
+    /// callee. Bit-identical to calling [`Self::mac_into`] per row.
+    ///
+    /// Cache-blocked (§Perf): columns are processed in tiles of
+    /// ~[`L1_TILE_BYTES`] of weight codes, and each tile is reused
+    /// across *all* rows of the batch before moving on — the weight
+    /// tile stays L1-hot instead of being re-streamed from L2/DRAM for
+    /// every row. The per-row single-tile order equals the per-column
+    /// order of `mac_into`, and each dot product is computed by the
+    /// same kernel, so tiling cannot change a single bit.
+    pub fn mac_rows_into(&self, q_rows: &[Vec<i32>], out: &mut Vec<i64>) {
+        let d = self.depth;
+        let cols = self.columns.len();
+        for q in q_rows {
+            assert_eq!(q.len(), d);
+        }
+        out.clear();
+        out.resize(q_rows.len() * cols, 0);
+        let tile_cols = if d == 0 {
+            cols.max(1)
+        } else {
+            (L1_TILE_BYTES / (4 * d)).clamp(8, 256).min(cols.max(1))
+        };
+        let mut tile_start = 0usize;
+        while tile_start < cols {
+            let tile_end = (tile_start + tile_cols).min(cols);
+            for (r, q) in q_rows.iter().enumerate() {
+                let row = &mut out[r * cols + tile_start..r * cols + tile_end];
+                for (c, o) in (tile_start..tile_end).zip(row.iter_mut()) {
+                    let col = &self.codes_flat[c * d..(c + 1) * d];
+                    *o = simd::dot_i32(col, q) as i64;
+                }
             }
-            *o = acc as i64;
+            tile_start = tile_end;
         }
     }
 
@@ -237,6 +281,31 @@ mod tests {
         let mut buf = vec![0i64; 3];
         xb.mac_into(&x, &mut buf);
         assert_eq!(buf, xb.mac_all(&x));
+    }
+
+    #[test]
+    fn mac_rows_into_matches_per_row_mac() {
+        // the cache-blocked batched path is bit-identical to row-at-a-
+        // time mac_into, tails and all (40 cols is not a tile multiple)
+        let kt = tile(16, 40);
+        let xb = Crossbar::program(Tech::Sram, 256, 256, 64, &kt);
+        let rows: Vec<Vec<i32>> = (0..6)
+            .map(|r| {
+                (0..16).map(|i| ((r * 5 + i * 3) % 31) as i32 - 15).collect()
+            })
+            .collect();
+        let mut flat = Vec::new();
+        xb.mac_rows_into(&rows, &mut flat);
+        assert_eq!(flat.len(), 6 * 40);
+        for (r, q) in rows.iter().enumerate() {
+            assert_eq!(
+                &flat[r * 40..(r + 1) * 40],
+                xb.mac_all(q).as_slice(),
+                "row {r}"
+            );
+        }
+        xb.mac_rows_into(&[], &mut flat);
+        assert!(flat.is_empty());
     }
 
     #[test]

@@ -10,6 +10,17 @@
 //! and the count would exceed k, preference goes to **smaller column
 //! addresses** and the output set is trimmed to exactly k.
 
+use crate::util::simd;
+
+/// Sentinel crossing cycle for "this column never fires within the
+/// ramp" in the packed `&[u32]` crossing buffers (re-exported from
+/// [`util::simd`]): `u32::MAX`, unreachable by any real ramp (≤ 2^31
+/// steps). The packed form is what lets the converter and the arbiter
+/// prefilter run on full SIMD lanes instead of `Option<u32>` tags.
+///
+/// [`util::simd`]: crate::util::simd
+pub use crate::util::simd::NEVER;
+
 /// One granted event: which column crossed at which ramp cycle.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Grant {
@@ -46,7 +57,8 @@ impl ArbiterStats {
     }
 }
 
-/// Arbitrate per-column crossing cycles down to the top-k grants.
+/// Arbitrate per-column crossing cycles down to the top-k grants
+/// (compat wrapper over the packed [`arbitrate_into`]).
 ///
 /// `crossings[c]` is the ramp cycle at which column c's SA fires
 /// (`None` = never). `ramp_steps` bounds the conversion when fewer than
@@ -54,8 +66,10 @@ impl ArbiterStats {
 pub fn arbitrate(crossings: &[Option<u32>], k: usize, ramp_steps: u32)
     -> ArbiterOutcome
 {
+    let packed: Vec<u32> =
+        crossings.iter().map(|t| t.unwrap_or(NEVER)).collect();
     let mut grants = Vec::new();
-    let stats = arbitrate_into(crossings, k, ramp_steps, &mut grants);
+    let stats = arbitrate_into(&packed, k, ramp_steps, &mut grants);
     ArbiterOutcome {
         grants,
         stop_cycle: stats.stop_cycle,
@@ -63,17 +77,26 @@ pub fn arbitrate(crossings: &[Option<u32>], k: usize, ramp_steps: u32)
     }
 }
 
-/// Allocation-free arbitration: grants are written into `grants`
-/// (cleared first), in grant order (cycle, then address — the tie rule).
+/// Allocation-free arbitration over packed crossing cycles
+/// (`crossings[c]` = firing cycle of column c, [`NEVER`] = never):
+/// grants are written into `grants` (cleared first), in grant order
+/// (cycle, then address — the tie rule).
 ///
-/// Small k (the topkima case) uses a bounded selection — a sorted buffer
-/// of at most k grants, O(d·k) worst case with k tiny — instead of
-/// sorting all d events. Large k (the full-conversion case) falls back
-/// to an in-place unstable sort of the event buffer; (cycle, column)
-/// keys are distinct per column, so the order is still deterministic.
-/// Both paths produce bit-identical grant sequences.
+/// Small k (the topkima case) uses a bounded selection — a sorted
+/// buffer of at most k grants — with a SIMD prefilter: whole 8-column
+/// chunks are compared against the current k-th-worst crossing
+/// ([`simd::mask_le_u32`]) and chunks with no candidate are skipped
+/// without touching the insert path. The threshold is intentionally
+/// *stale within a chunk* (inserts can only shrink it), so the mask is
+/// a superset of the true candidates; every masked column still goes
+/// through the exact scalar insert, which re-checks — bit-identical
+/// grants, most columns rejected 8 at a time. Large k (the
+/// full-conversion case) falls back to an in-place unstable sort of
+/// the event buffer; (cycle, column) keys are distinct per column, so
+/// the order is still deterministic. Both paths produce bit-identical
+/// grant sequences.
 pub fn arbitrate_into(
-    crossings: &[Option<u32>],
+    crossings: &[u32],
     k: usize,
     ramp_steps: u32,
     grants: &mut Vec<Grant>,
@@ -85,33 +108,47 @@ pub fn arbitrate_into(
             arb_events: 0,
         };
     }
-    let fired = || {
-        crossings
-            .iter()
-            .enumerate()
-            .filter_map(|(c, t)| t.map(|cycle| Grant { column: c, cycle }))
-    };
     if k.saturating_mul(8) >= crossings.len() {
         // Large k: collect + sort beats repeated bounded inserts.
-        grants.extend(fired());
+        grants.extend(crossings.iter().enumerate().filter_map(|(c, &t)| {
+            (t != NEVER).then_some(Grant { column: c, cycle: t })
+        }));
         grants.sort_unstable_by_key(|g| (g.cycle, g.column));
         grants.truncate(k);
     } else {
-        // Bounded k-selection: keep the k smallest (cycle, column) pairs
-        // in sorted order. Columns arrive address-ascending, so an event
-        // tying the current worst grant never displaces it.
-        for g in fired() {
-            let key = (g.cycle, g.column);
-            if grants.len() == k {
-                let worst = grants[k - 1];
-                if key >= (worst.cycle, worst.column) {
-                    continue;
+        // Bounded k-selection with the SIMD chunk prefilter. While the
+        // grant buffer is still warming (len < k) every fired column is
+        // a candidate: threshold NEVER-1 admits exactly cycle != NEVER.
+        // Once full, only cycles <= the current worst can displace it
+        // (a tie on (cycle) still loses on column order — the exact
+        // insert below settles that).
+        let mut chunks = crossings.chunks_exact(8);
+        let mut base = 0usize;
+        for chunk in &mut chunks {
+            let thr = match grants.last() {
+                Some(worst) if grants.len() == k => worst.cycle,
+                _ => NEVER - 1,
+            };
+            let lanes: &[u32; 8] =
+                chunk.try_into().expect("chunks_exact(8) yields 8 lanes");
+            let mut mask = simd::mask_le_u32(lanes, thr);
+            while mask != 0 {
+                let bit = mask.trailing_zeros() as usize;
+                mask &= mask - 1;
+                if let Some(&cycle) = chunk.get(bit) {
+                    insert_bounded(
+                        grants,
+                        k,
+                        Grant { column: base + bit, cycle },
+                    );
                 }
-                grants.pop();
             }
-            let pos = grants
-                .partition_point(|h| (h.cycle, h.column) < key);
-            grants.insert(pos, g);
+            base += 8;
+        }
+        for (off, &cycle) in chunks.remainder().iter().enumerate() {
+            if cycle != NEVER {
+                insert_bounded(grants, k, Grant { column: base + off, cycle });
+            }
         }
     }
     let stop_cycle = grants
@@ -120,6 +157,25 @@ pub fn arbitrate_into(
         .filter(|_| grants.len() == k)
         .unwrap_or(ramp_steps.saturating_sub(1));
     ArbiterStats { stop_cycle, arb_events: grants.len() }
+}
+
+/// Exact bounded insert: keep the k smallest (cycle, column) pairs in
+/// sorted order. Columns arrive address-ascending, so an event tying
+/// the current worst grant never displaces it.
+fn insert_bounded(grants: &mut Vec<Grant>, k: usize, g: Grant) {
+    let key = (g.cycle, g.column);
+    if grants.len() == k {
+        let worst = match grants.last() {
+            Some(&w) => w,
+            None => return, // k == 0 is handled before any insert
+        };
+        if key >= (worst.cycle, worst.column) {
+            return;
+        }
+        grants.pop();
+    }
+    let pos = grants.partition_point(|h| (h.cycle, h.column) < key);
+    grants.insert(pos, g);
 }
 
 impl ArbiterOutcome {
@@ -195,9 +251,10 @@ mod tests {
 
     #[test]
     fn property_bounded_selection_matches_sort_with_reused_buffer() {
-        // both arbitrate_into regimes (bounded insert for small k, sort
-        // for large k) agree with a from-scratch sort oracle, even when
-        // the grant buffer is reused dirty across calls
+        // both arbitrate_into regimes (SIMD-prefiltered bounded insert
+        // for small k, sort for large k) agree with a from-scratch sort
+        // oracle, even when the grant buffer is reused dirty across
+        // calls and k runs right up to d (tail chunks < 8 lanes)
         use crate::util::{check::property, rng::Rng};
         let mut grants = Vec::new();
         property("arbitrate_into == sort oracle", 300, 0x5C2A7C4, |rng: &mut Rng| {
@@ -212,7 +269,9 @@ mod tests {
                     }
                 })
                 .collect();
-            let stats = arbitrate_into(&cycles, k, 32, &mut grants);
+            let packed: Vec<u32> =
+                cycles.iter().map(|t| t.unwrap_or(NEVER)).collect();
+            let stats = arbitrate_into(&packed, k, 32, &mut grants);
             let mut oracle: Vec<Grant> = cycles
                 .iter()
                 .enumerate()

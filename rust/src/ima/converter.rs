@@ -13,11 +13,12 @@
 //! `convert_full` runs the same machinery without early stop — the
 //! conventional-IMA baseline [6] used by Conv-SM and Dtopk-SM.
 
-use super::arbiter::{arbitrate_into, Grant};
+use super::arbiter::{arbitrate_into, Grant, NEVER};
 use super::noise::ColumnNoise;
 use super::ramp::Ramp;
 use crate::circuits::{BitlineModel, Energy, Timing};
 use crate::util::rng::Rng;
+use crate::util::simd;
 
 /// One converted output: column address + quantized value.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -58,7 +59,9 @@ pub struct ConversionStats {
 /// makes the whole conversion path allocation-free after the first row.
 #[derive(Clone, Debug, Default)]
 pub struct ConversionScratch {
-    crossings: Vec<Option<u32>>,
+    /// Packed crossing cycles, [`NEVER`] = column never fires — the
+    /// SIMD-friendly form shared with the arbiter prefilter.
+    crossings: Vec<u32>,
     grants: Vec<Grant>,
     /// Outputs of the most recent `convert_*_into` call, in grant order.
     pub outputs: Vec<Conversion>,
@@ -67,6 +70,50 @@ pub struct ConversionScratch {
 impl ConversionScratch {
     pub fn new() -> ConversionScratch {
         ConversionScratch::default()
+    }
+}
+
+/// Reusable buffers for batched multi-row conversion
+/// ([`TopkimaConverter::convert_topk_rows_into`] /
+/// [`TopkimaConverter::convert_full_rows_into`]): per-row outputs land
+/// concatenated in `outputs` with `ranges[r]` delimiting row r and
+/// `stats[r]` carrying its cost summary.
+#[derive(Clone, Debug, Default)]
+pub struct BatchConversionScratch {
+    row: ConversionScratch,
+    /// Concatenated outputs of every row of the most recent batch call.
+    pub outputs: Vec<Conversion>,
+    /// Half-open `outputs` range of each row.
+    pub ranges: Vec<(usize, usize)>,
+    /// Per-row cost summaries.
+    pub stats: Vec<ConversionStats>,
+}
+
+impl BatchConversionScratch {
+    pub fn new() -> BatchConversionScratch {
+        BatchConversionScratch::default()
+    }
+
+    /// Outputs of row `r` of the most recent batch call (empty when the
+    /// row is out of range).
+    pub fn row_outputs(&self, r: usize) -> &[Conversion] {
+        match self.ranges.get(r) {
+            Some(&(start, end)) => self.outputs.get(start..end).unwrap_or(&[]),
+            None => &[],
+        }
+    }
+
+    fn clear(&mut self) {
+        self.outputs.clear();
+        self.ranges.clear();
+        self.stats.clear();
+    }
+
+    fn absorb_row(&mut self, row: &ConversionScratch, stats: ConversionStats) {
+        let start = self.outputs.len();
+        self.outputs.extend_from_slice(&row.outputs);
+        self.ranges.push((start, self.outputs.len()));
+        self.stats.push(stats);
     }
 }
 
@@ -102,20 +149,38 @@ impl TopkimaConverter {
     /// array is rated for), so comparisons happen in MAC units. Bitline
     /// voltage noise is referred back through `dv_per_unit`; converter
     /// noise (`ColumnNoise`) is specified directly in ADC LSBs.
-    fn crossings_into(
-        &self,
-        macs: &[i64],
-        rng: &mut Rng,
-        out: &mut Vec<Option<u32>>,
-    ) {
+    fn crossings_into(&self, macs: &[i64], rng: &mut Rng, out: &mut Vec<u32>) {
         let dv = self.bitline.dv_per_unit;
+        if self.is_noise_free() {
+            // Ideal converter: no RNG draw anywhere in the chain (both
+            // samplers early-return), so the whole row is one pure
+            // element-wise function — the SIMD kernel computes it with
+            // the exact same operation sequence (see simd.rs), bit for
+            // bit. RNG state is untouched on either path.
+            let p = simd::CrossingParams {
+                dv_per_unit: dv,
+                v_precharge: self.bitline.v_precharge,
+                lsb: self.ramp.lsb(),
+                qmax: crate::quant::qmax(self.ramp.n_bits) as f64,
+                steps: self.ramp.steps(),
+                decreasing: self.ramp.decreasing,
+            };
+            simd::ideal_crossings(&p, macs, out);
+            return;
+        }
         out.clear();
         out.extend(macs.iter().enumerate().map(|(c, &mac)| {
             let v_mac_units = self.bitline.sample(mac, rng) / dv;
             let err_lsb = self.noise.sample_lsb(c, rng);
             let v = v_mac_units + err_lsb * self.ramp.lsb();
-            self.ramp.crossing_cycle_fast(v)
+            self.ramp.crossing_cycle_fast(v).unwrap_or(NEVER)
         }));
+    }
+
+    /// True when neither the bitline nor the converter draws any noise
+    /// — the precondition for the vectorized RNG-free crossing kernel.
+    fn is_noise_free(&self) -> bool {
+        self.bitline.sigma_noise_v == 0.0 && self.noise.is_ideal()
     }
 
     /// Convert with top-k early stopping (the topkima macro).
@@ -206,6 +271,62 @@ impl TopkimaConverter {
         }
     }
 
+    /// Batched top-k conversion of `rows` rows of MACs (row-major in
+    /// `macs`, `rows × columns()` long) — what `sweep-hw` and the
+    /// synthetic fleet executor call once per batch instead of
+    /// row-at-a-time. Bit-identical to looping
+    /// [`Self::convert_topk_into`] yourself: rows are converted in row
+    /// order with the same RNG stream (the noisy path draws in the
+    /// exact per-column order; the ideal path draws nothing), so
+    /// batching can never change a result.
+    pub fn convert_topk_rows_into(
+        &self,
+        macs: &[i64],
+        rows: usize,
+        k: usize,
+        rng: &mut Rng,
+        batch: &mut BatchConversionScratch,
+    ) {
+        let d = self.noise.columns();
+        assert_eq!(macs.len(), rows * d);
+        batch.clear();
+        let mut row_scratch = std::mem::take(&mut batch.row);
+        for r in 0..rows {
+            let stats = self.convert_topk_into(
+                &macs[r * d..(r + 1) * d],
+                k,
+                rng,
+                &mut row_scratch,
+            );
+            batch.absorb_row(&row_scratch, stats);
+        }
+        batch.row = row_scratch;
+    }
+
+    /// Batched [`Self::convert_full_into`] — same contract as
+    /// [`Self::convert_topk_rows_into`].
+    pub fn convert_full_rows_into(
+        &self,
+        macs: &[i64],
+        rows: usize,
+        rng: &mut Rng,
+        batch: &mut BatchConversionScratch,
+    ) {
+        let d = self.noise.columns();
+        assert_eq!(macs.len(), rows * d);
+        batch.clear();
+        let mut row_scratch = std::mem::take(&mut batch.row);
+        for r in 0..rows {
+            let stats = self.convert_full_into(
+                &macs[r * d..(r + 1) * d],
+                rng,
+                &mut row_scratch,
+            );
+            batch.absorb_row(&row_scratch, stats);
+        }
+        batch.row = row_scratch;
+    }
+
     /// Package the arbiter grants into (address, code) outputs.
     fn emit_outputs(&self, scratch: &mut ConversionScratch) {
         scratch.outputs.clear();
@@ -292,6 +413,65 @@ mod tests {
             res.outputs.iter().map(|o| o.column).collect::<Vec<_>>(),
             vec![0, 1, 2, 3]
         );
+    }
+
+    #[test]
+    fn batched_rows_match_row_at_a_time() {
+        use super::super::noise::NoiseModel;
+        // ideal (RNG-free SIMD crossings) and noisy (shared sequential
+        // RNG stream) converters: the batched call must reproduce a
+        // hand-rolled per-row loop bit for bit, stats included
+        for noisy in [false, true] {
+            let d = 33; // not a lane multiple — exercises kernel tails
+            let rows = 5;
+            let mut conv = TopkimaConverter::ideal(d, 2000.0);
+            if noisy {
+                conv.bitline.sigma_noise_v = 0.0004;
+                conv.noise =
+                    ColumnNoise::new(NoiseModel::default(), d, &mut Rng::new(9));
+            }
+            let macs: Vec<i64> = (0..rows * d)
+                .map(|i| ((i * 97) % 3800) as i64 - 1900)
+                .collect();
+            let mut batch = BatchConversionScratch::new();
+            let mut scratch = ConversionScratch::new();
+
+            let mut rng_a = Rng::new(42);
+            conv.convert_topk_rows_into(&macs, rows, 4, &mut rng_a, &mut batch);
+            let mut rng_b = Rng::new(42);
+            for r in 0..rows {
+                let stats = conv.convert_topk_into(
+                    &macs[r * d..(r + 1) * d],
+                    4,
+                    &mut rng_b,
+                    &mut scratch,
+                );
+                assert_eq!(
+                    batch.row_outputs(r),
+                    scratch.outputs.as_slice(),
+                    "topk row {r} noisy {noisy}"
+                );
+                assert_eq!(batch.stats[r], stats, "topk stats row {r}");
+            }
+            assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "RNG stream drift");
+
+            let mut rng_a = Rng::new(43);
+            conv.convert_full_rows_into(&macs, rows, &mut rng_a, &mut batch);
+            let mut rng_b = Rng::new(43);
+            for r in 0..rows {
+                let stats = conv.convert_full_into(
+                    &macs[r * d..(r + 1) * d],
+                    &mut rng_b,
+                    &mut scratch,
+                );
+                assert_eq!(
+                    batch.row_outputs(r),
+                    scratch.outputs.as_slice(),
+                    "full row {r} noisy {noisy}"
+                );
+                assert_eq!(batch.stats[r], stats, "full stats row {r}");
+            }
+        }
     }
 
     #[test]

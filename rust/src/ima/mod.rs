@@ -14,10 +14,12 @@ pub mod converter;
 pub mod noise;
 pub mod ramp;
 
-pub use arbiter::{arbitrate, arbitrate_into, ArbiterOutcome, ArbiterStats, Grant};
+pub use arbiter::{
+    arbitrate, arbitrate_into, ArbiterOutcome, ArbiterStats, Grant, NEVER,
+};
 pub use converter::{
-    Conversion, ConversionResult, ConversionScratch, ConversionStats,
-    TopkimaConverter,
+    BatchConversionScratch, Conversion, ConversionResult, ConversionScratch,
+    ConversionStats, TopkimaConverter,
 };
 pub use noise::{ColumnNoise, NoiseModel};
 pub use ramp::Ramp;

@@ -2,7 +2,7 @@
 //!
 //! PRs 3–5 turned the stack into a sharded fleet whose correctness
 //! rests on hand-enforced conventions; this module checks them by
-//! tool. Four checkers, all dependency-free line scanners over
+//! tool. Five checkers, all dependency-free line scanners over
 //! [`scan::SourceFile`] (no `syn` — the offline vendored-deps
 //! constraint):
 //!
@@ -17,6 +17,9 @@
 //!   send or blocking recv in the same scope.
 //! * **unknown-field** — every object decoder in
 //!   `wire.rs`/`config.rs`/`trace.rs` rejects unknown fields.
+//! * **simd-safety** — every `#[target_feature(enable = "...")]`
+//!   function carries a `// SAFETY:` comment naming its runtime
+//!   detection guard (the feature string must appear in the comment).
 //!
 //! Any finding can be silenced with `// lint:allow(<checker>):
 //! <reason>` (trailing, or standalone on the line above); the reason
@@ -33,6 +36,7 @@ pub mod scan;
 mod lock_discipline;
 mod panic_path;
 mod schema_sync;
+mod simd_safety;
 mod unknown_field;
 
 use std::collections::BTreeMap;
@@ -48,8 +52,13 @@ use self::scan::SourceFile;
 pub(crate) type RawHit = (usize, &'static str, String);
 
 /// Stable checker names, sorted — also the JSON `checkers` field.
-pub const CHECKERS: [&str; 4] =
-    ["lock-discipline", "panic-path", "schema-sync", "unknown-field"];
+pub const CHECKERS: [&str; 5] = [
+    "lock-discipline",
+    "panic-path",
+    "schema-sync",
+    "simd-safety",
+    "unknown-field",
+];
 
 /// One active lint finding.
 #[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
@@ -148,12 +157,13 @@ impl SourceSet {
     /// Load the repo surfaces the checkers cover: the whole
     /// `rust/src/coordinator/` tree plus the schema files
     /// (`pipeline/config.rs`, `main.rs`, `tests/transport_proc.rs`,
-    /// `DESIGN.md`).
+    /// `DESIGN.md`) and the SIMD kernel layer (`util/simd.rs`).
     pub fn from_repo(root: &Path) -> io::Result<SourceSet> {
         let mut set = SourceSet::default();
         for rel in [
             "rust/src/pipeline/config.rs",
             "rust/src/main.rs",
+            "rust/src/util/simd.rs",
             "rust/tests/transport_proc.rs",
             "DESIGN.md",
         ] {
@@ -194,6 +204,12 @@ pub fn run(set: &SourceSet) -> Report {
         if path.contains("rust/src/coordinator/") && path.ends_with(".rs") {
             apply(file, panic_path::check(file), &mut report);
             apply(file, lock_discipline::check(file), &mut report);
+        }
+        if path.ends_with("rust/src/util/simd.rs") {
+            apply(file, panic_path::check(file), &mut report);
+        }
+        if path.ends_with(".rs") {
+            apply(file, simd_safety::check(file), &mut report);
         }
         if path.ends_with("coordinator/transport/wire.rs")
             || path.ends_with("pipeline/config.rs")

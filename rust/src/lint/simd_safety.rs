@@ -1,0 +1,162 @@
+//! simd-safety checker: every `#[target_feature(enable = "...")]`
+//! function must carry a safety comment naming its runtime detection
+//! guard (DESIGN.md §12).
+//!
+//! Calling a `target_feature` function on a CPU without that feature
+//! is instant UB, and the compiler cannot check the guard — the
+//! `util::simd` convention is that such functions are reachable only
+//! through a `Dispatch` variant handed out after
+//! `is_x86_feature_detected!` reported true, and that the function
+//! documents this with a `// SAFETY:` comment that names the feature.
+//! This checker enforces the documentation half mechanically: the
+//! contiguous comment/attribute block directly above the
+//! `#[target_feature(...)]` line must contain both the word `SAFETY`
+//! and the feature name itself (so the comment cannot silently rot
+//! when a function is re-targeted to a different ISA extension).
+//!
+//! Limitation (line-based scanner): an attribute split across lines
+//! (`#[target_feature(` on one line, the feature string on the next)
+//! is not recognized — keep the attribute on one line, as rustfmt
+//! does.
+
+use super::scan::SourceFile;
+use super::RawHit;
+
+/// How far above the attribute the comment/attribute block may extend.
+const MAX_BLOCK: usize = 10;
+
+pub(crate) fn check(file: &SourceFile) -> Vec<RawHit> {
+    let mut hits = Vec::new();
+    for (idx, line) in file.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let Some(feature) = target_feature_of(&line.raw) else {
+            continue;
+        };
+        // Walk the contiguous comment/attribute block directly above
+        // (plus the attribute line itself, for trailing comments).
+        let mut has_safety = line.raw.contains("SAFETY");
+        let mut has_feature_in_comment = false;
+        let mut j = idx;
+        let mut steps = 0usize;
+        while j > 0 && steps < MAX_BLOCK {
+            j -= 1;
+            steps += 1;
+            let above = match file.lines.get(j) {
+                Some(l) => l,
+                None => break,
+            };
+            let t = above.raw.trim_start();
+            if !(t.starts_with("//") || t.starts_with("#[") || t.starts_with("#![")) {
+                break;
+            }
+            if t.starts_with("//") {
+                has_safety = has_safety || t.contains("SAFETY");
+                has_feature_in_comment =
+                    has_feature_in_comment || t.contains(feature.as_str());
+            }
+        }
+        if !(has_safety && has_feature_in_comment) {
+            hits.push((
+                idx,
+                "simd-safety",
+                format!(
+                    "#[target_feature(enable = \"{feature}\")] without a \
+                     safety comment naming its detection guard — put a \
+                     `// SAFETY: ... is_x86_feature_detected!(\"{feature}\") \
+                     ...` comment directly above the attribute"
+                ),
+            ));
+        }
+    }
+    hits
+}
+
+/// The first feature name of a `#[target_feature(...)]` attribute line.
+/// Reads the `raw` view — the feature lives in a string literal, which
+/// the `code` view blanks.
+fn target_feature_of(raw: &str) -> Option<String> {
+    let pos = raw.find("#[target_feature(")?;
+    let rest = raw.get(pos..)?;
+    let q1 = rest.find('"')?;
+    let rest = rest.get(q1 + 1..)?;
+    let q2 = rest.find('"')?;
+    let feature = rest.get(..q2)?.trim();
+    if feature.is_empty() {
+        None
+    } else {
+        Some(feature.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hits_of(text: &str) -> Vec<RawHit> {
+        check(&SourceFile::parse("rust/src/util/simd.rs", text))
+    }
+
+    #[test]
+    fn guarded_function_is_clean() {
+        let src = "\
+// SAFETY: callers guarantee AVX2 — reachable only through
+// Dispatch::Avx2, which requires is_x86_feature_detected!(\"avx2\").
+#[cfg(target_arch = \"x86_64\")]
+#[target_feature(enable = \"avx2\")]
+unsafe fn k(x: &[i32]) -> i32 { 0 }
+";
+        assert!(hits_of(src).is_empty());
+    }
+
+    #[test]
+    fn missing_comment_is_flagged() {
+        let src = "\
+#[cfg(target_arch = \"x86_64\")]
+#[target_feature(enable = \"avx2\")]
+unsafe fn k(x: &[i32]) -> i32 { 0 }
+";
+        let hits = hits_of(src);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].0, 1);
+        assert!(hits[0].2.contains("avx2"), "{}", hits[0].2);
+    }
+
+    #[test]
+    fn comment_naming_the_wrong_feature_is_flagged() {
+        // the SAFETY text exists but names a different extension — the
+        // comment rotted when the function was re-targeted
+        let src = "\
+// SAFETY: guarded by is_x86_feature_detected!(\"sse2\").
+#[target_feature(enable = \"avx512f\")]
+unsafe fn k(x: &[i32]) -> i32 { 0 }
+";
+        let hits = hits_of(src);
+        assert_eq!(hits.len(), 1);
+        assert!(hits[0].2.contains("avx512f"), "{}", hits[0].2);
+    }
+
+    #[test]
+    fn block_may_not_be_interrupted_by_code() {
+        let src = "\
+// SAFETY: guarded by is_x86_feature_detected!(\"avx2\").
+fn unrelated() {}
+#[target_feature(enable = \"avx2\")]
+unsafe fn k(x: &[i32]) -> i32 { 0 }
+";
+        assert_eq!(hits_of(src).len(), 1);
+    }
+
+    #[test]
+    fn test_code_is_exempt() {
+        let src = "\
+#[cfg(test)]
+mod tests {
+    #[target_feature(enable = \"avx2\")]
+    unsafe fn k() {}
+}
+";
+        assert!(hits_of(src).is_empty());
+    }
+}

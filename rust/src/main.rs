@@ -18,7 +18,8 @@
 //!   [--shards N] [--transport local|process] [--transport-worker PATH]
 //!   [--transport-env K=V] [--steal on|off] [--steal-min-backlog N]
 //!   [--steal-victim least-loaded|round-robin] [--trace FILE]
-//!   [--export-trace FILE] [--deterministic] [--config fleet.json]
+//!   [--export-trace FILE] [--deterministic] [--behavioral]
+//!   [--config fleet.json]
 //!   [stack flags...]` — start the sharded fleet engine over the
 //!   configured streams (a 3-stream 2-shard demo fleet by default) and
 //!   drive it with a seeded multi-stream synthetic load (per-stream
@@ -32,7 +33,10 @@
 //!   formed batches to idle peers (local transport only);
 //!   `--deterministic` replays with lifted deadlines and emits only
 //!   schedule-determined fields, so the same trace always produces a
-//!   byte-identical `BENCH_fleet.json`. Per-stream p50/p99 latency,
+//!   byte-identical `BENCH_fleet.json`. `--behavioral` swaps the
+//!   modeled-sleep executor for real circuit-macro work per batch
+//!   (batched MAC + top-k conversion; local transport only), so fleet
+//!   load drives the §Perf hot paths. Per-stream p50/p99 latency,
 //!   batch occupancy, padding waste, and per-shard stolen/donated
 //!   counters land in `BENCH_fleet.json`.
 //! * `shard-worker` — internal: one fleet shard driven over
@@ -146,6 +150,8 @@ const SUBCOMMANDS: &[(&str, &str, &str)] = &[
          --export-trace FILE        write the schedule actually submitted\n\
          --deterministic            lifted deadlines; byte-identical BENCH \
          per trace\n\
+         --behavioral               real circuit-macro work per batch \
+         (batched MAC + top-k conversion; local transport only)\n\
          --steal on|off             batch-granular work-stealing (local \
          transport only)\n\
          --steal-min-backlog N      batches a donor keeps per round\n\
@@ -400,6 +406,7 @@ fn cmd_serve_fleet(args: &[String]) -> Result<()> {
     let mut trace_in: Option<String> = None;
     let mut trace_out: Option<String> = None;
     let mut deterministic = false;
+    let mut behavioral = false;
     let mut rest: Vec<String> = Vec::new();
     let mut i = 0;
     while i < args.len() {
@@ -426,6 +433,10 @@ fn cmd_serve_fleet(args: &[String]) -> Result<()> {
             }
             "--deterministic" => {
                 deterministic = true;
+                i += 1;
+            }
+            "--behavioral" => {
+                behavioral = true;
                 i += 1;
             }
             _ => {
@@ -466,11 +477,12 @@ fn cmd_serve_fleet(args: &[String]) -> Result<()> {
     let steal = b.config().fleet.steal;
     let transport = b.config().fleet.transport.kind;
     println!(
-        "fleet: {} stream(s) over {} shard(s), transport {}, stealing {} \
-         (min_backlog {}, victim {}){}",
+        "fleet: {} stream(s) over {} shard(s), transport {}, {} \
+         executors, stealing {} (min_backlog {}, victim {}){}",
         specs.len(),
         shards,
         transport.key(),
+        if behavioral { "behavioral" } else { "synthetic" },
         if steal.enabled { "on" } else { "off" },
         steal.min_backlog,
         steal.victim.key(),
@@ -542,7 +554,11 @@ fn cmd_serve_fleet(args: &[String]) -> Result<()> {
     let source = if trace_in.is_some() { "trace" } else { "synthetic" };
     println!("load: {} requests scheduled ({source})", schedule.len());
 
-    let mut fleet = b.start_fleet_synthetic()?;
+    let mut fleet = if behavioral {
+        b.start_fleet_behavioral()?
+    } else {
+        b.start_fleet_synthetic()?
+    };
 
     // Shared handles per stream: routing is refcount bumps (§Perf).
     // Payloads are cached per (stream, input_len) so replaying a trace
@@ -1024,6 +1040,9 @@ fn cmd_bench_diff(args: &[String]) -> Result<()> {
     if let Some(note) = benchdiff::version_note(&base_doc, &fresh_doc) {
         eprintln!("WARN: {note}");
     }
+    if let Some(note) = benchdiff::dispatch_note(&base_doc, &fresh_doc) {
+        eprintln!("WARN: {note}");
+    }
     let d = benchdiff::diff(&base_doc, &fresh_doc)
         .map_err(|e| anyhow::anyhow!("{e}"))?;
     if markdown {
@@ -1031,6 +1050,9 @@ fn cmd_bench_diff(args: &[String]) -> Result<()> {
         return Ok(());
     }
     print!("{}", d.table());
+    if let Some(msg) = d.missing_metrics() {
+        bail!("{msg}");
+    }
     let regs = d.regressions(max_regress);
     if !regs.is_empty() {
         for r in &regs {

@@ -16,8 +16,9 @@ use anyhow::Result;
 use crate::arch::ArchConfig;
 use crate::coordinator::transport::{ProcessOptions, ProcessTransport};
 use crate::coordinator::{
-    shard_of, BatcherConfig, Coordinator, Executor, ExecutorFactory, Fleet,
-    PjrtExecutor, Router, StreamDef, StreamKey, SyntheticExecutor,
+    shard_of, BatcherConfig, BehavioralExecutor, Coordinator, Executor,
+    ExecutorFactory, Fleet, PjrtExecutor, Router, StreamDef, StreamKey,
+    SyntheticExecutor,
 };
 use crate::crossbar::Crossbar;
 use crate::ima::ColumnNoise;
@@ -303,6 +304,46 @@ impl PipelineBuilder {
         ))
     }
 
+    /// Start the configured fleet over behavioral executors
+    /// (`serve-fleet --behavioral`): every batch does real circuit-macro
+    /// work — batched MAC + batched top-k conversion — instead of a
+    /// modeled sleep. Executors are in-process objects, so like
+    /// work-stealing this is local-transport only; the process
+    /// transport is a typed rejection, not a silent downgrade.
+    pub fn start_fleet_behavioral(&self) -> Result<Fleet, ConfigError> {
+        if self.cfg.fleet.transport.kind == TransportKind::Process {
+            return Err(ConfigError::Invalid {
+                field: "fleet.transport".to_string(),
+                reason: "behavioral executors run in-process (the wire \
+                         protocol has no behavioral mode) — use the local \
+                         transport"
+                    .to_string(),
+            });
+        }
+        let shards = self.cfg.fleet.shards;
+        let exec = self.behavioral_executor();
+        let factories = (0..shards)
+            .map(|_| {
+                let exec = exec.clone();
+                Box::new(move || Box::new(exec) as Box<dyn Executor>)
+                    as ExecutorFactory
+            })
+            .collect();
+        Ok(self.start_fleet_with(factories))
+    }
+
+    /// The behavioral executor for the configured streams: one
+    /// deterministically programmed crossbar tile per stream, top-k
+    /// from the stream spec.
+    pub fn behavioral_executor(&self) -> BehavioralExecutor {
+        let mut exec = BehavioralExecutor::new();
+        for spec in &self.fleet_specs() {
+            let key: StreamKey = (Arc::from(spec.family()), spec.k);
+            exec = exec.with_stream(key, spec.k);
+        }
+        exec
+    }
+
     /// The synthetic hw-cost executor for the configured streams
     /// (per-stream per-row service time from the analytic simulator) —
     /// shared by the local synthetic fleet and the `shard-worker`
@@ -552,6 +593,52 @@ mod tests {
         assert_eq!(r2.output, vec![2.0, 3.0]);
         let fm = fleet.shutdown().expect("healthy shutdown");
         assert_eq!(fm.aggregate().completed(), 2);
+    }
+
+    #[test]
+    fn behavioral_fleet_serves_streams_and_rejects_process_transport() {
+        use crate::coordinator::InputData;
+        use crate::pipeline::config::{TransportConfig, TransportKind};
+        use crate::pipeline::config::StreamSpec;
+        use crate::pipeline::ModelKind;
+        let cfg = StackConfig::default()
+            .with_shards(2)
+            .with_stream(StreamSpec::new(
+                ModelKind::BertTiny, 5, SoftmaxKind::Topkima))
+            .with_stream(StreamSpec::new(
+                ModelKind::VitBase, 3, SoftmaxKind::Dtopk));
+        let b = cfg.clone().build().unwrap();
+        let mut fleet = b.start_fleet_behavioral().unwrap();
+        let rx1 =
+            fleet.submit("bert", 5, InputData::I32(vec![2, 3])).unwrap();
+        let rx2 =
+            fleet.submit("vit", 3, InputData::F32(vec![0.5, 1.5])).unwrap();
+        let r1 = rx1
+            .recv_timeout(std::time::Duration::from_secs(10))
+            .unwrap();
+        let r2 = rx2
+            .recv_timeout(std::time::Duration::from_secs(10))
+            .unwrap();
+        // checksum of a probability row weighted by (col+1) stays within
+        // (0, cols]; the second field is the stream's k
+        assert!(r1.output[0] > 0.0 && r1.output[0] <= 64.0);
+        assert_eq!(r1.output[1], 5.0);
+        assert_eq!(r2.output[1], 3.0);
+        fleet.shutdown().expect("healthy shutdown");
+        // behavioral × process transport is a typed rejection
+        let b = cfg
+            .with_transport(TransportConfig {
+                kind: TransportKind::Process,
+                ..TransportConfig::default()
+            })
+            .build()
+            .unwrap();
+        let err = b.start_fleet_behavioral().unwrap_err();
+        assert!(
+            matches!(&err, ConfigError::Invalid { field, .. }
+                     if field == "fleet.transport"),
+            "behavioral × process must be typed: {err:?}"
+        );
     }
 
     #[test]

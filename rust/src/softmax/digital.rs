@@ -7,6 +7,12 @@
 //! estimated from [13], [17]).
 
 use crate::circuits::{Energy, Timing};
+use crate::util::simd;
+
+/// Below this many selected values the SIMD gather-max costs more than
+/// it saves; both branches compute the identical max, so the cutoff is
+/// purely a speed knob.
+const SPARSE_SIMD_MIN: usize = 16;
 
 /// The digital exp/divide pipeline.
 #[derive(Clone, Copy, Debug, Default)]
@@ -23,15 +29,17 @@ impl DigitalSoftmax {
         if values.is_empty() {
             return;
         }
-        let m = values.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        // SIMD max (order-independent over NaN-free logits) and SIMD
+        // normalize (per-element IEEE divide). The exp+sum loop stays
+        // scalar: a reordered f64 sum is not bit-stable, and that
+        // guarantee is what the parity gates check.
+        let m = simd::max_f64(values);
         let mut sum = 0.0;
         for (o, &v) in out.iter_mut().zip(values) {
             *o = (v - m).exp();
             sum += *o;
         }
-        for o in out.iter_mut() {
-            *o /= sum;
-        }
+        simd::div_assign_f64(out, sum);
     }
 
     /// Softmax of a sparse top-k selection scattered into a dense row of
@@ -60,10 +68,26 @@ impl DigitalSoftmax {
         if selection.is_empty() {
             return;
         }
-        let m = selection
-            .iter()
-            .map(|&(_, v)| v)
-            .fold(f64::NEG_INFINITY, f64::max);
+        // Selection pairs are (index, value) tuples whose memory layout
+        // is unspecified, so the SIMD max cannot read them in place;
+        // for wide selections, stage the values contiguously in the
+        // front of the (still all-zero) dense buffer, reduce, re-zero.
+        // Both branches compute the same max bit-for-bit (f64::max is
+        // order-independent for NaN-free data).
+        let n = selection.len();
+        let m = if n >= SPARSE_SIMD_MIN && n <= d {
+            for (slot, &(_, v)) in dense.iter_mut().zip(selection) {
+                *slot = v;
+            }
+            let m = simd::max_f64(&dense[..n]);
+            dense[..n].fill(0.0);
+            m
+        } else {
+            selection
+                .iter()
+                .map(|&(_, v)| v)
+                .fold(f64::NEG_INFINITY, f64::max)
+        };
         let mut sum = 0.0;
         for &(_, v) in selection {
             sum += (v - m).exp();

@@ -24,7 +24,9 @@ use super::dtopk::{digital_topk_into, sort_compare_bound};
 use super::SoftmaxKind;
 use crate::circuits::{pwm, Energy, Timing};
 use crate::crossbar::Crossbar;
-use crate::ima::{ConversionScratch, TopkimaConverter};
+use crate::ima::{
+    BatchConversionScratch, Conversion, ConversionScratch, TopkimaConverter,
+};
 use crate::util::rng::Rng;
 
 /// Reusable per-row buffers threaded through [`run_macro`] and every
@@ -35,15 +37,56 @@ use crate::util::rng::Rng;
 pub struct MacroScratch {
     /// Converter-level buffers (crossings, grants, outputs).
     pub conv: ConversionScratch,
+    /// Batched converter buffers (the `select_rows` path).
+    pub batch: BatchConversionScratch,
     /// Dense per-column value row (Full/Dtopk strategies).
     dense: Vec<f64>,
     /// Digital-sorter selection workspace.
     taken: Vec<bool>,
+    /// One-row staging buffer for batched selection.
+    row_sel: Vec<(usize, f64)>,
 }
 
 impl MacroScratch {
     pub fn new() -> MacroScratch {
         MacroScratch::default()
+    }
+}
+
+/// Output of one batched [`SelectionStrategy::select_rows`] call:
+/// every row's selected (column, value) pairs concatenated in `sel`,
+/// with `ranges[r]` delimiting row r and `costs[r]` its
+/// conversion-phase cost.
+#[derive(Clone, Debug, Default)]
+pub struct SelectionRows {
+    /// Concatenated per-row selections.
+    pub sel: Vec<(usize, f64)>,
+    /// Half-open `sel` range of each row.
+    pub ranges: Vec<(usize, usize)>,
+    /// Per-row conversion-phase costs.
+    pub costs: Vec<RowCost>,
+}
+
+impl SelectionRows {
+    fn clear(&mut self) {
+        self.sel.clear();
+        self.ranges.clear();
+        self.costs.clear();
+    }
+
+    fn push_row(&mut self, sel: &[(usize, f64)], rc: RowCost) {
+        let start = self.sel.len();
+        self.sel.extend_from_slice(sel);
+        self.ranges.push((start, self.sel.len()));
+        self.costs.push(rc);
+    }
+
+    /// Selection of row `r` (empty when out of range).
+    pub fn row(&self, r: usize) -> &[(usize, f64)] {
+        match self.ranges.get(r) {
+            Some(&(start, end)) => self.sel.get(start..end).unwrap_or(&[]),
+            None => &[],
+        }
     }
 }
 
@@ -171,16 +214,53 @@ pub trait SelectionStrategy {
         scratch: &mut MacroScratch,
         sel: &mut Vec<(usize, f64)>,
     ) -> RowCost;
+
+    /// Batched form of [`Self::select`] over `rows` consecutive
+    /// length-`d` MAC rows in `macs` (§Perf): one call converts the
+    /// whole batch so converter tile state and scratch stay hot. The
+    /// provided default loops [`Self::select`] row by row; overrides
+    /// must stay bit-identical to that loop — same selections, same
+    /// costs, same RNG draw order (rows ascending).
+    fn select_rows(
+        &self,
+        parts: &MacroParts,
+        macs: &[i64],
+        d: usize,
+        rng: &mut Rng,
+        scratch: &mut MacroScratch,
+        out: &mut SelectionRows,
+    ) {
+        out.clear();
+        let rows = if d == 0 { 0 } else { macs.len() / d };
+        let mut row_sel = std::mem::take(&mut scratch.row_sel);
+        for r in 0..rows {
+            row_sel.clear();
+            let rc = self.select(
+                parts,
+                &macs[r * d..(r + 1) * d],
+                rng,
+                scratch,
+                &mut row_sel,
+            );
+            out.push_row(&row_sel, rc);
+        }
+        scratch.row_sel = row_sel;
+    }
 }
 
-/// Scatter the scratch outputs of a full conversion into the dense
-/// per-column value row (0.0 for columns that never crossed).
-fn scatter_dense(parts: &MacroParts, scratch: &mut MacroScratch, d: usize) {
+/// Scatter full-conversion `outputs` into the dense per-column value
+/// row (0.0 for columns that never crossed).
+fn scatter_dense(
+    parts: &MacroParts,
+    dense: &mut Vec<f64>,
+    outputs: &[Conversion],
+    d: usize,
+) {
     let lsb = parts.converter.ramp.lsb();
-    scratch.dense.clear();
-    scratch.dense.resize(d, 0.0);
-    for o in &scratch.conv.outputs {
-        scratch.dense[o.column] = o.code as f64 * lsb;
+    dense.clear();
+    dense.resize(d, 0.0);
+    for o in outputs {
+        dense[o.column] = o.code as f64 * lsb;
     }
 }
 
@@ -200,13 +280,43 @@ impl SelectionStrategy for FullConversion {
         let d = macs.len();
         let stats =
             parts.converter.convert_full_into(macs, rng, &mut scratch.conv);
-        scatter_dense(parts, scratch, d);
+        scatter_dense(parts, &mut scratch.dense, &scratch.conv.outputs, d);
         sel.extend(scratch.dense.iter().copied().enumerate());
         RowCost {
             latency_ns: stats.latency_ns,
             energy_pj: stats.energy_pj,
             alpha: 1.0,
             nl_elems: d,
+        }
+    }
+
+    fn select_rows(
+        &self,
+        parts: &MacroParts,
+        macs: &[i64],
+        d: usize,
+        rng: &mut Rng,
+        scratch: &mut MacroScratch,
+        out: &mut SelectionRows,
+    ) {
+        out.clear();
+        let rows = if d == 0 { 0 } else { macs.len() / d };
+        parts
+            .converter
+            .convert_full_rows_into(macs, rows, rng, &mut scratch.batch);
+        for r in 0..rows {
+            let MacroScratch { dense, batch, .. } = scratch;
+            scatter_dense(parts, dense, batch.row_outputs(r), d);
+            let start = out.sel.len();
+            out.sel.extend(dense.iter().copied().enumerate());
+            out.ranges.push((start, out.sel.len()));
+            let stats = batch.stats[r];
+            out.costs.push(RowCost {
+                latency_ns: stats.latency_ns,
+                energy_pj: stats.energy_pj,
+                alpha: 1.0,
+                nl_elems: d,
+            });
         }
     }
 }
@@ -228,7 +338,7 @@ impl SelectionStrategy for DigitalTopkSelect {
         let d = macs.len();
         let stats =
             parts.converter.convert_full_into(macs, rng, &mut scratch.conv);
-        scatter_dense(parts, scratch, d);
+        scatter_dense(parts, &mut scratch.dense, &scratch.conv.outputs, d);
         digital_topk_into(&scratch.dense, self.k, sel, &mut scratch.taken);
         let sort_ns = parts.timing.t_sort(d, self.k);
         let sort_pj = sort_compare_bound(d, self.k) * parts.energy.e_sort_cmp;
@@ -238,6 +348,42 @@ impl SelectionStrategy for DigitalTopkSelect {
             alpha: 1.0,
             nl_elems: self.k,
         }
+    }
+
+    fn select_rows(
+        &self,
+        parts: &MacroParts,
+        macs: &[i64],
+        d: usize,
+        rng: &mut Rng,
+        scratch: &mut MacroScratch,
+        out: &mut SelectionRows,
+    ) {
+        out.clear();
+        let rows = if d == 0 { 0 } else { macs.len() / d };
+        parts
+            .converter
+            .convert_full_rows_into(macs, rows, rng, &mut scratch.batch);
+        let sort_ns = parts.timing.t_sort(d, self.k);
+        let sort_pj = sort_compare_bound(d, self.k) * parts.energy.e_sort_cmp;
+        let mut row_sel = std::mem::take(&mut scratch.row_sel);
+        for r in 0..rows {
+            let MacroScratch { dense, taken, batch, .. } = scratch;
+            scatter_dense(parts, dense, batch.row_outputs(r), d);
+            row_sel.clear();
+            digital_topk_into(dense, self.k, &mut row_sel, taken);
+            let stats = batch.stats[r];
+            out.push_row(
+                &row_sel,
+                RowCost {
+                    latency_ns: stats.latency_ns + sort_ns,
+                    energy_pj: stats.energy_pj + sort_pj,
+                    alpha: 1.0,
+                    nl_elems: self.k,
+                },
+            );
+        }
+        scratch.row_sel = row_sel;
     }
 }
 
@@ -276,11 +422,51 @@ impl SelectionStrategy for TopkimaSelect {
             nl_elems: scratch.conv.outputs.len(),
         }
     }
+
+    fn select_rows(
+        &self,
+        parts: &MacroParts,
+        macs: &[i64],
+        d: usize,
+        rng: &mut Rng,
+        scratch: &mut MacroScratch,
+        out: &mut SelectionRows,
+    ) {
+        out.clear();
+        let rows = if d == 0 { 0 } else { macs.len() / d };
+        parts.converter.convert_topk_rows_into(
+            macs,
+            rows,
+            self.k,
+            rng,
+            &mut scratch.batch,
+        );
+        let lsb = parts.converter.ramp.lsb();
+        for r in 0..rows {
+            let row_out = scratch.batch.row_outputs(r);
+            let start = out.sel.len();
+            out.sel
+                .extend(row_out.iter().map(|o| (o.column, o.code as f64 * lsb)));
+            out.ranges.push((start, out.sel.len()));
+            let stats = scratch.batch.stats[r];
+            out.costs.push(RowCost {
+                latency_ns: stats.latency_ns,
+                energy_pj: stats.energy_pj,
+                alpha: stats.alpha,
+                nl_elems: row_out.len(),
+            });
+        }
+    }
 }
 
-/// The run-loop all three macros share: MAC phase → conversion +
-/// selection (the strategy) → sparse softmax → cost accounting, then the
-/// amortized K^T write.
+/// The run-loop all three macros share: batched MAC phase → batched
+/// conversion + selection (the strategy) → per-row sparse softmax →
+/// cost accounting, then the amortized K^T write. Batching the MAC and
+/// selection phases (§Perf) keeps crossbar tiles and converter scratch
+/// hot across rows; the per-row cost/softmax loop below is unchanged,
+/// so results and accounting are bit-identical to the row-at-a-time
+/// loop this replaced (the strategy is the only RNG consumer, and
+/// `select_rows` draws in the same ascending row order).
 pub fn run_macro<S: SelectionStrategy>(
     parts: &MacroParts,
     strategy: &S,
@@ -290,17 +476,17 @@ pub fn run_macro<S: SelectionStrategy>(
     let d = parts.crossbar.used_cols();
     let mut cost = MacroCost::default();
     let mut probs = Vec::with_capacity(q_rows.len());
-    let mut macs = vec![0i64; d];
-    let mut sel: Vec<(usize, f64)> = Vec::with_capacity(d);
+    let mut macs = Vec::new();
+    parts.crossbar.mac_rows_into(q_rows, &mut macs);
     let mut scratch = MacroScratch::new();
-    for q in q_rows {
+    let mut sels = SelectionRows::default();
+    strategy.select_rows(parts, &macs, d, rng, &mut scratch, &mut sels);
+    for (r, q) in q_rows.iter().enumerate() {
         let (mac_ns, mac_pj) = parts.mac_phase_cost(q);
-        parts.crossbar.mac_into(q, &mut macs);
-        sel.clear();
-        let rc = strategy.select(parts, &macs, rng, &mut scratch, &mut sel);
+        let rc = sels.costs[r];
         // the prob row is an owned result, not scratch — this allocation
         // is the output itself
-        probs.push(parts.softmax.compute_sparse(&sel, d));
+        probs.push(parts.softmax.compute_sparse(sels.row(r), d));
         cost.absorb(
             mac_ns + rc.latency_ns + parts.softmax.latency_ns(rc.nl_elems),
             mac_pj + rc.energy_pj + parts.softmax.energy_pj(rc.nl_elems),
@@ -501,6 +687,63 @@ mod tests {
             let (probs, cost) = m.run(&q, &mut rng);
             assert_eq!(probs.len(), 2);
             assert!(cost.latency_ns > 0.0);
+        }
+    }
+
+    /// `select_rows` (batched) must be bit-identical to looping
+    /// `select` row by row — selections, costs, and RNG draw order —
+    /// for every strategy, on ideal and noisy substrates.
+    fn check_select_rows<S: SelectionStrategy>(
+        parts: &MacroParts,
+        strategy: &S,
+        macs: &[i64],
+        d: usize,
+        rows: usize,
+    ) {
+        let mut rng_a = Rng::new(123);
+        let mut rng_b = Rng::new(123);
+        let mut scratch_a = MacroScratch::new();
+        let mut scratch_b = MacroScratch::new();
+        let mut sels = SelectionRows::default();
+        strategy.select_rows(parts, macs, d, &mut rng_a, &mut scratch_a, &mut sels);
+        assert_eq!(sels.ranges.len(), rows);
+        assert_eq!(sels.costs.len(), rows);
+        let mut sel = Vec::new();
+        for r in 0..rows {
+            sel.clear();
+            let rc = strategy.select(
+                parts,
+                &macs[r * d..(r + 1) * d],
+                &mut rng_b,
+                &mut scratch_b,
+                &mut sel,
+            );
+            assert_eq!(sels.row(r), sel.as_slice(), "row {r} selection");
+            let got = sels.costs[r];
+            assert_eq!(got.latency_ns, rc.latency_ns, "row {r} latency");
+            assert_eq!(got.energy_pj, rc.energy_pj, "row {r} energy");
+            assert_eq!(got.alpha, rc.alpha, "row {r} alpha");
+            assert_eq!(got.nl_elems, rc.nl_elems, "row {r} nl_elems");
+        }
+        // same number of RNG draws → streams stay aligned
+        assert_eq!(rng_a.next_u64(), rng_b.next_u64());
+    }
+
+    #[test]
+    fn select_rows_matches_per_row_select() {
+        let ideal = parts(96);
+        let mut noisy = parts(96);
+        noisy.converter.bitline.sigma_noise_v = 0.0004;
+        let q = q_rows(5, 64);
+        for p in [&ideal, &noisy] {
+            let d = p.crossbar.used_cols();
+            let mut macs = Vec::new();
+            p.crossbar.mac_rows_into(&q, &mut macs);
+            check_select_rows(p, &FullConversion, &macs, d, q.len());
+            check_select_rows(p, &DigitalTopkSelect { k: 5 }, &macs, d, q.len());
+            check_select_rows(p, &TopkimaSelect { k: 5 }, &macs, d, q.len());
+            // k near d exercises the arbiter's bounded-heap boundary
+            check_select_rows(p, &TopkimaSelect { k: d - 1 }, &macs, d, q.len());
         }
     }
 

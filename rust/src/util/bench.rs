@@ -60,14 +60,30 @@ pub fn write_json(
     title: &str,
     results: &[BenchResult],
 ) -> std::io::Result<()> {
-    let doc = Json::obj(vec![
+    write_json_with(path, title, &[], results)
+}
+
+/// [`write_json`] with extra top-level fields spliced in after the
+/// version stamp — e.g. the hot-path bench records its SIMD dispatch
+/// decision so `bench-diff` never silently compares across ISAs.
+pub fn write_json_with(
+    path: &str,
+    title: &str,
+    extra: &[(&str, Json)],
+    results: &[BenchResult],
+) -> std::io::Result<()> {
+    let mut fields = vec![
         ("bench", Json::Str(title.to_string())),
         ("version", Json::Str(version_string())),
-        (
-            "results",
-            Json::Arr(results.iter().map(BenchResult::to_json).collect()),
-        ),
-    ]);
+    ];
+    for &(k, ref v) in extra {
+        fields.push((k, v.clone()));
+    }
+    fields.push((
+        "results",
+        Json::Arr(results.iter().map(BenchResult::to_json).collect()),
+    ));
+    let doc = Json::obj(fields);
     std::fs::write(path, json::to_string(&doc))
 }
 
@@ -149,6 +165,30 @@ mod tests {
             doc.get("version").as_str(),
             Some(version_string().as_str())
         );
+    }
+
+    #[test]
+    fn write_json_with_splices_extra_fields() {
+        let r = BenchResult {
+            name: "case".to_string(),
+            mean_ns: 1.0,
+            std_ns: 0.0,
+            iters: 5,
+        };
+        let path =
+            std::env::temp_dir().join("topkima_bench_json_with_test.json");
+        write_json_with(
+            path.to_str().unwrap(),
+            "unit",
+            &[("dispatch", Json::Str("avx2".to_string()))],
+            &[r],
+        )
+        .unwrap();
+        let doc =
+            Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("bench").as_str(), Some("unit"));
+        assert_eq!(doc.get("dispatch").as_str(), Some("avx2"));
+        assert_eq!(doc.get("results").at(0).get("name").as_str(), Some("case"));
     }
 
     #[test]

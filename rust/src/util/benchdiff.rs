@@ -89,6 +89,24 @@ impl BenchDiff {
         out
     }
 
+    /// Error text when the baseline carries metrics the fresh run lost
+    /// (`None` when fresh covers everything). A vanished case is how a
+    /// perf gate rots — the regression simply stops being measured — so
+    /// `bench-diff` treats it as a hard failure, not a footnote.
+    pub fn missing_metrics(&self) -> Option<String> {
+        if self.only_base.is_empty() {
+            None
+        } else {
+            Some(format!(
+                "{} baseline metric(s) missing from the fresh run \
+                 (removed or renamed case — update the baseline \
+                 deliberately): {}",
+                self.only_base.len(),
+                self.only_base.join(", ")
+            ))
+        }
+    }
+
     /// Markdown before/after table (EXPERIMENTS.md §Perf). Headers are
     /// unit-neutral: hotpath metrics are ns/iter, sweep metrics mix
     /// ns and pJ (the unit is implied by each metric's name).
@@ -139,6 +157,29 @@ pub fn version_note(base: &Json, fresh: &Json) -> Option<String> {
         Some(format!(
             "comparing across builds: baseline is {b}, fresh is {f} — \
              deltas may reflect the build, not the change"
+        ))
+    }
+}
+
+/// Warning text when two bench docs were produced under different SIMD
+/// dispatch decisions (`None` when they match). The hot-path bench
+/// stamps `dispatch` (`avx2` / `scalar` / `forced-off`, see
+/// `util::simd`); a missing field reads as "unstamped". Cross-dispatch
+/// deltas measure the ISA path, not the change under test — which is
+/// exactly what the EXPERIMENTS.md scalar-vs-SIMD table wants, so this
+/// warns instead of failing.
+pub fn dispatch_note(base: &Json, fresh: &Json) -> Option<String> {
+    let stamp = |doc: &Json| {
+        doc.get("dispatch").as_str().unwrap_or("unstamped").to_string()
+    };
+    let (b, f) = (stamp(base), stamp(fresh));
+    if b == f {
+        None
+    } else {
+        Some(format!(
+            "comparing across SIMD dispatch modes: baseline is {b}, \
+             fresh is {f} — deltas may reflect the ISA path, not the \
+             change"
         ))
     }
 }
@@ -365,6 +406,38 @@ mod tests {
             version_note(&unstamped, &v1).expect("unversioned warns");
         assert!(note.contains("unversioned"), "{note}");
         assert_eq!(version_note(&unstamped, &Json::parse("{}").unwrap()), None);
+    }
+
+    #[test]
+    fn dispatch_note_warns_only_across_modes() {
+        let avx = Json::parse(r#"{"dispatch":"avx2"}"#).unwrap();
+        let avx2 = Json::parse(r#"{"dispatch":"avx2"}"#).unwrap();
+        let off = Json::parse(r#"{"dispatch":"forced-off"}"#).unwrap();
+        let unstamped = Json::parse("{}").unwrap();
+        assert_eq!(dispatch_note(&avx, &avx2), None);
+        let note = dispatch_note(&off, &avx).expect("cross-mode warns");
+        assert!(note.contains("forced-off"), "{note}");
+        assert!(note.contains("avx2"), "{note}");
+        // a pre-stamping baseline vs a stamped fresh file warns too
+        let note =
+            dispatch_note(&unstamped, &avx).expect("unstamped warns");
+        assert!(note.contains("unstamped"), "{note}");
+        assert_eq!(
+            dispatch_note(&unstamped, &Json::parse("{}").unwrap()),
+            None
+        );
+    }
+
+    #[test]
+    fn missing_baseline_metrics_are_a_hard_failure() {
+        let base = perf_doc(&[("a", 100.0), ("gone", 5.0)]);
+        let fresh = perf_doc(&[("a", 100.0), ("new", 9.0)]);
+        let d = diff(&base, &fresh).unwrap();
+        let msg = d.missing_metrics().expect("lost metric must fail");
+        assert!(msg.contains("gone"), "{msg}");
+        // new-only cases are fine; full coverage is clean
+        let d = diff(&fresh, &fresh).unwrap();
+        assert_eq!(d.missing_metrics(), None);
     }
 
     #[test]

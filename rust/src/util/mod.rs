@@ -7,4 +7,5 @@ pub mod benchdiff;
 pub mod check;
 pub mod json;
 pub mod rng;
+pub mod simd;
 pub mod stats;

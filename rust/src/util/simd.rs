@@ -1,0 +1,596 @@
+//! Runtime-dispatched SIMD kernels for the simulator hot loops
+//! (DESIGN.md §13, EXPERIMENTS.md §Perf).
+//!
+//! One dispatch decision per process: AVX2 when the CPU reports it
+//! (`is_x86_feature_detected!`), a portable unrolled-scalar fallback
+//! everywhere else, and a `TOPKIMA_SIMD=off` env override so
+//! scalar-vs-SIMD is always A/B-able on the same machine. The decision
+//! is exported as [`dispatch_key`] (`"avx2"` / `"scalar"` /
+//! `"forced-off"`) and stamped into every `BENCH_hotpath.json` so
+//! `bench-diff` never silently compares numbers across ISAs.
+//!
+//! **Parity contract.** Every kernel is bit-identical to its scalar
+//! form for the domains the simulator feeds it:
+//!
+//! * integer kernels ([`dot_i32`], [`mask_le_u32`]) use wrapping
+//!   arithmetic, which is associative and commutative mod 2^32 — any
+//!   lane arrangement yields the same bits;
+//! * f64 kernels only vectorize per-element IEEE operations (mul, div,
+//!   sub, add of exact values, `ceil`, clamp) and order-independent
+//!   reductions (`max` over NaN-free data). Reordered f64 *sums* are
+//!   never vectorized — the softmax exp-sum stays scalar;
+//! * the sign of a zero result from [`max_f64`] is unspecified when
+//!   both `+0.0` and `-0.0` are present (true of the scalar `f64::max`
+//!   fold too); every call site only subtracts or compares the max, so
+//!   the ambiguity cannot reach an output.
+//!
+//! Each kernel has a `*_with(Dispatch, ..)` variant so the property
+//! tests (`rust/tests/simd_parity.rs`) can force both paths regardless
+//! of the host CPU, and the `scratch_parity` / `sweep_determinism` /
+//! fleet-replay gates run under both `TOPKIMA_SIMD` modes in ci.sh.
+//!
+//! **Adding a new ISA path** (e.g. NEON): add a `Dispatch` variant,
+//! detect it in `decide()`, give each kernel a `#[target_feature]`
+//! implementation behind `#[cfg(target_arch = ..)]`, and carry a
+//! `// SAFETY:` comment naming the detection guard — the `simd-safety`
+//! checker in `topkima lint` rejects `target_feature` functions
+//! without one. The parity suite picks the new variant up for free via
+//! `Dispatch::available()`.
+
+use std::sync::OnceLock;
+
+/// Sentinel for "no crossing within the ramp" in the packed crossing
+/// buffers: `u32::MAX`, which no real ramp cycle can reach (ramps have
+/// at most 2^31 steps). Re-exported as `ima::NEVER`.
+pub const NEVER: u32 = u32::MAX;
+
+/// Which kernel implementation runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dispatch {
+    /// 256-bit AVX2 paths (x86_64 with runtime detection).
+    Avx2,
+    /// Portable unrolled-scalar fallback (also the `TOPKIMA_SIMD=off`
+    /// path).
+    Scalar,
+}
+
+impl Dispatch {
+    /// Every dispatch the host CPU can actually execute — what the
+    /// parity tests iterate over.
+    pub fn available() -> Vec<Dispatch> {
+        let mut v = vec![Dispatch::Scalar];
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::is_x86_feature_detected!("avx2") {
+                v.push(Dispatch::Avx2);
+            }
+        }
+        v
+    }
+}
+
+static ACTIVE: OnceLock<(Dispatch, &'static str)> = OnceLock::new();
+
+/// `TOPKIMA_SIMD` values that force the scalar path. Pure so the
+/// parsing is unit-testable without mutating process env.
+pub fn forced_off(value: Option<&str>) -> bool {
+    matches!(value.map(str::trim), Some("off" | "OFF" | "0"))
+}
+
+fn decide() -> (Dispatch, &'static str) {
+    if forced_off(std::env::var("TOPKIMA_SIMD").ok().as_deref()) {
+        return (Dispatch::Scalar, "forced-off");
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::is_x86_feature_detected!("avx2") {
+            return (Dispatch::Avx2, "avx2");
+        }
+    }
+    (Dispatch::Scalar, "scalar")
+}
+
+/// The process-wide dispatch decision (cached on first use).
+pub fn active() -> Dispatch {
+    ACTIVE.get_or_init(decide).0
+}
+
+/// The decision as a stable string — `"avx2"`, `"scalar"`, or
+/// `"forced-off"` — recorded in `BENCH_hotpath.json` so bench
+/// comparisons across ISAs are loud, never silent.
+pub fn dispatch_key() -> &'static str {
+    ACTIVE.get_or_init(decide).1
+}
+
+// ---------------------------------------------------------------- dot
+
+/// Wrapping i32 dot product of two equal-length slices (extra elements
+/// of the longer slice are ignored). The crossbar MAC kernel: wrapping
+/// semantics make the sum lane-order independent, and the simulator's
+/// |w·x| ≤ 105 / bounded-depth contract keeps real MACs far from the
+/// wrap point anyway.
+pub fn dot_i32(w: &[i32], x: &[i32]) -> i32 {
+    dot_i32_with(active(), w, x)
+}
+
+/// [`dot_i32`] with an explicit dispatch (parity testing).
+pub fn dot_i32_with(d: Dispatch, w: &[i32], x: &[i32]) -> i32 {
+    match d {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Dispatch::Avx2 exists only after decide() (or the
+        // caller, via Dispatch::available()) saw
+        // is_x86_feature_detected!("avx2") report true.
+        Dispatch::Avx2 => unsafe { dot_i32_avx2(w, x) },
+        #[cfg(not(target_arch = "x86_64"))]
+        Dispatch::Avx2 => dot_i32_scalar(w, x),
+        Dispatch::Scalar => dot_i32_scalar(w, x),
+    }
+}
+
+fn dot_i32_scalar(w: &[i32], x: &[i32]) -> i32 {
+    // Four independent accumulators for ILP; wrapping adds are
+    // associative/commutative mod 2^32, so the lane split cannot
+    // change the result.
+    let mut acc = [0i32; 4];
+    let mut wc = w.chunks_exact(4);
+    let mut xc = x.chunks_exact(4);
+    for (w4, x4) in (&mut wc).zip(&mut xc) {
+        for ((a, &wv), &xv) in acc.iter_mut().zip(w4).zip(x4) {
+            *a = a.wrapping_add(wv.wrapping_mul(xv));
+        }
+    }
+    let mut sum = acc.iter().fold(0i32, |s, &v| s.wrapping_add(v));
+    for (&wv, &xv) in wc.remainder().iter().zip(xc.remainder()) {
+        sum = sum.wrapping_add(wv.wrapping_mul(xv));
+    }
+    sum
+}
+
+// SAFETY: callers guarantee AVX2 support — the only route here is the
+// `Dispatch::Avx2` arm above, and `Dispatch::Avx2` is only handed out
+// after `is_x86_feature_detected!("avx2")` reported true.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_i32_avx2(w: &[i32], x: &[i32]) -> i32 {
+    use std::arch::x86_64::*;
+    let n = w.len().min(x.len());
+    let mut acc = _mm256_setzero_si256();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        // SAFETY: i + 8 <= n bounds both unaligned 8-lane loads.
+        let wv = _mm256_loadu_si256(w.as_ptr().add(i).cast());
+        let xv = _mm256_loadu_si256(x.as_ptr().add(i).cast());
+        acc = _mm256_add_epi32(acc, _mm256_mullo_epi32(wv, xv));
+        i += 8;
+    }
+    let mut lanes = [0i32; 8];
+    _mm256_storeu_si256(lanes.as_mut_ptr().cast(), acc);
+    let mut sum = lanes.iter().fold(0i32, |s, &v| s.wrapping_add(v));
+    for (&wv, &xv) in w[i..n].iter().zip(&x[i..n]) {
+        sum = sum.wrapping_add(wv.wrapping_mul(xv));
+    }
+    sum
+}
+
+// --------------------------------------------------------------- mask
+
+/// 8-lane unsigned threshold mask: bit `i` is set iff
+/// `chunk[i] <= thr`. The arbiter prefilter: one compare against the
+/// current k-th-worst crossing rejects whole chunks of non-candidate
+/// columns before the exact insert runs.
+pub fn mask_le_u32(chunk: &[u32; 8], thr: u32) -> u8 {
+    mask_le_u32_with(active(), chunk, thr)
+}
+
+/// [`mask_le_u32`] with an explicit dispatch (parity testing).
+pub fn mask_le_u32_with(d: Dispatch, chunk: &[u32; 8], thr: u32) -> u8 {
+    match d {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Dispatch::Avx2 implies a positive
+        // is_x86_feature_detected!("avx2") check (see decide()).
+        Dispatch::Avx2 => unsafe { mask_le_u32_avx2(chunk, thr) },
+        #[cfg(not(target_arch = "x86_64"))]
+        Dispatch::Avx2 => mask_le_u32_scalar(chunk, thr),
+        Dispatch::Scalar => mask_le_u32_scalar(chunk, thr),
+    }
+}
+
+fn mask_le_u32_scalar(chunk: &[u32; 8], thr: u32) -> u8 {
+    let mut m = 0u8;
+    for (bit, &v) in chunk.iter().enumerate() {
+        if v <= thr {
+            m |= 1 << bit;
+        }
+    }
+    m
+}
+
+// SAFETY: callers guarantee AVX2 support — reachable only through
+// `Dispatch::Avx2`, which requires is_x86_feature_detected!("avx2").
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn mask_le_u32_avx2(chunk: &[u32; 8], thr: u32) -> u8 {
+    use std::arch::x86_64::*;
+    // AVX2 only has *signed* i32 compares; xor-ing both sides with
+    // 0x8000_0000 maps unsigned order onto signed order exactly.
+    let bias = _mm256_set1_epi32(i32::MIN);
+    // SAFETY: &[u32; 8] guarantees exactly 8 readable lanes.
+    let v = _mm256_xor_si256(_mm256_loadu_si256(chunk.as_ptr().cast()), bias);
+    let t = _mm256_xor_si256(_mm256_set1_epi32(thr as i32), bias);
+    // v <= thr  ⟺  !(v > thr)
+    let gt = _mm256_movemask_ps(_mm256_castsi256_ps(_mm256_cmpgt_epi32(v, t)));
+    !(gt as u8)
+}
+
+// ---------------------------------------------------------------- max
+
+/// Maximum of a NaN-free f64 slice (`NEG_INFINITY` when empty). The
+/// softmax stabilizer. Order-independent for NaN-free data; the sign
+/// of a zero result is unspecified when both zeros are present — every
+/// caller only subtracts the result, where `±0.0` are interchangeable.
+pub fn max_f64(xs: &[f64]) -> f64 {
+    max_f64_with(active(), xs)
+}
+
+/// [`max_f64`] with an explicit dispatch (parity testing).
+pub fn max_f64_with(d: Dispatch, xs: &[f64]) -> f64 {
+    match d {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Dispatch::Avx2 implies a positive
+        // is_x86_feature_detected!("avx2") check (see decide()).
+        Dispatch::Avx2 => unsafe { max_f64_avx2(xs) },
+        #[cfg(not(target_arch = "x86_64"))]
+        Dispatch::Avx2 => max_f64_scalar(xs),
+        Dispatch::Scalar => max_f64_scalar(xs),
+    }
+}
+
+fn max_f64_scalar(xs: &[f64]) -> f64 {
+    xs.iter().fold(f64::NEG_INFINITY, |m, &v| m.max(v))
+}
+
+// SAFETY: callers guarantee AVX2 support — reachable only through
+// `Dispatch::Avx2`, which requires is_x86_feature_detected!("avx2").
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn max_f64_avx2(xs: &[f64]) -> f64 {
+    use std::arch::x86_64::*;
+    let mut acc = _mm256_set1_pd(f64::NEG_INFINITY);
+    let mut i = 0usize;
+    while i + 4 <= xs.len() {
+        // SAFETY: i + 4 <= len bounds the unaligned 4-lane load.
+        acc = _mm256_max_pd(acc, _mm256_loadu_pd(xs.as_ptr().add(i)));
+        i += 4;
+    }
+    let mut lanes = [f64::NEG_INFINITY; 4];
+    _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+    let mut m = lanes.iter().fold(f64::NEG_INFINITY, |m, &v| m.max(v));
+    for &v in &xs[i..] {
+        m = m.max(v);
+    }
+    m
+}
+
+// -------------------------------------------------------------- scale
+
+/// Element-wise `xs[i] /= denom` — the softmax normalize step.
+/// Division is a per-element IEEE operation, so the packed form is
+/// bit-identical to the scalar loop.
+pub fn div_assign_f64(xs: &mut [f64], denom: f64) {
+    div_assign_f64_with(active(), xs, denom)
+}
+
+/// [`div_assign_f64`] with an explicit dispatch (parity testing).
+pub fn div_assign_f64_with(d: Dispatch, xs: &mut [f64], denom: f64) {
+    match d {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Dispatch::Avx2 implies a positive
+        // is_x86_feature_detected!("avx2") check (see decide()).
+        Dispatch::Avx2 => unsafe { div_assign_f64_avx2(xs, denom) },
+        #[cfg(not(target_arch = "x86_64"))]
+        Dispatch::Avx2 => div_assign_f64_scalar(xs, denom),
+        Dispatch::Scalar => div_assign_f64_scalar(xs, denom),
+    }
+}
+
+fn div_assign_f64_scalar(xs: &mut [f64], denom: f64) {
+    for v in xs.iter_mut() {
+        *v /= denom;
+    }
+}
+
+// SAFETY: callers guarantee AVX2 support — reachable only through
+// `Dispatch::Avx2`, which requires is_x86_feature_detected!("avx2").
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn div_assign_f64_avx2(xs: &mut [f64], denom: f64) {
+    use std::arch::x86_64::*;
+    let d = _mm256_set1_pd(denom);
+    let mut i = 0usize;
+    while i + 4 <= xs.len() {
+        // SAFETY: i + 4 <= len bounds the unaligned load and store.
+        let p = xs.as_mut_ptr().add(i);
+        _mm256_storeu_pd(p, _mm256_div_pd(_mm256_loadu_pd(p), d));
+        i += 4;
+    }
+    for v in &mut xs[i..] {
+        *v /= denom;
+    }
+}
+
+// ---------------------------------------------------- ideal crossings
+
+/// Parameters of the *ideal* (noise-free) MAC→crossing-cycle function
+/// — the element-wise composition of `BitlineModel::voltage`, the
+/// volt→MAC-unit referral, and `Ramp::crossing_cycle_fast`, with every
+/// noise term exactly zero. Kept as plain numbers so this util-layer
+/// kernel does not depend on the circuit types.
+#[derive(Clone, Copy, Debug)]
+pub struct CrossingParams {
+    /// Bitline discharge per MAC unit, V (`BitlineModel::dv_per_unit`).
+    pub dv_per_unit: f64,
+    /// Rail clip, V (`BitlineModel::v_precharge`).
+    pub v_precharge: f64,
+    /// ADC LSB in MAC units (`Ramp::lsb()`).
+    pub lsb: f64,
+    /// `quant::qmax(n_bits)` as f64.
+    pub qmax: f64,
+    /// Total ramp steps (`Ramp::steps()`).
+    pub steps: u32,
+    /// Ramp direction (`Ramp::decreasing`).
+    pub decreasing: bool,
+}
+
+/// One ideal crossing — mirrors the scalar converter chain operation
+/// for operation (including the `+ 0.0·lsb` of the zeroed noise term,
+/// an exact identity here since the clamped voltage is never `-0.0`):
+/// bit-identical to `crossing_cycle_fast(sample(mac)/dv + 0·lsb)`.
+pub fn ideal_crossing_scalar(p: &CrossingParams, mac: i64) -> u32 {
+    let v_volt =
+        (mac as f64 * p.dv_per_unit).clamp(-p.v_precharge, p.v_precharge);
+    let v = v_volt / p.dv_per_unit + 0.0 * p.lsb;
+    let x = v / p.lsb;
+    let t = if p.decreasing {
+        (p.qmax - x - 0.5).ceil()
+    } else {
+        (x - 0.5 + p.qmax + 1.0).ceil()
+    };
+    let t = t.max(0.0);
+    if t >= p.steps as f64 {
+        NEVER
+    } else {
+        t as u32
+    }
+}
+
+/// Whole-row ideal crossing computation: `out[c]` becomes column c's
+/// crossing cycle, [`NEVER`] when it never fires within the ramp.
+pub fn ideal_crossings(p: &CrossingParams, macs: &[i64], out: &mut Vec<u32>) {
+    ideal_crossings_with(active(), p, macs, out)
+}
+
+/// [`ideal_crossings`] with an explicit dispatch (parity testing).
+pub fn ideal_crossings_with(
+    d: Dispatch,
+    p: &CrossingParams,
+    macs: &[i64],
+    out: &mut Vec<u32>,
+) {
+    out.clear();
+    out.resize(macs.len(), NEVER);
+    match d {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Dispatch::Avx2 implies a positive
+        // is_x86_feature_detected!("avx2") check (see decide()).
+        Dispatch::Avx2 => unsafe { ideal_crossings_avx2(p, macs, out) },
+        _ => {
+            for (o, &m) in out.iter_mut().zip(macs) {
+                *o = ideal_crossing_scalar(p, m);
+            }
+        }
+    }
+}
+
+// SAFETY: callers guarantee AVX2 support — reachable only through
+// `Dispatch::Avx2`, which requires is_x86_feature_detected!("avx2").
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn ideal_crossings_avx2(
+    p: &CrossingParams,
+    macs: &[i64],
+    out: &mut [u32],
+) {
+    use std::arch::x86_64::*;
+    let dv = _mm256_set1_pd(p.dv_per_unit);
+    let lo = _mm256_set1_pd(-p.v_precharge);
+    let hi = _mm256_set1_pd(p.v_precharge);
+    let err = _mm256_set1_pd(0.0 * p.lsb);
+    let lsb = _mm256_set1_pd(p.lsb);
+    let half = _mm256_set1_pd(0.5);
+    let qm = _mm256_set1_pd(p.qmax);
+    let one = _mm256_set1_pd(1.0);
+    let zero = _mm256_setzero_pd();
+    let steps_f = _mm256_set1_pd(p.steps as f64);
+    let n = macs.len().min(out.len());
+    let mut vals = [0f64; 4];
+    let mut t_lanes = [0i32; 4];
+    let mut i = 0usize;
+    while i + 4 <= n {
+        // AVX2 has no packed i64→f64 convert; the four lane conversions
+        // stay scalar (`as f64`, the same rounding as the scalar path)
+        // and everything after them is packed.
+        for (slot, &m) in vals.iter_mut().zip(&macs[i..i + 4]) {
+            *slot = m as f64;
+        }
+        let raw = _mm256_mul_pd(_mm256_loadu_pd(vals.as_ptr()), dv);
+        // f64::clamp == max-then-min for NaN-free lanes
+        let volt = _mm256_min_pd(_mm256_max_pd(raw, lo), hi);
+        let v = _mm256_add_pd(_mm256_div_pd(volt, dv), err);
+        let x = _mm256_div_pd(v, lsb);
+        let t = if p.decreasing {
+            // (qm - x - 0.5).ceil(), same association order
+            _mm256_ceil_pd(_mm256_sub_pd(_mm256_sub_pd(qm, x), half))
+        } else {
+            // ((x - 0.5) + qm) + 1.0, then ceil — same association order
+            _mm256_ceil_pd(_mm256_add_pd(
+                _mm256_add_pd(_mm256_sub_pd(x, half), qm),
+                one,
+            ))
+        };
+        let t = _mm256_max_pd(t, zero);
+        // lanes with t >= steps never fire within the ramp
+        let never =
+            _mm256_movemask_pd(_mm256_cmp_pd::<_CMP_GE_OQ>(t, steps_f)) as u32;
+        // truncate-convert matches `t as u32`: kept lanes hold a whole
+        // non-negative value below 2^31
+        let ti = _mm256_cvttpd_epi32(t);
+        _mm_storeu_si128(t_lanes.as_mut_ptr().cast(), ti);
+        let kept = out[i..i + 4].iter_mut().zip(&t_lanes);
+        for (bit, (o, &tv)) in kept.enumerate() {
+            *o = if never & (1 << bit) != 0 { NEVER } else { tv as u32 };
+        }
+        i += 4;
+    }
+    for (o, &m) in out[i..].iter_mut().zip(&macs[i..]) {
+        *o = ideal_crossing_scalar(p, m);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn env_override_parsing() {
+        assert!(forced_off(Some("off")));
+        assert!(forced_off(Some(" off ")));
+        assert!(forced_off(Some("0")));
+        assert!(forced_off(Some("OFF")));
+        assert!(!forced_off(Some("on")));
+        assert!(!forced_off(Some("")));
+        assert!(!forced_off(None));
+    }
+
+    #[test]
+    fn dispatch_key_is_one_of_the_documented_values() {
+        assert!(["avx2", "scalar", "forced-off"].contains(&dispatch_key()));
+        // the cached decision and key agree
+        match active() {
+            Dispatch::Avx2 => assert_eq!(dispatch_key(), "avx2"),
+            Dispatch::Scalar => {
+                assert!(dispatch_key() == "scalar"
+                    || dispatch_key() == "forced-off");
+            }
+        }
+    }
+
+    #[test]
+    fn dot_matches_wide_oracle_across_dispatches() {
+        let mut rng = Rng::new(0x51D0);
+        for len in [0usize, 1, 3, 7, 8, 9, 63, 64, 65, 256] {
+            let w: Vec<i32> =
+                (0..len).map(|_| rng.range(-105, 105) as i32).collect();
+            let x: Vec<i32> =
+                (0..len).map(|_| rng.range(-15, 15) as i32).collect();
+            let oracle: i64 = w
+                .iter()
+                .zip(&x)
+                .map(|(&a, &b)| a as i64 * b as i64)
+                .sum();
+            for d in Dispatch::available() {
+                assert_eq!(
+                    dot_i32_with(d, &w, &x) as i64,
+                    oracle,
+                    "len {len} dispatch {d:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dot_wraps_identically_on_extreme_codes() {
+        // outside the simulator's bounded domain the contract is
+        // "wrapping", and every dispatch must wrap the same way
+        let w = vec![i32::MAX, i32::MIN, 7, -7, i32::MAX];
+        let x = vec![i32::MAX, 2, i32::MIN, i32::MIN, -1];
+        let want = dot_i32_with(Dispatch::Scalar, &w, &x);
+        for d in Dispatch::available() {
+            assert_eq!(dot_i32_with(d, &w, &x), want, "{d:?}");
+        }
+    }
+
+    #[test]
+    fn mask_le_handles_sign_bit_boundary() {
+        let chunk = [
+            0u32,
+            1,
+            0x7FFF_FFFF,
+            0x8000_0000,
+            0xFFFF_FFFE,
+            NEVER,
+            42,
+            0x8000_0001,
+        ];
+        for thr in [0u32, 1, 0x7FFF_FFFF, 0x8000_0000, NEVER - 1, NEVER] {
+            let want = mask_le_u32_with(Dispatch::Scalar, &chunk, thr);
+            for d in Dispatch::available() {
+                assert_eq!(
+                    mask_le_u32_with(d, &chunk, thr),
+                    want,
+                    "thr {thr:#x} dispatch {d:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn max_and_div_match_scalar() {
+        let mut rng = Rng::new(0xF64);
+        for len in [0usize, 1, 3, 4, 5, 31, 64, 257] {
+            let xs: Vec<f64> =
+                (0..len).map(|_| rng.range_f64(-1e6, 1e6)).collect();
+            let want_max = max_f64_with(Dispatch::Scalar, &xs);
+            for d in Dispatch::available() {
+                let got = max_f64_with(d, &xs);
+                assert!(
+                    got == want_max || (len == 0 && got == f64::NEG_INFINITY),
+                    "len {len} dispatch {d:?}: {got} vs {want_max}"
+                );
+                let mut a = xs.clone();
+                let mut b = xs.clone();
+                div_assign_f64_with(Dispatch::Scalar, &mut a, 3.7);
+                div_assign_f64_with(d, &mut b, 3.7);
+                assert_eq!(
+                    a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    b.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "div len {len} dispatch {d:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ideal_crossings_match_scalar_chain() {
+        let mut rng = Rng::new(0xC0DE);
+        let p = CrossingParams {
+            dv_per_unit: 0.5 / 8192.0,
+            v_precharge: 0.5,
+            lsb: 400.0 / 15.0,
+            qmax: 15.0,
+            steps: 32,
+            decreasing: true,
+        };
+        for len in [0usize, 1, 3, 4, 5, 7, 63, 65, 256] {
+            let macs: Vec<i64> =
+                (0..len).map(|_| rng.range(-20_000, 20_000)).collect();
+            let mut want = Vec::new();
+            let mut got = Vec::new();
+            ideal_crossings_with(Dispatch::Scalar, &p, &macs, &mut want);
+            for d in Dispatch::available() {
+                ideal_crossings_with(d, &p, &macs, &mut got);
+                assert_eq!(got, want, "len {len} dispatch {d:?}");
+            }
+        }
+    }
+}

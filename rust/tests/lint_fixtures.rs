@@ -97,6 +97,37 @@ fn unknown_field_catches_a_decoder_that_ignores_unknown_keys() {
 }
 
 #[test]
+fn simd_safety_catches_an_unguarded_target_feature_fn() {
+    // routed by extension, not path — a kernel added outside util/simd.rs
+    // is still covered
+    let set = single(
+        "rust/src/util/simd.rs",
+        "#[cfg(target_arch = \"x86_64\")]\n\
+         #[target_feature(enable = \"avx2\")]\n\
+         unsafe fn dot(a: &[i32]) -> i32 {\n    0\n}\n",
+    );
+    let report = run(&set);
+    assert_eq!(report.findings.len(), 1, "{:?}", report.findings);
+    assert_eq!(report.findings[0].checker, "simd-safety");
+    assert_eq!(report.findings[0].line, 2);
+    assert!(report.findings[0].message.contains("avx2"));
+}
+
+#[test]
+fn simd_safety_accepts_a_comment_naming_the_guard() {
+    let set = single(
+        "rust/src/util/simd.rs",
+        "// SAFETY: reachable only through Dispatch::Avx2, handed out\n\
+         // after is_x86_feature_detected!(\"avx2\") reported true.\n\
+         #[cfg(target_arch = \"x86_64\")]\n\
+         #[target_feature(enable = \"avx2\")]\n\
+         unsafe fn dot(a: &[i32]) -> i32 {\n    0\n}\n",
+    );
+    let report = run(&set);
+    assert!(report.is_clean(), "{:?}", report.findings);
+}
+
+#[test]
 fn clean_fixture_produces_no_findings() {
     let set = single(
         "rust/src/coordinator/shard.rs",

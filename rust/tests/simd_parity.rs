@@ -1,0 +1,335 @@
+//! Scalar-vs-SIMD bit parity of the vectorized hot paths (DESIGN.md
+//! §13). Every kernel in `util::simd` claims bit-identity to its scalar
+//! form; this suite checks the claim *through the call sites* — the
+//! batched crossbar MAC, the batched converter, the arbiter prefilter,
+//! and the sparse softmax scatter — on randomized shapes, including the
+//! awkward widths (1, 7, 63, 65, 256), k near d, and extreme codes.
+//!
+//! Kernels are also forced down every [`Dispatch`] the host can execute
+//! via the `*_with` variants, so the AVX2 path is exercised even when
+//! `TOPKIMA_SIMD=off` pinned the process-wide dispatch to scalar (ci.sh
+//! runs this suite under both modes).
+
+use topkima::crossbar::{Crossbar, Tech};
+use topkima::ima::{
+    arbitrate, arbitrate_into, BatchConversionScratch, ColumnNoise,
+    ConversionScratch, Grant, NoiseModel, TopkimaConverter, NEVER,
+};
+use topkima::softmax::DigitalSoftmax;
+use topkima::util::check::property;
+use topkima::util::rng::Rng;
+use topkima::util::simd::{
+    self, dot_i32_with, forced_off, ideal_crossings_with, mask_le_u32_with,
+    CrossingParams, Dispatch,
+};
+
+/// The column widths the suite sweeps: the degenerate width, both sides
+/// of the 8-lane boundary, both sides of a 64-wide tile, and the
+/// paper's full 256-column array.
+const WIDTHS: [usize; 5] = [1, 7, 63, 65, 256];
+
+fn converter(d: usize, fs: f64, noisy: bool, rng: &mut Rng) -> TopkimaConverter {
+    let mut conv = TopkimaConverter::ideal(d, fs);
+    if noisy {
+        conv.noise = ColumnNoise::new(NoiseModel::default(), d, rng);
+    }
+    conv
+}
+
+#[test]
+fn mac_rows_into_matches_per_row_mac_into() {
+    let mut flat = Vec::new();
+    property("mac_rows_into == per-row mac_into", 60, 0x7113D, |rng| {
+        let cols = WIDTHS[rng.below(WIDTHS.len())];
+        let depth = 1 + rng.below(64);
+        let n_rows = 1 + rng.below(6);
+        let kt: Vec<Vec<i32>> = (0..depth)
+            .map(|_| (0..cols).map(|_| rng.range(-7, 7) as i32).collect())
+            .collect();
+        let xbar = Crossbar::program(Tech::Sram, 256, 256, 64, &kt);
+        let q_rows: Vec<Vec<i32>> = (0..n_rows)
+            .map(|_| (0..depth).map(|_| rng.range(-15, 15) as i32).collect())
+            .collect();
+        xbar.mac_rows_into(&q_rows, &mut flat);
+        topkima::prop_assert!(
+            flat.len() == n_rows * cols,
+            "flat len {} for {n_rows} rows x {cols} cols", flat.len()
+        );
+        for (r, q) in q_rows.iter().enumerate() {
+            let want = xbar.mac_all(q);
+            topkima::prop_assert!(
+                flat[r * cols..(r + 1) * cols] == want[..],
+                "row {r} of {n_rows} diverged at {cols} cols depth {depth}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn batched_topk_conversion_matches_row_at_a_time() {
+    let mut batch = BatchConversionScratch::new();
+    let mut row = ConversionScratch::new();
+    property("convert_topk_rows_into == row loop", 80, 0xBA7C, |rng| {
+        let d = WIDTHS[rng.below(WIDTHS.len())];
+        // k near d half the time (the full-conversion-shaped regime),
+        // the paper's small-k regime otherwise
+        let k = if rng.chance(0.5) {
+            d.saturating_sub(rng.below(3)).max(1)
+        } else {
+            1 + rng.below(8.min(d))
+        };
+        let n_rows = 1 + rng.below(5);
+        let noisy = rng.chance(0.5);
+        let macs: Vec<i64> =
+            (0..n_rows * d).map(|_| rng.range(-4000, 4000)).collect();
+        let fs = macs.iter().map(|m| m.abs()).max().unwrap_or(1).max(1) as f64;
+        let conv = converter(d, fs, noisy, rng);
+
+        let seed = rng.next_u64();
+        let mut rng_batch = Rng::new(seed);
+        let mut rng_rows = Rng::new(seed);
+        conv.convert_topk_rows_into(&macs, n_rows, k, &mut rng_batch, &mut batch);
+        topkima::prop_assert!(
+            batch.ranges.len() == n_rows && batch.stats.len() == n_rows,
+            "batch shape {}x{} for {n_rows} rows", batch.ranges.len(),
+            batch.stats.len()
+        );
+        for r in 0..n_rows {
+            let stats = conv.convert_topk_into(
+                &macs[r * d..(r + 1) * d], k, &mut rng_rows, &mut row,
+            );
+            topkima::prop_assert!(
+                batch.row_outputs(r) == &row.outputs[..],
+                "row {r} outputs diverged (d {d} k {k} noisy {noisy})"
+            );
+            topkima::prop_assert!(
+                batch.stats[r] == stats,
+                "row {r} stats diverged: {:?} vs {:?}", batch.stats[r], stats
+            );
+        }
+        // the batched path must consume the RNG stream exactly like the
+        // row loop — replay determinism depends on it
+        topkima::prop_assert!(
+            rng_batch.next_u64() == rng_rows.next_u64(),
+            "RNG stream diverged after batch (noisy {noisy})"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn batched_full_conversion_matches_row_at_a_time() {
+    let mut batch = BatchConversionScratch::new();
+    let mut row = ConversionScratch::new();
+    property("convert_full_rows_into == row loop", 60, 0xF0FF, |rng| {
+        let d = WIDTHS[rng.below(WIDTHS.len())];
+        let n_rows = 1 + rng.below(5);
+        let noisy = rng.chance(0.5);
+        let macs: Vec<i64> =
+            (0..n_rows * d).map(|_| rng.range(-4000, 4000)).collect();
+        let fs = macs.iter().map(|m| m.abs()).max().unwrap_or(1).max(1) as f64;
+        let conv = converter(d, fs, noisy, rng);
+
+        let seed = rng.next_u64();
+        let mut rng_batch = Rng::new(seed);
+        let mut rng_rows = Rng::new(seed);
+        conv.convert_full_rows_into(&macs, n_rows, &mut rng_batch, &mut batch);
+        for r in 0..n_rows {
+            let stats = conv.convert_full_into(
+                &macs[r * d..(r + 1) * d], &mut rng_rows, &mut row,
+            );
+            topkima::prop_assert!(
+                batch.row_outputs(r) == &row.outputs[..]
+                    && batch.stats[r] == stats,
+                "row {r} diverged (d {d} noisy {noisy})"
+            );
+        }
+        topkima::prop_assert!(
+            rng_batch.next_u64() == rng_rows.next_u64(),
+            "RNG stream diverged after full batch (noisy {noisy})"
+        );
+        Ok(())
+    });
+}
+
+/// Independent reference for the arbiter: sort every fired (cycle,
+/// column) pair, take k — the tie rule (cycle, then address) is the
+/// sort key itself.
+fn arbiter_oracle(crossings: &[u32], k: usize, steps: u32)
+    -> (Vec<Grant>, u32)
+{
+    let mut fired: Vec<Grant> = crossings
+        .iter()
+        .enumerate()
+        .filter(|&(_, &t)| t != NEVER)
+        .map(|(c, &t)| Grant { column: c, cycle: t })
+        .collect();
+    fired.sort_by_key(|g| (g.cycle, g.column));
+    fired.truncate(k);
+    let stop = if fired.len() == k && k > 0 {
+        fired[k - 1].cycle
+    } else {
+        steps.saturating_sub(1)
+    };
+    (fired, stop)
+}
+
+#[test]
+fn arbitrate_into_matches_sort_oracle_and_option_wrapper() {
+    let mut grants = Vec::new();
+    property("arbitrate_into == sort oracle", 120, 0xA5B1, |rng| {
+        let cols = WIDTHS[rng.below(WIDTHS.len())];
+        let steps = 32u32;
+        // k = 0, small k (SIMD prefilter branch), and k near d (the
+        // collect+sort branch) all in one sweep
+        let k = rng.below(cols + 2);
+        let never_rate = rng.range_f64(0.0, 1.0);
+        let crossings: Vec<u32> = (0..cols)
+            .map(|_| {
+                if rng.chance(never_rate) {
+                    NEVER
+                } else {
+                    rng.below(steps as usize) as u32
+                }
+            })
+            .collect();
+        let stats = arbitrate_into(&crossings, k, steps, &mut grants);
+        let (want, want_stop) = arbiter_oracle(&crossings, k, steps);
+        topkima::prop_assert!(
+            grants == want,
+            "grants diverged: cols {cols} k {k} ({:?} vs {:?})", grants, want
+        );
+        topkima::prop_assert!(
+            stats.stop_cycle == want_stop && stats.arb_events == want.len(),
+            "stats diverged: cols {cols} k {k}"
+        );
+        let opt: Vec<Option<u32>> = crossings
+            .iter()
+            .map(|&t| (t != NEVER).then_some(t))
+            .collect();
+        let outcome = arbitrate(&opt, k, steps);
+        topkima::prop_assert!(
+            outcome.grants == want && outcome.stop_cycle == want_stop,
+            "Option wrapper diverged: cols {cols} k {k}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn compute_sparse_into_matches_scalar_reference() {
+    let core = DigitalSoftmax::default();
+    let mut dense = Vec::new();
+    property("compute_sparse_into == scalar reference", 80, 0x50F7, |rng| {
+        let d = WIDTHS[rng.below(WIDTHS.len())];
+        // straddle SPARSE_SIMD_MIN (16): tiny, near-16, and k ≈ d
+        let k = (1 + rng.below(d.max(18))).min(d);
+        let mut cols: Vec<usize> = (0..d).collect();
+        // deterministic Fisher-Yates prefix for distinct columns
+        for i in 0..k {
+            let j = i + rng.below(d - i);
+            cols.swap(i, j);
+        }
+        let selection: Vec<(usize, f64)> = cols[..k]
+            .iter()
+            .map(|&c| (c, rng.range(-16, 16) as f64))
+            .collect();
+        core.compute_sparse_into(&selection, d, &mut dense);
+
+        // reference: scalar max fold, sequential exp-sum, scatter
+        let m = selection
+            .iter()
+            .map(|&(_, v)| v)
+            .fold(f64::NEG_INFINITY, f64::max);
+        let sum: f64 = selection.iter().map(|&(_, v)| (v - m).exp()).sum();
+        let mut want = vec![0.0f64; d];
+        for &(i, v) in &selection {
+            want[i] = (v - m).exp() / sum;
+        }
+        topkima::prop_assert!(
+            dense.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+                == want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "sparse softmax diverged at d {d} k {k}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn forced_kernels_agree_on_extreme_codes_across_widths() {
+    let mut rng = Rng::new(0xED6E);
+    let p = CrossingParams {
+        dv_per_unit: 0.5 / 8192.0,
+        v_precharge: 0.5,
+        lsb: 400.0 / 15.0,
+        qmax: 15.0,
+        steps: 32,
+        decreasing: true,
+    };
+    let mut out_a = Vec::new();
+    let mut out_b = Vec::new();
+    for &len in &WIDTHS {
+        // i32 extremes sprinkled over the in-contract range: the
+        // wrapping contract must hold on every dispatch
+        let spice = [i32::MIN, i32::MAX, i32::MIN + 1, 0];
+        let w: Vec<i32> = (0..len)
+            .map(|i| {
+                if i % 9 == 0 {
+                    spice[i / 9 % spice.len()]
+                } else {
+                    rng.range(-105, 105) as i32
+                }
+            })
+            .collect();
+        let x: Vec<i32> = (0..len)
+            .map(|i| {
+                if i % 7 == 0 {
+                    spice[i / 7 % spice.len()]
+                } else {
+                    rng.range(-15, 15) as i32
+                }
+            })
+            .collect();
+        let want = dot_i32_with(Dispatch::Scalar, &w, &x);
+        // saturating MACs at the rail: the clamp path of the crossing
+        // kernel, plus ordinary magnitudes
+        let macs: Vec<i64> = (0..len)
+            .map(|i| match i % 5 {
+                0 => i64::from(i32::MAX),
+                1 => i64::from(i32::MIN),
+                _ => rng.range(-20_000, 20_000),
+            })
+            .collect();
+        ideal_crossings_with(Dispatch::Scalar, &p, &macs, &mut out_a);
+        for d in Dispatch::available() {
+            assert_eq!(dot_i32_with(d, &w, &x), want, "dot len {len} {d:?}");
+            ideal_crossings_with(d, &p, &macs, &mut out_b);
+            assert_eq!(out_b, out_a, "crossings len {len} {d:?}");
+        }
+    }
+    // the u32 sign-bit boundary through the prefilter mask
+    let chunk = [0, 1, 0x7FFF_FFFF, 0x8000_0000, NEVER - 1, NEVER, 31, 32];
+    for thr in [0u32, 31, 0x7FFF_FFFF, 0x8000_0000, NEVER] {
+        let want = mask_le_u32_with(Dispatch::Scalar, &chunk, thr);
+        for d in Dispatch::available() {
+            assert_eq!(mask_le_u32_with(d, &chunk, thr), want, "thr {thr:#x}");
+        }
+    }
+}
+
+#[test]
+fn dispatch_controls_are_coherent() {
+    // the env contract ci.sh relies on
+    assert!(forced_off(Some("off")) && forced_off(Some("0")));
+    assert!(!forced_off(Some("on")) && !forced_off(None));
+    // Scalar is always executable; the cached process-wide decision is
+    // one of the advertised keys and consistent with the env
+    assert!(Dispatch::available().contains(&Dispatch::Scalar));
+    let key = simd::dispatch_key();
+    assert!(["avx2", "scalar", "forced-off"].contains(&key));
+    if forced_off(std::env::var("TOPKIMA_SIMD").ok().as_deref()) {
+        assert_eq!(key, "forced-off");
+        assert_eq!(simd::active(), Dispatch::Scalar);
+    }
+}
