@@ -10,7 +10,12 @@
 //!    softmax (`compute_sparse_into`) — the SIMD compare/threshold
 //!    kernels;
 //! 4. batcher push/pop — the coordinator's request path;
-//! 5. the end-to-end macro row (MAC + conversion + softmax).
+//! 5. the end-to-end macro row (MAC + conversion + softmax);
+//! 6. the attention score stage: monolithic `run_macro` vs the
+//!    streaming chunked engine on identical work at 1k/4k columns
+//!    (their ratio is pure streaming overhead), plus a chunked-only
+//!    64k long-context case — the regime where a dense score buffer
+//!    would be the thing being benchmarked.
 //!
 //! The JSON records the SIMD dispatch decision (`avx2` / `scalar` /
 //! `forced-off`, see `util::simd`) so `bench-diff` never silently
@@ -31,7 +36,7 @@ use topkima::ima::{
 };
 use topkima::softmax::DigitalSoftmax;
 use topkima::util::bench::{
-    bench_fn, black_box, header, write_json_with, BenchResult,
+    bench_fn, black_box, header, row, write_json_with, BenchResult,
 };
 use topkima::util::json::Json;
 use topkima::util::rng::Rng;
@@ -167,6 +172,84 @@ fn main() {
     let mut mrng = Rng::new(3);
     record(bench_fn("topkima-SM 8 rows x 256 cols", || {
         black_box(topkima.run(black_box(&qs), &mut mrng));
+    }));
+
+    header("perf: attention score stage, chunked vs monolithic (k=8)");
+    // Same keys, same queries, same RNG seed on both paths — the two
+    // cases time bit-identical work (tests/chunked_parity.rs proves
+    // that), so their ratio is pure streaming overhead.
+    use topkima::attention::{ChunkedAttention, DenseKeys, GeneratedKeys};
+    use topkima::softmax::macros::{run_macro, TopkimaSelect};
+    let depth = 64;
+    for seq in [1024usize, 4096] {
+        let keys = GeneratedKeys::new(0xA77E, seq, depth);
+        let codes: Vec<Vec<i32>> = (0..depth)
+            .map(|r| (0..seq).map(|c| keys.code(r, c)).collect())
+            .collect();
+        let q_att: Vec<Vec<i32>> = (0..2)
+            .map(|_| {
+                (0..depth).map(|_| rng.range(-15, 16) as i32).collect()
+            })
+            .collect();
+        let parts = MacroParts::new(Crossbar::program(
+            Tech::Sram,
+            256,
+            seq,
+            64,
+            &codes,
+        ));
+        let mut arng = Rng::new(11);
+        record(bench_fn(&format!("monolithic run_macro seq={seq}"), || {
+            black_box(run_macro(
+                &parts,
+                &TopkimaSelect { k: 8 },
+                black_box(&q_att),
+                &mut arng,
+            ));
+        }));
+        let engine = ChunkedAttention::with_defaults(
+            DenseKeys::new(codes).expect("generated codes are in range"),
+            256,
+        )
+        .expect("bench dims fit one tile");
+        let mut brng = Rng::new(11);
+        record(bench_fn(&format!("chunked seq={seq} chunk=256"), || {
+            let run = engine
+                .run_streaming(
+                    &TopkimaSelect { k: 8 },
+                    black_box(&q_att),
+                    &mut brng,
+                )
+                .expect("bench dims pre-validated");
+            black_box(run.cost.alpha);
+        }));
+    }
+
+    header("perf: long-context chunked attention (64k cols)");
+    // Monolithic has no 64k entry on purpose: a dense 64k-column score
+    // buffer is exactly what the streaming path exists to avoid.
+    let long = ChunkedAttention::with_defaults(
+        GeneratedKeys::new(0xA77E, 65_536, depth),
+        256,
+    )
+    .expect("bench dims fit one tile");
+    let q_long: Vec<Vec<i32>> = vec![(0..depth)
+        .map(|_| rng.range(-15, 16) as i32)
+        .collect()];
+    let mut lrng = Rng::new(12);
+    let probe = long
+        .run_streaming(&TopkimaSelect { k: 8 }, &q_long, &mut lrng)
+        .expect("bench dims pre-validated");
+    row("peak scratch bytes @64k", probe.peak_scratch_bytes);
+    record(bench_fn("chunked topkima 1x64k chunk=256", || {
+        let run = long
+            .run_streaming(
+                &TopkimaSelect { k: 8 },
+                black_box(&q_long),
+                &mut lrng,
+            )
+            .expect("bench dims pre-validated");
+        black_box(run.cost.alpha);
     }));
 
     write_json_with(

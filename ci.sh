@@ -15,10 +15,16 @@
 #   6. smoke: `topkima serve-fleet` (sharded fleet under synthetic load;
 #      BENCH_fleet.json emitted, fails on any dropped request)
 #   3c. SIMD parity gate (HARD): rerun the parity suites
-#      (scratch_parity, sweep_determinism, simd_parity, macro_parity)
-#      with TOPKIMA_SIMD=off — the default-mode run is covered by
-#      tier-1, so together both dispatch decisions are proven
-#      bit-identical
+#      (scratch_parity, sweep_determinism, simd_parity, macro_parity,
+#      chunked_parity) with TOPKIMA_SIMD=off — the default-mode run is
+#      covered by tier-1, so together both dispatch decisions are
+#      proven bit-identical
+#   5b. long-context tier: `topkima sweep-hw --chunk-cols 256` at
+#      4k and 64k key columns → BENCH_sweep_long.json, then the HARD
+#      `topkima longctx-gate`: peak scratch at 64k must stay under 8x
+#      the 4k figure (16x the sequence), or the streaming path has
+#      regressed to O(seq) state. The same report renders the
+#      EXPERIMENTS.md §Long-context table (LONGCTX_TABLE markers)
 #   7. smoke: export a tiny eval trace and replay it through BOTH
 #      fleet↔shard transports in deterministic mode — twice over the
 #      local transport (stealing on), once over the process transport
@@ -38,9 +44,11 @@
 #      BENCH_sweep_smoke.json, and BENCH_fleet_replay.json (the
 #      deterministic replay — reproducible batching metrics, not
 #      wall-clock tails) against baselines/ and FAIL on >25%
-#      regressions (missing baselines are seeded from this run —
-#      commit them to arm the gate). A metric present in the baseline
-#      but missing from the fresh run is a hard failure
+#      regressions. Every file logs a loud GATING or SEEDING line: a
+#      missing baseline is auto-seeded from this run's numbers (commit
+#      it to arm the gate — a SEEDING line means that file was NOT
+#      gated). A metric present in the baseline but missing from the
+#      fresh run is a hard failure
 #  10. refresh the EXPERIMENTS.md §Perf table between the
 #      PERF_TABLE_BEGIN/END markers, and the scalar-vs-SIMD table
 #      between the SIMD_TABLE_BEGIN/END markers, from the fresh numbers
@@ -107,7 +115,8 @@ note "simd parity gate: parity suites under TOPKIMA_SIMD=off (hard)"
 # results — the acceptance harness of the vectorization pass.
 if ! TOPKIMA_SIMD=off cargo test -q \
         --test scratch_parity --test sweep_determinism \
-        --test simd_parity --test macro_parity; then
+        --test simd_parity --test macro_parity \
+        --test chunked_parity; then
     echo "FAIL: parity suites diverge under TOPKIMA_SIMD=off"
     exit 1
 fi
@@ -142,6 +151,31 @@ if cargo run --release --quiet -- sweep-hw \
     echo "ok: BENCH_sweep_smoke.json written"
 else
     echo "FAIL: topkima sweep-hw smoke"
+    status=1
+fi
+
+note "long-context tier: sweep-hw --chunk-cols 256 at 4k and 64k"
+# The streaming attention engine never materializes the score row:
+# peak_scratch_bytes per point is deterministic element-count
+# accounting, so the growth gate below is exact, not a wall-clock band.
+if cargo run --release --quiet -- sweep-hw \
+        --threads 2 --ks 8 --seq-lens 4096,65536 \
+        --kinds topkima --noise-points ideal \
+        --q-rows 1 --chunk-cols 256 --out BENCH_sweep_long.json \
+    && [ -s BENCH_sweep_long.json ]; then
+    echo "ok: BENCH_sweep_long.json written (64k point completed)"
+else
+    echo "FAIL: long-context sweep (64k chunked point)"
+    status=1
+fi
+
+note "long-context gate: peak scratch 64k < 8x 4k (hard)"
+# 16x the sequence for < 8x the scratch — O(seq) state would blow this
+if cargo run --release --quiet -- longctx-gate \
+        --report BENCH_sweep_long.json --max-ratio 8; then
+    echo "ok: scratch stays chunk-bounded as the sequence grows"
+else
+    echo "FAIL: longctx-gate (streaming path regressed to O(seq) state)"
     status=1
 fi
 
@@ -266,6 +300,7 @@ bench_diff() {
         return
     fi
     if [ -s "$base" ]; then
+        echo "GATING: $fresh vs committed $base (>25% regression fails)"
         if cargo run --release --quiet -- bench-diff \
                 --baseline "$base" --fresh "$fresh" --max-regress 0.25; then
             echo "ok: $fresh within 25% of $base"
@@ -276,8 +311,9 @@ bench_diff() {
     else
         mkdir -p baselines
         cp "$fresh" "$base"
-        echo "NOTE: no committed baseline for $fresh; seeded $base" \
-             "from this run (commit it to arm the regression gate)"
+        echo "SEEDING: no committed baseline for $fresh — wrote $base" \
+             "from this run's numbers. $fresh was NOT gated; commit" \
+             "$base to arm the regression gate on the next run"
     fi
 }
 
@@ -352,6 +388,34 @@ if [ -s BENCH_hotpath.json ] && [ -s BENCH_hotpath_scalar.json ] \
     fi
 else
     echo "WARN: missing BENCH files or markers; SIMD table left as-is"
+fi
+
+# -- EXPERIMENTS.md §Long-context table: seq vs peak scratch ----------
+note "EXPERIMENTS.md §Long-context table refresh"
+if [ -s BENCH_sweep_long.json ] \
+        && grep -q LONGCTX_TABLE_BEGIN EXPERIMENTS.md \
+        && grep -q LONGCTX_TABLE_END EXPERIMENTS.md; then
+    if cargo run --release --quiet -- longctx-gate \
+            --report BENCH_sweep_long.json --markdown \
+            > /tmp/topkima_longctx_table.md; then
+        awk '
+            /LONGCTX_TABLE_BEGIN/ {
+                print
+                while ((getline line < "/tmp/topkima_longctx_table.md") > 0)
+                    print line
+                skip = 1
+                next
+            }
+            /LONGCTX_TABLE_END/ { skip = 0 }
+            skip == 0 { print }
+        ' EXPERIMENTS.md > EXPERIMENTS.md.tmp \
+            && mv EXPERIMENTS.md.tmp EXPERIMENTS.md
+        echo "ok: EXPERIMENTS.md §Long-context table refreshed"
+    else
+        echo "WARN: longctx-gate --markdown failed; table left as-is"
+    fi
+else
+    echo "WARN: no BENCH_sweep_long.json or no markers; table left as-is"
 fi
 
 if [ "$status" = "0" ]; then

@@ -1,0 +1,954 @@
+//! Streaming chunked top-k attention: the O(seq·chunk) long-context
+//! path.
+//!
+//! The monolithic score stage ([`crate::softmax::macros::run_macro`])
+//! materializes one crossbar spanning every key column plus a dense
+//! `rows × seq` MAC buffer — fine at seq ≤ 4k, hopeless at 64k–1M. This
+//! module runs the *same* computation as a stream over key chunks:
+//!
+//! 1. a [`KeySource`] yields K^T tiles of `chunk_cols` columns;
+//! 2. each tile is programmed into a physical-size [`Crossbar`] and
+//!    driven through the existing batched MAC + crossing kernels;
+//! 3. each chunk's crossings fold into per-query-row streaming state
+//!    (`SelectionStrategy::fold_chunk`) — for topkima a bounded-k merge,
+//!    for the dense baselines a scatter;
+//! 4. `finish_chunked_row` emits the selection and prices the row.
+//!
+//! # Bit-identity contract
+//!
+//! The chunked path is **bit-identical** to `run_macro` over a single
+//! seq-wide crossbar holding the same K^T: same selected (column,
+//! value) pairs in the same grant order (chunk-boundary ties included),
+//! same f64 latency/energy/α, same RNG stream. The load-bearing facts,
+//! each pinned where it lives:
+//!
+//! * the global top-k is a subset of the union of per-chunk top-k's,
+//!   and `arbiter::insert_bounded` is arrival-order independent, so
+//!   merging per-chunk arbitrations reproduces one monolithic
+//!   arbitration exactly;
+//! * cost formulas are *shared code*, not re-derivations:
+//!   `TopkimaConverter::{topk_row_stats, full_row_stats}` and
+//!   `arbiter::stats_of` price both paths with the same op sequence;
+//! * MAC/PWM/write costs depend only on global (depth, seq) — the
+//!   engine computes them with the same single multiplies as
+//!   `MacroParts` (see `mac_phase_cost` / `write_cost` below);
+//! * calibration: the ADC full scale is the max over per-tile
+//!   `Crossbar::full_scale_mac`, which equals the seq-wide value
+//!   because `(worst · qmax).max(1)` is monotone in the integer worst
+//!   and max commutes with monotone maps;
+//! * RNG: the ideal chain draws nothing (chunk-major iteration is then
+//!   free to batch rows); the noisy chain is iterated row-major,
+//!   chunk-ascending — exactly the monolithic per-column draw order
+//!   (`TopkimaConverter::crossings_chunk_into` indexes per-column noise
+//!   by absolute column).
+//!
+//! `tests/chunked_parity.rs` asserts all of this property-style across
+//! chunk widths, tie layouts, and both SIMD dispatch modes.
+//!
+//! # Scratch
+//!
+//! Peak transient memory is accounted deterministically (element counts
+//! × element sizes — see [`ChunkedRun::peak_scratch_bytes`]) and is
+//! O(rows·chunk + rows·k) for the topkima strategy: no seq-wide buffer
+//! ever exists. The dense baselines keep one O(seq) value row per query
+//! row — they *define* a dense conversion — so only topkima earns the
+//! long-context tier. Results stay sparse ([`SelectionRows`]); turning
+//! them into dense probability rows is an explicit opt-in
+//! ([`ChunkedRun::probs_dense`]).
+
+use crate::circuits::{pwm, Energy, Timing};
+use crate::crossbar::{Crossbar, Tech};
+use crate::ima::{ColumnNoise, TopkimaConverter};
+use crate::softmax::digital::DigitalSoftmax;
+use crate::softmax::macros::{
+    ChunkedRowState, DigitalTopkSelect, FullConversion, MacroCost, RowCost,
+    SelectionRows, SelectionStrategy, TopkimaSelect,
+};
+use crate::softmax::SoftmaxKind;
+use crate::util::rng::Rng;
+use std::fmt;
+
+/// Typed failure of the streaming engine. The underlying kernels
+/// (`Crossbar::program`, `mac_into`) enforce their contracts with
+/// panics; this layer validates every shape first so a misconfigured
+/// long-context run reports instead of aborting a sweep.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AttentionError {
+    /// The contraction depth does not fit one physical tile.
+    DepthExceedsTile { depth: usize, capacity: usize },
+    /// A dimension is out of contract (`what` names it; `want` is the
+    /// minimum or exact expectation, as documented per site).
+    Shape { what: &'static str, got: usize, want: usize },
+    /// A key weight code at (row, col) is outside the ±WEIGHT_LEVELS
+    /// ternary-cell range.
+    WeightRange { row: usize, col: usize },
+}
+
+impl fmt::Display for AttentionError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AttentionError::DepthExceedsTile { depth, capacity } => write!(
+                f,
+                "key depth {depth} exceeds tile weight capacity {capacity}"
+            ),
+            AttentionError::Shape { what, got, want } => {
+                write!(f, "bad {what}: got {got}, want {want}")
+            }
+            AttentionError::WeightRange { row, col } => write!(
+                f,
+                "key code at ({row}, {col}) outside ±{}",
+                crate::quant::WEIGHT_LEVELS
+            ),
+        }
+    }
+}
+
+impl std::error::Error for AttentionError {}
+
+/// Where key columns come from. The engine never holds more than one
+/// `depth × chunk_cols` tile of K^T at a time — the source is the only
+/// thing that knows the full sequence, and it may well generate it on
+/// the fly ([`GeneratedKeys`]) so a 1M-column sweep never materializes
+/// 1M columns anywhere.
+pub trait KeySource {
+    /// Total key columns (sequence length).
+    fn seq_len(&self) -> usize;
+
+    /// Contraction depth (rows of K^T).
+    fn depth(&self) -> usize;
+
+    /// Fill `out` with the tile covering columns
+    /// `[start, start + width)`: `out[r][i]` = code of K^T row `r`,
+    /// absolute column `start + i`. `out` arrives with arbitrary prior
+    /// content; implementations must leave exactly `depth()` rows of
+    /// exactly `width` codes (the engine verifies and reports
+    /// [`AttentionError::Shape`] otherwise).
+    fn fill_tile(&self, start: usize, width: usize, out: &mut Vec<Vec<i32>>);
+}
+
+/// Reset `out` to `depth` empty rows, reusing row allocations.
+fn reuse_rows(out: &mut Vec<Vec<i32>>, depth: usize) {
+    out.truncate(depth);
+    for row in out.iter_mut() {
+        row.clear();
+    }
+    out.resize_with(depth, Vec::new);
+}
+
+/// A fully materialized K^T (`kt[depth][seq]`) — the ≤ 4k regime and
+/// the parity tests, where monolithic comparison needs the same codes.
+#[derive(Clone, Debug)]
+pub struct DenseKeys {
+    kt: Vec<Vec<i32>>,
+    seq_len: usize,
+}
+
+impl DenseKeys {
+    /// Validate and wrap a `depth × seq` code matrix: non-empty,
+    /// rectangular, every code within the ternary-cell range.
+    pub fn new(kt: Vec<Vec<i32>>) -> Result<DenseKeys, AttentionError> {
+        let depth = kt.len();
+        if depth == 0 {
+            return Err(AttentionError::Shape {
+                what: "key depth",
+                got: 0,
+                want: 1,
+            });
+        }
+        let seq_len = kt.first().map_or(0, Vec::len);
+        if seq_len == 0 {
+            return Err(AttentionError::Shape {
+                what: "key seq_len",
+                got: 0,
+                want: 1,
+            });
+        }
+        for (r, row) in kt.iter().enumerate() {
+            if row.len() != seq_len {
+                return Err(AttentionError::Shape {
+                    what: "key row width",
+                    got: row.len(),
+                    want: seq_len,
+                });
+            }
+            for (c, &code) in row.iter().enumerate() {
+                if code.abs() > crate::quant::WEIGHT_LEVELS {
+                    return Err(AttentionError::WeightRange { row: r, col: c });
+                }
+            }
+        }
+        Ok(DenseKeys { kt, seq_len })
+    }
+}
+
+impl KeySource for DenseKeys {
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    fn depth(&self) -> usize {
+        self.kt.len()
+    }
+
+    fn fill_tile(&self, start: usize, width: usize, out: &mut Vec<Vec<i32>>) {
+        reuse_rows(out, self.kt.len());
+        let end = start.saturating_add(width).min(self.seq_len);
+        for (row, src) in out.iter_mut().zip(&self.kt) {
+            row.extend_from_slice(src.get(start..end).unwrap_or(&[]));
+        }
+    }
+}
+
+/// Procedurally generated keys: code(r, c) is a pure hash of (salt,
+/// row, column), so any tile of a 1M-column sequence is reproducible in
+/// O(tile) without ever materializing the sequence. Codes land in the
+/// full ternary range [-7, 7]. Used by the 64k+ sweep tier and the
+/// behavioral long-document streams.
+#[derive(Clone, Copy, Debug)]
+pub struct GeneratedKeys {
+    pub salt: u64,
+    pub seq_len: usize,
+    pub depth: usize,
+}
+
+impl GeneratedKeys {
+    pub fn new(salt: u64, seq_len: usize, depth: usize) -> GeneratedKeys {
+        GeneratedKeys { salt, seq_len, depth }
+    }
+
+    /// The key code at (row, column): splitmix-style finalizer over the
+    /// salted coordinates, reduced to [-WEIGHT_LEVELS, WEIGHT_LEVELS].
+    pub fn code(&self, r: usize, c: usize) -> i32 {
+        let mut z = self.salt
+            ^ (r as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ (c as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^= z >> 31;
+        ((z % 15) as i32) - 7
+    }
+}
+
+impl KeySource for GeneratedKeys {
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    fn depth(&self) -> usize {
+        self.depth
+    }
+
+    fn fill_tile(&self, start: usize, width: usize, out: &mut Vec<Vec<i32>>) {
+        reuse_rows(out, self.depth);
+        let end = start.saturating_add(width).min(self.seq_len);
+        for (r, row) in out.iter_mut().enumerate() {
+            row.extend((start..end).map(|c| self.code(r, c)));
+        }
+    }
+}
+
+/// Result of one streaming run: sparse selections + cost (bit-identical
+/// to the monolithic macro) plus the deterministic peak-scratch figure
+/// the long-context BENCH gates check.
+#[derive(Clone, Debug)]
+pub struct ChunkedRun {
+    /// Per-row selected (column, value) pairs, in the exact order the
+    /// monolithic strategy emits them.
+    pub sels: SelectionRows,
+    /// Accumulated macro cost (MAC + conversion + softmax + write).
+    pub cost: MacroCost,
+    /// Largest transient working set observed across the run, bytes:
+    /// live tile codes + programmed crossbar + MAC/crossing buffers +
+    /// all per-row streaming state (and, at the end, the selection
+    /// store). Element counts × element sizes — never allocator
+    /// capacities — so the figure is byte-stable across runs and
+    /// platforms.
+    pub peak_scratch_bytes: usize,
+}
+
+impl ChunkedRun {
+    /// Materialize dense probability rows over `d` columns — O(rows·d),
+    /// the explicit opt-out of the streaming memory guarantee. Each row
+    /// equals `run_macro`'s output bit for bit (same
+    /// [`DigitalSoftmax::compute_sparse`] call on the same selection).
+    pub fn probs_dense(
+        &self,
+        softmax: &DigitalSoftmax,
+        d: usize,
+    ) -> Vec<Vec<f64>> {
+        (0..self.sels.ranges.len())
+            .map(|r| softmax.compute_sparse(self.sels.row(r), d))
+            .collect()
+    }
+}
+
+/// Weighted probability checksum of a selection set without ever
+/// building a dense row: Σ_r Σ_i p(r, i) · (r·width + i + 1), summed in
+/// ascending column order within each row. Bitwise equal to the same
+/// sum over dense `compute_sparse` rows — the zero entries a dense row
+/// adds are exact no-ops (probabilities are non-negative, so `x + 0.0`
+/// never flips a bit), the scalar max below is bit-equal to
+/// `compute_sparse`'s staged SIMD max (documented in
+/// `softmax::digital`), and the exp-sum runs in selection order exactly
+/// like `compute_sparse_into`.
+pub fn selection_checksum(sels: &SelectionRows, width: usize) -> f64 {
+    let mut checksum = 0.0;
+    let mut sorted: Vec<(usize, f64)> = Vec::new();
+    for r in 0..sels.ranges.len() {
+        let sel = sels.row(r);
+        if sel.is_empty() {
+            continue;
+        }
+        let m = sel
+            .iter()
+            .map(|&(_, v)| v)
+            .fold(f64::NEG_INFINITY, f64::max);
+        let mut sum = 0.0;
+        for &(_, v) in sel {
+            sum += (v - m).exp();
+        }
+        sorted.clear();
+        sorted.extend_from_slice(sel);
+        sorted.sort_unstable_by_key(|&(i, _)| i);
+        for &(i, v) in &sorted {
+            checksum += (v - m).exp() / sum * (r * width + i + 1) as f64;
+        }
+    }
+    checksum
+}
+
+/// The streaming engine: one physical crossbar's worth of K^T at a
+/// time, any sequence length.
+#[derive(Clone, Debug)]
+pub struct ChunkedAttention<S: KeySource> {
+    source: S,
+    /// Seq-wide converter — calibrated over every tile, noise indexed
+    /// by absolute column.
+    pub converter: TopkimaConverter,
+    pub softmax: DigitalSoftmax,
+    pub timing: Timing,
+    pub energy: Energy,
+    /// Effective chunk width (requested, clamped to the physical column
+    /// budget and the sequence).
+    chunk_cols: usize,
+    tech: Tech,
+    xbar_rows: usize,
+    xbar_cols: usize,
+    replica_rows: usize,
+}
+
+impl<S: KeySource> ChunkedAttention<S> {
+    /// Build an engine over `source`, streaming `chunk_cols` key
+    /// columns per tile through `rows × cols` arrays with
+    /// `replica_rows` reserved. Validates every dimension, then runs
+    /// the calibration pass (max per-tile full-scale — equals the
+    /// seq-wide value, see the module docs).
+    pub fn new(
+        source: S,
+        chunk_cols: usize,
+        tech: Tech,
+        rows: usize,
+        cols: usize,
+        replica_rows: usize,
+    ) -> Result<ChunkedAttention<S>, AttentionError> {
+        let seq = source.seq_len();
+        let depth = source.depth();
+        if seq == 0 {
+            return Err(AttentionError::Shape {
+                what: "seq_len",
+                got: 0,
+                want: 1,
+            });
+        }
+        if depth == 0 {
+            return Err(AttentionError::Shape {
+                what: "depth",
+                got: 0,
+                want: 1,
+            });
+        }
+        if chunk_cols == 0 {
+            return Err(AttentionError::Shape {
+                what: "chunk_cols",
+                got: 0,
+                want: 1,
+            });
+        }
+        if cols == 0 {
+            return Err(AttentionError::Shape {
+                what: "crossbar cols",
+                got: 0,
+                want: 1,
+            });
+        }
+        if replica_rows >= rows {
+            return Err(AttentionError::Shape {
+                what: "replica_rows (must be < rows)",
+                got: replica_rows,
+                want: rows,
+            });
+        }
+        let capacity = Crossbar::weight_capacity(rows, replica_rows);
+        if depth > capacity {
+            return Err(AttentionError::DepthExceedsTile { depth, capacity });
+        }
+        let chunk = chunk_cols.min(cols).min(seq);
+        let mut engine = ChunkedAttention {
+            source,
+            converter: TopkimaConverter::ideal(seq, 1.0),
+            softmax: DigitalSoftmax::default(),
+            timing: Timing::default(),
+            energy: Energy::default(),
+            chunk_cols: chunk,
+            tech,
+            xbar_rows: rows,
+            xbar_cols: cols,
+            replica_rows,
+        };
+        // Calibration: fold the per-tile full scale. 1.0 is the floor
+        // every tile's `(worst · qmax).max(1)` already clears, so the
+        // seed never wins.
+        let mut fs = 1.0f64;
+        let mut tile = Vec::new();
+        let mut start = 0usize;
+        while start < seq {
+            let w = chunk.min(seq - start);
+            let xbar = engine.program_tile(&mut tile, start, w)?;
+            fs = fs.max(xbar.full_scale_mac(crate::quant::N_BITS_INPUT));
+            start += w;
+        }
+        engine.converter = TopkimaConverter::ideal(seq, fs);
+        Ok(engine)
+    }
+
+    /// Paper-instance arrays: SRAM 256×256 with 64 replica rows.
+    pub fn with_defaults(
+        source: S,
+        chunk_cols: usize,
+    ) -> Result<ChunkedAttention<S>, AttentionError> {
+        ChunkedAttention::new(source, chunk_cols, Tech::Sram, 256, 256, 64)
+    }
+
+    /// Swap in a seq-wide noisy converter column model (Fig 4b
+    /// experiments). `noise` must cover exactly `seq_len` columns.
+    pub fn with_noise(
+        mut self,
+        noise: ColumnNoise,
+    ) -> Result<ChunkedAttention<S>, AttentionError> {
+        if noise.columns() != self.source.seq_len() {
+            return Err(AttentionError::Shape {
+                what: "noise columns",
+                got: noise.columns(),
+                want: self.source.seq_len(),
+            });
+        }
+        self.converter.noise = noise;
+        Ok(self)
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.source.seq_len()
+    }
+
+    pub fn depth(&self) -> usize {
+        self.source.depth()
+    }
+
+    /// Effective chunk width after clamping.
+    pub fn chunk_cols(&self) -> usize {
+        self.chunk_cols
+    }
+
+    /// Pull one tile from the source and program it, verifying the
+    /// source honored the shape contract first (the kernels below this
+    /// point enforce it with panics).
+    fn program_tile(
+        &self,
+        tile: &mut Vec<Vec<i32>>,
+        start: usize,
+        width: usize,
+    ) -> Result<Crossbar, AttentionError> {
+        self.source.fill_tile(start, width, tile);
+        if tile.len() != self.source.depth() {
+            return Err(AttentionError::Shape {
+                what: "tile depth",
+                got: tile.len(),
+                want: self.source.depth(),
+            });
+        }
+        for (r, row) in tile.iter().enumerate() {
+            if row.len() != width {
+                return Err(AttentionError::Shape {
+                    what: "tile width",
+                    got: row.len(),
+                    want: width,
+                });
+            }
+            for (c, &code) in row.iter().enumerate() {
+                if code.abs() > crate::quant::WEIGHT_LEVELS {
+                    return Err(AttentionError::WeightRange {
+                        row: r,
+                        col: start + c,
+                    });
+                }
+            }
+        }
+        Ok(Crossbar::program(
+            self.tech,
+            self.xbar_rows,
+            self.xbar_cols,
+            self.replica_rows,
+            tile,
+        ))
+    }
+
+    /// MAC-phase cost of one query row — the same single multiplies as
+    /// `MacroParts::mac_phase_cost` with the seq-wide column count, so
+    /// the f64 results match the monolithic path bit for bit.
+    fn mac_phase_cost(&self, q_row: &[i32]) -> (f64, f64) {
+        let lat = pwm::vector_duration_ns(q_row, &self.timing);
+        let cells = self.source.depth() * crate::quant::CELLS_PER_WEIGHT;
+        let e_mac = (self.source.seq_len() * cells) as f64
+            * self.energy.e_mac_cell;
+        let e_pwm = pwm::vector_energy_pj(q_row, self.energy.e_pwm_cell)
+            * self.source.seq_len() as f64;
+        (lat, e_mac + e_pwm)
+    }
+
+    /// Amortized K^T write cost — seq-wide, mirroring
+    /// `Crossbar::{write_latency_ns, write_energy_pj}` over one
+    /// monolithic array. The stream reprograms physical tiles many
+    /// times, but the *hardware being modeled* is unchanged: chunking
+    /// is a simulator memory optimization, and pricing anything else
+    /// would break bit-parity with the macro it replays.
+    fn write_cost(&self) -> (f64, f64) {
+        let phys_rows =
+            self.source.depth() * crate::quant::CELLS_PER_WEIGHT;
+        let cells = self.source.depth()
+            * crate::quant::CELLS_PER_WEIGHT
+            * self.source.seq_len();
+        (
+            phys_rows as f64 * self.timing.t_write_row,
+            cells as f64 * self.energy.e_write_cell,
+        )
+    }
+
+    /// Deterministic bytes of the chunk-lifetime buffers live while a
+    /// chunk is in flight (per-row streaming state is added by the
+    /// caller, which knows which states exist yet).
+    fn chunk_transient_bytes(
+        tile: &[Vec<i32>],
+        xbar: &Crossbar,
+        macs: &[i64],
+        crossings: &[u32],
+    ) -> usize {
+        let tile_bytes: usize = tile
+            .iter()
+            .map(|row| row.len() * std::mem::size_of::<i32>())
+            .sum();
+        tile_bytes
+            + xbar.footprint_bytes()
+            + macs.len() * std::mem::size_of::<i64>()
+            + crossings.len() * std::mem::size_of::<u32>()
+    }
+
+    /// Stream every key chunk through `strategy` for the batch of query
+    /// rows. Returns selections, cost, and peak scratch; bit-identical
+    /// to `run_macro` over one seq-wide crossbar (see module docs).
+    pub fn run_streaming<St: SelectionStrategy + ?Sized>(
+        &self,
+        strategy: &St,
+        q_rows: &[Vec<i32>],
+        rng: &mut Rng,
+    ) -> Result<ChunkedRun, AttentionError> {
+        let seq = self.source.seq_len();
+        let d = self.source.depth();
+        for q in q_rows {
+            if q.len() != d {
+                return Err(AttentionError::Shape {
+                    what: "query row depth",
+                    got: q.len(),
+                    want: d,
+                });
+            }
+        }
+        let chunk = self.chunk_cols;
+        let mut states: Vec<ChunkedRowState> = Vec::new();
+        states.resize_with(q_rows.len(), ChunkedRowState::new);
+        let mut tile: Vec<Vec<i32>> = Vec::new();
+        let mut macs: Vec<i64> = Vec::new();
+        let mut crossings: Vec<u32> = Vec::new();
+        let mut peak = 0usize;
+        if self.converter.is_noise_free() {
+            // Ideal chain: zero RNG draws anywhere, so chunk-major
+            // iteration (program each tile once, batch-MAC every query
+            // row against it) reorders nothing observable.
+            for st in states.iter_mut() {
+                strategy.begin_chunked_row(seq, st);
+            }
+            let mut start = 0usize;
+            while start < seq {
+                let w = chunk.min(seq - start);
+                let xbar = self.program_tile(&mut tile, start, w)?;
+                xbar.mac_rows_into(q_rows, &mut macs);
+                for (r, st) in states.iter_mut().enumerate() {
+                    let lo = r * w;
+                    self.converter.crossings_chunk_into(
+                        &macs[lo..lo + w],
+                        start,
+                        rng,
+                        &mut crossings,
+                    );
+                    strategy.fold_chunk(&self.converter, &crossings, start, st);
+                }
+                let state_bytes: usize =
+                    states.iter().map(ChunkedRowState::scratch_bytes).sum();
+                peak = peak.max(
+                    Self::chunk_transient_bytes(
+                        &tile, &xbar, &macs, &crossings,
+                    ) + state_bytes,
+                );
+                start += w;
+            }
+        } else {
+            // Noisy chain: the monolithic path draws per column in
+            // row-major, column-ascending order — so must we. Row-major
+            // chunking re-programs each tile per (row, chunk), which is
+            // the same asymptotic cost as the MAC itself. Row states
+            // begin lazily so only started rows hold scratch;
+            // `done_bytes` carries the finished rows' still-live state.
+            let mut done_bytes = 0usize;
+            for (q, st) in q_rows.iter().zip(states.iter_mut()) {
+                strategy.begin_chunked_row(seq, st);
+                let mut start = 0usize;
+                while start < seq {
+                    let w = chunk.min(seq - start);
+                    let xbar = self.program_tile(&mut tile, start, w)?;
+                    macs.clear();
+                    macs.resize(w, 0);
+                    xbar.mac_into(q, &mut macs);
+                    self.converter.crossings_chunk_into(
+                        &macs,
+                        start,
+                        rng,
+                        &mut crossings,
+                    );
+                    strategy.fold_chunk(&self.converter, &crossings, start, st);
+                    peak = peak.max(
+                        Self::chunk_transient_bytes(
+                            &tile, &xbar, &macs, &crossings,
+                        ) + done_bytes
+                            + st.scratch_bytes(),
+                    );
+                    start += w;
+                }
+                done_bytes += st.scratch_bytes();
+            }
+        }
+        let mut sels = SelectionRows::default();
+        let mut cost = MacroCost::default();
+        let mut row_sel: Vec<(usize, f64)> = Vec::new();
+        for (q, st) in q_rows.iter().zip(states.iter_mut()) {
+            row_sel.clear();
+            let rc = strategy.finish_chunked_row(
+                &self.converter,
+                &self.timing,
+                &self.energy,
+                seq,
+                st,
+                &mut row_sel,
+            );
+            let (mac_ns, mac_pj) = self.mac_phase_cost(q);
+            cost.absorb(
+                mac_ns
+                    + rc.latency_ns
+                    + self.softmax.latency_ns(rc.nl_elems),
+                mac_pj
+                    + rc.energy_pj
+                    + self.softmax.energy_pj(rc.nl_elems),
+                rc.alpha,
+            );
+            sels.push_row(&row_sel, rc);
+        }
+        let sels_bytes = sels.sel.len()
+            * std::mem::size_of::<(usize, f64)>()
+            + sels.ranges.len() * std::mem::size_of::<(usize, usize)>()
+            + sels.costs.len() * std::mem::size_of::<RowCost>();
+        let state_bytes: usize =
+            states.iter().map(ChunkedRowState::scratch_bytes).sum();
+        peak = peak.max(sels_bytes + state_bytes);
+        let (wns, wpj) = self.write_cost();
+        Ok(ChunkedRun {
+            sels,
+            cost: cost.finish(wns, wpj),
+            peak_scratch_bytes: peak,
+        })
+    }
+
+    /// [`Self::run_streaming`] dispatched by [`SoftmaxKind`] — the
+    /// entry the sweep and serving layers use so all three designs
+    /// route through one loop.
+    pub fn run_kind(
+        &self,
+        kind: SoftmaxKind,
+        k: usize,
+        q_rows: &[Vec<i32>],
+        rng: &mut Rng,
+    ) -> Result<ChunkedRun, AttentionError> {
+        match kind {
+            SoftmaxKind::Conventional => {
+                self.run_streaming(&FullConversion, q_rows, rng)
+            }
+            SoftmaxKind::Dtopk => {
+                self.run_streaming(&DigitalTopkSelect { k }, q_rows, rng)
+            }
+            SoftmaxKind::Topkima => {
+                self.run_streaming(&TopkimaSelect { k }, q_rows, rng)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::softmax::macros::{run_macro, MacroParts};
+
+    fn kt(depth: usize, seq: usize) -> Vec<Vec<i32>> {
+        (0..depth)
+            .map(|r| {
+                (0..seq)
+                    .map(|c| (((r * 13 + c * 7 + 3) % 15) as i32) - 7)
+                    .collect()
+            })
+            .collect()
+    }
+
+    fn q_rows(n: usize, depth: usize) -> Vec<Vec<i32>> {
+        (0..n)
+            .map(|r| {
+                (0..depth)
+                    .map(|i| (((r * 31 + i * 17) % 31) as i32) - 15)
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn generated_keys_tiles_are_pure_slices() {
+        let keys = GeneratedKeys::new(0xD00D, 100, 8);
+        let mut tile = vec![vec![99]; 3]; // dirty prior content
+        keys.fill_tile(37, 21, &mut tile);
+        assert_eq!(tile.len(), 8);
+        for (r, row) in tile.iter().enumerate() {
+            assert_eq!(row.len(), 21);
+            for (i, &code) in row.iter().enumerate() {
+                assert_eq!(code, keys.code(r, 37 + i));
+                assert!(code.abs() <= crate::quant::WEIGHT_LEVELS);
+            }
+        }
+        // trailing tile clamps to seq_len
+        keys.fill_tile(96, 21, &mut tile);
+        assert_eq!(tile[0].len(), 4);
+    }
+
+    #[test]
+    fn dense_keys_validate_shape_and_range() {
+        assert_eq!(
+            DenseKeys::new(vec![]),
+            Err(AttentionError::Shape { what: "key depth", got: 0, want: 1 })
+        );
+        assert_eq!(
+            DenseKeys::new(vec![vec![], vec![]]),
+            Err(AttentionError::Shape {
+                what: "key seq_len",
+                got: 0,
+                want: 1
+            })
+        );
+        assert_eq!(
+            DenseKeys::new(vec![vec![1, 2], vec![3]]),
+            Err(AttentionError::Shape {
+                what: "key row width",
+                got: 1,
+                want: 2
+            })
+        );
+        assert_eq!(
+            DenseKeys::new(vec![vec![1, 8]]),
+            Err(AttentionError::WeightRange { row: 0, col: 1 })
+        );
+        assert!(DenseKeys::new(vec![vec![7, -7]]).is_ok());
+    }
+
+    #[test]
+    fn engine_rejects_bad_dimensions() {
+        let keys = GeneratedKeys::new(1, 64, 8);
+        assert!(matches!(
+            ChunkedAttention::with_defaults(
+                GeneratedKeys::new(1, 0, 8),
+                16
+            ),
+            Err(AttentionError::Shape { what: "seq_len", .. })
+        ));
+        assert!(matches!(
+            ChunkedAttention::with_defaults(keys, 0),
+            Err(AttentionError::Shape { what: "chunk_cols", .. })
+        ));
+        assert!(matches!(
+            ChunkedAttention::with_defaults(
+                GeneratedKeys::new(1, 64, 65),
+                16
+            ),
+            Err(AttentionError::DepthExceedsTile { depth: 65, .. })
+        ));
+        assert!(matches!(
+            ChunkedAttention::new(
+                GeneratedKeys::new(1, 64, 8),
+                16,
+                Tech::Sram,
+                64,
+                256,
+                64
+            ),
+            Err(AttentionError::Shape { what: "replica_rows (must be < rows)", .. })
+        ));
+    }
+
+    #[test]
+    fn mismatched_query_depth_is_reported() {
+        let keys = GeneratedKeys::new(2, 64, 8);
+        let engine = ChunkedAttention::with_defaults(keys, 16).unwrap();
+        let bad = vec![vec![0i32; 7]];
+        let err = engine
+            .run_streaming(&TopkimaSelect { k: 3 }, &bad, &mut Rng::new(1))
+            .unwrap_err();
+        assert_eq!(
+            err,
+            AttentionError::Shape { what: "query row depth", got: 7, want: 8 }
+        );
+    }
+
+    /// Smoke-level parity with the monolithic macro, every kind, ideal
+    /// and noisy, at a chunk width that does not divide the sequence.
+    /// The heavy property sweep lives in `tests/chunked_parity.rs`.
+    #[test]
+    fn streaming_matches_monolithic_smoke() {
+        use crate::ima::NoiseModel;
+        let depth = 16;
+        let seq = 96;
+        let codes = kt(depth, seq);
+        let q = q_rows(4, depth);
+        for noisy in [false, true] {
+            for kind in SoftmaxKind::ALL {
+                let mut parts = MacroParts::new(Crossbar::program(
+                    Tech::Sram,
+                    256,
+                    256,
+                    64,
+                    &codes,
+                ));
+                let keys = DenseKeys::new(codes.clone()).unwrap();
+                let mut engine =
+                    ChunkedAttention::with_defaults(keys, 17).unwrap();
+                if noisy {
+                    parts.converter.bitline.sigma_noise_v = 0.0004;
+                    parts.converter.noise = ColumnNoise::new(
+                        NoiseModel::default(),
+                        seq,
+                        &mut Rng::new(9),
+                    );
+                    engine.converter.bitline.sigma_noise_v = 0.0004;
+                    engine = engine
+                        .with_noise(ColumnNoise::new(
+                            NoiseModel::default(),
+                            seq,
+                            &mut Rng::new(9),
+                        ))
+                        .unwrap();
+                }
+                let k = 5;
+                let mut rng_a = Rng::new(77);
+                let mut rng_b = Rng::new(77);
+                let run = engine.run_kind(kind, k, &q, &mut rng_a).unwrap();
+                let strategy_probs =
+                    run.probs_dense(&engine.softmax, seq);
+                let (probs, cost) = match kind {
+                    SoftmaxKind::Conventional => {
+                        run_macro(&parts, &FullConversion, &q, &mut rng_b)
+                    }
+                    SoftmaxKind::Dtopk => run_macro(
+                        &parts,
+                        &DigitalTopkSelect { k },
+                        &q,
+                        &mut rng_b,
+                    ),
+                    SoftmaxKind::Topkima => run_macro(
+                        &parts,
+                        &TopkimaSelect { k },
+                        &q,
+                        &mut rng_b,
+                    ),
+                };
+                assert_eq!(
+                    run.cost, cost,
+                    "cost parity {kind:?} noisy={noisy}"
+                );
+                assert_eq!(
+                    strategy_probs, probs,
+                    "prob parity {kind:?} noisy={noisy}"
+                );
+                assert_eq!(
+                    rng_a.next_u64(),
+                    rng_b.next_u64(),
+                    "RNG stream parity {kind:?} noisy={noisy}"
+                );
+                assert!(run.peak_scratch_bytes > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn checksum_matches_dense_rows() {
+        let depth = 16;
+        let seq = 80;
+        let keys = DenseKeys::new(kt(depth, seq)).unwrap();
+        let engine = ChunkedAttention::with_defaults(keys, 32).unwrap();
+        let q = q_rows(3, depth);
+        let run = engine
+            .run_streaming(&TopkimaSelect { k: 6 }, &q, &mut Rng::new(3))
+            .unwrap();
+        let dense = run.probs_dense(&engine.softmax, seq);
+        let mut want = 0.0;
+        for (r, row) in dense.iter().enumerate() {
+            for (c, &p) in row.iter().enumerate() {
+                want += p * (r * seq + c + 1) as f64;
+            }
+        }
+        assert_eq!(selection_checksum(&run.sels, seq), want);
+    }
+
+    #[test]
+    fn topkima_scratch_stays_bounded_by_chunk_not_seq() {
+        // same chunk width, 4× the sequence → peak scratch must not
+        // scale with seq for the topkima strategy (the whole point)
+        let depth = 8;
+        let chunk = 64;
+        let peak_at = |seq: usize| {
+            let keys = GeneratedKeys::new(5, seq, depth);
+            let engine =
+                ChunkedAttention::with_defaults(keys, chunk).unwrap();
+            let q = q_rows(2, depth);
+            engine
+                .run_streaming(&TopkimaSelect { k: 8 }, &q, &mut Rng::new(4))
+                .unwrap()
+                .peak_scratch_bytes
+        };
+        let small = peak_at(512);
+        let large = peak_at(2048);
+        assert!(
+            large <= small.saturating_mul(2),
+            "peak grew with seq: {small} -> {large}"
+        );
+    }
+}

@@ -51,7 +51,9 @@ pub use request::{InputData, Request, RequestId, Response};
 pub use router::{RouteError, Router, StreamDef, StreamKey};
 pub use pjrt_exec::PjrtExecutor;
 pub use server::{Coordinator, Executor};
-pub use synthetic::{BehavioralExecutor, SyntheticExecutor};
+pub use synthetic::{
+    BehavioralExecutor, LongContextStats, SyntheticExecutor,
+};
 pub use trace::{Trace, TraceError, TraceEvent, TraceStream};
 pub use transport::{
     LocalTransport, ProcessTransport, ShardReport, ShardTransport,

@@ -23,6 +23,7 @@ use std::time::Duration;
 
 use anyhow::Result;
 
+use crate::attention::{ChunkedAttention, GeneratedKeys};
 use crate::crossbar::{Crossbar, Tech};
 use crate::softmax::macros::{run_macro, MacroParts, TopkimaSelect};
 use crate::util::rng::Rng;
@@ -109,15 +110,20 @@ pub struct BehavioralMacro {
     k: usize,
 }
 
+/// Deterministic per-stream salt: every shard (and every run) derives
+/// the same substrate from the stream key alone.
+fn stream_salt(key: &StreamKey) -> u64 {
+    key.0
+        .bytes()
+        .fold(key.1 as u64, |h, b| h.wrapping_mul(31).wrapping_add(b as u64))
+}
+
 impl BehavioralMacro {
     /// Program the stream's tile from a fixed pseudo-pattern seeded by
     /// the stream key, so every shard (and every run) builds the same
     /// substrate.
     fn new(key: &StreamKey, k: usize) -> BehavioralMacro {
-        let salt = key
-            .0
-            .bytes()
-            .fold(key.1 as u64, |h, b| h.wrapping_mul(31).wrapping_add(b as u64));
+        let salt = stream_salt(key);
         let kt: Vec<Vec<i32>> = (0..BEHAVIORAL_DEPTH)
             .map(|r| {
                 (0..BEHAVIORAL_COLS)
@@ -140,30 +146,113 @@ impl BehavioralMacro {
         BehavioralMacro { parts, k: k.min(BEHAVIORAL_COLS) }
     }
 
-    /// Embed one request sample into a Q row of PWM codes (±15, the
-    /// 5-bit input range) — deterministic in the sample alone.
-    fn embed(&self, input: &InputData) -> Vec<i32> {
-        let d = self.parts.crossbar.depth();
-        let code = |i: usize, v: i64| -> i32 {
-            ((v.wrapping_add(i as i64 * 7)).rem_euclid(31) - 15) as i32
-        };
-        match input {
-            InputData::I32(v) if v.is_empty() => vec![0; d],
-            InputData::F32(v) if v.is_empty() => vec![0; d],
-            InputData::I32(v) => (0..d)
-                .map(|i| {
-                    let s = v.get(i % v.len()).copied().unwrap_or(0);
-                    code(i, s as i64)
-                })
-                .collect(),
-            InputData::F32(v) => (0..d)
-                .map(|i| {
-                    let s = v.get(i % v.len()).copied().unwrap_or(0.0);
-                    code(i, (s * 16.0) as i64)
-                })
-                .collect(),
-        }
+}
+
+/// Embed one request sample into a depth-`d` Q row of PWM codes (±15,
+/// the 5-bit input range) — deterministic in the sample alone.
+fn embed_codes(d: usize, input: &InputData) -> Vec<i32> {
+    let code = |i: usize, v: i64| -> i32 {
+        ((v.wrapping_add(i as i64 * 7)).rem_euclid(31) - 15) as i32
+    };
+    match input {
+        InputData::I32(v) if v.is_empty() => vec![0; d],
+        InputData::F32(v) if v.is_empty() => vec![0; d],
+        InputData::I32(v) => (0..d)
+            .map(|i| {
+                let s = v.get(i % v.len()).copied().unwrap_or(0);
+                code(i, s as i64)
+            })
+            .collect(),
+        InputData::F32(v) => (0..d)
+            .map(|i| {
+                let s = v.get(i % v.len()).copied().unwrap_or(0.0);
+                code(i, (s * 16.0) as i64)
+            })
+            .collect(),
     }
+}
+
+/// Sparse probability checksum of one selection row, weighted by
+/// (column + 1) — the long-stream analogue of the dense checksum the
+/// tile streams emit, computed without materializing a seq-wide row
+/// (same softmax math as `DigitalSoftmax::compute_sparse`: shared max,
+/// exp-sum in selection order, ascending-column accumulation).
+fn sel_checksum(sel: &[(usize, f64)]) -> f64 {
+    if sel.is_empty() {
+        return 0.0;
+    }
+    let m = sel.iter().map(|&(_, v)| v).fold(f64::NEG_INFINITY, f64::max);
+    let mut sum = 0.0;
+    for &(_, v) in sel {
+        sum += (v - m).exp();
+    }
+    let mut sorted: Vec<(usize, f64)> = sel.to_vec();
+    sorted.sort_unstable_by_key(|&(c, _)| c);
+    sorted
+        .iter()
+        .map(|&(c, v)| (v - m).exp() / sum * (c + 1) as f64)
+        .sum()
+}
+
+/// One long-document stream's substrate: a streaming chunked attention
+/// engine over procedurally generated keys — the sequence is never
+/// materialized, so a 16k–1M-column stream costs O(chunk) memory per
+/// batch no matter the length.
+#[derive(Clone, Debug)]
+pub struct LongMacro {
+    engine: ChunkedAttention<GeneratedKeys>,
+    k: usize,
+}
+
+/// Deterministic memory figures of a long-context stream (reported in
+/// `BENCH_fleet.json`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LongContextStats {
+    pub seq_len: usize,
+    /// Effective chunk width after the engine's physical clamp.
+    pub chunk_cols: usize,
+    pub peak_scratch_bytes: usize,
+}
+
+impl LongMacro {
+    fn new(
+        key: &StreamKey,
+        k: usize,
+        seq_len: usize,
+        chunk_cols: usize,
+    ) -> Result<LongMacro> {
+        let keys = GeneratedKeys::new(
+            stream_salt(key),
+            seq_len,
+            BEHAVIORAL_DEPTH,
+        );
+        let engine = ChunkedAttention::with_defaults(keys, chunk_cols)
+            .map_err(|e| anyhow::anyhow!("long stream {}: {e}", key.0))?;
+        Ok(LongMacro { engine, k: k.min(seq_len) })
+    }
+
+    /// One single-row probe run: the stream's deterministic peak-scratch
+    /// figure (ideal converter, so the probe is byte-stable).
+    fn stats(&self) -> Result<LongContextStats> {
+        let q = vec![vec![0i32; self.engine.depth()]];
+        let run = self
+            .engine
+            .run_streaming(&TopkimaSelect { k: self.k }, &q, &mut Rng::new(0))
+            .map_err(|e| anyhow::anyhow!("long stream probe: {e}"))?;
+        Ok(LongContextStats {
+            seq_len: self.engine.seq_len(),
+            chunk_cols: self.engine.chunk_cols(),
+            peak_scratch_bytes: run.peak_scratch_bytes,
+        })
+    }
+}
+
+/// A behavioral stream's substrate: one monolithic tile (the classic
+/// family) or a streaming long-context engine.
+#[derive(Clone, Debug)]
+enum StreamMacro {
+    Tile(BehavioralMacro),
+    Long(LongMacro),
 }
 
 /// Device stand-in that does real circuit-macro work per batch instead
@@ -175,7 +264,7 @@ impl BehavioralMacro {
 /// replayed traces can be compared across SIMD modes byte for byte.
 #[derive(Clone, Debug)]
 pub struct BehavioralExecutor {
-    streams: HashMap<StreamKey, BehavioralMacro>,
+    streams: HashMap<StreamKey, StreamMacro>,
 }
 
 impl BehavioralExecutor {
@@ -187,8 +276,41 @@ impl BehavioralExecutor {
     /// the key).
     pub fn with_stream(mut self, key: StreamKey, k: usize) -> BehavioralExecutor {
         let m = BehavioralMacro::new(&key, k);
-        self.streams.insert(key, m);
+        self.streams.insert(key, StreamMacro::Tile(m));
         self
+    }
+
+    /// Register a long-document stream: `seq_len` key columns streamed
+    /// `chunk_cols` at a time through the chunked attention engine.
+    /// Errors when the geometry is out of contract (typed, not a panic —
+    /// the dimensions come from CLI flags).
+    pub fn with_long_stream(
+        mut self,
+        key: StreamKey,
+        k: usize,
+        seq_len: usize,
+        chunk_cols: usize,
+    ) -> Result<BehavioralExecutor> {
+        let m = LongMacro::new(&key, k, seq_len, chunk_cols)?;
+        self.streams.insert(key, StreamMacro::Long(m));
+        Ok(self)
+    }
+
+    /// Deterministic memory stats of every long-context stream, sorted
+    /// by stream key (HashMap order must never reach a BENCH file).
+    pub fn long_context_stats(
+        &self,
+    ) -> Result<Vec<(StreamKey, LongContextStats)>> {
+        let mut out = Vec::new();
+        for (key, m) in &self.streams {
+            if let StreamMacro::Long(lm) = m {
+                out.push((key.clone(), lm.stats()?));
+            }
+        }
+        out.sort_by(|a, b| {
+            (a.0 .0.as_ref(), a.0 .1).cmp(&(b.0 .0.as_ref(), b.0 .1))
+        });
+        Ok(out)
     }
 }
 
@@ -215,31 +337,62 @@ impl Executor for BehavioralExecutor {
                     stream.1
                 )
             })?;
-        let d = m.parts.crossbar.depth();
-        let rows = bucket.max(inputs.len());
-        let mut q_rows: Vec<Vec<i32>> = Vec::with_capacity(rows);
-        q_rows.extend(inputs.iter().map(|input| m.embed(input)));
-        q_rows.resize(rows, vec![0; d]);
-        // Ideal converter → the RNG is never drawn from; a fresh one per
-        // batch keeps that explicit.
-        let (probs, _cost) = run_macro(
-            &m.parts,
-            &TopkimaSelect { k: m.k },
-            &q_rows,
-            &mut Rng::new(0),
-        );
-        Ok(probs
-            .iter()
-            .take(inputs.len())
-            .map(|row| {
-                let sum: f64 = row
+        match m {
+            StreamMacro::Tile(m) => {
+                let d = m.parts.crossbar.depth();
+                let rows = bucket.max(inputs.len());
+                let mut q_rows: Vec<Vec<i32>> = Vec::with_capacity(rows);
+                q_rows
+                    .extend(inputs.iter().map(|i| embed_codes(d, i)));
+                q_rows.resize(rows, vec![0; d]);
+                // Ideal converter → the RNG is never drawn from; a
+                // fresh one per batch keeps that explicit.
+                let (probs, _cost) = run_macro(
+                    &m.parts,
+                    &TopkimaSelect { k: m.k },
+                    &q_rows,
+                    &mut Rng::new(0),
+                );
+                Ok(probs
                     .iter()
-                    .enumerate()
-                    .map(|(c, &p)| (c + 1) as f64 * p)
-                    .sum();
-                vec![sum as f32, stream.1 as f32]
-            })
-            .collect())
+                    .take(inputs.len())
+                    .map(|row| {
+                        let sum: f64 = row
+                            .iter()
+                            .enumerate()
+                            .map(|(c, &p)| (c + 1) as f64 * p)
+                            .sum();
+                        vec![sum as f32, stream.1 as f32]
+                    })
+                    .collect())
+            }
+            StreamMacro::Long(lm) => {
+                let d = lm.engine.depth();
+                let rows = bucket.max(inputs.len());
+                let mut q_rows: Vec<Vec<i32>> = Vec::with_capacity(rows);
+                q_rows
+                    .extend(inputs.iter().map(|i| embed_codes(d, i)));
+                q_rows.resize(rows, vec![0; d]);
+                let run = lm
+                    .engine
+                    .run_streaming(
+                        &TopkimaSelect { k: lm.k },
+                        &q_rows,
+                        &mut Rng::new(0),
+                    )
+                    .map_err(|e| {
+                        anyhow::anyhow!("long stream {}: {e}", stream.0)
+                    })?;
+                Ok((0..inputs.len())
+                    .map(|r| {
+                        vec![
+                            sel_checksum(run.sels.row(r)) as f32,
+                            stream.1 as f32,
+                        ]
+                    })
+                    .collect())
+            }
+        }
     }
 }
 
@@ -290,5 +443,43 @@ mod tests {
         // unknown stream is a loud error, not a panic
         let other: StreamKey = (Arc::from("vit"), 3);
         assert!(e.execute(&other, &[a], 1).is_err());
+    }
+
+    #[test]
+    fn long_stream_serves_and_reports_bounded_scratch() {
+        let key: StreamKey = (Arc::from("bert"), 8);
+        let mut e = BehavioralExecutor::new()
+            .with_long_stream(key.clone(), 8, 2048, 64)
+            .unwrap();
+        let a = Arc::new(InputData::I32(vec![3, -2, 9]));
+        let out = e.execute(&key, &[a.clone()], 2).unwrap();
+        assert_eq!(out.len(), 1);
+        assert!(out[0][0] > 0.0, "prob-row checksum is positive");
+        assert_eq!(out[0][1], 8.0);
+        // deterministic and independent of the padding bucket
+        let again = e.execute(&key, &[a.clone()], 4).unwrap();
+        assert_eq!(out[0], again[0]);
+        let stats = e.long_context_stats().unwrap();
+        assert_eq!(stats.len(), 1);
+        assert_eq!(stats[0].1.seq_len, 2048);
+        assert_eq!(stats[0].1.chunk_cols, 64);
+        assert!(stats[0].1.peak_scratch_bytes > 0);
+        // 4× the sequence at the same chunk: peak scratch must not
+        // scale with seq (the long-context guarantee)
+        let e2 = BehavioralExecutor::new()
+            .with_long_stream((Arc::from("bert"), 8), 8, 8192, 64)
+            .unwrap();
+        let s2 = e2.long_context_stats().unwrap();
+        assert!(
+            s2[0].1.peak_scratch_bytes
+                <= stats[0].1.peak_scratch_bytes.saturating_mul(2),
+            "peak grew with seq: {} -> {}",
+            stats[0].1.peak_scratch_bytes,
+            s2[0].1.peak_scratch_bytes
+        );
+        // bad geometry is a typed error, not a panic
+        assert!(BehavioralExecutor::new()
+            .with_long_stream((Arc::from("x"), 1), 1, 0, 64)
+            .is_err());
     }
 }

@@ -194,6 +194,20 @@ impl Crossbar {
         self.columns.iter().map(|col| col.mac(input_codes)).collect()
     }
 
+    /// Deterministic heap footprint of the programmed tile, bytes:
+    /// element counts × element sizes, never allocator capacities, so
+    /// the number is byte-stable across runs and platforms. The chunked
+    /// attention path charges each live tile against its peak-scratch
+    /// accounting with this.
+    pub fn footprint_bytes(&self) -> usize {
+        let cells: usize = self.columns.iter().map(|col| col.len()).sum();
+        let per_cell = std::mem::size_of::<
+            crate::circuits::sram_cell::TernaryCell,
+        >() + std::mem::size_of::<i32>();
+        cells * per_cell
+            + self.codes_flat.len() * std::mem::size_of::<i32>()
+    }
+
     /// Write latency for (re)programming the used tile, ns. SRAM arrays
     /// are written row-by-row with column-parallel cells (Sec. IV-B:
     /// one row per write cycle).

@@ -151,18 +151,20 @@ pub fn arbitrate_into(
             }
         }
     }
-    let stop_cycle = grants
-        .last()
-        .map(|g| g.cycle)
-        .filter(|_| grants.len() == k)
-        .unwrap_or(ramp_steps.saturating_sub(1));
-    ArbiterStats { stop_cycle, arb_events: grants.len() }
+    stats_of(grants, k, ramp_steps)
 }
 
 /// Exact bounded insert: keep the k smallest (cycle, column) pairs in
 /// sorted order. Columns arrive address-ascending, so an event tying
 /// the current worst grant never displaces it.
-fn insert_bounded(grants: &mut Vec<Grant>, k: usize, g: Grant) {
+///
+/// The result is a pure function of the *set* of inserted events —
+/// arrival order never matters, because the buffer always holds exactly
+/// the k smallest (cycle, column) keys seen so far. That is what lets
+/// the chunked attention path (`crate::attention`) merge per-chunk
+/// arbiter outcomes in any chunk order and still land on grants
+/// bit-identical to one monolithic [`arbitrate_into`] call.
+pub(crate) fn insert_bounded(grants: &mut Vec<Grant>, k: usize, g: Grant) {
     let key = (g.cycle, g.column);
     if grants.len() == k {
         let worst = match grants.last() {
@@ -176,6 +178,22 @@ fn insert_bounded(grants: &mut Vec<Grant>, k: usize, g: Grant) {
     }
     let pos = grants.partition_point(|h| (h.cycle, h.column) < key);
     grants.insert(pos, g);
+}
+
+/// Stats for a grant buffer assembled by [`insert_bounded`] — the same
+/// stop-cycle rule [`arbitrate_into`] applies to its own buffer, so a
+/// streaming merge reports costs bit-identical to the monolithic path.
+pub(crate) fn stats_of(
+    grants: &[Grant],
+    k: usize,
+    ramp_steps: u32,
+) -> ArbiterStats {
+    let stop_cycle = grants
+        .last()
+        .map(|g| g.cycle)
+        .filter(|_| grants.len() == k)
+        .unwrap_or(ramp_steps.saturating_sub(1));
+    ArbiterStats { stop_cycle, arb_events: grants.len() }
 }
 
 impl ArbiterOutcome {

@@ -13,7 +13,7 @@
 //! `convert_full` runs the same machinery without early stop — the
 //! conventional-IMA baseline [6] used by Conv-SM and Dtopk-SM.
 
-use super::arbiter::{arbitrate_into, Grant, NEVER};
+use super::arbiter::{arbitrate_into, ArbiterStats, Grant, NEVER};
 use super::noise::ColumnNoise;
 use super::ramp::Ramp;
 use crate::circuits::{BitlineModel, Energy, Timing};
@@ -150,6 +150,23 @@ impl TopkimaConverter {
     /// voltage noise is referred back through `dv_per_unit`; converter
     /// noise (`ColumnNoise`) is specified directly in ADC LSBs.
     fn crossings_into(&self, macs: &[i64], rng: &mut Rng, out: &mut Vec<u32>) {
+        self.crossings_chunk_into(macs, 0, rng, out);
+    }
+
+    /// [`Self::crossings_into`] for a contiguous column *chunk* starting
+    /// at absolute column `col_offset` — the streaming attention path
+    /// converts one key chunk at a time against a seq-wide converter.
+    /// Per-column noise (offsets, skip draws) is indexed by absolute
+    /// column, and the noisy path draws the RNG in exactly the same
+    /// per-column order as one monolithic row conversion would at those
+    /// columns, so chunking never perturbs the stream.
+    pub(crate) fn crossings_chunk_into(
+        &self,
+        macs: &[i64],
+        col_offset: usize,
+        rng: &mut Rng,
+        out: &mut Vec<u32>,
+    ) {
         let dv = self.bitline.dv_per_unit;
         if self.is_noise_free() {
             // Ideal converter: no RNG draw anywhere in the chain (both
@@ -171,15 +188,17 @@ impl TopkimaConverter {
         out.clear();
         out.extend(macs.iter().enumerate().map(|(c, &mac)| {
             let v_mac_units = self.bitline.sample(mac, rng) / dv;
-            let err_lsb = self.noise.sample_lsb(c, rng);
+            let err_lsb = self.noise.sample_lsb(col_offset + c, rng);
             let v = v_mac_units + err_lsb * self.ramp.lsb();
             self.ramp.crossing_cycle_fast(v).unwrap_or(NEVER)
         }));
     }
 
     /// True when neither the bitline nor the converter draws any noise
-    /// — the precondition for the vectorized RNG-free crossing kernel.
-    fn is_noise_free(&self) -> bool {
+    /// — the precondition for the vectorized RNG-free crossing kernel
+    /// (and for the chunk-parallel fast path in `crate::attention`,
+    /// which is only order-free because this chain never touches RNG).
+    pub(crate) fn is_noise_free(&self) -> bool {
         self.bitline.sigma_noise_v == 0.0 && self.noise.is_ideal()
     }
 
@@ -216,6 +235,19 @@ impl TopkimaConverter {
             &mut scratch.grants,
         );
         self.emit_outputs(scratch);
+        self.topk_row_stats(stats, k)
+    }
+
+    /// Eq (4) cost of one early-stopped row conversion given its
+    /// arbitration summary. Shared verbatim (same op order, so the f64
+    /// results are bit-identical) between the monolithic path above and
+    /// the streaming chunked path, which reconstructs a row-global
+    /// [`ArbiterStats`] from its merged grant set and prices it here.
+    pub(crate) fn topk_row_stats(
+        &self,
+        stats: ArbiterStats,
+        k: usize,
+    ) -> ConversionStats {
         // Eq (4): T_ima,arb = max(α·T_ima + T_arb, T_clk + k·T_arb)
         let alpha = stats.alpha(self.ramp.steps());
         let latency_ns = (alpha * self.timing.t_ima() + self.timing.t_arb)
@@ -261,7 +293,13 @@ impl TopkimaConverter {
             &mut scratch.grants,
         );
         self.emit_outputs(scratch);
-        // no early stop: full ramp latency/energy, no arbiter drain
+        self.full_row_stats(d)
+    }
+
+    /// Cost of one full-ramp row conversion over `d` columns (no early
+    /// stop, no arbiter drain) — shared with the chunked path like
+    /// [`Self::topk_row_stats`].
+    pub(crate) fn full_row_stats(&self, d: usize) -> ConversionStats {
         ConversionStats {
             alpha: 1.0,
             latency_ns: self.timing.t_ima(),

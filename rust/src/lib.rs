@@ -18,6 +18,8 @@
 //!   single configuration value.
 //! * [`sweep`] — the parallel hardware-grid search (`topkima sweep-hw`)
 //!   built on the pipeline and the allocation-free hot paths.
+//! * [`attention`] — the streaming chunked score stage: O(seq·chunk)
+//!   long-context attention, bit-identical to the monolithic macros.
 //! * [`quant`], [`util`] — shared contracts and dependency-free support.
 //! * [`lint`] — self-hosted static analysis (`topkima lint`, the CI
 //!   hygiene gate): schema-sync, panic-path, lock-discipline, and
@@ -25,6 +27,7 @@
 
 pub mod accel;
 pub mod arch;
+pub mod attention;
 pub mod coordinator;
 pub mod circuits;
 pub mod crossbar;

@@ -155,9 +155,10 @@ impl SourceSet {
     }
 
     /// Load the repo surfaces the checkers cover: the whole
-    /// `rust/src/coordinator/` tree plus the schema files
-    /// (`pipeline/config.rs`, `main.rs`, `tests/transport_proc.rs`,
-    /// `DESIGN.md`) and the SIMD kernel layer (`util/simd.rs`).
+    /// `rust/src/coordinator/` and `rust/src/attention/` trees plus the
+    /// schema files (`pipeline/config.rs`, `main.rs`,
+    /// `tests/transport_proc.rs`, `DESIGN.md`) and the SIMD kernel
+    /// layer (`util/simd.rs`).
     pub fn from_repo(root: &Path) -> io::Result<SourceSet> {
         let mut set = SourceSet::default();
         for rel in [
@@ -170,7 +171,10 @@ impl SourceSet {
             let text = std::fs::read_to_string(root.join(rel))?;
             set.insert(rel, &text);
         }
-        let mut stack = vec![root.join("rust/src/coordinator")];
+        let mut stack = vec![
+            root.join("rust/src/coordinator"),
+            root.join("rust/src/attention"),
+        ];
         while let Some(dir) = stack.pop() {
             let mut entries: Vec<_> = std::fs::read_dir(&dir)?
                 .collect::<io::Result<Vec<_>>>()?
@@ -204,6 +208,12 @@ pub fn run(set: &SourceSet) -> Report {
         if path.contains("rust/src/coordinator/") && path.ends_with(".rs") {
             apply(file, panic_path::check(file), &mut report);
             apply(file, lock_discipline::check(file), &mut report);
+        }
+        // The streaming attention engine serves long-context requests:
+        // a panic there aborts a whole sweep or fleet shard, so it is
+        // held to the same no-panic bar as the coordinator.
+        if path.contains("rust/src/attention/") && path.ends_with(".rs") {
+            apply(file, panic_path::check(file), &mut report);
         }
         if path.ends_with("rust/src/util/simd.rs") {
             apply(file, panic_path::check(file), &mut report);

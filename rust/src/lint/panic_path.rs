@@ -1,8 +1,10 @@
 //! panic-path: no panic-capable construct on the serving path.
 //!
 //! Scope: non-test code under `rust/src/coordinator/` (the fleet
-//! front, shards, transports, wire protocol). A stray `unwrap()` there
-//! turns one bad request into a dead shard — exactly the failure the
+//! front, shards, transports, wire protocol) and
+//! `rust/src/attention/` (the streaming long-context engine the fleet
+//! and sweeps call into). A stray `unwrap()` there turns one bad
+//! request into a dead shard — exactly the failure the
 //! `RouteError::ShardDown` / `ShardPanic` machinery exists to avoid.
 //! Every hit must become a typed error or carry
 //! `// lint:allow(panic-path): <reason>`.

@@ -36,7 +36,10 @@
 //!   byte-identical `BENCH_fleet.json`. `--behavioral` swaps the
 //!   modeled-sleep executor for real circuit-macro work per batch
 //!   (batched MAC + top-k conversion; local transport only), so fleet
-//!   load drives the §Perf hot paths. Per-stream p50/p99 latency,
+//!   load drives the §Perf hot paths — and adds a long-document stream
+//!   (`--long-seq`/`--long-chunk`) served by the streaming chunked
+//!   attention engine, whose deterministic peak-scratch figures land in
+//!   the BENCH file's `long_context` array. Per-stream p50/p99 latency,
 //!   batch occupancy, padding waste, and per-shard stolen/donated
 //!   counters land in `BENCH_fleet.json`.
 //! * `shard-worker` — internal: one fleet shard driven over
@@ -58,6 +61,10 @@
 //!   baseline and exit nonzero on regressions beyond the threshold
 //!   (the CI perf gate); `--markdown` renders the EXPERIMENTS.md §Perf
 //!   table instead.
+//! * `longctx-gate [--report FILE] [--max-ratio R] [--markdown]` — CI
+//!   gate behind the streaming attention path: peak scratch at the
+//!   longest swept sequence must stay under R× the shortest;
+//!   `--markdown` renders the EXPERIMENTS.md §Long-context table.
 //! * `check [--artifacts DIR]` — load every artifact, compile, and run a
 //!   one-batch smoke test (CI gate; skips cleanly when no artifacts
 //!   exist).
@@ -95,6 +102,7 @@ fn main() -> Result<()> {
         "sweep-hw" => cmd_sweep_hw(rest),
         "sweep-merge" => cmd_sweep_merge(rest),
         "bench-diff" => cmd_bench_diff(rest),
+        "longctx-gate" => cmd_longctx_gate(rest),
         "check" => cmd_check(rest),
         "config" => cmd_config(rest),
         "lint" => cmd_lint(rest),
@@ -151,7 +159,12 @@ const SUBCOMMANDS: &[(&str, &str, &str)] = &[
          --deterministic            lifted deadlines; byte-identical BENCH \
          per trace\n\
          --behavioral               real circuit-macro work per batch \
-         (batched MAC + top-k conversion; local transport only)\n\
+         (batched MAC + top-k conversion; local transport only), plus a \
+         long-document stream on the chunked attention engine\n\
+         --long-seq N               long-document key columns \
+         (behavioral only; default: 16384)\n\
+         --long-chunk N             key columns streamed per tile \
+         (behavioral only; default: 256)\n\
          --steal on|off             batch-granular work-stealing (local \
          transport only)\n\
          --steal-min-backlog N      batches a donor keeps per round\n\
@@ -196,7 +209,10 @@ const SUBCOMMANDS: &[(&str, &str, &str)] = &[
          --seed S                 per-point seeding base\n\
          --shard-index I --shard-count C   partition the grid\n\
          --out FILE               BENCH output (default: BENCH_sweep.json)\n\
-         [stack flags...]         base config for every point",
+         [stack flags...]         base config for every point — note \
+         --chunk-cols N runs every point through the streaming chunked \
+         attention engine (the 64k+ long-context tier) and records \
+         peak_scratch_bytes per point",
     ),
     (
         "sweep-merge",
@@ -213,6 +229,16 @@ const SUBCOMMANDS: &[(&str, &str, &str)] = &[
          --markdown          render the EXPERIMENTS.md table instead",
     ),
     (
+        "longctx-gate",
+        "gate peak scratch growth of a chunked sweep report (CI gate)",
+        "--report FILE       sweep-hw JSON with chunked points \
+         (default: BENCH_sweep_long.json)\n\
+         --max-ratio R       fail when peak scratch at the longest \
+         sequence reaches R x the shortest (default: 8)\n\
+         --markdown          render the EXPERIMENTS.md §Long-context \
+         seq-vs-scratch table instead of gating",
+    ),
+    (
         "check",
         "compile + smoke-run every artifact (skips without artifacts)",
         "--artifacts DIR    AOT artifact directory",
@@ -225,6 +251,8 @@ const SUBCOMMANDS: &[(&str, &str, &str)] = &[
          --tech rram|sram           crossbar technology\n\
          --model M                  bert-base|distilbert|vit-base|bert-tiny\n\
          --seq-len SL               sequence length\n\
+         --chunk-cols N             stream the score stage N key columns \
+         at a time (long-context path; omit for monolithic)\n\
          --k K                      top-k winners per softmax row\n\
          --softmax KIND             conv|dtopk|topkima\n\
          --alpha A                  measured early-stop fraction\n\
@@ -407,10 +435,20 @@ fn cmd_serve_fleet(args: &[String]) -> Result<()> {
     let mut trace_out: Option<String> = None;
     let mut deterministic = false;
     let mut behavioral = false;
+    let mut long_seq: usize = 16_384;
+    let mut long_chunk: usize = 256;
     let mut rest: Vec<String> = Vec::new();
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
+            "--long-seq" => {
+                long_seq = flag_value(args, i, "long-seq")?.parse()?;
+                i += 2;
+            }
+            "--long-chunk" => {
+                long_chunk = flag_value(args, i, "long-chunk")?.parse()?;
+                i += 2;
+            }
             "--seed" => {
                 seed = flag_value(args, i, "seed")?.parse()?;
                 i += 2;
@@ -464,6 +502,34 @@ fn cmd_serve_fleet(args: &[String]) -> Result<()> {
                 .with_rate(250.0),
         );
     let mut cfg = StackConfig::from_args_with(defaults, &rest)?;
+    // Behavioral mode adds a long-document stream: (bert, k=8) backed
+    // by the streaming chunked attention engine at `--long-seq` key
+    // columns, `--long-chunk` at a time — fleet load then exercises the
+    // O(seq·chunk) path, and its memory stats land in the BENCH file.
+    const LONG_K: usize = 8;
+    let long_doc = behavioral
+        && !cfg
+            .fleet
+            .streams
+            .iter()
+            .any(|s| s.family() == "bert" && s.k == LONG_K);
+    if long_doc {
+        if cfg.fleet.streams.is_empty() {
+            // materialize the single-stream compatibility spec so the
+            // long stream rides alongside it instead of replacing it
+            let mut spec = StreamSpec::new(cfg.model, cfg.k, cfg.softmax);
+            spec.policy.max_wait_us = cfg.serving.max_wait_us;
+            cfg.fleet.streams.push(spec);
+        }
+        cfg.fleet.streams.push(
+            StreamSpec::new(
+                ModelKind::BertTiny,
+                LONG_K,
+                SoftmaxKind::Topkima,
+            )
+            .with_rate(80.0),
+        );
+    }
     if deterministic {
         cfg.serving.max_wait_us = DET_WAIT_US;
         for s in &mut cfg.fleet.streams {
@@ -554,8 +620,34 @@ fn cmd_serve_fleet(args: &[String]) -> Result<()> {
     let source = if trace_in.is_some() { "trace" } else { "synthetic" };
     println!("load: {} requests scheduled ({source})", schedule.len());
 
+    let mut long_stats = Vec::new();
     let mut fleet = if behavioral {
-        b.start_fleet_behavioral()?
+        let mut exec = b.behavioral_executor();
+        if long_doc {
+            // swap the long stream's substrate from a monolithic tile
+            // to the streaming chunked engine, then probe its
+            // deterministic memory figures before the fleet takes the
+            // executor
+            exec = exec.with_long_stream(
+                (Arc::from("bert"), LONG_K),
+                LONG_K,
+                long_seq,
+                long_chunk,
+            )?;
+            long_stats = exec.long_context_stats()?;
+            for (key, s) in &long_stats {
+                println!(
+                    "long-context stream {}/k={}: seq {} × chunk {}, \
+                     peak scratch {} bytes",
+                    key.0,
+                    key.1,
+                    s.seq_len,
+                    s.chunk_cols,
+                    s.peak_scratch_bytes,
+                );
+            }
+        }
+        b.start_fleet_behavioral_exec(exec)?
     } else {
         b.start_fleet_synthetic()?
     };
@@ -702,6 +794,33 @@ fn cmd_serve_fleet(args: &[String]) -> Result<()> {
         ("streams", Json::Arr(stream_json)),
         ("aggregate", Json::obj(agg_fields)),
     ];
+    if !long_stats.is_empty() {
+        // pure function of (stream key, seq, chunk) — deterministic, so
+        // it is safe in byte-identical replay mode too
+        doc_fields.push((
+            "long_context",
+            Json::Arr(
+                long_stats
+                    .iter()
+                    .map(|(key, s)| {
+                        Json::obj(vec![
+                            ("family", Json::Str(key.0.to_string())),
+                            ("k", Json::Num(key.1 as f64)),
+                            ("seq_len", Json::Num(s.seq_len as f64)),
+                            (
+                                "chunk_cols",
+                                Json::Num(s.chunk_cols as f64),
+                            ),
+                            (
+                                "peak_scratch_bytes",
+                                Json::Num(s.peak_scratch_bytes as f64),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ));
+    }
     if !deterministic {
         doc_fields.push(("wall_s", Json::Num(wall)));
         doc_fields.push((
@@ -1075,6 +1194,97 @@ fn cmd_bench_diff(args: &[String]) -> Result<()> {
         d.rows.len(),
         max_regress * 100.0
     );
+    Ok(())
+}
+
+/// `longctx-gate`: the CI teeth behind the streaming attention claim.
+/// A chunked sweep report (`sweep-hw --chunk-cols N`) records
+/// `peak_scratch_bytes` per point; if the streaming engine ever
+/// regresses to materializing O(seq) state, the longest sequence's
+/// peak blows past `--max-ratio` times the shortest's and this exits
+/// nonzero. `--markdown` renders the seq-vs-scratch table that ci.sh
+/// splices into EXPERIMENTS.md between the LONGCTX_TABLE markers.
+fn cmd_longctx_gate(args: &[String]) -> Result<()> {
+    use topkima::sweep::SweepReport;
+
+    let mut report_path = "BENCH_sweep_long.json".to_string();
+    let mut max_ratio = 8.0f64;
+    let mut markdown = false;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--report" => {
+                report_path = flag_value(args, i, "report")?;
+                i += 2;
+            }
+            "--max-ratio" => {
+                max_ratio = flag_value(args, i, "max-ratio")?.parse()?;
+                i += 2;
+            }
+            "--markdown" => {
+                markdown = true;
+                i += 1;
+            }
+            other => bail!("unknown flag '{other}'"),
+        }
+    }
+    let text = std::fs::read_to_string(&report_path)
+        .map_err(|e| anyhow::anyhow!("reading {report_path}: {e}"))?;
+    let report = SweepReport::from_json_str(&text)
+        .map_err(|e| anyhow::anyhow!("parsing {report_path}: {e}"))?;
+
+    // (seq_len, chunk_cols, max peak over the points at that seq)
+    let mut by_seq: Vec<(usize, usize, usize)> = Vec::new();
+    for p in &report.points {
+        let Some(chunk) = p.chunk_cols else { continue };
+        match by_seq.iter_mut().find(|e| e.0 == p.seq_len) {
+            Some(e) => e.2 = e.2.max(p.peak_scratch_bytes),
+            None => by_seq.push((p.seq_len, chunk, p.peak_scratch_bytes)),
+        }
+    }
+    by_seq.sort_unstable();
+    if by_seq.is_empty() {
+        bail!(
+            "no chunked points in {report_path} — was the sweep run \
+             with --chunk-cols?"
+        );
+    }
+
+    if markdown {
+        println!("| seq_len | chunk_cols | peak scratch (KiB) | bytes/col |");
+        println!("|---:|---:|---:|---:|");
+        for &(seq, chunk, peak) in &by_seq {
+            println!(
+                "| {seq} | {chunk} | {:.1} | {:.2} |",
+                peak as f64 / 1024.0,
+                peak as f64 / seq as f64
+            );
+        }
+        return Ok(());
+    }
+
+    let (lo_seq, _, lo_peak) = by_seq[0];
+    let (hi_seq, _, hi_peak) = by_seq[by_seq.len() - 1];
+    if by_seq.len() < 2 {
+        bail!(
+            "need at least two sequence lengths to gate growth \
+             (report only covers seq {lo_seq})"
+        );
+    }
+    let ratio = hi_peak as f64 / lo_peak.max(1) as f64;
+    let seq_growth = hi_seq as f64 / lo_seq as f64;
+    println!(
+        "longctx-gate: peak scratch {lo_peak} B @ seq {lo_seq} -> \
+         {hi_peak} B @ seq {hi_seq} (x{ratio:.2} for x{seq_growth:.0} \
+         the sequence)"
+    );
+    if ratio >= max_ratio {
+        bail!(
+            "peak scratch grew x{ratio:.2} (limit x{max_ratio:.0}) — \
+             the streaming path is no longer O(chunk) in the sequence"
+        );
+    }
+    println!("ok: scratch growth within x{max_ratio:.0}");
     Ok(())
 }
 

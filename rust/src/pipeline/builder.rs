@@ -311,6 +311,18 @@ impl PipelineBuilder {
     /// work-stealing this is local-transport only; the process
     /// transport is a typed rejection, not a silent downgrade.
     pub fn start_fleet_behavioral(&self) -> Result<Fleet, ConfigError> {
+        self.start_fleet_behavioral_exec(self.behavioral_executor())
+    }
+
+    /// Start the behavioral fleet over a caller-assembled executor —
+    /// the hook `serve-fleet --behavioral` uses to add long-document
+    /// streams on top of [`Self::behavioral_executor`]'s configured
+    /// ones. Shares the process-transport rejection with the default
+    /// path.
+    pub fn start_fleet_behavioral_exec(
+        &self,
+        exec: BehavioralExecutor,
+    ) -> Result<Fleet, ConfigError> {
         if self.cfg.fleet.transport.kind == TransportKind::Process {
             return Err(ConfigError::Invalid {
                 field: "fleet.transport".to_string(),
@@ -321,7 +333,6 @@ impl PipelineBuilder {
             });
         }
         let shards = self.cfg.fleet.shards;
-        let exec = self.behavioral_executor();
         let factories = (0..shards)
             .map(|_| {
                 let exec = exec.clone();

@@ -323,6 +323,9 @@ pub struct StackConfig {
     pub model: ModelKind,
     /// Override the preset's sequence length (SL scaling studies).
     pub seq_len: Option<usize>,
+    /// Key-chunk width for the streaming attention path (long-context
+    /// runs); `None` = monolithic score stage.
+    pub chunk_cols: Option<usize>,
     /// Serving layer.
     pub serving: ServingConfig,
     /// Fleet serving: shard count + per-stream batching policies.
@@ -345,6 +348,7 @@ impl Default for StackConfig {
             sram_row_parallel: 1,
             model: ModelKind::BertBase,
             seq_len: None,
+            chunk_cols: None,
             serving: ServingConfig::default(),
             fleet: FleetConfig::default(),
         }
@@ -381,6 +385,11 @@ impl StackConfig {
 
     pub fn with_seq_len(mut self, seq_len: usize) -> Self {
         self.seq_len = Some(seq_len);
+        self
+    }
+
+    pub fn with_chunk_cols(mut self, chunk_cols: usize) -> Self {
+        self.chunk_cols = Some(chunk_cols);
         self
     }
 
@@ -489,6 +498,22 @@ impl StackConfig {
             if sl == 0 {
                 return Err(invalid("seq_len", "must be ≥ 1"));
             }
+        }
+        if let Some(c) = self.chunk_cols {
+            if c == 0 {
+                return Err(invalid("chunk_cols", "must be ≥ 1"));
+            }
+        }
+        // k is a per-row winner count: it can never exceed the number of
+        // score columns, which is the (possibly overridden) sequence
+        // length of the workload.
+        let eff_seq =
+            self.seq_len.unwrap_or(self.model.transformer().seq_len);
+        if self.k > eff_seq {
+            return Err(invalid(
+                "k",
+                "must be ≤ the effective sequence length",
+            ));
         }
         if let Some(n) = &self.noise {
             if n.sigma_noise < 0.0 || n.sigma_offset < 0.0 {
@@ -611,6 +636,11 @@ impl StackConfig {
             (
                 "seq_len",
                 self.seq_len.map_or(Json::Null, |s| Json::Num(s as f64)),
+            ),
+            (
+                "chunk_cols",
+                self.chunk_cols
+                    .map_or(Json::Null, |c| Json::Num(c as f64)),
             ),
             (
                 "serving",
@@ -746,6 +776,12 @@ impl StackConfig {
                         v => Some(json_usize(v, "seq_len")?),
                     }
                 }
+                "chunk_cols" => {
+                    cfg.chunk_cols = match value {
+                        Json::Null => None,
+                        v => Some(json_usize(v, "chunk_cols")?),
+                    }
+                }
                 "serving" => cfg.serving = serving_from(value)?,
                 "fleet" => cfg.fleet = fleet_from(value)?,
                 other => {
@@ -840,6 +876,9 @@ impl StackConfig {
                 "k" => cfg.k = parse_usize("k", &val)?,
                 "seq-len" => {
                     cfg.seq_len = Some(parse_usize("seq-len", &val)?)
+                }
+                "chunk-cols" => {
+                    cfg.chunk_cols = Some(parse_usize("chunk-cols", &val)?)
                 }
                 "softmax" => {
                     cfg.softmax = SoftmaxKind::parse(&val).ok_or_else(|| {
@@ -1406,6 +1445,52 @@ mod tests {
             p_skip: 1.5,
         });
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn k_cannot_exceed_effective_seq_len() {
+        // bert-tiny preset: seq_len = 64.
+        let cfg =
+            StackConfig::default().with_model(ModelKind::BertTiny).with_k(65);
+        assert_eq!(
+            cfg.validate().unwrap_err(),
+            ConfigError::Invalid {
+                field: "k".to_string(),
+                reason: "must be ≤ the effective sequence length"
+                    .to_string(),
+            }
+        );
+        // The seq_len override, not the preset, is what binds.
+        let ok = StackConfig::default()
+            .with_model(ModelKind::BertTiny)
+            .with_k(65)
+            .with_seq_len(128);
+        ok.validate().unwrap();
+        let err = StackConfig::default().with_k(9).with_seq_len(8);
+        assert!(err.validate().is_err());
+        // The check lands at config load, not only at build time.
+        assert!(StackConfig::from_args(&args(&[
+            "--k", "9", "--seq-len", "8",
+        ]))
+        .is_err());
+    }
+
+    #[test]
+    fn chunk_cols_roundtrips_and_validates() {
+        let cfg = StackConfig::default().with_chunk_cols(256);
+        let back =
+            StackConfig::from_json_str(&cfg.to_json_string()).unwrap();
+        assert_eq!(back.chunk_cols, Some(256));
+        assert_eq!(cfg, back);
+        let flags =
+            StackConfig::from_args(&args(&["--chunk-cols", "512"])).unwrap();
+        assert_eq!(flags.chunk_cols, Some(512));
+        let mut zero = StackConfig::default();
+        zero.chunk_cols = Some(0);
+        assert!(zero.validate().is_err());
+        // Old config files without the key still load (field stays None).
+        let legacy = StackConfig::default();
+        assert_eq!(legacy.chunk_cols, None);
     }
 
     #[test]

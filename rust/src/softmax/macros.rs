@@ -24,8 +24,10 @@ use super::dtopk::{digital_topk_into, sort_compare_bound};
 use super::SoftmaxKind;
 use crate::circuits::{pwm, Energy, Timing};
 use crate::crossbar::Crossbar;
+use crate::ima::arbiter::{self, arbitrate_into};
 use crate::ima::{
-    BatchConversionScratch, Conversion, ConversionScratch, TopkimaConverter,
+    BatchConversionScratch, Conversion, ConversionScratch, Grant,
+    TopkimaConverter, NEVER,
 };
 use crate::util::rng::Rng;
 
@@ -68,13 +70,13 @@ pub struct SelectionRows {
 }
 
 impl SelectionRows {
-    fn clear(&mut self) {
+    pub(crate) fn clear(&mut self) {
         self.sel.clear();
         self.ranges.clear();
         self.costs.clear();
     }
 
-    fn push_row(&mut self, sel: &[(usize, f64)], rc: RowCost) {
+    pub(crate) fn push_row(&mut self, sel: &[(usize, f64)], rc: RowCost) {
         let start = self.sel.len();
         self.sel.extend_from_slice(sel);
         self.ranges.push((start, self.sel.len()));
@@ -103,7 +105,12 @@ pub struct MacroCost {
 }
 
 impl MacroCost {
-    fn absorb(&mut self, latency_ns: f64, energy_pj: f64, alpha: f64) {
+    pub(crate) fn absorb(
+        &mut self,
+        latency_ns: f64,
+        energy_pj: f64,
+        alpha: f64,
+    ) {
         self.latency_ns += latency_ns;
         self.energy_pj += energy_pj;
         self.alpha += alpha;
@@ -111,7 +118,7 @@ impl MacroCost {
     }
 
     /// Finalize the running α sum into a mean.
-    fn finish(mut self, write_ns: f64, write_pj: f64) -> MacroCost {
+    pub(crate) fn finish(mut self, write_ns: f64, write_pj: f64) -> MacroCost {
         if self.conversions > 0 {
             self.alpha /= self.conversions as f64;
         } else {
@@ -199,8 +206,55 @@ pub struct RowCost {
     pub nl_elems: usize,
 }
 
+/// Per-query-row streaming state for the chunked attention path
+/// (`crate::attention`): the bounded-k merged grant set (topkima) or
+/// the dense value row (the full-conversion baselines), plus reusable
+/// per-chunk scratch. One state per in-flight query row; the topkima
+/// variant is O(k) regardless of sequence length — that is the whole
+/// point of the streaming engine.
+#[derive(Clone, Debug, Default)]
+pub struct ChunkedRowState {
+    /// Merged bounded-k grants across all chunks seen so far, kept in
+    /// (cycle, column) order by `arbiter::insert_bounded` (absolute
+    /// column addresses).
+    grants: Vec<Grant>,
+    /// Per-chunk arbitration scratch (chunk-local column addresses).
+    chunk_grants: Vec<Grant>,
+    /// Dense per-column value row (Full/Dtopk strategies only — O(seq)).
+    dense: Vec<f64>,
+    /// Digital-sorter selection workspace (Dtopk only).
+    taken: Vec<bool>,
+}
+
+impl ChunkedRowState {
+    pub fn new() -> ChunkedRowState {
+        ChunkedRowState::default()
+    }
+
+    /// Bytes of streaming scratch this row currently holds, computed
+    /// from element counts (not allocator capacities) so the number is
+    /// deterministic across runs and platforms — it feeds the
+    /// peak-scratch gates in BENCH json.
+    pub fn scratch_bytes(&self) -> usize {
+        self.grants.len() * std::mem::size_of::<Grant>()
+            + self.chunk_grants.len() * std::mem::size_of::<Grant>()
+            + self.dense.len() * std::mem::size_of::<f64>()
+            + self.taken.len()
+    }
+}
+
 /// How a macro converts one row of MAC results and selects the values
 /// that reach the softmax core — the one axis the Fig 4(a) designs vary.
+///
+/// Besides the monolithic `select`/`select_rows` entry points, every
+/// strategy implements the *chunked* protocol the streaming attention
+/// engine drives: `begin_chunked_row` resets a row's state,
+/// `fold_chunk` absorbs one key chunk's crossing cycles, and
+/// `finish_chunked_row` emits the selection and prices the row as if
+/// it had been one monolithic conversion. The contract (asserted by
+/// `tests/chunked_parity.rs`) is bit-identity with the monolithic path:
+/// same selected (column, value) pairs in the same order, same f64
+/// costs, for any chunk width and any chunk count.
 pub trait SelectionStrategy {
     /// Convert `macs` and append the selected (column, value) pairs to
     /// `sel` (cleared by the caller); report the conversion-phase cost.
@@ -245,6 +299,58 @@ pub trait SelectionStrategy {
             out.push_row(&row_sel, rc);
         }
         scratch.row_sel = row_sel;
+    }
+
+    /// Reset `state` for a fresh query row of a `d`-column (seq-wide)
+    /// conversion streamed in chunks.
+    fn begin_chunked_row(&self, d: usize, state: &mut ChunkedRowState);
+
+    /// Absorb one key chunk's packed crossing cycles (`crossings[i]` is
+    /// the firing cycle of absolute column `chunk_start + i`, [`NEVER`]
+    /// = never) into the row's streaming state. `converter` is the
+    /// seq-wide converter the engine calibrated.
+    fn fold_chunk(
+        &self,
+        converter: &TopkimaConverter,
+        crossings: &[u32],
+        chunk_start: usize,
+        state: &mut ChunkedRowState,
+    );
+
+    /// Close out a streamed row: append the selected (column, value)
+    /// pairs to `sel` (cleared by the caller) and price the row exactly
+    /// as the monolithic path would have.
+    fn finish_chunked_row(
+        &self,
+        converter: &TopkimaConverter,
+        timing: &Timing,
+        energy: &Energy,
+        d: usize,
+        state: &mut ChunkedRowState,
+        sel: &mut Vec<(usize, f64)>,
+    ) -> RowCost;
+}
+
+/// Shared chunked scatter for the full-conversion baselines: write one
+/// chunk's fired crossings into the row's dense value slice at absolute
+/// column addresses (0.0 stays for columns that never fire), exactly
+/// what [`scatter_dense`] produces monolithically.
+fn scatter_chunk_dense(
+    converter: &TopkimaConverter,
+    crossings: &[u32],
+    chunk_start: usize,
+    dense: &mut [f64],
+) {
+    let lsb = converter.ramp.lsb();
+    let end = chunk_start.saturating_add(crossings.len()).min(dense.len());
+    let slots = match dense.get_mut(chunk_start..end) {
+        Some(s) => s,
+        None => return,
+    };
+    for (slot, &t) in slots.iter_mut().zip(crossings) {
+        if t != NEVER {
+            *slot = converter.ramp.code_at(t) as f64 * lsb;
+        }
     }
 }
 
@@ -319,6 +425,40 @@ impl SelectionStrategy for FullConversion {
             });
         }
     }
+
+    fn begin_chunked_row(&self, d: usize, state: &mut ChunkedRowState) {
+        state.dense.clear();
+        state.dense.resize(d, 0.0);
+    }
+
+    fn fold_chunk(
+        &self,
+        converter: &TopkimaConverter,
+        crossings: &[u32],
+        chunk_start: usize,
+        state: &mut ChunkedRowState,
+    ) {
+        scatter_chunk_dense(converter, crossings, chunk_start, &mut state.dense);
+    }
+
+    fn finish_chunked_row(
+        &self,
+        converter: &TopkimaConverter,
+        _timing: &Timing,
+        _energy: &Energy,
+        d: usize,
+        state: &mut ChunkedRowState,
+        sel: &mut Vec<(usize, f64)>,
+    ) -> RowCost {
+        sel.extend(state.dense.iter().copied().enumerate());
+        let stats = converter.full_row_stats(d);
+        RowCost {
+            latency_ns: stats.latency_ns,
+            energy_pj: stats.energy_pj,
+            alpha: 1.0,
+            nl_elems: d,
+        }
+    }
 }
 
 /// Full conversion + digital top-k sorter (Eq. 3's selection).
@@ -384,6 +524,42 @@ impl SelectionStrategy for DigitalTopkSelect {
             );
         }
         scratch.row_sel = row_sel;
+    }
+
+    fn begin_chunked_row(&self, d: usize, state: &mut ChunkedRowState) {
+        state.dense.clear();
+        state.dense.resize(d, 0.0);
+    }
+
+    fn fold_chunk(
+        &self,
+        converter: &TopkimaConverter,
+        crossings: &[u32],
+        chunk_start: usize,
+        state: &mut ChunkedRowState,
+    ) {
+        scatter_chunk_dense(converter, crossings, chunk_start, &mut state.dense);
+    }
+
+    fn finish_chunked_row(
+        &self,
+        converter: &TopkimaConverter,
+        timing: &Timing,
+        energy: &Energy,
+        d: usize,
+        state: &mut ChunkedRowState,
+        sel: &mut Vec<(usize, f64)>,
+    ) -> RowCost {
+        digital_topk_into(&state.dense, self.k, sel, &mut state.taken);
+        let stats = converter.full_row_stats(d);
+        let sort_ns = timing.t_sort(d, self.k);
+        let sort_pj = sort_compare_bound(d, self.k) * energy.e_sort_cmp;
+        RowCost {
+            latency_ns: stats.latency_ns + sort_ns,
+            energy_pj: stats.energy_pj + sort_pj,
+            alpha: 1.0,
+            nl_elems: self.k,
+        }
     }
 }
 
@@ -455,6 +631,69 @@ impl SelectionStrategy for TopkimaSelect {
                 alpha: stats.alpha,
                 nl_elems: row_out.len(),
             });
+        }
+    }
+
+    fn begin_chunked_row(&self, _d: usize, state: &mut ChunkedRowState) {
+        state.grants.clear();
+    }
+
+    fn fold_chunk(
+        &self,
+        converter: &TopkimaConverter,
+        crossings: &[u32],
+        chunk_start: usize,
+        state: &mut ChunkedRowState,
+    ) {
+        // Arbitrate the chunk in isolation (both arbitrate_into regimes
+        // produce the chunk's exact (cycle, column)-sorted top-k), then
+        // fold into the row-global bounded set. The global top-k is a
+        // subset of the union of per-chunk top-k's, and insert_bounded
+        // is arrival-order independent, so the merged set — and every
+        // chunk-boundary tie — lands exactly where one monolithic
+        // arbitration would put it.
+        arbitrate_into(
+            crossings,
+            self.k,
+            converter.ramp.steps(),
+            &mut state.chunk_grants,
+        );
+        for g in &state.chunk_grants {
+            arbiter::insert_bounded(
+                &mut state.grants,
+                self.k,
+                Grant { column: chunk_start + g.column, cycle: g.cycle },
+            );
+        }
+    }
+
+    fn finish_chunked_row(
+        &self,
+        converter: &TopkimaConverter,
+        _timing: &Timing,
+        _energy: &Energy,
+        _d: usize,
+        state: &mut ChunkedRowState,
+        sel: &mut Vec<(usize, f64)>,
+    ) -> RowCost {
+        let lsb = converter.ramp.lsb();
+        sel.extend(
+            state
+                .grants
+                .iter()
+                .map(|g| (g.column, converter.ramp.code_at(g.cycle) as f64 * lsb)),
+        );
+        let stats = arbiter::stats_of(
+            &state.grants,
+            self.k,
+            converter.ramp.steps(),
+        );
+        let cs = converter.topk_row_stats(stats, self.k);
+        RowCost {
+            latency_ns: cs.latency_ns,
+            energy_pj: cs.energy_pj,
+            alpha: cs.alpha,
+            nl_elems: state.grants.len(),
         }
     }
 }

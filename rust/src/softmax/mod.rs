@@ -20,8 +20,8 @@ pub mod macros;
 pub use digital::DigitalSoftmax;
 pub use dtopk::digital_topk;
 pub use macros::{
-    macro_for, ConvSm, DtopkSm, MacroCost, MacroScratch, SelectionStrategy,
-    SoftmaxMacro, TopkimaSm,
+    macro_for, ChunkedRowState, ConvSm, DtopkSm, MacroCost, MacroScratch,
+    SelectionStrategy, SoftmaxMacro, TopkimaSm,
 };
 
 /// Which softmax macro the score stage uses — the single cross-layer

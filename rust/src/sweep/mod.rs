@@ -22,8 +22,11 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+use crate::attention::{
+    selection_checksum, ChunkedAttention, GeneratedKeys,
+};
 use crate::crossbar::Crossbar;
-use crate::ima::NoiseModel;
+use crate::ima::{ColumnNoise, NoiseModel};
 use crate::pipeline::{ConfigError, StackConfig};
 use crate::softmax::SoftmaxKind;
 use crate::util::json::{self, Json};
@@ -145,6 +148,12 @@ pub struct PointResult {
     /// Order-weighted probability digest of the behavioral output rows —
     /// the quantity the determinism test compares across thread counts.
     pub prob_checksum: f64,
+    /// Key-chunk width of the streaming attention path; `None` = the
+    /// point ran the monolithic macro.
+    pub chunk_cols: Option<usize>,
+    /// Peak transient working set of the streaming run, bytes (0 for
+    /// monolithic points — the figure only exists on the chunked path).
+    pub peak_scratch_bytes: usize,
 }
 
 impl PointResult {
@@ -177,6 +186,13 @@ impl PointResult {
             macro_latency_ns: num("macro_latency_ns")?,
             macro_energy_pj: num("macro_energy_pj")?,
             prob_checksum: num("prob_checksum")?,
+            // long-context fields arrived later: tolerate their absence
+            // in reports written by older builds
+            chunk_cols: v.get("chunk_cols").as_usize(),
+            peak_scratch_bytes: v
+                .get("peak_scratch_bytes")
+                .as_usize()
+                .unwrap_or(0),
         })
     }
 
@@ -195,6 +211,15 @@ impl PointResult {
             ("macro_latency_ns", Json::Num(self.macro_latency_ns)),
             ("macro_energy_pj", Json::Num(self.macro_energy_pj)),
             ("prob_checksum", Json::Num(self.prob_checksum)),
+            (
+                "chunk_cols",
+                self.chunk_cols
+                    .map_or(Json::Null, |c| Json::Num(c as f64)),
+            ),
+            (
+                "peak_scratch_bytes",
+                Json::Num(self.peak_scratch_bytes as f64),
+            ),
         ])
     }
 }
@@ -361,29 +386,80 @@ fn eval_point(
     let depth = tc
         .d_head()
         .min(Crossbar::weight_capacity(cfg.rows, cfg.replica_rows));
-    let width = tc.seq_len.min(cfg.cols).max(cfg.k.max(1));
     let mut rng = Rng::new(
         opts.seed ^ (index as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
     );
-    let m = builder.build_macro_gaussian(depth, width, &mut rng);
-    let q: Vec<Vec<i32>> = (0..opts.q_rows)
-        .map(|_| {
-            (0..depth)
-                .map(|_| (rng.normal() * 5.0).round().clamp(-15.0, 15.0) as i32)
-                .collect()
-        })
-        .collect();
-    let (probs, cost) = m.run(&q, &mut rng);
-    let prob_checksum = probs
-        .iter()
-        .enumerate()
-        .map(|(r, row)| {
-            row.iter()
-                .enumerate()
-                .map(|(c, p)| p * (r * width + c + 1) as f64)
-                .sum::<f64>()
-        })
-        .sum();
+    let gen_q = |depth: usize, rng: &mut Rng| -> Vec<Vec<i32>> {
+        (0..opts.q_rows)
+            .map(|_| {
+                (0..depth)
+                    .map(|_| {
+                        (rng.normal() * 5.0).round().clamp(-15.0, 15.0) as i32
+                    })
+                    .collect()
+            })
+            .collect()
+    };
+    let (alpha, macro_latency_ns, macro_energy_pj, prob_checksum, peak) =
+        match cfg.chunk_cols {
+            Some(chunk) => {
+                // Long-context tier: the full sequence as key columns,
+                // streamed chunk-wide through the attention engine —
+                // never clamped to one physical array, and never
+                // materialized (procedural keys + sparse checksum).
+                let width = tc.seq_len;
+                let keys =
+                    GeneratedKeys::new(rng.next_u64(), width, depth);
+                let mut engine = ChunkedAttention::new(
+                    keys,
+                    chunk,
+                    cfg.tech,
+                    cfg.rows,
+                    cfg.cols,
+                    cfg.replica_rows,
+                )
+                .expect("grid points pre-validated");
+                if let Some(nm) = &cfg.noise {
+                    engine = engine
+                        .with_noise(ColumnNoise::new(*nm, width, &mut rng))
+                        .expect("noise spans the sequence");
+                }
+                let q = gen_q(depth, &mut rng);
+                let run = engine
+                    .run_kind(cfg.softmax, cfg.k, &q, &mut rng)
+                    .expect("pre-validated streaming run");
+                (
+                    run.cost.alpha,
+                    run.cost.latency_ns,
+                    run.cost.energy_pj,
+                    selection_checksum(&run.sels, width),
+                    run.peak_scratch_bytes,
+                )
+            }
+            None => {
+                let width = tc.seq_len.min(cfg.cols).max(cfg.k.max(1));
+                let m = builder.build_macro_gaussian(depth, width, &mut rng);
+                let q = gen_q(depth, &mut rng);
+                let (probs, cost) = m.run(&q, &mut rng);
+                let prob_checksum = probs
+                    .iter()
+                    .enumerate()
+                    .map(|(r, row)| {
+                        row.iter()
+                            .enumerate()
+                            .map(|(c, p)| p * (r * width + c + 1) as f64)
+                            .sum::<f64>()
+                    })
+                    .sum();
+                (
+                    cost.alpha,
+                    cost.latency_ns,
+                    cost.energy_pj,
+                    prob_checksum,
+                    0,
+                )
+            }
+        };
 
     PointResult {
         index,
@@ -395,10 +471,12 @@ fn eval_point(
         sys_energy_pj: sim.energy_pj(),
         tops: sim.tops(),
         tops_per_watt: sim.tops_per_watt(),
-        alpha: cost.alpha,
-        macro_latency_ns: cost.latency_ns,
-        macro_energy_pj: cost.energy_pj,
+        alpha,
+        macro_latency_ns,
+        macro_energy_pj,
         prob_checksum,
+        chunk_cols: cfg.chunk_cols,
+        peak_scratch_bytes: peak,
     }
 }
 
@@ -625,6 +703,74 @@ mod tests {
             },
         );
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn chunked_points_record_peak_scratch() {
+        let base = StackConfig::default().with_chunk_cols(32);
+        let grid = SweepGrid {
+            ks: vec![5],
+            seq_lens: vec![256],
+            softmaxes: vec![SoftmaxKind::Topkima],
+            noises: vec![None, Some(NoiseModel::default())],
+        };
+        let r = run_sweep(
+            &base,
+            &grid,
+            &SweepOptions { q_rows: 2, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(r.points.len(), 2);
+        for p in &r.points {
+            assert_eq!(p.chunk_cols, Some(32));
+            assert!(p.peak_scratch_bytes > 0, "streaming path measured");
+            assert!(p.prob_checksum.is_finite());
+            assert!(p.alpha > 0.0 && p.alpha < 1.0, "alpha {}", p.alpha);
+        }
+        // the long-context fields survive the JSON roundtrip
+        let back = SweepReport::from_json_str(&r.to_json_string()).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn chunk_width_does_not_change_the_numbers() {
+        // The streaming merge is chunk-width invariant (the bit-parity
+        // contract), so two widths must serialize identical points.
+        let grid = SweepGrid {
+            ks: vec![4],
+            seq_lens: vec![192],
+            softmaxes: vec![SoftmaxKind::Topkima],
+            noises: vec![None, Some(NoiseModel::default())],
+        };
+        let run_at = |chunk: usize| {
+            run_sweep(
+                &StackConfig::default().with_chunk_cols(chunk),
+                &grid,
+                &SweepOptions { q_rows: 2, ..Default::default() },
+            )
+            .unwrap()
+        };
+        let (a, b) = (run_at(48), run_at(131));
+        for (pa, pb) in a.points.iter().zip(&b.points) {
+            assert_eq!(pa.prob_checksum, pb.prob_checksum);
+            assert_eq!(pa.macro_latency_ns, pb.macro_latency_ns);
+            assert_eq!(pa.macro_energy_pj, pb.macro_energy_pj);
+            assert_eq!(pa.alpha, pb.alpha);
+        }
+    }
+
+    #[test]
+    fn legacy_point_json_without_longctx_fields_parses() {
+        let text = r#"{"seed":"5","q_rows":2,"grid_len":1,
+            "shard_index":0,"shard_count":1,"points":[{
+            "index":0,"k":5,"seq_len":64,"softmax":"topkima",
+            "noisy":false,"sys_latency_ns":1.0,"sys_energy_pj":2.0,
+            "tops":3.0,"tops_per_watt":4.0,"alpha":0.5,
+            "macro_latency_ns":6.0,"macro_energy_pj":7.0,
+            "prob_checksum":8.0}]}"#;
+        let back = SweepReport::from_json_str(text).unwrap();
+        assert_eq!(back.points[0].chunk_cols, None);
+        assert_eq!(back.points[0].peak_scratch_bytes, 0);
     }
 
     #[test]

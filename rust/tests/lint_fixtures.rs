@@ -67,6 +67,19 @@ fn panic_path_catches_a_naked_unwrap_on_the_serving_path() {
 }
 
 #[test]
+fn panic_path_covers_the_attention_engine() {
+    // the streaming long-context engine is on the serving path too
+    let set = single(
+        "rust/src/attention/mod.rs",
+        "fn tile(&self) {\n    let t = self.tiles[chunk_idx];\n    \
+         t.begin().unwrap();\n}\n",
+    );
+    let report = run(&set);
+    assert_eq!(report.findings.len(), 2, "{:?}", report.findings);
+    assert!(report.findings.iter().all(|f| f.checker == "panic-path"));
+}
+
+#[test]
 fn lock_discipline_catches_a_guard_held_across_a_send() {
     let set = single(
         "rust/src/coordinator/shard.rs",
