@@ -12,8 +12,16 @@
 #      the run; the JSON report lands in BENCH_lint.json
 #   4. smoke: `topkima check` (skips cleanly when no artifacts exist)
 #   5. smoke: `topkima sweep-hw` on a tiny grid (JSON baseline emitted)
+#   5c. smoke: `topkima sweep-hw` over the full 6-design accelerator
+#      registry (conv,dtopk,topkima,ita,hyft,sole) → BENCH_sweep_zoo.json
 #   6. smoke: `topkima serve-fleet` (sharded fleet under synthetic load;
 #      BENCH_fleet.json emitted, fails on any dropped request)
+#   6b. smoke: `topkima serve-fleet --ab topkima,sole` — one fleet
+#      A/B-ing two registry designs as two streams
+#   5d. nightly long-context tier (opt-in, TOPKIMA_NIGHTLY=1): one
+#      1,048,576-column topkima point through the streaming engine
+#      (GeneratedKeys — K^T is never materialized). Skipped loudly in
+#      the default run; set TOPKIMA_NIGHTLY=1 to arm it
 #   3c. SIMD parity gate (HARD): rerun the parity suites
 #      (scratch_parity, sweep_determinism, simd_parity, macro_parity,
 #      chunked_parity) with TOPKIMA_SIMD=off — the default-mode run is
@@ -52,6 +60,9 @@
 #  10. refresh the EXPERIMENTS.md §Perf table between the
 #      PERF_TABLE_BEGIN/END markers, and the scalar-vs-SIMD table
 #      between the SIMD_TABLE_BEGIN/END markers, from the fresh numbers
+#  11. refresh the EXPERIMENTS.md cross-accelerator Table 1 between the
+#      TABLE1_BEGIN/END markers from `topkima accel-table --markdown`
+#      (calibrated registry ratios at the paper's d=384, k=5 point)
 #
 # Exit code reflects the tier-1 gate + the lint gate + smoke steps;
 # fmt/clippy failures only fail the run when CI_STRICT=1 (they may be
@@ -154,6 +165,22 @@ else
     status=1
 fi
 
+note "smoke: topkima sweep-hw (6-design accelerator zoo grid)"
+# Every registered design — the legacy three plus the rival zoo — runs
+# through the same sweep harness on one tiny point each. This is the
+# registry's end-to-end smoke: a kind that parses but cannot simulate
+# fails here, not in a user's sweep.
+if cargo run --release --quiet -- sweep-hw \
+        --threads 2 --ks 5 --seq-lens 64 \
+        --kinds conv,dtopk,topkima,ita,hyft,sole --noise-points ideal \
+        --q-rows 1 --out BENCH_sweep_zoo.json \
+    && [ -s BENCH_sweep_zoo.json ]; then
+    echo "ok: BENCH_sweep_zoo.json written (all 6 registry designs swept)"
+else
+    echo "FAIL: topkima sweep-hw accelerator-zoo smoke"
+    status=1
+fi
+
 note "long-context tier: sweep-hw --chunk-cols 256 at 4k and 64k"
 # The streaming attention engine never materializes the score row:
 # peak_scratch_bytes per point is deterministic element-count
@@ -179,6 +206,27 @@ else
     status=1
 fi
 
+note "nightly long-context tier: 1M-column point (TOPKIMA_NIGHTLY=1)"
+# One 2^20-column topkima point through the streaming chunked engine.
+# GeneratedKeys synthesizes key codes on demand, so K^T is never
+# materialized — peak state stays chunk-bounded even at a million
+# columns. Too slow for every push; nightly runners arm it.
+if [ "${TOPKIMA_NIGHTLY:-0}" = "1" ]; then
+    if cargo run --release --quiet -- sweep-hw \
+            --threads 2 --ks 8 --seq-lens 1048576 \
+            --kinds topkima --noise-points ideal \
+            --q-rows 1 --chunk-cols 256 --out BENCH_sweep_1m.json \
+        && [ -s BENCH_sweep_1m.json ]; then
+        echo "ok: BENCH_sweep_1m.json written (1,048,576-column point)"
+    else
+        echo "FAIL: nightly 1M-column sweep point"
+        status=1
+    fi
+else
+    echo "SKIP: nightly 1M-column point NOT run (set TOPKIMA_NIGHTLY=1" \
+         "to run it — this default run proves nothing about the 1M tier)"
+fi
+
 note "smoke: topkima serve-fleet (2 shards, 3 streams, synthetic load)"
 if cargo run --release --quiet -- serve-fleet \
         --duration-ms 200 --seed 7 --out BENCH_fleet.json \
@@ -186,6 +234,20 @@ if cargo run --release --quiet -- serve-fleet \
     echo "ok: BENCH_fleet.json written (zero dropped requests)"
 else
     echo "FAIL: topkima serve-fleet smoke"
+    status=1
+fi
+
+note "smoke: topkima serve-fleet --ab topkima,sole (registry A/B)"
+# Two registry designs served side by side as two streams of one fleet:
+# design A (topkima, top-k) vs design B (sole, dense). Proves the
+# behavioral path can host a non-legacy design end to end.
+if cargo run --release --quiet -- serve-fleet \
+        --duration-ms 200 --seed 7 --ab topkima,sole \
+        --out BENCH_fleet_ab.json \
+    && [ -s BENCH_fleet_ab.json ]; then
+    echo "ok: BENCH_fleet_ab.json written (topkima vs sole A/B)"
+else
+    echo "FAIL: topkima serve-fleet --ab smoke"
     status=1
 fi
 
@@ -416,6 +478,33 @@ if [ -s BENCH_sweep_long.json ] \
     fi
 else
     echo "WARN: no BENCH_sweep_long.json or no markers; table left as-is"
+fi
+
+# -- EXPERIMENTS.md cross-accelerator Table 1: registry designs vs ----
+# -- conv-SM at the paper's d=384, k=5, alpha=0.31 point           ----
+note "EXPERIMENTS.md cross-accelerator Table 1 refresh"
+if grep -q TABLE1_BEGIN EXPERIMENTS.md \
+        && grep -q TABLE1_END EXPERIMENTS.md; then
+    if cargo run --release --quiet -- accel-table --markdown \
+            > /tmp/topkima_accel_table.md; then
+        awk '
+            /TABLE1_BEGIN/ {
+                print
+                while ((getline line < "/tmp/topkima_accel_table.md") > 0)
+                    print line
+                skip = 1
+                next
+            }
+            /TABLE1_END/ { skip = 0 }
+            skip == 0 { print }
+        ' EXPERIMENTS.md > EXPERIMENTS.md.tmp \
+            && mv EXPERIMENTS.md.tmp EXPERIMENTS.md
+        echo "ok: EXPERIMENTS.md cross-accelerator Table 1 refreshed"
+    else
+        echo "WARN: accel-table --markdown failed; Table 1 left as-is"
+    fi
+else
+    echo "WARN: no TABLE1 markers in EXPERIMENTS.md; Table 1 left as-is"
 fi
 
 if [ "$status" = "0" ]; then

@@ -61,8 +61,8 @@ use crate::crossbar::{Crossbar, Tech};
 use crate::ima::{ColumnNoise, TopkimaConverter};
 use crate::softmax::digital::DigitalSoftmax;
 use crate::softmax::macros::{
-    ChunkedRowState, DigitalTopkSelect, FullConversion, MacroCost, RowCost,
-    SelectionRows, SelectionStrategy, TopkimaSelect,
+    ChunkedRowState, MacroCost, RowCost, SelectionRows, SelectionStrategy,
+    StageSchedule,
 };
 use crate::softmax::SoftmaxKind;
 use crate::util::rng::Rng;
@@ -561,6 +561,23 @@ impl<S: KeySource> ChunkedAttention<S> {
         q_rows: &[Vec<i32>],
         rng: &mut Rng,
     ) -> Result<ChunkedRun, AttentionError> {
+        self.run_streaming_with(strategy, &StageSchedule::LEGACY, q_rows, rng)
+    }
+
+    /// [`Self::run_streaming`] with an explicit [`StageSchedule`] — the
+    /// registry entry point. `StageSchedule::LEGACY` reduces the cost
+    /// sum to the exact pre-registry expressions (same association
+    /// order), preserving byte-identity for the in-house designs; a
+    /// rival schedule scales the NL price and may add a post stage with
+    /// the same expressions `run_macro_with` uses, so mono↔chunked
+    /// bit-parity holds for every registered design.
+    pub fn run_streaming_with<St: SelectionStrategy + ?Sized>(
+        &self,
+        strategy: &St,
+        schedule: &StageSchedule,
+        q_rows: &[Vec<i32>],
+        rng: &mut Rng,
+    ) -> Result<ChunkedRun, AttentionError> {
         let seq = self.source.seq_len();
         let d = self.source.depth();
         for q in q_rows {
@@ -659,15 +676,19 @@ impl<S: KeySource> ChunkedAttention<S> {
                 &mut row_sel,
             );
             let (mac_ns, mac_pj) = self.mac_phase_cost(q);
-            cost.absorb(
-                mac_ns
-                    + rc.latency_ns
-                    + self.softmax.latency_ns(rc.nl_elems),
-                mac_pj
-                    + rc.energy_pj
-                    + self.softmax.energy_pj(rc.nl_elems),
-                rc.alpha,
-            );
+            let nl_ns = self.softmax.latency_ns(rc.nl_elems);
+            let nl_pj = self.softmax.energy_pj(rc.nl_elems);
+            let (nl_ns, nl_pj) = match schedule.nl_scale {
+                None => (nl_ns, nl_pj),
+                Some((l, e)) => (nl_ns * l, nl_pj * e),
+            };
+            let mut row_ns = mac_ns + rc.latency_ns + nl_ns;
+            let mut row_pj = mac_pj + rc.energy_pj + nl_pj;
+            if let Some((l, e)) = schedule.post_scale {
+                row_ns += self.softmax.latency_ns(seq) * l;
+                row_pj += self.softmax.energy_pj(seq) * e;
+            }
+            cost.absorb(row_ns, row_pj, rc.alpha);
             sels.push_row(&row_sel, rc);
         }
         let sels_bytes = sels.sel.len()
@@ -695,24 +716,21 @@ impl<S: KeySource> ChunkedAttention<S> {
         q_rows: &[Vec<i32>],
         rng: &mut Rng,
     ) -> Result<ChunkedRun, AttentionError> {
-        match kind {
-            SoftmaxKind::Conventional => {
-                self.run_streaming(&FullConversion, q_rows, rng)
-            }
-            SoftmaxKind::Dtopk => {
-                self.run_streaming(&DigitalTopkSelect { k }, q_rows, rng)
-            }
-            SoftmaxKind::Topkima => {
-                self.run_streaming(&TopkimaSelect { k }, q_rows, rng)
-            }
-        }
+        let model = crate::softmax::registry::model_for(kind);
+        let strategy = model.strategy(k);
+        self.run_streaming_with(
+            strategy.as_ref(),
+            &model.schedule(),
+            q_rows,
+            rng,
+        )
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::softmax::macros::{run_macro, MacroParts};
+    use crate::softmax::macros::{macro_for, MacroParts, TopkimaSelect};
 
     fn kt(depth: usize, seq: usize) -> Vec<Vec<i32>> {
         (0..depth)
@@ -873,23 +891,10 @@ mod tests {
                 let run = engine.run_kind(kind, k, &q, &mut rng_a).unwrap();
                 let strategy_probs =
                     run.probs_dense(&engine.softmax, seq);
-                let (probs, cost) = match kind {
-                    SoftmaxKind::Conventional => {
-                        run_macro(&parts, &FullConversion, &q, &mut rng_b)
-                    }
-                    SoftmaxKind::Dtopk => run_macro(
-                        &parts,
-                        &DigitalTopkSelect { k },
-                        &q,
-                        &mut rng_b,
-                    ),
-                    SoftmaxKind::Topkima => run_macro(
-                        &parts,
-                        &TopkimaSelect { k },
-                        &q,
-                        &mut rng_b,
-                    ),
-                };
+                // the registry assembles the monolithic reference for
+                // every kind — rivals included
+                let (probs, cost) =
+                    macro_for(kind, parts, k).run(&q, &mut rng_b);
                 assert_eq!(
                     run.cost, cost,
                     "cost parity {kind:?} noisy={noisy}"

@@ -25,7 +25,10 @@ use anyhow::Result;
 
 use crate::attention::{ChunkedAttention, GeneratedKeys};
 use crate::crossbar::{Crossbar, Tech};
-use crate::softmax::macros::{run_macro, MacroParts, TopkimaSelect};
+use crate::softmax::macros::{
+    run_macro, run_macro_with, MacroParts, TopkimaSelect,
+};
+use crate::softmax::SoftmaxKind;
 use crate::util::rng::Rng;
 
 use super::request::InputData;
@@ -108,6 +111,9 @@ const BEHAVIORAL_COLS: usize = 64;
 pub struct BehavioralMacro {
     parts: MacroParts,
     k: usize,
+    /// Accelerator design the stream's batches run through; the legacy
+    /// top-k path when registered via [`BehavioralExecutor::with_stream`].
+    kind: SoftmaxKind,
 }
 
 /// Deterministic per-stream salt: every shard (and every run) derives
@@ -122,7 +128,11 @@ impl BehavioralMacro {
     /// Program the stream's tile from a fixed pseudo-pattern seeded by
     /// the stream key, so every shard (and every run) builds the same
     /// substrate.
-    fn new(key: &StreamKey, k: usize) -> BehavioralMacro {
+    fn new(
+        key: &StreamKey,
+        k: usize,
+        kind: SoftmaxKind,
+    ) -> BehavioralMacro {
         let salt = stream_salt(key);
         let kt: Vec<Vec<i32>> = (0..BEHAVIORAL_DEPTH)
             .map(|r| {
@@ -143,9 +153,8 @@ impl BehavioralMacro {
             BEHAVIORAL_DEPTH,
             &kt,
         ));
-        BehavioralMacro { parts, k: k.min(BEHAVIORAL_COLS) }
+        BehavioralMacro { parts, k: k.min(BEHAVIORAL_COLS), kind }
     }
-
 }
 
 /// Embed one request sample into a depth-`d` Q row of PWM codes (±15,
@@ -273,9 +282,23 @@ impl BehavioralExecutor {
     }
 
     /// Register a stream's substrate (programmed deterministically from
-    /// the key).
+    /// the key). Runs the legacy top-k selection path.
     pub fn with_stream(mut self, key: StreamKey, k: usize) -> BehavioralExecutor {
-        let m = BehavioralMacro::new(&key, k);
+        let m = BehavioralMacro::new(&key, k, SoftmaxKind::Topkima);
+        self.streams.insert(key, StreamMacro::Tile(m));
+        self
+    }
+
+    /// Register a stream running a specific registry design — the
+    /// `serve-fleet --ab` path, where design B is a dense rival and the
+    /// batch runs that design's selection strategy and cost schedule.
+    pub fn with_stream_design(
+        mut self,
+        key: StreamKey,
+        k: usize,
+        kind: SoftmaxKind,
+    ) -> BehavioralExecutor {
+        let m = BehavioralMacro::new(&key, k, kind);
         self.streams.insert(key, StreamMacro::Tile(m));
         self
     }
@@ -346,13 +369,27 @@ impl Executor for BehavioralExecutor {
                     .extend(inputs.iter().map(|i| embed_codes(d, i)));
                 q_rows.resize(rows, vec![0; d]);
                 // Ideal converter → the RNG is never drawn from; a
-                // fresh one per batch keeps that explicit.
-                let (probs, _cost) = run_macro(
-                    &m.parts,
-                    &TopkimaSelect { k: m.k },
-                    &q_rows,
-                    &mut Rng::new(0),
-                );
+                // fresh one per batch keeps that explicit. The legacy
+                // top-k streams keep their exact pre-registry call so
+                // replayed traces stay byte-identical.
+                let (probs, _cost) = if m.kind == SoftmaxKind::Topkima {
+                    run_macro(
+                        &m.parts,
+                        &TopkimaSelect { k: m.k },
+                        &q_rows,
+                        &mut Rng::new(0),
+                    )
+                } else {
+                    let model =
+                        crate::softmax::registry::model_for(m.kind);
+                    run_macro_with(
+                        &m.parts,
+                        model.strategy(m.k).as_ref(),
+                        &model.schedule(),
+                        &q_rows,
+                        &mut Rng::new(0),
+                    )
+                };
                 Ok(probs
                     .iter()
                     .take(inputs.len())
@@ -443,6 +480,26 @@ mod tests {
         // unknown stream is a loud error, not a panic
         let other: StreamKey = (Arc::from("vit"), 3);
         assert!(e.execute(&other, &[a], 1).is_err());
+    }
+
+    #[test]
+    fn rival_design_streams_serve_dense_batches() {
+        // An A/B pair: topkima at k=5 vs a dense rival at k=0.
+        let a_key: StreamKey = (Arc::from("bert"), 5);
+        let b_key: StreamKey = (Arc::from("bert"), 0);
+        let mut e = BehavioralExecutor::new()
+            .with_stream(a_key.clone(), 5)
+            .with_stream_design(b_key.clone(), 0, SoftmaxKind::Sole);
+        let x = Arc::new(InputData::I32(vec![3, -2, 9]));
+        let a = e.execute(&a_key, &[x.clone()], 2).unwrap();
+        let b = e.execute(&b_key, &[x.clone()], 2).unwrap();
+        assert_eq!(a[0][1], 5.0);
+        assert_eq!(b[0][1], 0.0);
+        assert!(b[0][0].is_finite() && b[0][0] > 0.0);
+        // the two designs produce distinct checksums
+        assert_ne!(a[0][0], b[0][0]);
+        // deterministic across replays
+        assert_eq!(b, e.execute(&b_key, &[x], 2).unwrap());
     }
 
     #[test]

@@ -9,7 +9,9 @@
 //! * **schema-sync** — frame kinds in `wire.rs` vs serializer/parser
 //!   arms, tests, and DESIGN.md §11; config-struct fields vs
 //!   `to_json`/`from_json`/`from_args`/help text; `invalid(..)`
-//!   literals vs real field names.
+//!   literals vs real field names; accelerator-registry kind keys
+//!   (`softmax/registry.rs`) vs the config parser surface, the
+//!   `--softmax` help text, and DESIGN.md §15.
 //! * **panic-path** — no panic-capable construct (`unwrap`, `expect`,
 //!   `panic!`, asserts, computed indexing) in non-test
 //!   `coordinator/**` code.
@@ -157,13 +159,14 @@ impl SourceSet {
     /// Load the repo surfaces the checkers cover: the whole
     /// `rust/src/coordinator/` and `rust/src/attention/` trees plus the
     /// schema files (`pipeline/config.rs`, `main.rs`,
-    /// `tests/transport_proc.rs`, `DESIGN.md`) and the SIMD kernel
-    /// layer (`util/simd.rs`).
+    /// `softmax/registry.rs`, `tests/transport_proc.rs`, `DESIGN.md`)
+    /// and the SIMD kernel layer (`util/simd.rs`).
     pub fn from_repo(root: &Path) -> io::Result<SourceSet> {
         let mut set = SourceSet::default();
         for rel in [
             "rust/src/pipeline/config.rs",
             "rust/src/main.rs",
+            "rust/src/softmax/registry.rs",
             "rust/src/util/simd.rs",
             "rust/tests/transport_proc.rs",
             "DESIGN.md",

@@ -16,6 +16,13 @@
 //! fields, so error messages never point users at knobs that do not
 //! exist.
 //!
+//! Registry side (`softmax/registry.rs`): every kind key in the
+//! `pub const KEYS` table must appear in the config parser surface
+//! (`pipeline/config.rs`), the `--softmax` help text (`main.rs`), and
+//! DESIGN.md §15 — registering an accelerator without wiring it
+//! through config, CLI, and docs is a lint failure, not a review
+//! catch.
+//!
 //! All findings anchor at the declaration site (the `kind()` match arm
 //! or the struct field), which is also where a suppression would go.
 
@@ -34,6 +41,7 @@ const CONFIG_STRUCTS: &[(&str, bool)] = &[
     ("TransportConfig", false),
     ("StreamSpec", false),
     ("BatchPolicy", false),
+    ("AccelConfig", false),
     ("StealPolicy", true),
 ];
 
@@ -45,6 +53,9 @@ pub(crate) fn check(set: &SourceSet) -> Vec<PathHit> {
     if let Some(cfg) = set.find("pipeline/config.rs") {
         check_config(set, cfg, &mut hits);
     }
+    if let Some(reg) = set.find("softmax/registry.rs") {
+        check_registry(set, reg, &mut hits);
+    }
     hits
 }
 
@@ -53,7 +64,7 @@ pub(crate) fn check(set: &SourceSet) -> Vec<PathHit> {
 fn check_wire(set: &SourceSet, wire: &SourceFile, hits: &mut Vec<PathHit>) {
     let proc_tests = set.find("tests/transport_proc.rs");
     let design = set.find("DESIGN.md");
-    let section = design.map(design_section_11);
+    let section = design.map(|d| design_section(d, "## §11"));
     for (idx, kind, variant) in kind_arms(wire) {
         let anchor = |msg: String| {
             (wire.path.clone(), idx, "schema-sync", msg)
@@ -127,13 +138,14 @@ fn kind_arms(wire: &SourceFile) -> Vec<(usize, String, String)> {
     arms
 }
 
-/// DESIGN.md §11 body: from the `## §11` heading to the next `## `.
-fn design_section_11(design: &SourceFile) -> String {
+/// One DESIGN.md section body: from the heading starting with `prefix`
+/// (e.g. `## §11`) to the next `## `.
+fn design_section(design: &SourceFile, prefix: &str) -> String {
     let mut out = String::new();
     let mut inside = false;
     for line in &design.lines {
         if line.raw.starts_with("## ") {
-            inside = line.raw.starts_with("## §11");
+            inside = line.raw.starts_with(prefix);
             continue;
         }
         if inside {
@@ -241,7 +253,7 @@ fn struct_fields(file: &SourceFile, name: &str) -> Vec<(usize, String)> {
 /// no flag; the transport/steal knobs use prefixed flag names.
 fn flag_for(struct_name: &str, field: &str) -> Option<String> {
     match (struct_name, field) {
-        ("StackConfig", "serving" | "fleet") => None,
+        ("StackConfig", "serving" | "fleet" | "accel") => None,
         ("FleetConfig", "streams" | "steal" | "transport") => None,
         ("StreamSpec", _) | ("BatchPolicy", _) => None,
         ("TransportConfig", "kind") => Some("transport".to_string()),
@@ -306,6 +318,78 @@ fn check_invalid_literals(
             }
         }
     }
+}
+
+// ---- accelerator registry ----------------------------------------------
+
+/// Every registered kind key must reach the config parser surface, the
+/// CLI help text, and the DESIGN.md §15 registry docs.
+fn check_registry(
+    set: &SourceSet,
+    reg: &SourceFile,
+    hits: &mut Vec<PathHit>,
+) {
+    let cfg = set.find("pipeline/config.rs");
+    let main = set.find("src/main.rs");
+    let design = set.find("DESIGN.md");
+    let section = design.map(|d| design_section(d, "## §15"));
+    for (idx, key) in registry_keys(reg) {
+        let anchor = |msg: String| {
+            (reg.path.clone(), idx, "schema-sync", msg)
+        };
+        if let Some(c) = cfg {
+            if !any_raw(c, |l| l.contains(&format!("\"{key}\""))) {
+                hits.push(anchor(format!(
+                    "registry kind \"{key}\" never appears in \
+                     pipeline/config.rs — no parser arm or test names \
+                     it, so configs could not select it"
+                )));
+            }
+        }
+        if let Some(m) = main {
+            if !any_raw(m, |l| l.contains(key.as_str())) {
+                hits.push(anchor(format!(
+                    "registry kind \"{key}\" is missing from the \
+                     main.rs help text — `--softmax` never lists it"
+                )));
+            }
+        }
+        if let Some(sec) = &section {
+            if !sec.contains(&key) {
+                hits.push(anchor(format!(
+                    "registry kind \"{key}\" is undocumented — \
+                     DESIGN.md §15 never mentions it"
+                )));
+            }
+        }
+    }
+}
+
+/// `(line idx, key)` for each string literal in the registry's
+/// `pub const KEYS` table (the declaration may wrap lines; it ends at
+/// the `];`).
+fn registry_keys(reg: &SourceFile) -> Vec<(usize, String)> {
+    let Some(start) = reg
+        .lines
+        .iter()
+        .position(|l| !l.in_test && l.code.contains("pub const KEYS"))
+    else {
+        return Vec::new();
+    };
+    let mut keys = Vec::new();
+    for (idx, line) in reg.lines.iter().enumerate().skip(start) {
+        let mut rest = line.raw.as_str();
+        while let Some(p) = rest.find('"') {
+            let body = &rest[p + 1..];
+            let Some(end) = body.find('"') else { break };
+            keys.push((idx, body[..end].to_string()));
+            rest = &body[end + 1..];
+        }
+        if line.raw.contains("];") {
+            break;
+        }
+    }
+    keys
 }
 
 fn extract_literal(s: &str) -> Option<String> {
@@ -449,6 +533,56 @@ impl StackConfig {
         let hits = check(&s);
         assert_eq!(hits.len(), 1, "{hits:?}");
         assert!(hits[0].3.contains("row_parallel"));
+    }
+
+    const REGISTRY_OK: &str = r#"
+pub const KEYS: [&str; 2] =
+    ["conv", "topkima"];
+"#;
+
+    fn registry_set(design: &str) -> SourceSet {
+        set(&[
+            ("rust/src/softmax/registry.rs", REGISTRY_OK),
+            (
+                "rust/src/pipeline/config.rs",
+                "// parser surface: \"conv\" and \"topkima\" arms",
+            ),
+            (
+                "rust/src/main.rs",
+                "const HELP: &str = \"--softmax conv|topkima\";",
+            ),
+            ("DESIGN.md", design),
+        ])
+    }
+
+    #[test]
+    fn fully_wired_registry_is_clean() {
+        let s = registry_set(
+            "## §15 Registry\n\nkinds: `conv`, `topkima`.\n",
+        );
+        assert!(check(&s).is_empty(), "{:?}", check(&s));
+    }
+
+    #[test]
+    fn registry_key_absent_from_config_help_or_docs_is_flagged() {
+        // a kind registered but wired nowhere: config, help, and §15
+        // each produce one finding naming it
+        let ghost = REGISTRY_OK
+            .replace("[\"conv\", \"topkima\"]", "[\"conv\", \"topkima\", \"ghost\"]");
+        let mut s = registry_set(
+            "## §15 Registry\n\nkinds: `conv`, `topkima`.\n",
+        );
+        s.insert("rust/src/softmax/registry.rs", &ghost);
+        let hits = check(&s);
+        assert_eq!(hits.len(), 3, "{hits:?}");
+        assert!(hits.iter().all(|h| h.3.contains("ghost")));
+        assert!(hits.iter().all(|h| h.0.ends_with("registry.rs")));
+        // a §15 section that never names a wired kind is also caught
+        let s = registry_set("## §15 Registry\n\nkinds: `conv`.\n");
+        let hits = check(&s);
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        assert!(hits[0].3.contains("topkima"));
+        assert!(hits[0].3.contains("undocumented"));
     }
 
     #[test]

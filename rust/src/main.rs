@@ -95,6 +95,7 @@ fn main() -> Result<()> {
 
     match cmd {
         "report" => cmd_report(rest),
+        "accel-table" => cmd_accel_table(rest),
         "serve" => cmd_serve(rest),
         "serve-fleet" => cmd_serve_fleet(rest),
         "shard-worker" => topkima::coordinator::transport::run_shard_worker(),
@@ -169,6 +170,10 @@ const SUBCOMMANDS: &[(&str, &str, &str)] = &[
          transport only)\n\
          --steal-min-backlog N      batches a donor keeps per round\n\
          --steal-victim least-loaded|round-robin\n\
+         --ab A,B                   accelerator A/B study: replace the \
+         fleet with two equal-rate streams, design A at the stack's k \
+         and design B dense (B must be a dense-capable design: \
+         conv|ita|hyft|sole)\n\
          --config FILE              load a StackConfig JSON (flags \
          override it)",
     ),
@@ -185,9 +190,19 @@ const SUBCOMMANDS: &[(&str, &str, &str)] = &[
         "--model M          bert-base|distilbert|vit-base|bert-tiny\n\
          --seq-len SL       override the preset sequence length\n\
          --k K              top-k winners per softmax row\n\
-         --softmax KIND     conv|dtopk|topkima\n\
+         --softmax KIND     conv|dtopk|topkima|ita|hyft|sole\n\
          --alpha A          measured early-stop fraction\n\
          --config FILE      load a StackConfig JSON (flags override it)",
+    ),
+    (
+        "accel-table",
+        "cross-accelerator comparison table over the model registry",
+        "--seq-len SL       score-row width d (default: 384)\n\
+         --k K              top-k winners for the top-k designs \
+         (default: 5)\n\
+         --alpha A          measured early-stop fraction (default: 0.31)\n\
+         --markdown         render the EXPERIMENTS.md §Accelerator zoo \
+         table instead of the console form",
     ),
     (
         "sweep",
@@ -203,7 +218,7 @@ const SUBCOMMANDS: &[(&str, &str, &str)] = &[
         "--threads N              worker threads\n\
          --ks 1,2,5,10            k axis\n\
          --seq-lens 128,384       sequence-length axis\n\
-         --kinds conv,dtopk,topkima\n\
+         --kinds conv,dtopk,topkima,ita,hyft,sole\n\
          --noise-points ideal,default\n\
          --q-rows N               behavioral Q rows per point\n\
          --seed S                 per-point seeding base\n\
@@ -254,7 +269,7 @@ const SUBCOMMANDS: &[(&str, &str, &str)] = &[
          --chunk-cols N             stream the score stage N key columns \
          at a time (long-context path; omit for monolithic)\n\
          --k K                      top-k winners per softmax row\n\
-         --softmax KIND             conv|dtopk|topkima\n\
+         --softmax KIND             conv|dtopk|topkima|ita|hyft|sole\n\
          --alpha A                  measured early-stop fraction\n\
          --scale S                  voltage/frequency scale preset\n\
          --rows N --cols N          crossbar tile geometry\n\
@@ -331,6 +346,128 @@ fn cmd_report(args: &[String]) -> Result<()> {
             speed.map_or("  -  ".into(), |s| format!("{s:5.1}×")),
             ee.map_or("  -  ".into(), |e| format!("{e:5.1}×")),
         );
+    }
+    Ok(())
+}
+
+/// `accel-table`: the cross-accelerator comparison table (EXPERIMENTS.md
+/// §Accelerator zoo, Table 1). One d-wide score row priced through every
+/// registered design's cost schedule, with ratios vs conv-SM and the
+/// published calibration targets the registry asserts against.
+fn cmd_accel_table(args: &[String]) -> Result<()> {
+    use topkima::softmax::registry;
+
+    let mut d: usize = 384;
+    let mut k: usize = 5;
+    let mut alpha: f64 = 0.31;
+    let mut markdown = false;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--seq-len" => {
+                d = flag_value(args, i, "seq-len")?.parse()?;
+                i += 2;
+            }
+            "--k" => {
+                k = flag_value(args, i, "k")?.parse()?;
+                i += 2;
+            }
+            "--alpha" => {
+                alpha = flag_value(args, i, "alpha")?.parse()?;
+                i += 2;
+            }
+            "--markdown" => {
+                markdown = true;
+                i += 1;
+            }
+            other => bail!("accel-table: unknown flag '{other}'"),
+        }
+    }
+    let (conv_ns, conv_pj) =
+        registry::row_costs(SoftmaxKind::Conventional, d, k, alpha);
+    if markdown {
+        println!(
+            "| design | key | source | latency (ns/row) | energy \
+             (pJ/row) | speedup vs conv | energy eff. vs conv | \
+             published (speed / EE) | status |"
+        );
+        println!("|---|---|---|---|---|---|---|---|---|");
+    } else {
+        println!(
+            "== Accelerator registry: one d={d} score row (k={k}, \
+             α={alpha}, 65 nm units) =="
+        );
+        println!(
+            "{:<12} {:<8} {:>14} {:>13} {:>10} {:>8}  {}",
+            "design", "key", "latency_ns", "energy_pj", "speed×", "EE×",
+            "calibration"
+        );
+    }
+    for kind in SoftmaxKind::ALL {
+        let model = registry::model_for(kind);
+        let (ns, pj) = registry::row_costs(kind, d, k, alpha);
+        let speed = conv_ns / ns;
+        let ee = conv_pj / pj;
+        let (published, status) = match model.calibration() {
+            None => (
+                "—".to_string(),
+                if kind == SoftmaxKind::Conventional {
+                    "baseline".to_string()
+                } else {
+                    "—".to_string()
+                },
+            ),
+            Some(c) => {
+                let ok = |got: f64, want: f64| {
+                    (got - want).abs() <= c.rel_tol * want
+                };
+                let within = ok(speed, c.latency_ratio_vs_conv)
+                    && ok(ee, c.energy_ratio_vs_conv);
+                (
+                    format!(
+                        "{:.1}× / {:.1}× ({})",
+                        c.latency_ratio_vs_conv,
+                        c.energy_ratio_vs_conv,
+                        c.source
+                    ),
+                    if within {
+                        format!(
+                            "within ±{:.0}%",
+                            c.rel_tol * 100.0
+                        )
+                    } else {
+                        "OFF TARGET".to_string()
+                    },
+                )
+            }
+        };
+        if markdown {
+            println!(
+                "| {} | `{}` | {} | {:.1} | {:.1} | {:.2}× | {:.2}× | \
+                 {} | {} |",
+                model.name(),
+                model.key(),
+                model.paper(),
+                ns,
+                pj,
+                speed,
+                ee,
+                published,
+                status
+            );
+        } else {
+            println!(
+                "{:<12} {:<8} {:>14.1} {:>13.1} {:>9.2}× {:>7.2}×  {} {}",
+                model.name(),
+                model.key(),
+                ns,
+                pj,
+                speed,
+                ee,
+                published,
+                status
+            );
+        }
     }
     Ok(())
 }
@@ -502,6 +639,21 @@ fn cmd_serve_fleet(args: &[String]) -> Result<()> {
                 .with_rate(250.0),
         );
     let mut cfg = StackConfig::from_args_with(defaults, &rest)?;
+    // `--ab A,B` replaces the fleet with a two-stream accelerator A/B:
+    // design A at the stack's k, design B dense (k = 0), equal rates —
+    // one arrival process, two registry designs, one BENCH file.
+    if let Some((a, b)) = cfg.accel.ab {
+        cfg.fleet.streams = vec![
+            StreamSpec::new(cfg.model, cfg.k.max(1), a).with_rate(600.0),
+            StreamSpec::new(cfg.model, 0, b).with_rate(600.0),
+        ];
+        println!(
+            "accel A/B: {} (k={}) vs {} (dense)",
+            a.key(),
+            cfg.k.max(1),
+            b.key()
+        );
+    }
     // Behavioral mode adds a long-document stream: (bert, k=8) backed
     // by the streaming chunked attention engine at `--long-seq` key
     // columns, `--long-chunk` at a time — fleet load then exercises the

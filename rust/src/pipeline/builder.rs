@@ -350,7 +350,15 @@ impl PipelineBuilder {
         let mut exec = BehavioralExecutor::new();
         for spec in &self.fleet_specs() {
             let key: StreamKey = (Arc::from(spec.family()), spec.k);
-            exec = exec.with_stream(key, spec.k);
+            // Legacy designs take the pre-registry path so fleet-replay
+            // BENCH output stays byte-identical; rivals carry their
+            // registry kind into the executor's per-stream macro.
+            let model = crate::softmax::registry::model_for(spec.softmax);
+            exec = if model.legacy() {
+                exec.with_stream(key, spec.k)
+            } else {
+                exec.with_stream_design(key, spec.k, spec.softmax)
+            };
         }
         exec
     }

@@ -293,6 +293,17 @@ impl Default for ServingConfig {
     }
 }
 
+/// Accelerator-registry section: cross-design study knobs that sit on
+/// top of the per-run `softmax` kind.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct AccelConfig {
+    /// A/B pair for `serve-fleet`: replaces the fleet's stream list
+    /// with two equal-rate streams, design A at the stack's `k` and
+    /// design B dense (`k = 0`), so the fleet report contrasts them
+    /// under one arrival process. B must be a dense-capable design.
+    pub ab: Option<(SoftmaxKind, SoftmaxKind)>,
+}
+
 /// The one cross-layer stack description every layer is assembled from.
 ///
 /// Defaults mirror the paper's evaluation point: SRAM 256×256 arrays
@@ -302,7 +313,8 @@ impl Default for ServingConfig {
 pub struct StackConfig {
     /// Crossbar technology of the score/aggregate arrays.
     pub tech: Tech,
-    /// Top-k winners per softmax row (0 = dense, Conventional only).
+    /// Top-k winners per softmax row (0 = dense; only designs whose
+    /// [`SoftmaxKind::supports_dense`] is true accept it).
     pub k: usize,
     /// Softmax macro design for the score stage.
     pub softmax: SoftmaxKind,
@@ -330,6 +342,8 @@ pub struct StackConfig {
     pub serving: ServingConfig,
     /// Fleet serving: shard count + per-stream batching policies.
     pub fleet: FleetConfig,
+    /// Accelerator-registry extras (cross-design A/B studies).
+    pub accel: AccelConfig,
 }
 
 impl Default for StackConfig {
@@ -351,6 +365,7 @@ impl Default for StackConfig {
             chunk_cols: None,
             serving: ServingConfig::default(),
             fleet: FleetConfig::default(),
+            accel: AccelConfig::default(),
         }
     }
 }
@@ -431,6 +446,13 @@ impl StackConfig {
         self
     }
 
+    /// Configure a `serve-fleet` A/B pair (design A at `k`, design B
+    /// dense).
+    pub fn with_ab(mut self, a: SoftmaxKind, b: SoftmaxKind) -> Self {
+        self.accel.ab = Some((a, b));
+        self
+    }
+
     /// Validate and hand the config to the builder.
     pub fn build(self) -> Result<PipelineBuilder, ConfigError> {
         PipelineBuilder::new(self)
@@ -469,12 +491,22 @@ impl StackConfig {
                 "leave no room for a single ternary weight gang",
             ));
         }
-        if self.k == 0 && self.softmax != SoftmaxKind::Conventional {
+        if self.k == 0 && !self.softmax.supports_dense() {
             return Err(invalid(
                 "k",
-                format!("= 0 (dense) requires conv softmax, not {}",
-                        self.softmax.key()),
+                format!("= 0 (dense) requires a dense-capable softmax \
+                         design, not {}", self.softmax.key()),
             ));
+        }
+        if let Some((_, b)) = self.accel.ab {
+            if !b.supports_dense() {
+                return Err(invalid(
+                    "accel.ab",
+                    format!("design B ({}) runs dense (k = 0) in the A/B \
+                             fleet and must support dense softmax",
+                            b.key()),
+                ));
+            }
         }
         if self.k > self.cols {
             return Err(invalid(
@@ -568,11 +600,11 @@ impl StackConfig {
         let mut keys = std::collections::BTreeSet::new();
         for (i, s) in self.fleet.streams.iter().enumerate() {
             let field = format!("fleet.streams[{i}]");
-            if s.k == 0 && s.softmax != SoftmaxKind::Conventional {
+            if s.k == 0 && !s.softmax.supports_dense() {
                 return Err(invalid(
                     &field,
-                    format!("k = 0 (dense) requires conv softmax, not {}",
-                            s.softmax.key()),
+                    format!("k = 0 (dense) requires a dense-capable \
+                             softmax design, not {}", s.softmax.key()),
                 ));
             }
             if s.k > self.cols {
@@ -620,7 +652,7 @@ impl StackConfig {
                 ("p_skip", Json::Num(n.p_skip)),
             ]),
         };
-        Json::obj(vec![
+        let mut fields = vec![
             ("tech", Json::Str(tech_key(self.tech).to_string())),
             ("k", Json::Num(self.k as f64)),
             ("softmax", Json::Str(self.softmax.key().to_string())),
@@ -733,7 +765,19 @@ impl StackConfig {
                     ),
                 ]),
             ),
-        ])
+        ];
+        // Emitted only when set: configs written before the accelerator
+        // registry existed keep their exact byte layout.
+        if let Some((a, b)) = self.accel.ab {
+            fields.push((
+                "accel",
+                Json::obj(vec![(
+                    "ab",
+                    Json::Str(format!("{},{}", a.key(), b.key())),
+                )]),
+            ));
+        }
+        Json::obj(fields)
     }
 
     /// Compact JSON text.
@@ -784,6 +828,7 @@ impl StackConfig {
                 }
                 "serving" => cfg.serving = serving_from(value)?,
                 "fleet" => cfg.fleet = fleet_from(value)?,
+                "accel" => cfg.accel = accel_from(value)?,
                 other => {
                     return Err(ConfigError::UnknownField(other.to_string()))
                 }
@@ -882,8 +927,15 @@ impl StackConfig {
                 }
                 "softmax" => {
                     cfg.softmax = SoftmaxKind::parse(&val).ok_or_else(|| {
-                        bad_flag("softmax", &val, "conv|dtopk|topkima")
+                        bad_flag(
+                            "softmax",
+                            &val,
+                            crate::softmax::registry::key_list(),
+                        )
                     })?
+                }
+                "ab" => {
+                    cfg.accel.ab = Some(parse_ab_pair("ab", &val)?);
                 }
                 "scale" => {
                     cfg.scale = scale_parse(&val).ok_or_else(|| {
@@ -1077,8 +1129,50 @@ fn tech_from(v: &Json) -> Result<Tech, ConfigError> {
 
 fn softmax_from(v: &Json) -> Result<SoftmaxKind, ConfigError> {
     let s = json_str(v, "softmax")?;
-    SoftmaxKind::parse(s)
-        .ok_or_else(|| invalid("softmax", format!("'{s}' unknown")))
+    SoftmaxKind::parse_or_err(s)
+        .map_err(|e| invalid("softmax", e.to_string()))
+}
+
+/// Parse an `A,B` softmax-kind pair (the `--ab` flag / `accel.ab`
+/// field); each half goes through the registry's typed parser.
+fn parse_ab_pair(
+    field: &str,
+    val: &str,
+) -> Result<(SoftmaxKind, SoftmaxKind), ConfigError> {
+    let (a, b) = val.split_once(',').ok_or_else(|| {
+        invalid(field, format!("'{val}' must be 'A,B' softmax kinds"))
+    })?;
+    let a = SoftmaxKind::parse_or_err(a.trim())
+        .map_err(|e| invalid(field, e.to_string()))?;
+    let b = SoftmaxKind::parse_or_err(b.trim())
+        .map_err(|e| invalid(field, e.to_string()))?;
+    Ok((a, b))
+}
+
+fn accel_from(v: &Json) -> Result<AccelConfig, ConfigError> {
+    let obj = v
+        .as_obj()
+        .ok_or_else(|| invalid("accel", "must be an object"))?;
+    let mut a = AccelConfig::default();
+    for (key, value) in obj {
+        match key.as_str() {
+            "ab" => {
+                a.ab = match value {
+                    Json::Null => None,
+                    v => Some(parse_ab_pair(
+                        "accel.ab",
+                        json_str(v, "accel.ab")?,
+                    )?),
+                }
+            }
+            other => {
+                return Err(ConfigError::UnknownField(format!(
+                    "accel.{other}"
+                )))
+            }
+        }
+    }
+    Ok(a)
 }
 
 fn scale_from(v: &Json) -> Result<ScaleImpl, ConfigError> {
@@ -1818,6 +1912,127 @@ mod tests {
             "--transport", "process", "--steal", "on",
         ]))
         .is_err());
+    }
+
+    #[test]
+    fn every_registry_key_parses_through_the_flag_path() {
+        // One arm per registered accelerator kind: the schema-sync lint
+        // checks each registry key appears here in the config parser's
+        // test surface, so adding a kind without config coverage fails.
+        for (key, kind) in [
+            ("conv", SoftmaxKind::Conventional),
+            ("dtopk", SoftmaxKind::Dtopk),
+            ("topkima", SoftmaxKind::Topkima),
+            ("ita", SoftmaxKind::Ita),
+            ("hyft", SoftmaxKind::Hyft),
+            ("sole", SoftmaxKind::Sole),
+        ] {
+            let cfg = StackConfig::from_args(&args(&["--softmax", key]))
+                .unwrap();
+            assert_eq!(cfg.softmax, kind);
+        }
+        // The typed error lists every valid kind.
+        let err = StackConfig::from_args(&args(&["--softmax", "zzz"]))
+            .unwrap_err();
+        match err {
+            ConfigError::InvalidValue { expected, .. } => {
+                for kind in SoftmaxKind::ALL {
+                    assert!(expected.contains(kind.key()));
+                }
+            }
+            other => panic!("wanted InvalidValue, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn dense_k0_is_legal_for_dense_capable_designs_only() {
+        for kind in SoftmaxKind::ALL {
+            let cfg = StackConfig::default().with_k(0).with_softmax(kind);
+            assert_eq!(
+                cfg.validate().is_ok(),
+                kind.supports_dense(),
+                "k = 0 acceptance must track supports_dense for {kind:?}"
+            );
+        }
+        // Fleet streams follow the same rule.
+        let ok = StackConfig::default().with_stream(StreamSpec::new(
+            ModelKind::BertTiny, 0, SoftmaxKind::Ita));
+        ok.validate().unwrap();
+        let bad = StackConfig::default().with_stream(StreamSpec::new(
+            ModelKind::BertTiny, 0, SoftmaxKind::Dtopk));
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn accel_ab_json_roundtrip_and_absence() {
+        // Absent by default — and absent from the emitted JSON, so old
+        // configs keep their byte layout.
+        let cfg = StackConfig::default();
+        assert!(!cfg.to_json_string().contains("accel"));
+        let cfg = StackConfig::default()
+            .with_ab(SoftmaxKind::Topkima, SoftmaxKind::Sole);
+        cfg.validate().unwrap();
+        let text = cfg.to_json_string();
+        assert!(text.contains(r#""accel":{"ab":"topkima,sole"}"#));
+        let back = StackConfig::from_json_str(&text).unwrap();
+        assert_eq!(back, cfg);
+        assert_eq!(
+            back.accel.ab,
+            Some((SoftmaxKind::Topkima, SoftmaxKind::Sole))
+        );
+        // Old configs without the section keep the default.
+        let legacy = StackConfig::from_json_str("{}").unwrap();
+        assert_eq!(legacy.accel, AccelConfig::default());
+    }
+
+    #[test]
+    fn accel_section_rejects_unknowns_and_bad_pairs() {
+        let err = StackConfig::from_json_str(
+            r#"{"accel": {"turbo": 1}}"#,
+        )
+        .unwrap_err();
+        assert_eq!(
+            err,
+            ConfigError::UnknownField("accel.turbo".to_string())
+        );
+        // Malformed pair and unknown kind are typed Invalid errors.
+        let err = StackConfig::from_json_str(
+            r#"{"accel": {"ab": "topkima"}}"#,
+        )
+        .unwrap_err();
+        assert!(matches!(&err, ConfigError::Invalid { field, .. }
+                         if field == "accel.ab"));
+        let err = StackConfig::from_json_str(
+            r#"{"accel": {"ab": "topkima,softermax"}}"#,
+        )
+        .unwrap_err();
+        assert!(matches!(&err, ConfigError::Invalid { reason, .. }
+                         if reason.contains("sole")));
+        // B must be dense-capable: validation, not parsing, catches it.
+        let err = StackConfig::default()
+            .with_ab(SoftmaxKind::Topkima, SoftmaxKind::Dtopk)
+            .validate()
+            .unwrap_err();
+        assert!(matches!(&err, ConfigError::Invalid { field, .. }
+                         if field == "accel.ab"));
+    }
+
+    #[test]
+    fn ab_flag_parses() {
+        let cfg = StackConfig::from_args(&args(&["--ab", "topkima,ita"]))
+            .unwrap();
+        assert_eq!(
+            cfg.accel.ab,
+            Some((SoftmaxKind::Topkima, SoftmaxKind::Ita))
+        );
+        assert!(
+            StackConfig::from_args(&args(&["--ab", "topkima"])).is_err()
+        );
+        assert!(
+            StackConfig::from_args(&args(&["--ab", "topkima,dtopk"]))
+                .is_err(),
+            "B must support dense"
+        );
     }
 
     #[test]

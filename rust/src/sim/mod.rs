@@ -262,42 +262,36 @@ fn sim_scores(op: &Op, tc: &TransformerConfig, sc: &SimConfig) -> Ledger {
             * (e.e_mac_cell + e.e_pwm_cell),
     );
 
-    // Conversion + softmax, by macro kind.
-    let ramp_cycles = (1u64 << t.n_bits_adc) as f64;
-    let (conv_ns, conv_pj_row, softmax_ns, softmax_pj_row) = match sc.softmax
-    {
-        SoftmaxKind::Conventional => (
-            t.t_ima(),
-            d as f64 * ramp_cycles * e.e_adc_cycle,
-            d as f64 * t.t_nl_dig,
-            d as f64 * e.e_nl_elem,
-        ),
-        SoftmaxKind::Dtopk => (
-            t.t_ima() + t.t_sort(d, k),
-            d as f64 * ramp_cycles * e.e_adc_cycle
-                + crate::softmax::dtopk::sort_compare_bound(d, k)
-                    * e.e_sort_cmp,
-            k as f64 * t.t_nl_dig,
-            k as f64 * e.e_nl_elem,
-        ),
-        SoftmaxKind::Topkima => (
-            t.t_ima_arb(sc.alpha, k),
-            sc.alpha * d as f64 * ramp_cycles * e.e_adc_cycle
-                + k as f64 * e.e_arb_event,
-            k as f64 * t.t_nl_dig,
-            k as f64 * e.e_nl_elem,
-        ),
-    };
+    // Conversion + softmax (+ any post stage, e.g. SOLE's LayerNorm),
+    // priced by the accelerator-model registry. For the legacy three
+    // kinds `sim_costs` carries the exact pre-registry expressions, so
+    // the ledger f64s are bit-identical through this path.
+    let costs = crate::softmax::registry::model_for(sc.softmax).sim_costs(
+        &crate::softmax::registry::StageInput {
+            d,
+            k,
+            alpha: sc.alpha,
+            timing: t,
+            energy: e,
+        },
+    );
     led.add(
         Component::Adc,
-        rows * conv_ns,
-        op.m as f64 * heads * conv_pj_row,
+        rows * costs.conv_ns,
+        op.m as f64 * heads * costs.conv_pj_row,
     );
     led.add(
         Component::Softmax,
-        rows * softmax_ns,
-        op.m as f64 * heads * softmax_pj_row,
+        rows * costs.softmax_ns,
+        op.m as f64 * heads * costs.softmax_pj_row,
     );
+    if let Some((post_ns, post_pj_row)) = costs.post {
+        led.add(
+            Component::Softmax,
+            rows * post_ns,
+            op.m as f64 * heads * post_pj_row,
+        );
+    }
 
     // Scaling stage (zero for scale-free).
     let scost = sc.scale.cost(op.m, d, t);
@@ -309,9 +303,10 @@ fn sim_scores(op: &Op, tc: &TransformerConfig, sc: &SimConfig) -> Ledger {
     // paper's explanation for the buffer-dominated energy pie (Fig 4f).
     let q_bytes = act_bytes((op.m * op.inner) as f64) * 2.0; // dbl-buf
     let kt_bytes = act_bytes((op.inner * d) as f64) * 2.0;
-    let score_out = match sc.softmax {
-        SoftmaxKind::Conventional => act_bytes((op.m * d) as f64),
-        _ => act_bytes((op.m * k) as f64 * 2.0), // value + address
+    let score_out = if costs.dense_scores {
+        act_bytes((op.m * d) as f64)
+    } else {
+        act_bytes((op.m * k) as f64 * 2.0) // value + address
     };
     let traffic = (q_bytes + kt_bytes + score_out) * heads;
     led.add(
@@ -500,6 +495,86 @@ mod tests {
         assert!(conv.latency_ns() > topkima.latency_ns());
         assert!(dtopk.latency_ns() > topkima.latency_ns());
         assert!(conv.energy_pj() > topkima.energy_pj());
+    }
+
+    #[test]
+    fn registry_matches_pre_refactor_expressions() {
+        // Golden bit-parity: the registry's sim_costs for the legacy
+        // three kinds must reproduce the exact f64s of the match this
+        // refactor removed — the expressions below are that match,
+        // transcribed literally. to_bits equality, several points.
+        use crate::softmax::registry::{model_for, StageInput};
+        let t = crate::circuits::Timing::default();
+        let e = system_energy();
+        for (d, k, alpha) in
+            [(384usize, 5usize, 0.31), (64, 1, 0.5), (4096, 16, 0.2)]
+        {
+            let ramp_cycles = (1u64 << t.n_bits_adc) as f64;
+            let want = [
+                (
+                    SoftmaxKind::Conventional,
+                    t.t_ima(),
+                    d as f64 * ramp_cycles * e.e_adc_cycle,
+                    d as f64 * t.t_nl_dig,
+                    d as f64 * e.e_nl_elem,
+                ),
+                (
+                    SoftmaxKind::Dtopk,
+                    t.t_ima() + t.t_sort(d, k),
+                    d as f64 * ramp_cycles * e.e_adc_cycle
+                        + crate::softmax::dtopk::sort_compare_bound(d, k)
+                            * e.e_sort_cmp,
+                    k as f64 * t.t_nl_dig,
+                    k as f64 * e.e_nl_elem,
+                ),
+                (
+                    SoftmaxKind::Topkima,
+                    t.t_ima_arb(alpha, k),
+                    alpha * d as f64 * ramp_cycles * e.e_adc_cycle
+                        + k as f64 * e.e_arb_event,
+                    k as f64 * t.t_nl_dig,
+                    k as f64 * e.e_nl_elem,
+                ),
+            ];
+            for (kind, conv_ns, conv_pj, sm_ns, sm_pj) in want {
+                let got = model_for(kind).sim_costs(&StageInput {
+                    d,
+                    k,
+                    alpha,
+                    timing: &t,
+                    energy: &e,
+                });
+                assert_eq!(got.conv_ns.to_bits(), conv_ns.to_bits());
+                assert_eq!(got.conv_pj_row.to_bits(), conv_pj.to_bits());
+                assert_eq!(got.softmax_ns.to_bits(), sm_ns.to_bits());
+                assert_eq!(got.softmax_pj_row.to_bits(), sm_pj.to_bits());
+                assert_eq!(got.post, None);
+                assert_eq!(
+                    got.dense_scores,
+                    kind == SoftmaxKind::Conventional
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rival_zoo_orders_between_conv_and_topkima() {
+        let tc = TransformerConfig::bert_base();
+        let mk = |softmax| {
+            let sc = SimConfig { softmax, ..SimConfig::default() };
+            let r = simulate_attention(&tc, &sc);
+            (r.latency_ns(), r.energy_pj())
+        };
+        let (conv_ns, conv_pj) = mk(SoftmaxKind::Conventional);
+        let (top_ns, top_pj) = mk(SoftmaxKind::Topkima);
+        for kind in [SoftmaxKind::Ita, SoftmaxKind::Hyft, SoftmaxKind::Sole]
+        {
+            let (ns, pj) = mk(kind);
+            assert!(ns < conv_ns, "{kind:?} latency {ns} !< conv {conv_ns}");
+            assert!(ns > top_ns, "{kind:?} latency {ns} !> topkima {top_ns}");
+            assert!(pj < conv_pj, "{kind:?} energy");
+            assert!(pj > top_pj, "{kind:?} energy vs topkima");
+        }
     }
 
     #[test]

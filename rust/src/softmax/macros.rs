@@ -92,6 +92,32 @@ impl SelectionRows {
     }
 }
 
+/// How [`run_macro_with`] prices the softmax (NL) stage — the cost
+/// axis the accelerator-model registry varies per design while the
+/// conversion pricing stays with the [`SelectionStrategy`].
+///
+/// `LEGACY` (both fields `None`) is the exact pre-registry pricing
+/// path: the literal `parts.softmax` unit costs, summed in the original
+/// association order, so the three in-house designs stay byte-identical
+/// through the registry. Rival designs scale the legacy NL price by
+/// dimensionless factors and may add a post-softmax stage (SOLE's
+/// LayerNorm) over the full row width.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StageSchedule {
+    /// `Some((lat, en))` → multiply the legacy NL price by these
+    /// factors; `None` → the untouched legacy price.
+    pub nl_scale: Option<(f64, f64)>,
+    /// `Some((lat, en))` → add a post stage priced as these factors on
+    /// the d-element legacy NL price; `None` → no post stage.
+    pub post_scale: Option<(f64, f64)>,
+}
+
+impl StageSchedule {
+    /// The pre-registry pricing path (conv/dtopk/topkima).
+    pub const LEGACY: StageSchedule =
+        StageSchedule { nl_scale: None, post_scale: None };
+}
+
 /// Accumulated latency/energy of a macro run.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct MacroCost {
@@ -706,9 +732,25 @@ impl SelectionStrategy for TopkimaSelect {
 /// so results and accounting are bit-identical to the row-at-a-time
 /// loop this replaced (the strategy is the only RNG consumer, and
 /// `select_rows` draws in the same ascending row order).
-pub fn run_macro<S: SelectionStrategy>(
+pub fn run_macro<S: SelectionStrategy + ?Sized>(
     parts: &MacroParts,
     strategy: &S,
+    q_rows: &[Vec<i32>],
+    rng: &mut Rng,
+) -> (Vec<ProbRow>, MacroCost) {
+    run_macro_with(parts, strategy, &StageSchedule::LEGACY, q_rows, rng)
+}
+
+/// [`run_macro`] with an explicit [`StageSchedule`] — the entry the
+/// accelerator-model registry drives. With `StageSchedule::LEGACY` the
+/// per-row cost sum below reduces to the exact pre-registry expression
+/// `mac_ns + rc.latency_ns + parts.softmax.latency_ns(rc.nl_elems)`
+/// (same association order, no `+ 0.0` terms), so legacy BENCH output
+/// is byte-identical through this path.
+pub fn run_macro_with<S: SelectionStrategy + ?Sized>(
+    parts: &MacroParts,
+    strategy: &S,
+    schedule: &StageSchedule,
     q_rows: &[Vec<i32>],
     rng: &mut Rng,
 ) -> (Vec<ProbRow>, MacroCost) {
@@ -726,11 +768,19 @@ pub fn run_macro<S: SelectionStrategy>(
         // the prob row is an owned result, not scratch — this allocation
         // is the output itself
         probs.push(parts.softmax.compute_sparse(sels.row(r), d));
-        cost.absorb(
-            mac_ns + rc.latency_ns + parts.softmax.latency_ns(rc.nl_elems),
-            mac_pj + rc.energy_pj + parts.softmax.energy_pj(rc.nl_elems),
-            rc.alpha,
-        );
+        let nl_ns = parts.softmax.latency_ns(rc.nl_elems);
+        let nl_pj = parts.softmax.energy_pj(rc.nl_elems);
+        let (nl_ns, nl_pj) = match schedule.nl_scale {
+            None => (nl_ns, nl_pj),
+            Some((l, e)) => (nl_ns * l, nl_pj * e),
+        };
+        let mut row_ns = mac_ns + rc.latency_ns + nl_ns;
+        let mut row_pj = mac_pj + rc.energy_pj + nl_pj;
+        if let Some((l, e)) = schedule.post_scale {
+            row_ns += parts.softmax.latency_ns(d) * l;
+            row_pj += parts.softmax.energy_pj(d) * e;
+        }
+        cost.absorb(row_ns, row_pj, rc.alpha);
     }
     let (wns, wpj) = parts.write_cost();
     (probs, cost.finish(wns, wpj))
@@ -781,18 +831,42 @@ impl SoftmaxMacro for TopkimaSm {
     }
 }
 
+/// A registry-assembled rival design: any [`SelectionStrategy`] plus a
+/// [`StageSchedule`] over the shared substrate. The three in-house
+/// designs keep their dedicated structs above (their run paths are
+/// bit-frozen); every other registered accelerator is one of these.
+pub struct RivalSm {
+    pub parts: MacroParts,
+    pub strategy: Box<dyn SelectionStrategy + Send + Sync>,
+    pub schedule: StageSchedule,
+    pub name: &'static str,
+}
+
+impl SoftmaxMacro for RivalSm {
+    fn run(&self, q_rows: &[Vec<i32>], rng: &mut Rng) -> (Vec<ProbRow>, MacroCost) {
+        run_macro_with(
+            &self.parts,
+            self.strategy.as_ref(),
+            &self.schedule,
+            q_rows,
+            rng,
+        )
+    }
+
+    fn name(&self) -> &'static str {
+        self.name
+    }
+}
+
 /// Assemble the macro for a [`SoftmaxKind`] over a shared substrate —
-/// the constructor `pipeline::PipelineBuilder` routes through.
+/// the constructor `pipeline::PipelineBuilder` routes through. Each
+/// kind's [`super::registry::AcceleratorModel`] owns the assembly.
 pub fn macro_for(
     kind: SoftmaxKind,
     parts: MacroParts,
     k: usize,
 ) -> Box<dyn SoftmaxMacro> {
-    match kind {
-        SoftmaxKind::Conventional => Box::new(ConvSm(parts)),
-        SoftmaxKind::Dtopk => Box::new(DtopkSm { parts, k }),
-        SoftmaxKind::Topkima => Box::new(TopkimaSm { parts, k }),
-    }
+    super::registry::model_for(kind).build_macro(parts, k)
 }
 
 #[cfg(test)]
@@ -984,6 +1058,60 @@ mod tests {
             // k near d exercises the arbiter's bounded-heap boundary
             check_select_rows(p, &TopkimaSelect { k: d - 1 }, &macs, d, q.len());
         }
+    }
+
+    #[test]
+    fn rival_probs_match_conv_and_cost_sits_below() {
+        // every dense rival runs the same FullConversion selection as
+        // conv-SM, so its probability rows are bit-identical to conv's;
+        // only the NL (+ post) pricing differs — and always downward.
+        let q = q_rows(4, 64);
+        let (conv_probs, conv_cost) =
+            macro_for(SoftmaxKind::Conventional, parts(128), 5)
+                .run(&q, &mut Rng::new(11));
+        for kind in [SoftmaxKind::Ita, SoftmaxKind::Hyft, SoftmaxKind::Sole] {
+            let m = macro_for(kind, parts(128), 5);
+            assert_eq!(m.name(), kind.name());
+            let (probs, cost) = m.run(&q, &mut Rng::new(11));
+            assert_eq!(probs, conv_probs, "{kind:?}");
+            assert!(
+                cost.latency_ns < conv_cost.latency_ns,
+                "{kind:?} {} !< {}",
+                cost.latency_ns,
+                conv_cost.latency_ns
+            );
+            assert!(cost.energy_pj < conv_cost.energy_pj, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn sole_post_stage_prices_above_ita() {
+        // SOLE's LayerNorm post stage plus its heavier NL unit must
+        // make it strictly more expensive than ITA on the same work.
+        let q = q_rows(4, 64);
+        let (_, ita) = macro_for(SoftmaxKind::Ita, parts(128), 5)
+            .run(&q, &mut Rng::new(12));
+        let (_, sole) = macro_for(SoftmaxKind::Sole, parts(128), 5)
+            .run(&q, &mut Rng::new(12));
+        assert!(sole.latency_ns > ita.latency_ns);
+        assert!(sole.energy_pj > ita.energy_pj);
+    }
+
+    #[test]
+    fn legacy_schedule_is_bit_identical_to_run_macro() {
+        let q = q_rows(3, 64);
+        let p = parts(96);
+        let (pa, ca) =
+            run_macro(&p, &TopkimaSelect { k: 5 }, &q, &mut Rng::new(13));
+        let (pb, cb) = run_macro_with(
+            &p,
+            &TopkimaSelect { k: 5 },
+            &StageSchedule::LEGACY,
+            &q,
+            &mut Rng::new(13),
+        );
+        assert_eq!(ca, cb);
+        assert_eq!(pa, pb);
     }
 
     #[test]

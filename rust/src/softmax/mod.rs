@@ -1,4 +1,4 @@
-//! Softmax macros: the three designs compared in Fig 4(a).
+//! Softmax macros: the Fig 4(a) designs plus the rival accelerator zoo.
 //!
 //! * [`digital`] — the digital softmax core [17]: exp/divide cost model
 //!   plus an actual fixed-point-ish computation used on serving paths.
@@ -6,69 +6,87 @@
 //!   [3]): O(min(d·log d, d·k)) compare-exchange sorting network.
 //! * [`macros`] — the assembled Conv-SM / Dtopk-SM / Topkima-SM macros
 //!   with end-to-end functional output + latency/energy per Eqs. (3)/(4),
-//!   backed by the behavioral converter in `crate::ima`. All three share
-//!   one run-loop parameterized by a [`SelectionStrategy`].
+//!   backed by the behavioral converter in `crate::ima`. All designs
+//!   share one run-loop parameterized by a [`SelectionStrategy`] and a
+//!   per-design `StageSchedule`.
+//! * [`registry`] — the string-keyed accelerator-model registry
+//!   (DESIGN.md §15): each [`SoftmaxKind`] is backed by an
+//!   `AcceleratorModel` bundling strategy, cost schedule, and published
+//!   calibration targets. The rivals ITA / Hyft / SOLE live there.
 //!
-//! [`SoftmaxKind`] is the one canonical enum naming the three designs;
-//! it is shared by the circuit macros, the system simulator (`crate::sim`
-//! re-exports it), and the pipeline config (`crate::pipeline`).
+//! [`SoftmaxKind`] is the one canonical enum naming the designs; it is
+//! shared by the circuit macros, the system simulator (`crate::sim`
+//! re-exports it), and the pipeline config (`crate::pipeline`). Its
+//! name/key/parse methods all delegate to the registry.
 
 pub mod digital;
 pub mod dtopk;
 pub mod macros;
+pub mod registry;
 
 pub use digital::DigitalSoftmax;
 pub use dtopk::digital_topk;
 pub use macros::{
     macro_for, ChunkedRowState, ConvSm, DtopkSm, MacroCost, MacroScratch,
-    SelectionStrategy, SoftmaxMacro, TopkimaSm,
+    RivalSm, SelectionStrategy, SoftmaxMacro, StageSchedule, TopkimaSm,
 };
+pub use registry::{AcceleratorModel, CalibrationTarget, UnknownKindError};
 
-/// Which softmax macro the score stage uses — the single cross-layer
-/// knob of the Fig 4(a) comparison.
+/// Which softmax accelerator the score stage uses — the single
+/// cross-layer design knob. The first three variants are the paper's
+/// Fig 4(a) comparison; the rest are published rivals modeled through
+/// the [`registry`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SoftmaxKind {
     Conventional,
     Dtopk,
     Topkima,
+    /// ITA: integer streaming-max softmax, no sort (arxiv 2307.03493).
+    Ita,
+    /// Hyft: hybrid fixed/float reconfigurable softmax (arxiv
+    /// 2311.13290).
+    Hyft,
+    /// SOLE: softmax + LayerNorm co-design (arxiv 2510.17189).
+    Sole,
 }
 
 impl SoftmaxKind {
-    /// All three designs, in the paper's comparison order.
-    pub const ALL: [SoftmaxKind; 3] = [
+    /// Every registered design. The paper's three stay first, in their
+    /// historical comparison order — benches index positions.
+    pub const ALL: [SoftmaxKind; 6] = [
         SoftmaxKind::Conventional,
         SoftmaxKind::Dtopk,
         SoftmaxKind::Topkima,
+        SoftmaxKind::Ita,
+        SoftmaxKind::Hyft,
+        SoftmaxKind::Sole,
     ];
 
     /// Display name used in reports and figures.
     pub fn name(&self) -> &'static str {
-        match self {
-            SoftmaxKind::Conventional => "conv-SM",
-            SoftmaxKind::Dtopk => "Dtopk-SM",
-            SoftmaxKind::Topkima => "topkima-SM",
-        }
+        registry::model_for(*self).name()
     }
 
     /// Stable identifier used by CLI flags and the JSON config.
     pub fn key(&self) -> &'static str {
-        match self {
-            SoftmaxKind::Conventional => "conv",
-            SoftmaxKind::Dtopk => "dtopk",
-            SoftmaxKind::Topkima => "topkima",
-        }
+        registry::model_for(*self).key()
     }
 
-    /// Parse a CLI/JSON identifier.
+    /// Parse a CLI/JSON identifier (key, display name, or alias).
     pub fn parse(s: &str) -> Option<SoftmaxKind> {
-        match s {
-            "conv" | "conventional" | "conv-SM" => {
-                Some(SoftmaxKind::Conventional)
-            }
-            "dtopk" | "Dtopk-SM" => Some(SoftmaxKind::Dtopk),
-            "topkima" | "topkima-SM" => Some(SoftmaxKind::Topkima),
-            _ => None,
-        }
+        registry::parse(s)
+    }
+
+    /// [`Self::parse`] with a typed error listing the registry's valid
+    /// kind keys.
+    pub fn parse_or_err(s: &str) -> Result<SoftmaxKind, UnknownKindError> {
+        registry::parse_or_err(s)
+    }
+
+    /// Whether this design runs a dense softmax (k is not part of the
+    /// design, so `k == 0` streams are legal).
+    pub fn supports_dense(&self) -> bool {
+        registry::model_for(*self).supports_dense()
     }
 }
 
@@ -83,5 +101,17 @@ mod kind_tests {
             assert_eq!(SoftmaxKind::parse(kind.name()), Some(kind));
         }
         assert_eq!(SoftmaxKind::parse("softermax"), None);
+    }
+
+    #[test]
+    fn parse_or_err_names_the_valid_kinds() {
+        let err = SoftmaxKind::parse_or_err("softermax").unwrap_err();
+        for kind in SoftmaxKind::ALL {
+            assert!(err.to_string().contains(kind.key()));
+        }
+        assert_eq!(
+            SoftmaxKind::parse_or_err("hyft"),
+            Ok(SoftmaxKind::Hyft)
+        );
     }
 }

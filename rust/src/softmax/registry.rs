@@ -1,0 +1,790 @@
+//! The accelerator-model registry: every softmax design the stack can
+//! simulate, keyed by a stable string.
+//!
+//! Before this module, [`SoftmaxKind`] was a closed three-variant enum
+//! whose cost constants were fused into `run_macro` and `sim_scores`.
+//! An [`AcceleratorModel`] bundles everything one design needs —
+//!
+//! * a [`SelectionStrategy`] (which values reach the softmax core),
+//! * a [`StageSchedule`] (how the macro run-loop prices the NL stage,
+//!   plus any post-softmax stage such as SOLE's LayerNorm),
+//! * system-level per-row stage costs ([`AcceleratorModel::sim_costs`],
+//!   replacing the `match` in `sim::sim_scores`),
+//! * an optional published [`CalibrationTarget`] the test suite asserts
+//!   simulated ratios against —
+//!
+//! so adding a design is one `impl` plus one entry in [`models`] /
+//! [`KEYS`]; the `schema-sync` lint then forces its key into the config
+//! parser, the `--softmax` help text, and DESIGN.md §15.
+//!
+//! # Bit-identity contract
+//!
+//! The three in-house designs (conv/dtopk/topkima) are `legacy()`:
+//! their strategies, schedules ([`StageSchedule::LEGACY`]) and
+//! `sim_costs` expressions are the *same code paths and the same f64
+//! expression shapes* as before the registry existed, so every BENCH
+//! file they produce is byte-identical through this layer (gated by
+//! `ci.sh` and `sim::tests::registry_matches_pre_refactor_expressions`).
+//!
+//! # Calibration methodology (DESIGN.md §15)
+//!
+//! Rival stage factors are dimensionless multiples of the paper's 65 nm
+//! digital-softmax units (`T_NL,dig` = 6.5 ns, `E_NL` = 25 pJ per
+//! element), chosen so one d = 384, k = 5 score row lands on the
+//! published energy/latency ratios vs conv-SM. Pricing for the
+//! calibration assertions uses `Timing::default()` / `Energy::default()`
+//! — the 65 nm macro table, *not* the 32 nm `sim::system_energy()`
+//! rescale (DESIGN.md §2 documents that split); the factors themselves
+//! are dimensionless, so both levels share them.
+
+use super::macros::{
+    ConvSm, DigitalTopkSelect, DtopkSm, FullConversion, MacroParts, RivalSm,
+    SelectionStrategy, SoftmaxMacro, StageSchedule, TopkimaSelect, TopkimaSm,
+};
+use super::SoftmaxKind;
+use crate::circuits::{Energy, Timing};
+use std::fmt;
+use std::sync::OnceLock;
+
+/// Every registered kind key, in [`SoftmaxKind::ALL`] order. The
+/// `schema-sync` lint extracts this literal and requires each key to
+/// appear in the config parser, the `--softmax` help text, and
+/// DESIGN.md §15; `registry::tests::keys_table_matches_models` pins it
+/// to the live model list.
+pub const KEYS: [&str; 6] =
+    ["conv", "dtopk", "topkima", "ita", "hyft", "sole"];
+
+/// `"conv|dtopk|topkima|ita|hyft|sole"` — the canonical valid-kind list
+/// for flag help and error text, built once from [`KEYS`] so no caller
+/// hand-maintains it.
+pub fn key_list() -> &'static str {
+    static KEY_LIST: OnceLock<String> = OnceLock::new();
+    KEY_LIST.get_or_init(|| KEYS.join("|")).as_str()
+}
+
+/// A parse failure that names the valid kinds (satellite: typed error
+/// sourced from the registry, not a hand-kept string).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct UnknownKindError {
+    /// The rejected input, as given.
+    pub input: String,
+}
+
+impl fmt::Display for UnknownKindError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "unknown softmax kind '{}': expected one of {}",
+            self.input,
+            key_list()
+        )
+    }
+}
+
+impl std::error::Error for UnknownKindError {}
+
+/// Per-row system-level stage inputs (`sim::sim_scores`'s operating
+/// point): row width `d` (= sequence length), winners `k`, early-stop
+/// fraction `alpha`, and the unit tables of whichever calibration level
+/// is pricing (65 nm macro or 32 nm system).
+#[derive(Clone, Copy, Debug)]
+pub struct StageInput<'a> {
+    pub d: usize,
+    pub k: usize,
+    pub alpha: f64,
+    pub timing: &'a Timing,
+    pub energy: &'a Energy,
+}
+
+/// Per-row stage costs a model reports to the system simulator:
+/// conversion (ADC ledger), softmax (NL ledger), an optional
+/// post-softmax stage (SOLE's LayerNorm — the first cost stage past
+/// softmax), and whether the design emits dense score rows (traffic
+/// model: d values out vs k value+address pairs).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StageCosts {
+    /// Conversion latency per Q row, ns.
+    pub conv_ns: f64,
+    /// Conversion energy per Q row, pJ.
+    pub conv_pj_row: f64,
+    /// Softmax (NL) latency per Q row, ns.
+    pub softmax_ns: f64,
+    /// Softmax (NL) energy per Q row, pJ.
+    pub softmax_pj_row: f64,
+    /// Post-softmax stage per Q row — `(ns, pJ)` — when the design
+    /// prices one (SOLE's LayerNorm).
+    pub post: Option<(f64, f64)>,
+    /// Dense designs ship all d scores downstream; top-k designs ship
+    /// k (value, address) pairs.
+    pub dense_scores: bool,
+}
+
+/// A published energy/latency target the simulated design is calibrated
+/// against (ratios vs conv-SM over one d = 384, k = 5 score row, 65 nm
+/// units — see the module docs).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CalibrationTarget {
+    pub latency_ratio_vs_conv: f64,
+    pub energy_ratio_vs_conv: f64,
+    /// Relative tolerance the calibration tests assert with.
+    pub rel_tol: f64,
+    /// Where the published number comes from.
+    pub source: &'static str,
+}
+
+/// One softmax-accelerator design: strategy + cost schedule +
+/// calibration, behind a stable string key. See the module docs for the
+/// contract; DESIGN.md §15 for the extension guide.
+pub trait AcceleratorModel: Sync {
+    /// The enum tag this model backs.
+    fn kind(&self) -> SoftmaxKind;
+
+    /// Stable config/CLI key (`"topkima"`, `"ita"`, ...).
+    fn key(&self) -> &'static str;
+
+    /// Report/display name (`"topkima-SM"`, `"ITA-SM"`, ...).
+    fn name(&self) -> &'static str;
+
+    /// Extra accepted spellings for [`parse`].
+    fn aliases(&self) -> &'static [&'static str] {
+        &[]
+    }
+
+    /// The design's source paper.
+    fn paper(&self) -> &'static str;
+
+    /// Whether the design runs a dense softmax — `k` is then not part
+    /// of the design and `k == 0` streams are legal.
+    fn supports_dense(&self) -> bool;
+
+    /// True for the three pre-registry in-house designs, whose outputs
+    /// are bit-frozen (the behavioral fleet executor keeps its exact
+    /// pre-registry code path for them).
+    fn legacy(&self) -> bool {
+        false
+    }
+
+    /// How `run_macro_with` prices the NL (+ post) stages for this
+    /// design.
+    fn schedule(&self) -> StageSchedule;
+
+    /// The selection strategy driving conversion for this design.
+    fn strategy(&self, k: usize) -> Box<dyn SelectionStrategy + Send + Sync>;
+
+    /// Assemble the circuit-level macro (the `macro_for` back end).
+    fn build_macro(&self, parts: MacroParts, k: usize) -> Box<dyn SoftmaxMacro>;
+
+    /// System-level per-row stage costs (the `sim_scores` back end).
+    fn sim_costs(&self, input: &StageInput<'_>) -> StageCosts;
+
+    /// Published ratios this model is calibrated to, when it has them.
+    fn calibration(&self) -> Option<CalibrationTarget> {
+        None
+    }
+}
+
+/// Full ramp cycle count — shared by every full-conversion cost model.
+fn ramp_cycles(t: &Timing) -> f64 {
+    (1u64 << t.n_bits_adc) as f64
+}
+
+/// The conventional design's stage costs — the baseline every rival's
+/// `sim_costs` shares its conversion expressions with, kept as one
+/// helper so the f64 expression shapes can never drift apart.
+fn conv_stage_costs(input: &StageInput<'_>) -> StageCosts {
+    let (d, t, e) = (input.d, input.timing, input.energy);
+    StageCosts {
+        conv_ns: t.t_ima(),
+        conv_pj_row: d as f64 * ramp_cycles(t) * e.e_adc_cycle,
+        softmax_ns: d as f64 * t.t_nl_dig,
+        softmax_pj_row: d as f64 * e.e_nl_elem,
+        post: None,
+        dense_scores: true,
+    }
+}
+
+/// Conventional full-conversion + dense digital softmax (`conv-SM`).
+pub struct ConvModel;
+
+impl AcceleratorModel for ConvModel {
+    fn kind(&self) -> SoftmaxKind {
+        SoftmaxKind::Conventional
+    }
+
+    fn key(&self) -> &'static str {
+        "conv"
+    }
+
+    fn name(&self) -> &'static str {
+        "conv-SM"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["conventional"]
+    }
+
+    fn paper(&self) -> &'static str {
+        "arxiv 2411.13050 (baseline)"
+    }
+
+    fn supports_dense(&self) -> bool {
+        true
+    }
+
+    fn legacy(&self) -> bool {
+        true
+    }
+
+    fn schedule(&self) -> StageSchedule {
+        StageSchedule::LEGACY
+    }
+
+    fn strategy(&self, _k: usize) -> Box<dyn SelectionStrategy + Send + Sync> {
+        Box::new(FullConversion)
+    }
+
+    fn build_macro(&self, parts: MacroParts, _k: usize) -> Box<dyn SoftmaxMacro> {
+        Box::new(ConvSm(parts))
+    }
+
+    fn sim_costs(&self, input: &StageInput<'_>) -> StageCosts {
+        conv_stage_costs(input)
+    }
+}
+
+/// Full conversion + digital top-k sorter (`Dtopk-SM`, Eq. 3).
+pub struct DtopkModel;
+
+impl AcceleratorModel for DtopkModel {
+    fn kind(&self) -> SoftmaxKind {
+        SoftmaxKind::Dtopk
+    }
+
+    fn key(&self) -> &'static str {
+        "dtopk"
+    }
+
+    fn name(&self) -> &'static str {
+        "Dtopk-SM"
+    }
+
+    fn paper(&self) -> &'static str {
+        "arxiv 2411.13050 (baseline)"
+    }
+
+    fn supports_dense(&self) -> bool {
+        false
+    }
+
+    fn legacy(&self) -> bool {
+        true
+    }
+
+    fn schedule(&self) -> StageSchedule {
+        StageSchedule::LEGACY
+    }
+
+    fn strategy(&self, k: usize) -> Box<dyn SelectionStrategy + Send + Sync> {
+        Box::new(DigitalTopkSelect { k })
+    }
+
+    fn build_macro(&self, parts: MacroParts, k: usize) -> Box<dyn SoftmaxMacro> {
+        Box::new(DtopkSm { parts, k })
+    }
+
+    fn sim_costs(&self, input: &StageInput<'_>) -> StageCosts {
+        let (d, k, t, e) = (input.d, input.k, input.timing, input.energy);
+        StageCosts {
+            conv_ns: t.t_ima() + t.t_sort(d, k),
+            conv_pj_row: d as f64 * ramp_cycles(t) * e.e_adc_cycle
+                + crate::softmax::dtopk::sort_compare_bound(d, k)
+                    * e.e_sort_cmp,
+            softmax_ns: k as f64 * t.t_nl_dig,
+            softmax_pj_row: k as f64 * e.e_nl_elem,
+            post: None,
+            dense_scores: false,
+        }
+    }
+}
+
+/// The paper's macro: top-k in-memory ADC with early stop
+/// (`topkima-SM`, Eq. 4).
+pub struct TopkimaModel;
+
+impl AcceleratorModel for TopkimaModel {
+    fn kind(&self) -> SoftmaxKind {
+        SoftmaxKind::Topkima
+    }
+
+    fn key(&self) -> &'static str {
+        "topkima"
+    }
+
+    fn name(&self) -> &'static str {
+        "topkima-SM"
+    }
+
+    fn paper(&self) -> &'static str {
+        "arxiv 2411.13050"
+    }
+
+    fn supports_dense(&self) -> bool {
+        false
+    }
+
+    fn legacy(&self) -> bool {
+        true
+    }
+
+    fn schedule(&self) -> StageSchedule {
+        StageSchedule::LEGACY
+    }
+
+    fn strategy(&self, k: usize) -> Box<dyn SelectionStrategy + Send + Sync> {
+        Box::new(TopkimaSelect { k })
+    }
+
+    fn build_macro(&self, parts: MacroParts, k: usize) -> Box<dyn SoftmaxMacro> {
+        Box::new(TopkimaSm { parts, k })
+    }
+
+    fn sim_costs(&self, input: &StageInput<'_>) -> StageCosts {
+        let (d, k, t, e) = (input.d, input.k, input.timing, input.energy);
+        StageCosts {
+            conv_ns: t.t_ima_arb(input.alpha, k),
+            conv_pj_row: input.alpha
+                * d as f64
+                * ramp_cycles(t)
+                * e.e_adc_cycle
+                + k as f64 * e.e_arb_event,
+            softmax_ns: k as f64 * t.t_nl_dig,
+            softmax_pj_row: k as f64 * e.e_nl_elem,
+            post: None,
+            dense_scores: false,
+        }
+    }
+}
+
+/// ITA's dimensionless NL-stage factors vs the digital-softmax unit:
+/// integer streaming max with a fused shift-based exp needs no sorter
+/// and no divider pipeline, so the per-element NL stage collapses to
+/// roughly (0.15× latency, 0.08× energy) of `T_NL,dig`/`E_NL` — the
+/// values that put a d = 384 row on the paper's ~5.2×/~7.4× gains over
+/// a conventional dense softmax datapath.
+const ITA_NL: (f64, f64) = (0.15, 0.08);
+
+/// ITA: integer streaming-max softmax, no sort (arxiv 2307.03493). A
+/// dense design — every score is normalized on the fly — so it reuses
+/// [`FullConversion`]; its advantage is the near-free integer NL unit.
+pub struct ItaModel;
+
+impl AcceleratorModel for ItaModel {
+    fn kind(&self) -> SoftmaxKind {
+        SoftmaxKind::Ita
+    }
+
+    fn key(&self) -> &'static str {
+        "ita"
+    }
+
+    fn name(&self) -> &'static str {
+        "ITA-SM"
+    }
+
+    fn paper(&self) -> &'static str {
+        "arxiv 2307.03493"
+    }
+
+    fn supports_dense(&self) -> bool {
+        true
+    }
+
+    fn schedule(&self) -> StageSchedule {
+        StageSchedule { nl_scale: Some(ITA_NL), post_scale: None }
+    }
+
+    fn strategy(&self, _k: usize) -> Box<dyn SelectionStrategy + Send + Sync> {
+        Box::new(FullConversion)
+    }
+
+    fn build_macro(&self, parts: MacroParts, _k: usize) -> Box<dyn SoftmaxMacro> {
+        Box::new(RivalSm {
+            parts,
+            strategy: Box::new(FullConversion),
+            schedule: self.schedule(),
+            name: self.name(),
+        })
+    }
+
+    fn sim_costs(&self, input: &StageInput<'_>) -> StageCosts {
+        let (d, t, e) = (input.d, input.timing, input.energy);
+        StageCosts {
+            softmax_ns: d as f64 * t.t_nl_dig * ITA_NL.0,
+            softmax_pj_row: d as f64 * e.e_nl_elem * ITA_NL.1,
+            ..conv_stage_costs(input)
+        }
+    }
+
+    fn calibration(&self) -> Option<CalibrationTarget> {
+        Some(CalibrationTarget {
+            latency_ratio_vs_conv: 5.2,
+            energy_ratio_vs_conv: 7.4,
+            rel_tol: 0.25,
+            source: "arxiv 2307.03493 (ITA softmax vs fp baseline)",
+        })
+    }
+}
+
+/// Hyft's NL-stage factors: the hybrid fixed/float pipeline keeps a
+/// reconfigurable float stage in the loop, so it saves less than ITA —
+/// (0.23× latency, 0.15× energy) per element, landing the d = 384 row
+/// on the paper's ~3.7×/~5.0× gains.
+const HYFT_NL: (f64, f64) = (0.23, 0.15);
+
+/// Hyft: hybrid fixed/floating-point reconfigurable softmax (arxiv
+/// 2311.13290). Dense, full-conversion; cheaper NL stage than conv-SM
+/// but more expensive than ITA's pure-integer unit.
+pub struct HyftModel;
+
+impl AcceleratorModel for HyftModel {
+    fn kind(&self) -> SoftmaxKind {
+        SoftmaxKind::Hyft
+    }
+
+    fn key(&self) -> &'static str {
+        "hyft"
+    }
+
+    fn name(&self) -> &'static str {
+        "Hyft-SM"
+    }
+
+    fn paper(&self) -> &'static str {
+        "arxiv 2311.13290"
+    }
+
+    fn supports_dense(&self) -> bool {
+        true
+    }
+
+    fn schedule(&self) -> StageSchedule {
+        StageSchedule { nl_scale: Some(HYFT_NL), post_scale: None }
+    }
+
+    fn strategy(&self, _k: usize) -> Box<dyn SelectionStrategy + Send + Sync> {
+        Box::new(FullConversion)
+    }
+
+    fn build_macro(&self, parts: MacroParts, _k: usize) -> Box<dyn SoftmaxMacro> {
+        Box::new(RivalSm {
+            parts,
+            strategy: Box::new(FullConversion),
+            schedule: self.schedule(),
+            name: self.name(),
+        })
+    }
+
+    fn sim_costs(&self, input: &StageInput<'_>) -> StageCosts {
+        let (d, t, e) = (input.d, input.timing, input.energy);
+        StageCosts {
+            softmax_ns: d as f64 * t.t_nl_dig * HYFT_NL.0,
+            softmax_pj_row: d as f64 * e.e_nl_elem * HYFT_NL.1,
+            ..conv_stage_costs(input)
+        }
+    }
+
+    fn calibration(&self) -> Option<CalibrationTarget> {
+        Some(CalibrationTarget {
+            latency_ratio_vs_conv: 3.7,
+            energy_ratio_vs_conv: 5.0,
+            rel_tol: 0.25,
+            source: "arxiv 2311.13290 (Hyft vs fp softmax baseline)",
+        })
+    }
+}
+
+/// SOLE's NL-stage factors (softmax half): dynamic compression keeps
+/// more of the exact exp path than ITA, (0.31× latency, 0.12× energy).
+const SOLE_NL: (f64, f64) = (0.31, 0.12);
+
+/// SOLE's post-softmax LayerNorm stage, per element over the full row:
+/// (0.08× latency, 0.06× energy) of the NL unit — the first cost stage
+/// the model prices *past* softmax.
+const SOLE_POST: (f64, f64) = (0.08, 0.06);
+
+/// SOLE: softmax + LayerNorm co-design with dynamic compression (arxiv
+/// 2510.17189). Dense, full-conversion, and the one design whose cost
+/// schedule extends past softmax: its fused LayerNorm is priced as a
+/// post stage.
+pub struct SoleModel;
+
+impl AcceleratorModel for SoleModel {
+    fn kind(&self) -> SoftmaxKind {
+        SoftmaxKind::Sole
+    }
+
+    fn key(&self) -> &'static str {
+        "sole"
+    }
+
+    fn name(&self) -> &'static str {
+        "SOLE-SM"
+    }
+
+    fn paper(&self) -> &'static str {
+        "arxiv 2510.17189"
+    }
+
+    fn supports_dense(&self) -> bool {
+        true
+    }
+
+    fn schedule(&self) -> StageSchedule {
+        StageSchedule { nl_scale: Some(SOLE_NL), post_scale: Some(SOLE_POST) }
+    }
+
+    fn strategy(&self, _k: usize) -> Box<dyn SelectionStrategy + Send + Sync> {
+        Box::new(FullConversion)
+    }
+
+    fn build_macro(&self, parts: MacroParts, _k: usize) -> Box<dyn SoftmaxMacro> {
+        Box::new(RivalSm {
+            parts,
+            strategy: Box::new(FullConversion),
+            schedule: self.schedule(),
+            name: self.name(),
+        })
+    }
+
+    fn sim_costs(&self, input: &StageInput<'_>) -> StageCosts {
+        let (d, t, e) = (input.d, input.timing, input.energy);
+        StageCosts {
+            softmax_ns: d as f64 * t.t_nl_dig * SOLE_NL.0,
+            softmax_pj_row: d as f64 * e.e_nl_elem * SOLE_NL.1,
+            post: Some((
+                d as f64 * t.t_nl_dig * SOLE_POST.0,
+                d as f64 * e.e_nl_elem * SOLE_POST.1,
+            )),
+            ..conv_stage_costs(input)
+        }
+    }
+
+    fn calibration(&self) -> Option<CalibrationTarget> {
+        Some(CalibrationTarget {
+            latency_ratio_vs_conv: 2.4,
+            energy_ratio_vs_conv: 4.4,
+            rel_tol: 0.25,
+            source: "arxiv 2510.17189 (SOLE softmax+LN vs baseline)",
+        })
+    }
+}
+
+/// Every registered model, in [`SoftmaxKind::ALL`] order (the legacy
+/// three first — `benches/fig4a_softmax_macros.rs` indexes positions).
+pub fn models() -> [&'static dyn AcceleratorModel; 6] {
+    [&ConvModel, &DtopkModel, &TopkimaModel, &ItaModel, &HyftModel, &SoleModel]
+}
+
+/// The model backing a [`SoftmaxKind`].
+pub fn model_for(kind: SoftmaxKind) -> &'static dyn AcceleratorModel {
+    match kind {
+        SoftmaxKind::Conventional => &ConvModel,
+        SoftmaxKind::Dtopk => &DtopkModel,
+        SoftmaxKind::Topkima => &TopkimaModel,
+        SoftmaxKind::Ita => &ItaModel,
+        SoftmaxKind::Hyft => &HyftModel,
+        SoftmaxKind::Sole => &SoleModel,
+    }
+}
+
+/// Parse a kind by key, display name, or alias.
+pub fn parse(s: &str) -> Option<SoftmaxKind> {
+    let t = s.trim();
+    models()
+        .into_iter()
+        .find(|m| t == m.key() || t == m.name() || m.aliases().contains(&t))
+        .map(|m| m.kind())
+}
+
+/// [`parse`], but failures carry the registry-sourced valid-kind list.
+pub fn parse_or_err(s: &str) -> Result<SoftmaxKind, UnknownKindError> {
+    parse(s).ok_or_else(|| UnknownKindError { input: s.to_string() })
+}
+
+/// Price one full d-wide score row (conversion + softmax + any post
+/// stage) with the 65 nm macro-layer defaults — the quantity the
+/// published rival ratios are asserted against, and what `topkima
+/// accel-table` renders.
+pub fn row_costs(
+    kind: SoftmaxKind,
+    d: usize,
+    k: usize,
+    alpha: f64,
+) -> (f64, f64) {
+    let t = Timing::default();
+    let e = Energy::default();
+    let c = model_for(kind)
+        .sim_costs(&StageInput { d, k, alpha, timing: &t, energy: &e });
+    let (post_ns, post_pj) = c.post.unwrap_or((0.0, 0.0));
+    (
+        c.conv_ns + c.softmax_ns + post_ns,
+        c.conv_pj_row + c.softmax_pj_row + post_pj,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keys_table_matches_models() {
+        let models = models();
+        assert_eq!(KEYS.len(), models.len());
+        assert_eq!(KEYS.len(), SoftmaxKind::ALL.len());
+        for ((key, m), kind) in
+            KEYS.iter().zip(models).zip(SoftmaxKind::ALL)
+        {
+            assert_eq!(*key, m.key());
+            assert_eq!(m.kind(), kind);
+            assert_eq!(model_for(kind).key(), *key);
+        }
+    }
+
+    #[test]
+    fn legacy_three_lead_the_table() {
+        // fig4a indexes ALL positionally — the pre-registry designs
+        // must stay in front, in their historical order.
+        assert_eq!(&KEYS[..3], &["conv", "dtopk", "topkima"]);
+        for (i, m) in models().into_iter().enumerate() {
+            assert_eq!(m.legacy(), i < 3, "{}", m.key());
+        }
+    }
+
+    #[test]
+    fn parse_accepts_keys_names_and_aliases() {
+        for m in models() {
+            assert_eq!(parse(m.key()), Some(m.kind()));
+            assert_eq!(parse(m.name()), Some(m.kind()));
+            for alias in m.aliases() {
+                assert_eq!(parse(alias), Some(m.kind()));
+            }
+        }
+        assert_eq!(parse("conventional"), Some(SoftmaxKind::Conventional));
+        assert_eq!(parse(" topkima "), Some(SoftmaxKind::Topkima));
+        assert_eq!(parse("softermax"), None);
+    }
+
+    #[test]
+    fn unknown_kind_error_lists_registry_keys() {
+        let err = parse_or_err("softermax").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("softermax"), "{msg}");
+        for key in KEYS {
+            assert!(msg.contains(key), "missing {key} in: {msg}");
+        }
+        assert_eq!(key_list(), "conv|dtopk|topkima|ita|hyft|sole");
+    }
+
+    #[test]
+    fn dense_support_flags() {
+        for m in models() {
+            let dense = m.supports_dense();
+            match m.kind() {
+                SoftmaxKind::Dtopk | SoftmaxKind::Topkima => {
+                    assert!(!dense, "{}", m.key())
+                }
+                _ => assert!(dense, "{}", m.key()),
+            }
+        }
+    }
+
+    #[test]
+    fn rival_schedules_agree_with_sim_costs() {
+        // one factor table per design: the macro-layer schedule and the
+        // system-level sim_costs must price the NL stage identically
+        // relative to the legacy unit.
+        let t = Timing::default();
+        let e = Energy::default();
+        let d = 384;
+        let input =
+            StageInput { d, k: 5, alpha: 0.31, timing: &t, energy: &e };
+        for m in models() {
+            if m.legacy() {
+                assert_eq!(m.schedule(), StageSchedule::LEGACY);
+                continue;
+            }
+            let sched = m.schedule();
+            let (nl_l, nl_e) = sched.nl_scale.expect(m.key());
+            let c = m.sim_costs(&input);
+            assert_eq!(c.softmax_ns, d as f64 * t.t_nl_dig * nl_l);
+            assert_eq!(c.softmax_pj_row, d as f64 * e.e_nl_elem * nl_e);
+            match sched.post_scale {
+                None => assert_eq!(c.post, None),
+                Some((pl, pe)) => assert_eq!(
+                    c.post,
+                    Some((
+                        d as f64 * t.t_nl_dig * pl,
+                        d as f64 * e.e_nl_elem * pe
+                    ))
+                ),
+            }
+            assert!(c.dense_scores);
+        }
+    }
+
+    fn check_calibration(kind: SoftmaxKind) {
+        let (d, k, alpha) = (384, 5, 0.31);
+        let cal = model_for(kind).calibration().expect("rival target");
+        let (conv_ns, conv_pj) =
+            row_costs(SoftmaxKind::Conventional, d, k, alpha);
+        let (ns, pj) = row_costs(kind, d, k, alpha);
+        let lat_ratio = conv_ns / ns;
+        let en_ratio = conv_pj / pj;
+        assert!(
+            (lat_ratio - cal.latency_ratio_vs_conv).abs()
+                <= cal.rel_tol * cal.latency_ratio_vs_conv,
+            "{kind:?} latency ratio {lat_ratio} vs published {} ({})",
+            cal.latency_ratio_vs_conv,
+            cal.source,
+        );
+        assert!(
+            (en_ratio - cal.energy_ratio_vs_conv).abs()
+                <= cal.rel_tol * cal.energy_ratio_vs_conv,
+            "{kind:?} energy ratio {en_ratio} vs published {} ({})",
+            cal.energy_ratio_vs_conv,
+            cal.source,
+        );
+    }
+
+    #[test]
+    fn ita_calibrated_to_published_ratios() {
+        check_calibration(SoftmaxKind::Ita);
+    }
+
+    #[test]
+    fn hyft_calibrated_to_published_ratios() {
+        check_calibration(SoftmaxKind::Hyft);
+    }
+
+    #[test]
+    fn sole_calibrated_to_published_ratios() {
+        check_calibration(SoftmaxKind::Sole);
+    }
+
+    #[test]
+    fn rivals_sit_between_conv_and_topkima() {
+        // sanity on the zoo's ordering: every dense rival beats conv-SM
+        // but none beats the top-k designs on a long row.
+        let (d, k, alpha) = (384, 5, 0.31);
+        let (conv_ns, conv_pj) =
+            row_costs(SoftmaxKind::Conventional, d, k, alpha);
+        let (top_ns, top_pj) = row_costs(SoftmaxKind::Topkima, d, k, alpha);
+        for kind in
+            [SoftmaxKind::Ita, SoftmaxKind::Hyft, SoftmaxKind::Sole]
+        {
+            let (ns, pj) = row_costs(kind, d, k, alpha);
+            assert!(ns < conv_ns && ns > top_ns, "{kind:?} ns {ns}");
+            assert!(pj < conv_pj && pj > top_pj, "{kind:?} pj {pj}");
+        }
+    }
+}

@@ -20,10 +20,7 @@ use topkima::attention::{
 };
 use topkima::crossbar::{Crossbar, Tech};
 use topkima::ima::{ColumnNoise, NoiseModel};
-use topkima::softmax::macros::{
-    run_macro, DigitalTopkSelect, FullConversion, MacroCost, MacroParts,
-    TopkimaSelect,
-};
+use topkima::softmax::macros::{macro_for, MacroCost, MacroParts};
 use topkima::softmax::SoftmaxKind;
 use topkima::util::check::property;
 use topkima::util::rng::Rng;
@@ -55,13 +52,9 @@ fn monolithic(
         parts.converter.bitline.sigma_noise_v = sigma;
         parts.converter.noise = cn.clone();
     }
-    match kind {
-        SoftmaxKind::Conventional => run_macro(&parts, &FullConversion, q, rng),
-        SoftmaxKind::Dtopk => {
-            run_macro(&parts, &DigitalTopkSelect { k }, q, rng)
-        }
-        SoftmaxKind::Topkima => run_macro(&parts, &TopkimaSelect { k }, q, rng),
-    }
+    // registry-dispatched: the same strategy + schedule the chunked
+    // engine's `run_kind` resolves, for every registered design
+    macro_for(kind, parts, k).run(q, rng)
 }
 
 /// Chunked path over the same dense codes, same optional noise.
@@ -163,7 +156,7 @@ fn chunked_matches_monolithic_across_widths_and_chunks() {
         let chunk = 1 + rng.below(seq + 8);
         let depth = 1 + rng.below(64);
         let k = 1 + rng.below(seq);
-        let kind = SoftmaxKind::ALL[rng.below(3)];
+        let kind = SoftmaxKind::ALL[rng.below(SoftmaxKind::ALL.len())];
         let noisy = rng.chance(0.5);
         let codes = rand_codes(depth, seq, rng);
         let q = rand_queries(1 + rng.below(4), depth, rng);

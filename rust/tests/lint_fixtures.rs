@@ -54,6 +54,39 @@ fn schema_sync_catches_a_frame_kind_missing_its_parser_arm() {
         .all(|f| f.checker == "schema-sync" && f.message.contains("ghost")));
 }
 
+/// A registry that registers a kind ("ghost") the config parser, the
+/// CLI help text, and DESIGN.md §15 never mention.
+const REGISTRY_WITH_GHOST_KIND: &str = r#"
+pub const KEYS: [&str; 3] =
+    ["conv", "topkima", "ghost"];
+"#;
+
+#[test]
+fn schema_sync_catches_a_registry_kind_wired_nowhere() {
+    let mut set = single(
+        "rust/src/softmax/registry.rs",
+        REGISTRY_WITH_GHOST_KIND,
+    );
+    set.insert(
+        "rust/src/pipeline/config.rs",
+        "// parser surface: \"conv\" and \"topkima\" arms\n",
+    );
+    set.insert(
+        "rust/src/main.rs",
+        "const HELP: &str = \"--softmax conv|topkima\";\n",
+    );
+    set.insert("DESIGN.md", "## §15 Registry\n\nkinds: `conv`, `topkima`.\n");
+    let report = run(&set);
+    // no config arm, no help entry, no §15 docs — all for "ghost",
+    // each anchored at the registry's KEYS table
+    assert_eq!(report.findings.len(), 3, "{:?}", report.findings);
+    assert!(report.findings.iter().all(|f| {
+        f.checker == "schema-sync"
+            && f.message.contains("ghost")
+            && f.file.ends_with("registry.rs")
+    }));
+}
+
 #[test]
 fn panic_path_catches_a_naked_unwrap_on_the_serving_path() {
     let set = single(
