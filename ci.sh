@@ -33,13 +33,16 @@
 #      the 4k figure (16x the sequence), or the streaming path has
 #      regressed to O(seq) state. The same report renders the
 #      EXPERIMENTS.md §Long-context table (LONGCTX_TABLE markers)
-#   7. smoke: export a tiny eval trace and replay it through BOTH
+#   7. smoke: export a tiny eval trace and replay it through ALL THREE
 #      fleet↔shard transports in deterministic mode — twice over the
 #      local transport (stealing on), once over the process transport
-#      (shard-worker subprocesses + wire protocol) — and `cmp` all
-#      three BENCH files: replay must be deterministic AND
-#      transport-invariant (the ShardTransport redesign is
-#      behavior-preserving). The same trace is then replayed with
+#      (shard-worker subprocesses + wire protocol), and once over the
+#      tcp transport (fleet-worker processes dialing a loopback front,
+#      stealing on, front-mediated) — and `cmp` all the BENCH files:
+#      replay must be deterministic AND transport-invariant (the
+#      ShardTransport redesign is behavior-preserving). The tcp leg
+#      SKIPs loudly when the sandbox cannot bind a loopback port.
+#      The same trace is then replayed with
 #      `--behavioral` (real circuit-macro batches) under BOTH SIMD
 #      modes and cmp'ed against the synthetic replay: deterministic
 #      metrics are schedule-determined, so the behavioral executor and
@@ -251,14 +254,14 @@ else
     status=1
 fi
 
-note "smoke: trace replay, both transports (byte-identical BENCH files)"
-# export the synthetic schedule, then replay it deterministically three
+note "smoke: trace replay, all transports (byte-identical BENCH files)"
+# export the synthetic schedule, then replay it deterministically four
 # ways: twice through the 2-shard *local* transport with stealing on
-# (the determinism guarantee), and once through the *process* transport
-# (shard-worker subprocesses over the wire protocol; stealing off — the
-# config validator rejects steal × process). All three BENCH files must
-# be byte-identical: deterministic replay metrics are schedule-
-# determined, so they prove the ShardTransport boundary (and stealing)
+# (the determinism guarantee), once through the *process* transport
+# (shard-worker subprocesses over the wire protocol), and once through
+# the *tcp* transport below. Every BENCH file must be byte-identical:
+# deterministic replay metrics are schedule-determined, so they prove
+# the ShardTransport boundary (and stealing)
 # is behavior-invariant. The first replay is kept as
 # BENCH_fleet_replay.json — its batching metrics are exactly
 # reproducible, so THAT file (not the wall-clock live smoke) joins the
@@ -293,6 +296,46 @@ else
     status=1
 fi
 
+# TCP leg: two fleet-worker processes dial a loopback front and replay
+# the same trace (stealing on — tcp stealing is front-mediated over the
+# donate/steal frames). The BENCH file must still be byte-identical:
+# deterministic metrics are schedule-determined, so neither the socket
+# hop nor cross-host stealing may move them. Workers retry the dial for
+# 10s, so starting them before the front binds is fine. A sandbox that
+# cannot bind a loopback port skips this leg LOUDLY (nothing proven).
+tcp_addr=127.0.0.1:17311
+tcp_front_log=/tmp/topkima_ci_tcp_front.log
+target/release/topkima fleet-worker --connect "$tcp_addr" \
+    > /tmp/topkima_ci_tcp_w1.log 2>&1 &
+tcp_w1=$!
+target/release/topkima fleet-worker --connect "$tcp_addr" \
+    > /tmp/topkima_ci_tcp_w2.log 2>&1 &
+tcp_w2=$!
+if cargo run --release --quiet -- serve-fleet \
+        --trace "$trace" --transport tcp --transport-listen "$tcp_addr" \
+        --steal on --deterministic \
+        --out /tmp/topkima_ci_fleet_replay_tcp.json 2> "$tcp_front_log"; then
+    if cmp -s BENCH_fleet_replay.json \
+              /tmp/topkima_ci_fleet_replay_tcp.json; then
+        echo "ok: tcp-transport replay matches the local transport" \
+             "byte-for-byte (2 dialed-in workers, stealing on)"
+    else
+        echo "FAIL: tcp-transport replay diverges from local"
+        status=1
+    fi
+elif grep -q "bind" "$tcp_front_log"; then
+    echo "SKIP: tcp replay leg NOT run — this sandbox cannot bind a" \
+         "loopback port ($(grep -m1 bind "$tcp_front_log")). The tcp" \
+         "transport was NOT exercised this run"
+else
+    echo "FAIL: tcp-transport replay front exited nonzero:"
+    cat "$tcp_front_log"
+    status=1
+fi
+# front shutdown (or its bind failure + the 10s dial budget) ends both
+# workers; reap them so the gate never leaks processes
+wait "$tcp_w1" "$tcp_w2" 2>/dev/null
+
 # Behavioral executors do real circuit-macro work per batch (batched
 # MAC + batched top-k conversion — the §Perf hot paths) instead of a
 # modeled sleep. Deterministic-replay metrics are schedule-determined,
@@ -323,10 +366,15 @@ if cargo run --release --quiet -- no-such-subcommand >/dev/null 2>&1; then
     echo "FAIL: unknown subcommand exited 0"
     status=1
 elif cargo run --release --quiet -- help serve-fleet >/dev/null \
-        && cargo run --release --quiet -- help lint >/dev/null; then
-    echo "ok: unknown subcommand fails, topkima help works"
+        && cargo run --release --quiet -- help lint >/dev/null \
+        && cargo run --release --quiet -- help fleet-worker \
+            | grep -q -- --connect \
+        && cargo run --release --quiet -- help serve-fleet \
+            | grep -q -- --transport-heartbeat-ms; then
+    echo "ok: unknown subcommand fails; help covers serve-fleet, lint," \
+         "and fleet-worker (with the tcp membership flags)"
 else
-    echo "FAIL: topkima help serve-fleet / help lint"
+    echo "FAIL: topkima help serve-fleet / help lint / help fleet-worker"
     status=1
 fi
 

@@ -162,18 +162,37 @@ impl fmt::Display for ShardPanic {
 
 impl std::error::Error for ShardPanic {}
 
+/// FNV-1a over the family bytes folded with k — the one hash every
+/// stream→shard assignment derives from.
+fn fnv(key: &StreamKey) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in key.0.as_bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    (h ^ key.1 as u64).wrapping_mul(0x0000_0100_0000_01b3)
+}
+
 /// Deterministic stream→shard assignment: FNV-1a over the family bytes
 /// folded with k. Stable across runs and platforms — re-sharding a
 /// fleet only *relocates* whole streams, it never splits one.
 pub fn shard_of(key: &StreamKey, shards: usize) -> usize {
     // lint:allow(panic-path): debug-only guard on an invariant config validation enforces; release builds take the modulo unconditionally
     debug_assert!(shards > 0);
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for &b in key.0.as_bytes() {
-        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    (fnv(key) % shards as u64) as usize
+}
+
+/// [`shard_of`] re-keyed over an explicit *live member set* (elastic
+/// membership, DESIGN.md §16): the hash picks a position in `live`, so
+/// routing survives holes in the slot space — dead or drained members
+/// simply drop out of the candidate list. When `live` is the full
+/// contiguous set `[0, n)` this is exactly `shard_of(key, n)`, which is
+/// what keeps deterministic replay byte-identical across transports at
+/// full membership. `None` when no member is routable.
+pub fn shard_of_live(key: &StreamKey, live: &[usize]) -> Option<usize> {
+    if live.is_empty() {
+        return None;
     }
-    h = (h ^ key.1 as u64).wrapping_mul(0x0000_0100_0000_01b3);
-    (h % shards as u64) as usize
+    live.get((fnv(key) % live.len() as u64) as usize).copied()
 }
 
 /// Handle for submitting work to a running fleet. The front is
@@ -185,7 +204,17 @@ pub struct Fleet {
     stream_shard: BTreeMap<StreamKey, usize>,
     next_id: RequestId,
     front_rejected: u64,
+    /// The transport's membership epoch this front's routing table was
+    /// built against. Fixed topologies never move it (always 0); the
+    /// TCP transport bumps it on every join/leave/eviction and the
+    /// submit path re-hashes exactly then.
+    routed_epoch: u64,
 }
+
+/// Sentinel shard index for a stream with no routable member: every
+/// transport's `submit` range-checks the index, so submissions degrade
+/// to typed [`RouteError::ShardDown`] instead of panicking.
+const NO_SHARD: usize = usize::MAX;
 
 impl Fleet {
     /// Spawn `factories.len()` in-process shard loops and
@@ -227,6 +256,7 @@ impl Fleet {
             stream_shard,
             next_id: 0,
             front_rejected: 0,
+            routed_epoch: 0,
         }
     }
 
@@ -252,7 +282,21 @@ impl Fleet {
                 (key, shard)
             })
             .collect();
-        Fleet { transport, stream_shard, next_id: 0, front_rejected: 0 }
+        let routed_epoch = transport.membership_epoch();
+        let mut fleet = Fleet {
+            transport,
+            stream_shard,
+            next_id: 0,
+            front_rejected: 0,
+            routed_epoch,
+        };
+        // An elastic transport may have seen members come and go before
+        // the front existed (or start with holes); route over the live
+        // set from the first submit, not the contiguous assumption.
+        if routed_epoch != 0 {
+            fleet.rebuild_routes(routed_epoch);
+        }
+        fleet
     }
 
     pub fn shard_count(&self) -> usize {
@@ -268,6 +312,15 @@ impl Fleet {
     /// shard threads).
     pub fn worker_pid(&self, shard: usize) -> Option<u32> {
         self.transport.worker_pid(shard)
+    }
+
+    /// Slots the transport currently routes to. Fixed topologies
+    /// (local, process) report every shard forever; the tcp transport
+    /// reports the live membership view — a scale-out appears here once
+    /// the new worker's handshake completes, an eviction or drain
+    /// removes its slot.
+    pub fn live_shards(&self) -> Vec<usize> {
+        self.transport.live_shards()
     }
 
     /// Every registered stream, in key order.
@@ -299,6 +352,13 @@ impl Fleet {
         k: usize,
         input: Arc<InputData>,
     ) -> Result<mpsc::Receiver<Response>, RouteError> {
+        // One atomic load on the steady-state path: re-hash the routing
+        // table only when the transport's membership actually changed
+        // (fixed topologies never do — epoch stays 0 forever).
+        let epoch = self.transport.membership_epoch();
+        if epoch != self.routed_epoch {
+            self.rebuild_routes(epoch);
+        }
         let key: StreamKey = (model, k);
         let shard = match self.stream_shard.get(&key) {
             Some(&s) => s,
@@ -320,6 +380,34 @@ impl Fleet {
                 Err(e)
             }
         }
+    }
+
+    /// Re-hash every stream over the transport's live member set
+    /// ([`shard_of_live`]). A stream with no routable member gets the
+    /// `NO_SHARD` sentinel, which every transport's `submit` rejects as
+    /// typed [`RouteError::ShardDown`].
+    fn rebuild_routes(&mut self, epoch: u64) {
+        let live = self.transport.live_shards();
+        for (key, shard) in self.stream_shard.iter_mut() {
+            *shard = shard_of_live(key, &live).unwrap_or(NO_SHARD);
+        }
+        self.routed_epoch = epoch;
+    }
+
+    /// Gracefully drain one shard under live load (scale-in): the
+    /// transport stops routing to it and flushes its in-flight batches;
+    /// its report is collected at [`Fleet::shutdown`] as usual. Returns
+    /// `false` on fixed topologies (local, process) and for shards that
+    /// are not currently routable.
+    pub fn drain_shard(&mut self, shard: usize) -> bool {
+        let drained = self.transport.drain_shard(shard);
+        if drained {
+            // the epoch moved; re-hash now so the very next submit
+            // already avoids the draining member
+            let epoch = self.transport.membership_epoch();
+            self.rebuild_routes(epoch);
+        }
+        drained
     }
 
     /// Drain every shard through the transport and return the full
@@ -641,6 +729,34 @@ mod tests {
         for def in defs() {
             assert_eq!(shard_of(&def.key(), 1), 0);
         }
+    }
+
+    #[test]
+    fn shard_of_live_matches_shard_of_at_full_membership() {
+        for n in [1usize, 2, 3, 5, 8] {
+            let full: Vec<usize> = (0..n).collect();
+            for def in defs() {
+                let key = def.key();
+                assert_eq!(
+                    shard_of_live(&key, &full),
+                    Some(shard_of(&key, n)),
+                    "full membership must reproduce the static hash \
+                     (n = {n})"
+                );
+            }
+        }
+        // holes: the hash picks a *position*, so only live members are
+        // ever returned
+        let live = vec![0usize, 2, 5];
+        for def in defs() {
+            let s = shard_of_live(&def.key(), &live)
+                .expect("non-empty live set routes");
+            assert!(live.contains(&s), "routed to a dead slot: {s}");
+            // and the choice is stable
+            assert_eq!(Some(s), shard_of_live(&def.key(), &live));
+        }
+        // an empty live set routes nowhere, typed
+        assert_eq!(shard_of_live(&(Arc::from("bert"), 5), &[]), None);
     }
 
     #[test]

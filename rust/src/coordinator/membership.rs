@@ -1,0 +1,543 @@
+//! Elastic shard membership: the front-side bookkeeping that lets a
+//! fleet span hosts and survive them (DESIGN.md §16).
+//!
+//! The fixed-topology transports (local threads, spawned worker
+//! subprocesses) know their shard set at construction and a death is
+//! synchronous (joined thread, pipe EOF). A cross-host fleet has
+//! neither property: workers *dial in* (`join` → `init` → `ready`),
+//! prove liveness with periodic `heartbeat` frames, and may come and go
+//! under live load. This module owns that state:
+//!
+//! * [`MemberTable`] — one slot per worker that ever completed the
+//!   handshake, with a typed lifecycle (`Joining → Up → Draining /
+//!   Down → Drained`) and an **epoch** counter that bumps on every
+//!   routable-set change. The fleet front re-hashes its stream→shard
+//!   table exactly when the epoch moved (`fleet::shard_of_live`), so
+//!   the steady-state submit path stays one atomic load.
+//! * [`HeartbeatConfig`] — the liveness contract: a worker whose last
+//!   inbound frame is older than `interval × miss_budget` is evicted
+//!   (socket shut down, slot marked `Down`, epoch bumped). Any frame
+//!   counts as a beat, so a worker busy streaming replies is never
+//!   evicted for skipping its timer.
+//! * [`StealHub`] — front-mediated work-stealing over the reserved
+//!   `steal`/`donate` frames, shared by the process and TCP
+//!   transports: idle workers announce hunger, loaded workers ship
+//!   surplus formed batches, and the hub forwards each donation to a
+//!   hungry live peer — or straight back to the donor when nobody is
+//!   hungry, so a donated batch is executed exactly once, somewhere.
+//!
+//! Everything here is front-side and transport-agnostic; the socket
+//! and pipe specifics stay in `transport/tcp.rs` / `transport/proc.rs`.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::Write;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use super::request::{RequestId, Response};
+use super::transport::wire::{self, Frame, WireError};
+
+/// Pending-reply map shared between a transport's submit path and its
+/// reader thread(s): request id → the caller's reply sender.
+pub(crate) type Waiters =
+    Arc<Mutex<HashMap<RequestId, mpsc::Sender<Response>>>>;
+
+/// Poison-resilient lock: a reader thread can only die between frames;
+/// never lose the shared state to lock poisoning.
+pub(crate) fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Write one frame through a shared writer slot. `Ok(false)` means the
+/// writer is already closed (shutdown or eviction took it), `Err` a
+/// broken pipe/socket — the caller marks the shard down.
+pub(crate) fn send_locked<W: Write>(
+    writer: &Mutex<Option<W>>,
+    frame: &Frame,
+) -> Result<bool, WireError> {
+    let mut guard = lock(writer);
+    match guard.as_mut() {
+        // lint:allow(lock-discipline): the guard scopes exactly one flushed frame write so concurrent senders cannot interleave bytes; no channel op or second lock is reachable while it is held
+        Some(w) => wire::write_frame(w, frame).map(|()| true),
+        None => Ok(false),
+    }
+}
+
+/// The liveness contract between a front and its dialed-in workers
+/// (`fleet.transport.heartbeat_ms` / `fleet.transport.miss_budget`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HeartbeatConfig {
+    /// Worker-side beacon cadence, milliseconds.
+    pub interval_ms: u64,
+    /// Consecutive silent intervals before the front evicts the worker.
+    pub miss_budget: u32,
+}
+
+impl Default for HeartbeatConfig {
+    fn default() -> Self {
+        HeartbeatConfig { interval_ms: 500, miss_budget: 3 }
+    }
+}
+
+impl HeartbeatConfig {
+    /// How long a member may stay silent before eviction.
+    pub fn max_silence(&self) -> Duration {
+        Duration::from_millis(
+            self.interval_ms.saturating_mul(self.miss_budget.max(1) as u64),
+        )
+    }
+
+    pub fn interval(&self) -> Duration {
+        Duration::from_millis(self.interval_ms.max(1))
+    }
+}
+
+/// One member's lifecycle. Only `Up` slots are routable; every
+/// transition into or out of `Up` bumps the table epoch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemberState {
+    /// Dialed in, handshake not yet complete (no `ready` seen).
+    Joining,
+    /// Routable: handshake complete, heartbeats current.
+    Up,
+    /// Leaving gracefully (front- or worker-initiated): no new routes,
+    /// in-flight batches still flushing.
+    Draining,
+    /// Dead: socket gone, heartbeat budget exhausted, or killed.
+    Down,
+    /// Drained cleanly; final report stashed.
+    Drained,
+}
+
+struct MemberSlot {
+    state: MemberState,
+    pid: Option<u32>,
+    last_seen: Instant,
+}
+
+/// The membership roster: slot states, pids, liveness stamps, and the
+/// routing epoch. Slots are append-only so shard indices (and the
+/// report vector the fleet aggregates at shutdown) stay stable across
+/// joins and deaths.
+#[derive(Default)]
+pub struct MemberTable {
+    epoch: AtomicU64,
+    slots: Mutex<Vec<MemberSlot>>,
+}
+
+impl MemberTable {
+    pub fn new() -> MemberTable {
+        MemberTable::default()
+    }
+
+    /// Allocate the next slot for a dialing worker (state `Joining`,
+    /// not yet routable — no epoch bump until `mark_up`).
+    pub fn join(&self, pid: Option<u32>) -> usize {
+        let mut slots = lock(&self.slots);
+        slots.push(MemberSlot {
+            state: MemberState::Joining,
+            pid,
+            last_seen: Instant::now(),
+        });
+        slots.len() - 1
+    }
+
+    /// Handshake complete: the slot becomes routable. Bumps the epoch.
+    pub fn mark_up(&self, slot: usize) {
+        if self.transition(slot, MemberState::Up) {
+            self.epoch.fetch_add(1, Ordering::AcqRel);
+        }
+    }
+
+    /// Start a graceful departure: the slot leaves the routable set
+    /// (epoch bump) but its socket stays open to flush in-flight work.
+    /// Returns `false` when the slot was not `Up`.
+    pub fn mark_draining(&self, slot: usize) -> bool {
+        let was_up = self
+            .state(slot)
+            .map(|s| s == MemberState::Up)
+            .unwrap_or(false);
+        if was_up && self.transition(slot, MemberState::Draining) {
+            self.epoch.fetch_add(1, Ordering::AcqRel);
+        }
+        was_up
+    }
+
+    /// The member is gone (EOF, eviction, kill). Idempotent; bumps the
+    /// epoch only when the slot was still routable.
+    pub fn mark_down(&self, slot: usize) {
+        let was_up = self
+            .state(slot)
+            .map(|s| s == MemberState::Up)
+            .unwrap_or(false);
+        if self.transition(slot, MemberState::Down) && was_up {
+            self.epoch.fetch_add(1, Ordering::AcqRel);
+        }
+    }
+
+    /// A draining member delivered its final snapshot.
+    pub fn mark_drained(&self, slot: usize) {
+        self.transition(slot, MemberState::Drained);
+    }
+
+    fn transition(&self, slot: usize, to: MemberState) -> bool {
+        let mut slots = lock(&self.slots);
+        match slots.get_mut(slot) {
+            Some(s) if s.state != to => {
+                // terminal states stay terminal: a late heartbeat from
+                // an evicted worker must not resurrect the slot
+                if matches!(
+                    s.state,
+                    MemberState::Down | MemberState::Drained
+                ) {
+                    return false;
+                }
+                s.state = to;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Record an inbound frame from this member (any frame is liveness).
+    pub fn beat(&self, slot: usize) {
+        if let Some(s) = lock(&self.slots).get_mut(slot) {
+            s.last_seen = Instant::now();
+        }
+    }
+
+    /// Routing epoch: bumps on every change to the routable set.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// The routable slots, ascending.
+    pub fn live(&self) -> Vec<usize> {
+        lock(&self.slots)
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.state == MemberState::Up)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Slots ever allocated (dead and drained included).
+    pub fn total(&self) -> usize {
+        lock(&self.slots).len()
+    }
+
+    pub fn state(&self, slot: usize) -> Option<MemberState> {
+        lock(&self.slots).get(slot).map(|s| s.state)
+    }
+
+    pub fn pid(&self, slot: usize) -> Option<u32> {
+        lock(&self.slots).get(slot).and_then(|s| s.pid)
+    }
+
+    /// `Up` members whose last inbound frame is older than
+    /// `max_silence` — the eviction candidates a heartbeat monitor
+    /// sweeps.
+    pub fn overdue(&self, max_silence: Duration) -> Vec<usize> {
+        let now = Instant::now();
+        lock(&self.slots)
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| {
+                s.state == MemberState::Up
+                    && now.duration_since(s.last_seen) > max_silence
+            })
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+/// Front-side mediation state for transport-carried work-stealing.
+/// Workers announce hunger with a `steal` frame when their router runs
+/// dry; the hub queues them FIFO and pairs each inbound donation with
+/// the first hungry live peer that is not the donor.
+#[derive(Default)]
+pub struct StealHub {
+    hungry: Mutex<VecDeque<usize>>,
+}
+
+impl StealHub {
+    pub fn new() -> StealHub {
+        StealHub::default()
+    }
+
+    /// A worker announced it has nothing to do. Deduplicated — a worker
+    /// re-announcing before any donation arrives stays queued once.
+    pub fn mark_hungry(&self, shard: usize) {
+        let mut q = lock(&self.hungry);
+        if !q.contains(&shard) {
+            q.push_back(shard);
+        }
+    }
+
+    /// Drop a shard from the hungry queue (it died or got work).
+    pub fn forget(&self, shard: usize) {
+        lock(&self.hungry).retain(|&s| s != shard);
+    }
+
+    /// Pop the first hungry shard that is not `donor` and passes the
+    /// liveness check. Dead entries encountered on the way are dropped.
+    pub fn pick(
+        &self,
+        donor: usize,
+        mut is_live: impl FnMut(usize) -> bool,
+    ) -> Option<usize> {
+        let mut q = lock(&self.hungry);
+        let mut skipped: Option<usize> = None;
+        let picked = loop {
+            match q.pop_front() {
+                Some(s) if s == donor => {
+                    // keep the donor queued (it may be hungry *now*
+                    // because it just donated its surplus elsewhere)
+                    skipped = Some(s);
+                }
+                Some(s) if is_live(s) => break Some(s),
+                Some(_) => {} // dead entry: drop it
+                None => break None,
+            }
+        };
+        if let Some(s) = skipped {
+            q.push_front(s);
+        }
+        picked
+    }
+
+    /// Number of queued hungry shards (tests, diagnostics).
+    pub fn hungry_len(&self) -> usize {
+        lock(&self.hungry).len()
+    }
+}
+
+/// The per-shard handles a donation mediator needs: the waiter map, the
+/// shared frame writer, and the down flag. All `Arc`s — cloning a
+/// handle is cheap and lock-free.
+pub(crate) struct SlotHandle<W> {
+    pub(crate) waiters: Waiters,
+    pub(crate) writer: Arc<Mutex<Option<W>>>,
+    pub(crate) down: Arc<AtomicBool>,
+}
+
+impl<W> Clone for SlotHandle<W> {
+    fn clone(&self) -> Self {
+        SlotHandle {
+            waiters: self.waiters.clone(),
+            writer: self.writer.clone(),
+            down: self.down.clone(),
+        }
+    }
+}
+
+/// Route one donated batch: forward it to a hungry live peer (moving
+/// the donated requests' reply waiters to that peer so a later death
+/// there sweeps them), or bounce it back to the donor when nobody is
+/// hungry. A donated batch is delivered exactly once unless every
+/// candidate — donor included — is already dead, in which case the
+/// waiters die with the donor's slot and every caller's `recv` fails
+/// promptly, the same contract as a killed worker.
+pub(crate) fn mediate_donation<W: Write>(
+    donor: usize,
+    frame: &Frame,
+    ids: &[RequestId],
+    hub: &StealHub,
+    slot: impl Fn(usize) -> Option<SlotHandle<W>>,
+) {
+    let Some(donor_slot) = slot(donor) else { return };
+    loop {
+        let target = hub.pick(donor, |s| {
+            slot(s)
+                .map(|h| !h.down.load(Ordering::Acquire))
+                .unwrap_or(false)
+        });
+        let Some(t) = target else {
+            // nobody is hungry: the donor executes its own surplus
+            let _ = send_locked(&donor_slot.writer, frame);
+            return;
+        };
+        let Some(thief) = slot(t) else { continue };
+        // move the waiters before the frame is on the wire: the thief's
+        // replies may race back before this thread runs again
+        let moved: Vec<(RequestId, mpsc::Sender<Response>)> = {
+            let mut wd = lock(&donor_slot.waiters);
+            ids.iter()
+                .filter_map(|id| wd.remove(id).map(|tx| (*id, tx)))
+                .collect()
+        };
+        {
+            let mut wt = lock(&thief.waiters);
+            for (id, tx) in moved {
+                wt.insert(id, tx);
+            }
+        }
+        let delivered = matches!(
+            send_locked(&thief.writer, frame),
+            Ok(true)
+        );
+        // close the race with the thief's exit sweep, like submit does:
+        // down stores before the sweep, so if down still reads false the
+        // moved waiters either survive or were just swept
+        if delivered && !thief.down.load(Ordering::Acquire) {
+            return;
+        }
+        // the thief died under us: reclaim whatever the sweep has not
+        // taken and try the next hungry peer
+        let back: Vec<(RequestId, mpsc::Sender<Response>)> = {
+            let mut wt = lock(&thief.waiters);
+            ids.iter()
+                .filter_map(|id| wt.remove(id).map(|tx| (*id, tx)))
+                .collect()
+        };
+        let mut wd = lock(&donor_slot.waiters);
+        for (id, tx) in back {
+            wd.insert(id, tx);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn member_lifecycle_bumps_epoch_exactly_on_routable_changes() {
+        let t = MemberTable::new();
+        assert_eq!(t.epoch(), 0);
+        assert_eq!(t.live(), Vec::<usize>::new());
+        let a = t.join(Some(11));
+        let b = t.join(None);
+        assert_eq!((a, b), (0, 1));
+        assert_eq!(t.epoch(), 0, "joining is not routable yet");
+        t.mark_up(a);
+        t.mark_up(b);
+        assert_eq!(t.epoch(), 2);
+        assert_eq!(t.live(), vec![0, 1]);
+        assert_eq!(t.pid(a), Some(11));
+        assert_eq!(t.pid(b), None);
+        // down: epoch bump, slot stays (indices stable)
+        t.mark_down(b);
+        assert_eq!(t.epoch(), 3);
+        assert_eq!(t.live(), vec![0]);
+        assert_eq!(t.total(), 2);
+        // idempotent and terminal
+        t.mark_down(b);
+        t.mark_up(b);
+        assert_eq!(t.epoch(), 3, "a dead slot cannot resurrect");
+        assert_eq!(t.state(b), Some(MemberState::Down));
+        // drain: leaves routing immediately, drained is terminal
+        assert!(t.mark_draining(a));
+        assert_eq!(t.epoch(), 4);
+        assert_eq!(t.live(), Vec::<usize>::new());
+        t.mark_drained(a);
+        assert_eq!(t.state(a), Some(MemberState::Drained));
+        assert!(!t.mark_draining(a), "already gone");
+        // unknown slots are inert
+        t.mark_down(99);
+        assert_eq!(t.epoch(), 4);
+    }
+
+    #[test]
+    fn overdue_flags_only_silent_up_members() {
+        let t = MemberTable::new();
+        let a = t.join(None);
+        let b = t.join(None);
+        t.mark_up(a);
+        t.mark_up(b);
+        assert_eq!(t.overdue(Duration::from_secs(3600)), Vec::<usize>::new());
+        // everything is overdue at zero tolerance…
+        std::thread::sleep(Duration::from_millis(2));
+        assert_eq!(t.overdue(Duration::ZERO), vec![a, b]);
+        // …but a beat clears the member
+        t.beat(a);
+        assert_eq!(t.overdue(Duration::ZERO), vec![b]);
+        // and non-Up members are never candidates
+        t.mark_down(b);
+        assert_eq!(t.overdue(Duration::ZERO), vec![a]);
+    }
+
+    #[test]
+    fn heartbeat_config_derives_silence_budget() {
+        let hb = HeartbeatConfig::default();
+        assert_eq!(hb.interval_ms, 500);
+        assert_eq!(hb.miss_budget, 3);
+        assert_eq!(hb.max_silence(), Duration::from_millis(1500));
+        let tight = HeartbeatConfig { interval_ms: 100, miss_budget: 2 };
+        assert_eq!(tight.max_silence(), Duration::from_millis(200));
+        // a zero budget still leaves one interval of grace
+        let degenerate = HeartbeatConfig { interval_ms: 100, miss_budget: 0 };
+        assert_eq!(degenerate.max_silence(), Duration::from_millis(100));
+    }
+
+    #[test]
+    fn hub_pairs_donations_fifo_skipping_donor_and_dead() {
+        let hub = StealHub::new();
+        assert_eq!(hub.pick(0, |_| true), None, "nobody hungry");
+        hub.mark_hungry(1);
+        hub.mark_hungry(1); // dedupe
+        hub.mark_hungry(2);
+        hub.mark_hungry(3);
+        assert_eq!(hub.hungry_len(), 3);
+        // 1 is dead: dropped on the way to 2
+        assert_eq!(hub.pick(0, |s| s != 1), Some(2));
+        assert_eq!(hub.hungry_len(), 1);
+        // donor 3 is skipped but stays queued for other donors
+        assert_eq!(hub.pick(3, |_| true), None);
+        assert_eq!(hub.pick(0, |_| true), Some(3));
+        assert_eq!(hub.hungry_len(), 0);
+        hub.mark_hungry(4);
+        hub.forget(4);
+        assert_eq!(hub.pick(0, |_| true), None);
+    }
+
+    #[test]
+    fn mediation_moves_waiters_and_bounces_when_nobody_is_hungry() {
+        use std::collections::HashMap;
+
+        fn handle() -> SlotHandle<Vec<u8>> {
+            SlotHandle {
+                waiters: Arc::new(Mutex::new(HashMap::new())),
+                writer: Arc::new(Mutex::new(Some(Vec::new()))),
+                down: Arc::new(AtomicBool::new(false)),
+            }
+        }
+        let slots: Vec<SlotHandle<Vec<u8>>> =
+            (0..3).map(|_| handle()).collect();
+        let hub = StealHub::new();
+        let frame = Frame::Poke; // any frame works: mediation is opaque
+        let (tx, _rx) = mpsc::channel();
+        lock(&slots[0].waiters).insert(7, tx);
+
+        // nobody hungry: the frame bounces back to the donor, waiters stay
+        let get = |i: usize| slots.get(i).cloned();
+        mediate_donation(0, &frame, &[7], &hub, get);
+        assert!(lock(&slots[0].waiters).contains_key(&7));
+        assert!(!lock(&slots[0].writer).as_ref().unwrap().is_empty());
+
+        // shard 2 hungry: waiters move there, frame lands on its writer
+        hub.mark_hungry(2);
+        mediate_donation(0, &frame, &[7], &hub, get);
+        assert!(!lock(&slots[0].waiters).contains_key(&7));
+        assert!(lock(&slots[2].waiters).contains_key(&7));
+        assert!(!lock(&slots[2].writer).as_ref().unwrap().is_empty());
+
+        // hungry thief with a closed writer: reclaimed and bounced back
+        let (tx, _rx2) = mpsc::channel();
+        lock(&slots[2].waiters).clear();
+        lock(&slots[0].waiters).insert(8, tx);
+        *lock(&slots[1].writer) = None;
+        hub.mark_hungry(1);
+        lock(&slots[0].writer).as_mut().unwrap().clear();
+        mediate_donation(0, &frame, &[8], &hub, get);
+        assert!(
+            lock(&slots[0].waiters).contains_key(&8),
+            "waiters reclaimed from the dead thief"
+        );
+        assert!(
+            !lock(&slots[0].writer).as_ref().unwrap().is_empty(),
+            "donation bounced back to the donor"
+        );
+    }
+}

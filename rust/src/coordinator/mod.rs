@@ -24,13 +24,17 @@
 //!
 //! How requests cross the fleet↔shard boundary is the [`transport`]
 //! layer's concern: [`ShardTransport`] abstracts it, with an in-process
-//! channel implementation (the default) and a cross-process one that
+//! channel implementation (the default), a cross-process one that
 //! spawns `topkima shard-worker` subprocesses speaking a versioned,
-//! length-prefixed JSONL wire protocol. The front — and every guarantee
-//! above — is identical over both.
+//! length-prefixed JSONL wire protocol, and a cross-host TCP one whose
+//! workers dial in and can join or leave under live load (the
+//! [`membership`] layer: heartbeat eviction, graceful drain, and
+//! routing re-hashed over the live member set). The front — and every
+//! guarantee above — is identical over all of them.
 
 pub mod batcher;
 pub mod fleet;
+pub mod membership;
 pub mod pjrt_exec;
 pub mod metrics;
 pub mod request;
@@ -43,9 +47,10 @@ pub mod transport;
 
 pub use batcher::{BatchPlan, Batcher, BatcherConfig};
 pub use fleet::{
-    shard_of, ExecutorFactory, Fleet, FleetMetrics, ShardPanic, StealPolicy,
-    StealStats, VictimSelect,
+    shard_of, shard_of_live, ExecutorFactory, Fleet, FleetMetrics,
+    ShardPanic, StealPolicy, StealStats, VictimSelect,
 };
+pub use membership::{HeartbeatConfig, MemberState, MemberTable, StealHub};
 pub use metrics::Metrics;
 pub use request::{InputData, Request, RequestId, Response};
 pub use router::{RouteError, Router, StreamDef, StreamKey};

@@ -22,6 +22,8 @@
 //! timestamps are rejected loudly rather than guessed at.
 
 use std::fmt;
+use std::fs::File;
+use std::io::{BufRead, BufReader};
 use std::path::Path;
 
 use crate::util::json::{self, Json};
@@ -170,14 +172,89 @@ impl Trace {
 
     /// Parse a JSONL trace; the inverse of [`Trace::to_jsonl`].
     pub fn from_jsonl(text: &str) -> Result<Trace, TraceError> {
-        let mut lines = text
-            .lines()
-            .enumerate()
-            .filter(|(_, l)| !l.trim().is_empty());
-        let (_, header) = lines
-            .next()
+        Trace::from_reader(text.as_bytes())
+    }
+
+    /// Collect a full trace out of any line source. Replay paths that
+    /// only need the event *sequence* should iterate a [`TraceReader`]
+    /// directly instead — this materializes every event.
+    pub fn from_reader(reader: impl BufRead) -> Result<Trace, TraceError> {
+        let mut r = TraceReader::new(reader)?;
+        let mut events = Vec::new();
+        for ev in &mut r {
+            events.push(ev?);
+        }
+        Ok(Trace { events })
+    }
+
+    /// Write the trace to `path`.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), TraceError> {
+        std::fs::write(path.as_ref(), self.to_jsonl()).map_err(|e| {
+            TraceError::Io(format!("{}: {e}", path.as_ref().display()))
+        })
+    }
+
+    /// Load a trace file (materialized; see [`TraceReader::open`] for
+    /// the streaming equivalent replay uses).
+    pub fn load(path: impl AsRef<Path>) -> Result<Trace, TraceError> {
+        let path = path.as_ref();
+        TraceReader::open(path).and_then(|mut r| {
+            let mut events = Vec::new();
+            for ev in &mut r {
+                events.push(ev?);
+            }
+            Ok(Trace { events })
+        })
+    }
+}
+
+/// Streaming JSONL trace parser: validates the header eagerly on
+/// construction, then yields one [`TraceEvent`] per `next()` without
+/// ever buffering the file — replay memory is bounded by one line, not
+/// the trace length. Enforces the same contract as [`Trace::from_jsonl`]
+/// (strict unknown-field rejection, 1-based line numbers in errors,
+/// non-decreasing timestamps, declared-count check at end of stream).
+pub struct TraceReader<R> {
+    src: R,
+    declared: Option<usize>,
+    lineno: usize,
+    prev_t: u64,
+    seen: usize,
+    done: bool,
+    buf: String,
+}
+
+impl TraceReader<BufReader<File>> {
+    /// Open a trace file for streaming replay.
+    pub fn open(
+        path: impl AsRef<Path>,
+    ) -> Result<TraceReader<BufReader<File>>, TraceError> {
+        let path = path.as_ref();
+        let file = File::open(path).map_err(|e| {
+            TraceError::Io(format!("{}: {e}", path.display()))
+        })?;
+        TraceReader::new(BufReader::new(file))
+    }
+}
+
+impl<R: BufRead> TraceReader<R> {
+    /// Read and validate the header line; the events stay in `reader`
+    /// until iterated.
+    pub fn new(reader: R) -> Result<TraceReader<R>, TraceError> {
+        let mut r = TraceReader {
+            src: reader,
+            declared: None,
+            lineno: 0,
+            prev_t: 0,
+            seen: 0,
+            done: false,
+            buf: String::new(),
+        };
+        let header = r
+            .next_line()
+            .map_err(|e| TraceError::Header(e.to_string()))?
             .ok_or_else(|| TraceError::Header("empty trace".to_string()))?;
-        let h = Json::parse(header)
+        let h = Json::parse(&header)
             .map_err(|e| TraceError::Header(e.to_string()))?;
         if h.get("format").as_str() != Some(TRACE_FORMAT) {
             return Err(TraceError::Header(format!(
@@ -191,86 +268,136 @@ impl Trace {
                  {TRACE_VERSION})"
             )));
         }
-        let declared = h.get("events").as_usize();
-        let mut events = Vec::new();
-        let mut prev_t = 0u64;
-        for (i, line) in lines {
-            let lineno = i + 1; // 1-based, counting skipped blanks
-            let bad = |msg: String| TraceError::Line { line: lineno, msg };
-            let v = Json::parse(line).map_err(|e| bad(e.to_string()))?;
-            let obj = v
-                .as_obj()
-                .ok_or_else(|| bad("must be an object".to_string()))?;
-            let (mut t_us, mut family, mut k, mut input_len) =
-                (None, None, None, None);
-            for (key, value) in obj {
-                match key.as_str() {
-                    "t_us" => t_us = Some(field_u64(value, "t_us", lineno)?),
-                    "family" => {
-                        family = Some(
-                            value
-                                .as_str()
-                                .ok_or_else(|| {
-                                    bad("family must be a string".to_string())
-                                })?
-                                .to_string(),
-                        )
-                    }
-                    "k" => {
-                        k = Some(field_u64(value, "k", lineno)? as usize)
-                    }
-                    "input_len" => {
-                        input_len =
-                            Some(field_u64(value, "input_len", lineno)?
-                                as usize)
-                    }
-                    other => {
-                        return Err(bad(format!("unknown field '{other}'")))
-                    }
+        r.declared = h.get("events").as_usize();
+        Ok(r)
+    }
+
+    /// Event count the header declared, if any.
+    pub fn declared_events(&self) -> Option<usize> {
+        self.declared
+    }
+
+    /// Recover the underlying line source (used by tests to inspect
+    /// how much the source ever had to buffer).
+    pub fn into_inner(self) -> R {
+        self.src
+    }
+
+    /// Next non-blank line as owned text, or `None` at end of stream.
+    /// `self.lineno` counts every physical line read (blanks included)
+    /// so error line numbers match the file as an editor shows it.
+    fn next_line(&mut self) -> Result<Option<String>, TraceError> {
+        loop {
+            self.buf.clear();
+            let n = self.src.read_line(&mut self.buf).map_err(|e| {
+                TraceError::Io(format!(
+                    "read at line {}: {e}",
+                    self.lineno + 1
+                ))
+            })?;
+            if n == 0 {
+                return Ok(None);
+            }
+            self.lineno += 1;
+            if !self.buf.trim().is_empty() {
+                // strip the terminator exactly as `str::lines` does
+                // (\n or \r\n), leaving any payload bytes untouched
+                let line = self
+                    .buf
+                    .trim_end_matches('\n')
+                    .trim_end_matches('\r')
+                    .to_string();
+                return Ok(Some(line));
+            }
+        }
+    }
+
+    fn parse_event(&mut self, line: &str) -> Result<TraceEvent, TraceError> {
+        let lineno = self.lineno;
+        let bad = |msg: String| TraceError::Line { line: lineno, msg };
+        let v = Json::parse(line).map_err(|e| bad(e.to_string()))?;
+        let obj = v
+            .as_obj()
+            .ok_or_else(|| bad("must be an object".to_string()))?;
+        let (mut t_us, mut family, mut k, mut input_len) =
+            (None, None, None, None);
+        for (key, value) in obj {
+            match key.as_str() {
+                "t_us" => t_us = Some(field_u64(value, "t_us", lineno)?),
+                "family" => {
+                    family = Some(
+                        value
+                            .as_str()
+                            .ok_or_else(|| {
+                                bad("family must be a string".to_string())
+                            })?
+                            .to_string(),
+                    )
+                }
+                "k" => k = Some(field_u64(value, "k", lineno)? as usize),
+                "input_len" => {
+                    input_len =
+                        Some(field_u64(value, "input_len", lineno)? as usize)
+                }
+                other => {
+                    return Err(bad(format!("unknown field '{other}'")))
                 }
             }
-            let (Some(t_us), Some(family), Some(k), Some(input_len)) =
-                (t_us, family, k, input_len)
-            else {
-                return Err(bad(
-                    "needs t_us, family, k, input_len".to_string(),
-                ));
-            };
-            if input_len == 0 {
-                return Err(bad("input_len must be ≥ 1".to_string()));
-            }
-            if t_us < prev_t {
-                return Err(bad(format!(
-                    "timestamps must be non-decreasing ({t_us} < {prev_t})"
-                )));
-            }
-            prev_t = t_us;
-            events.push(TraceEvent { t_us, family, k, input_len });
         }
-        if let Some(n) = declared {
-            if n != events.len() {
-                return Err(TraceError::Header(format!(
-                    "header declares {n} event(s), file has {}",
-                    events.len()
-                )));
+        let (Some(t_us), Some(family), Some(k), Some(input_len)) =
+            (t_us, family, k, input_len)
+        else {
+            return Err(bad("needs t_us, family, k, input_len".to_string()));
+        };
+        if input_len == 0 {
+            return Err(bad("input_len must be ≥ 1".to_string()));
+        }
+        if t_us < self.prev_t {
+            return Err(bad(format!(
+                "timestamps must be non-decreasing ({t_us} < {})",
+                self.prev_t
+            )));
+        }
+        self.prev_t = t_us;
+        Ok(TraceEvent { t_us, family, k, input_len })
+    }
+}
+
+impl<R: BufRead> Iterator for TraceReader<R> {
+    type Item = Result<TraceEvent, TraceError>;
+
+    fn next(&mut self) -> Option<Result<TraceEvent, TraceError>> {
+        if self.done {
+            return None;
+        }
+        match self.next_line() {
+            Ok(Some(line)) => match self.parse_event(&line) {
+                Ok(ev) => {
+                    self.seen += 1;
+                    Some(Ok(ev))
+                }
+                Err(e) => {
+                    self.done = true;
+                    Some(Err(e))
+                }
+            },
+            Ok(None) => {
+                self.done = true;
+                if let Some(n) = self.declared {
+                    if n != self.seen {
+                        return Some(Err(TraceError::Header(format!(
+                            "header declares {n} event(s), file has {}",
+                            self.seen
+                        ))));
+                    }
+                }
+                None
+            }
+            Err(e) => {
+                self.done = true;
+                Some(Err(e))
             }
         }
-        Ok(Trace { events })
-    }
-
-    /// Write the trace to `path`.
-    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), TraceError> {
-        std::fs::write(path.as_ref(), self.to_jsonl()).map_err(|e| {
-            TraceError::Io(format!("{}: {e}", path.as_ref().display()))
-        })
-    }
-
-    /// Load a trace file.
-    pub fn load(path: impl AsRef<Path>) -> Result<Trace, TraceError> {
-        let text = std::fs::read_to_string(path.as_ref()).map_err(|e| {
-            TraceError::Io(format!("{}: {e}", path.as_ref().display()))
-        })?;
-        Trace::from_jsonl(&text)
     }
 }
 

@@ -17,21 +17,31 @@
 //!   guarantees; a dead worker surfaces as typed
 //!   [`RouteError::ShardDown`] submissions and a `ShardPanic`-style
 //!   shutdown error instead of a hang.
+//! * [`tcp::TcpTransport`] — cross-host shards over length-prefixed
+//!   JSONL sockets, speaking the *same* [`wire`] frames. Workers dial
+//!   in (`topkima fleet-worker --connect`), register via the
+//!   `join`/`init`/`ready` handshake, heartbeat, and can join or leave
+//!   **under live load**: the [`membership`] layer re-hashes stream
+//!   routing over the live member set and evicts hosts whose
+//!   heartbeats stop.
 //!
 //! The trait is deliberately narrow — deliver one request to one shard,
 //! tear everything down and collect the per-shard reports — because
 //! that is the whole contract the front needs. Work-stealing stays a
-//! transport concern: the local transport mediates it in-process, the
-//! process transport rejects steal-enabled configs at validation (the
-//! wire protocol reserves `donate`/`steal`/`poke` frames so a future
-//! transport-mediated implementation is not a format break). A future
-//! cross-host transport (sockets instead of pipes) slots in behind the
-//! same trait.
+//! transport concern: the local transport mediates it in-process; the
+//! process and TCP transports mediate it at the front over the
+//! `donate`/`steal`/`poke` frames ([`membership::StealHub`]). The
+//! membership hooks (`membership_epoch`, `live_shards`, `drain_shard`)
+//! have fixed-topology defaults so the local and process transports
+//! keep their static shard sets unchanged.
 //!
 //! [`RouteError::ShardDown`]: crate::coordinator::RouteError::ShardDown
+//! [`membership`]: crate::coordinator::membership
+//! [`membership::StealHub`]: crate::coordinator::membership::StealHub
 
 pub mod local;
 pub mod proc;
+pub mod tcp;
 pub mod wire;
 
 use std::sync::mpsc;
@@ -42,6 +52,7 @@ pub use super::shard::ShardReport;
 
 pub use local::LocalTransport;
 pub use proc::{run_shard_worker, ProcessOptions, ProcessTransport};
+pub use tcp::{run_fleet_worker, TcpOptions, TcpPending, TcpTransport};
 pub use wire::{Frame, WireError, WIRE_FORMAT, WIRE_VERSION};
 
 /// How requests reach a shard and reports come back — the one interface
@@ -61,10 +72,12 @@ pub use wire::{Frame, WireError, WIRE_FORMAT, WIRE_VERSION};
 ///   or died (the front turns those into a `ShardPanic` error carrying
 ///   the healthy shards' partial metrics).
 pub trait ShardTransport: Send {
-    /// Number of shards this transport runs.
+    /// Number of shard slots this transport has ever created (dead and
+    /// drained slots included — report vectors stay index-stable).
     fn shard_count(&self) -> usize;
 
-    /// Stable identifier for logs and BENCH output ("local", "process").
+    /// Stable identifier for logs and BENCH output
+    /// ("local", "process", "tcp").
     fn kind(&self) -> &'static str;
 
     /// Deliver one request to `shard`; its reply arrives on the
@@ -76,9 +89,31 @@ pub trait ShardTransport: Send {
     ) -> Result<mpsc::Receiver<Response>, RouteError>;
 
     /// OS pid of the shard's worker process, when it has one (the
-    /// process transport; `None` for in-process shard threads).
+    /// process and TCP transports; `None` for in-process threads).
     fn worker_pid(&self, _shard: usize) -> Option<u32> {
         None
+    }
+
+    /// Routing epoch: bumps on every join/leave/eviction, so the front
+    /// can rebuild its stream→shard table exactly when membership
+    /// changed — the steady-state submit path probes this and nothing
+    /// else. Fixed topologies (local, process) never bump: always 0.
+    fn membership_epoch(&self) -> u64 {
+        0
+    }
+
+    /// The routable shard slots, ascending. Only consulted when
+    /// `membership_epoch` moved. Fixed topologies: every slot, always.
+    fn live_shards(&self) -> Vec<usize> {
+        (0..self.shard_count()).collect()
+    }
+
+    /// Gracefully drain one shard (scale-in under live load): stop
+    /// routing to it, flush its in-flight batches, stash its report for
+    /// `shutdown`. `false` when this transport cannot drain single
+    /// shards (fixed topologies).
+    fn drain_shard(&mut self, _shard: usize) -> bool {
+        false
     }
 
     /// Tear down every shard and collect final reports, one per shard

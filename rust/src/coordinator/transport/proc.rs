@@ -8,21 +8,28 @@
 //! derive stream policies, bucket lists, and executor costs from the
 //! same validated value, so the two processes cannot drift.
 //!
-//! Per shard the front keeps a writer (submits + shutdown), a reader
-//! thread (replies + the final metrics snapshot), and a waiter map from
-//! request id to reply sender. Failure is typed end to end: a worker
-//! that dies mid-load trips the shard's `down` flag (EOF or a framing
-//! error on either pipe), the reader drops every pending waiter so
-//! blocked `recv`s fail promptly instead of hanging, subsequent submits
-//! return [`RouteError::ShardDown`], and `Fleet::shutdown` reports the
-//! shard like a panicked thread (`ShardPanic` with partial metrics).
+//! Per shard the front keeps a shared writer (submits + shutdown +
+//! donation mediation), a reader thread (replies + the final metrics
+//! snapshot), and a waiter map from request id to reply sender. Failure
+//! is typed end to end: a worker that dies mid-load trips the shard's
+//! `down` flag (EOF or a framing error on either pipe), the reader
+//! drops every pending waiter so blocked `recv`s fail promptly instead
+//! of hanging, subsequent submits return [`RouteError::ShardDown`], and
+//! `Fleet::shutdown` reports the shard like a panicked thread
+//! (`ShardPanic` with partial metrics).
 //!
-//! Work-stealing is not mediated over this transport (config validation
-//! rejects `fleet.steal.enabled` with the process transport); the wire
-//! protocol reserves the `donate`/`steal`/`poke` frames so adding it
-//! later is a behavior change, not a format break.
+//! Work-stealing is mediated by the front over the `donate`/`steal`
+//! frames (DESIGN.md §16): an idle worker announces hunger with
+//! `steal`, a loaded worker ships surplus formed batches as `donate`,
+//! and each reader thread pairs inbound donations with hungry live
+//! peers through the shared [`StealHub`] — moving the donated requests'
+//! reply waiters along so the thief's replies (and deaths) resolve
+//! them. The worker half of the loop is shared with the TCP transport
+//! ([`run_worker_loop`]), which adds heartbeats and voluntary leaves on
+//! top.
 //!
 //! [`RouteError::ShardDown`]: crate::coordinator::RouteError::ShardDown
+//! [`StealHub`]: crate::coordinator::membership::StealHub
 
 use std::collections::{BTreeMap, HashMap};
 use std::io::{BufReader, BufWriter, Write};
@@ -30,12 +37,15 @@ use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::batcher::BatchPlan;
 use crate::coordinator::fleet::shard_of;
+use crate::coordinator::membership::{
+    lock, mediate_donation, send_locked, SlotHandle, StealHub, Waiters,
+};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{InputData, Request, RequestId, Response};
 use crate::coordinator::router::{RouteError, Router, StreamKey};
@@ -43,22 +53,15 @@ use crate::coordinator::server::Executor;
 use crate::coordinator::shard::{ShardReport, IDLE_WAIT};
 use crate::util::json::Json;
 
-use super::wire::{self, Frame, ReplyError, ReplyOk, WireError};
+use super::wire::{self, DonatedRequest, Frame, ReplyError, ReplyOk, WireError};
 use super::ShardTransport;
-
-type Waiters = Arc<Mutex<HashMap<RequestId, mpsc::Sender<Response>>>>;
-
-fn lock<'a, T>(m: &'a Mutex<T>) -> std::sync::MutexGuard<'a, T> {
-    // a reader thread can only die between frames; never lose the map
-    // to lock poisoning
-    m.lock().unwrap_or_else(|e| e.into_inner())
-}
 
 /// Wall-clock µs since the UNIX epoch (0 when the clock is unusable) —
 /// the cross-process timestamp submit frames carry so worker-side
-/// latency accounting can include pipe transit (front and workers
-/// share one host clock).
-fn unix_us() -> u64 {
+/// latency accounting can include pipe/socket transit (front and
+/// workers share one host clock on pipes; across hosts the back-dating
+/// degrades to worker-side-only measurement when clocks disagree).
+pub(super) fn unix_us() -> u64 {
     std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_micros() as u64)
@@ -86,12 +89,10 @@ pub struct ProcessOptions {
     pub synthetic: bool,
 }
 
-/// One worker subprocess: pipes, waiter map, reader thread, liveness.
+/// One worker subprocess: pipes, shared slot handle, reader thread.
 struct ProcShard {
     child: Child,
-    writer: Option<BufWriter<ChildStdin>>,
-    waiters: Waiters,
-    down: Arc<AtomicBool>,
+    handle: SlotHandle<BufWriter<ChildStdin>>,
     reader: Option<JoinHandle<Result<ShardReport, WireError>>>,
 }
 
@@ -99,7 +100,7 @@ impl Drop for ProcShard {
     fn drop(&mut self) {
         // closing stdin is the EOF backstop: the worker's event loop
         // treats it like a shutdown frame, so the child always exits
-        self.writer = None;
+        *lock(&self.handle.writer) = None;
         if let Some(handle) = self.reader.take() {
             let _ = handle.join();
         }
@@ -129,7 +130,14 @@ impl ProcessTransport {
                 WireError::Io(format!("resolving current executable: {e}"))
             })?,
         };
-        let mut shards = Vec::with_capacity(opts.shards);
+        // First pass: spawn every child and ship its init frame, so the
+        // whole fleet boots concurrently; readers start in the second
+        // pass once the full slot table exists (donation mediation
+        // needs every peer's handle).
+        let mut pending: Vec<(Child, ChildStdout)> =
+            Vec::with_capacity(opts.shards);
+        let mut handles: Vec<SlotHandle<BufWriter<ChildStdin>>> =
+            Vec::with_capacity(opts.shards);
         for shard in 0..opts.shards {
             let mut child = Command::new(&exe)
                 .arg("shard-worker")
@@ -149,36 +157,41 @@ impl ProcessTransport {
             let stdin = child.stdin.take().expect("piped stdin");
             // lint:allow(panic-path): Stdio::piped() above guarantees both handles exist on a freshly spawned child
             let stdout = child.stdout.take().expect("piped stdout");
-            let mut writer = BufWriter::new(stdin);
-            let waiters: Waiters = Arc::new(Mutex::new(HashMap::new()));
-            let down = Arc::new(AtomicBool::new(false));
+            let handle = SlotHandle {
+                waiters: Arc::new(Mutex::new(HashMap::new())),
+                writer: Arc::new(Mutex::new(Some(BufWriter::new(stdin)))),
+                down: Arc::new(AtomicBool::new(false)),
+            };
             let init = Frame::Init {
                 shard,
                 shards: opts.shards,
                 synthetic: opts.synthetic,
                 config: opts.config.clone(),
             };
-            if let Err(e) = wire::write_frame(&mut writer, &init) {
+            if let Err(e) = send_locked(&handle.writer, &init) {
                 // a worker dead on arrival is a down shard, not a spawn
                 // failure — submissions get typed ShardDown rejections
                 eprintln!("shard worker {shard}: init not delivered: {e}");
-                down.store(true, Ordering::Release);
+                handle.down.store(true, Ordering::Release);
             }
-            let reader = {
-                let waiters = waiters.clone();
-                let down = down.clone();
-                std::thread::spawn(move || {
-                    reader_loop(stdout, waiters, down, shard)
-                })
-            };
-            shards.push(ProcShard {
-                child,
-                writer: Some(writer),
-                waiters,
-                down,
-                reader: Some(reader),
-            });
+            handles.push(handle);
+            pending.push((child, stdout));
         }
+        let slots = Arc::new(handles.clone());
+        let hub = Arc::new(StealHub::new());
+        let shards = pending
+            .into_iter()
+            .zip(handles)
+            .enumerate()
+            .map(|(shard, ((child, stdout), handle))| {
+                let slots = slots.clone();
+                let hub = hub.clone();
+                let reader = std::thread::spawn(move || {
+                    reader_loop(stdout, shard, slots, hub)
+                });
+                ProcShard { child, handle, reader: Some(reader) }
+            })
+            .collect();
         Ok(ProcessTransport { shards })
     }
 }
@@ -198,18 +211,18 @@ impl ShardTransport for ProcessTransport {
         req: Request,
     ) -> Result<mpsc::Receiver<Response>, RouteError> {
         let key: StreamKey = (req.model.clone(), req.k);
-        let Some(s) = self.shards.get_mut(shard) else {
+        let Some(s) = self.shards.get(shard) else {
             // a router pointing at a shard this transport never had is
             // a routing bug; reject the request instead of panicking
             return Err(RouteError::ShardDown(key));
         };
-        if s.down.load(Ordering::Acquire) || s.writer.is_none() {
+        if s.handle.down.load(Ordering::Acquire) {
             return Err(RouteError::ShardDown(key));
         }
         let (tx, rx) = mpsc::channel();
         // insert before writing: the reply may race back before this
         // thread would regain the lock
-        lock(&s.waiters).insert(req.id, tx);
+        lock(&s.handle.waiters).insert(req.id, tx);
         let frame = Frame::Submit {
             id: req.id,
             family: req.model.to_string(),
@@ -217,16 +230,17 @@ impl ShardTransport for ProcessTransport {
             t_unix_us: unix_us(),
             input: req.input,
         };
-        let delivered = match s.writer.as_mut() {
-            Some(w) => wire::write_frame(w, &frame),
-            // checked non-None above, but a typed error beats a panic
-            // if that invariant ever drifts
-            None => Err(WireError::Io("writer already closed".to_string())),
+        let delivered = match send_locked(&s.handle.writer, &frame) {
+            Ok(true) => Ok(()),
+            Ok(false) => {
+                Err(WireError::Io("writer already closed".to_string()))
+            }
+            Err(e) => Err(e),
         };
         if let Err(e) = delivered {
             eprintln!("shard worker {shard}: submit not delivered: {e}");
-            s.down.store(true, Ordering::Release);
-            lock(&s.waiters).remove(&req.id);
+            s.handle.down.store(true, Ordering::Release);
+            lock(&s.handle.waiters).remove(&req.id);
             return Err(RouteError::ShardDown(key));
         }
         // Close the race with the reader's exit cleanup: the reader stores
@@ -236,8 +250,8 @@ impl ShardTransport for ProcessTransport {
         // reads true, our insert may have landed *after* the sweep and
         // would leak until transport drop. Never leave a waiter behind
         // on a dead shard.
-        if s.down.load(Ordering::Acquire) {
-            lock(&s.waiters).remove(&req.id);
+        if s.handle.down.load(Ordering::Acquire) {
+            lock(&s.handle.waiters).remove(&req.id);
             return Err(RouteError::ShardDown(key));
         }
         Ok(rx)
@@ -252,10 +266,8 @@ impl ShardTransport for ProcessTransport {
         // queues concurrently; dropping the writer closes stdin, which
         // backstops the frame for a worker that missed it.
         for s in &mut self.shards {
-            if let Some(writer) = s.writer.as_mut() {
-                let _ = wire::write_frame(writer, &Frame::Shutdown);
-            }
-            s.writer = None;
+            let _ = send_locked(&s.handle.writer, &Frame::Shutdown);
+            *lock(&s.handle.writer) = None;
         }
         self.shards
             .iter_mut()
@@ -273,16 +285,23 @@ impl ShardTransport for ProcessTransport {
 }
 
 /// Parse the worker's stdout until its final metrics snapshot: `ready`
-/// handshake (version-checked), then replies dispatched to waiters.
-/// Whatever the exit path — snapshot, EOF, framing error, version skew
-/// — the shard is marked down and every pending waiter is dropped, so
-/// blocked callers fail promptly instead of hanging on a dead worker.
+/// handshake (version-checked), then replies dispatched to waiters and
+/// steal-protocol frames mediated through the hub. Whatever the exit
+/// path — snapshot, EOF, framing error, version skew — the shard is
+/// marked down, every pending waiter is dropped (blocked callers fail
+/// promptly instead of hanging on a dead worker), and the shard leaves
+/// the hungry queue.
 fn reader_loop(
     stdout: ChildStdout,
-    waiters: Waiters,
-    down: Arc<AtomicBool>,
     shard: usize,
+    slots: Arc<Vec<SlotHandle<BufWriter<ChildStdin>>>>,
+    hub: Arc<StealHub>,
 ) -> Result<ShardReport, WireError> {
+    let Some(me) = slots.get(shard).cloned() else {
+        return Err(WireError::Protocol(format!(
+            "reader for unknown shard {shard}"
+        )));
+    };
     let mut reader = BufReader::new(stdout);
     let result = (|| {
         match wire::read_frame(&mut reader)? {
@@ -310,7 +329,7 @@ fn reader_loop(
         loop {
             match wire::read_frame(&mut reader)? {
                 Some(Frame::Reply { id, result }) => {
-                    let tx = lock(&waiters).remove(&id);
+                    let tx = lock(&me.waiters).remove(&id);
                     if let (Some(tx), Ok(ok)) = (tx, result) {
                         let _ = tx.send(Response {
                             id,
@@ -322,6 +341,18 @@ fn reader_loop(
                     // an error reply just dropped the sender: the
                     // caller's recv fails immediately, matching the
                     // local shard loop's rejection behavior
+                }
+                Some(Frame::Steal) => hub.mark_hungry(shard),
+                Some(frame @ Frame::Donate { .. }) => {
+                    let ids: Vec<RequestId> = match &frame {
+                        Frame::Donate { requests, .. } => {
+                            requests.iter().map(|r| r.id).collect()
+                        }
+                        _ => Vec::new(),
+                    };
+                    mediate_donation(shard, &frame, &ids, &hub, |s| {
+                        slots.get(s).cloned()
+                    });
                 }
                 Some(Frame::MetricsSnapshot {
                     streams,
@@ -364,15 +395,16 @@ fn reader_loop(
     if let Err(e) = &result {
         eprintln!("shard worker {shard}: {e}");
     }
-    down.store(true, Ordering::Release);
+    me.down.store(true, Ordering::Release);
     // dropping the senders fails every pending recv — no hangs
-    lock(&waiters).clear();
+    lock(&me.waiters).clear();
+    hub.forget(shard);
     result
 }
 
 // ---- the worker side ----------------------------------------------------
 
-enum WorkerMsg {
+pub(super) enum WorkerMsg {
     Frame(Frame),
     Bad(WireError),
 }
@@ -382,25 +414,17 @@ enum Flow {
     Finish,
 }
 
-/// Entry point of `topkima shard-worker`: one shard event loop speaking
-/// the wire protocol on stdin/stdout. Internal — the process transport
-/// spawns it; it is not meant for interactive use (it blocks reading
-/// the `init` frame).
-///
-/// The loop mirrors the in-process shard loop: sleep until the oldest
-/// queued request's batching deadline, drain the whole arrival backlog
-/// before forming batches, execute ready batches synchronously, flush
-/// everything on shutdown (or EOF), then emit the final
-/// `metrics_snapshot`. Batch *formation* is the same `Router`/`Batcher`
-/// code the local transport runs, which is what makes deterministic
-/// replay byte-identical across transports.
-pub fn run_shard_worker() -> Result<()> {
+/// Spawn the forwarder thread that owns this worker's inbound byte
+/// stream: frames (and the first framing error) go to the returned
+/// channel, EOF becomes a channel disconnect. Shared by the pipe worker
+/// (stdin) and the TCP worker (socket clone).
+pub(super) fn spawn_frame_forwarder<R>(reader: R) -> mpsc::Receiver<WorkerMsg>
+where
+    R: std::io::Read + Send + 'static,
+{
     let (tx, rx) = mpsc::channel::<WorkerMsg>();
-    // All reading happens on the forwarder thread (one buffered reader
-    // owns stdin); the main loop multiplexes frames and batching
-    // deadlines through the channel, exactly like a shard thread.
     std::thread::spawn(move || {
-        let mut reader = BufReader::new(std::io::stdin());
+        let mut reader = BufReader::new(reader);
         loop {
             match wire::read_frame(&mut reader) {
                 Ok(Some(frame)) => {
@@ -416,6 +440,60 @@ pub fn run_shard_worker() -> Result<()> {
             }
         }
     });
+    rx
+}
+
+/// Per-worker knobs of [`run_worker_loop`], beyond what the router and
+/// executor already encode.
+pub(super) struct WorkerOpts {
+    /// This worker's shard slot (stamped on heartbeat/leave frames).
+    pub shard: usize,
+    /// Donate surplus formed batches / announce hunger when idle.
+    pub steal_enabled: bool,
+    /// Formed batches a donor keeps per round before donating
+    /// (pre-clamped ≥ 1 by the caller).
+    pub min_backlog: usize,
+    /// Send a `heartbeat` frame at this cadence (TCP workers); `None`
+    /// for pipe workers, whose liveness is the pipe itself.
+    pub heartbeat: Option<Duration>,
+    /// Announce a voluntary `leave` after this long, then drain and
+    /// exit (scale-in testing hook; `None` = serve until shutdown).
+    pub leave_after: Option<Duration>,
+}
+
+/// Mutable state of one worker event loop.
+struct LoopState {
+    streams: BTreeMap<StreamKey, Metrics>,
+    rejected: u64,
+    stolen: u64,
+    donated: u64,
+    families: HashMap<String, Arc<str>>,
+    inputs: Vec<Arc<InputData>>,
+    /// Donated batches received from the front, executed after our own
+    /// ready batches each round.
+    donations: Vec<(StreamKey, BatchPlan)>,
+    /// A `steal` frame is in flight and no work has arrived since —
+    /// don't re-announce hunger every idle tick.
+    hungry: bool,
+}
+
+/// Entry point of `topkima shard-worker`: one shard event loop speaking
+/// the wire protocol on stdin/stdout. Internal — the process transport
+/// spawns it; it is not meant for interactive use (it blocks reading
+/// the `init` frame).
+///
+/// The loop mirrors the in-process shard loop: sleep until the oldest
+/// queued request's batching deadline, drain the whole arrival backlog
+/// before forming batches, execute ready batches synchronously, flush
+/// everything on shutdown (or EOF), then emit the final
+/// `metrics_snapshot`. Batch *formation* is the same `Router`/`Batcher`
+/// code the local transport runs, which is what makes deterministic
+/// replay byte-identical across transports.
+pub fn run_shard_worker() -> Result<()> {
+    // All reading happens on the forwarder thread (one buffered reader
+    // owns stdin); the main loop multiplexes frames and batching
+    // deadlines through the channel, exactly like a shard thread.
+    let rx = spawn_frame_forwarder(std::io::stdin());
     let mut out = BufWriter::new(std::io::stdout());
 
     // -- handshake --------------------------------------------------------
@@ -487,24 +565,77 @@ pub fn run_shard_worker() -> Result<()> {
     wire::write_frame(&mut out, &Frame::Ready { shard })
         .map_err(|e| anyhow!("ready handshake: {e}"))?;
 
-    // -- event loop -------------------------------------------------------
-    let mut streams: BTreeMap<StreamKey, Metrics> = router
-        .streams()
-        .into_iter()
-        .map(|key| (key, Metrics::default()))
-        .collect();
-    let mut rejected = 0u64;
-    let mut families: HashMap<String, Arc<str>> = HashMap::new();
-    let mut inputs: Vec<Arc<InputData>> = Vec::new();
+    let steal = builder.config().fleet.steal;
+    let opts = WorkerOpts {
+        shard,
+        steal_enabled: steal.enabled,
+        // `StackConfig::validate` rejects min_backlog = 0, but clamp at
+        // the point of use like the local transport does: a donor must
+        // keep at least one batch or it idles itself.
+        min_backlog: steal.min_backlog.max(1),
+        heartbeat: None,
+        leave_after: None,
+    };
+    run_worker_loop(&rx, &mut router, executor.as_mut(), &mut out, &opts)
+}
+
+/// The worker event loop shared by the pipe worker (`shard-worker`) and
+/// the TCP worker (`fleet-worker`): multiplex inbound frames with
+/// batching deadlines, donate surplus, execute donated batches,
+/// heartbeat when configured, and emit the final `metrics_snapshot`
+/// after the shutdown (or EOF, or voluntary-leave) flush.
+pub(super) fn run_worker_loop(
+    rx: &mpsc::Receiver<WorkerMsg>,
+    router: &mut Router,
+    executor: &mut dyn Executor,
+    out: &mut impl Write,
+    opts: &WorkerOpts,
+) -> Result<()> {
+    let mut st = LoopState {
+        streams: router
+            .streams()
+            .into_iter()
+            .map(|key| (key, Metrics::default()))
+            .collect(),
+        rejected: 0,
+        stolen: 0,
+        donated: 0,
+        families: HashMap::new(),
+        inputs: Vec::new(),
+        donations: Vec::new(),
+        hungry: false,
+    };
+    let start = Instant::now();
+    let mut last_beat = Instant::now();
+    let mut left = false;
     loop {
-        let wait = router.next_deadline(Instant::now()).unwrap_or(IDLE_WAIT);
+        // liveness beacon first, so a long idle wait can never starve
+        // the heartbeat budget
+        if let Some(hb) = opts.heartbeat {
+            if last_beat.elapsed() >= hb {
+                wire::write_frame(out, &Frame::Heartbeat { shard: opts.shard })
+                    .map_err(|e| anyhow!("heartbeat: {e}"))?;
+                last_beat = Instant::now();
+            }
+        }
+        let mut wait =
+            router.next_deadline(Instant::now()).unwrap_or(IDLE_WAIT);
+        if let Some(hb) = opts.heartbeat {
+            let due = hb
+                .saturating_sub(last_beat.elapsed())
+                .max(Duration::from_millis(1));
+            wait = wait.min(due);
+        }
+        if let Some(after) = opts.leave_after {
+            let due = after
+                .saturating_sub(start.elapsed())
+                .max(Duration::from_millis(1));
+            wait = wait.min(due);
+        }
         let mut finish = false;
         match rx.recv_timeout(wait) {
             Ok(msg) => {
-                if let Flow::Finish = handle_msg(
-                    msg, &mut router, &mut streams, &mut rejected,
-                    &mut families, &mut out,
-                )? {
+                if let Flow::Finish = handle_msg(msg, router, &mut st, out)? {
                     finish = true;
                 }
             }
@@ -517,45 +648,123 @@ pub fn run_shard_worker() -> Result<()> {
         while !finish {
             match rx.try_recv() {
                 Ok(msg) => {
-                    if let Flow::Finish = handle_msg(
-                        msg, &mut router, &mut streams, &mut rejected,
-                        &mut families, &mut out,
-                    )? {
+                    if let Flow::Finish =
+                        handle_msg(msg, router, &mut st, out)?
+                    {
                         finish = true;
                     }
                 }
                 Err(_) => break,
             }
         }
-        let plans = if finish {
+        // Voluntary departure: announce the leave (the front stops
+        // routing here and re-hashes), then drain like a shutdown.
+        if !finish && !left {
+            if let Some(after) = opts.leave_after {
+                if start.elapsed() >= after {
+                    wire::write_frame(
+                        out,
+                        &Frame::Leave { shard: opts.shard },
+                    )
+                    .map_err(|e| anyhow!("leave: {e}"))?;
+                    left = true;
+                    finish = true;
+                }
+            }
+        }
+        let mut plans = if finish {
             router.flush()
         } else {
             router.ready_batches(Instant::now())
         };
+        // Donor: keep `min_backlog` of this round's batches, ship the
+        // surplus to the front *in formation order* as donate frames.
+        // Formation already happened — only the execution site moves,
+        // so composition is steal-invariant (the fleet_determinism
+        // guarantee). Never on the finish path: the flush must account
+        // every batch in this worker's own snapshot.
+        if opts.steal_enabled && !finish && plans.len() > opts.min_backlog {
+            for (key, plan) in plans.split_off(opts.min_backlog) {
+                let frame = Frame::Donate {
+                    family: key.0.to_string(),
+                    k: key.1,
+                    bucket: plan.bucket,
+                    requests: plan
+                        .requests
+                        .iter()
+                        .map(|r| DonatedRequest {
+                            id: r.id,
+                            input: r.input.clone(),
+                        })
+                        .collect(),
+                };
+                wire::write_frame(out, &frame)
+                    .map_err(|e| anyhow!("donate: {e}"))?;
+                st.donated += 1;
+            }
+        }
+        let had_work = !plans.is_empty() || !st.donations.is_empty();
         for (key, plan) in plans {
-            let metrics = streams
+            let metrics = st
+                .streams
                 .get_mut(&key)
                 // lint:allow(panic-path): the router only forms batches for streams registered from the init frame; a miss is a worker bug worth a crash, not a recoverable error
                 .expect("batch from registered stream");
             run_wire_batch(
-                &key, plan, executor.as_mut(), metrics, &mut inputs,
-                &mut out,
+                &key, plan, executor, metrics, &mut st.inputs, out,
             )?;
+        }
+        // Thief: execute donated batches after our own, on our own
+        // metrics entry for the stream (created on demand — the fleet
+        // front merges per-stream entries across shards).
+        let donations: Vec<(StreamKey, BatchPlan)> =
+            st.donations.drain(..).collect();
+        for (key, plan) in donations {
+            let metrics = st.streams.entry(key.clone()).or_default();
+            run_wire_batch(
+                &key, plan, executor, metrics, &mut st.inputs, out,
+            )?;
+            st.stolen += 1;
         }
         if finish {
             let snapshot = Frame::MetricsSnapshot {
-                streams: streams
+                streams: st
+                    .streams
                     .into_iter()
                     .map(|((family, k), m)| (family.to_string(), k, m))
                     .collect(),
-                rejected,
-                stolen: 0,
-                donated: 0,
+                rejected: st.rejected,
+                stolen: st.stolen,
+                donated: st.donated,
             };
             // the front may already be gone on the EOF path; the
             // snapshot is then moot, not an error worth a nonzero exit
-            let _ = wire::write_frame(&mut out, &snapshot);
+            let _ = wire::write_frame(out, &snapshot);
             return Ok(());
+        }
+        // Announce hunger once per idle stretch: nothing formed,
+        // nothing donated to us, nothing queued.
+        if opts.steal_enabled
+            && !st.hungry
+            && !had_work
+            && router.queued() == 0
+        {
+            wire::write_frame(out, &Frame::Steal)
+                .map_err(|e| anyhow!("steal: {e}"))?;
+            st.hungry = true;
+        }
+    }
+}
+
+/// Intern a stream family string: the steady-state path is a map hit
+/// with no allocation (§Perf: the event loop is a hot path).
+fn intern(families: &mut HashMap<String, Arc<str>>, family: String) -> Arc<str> {
+    match families.get(&family) {
+        Some(model) => model.clone(),
+        None => {
+            let model: Arc<str> = Arc::from(family.as_str());
+            families.insert(family, model.clone());
+            model
         }
     }
 }
@@ -567,23 +776,13 @@ pub fn run_shard_worker() -> Result<()> {
 fn handle_msg(
     msg: WorkerMsg,
     router: &mut Router,
-    streams: &mut BTreeMap<StreamKey, Metrics>,
-    rejected: &mut u64,
-    families: &mut HashMap<String, Arc<str>>,
+    st: &mut LoopState,
     out: &mut impl Write,
 ) -> Result<Flow> {
     match msg {
         WorkerMsg::Frame(Frame::Submit { id, family, k, t_unix_us, input }) => {
-            // intern the family once; the steady-state path is a map hit
-            // with no allocation (§Perf: the event loop is a hot path)
-            let model = match families.get(&family) {
-                Some(model) => model.clone(),
-                None => {
-                    let model: Arc<str> = Arc::from(family.as_str());
-                    families.insert(family, model.clone());
-                    model
-                }
-            };
+            st.hungry = false;
+            let model = intern(&mut st.families, family);
             // Back-date the enqueue instant by the observed pipe
             // transit, so end-to-end latency matches the local
             // transport's semantics (which times from front submission,
@@ -606,12 +805,12 @@ fn handle_msg(
                     // rejections land on the stream, unknown streams on
                     // the shard counter
                     RouteError::QueueFull { stream, .. } => {
-                        match streams.get_mut(stream) {
+                        match st.streams.get_mut(stream) {
                             Some(m) => m.record_error(),
-                            None => *rejected += 1,
+                            None => st.rejected += 1,
                         }
                     }
-                    _ => *rejected += 1,
+                    _ => st.rejected += 1,
                 }
                 wire::write_frame(
                     out,
@@ -624,16 +823,35 @@ fn handle_msg(
             }
             Ok(Flow::Continue)
         }
+        WorkerMsg::Frame(Frame::Donate { family, k, bucket, requests }) => {
+            // a donated batch arrives pre-formed: reconstruct the plan
+            // and queue it behind our own ready batches. Latency for
+            // donated requests is measured from receipt here — their
+            // true enqueue instant lives on the donor.
+            st.hungry = false;
+            let model = intern(&mut st.families, family);
+            let key: StreamKey = (model.clone(), k);
+            let now = Instant::now();
+            let requests: Vec<Request> = requests
+                .into_iter()
+                .map(|d| Request {
+                    id: d.id,
+                    model: model.clone(),
+                    k,
+                    input: d.input,
+                    enqueued: now,
+                })
+                .collect();
+            st.donations.push((key, BatchPlan { requests, bucket }));
+            Ok(Flow::Continue)
+        }
         WorkerMsg::Frame(Frame::Poke) => Ok(Flow::Continue),
         WorkerMsg::Frame(Frame::Shutdown) => Ok(Flow::Finish),
-        WorkerMsg::Frame(frame @ (Frame::Donate { .. } | Frame::Steal)) => {
-            let msg = format!(
-                "'{}' frame received, but work-stealing is not mediated \
-                 over the process transport (config validation rejects \
-                 fleet.steal with it)",
-                frame.kind()
-            );
-            fatal(out, &msg);
+        WorkerMsg::Frame(Frame::Steal) => {
+            let msg = "'steal' frames flow worker → front only \
+                       (the front mediates donations; it never asks a \
+                       worker for work)";
+            fatal(out, msg);
             bail!("{msg}");
         }
         WorkerMsg::Frame(Frame::Fatal { msg }) => {
@@ -730,6 +948,6 @@ fn fail_batch(
 }
 
 /// Best-effort fatal frame (the peer may already be gone).
-fn fatal(out: &mut impl Write, msg: &str) {
+pub(super) fn fatal(out: &mut impl Write, msg: &str) {
     let _ = wire::write_frame(out, &Frame::Fatal { msg: msg.to_string() });
 }

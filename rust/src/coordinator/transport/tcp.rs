@@ -1,0 +1,935 @@
+//! [`TcpTransport`]: a cross-host fleet whose shards *dial in*.
+//!
+//! Where the process transport spawns its workers and owns their pipes,
+//! the TCP front binds a listener (`fleet.transport.listen`) and waits
+//! for `topkima fleet-worker --connect HOST:PORT` processes to dial it.
+//! Each accepted socket runs one member session: a `join` frame names
+//! the worker (pid), the front allocates the next shard slot and ships
+//! the full `StackConfig` in an `init` frame, and the worker answers
+//! `ready` once its router and executor are built — from then on the
+//! session speaks exactly the frames the process transport does, plus
+//! the membership layer of DESIGN.md §16:
+//!
+//! * **Heartbeats** — workers beacon `heartbeat` frames at
+//!   `fleet.transport.heartbeat_ms`; the front counts *any* inbound
+//!   frame as liveness and a monitor thread evicts members silent for
+//!   longer than `interval × miss_budget` (socket shut down, slot
+//!   `Down`, epoch bumped — the fleet re-hashes and submits to the dead
+//!   slot degrade to typed `ShardDown`).
+//! * **Elastic membership** — workers may join after serving started
+//!   (scale-out: the accept loop never stops until shutdown) or leave
+//!   voluntarily (`leave` frame, scale-in): both bump the
+//!   [`MemberTable`] epoch, and the fleet front re-hashes its
+//!   stream→shard table over the live member set
+//!   (`fleet::shard_of_live`). Slots are append-only, so a departed
+//!   member's metrics report keeps its index.
+//! * **Graceful drain** — `shutdown` (and front-initiated
+//!   `drain_shard`) sends the shutdown frame, the worker flushes every
+//!   queued batch, replies stream back, and the final
+//!   `metrics_snapshot` is stashed per slot before the socket closes.
+//! * **Work-stealing over the wire** — the same front-mediated
+//!   `steal`/`donate` protocol as the process transport, through the
+//!   shared [`StealHub`]; batch composition never changes, so
+//!   deterministic replay stays byte-identical with stealing on.
+//!
+//! The worker half reuses the process worker's event loop
+//! ([`run_worker_loop`]) with heartbeats enabled — batch formation is
+//! the same `Router`/`Batcher` code on every transport, which is what
+//! makes the three-way replay `cmp` in ci.sh meaningful.
+//!
+//! [`MemberTable`]: crate::coordinator::membership::MemberTable
+//! [`StealHub`]: crate::coordinator::membership::StealHub
+//! [`run_worker_loop`]: super::proc::run_worker_loop
+
+use std::collections::{BTreeMap, HashMap};
+use std::io::{BufReader, BufWriter};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::membership::{
+    lock, mediate_donation, send_locked, HeartbeatConfig, MemberState,
+    MemberTable, SlotHandle, StealHub,
+};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{Request, RequestId, Response};
+use crate::coordinator::router::{RouteError, Router, StreamKey};
+use crate::coordinator::shard::ShardReport;
+use crate::util::json::Json;
+
+use super::proc::{
+    fatal, run_worker_loop, spawn_frame_forwarder, unix_us, WorkerMsg,
+    WorkerOpts,
+};
+use super::wire::{self, Frame, WireError};
+use super::ShardTransport;
+
+/// How long a dialing worker retries an unreachable front before giving
+/// up (the front usually binds a beat after the workers launch).
+const DIAL_RETRY_BUDGET: Duration = Duration::from_secs(10);
+
+/// How long `shutdown` waits for draining members to deliver their
+/// final snapshots before force-closing their sockets.
+const SHUTDOWN_DRAIN_BUDGET: Duration = Duration::from_secs(60);
+
+type TcpWriter = BufWriter<TcpStream>;
+
+/// One dialed-in member: the shared waiter/writer/down handle every
+/// transport keeps, plus a raw socket clone for forced teardown
+/// (eviction and shutdown stragglers).
+struct TcpSlot {
+    handle: SlotHandle<TcpWriter>,
+    sock: TcpStream,
+}
+
+/// State shared between the accept loop, the per-member session
+/// threads, the heartbeat monitor, and the transport front.
+struct Shared {
+    members: MemberTable,
+    hub: StealHub,
+    /// Index-aligned with [`MemberTable`] slots; append-only. The lock
+    /// is held across `members.join` + push so concurrent dials cannot
+    /// interleave and misalign the two tables.
+    slots: Mutex<Vec<TcpSlot>>,
+    /// Final metrics snapshots, by slot, stashed as drains complete.
+    reports: Mutex<HashMap<usize, ShardReport>>,
+    sessions: Mutex<Vec<JoinHandle<()>>>,
+    stopping: AtomicBool,
+    config: Json,
+    synthetic: bool,
+}
+
+/// Everything [`TcpPending::bind`] needs, resolved from
+/// `StackConfig.fleet.transport` by the pipeline builder.
+pub struct TcpOptions {
+    /// Workers that must complete the handshake before
+    /// [`TcpPending::into_transport`] returns (the config's
+    /// `fleet.shards`; more may join later — that is the point).
+    pub expect: usize,
+    /// The full stack configuration, shipped verbatim in every member's
+    /// `init` frame.
+    pub config: Json,
+    /// Force the synthetic executor in workers.
+    pub synthetic: bool,
+    /// The liveness contract enforced by the monitor thread.
+    pub heartbeat: HeartbeatConfig,
+}
+
+/// A bound-but-not-yet-ready TCP front: the listener is accepting and
+/// the address is known (so the caller can print the dial command), but
+/// the expected workers have not all joined yet.
+pub struct TcpPending {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    expect: usize,
+    heartbeat: HeartbeatConfig,
+}
+
+impl TcpPending {
+    /// Bind the listen address and start accepting worker dials. The
+    /// error message always names the failed `bind` — ci.sh keys its
+    /// sandbox SKIP off that word.
+    pub fn bind(addr: &str, opts: TcpOptions) -> Result<TcpPending, WireError> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| WireError::Io(format!("bind {addr}: {e}")))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| WireError::Io(format!("bind {addr}: {e}")))?;
+        let shared = Arc::new(Shared {
+            members: MemberTable::new(),
+            hub: StealHub::new(),
+            slots: Mutex::new(Vec::new()),
+            reports: Mutex::new(HashMap::new()),
+            sessions: Mutex::new(Vec::new()),
+            stopping: AtomicBool::new(false),
+            config: opts.config,
+            synthetic: opts.synthetic,
+        });
+        let accept = {
+            let shared = shared.clone();
+            std::thread::spawn(move || accept_loop(listener, shared))
+        };
+        Ok(TcpPending {
+            addr: local,
+            shared,
+            accept: Some(accept),
+            expect: opts.expect,
+            heartbeat: opts.heartbeat,
+        })
+    }
+
+    /// The bound address (resolves `:0` to the kernel-assigned port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Wait until `expect` workers are routable, then start the
+    /// heartbeat monitor and hand over the live transport. On timeout
+    /// the listener is torn down and the error names the dial command
+    /// the missing workers should have run.
+    pub fn into_transport(
+        mut self,
+        timeout: Duration,
+    ) -> Result<TcpTransport, WireError> {
+        let deadline = Instant::now() + timeout;
+        while self.shared.members.live().len() < self.expect {
+            if Instant::now() >= deadline {
+                let ready = self.shared.members.live().len();
+                stop_listening(&self.shared, self.addr, &mut self.accept);
+                return Err(WireError::Io(format!(
+                    "waited {:.1}s for {} fleet worker(s) to dial in \
+                     ({ready} ready); start them with \
+                     `topkima fleet-worker --connect {}`",
+                    timeout.as_secs_f64(),
+                    self.expect,
+                    self.addr
+                )));
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        let monitor = {
+            let shared = self.shared.clone();
+            let hb = self.heartbeat;
+            std::thread::spawn(move || monitor_loop(shared, hb))
+        };
+        Ok(TcpTransport {
+            shared: self.shared,
+            addr: self.addr,
+            accept: self.accept,
+            monitor: Some(monitor),
+        })
+    }
+}
+
+/// Cross-host shard transport (see the module docs).
+pub struct TcpTransport {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+    monitor: Option<JoinHandle<()>>,
+}
+
+impl ShardTransport for TcpTransport {
+    fn shard_count(&self) -> usize {
+        self.shared.members.total()
+    }
+
+    fn kind(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn submit(
+        &mut self,
+        shard: usize,
+        req: Request,
+    ) -> Result<mpsc::Receiver<Response>, RouteError> {
+        let key: StreamKey = (req.model.clone(), req.k);
+        // `NO_SHARD` (an emptied-out live set) and never-allocated slots
+        // both land here: typed rejection, never a panic
+        let Some(h) = lock(&self.shared.slots)
+            .get(shard)
+            .map(|s| s.handle.clone())
+        else {
+            return Err(RouteError::ShardDown(key));
+        };
+        if h.down.load(Ordering::Acquire) {
+            return Err(RouteError::ShardDown(key));
+        }
+        let (tx, rx) = mpsc::channel();
+        // insert before writing: the reply may race back before this
+        // thread would regain the lock
+        lock(&h.waiters).insert(req.id, tx);
+        let frame = Frame::Submit {
+            id: req.id,
+            family: req.model.to_string(),
+            k: req.k,
+            t_unix_us: unix_us(),
+            input: req.input,
+        };
+        let delivered = match send_locked(&h.writer, &frame) {
+            Ok(true) => Ok(()),
+            Ok(false) => {
+                Err(WireError::Io("writer already closed".to_string()))
+            }
+            Err(e) => Err(e),
+        };
+        if let Err(e) = delivered {
+            eprintln!("fleet worker {shard}: submit not delivered: {e}");
+            h.down.store(true, Ordering::Release);
+            lock(&h.waiters).remove(&req.id);
+            return Err(RouteError::ShardDown(key));
+        }
+        // Close the race with the session's exit sweep (same protocol
+        // as the process transport): the session stores `down` before
+        // clearing waiters, so a false read here means our waiter either
+        // survives or was just swept; a true read means it may have
+        // landed after the sweep and must be removed by hand.
+        if h.down.load(Ordering::Acquire) {
+            lock(&h.waiters).remove(&req.id);
+            return Err(RouteError::ShardDown(key));
+        }
+        Ok(rx)
+    }
+
+    fn worker_pid(&self, shard: usize) -> Option<u32> {
+        self.shared.members.pid(shard)
+    }
+
+    fn membership_epoch(&self) -> u64 {
+        self.shared.members.epoch()
+    }
+
+    fn live_shards(&self) -> Vec<usize> {
+        self.shared.members.live()
+    }
+
+    fn drain_shard(&mut self, shard: usize) -> bool {
+        if !self.shared.members.mark_draining(shard) {
+            return false;
+        }
+        self.shared.hub.forget(shard);
+        let h = lock(&self.shared.slots)
+            .get(shard)
+            .map(|s| s.handle.clone());
+        match h {
+            Some(h) => {
+                if !matches!(
+                    send_locked(&h.writer, &Frame::Shutdown),
+                    Ok(true)
+                ) {
+                    member_gone(&self.shared, shard);
+                }
+            }
+            None => member_gone(&self.shared, shard),
+        }
+        true
+    }
+
+    fn shutdown(mut self: Box<Self>) -> Vec<Option<ShardReport>> {
+        let shared = self.shared.clone();
+        // no new members from here on; the wake-dial unblocks `accept`
+        stop_listening(&shared, self.addr, &mut self.accept);
+        let total = shared.members.total();
+        // signal every non-terminal member, so they drain concurrently
+        for slot in 0..total {
+            if matches!(
+                shared.members.state(slot),
+                None | Some(MemberState::Down | MemberState::Drained)
+            ) {
+                continue;
+            }
+            let h = lock(&shared.slots)
+                .get(slot)
+                .map(|s| s.handle.clone());
+            if let Some(h) = h {
+                if !matches!(
+                    send_locked(&h.writer, &Frame::Shutdown),
+                    Ok(true)
+                ) {
+                    member_gone(&shared, slot);
+                }
+            }
+        }
+        // wait for every slot to reach a terminal state (snapshot
+        // stashed or socket gone), then force-close stragglers
+        let deadline = Instant::now() + SHUTDOWN_DRAIN_BUDGET;
+        loop {
+            let pending: Vec<usize> = (0..total)
+                .filter(|&slot| {
+                    !matches!(
+                        shared.members.state(slot),
+                        None | Some(MemberState::Down | MemberState::Drained)
+                    )
+                })
+                .collect();
+            if pending.is_empty() {
+                break;
+            }
+            if Instant::now() >= deadline {
+                for slot in pending {
+                    eprintln!(
+                        "fleet front: shard {slot} did not drain within \
+                         {}s; force-closing its socket",
+                        SHUTDOWN_DRAIN_BUDGET.as_secs()
+                    );
+                    evict(&shared, slot);
+                }
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        // every session thread unblocks once its socket is closed
+        {
+            let slots = lock(&shared.slots);
+            for s in slots.iter() {
+                let _ = s.sock.shutdown(Shutdown::Both);
+            }
+        }
+        if let Some(m) = self.monitor.take() {
+            let _ = m.join();
+        }
+        let sessions = std::mem::take(&mut *lock(&shared.sessions));
+        for h in sessions {
+            let _ = h.join();
+        }
+        let mut reports = lock(&shared.reports);
+        (0..total).map(|slot| reports.remove(&slot)).collect()
+    }
+}
+
+/// Accept worker dials until `stopping`; one session thread per socket.
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    for conn in listener.incoming() {
+        if shared.stopping.load(Ordering::Acquire) {
+            return;
+        }
+        match conn {
+            Ok(stream) => {
+                let session_shared = shared.clone();
+                let handle = std::thread::spawn(move || {
+                    member_session(stream, session_shared)
+                });
+                lock(&shared.sessions).push(handle);
+            }
+            Err(e) => eprintln!("fleet front: accept failed: {e}"),
+        }
+    }
+}
+
+/// Unblock and join the accept loop: set the flag, then dial the
+/// listener once so `incoming()` yields and observes it.
+fn stop_listening(
+    shared: &Shared,
+    addr: SocketAddr,
+    accept: &mut Option<JoinHandle<()>>,
+) {
+    shared.stopping.store(true, Ordering::Release);
+    let _ = TcpStream::connect(addr);
+    if let Some(h) = accept.take() {
+        let _ = h.join();
+    }
+}
+
+/// Sweep for members whose silence exhausted the heartbeat budget and
+/// evict them. Ticks faster than it sweeps so shutdown never waits a
+/// full (possibly huge) heartbeat interval for this thread to notice
+/// `stopping`.
+fn monitor_loop(shared: Arc<Shared>, hb: HeartbeatConfig) {
+    let sweep = (hb.interval() / 2).max(Duration::from_millis(1));
+    let tick = sweep.min(Duration::from_millis(50));
+    let mut last_sweep = Instant::now();
+    loop {
+        std::thread::sleep(tick);
+        if shared.stopping.load(Ordering::Acquire) {
+            return;
+        }
+        if last_sweep.elapsed() < sweep {
+            continue;
+        }
+        last_sweep = Instant::now();
+        for slot in shared.members.overdue(hb.max_silence()) {
+            eprintln!(
+                "fleet front: shard {slot} silent past its heartbeat \
+                 budget ({}ms × {}); evicting",
+                hb.interval_ms, hb.miss_budget
+            );
+            evict(&shared, slot);
+        }
+    }
+}
+
+/// Forced teardown: close the member's socket (the session thread's
+/// blocking read errors out promptly) and run the down sweep.
+fn evict(shared: &Shared, slot: usize) {
+    if let Some(s) = lock(&shared.slots).get(slot) {
+        let _ = s.sock.shutdown(Shutdown::Both);
+    }
+    member_gone(shared, slot);
+}
+
+/// The member is gone (EOF, eviction, protocol error). Idempotent, and
+/// ordered like the process reader's exit path: `down` stores before
+/// the waiter sweep so `submit`'s double-check can never leak a waiter
+/// onto a dead slot.
+fn member_gone(shared: &Shared, slot: usize) {
+    shared.members.mark_down(slot);
+    shared.hub.forget(slot);
+    let handle = lock(&shared.slots).get(slot).map(|s| s.handle.clone());
+    if let Some(h) = handle {
+        h.down.store(true, Ordering::Release);
+        // dropping the senders fails every pending recv — no hangs
+        lock(&h.waiters).clear();
+        *lock(&h.writer) = None;
+    }
+}
+
+/// One member's lifetime on the front: handshake, frame dispatch, exit
+/// sweep. Runs on its own thread per accepted socket.
+fn member_session(stream: TcpStream, shared: Arc<Shared>) {
+    let _ = stream.set_nodelay(true);
+    let peer = stream
+        .peer_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| "<unknown>".to_string());
+    let writer_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("fleet front: cloning socket for {peer}: {e}");
+            return;
+        }
+    };
+    let sock = match stream.try_clone() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("fleet front: cloning socket for {peer}: {e}");
+            return;
+        }
+    };
+    let mut reader = BufReader::new(stream);
+
+    // -- join handshake: no slot is allocated until the dialer proves
+    // -- it speaks the protocol (a port probe costs nothing)
+    let pid = match wire::read_frame(&mut reader) {
+        Ok(Some(Frame::Join { pid })) => Some(pid),
+        Ok(None) => return, // wake-dial or port scan: silently dropped
+        Ok(Some(other)) => {
+            let mut w = BufWriter::new(&writer_half);
+            fatal(
+                &mut w,
+                &format!("expected join handshake, got '{}'", other.kind()),
+            );
+            return;
+        }
+        Err(e) => {
+            eprintln!("fleet front: rejected dial from {peer}: {e}");
+            return;
+        }
+    };
+    let handle = SlotHandle {
+        waiters: Arc::new(Mutex::new(HashMap::new())),
+        writer: Arc::new(Mutex::new(Some(BufWriter::new(writer_half)))),
+        down: Arc::new(AtomicBool::new(false)),
+    };
+    // one lock across both tables: concurrent dials must not interleave
+    // the member-slot and socket-slot pushes
+    let slot = {
+        let mut slots = lock(&shared.slots);
+        let slot = shared.members.join(pid);
+        slots.push(TcpSlot { handle: handle.clone(), sock });
+        slot
+    };
+    let init = Frame::Init {
+        shard: slot,
+        // the worker only range-checks its own index; an elastic
+        // fleet's member count is the roster, not a fixed constant
+        shards: slot + 1,
+        synthetic: shared.synthetic,
+        config: shared.config.clone(),
+    };
+    match send_locked(&handle.writer, &init) {
+        Ok(true) => {}
+        Ok(false) => {
+            member_gone(&shared, slot);
+            return;
+        }
+        Err(e) => {
+            eprintln!("fleet front: init not delivered to {peer}: {e}");
+            member_gone(&shared, slot);
+            return;
+        }
+    }
+    match wire::read_frame(&mut reader) {
+        Ok(Some(Frame::Ready { shard })) if shard == slot => {
+            shared.members.beat(slot);
+            shared.members.mark_up(slot);
+            eprintln!("fleet front: {peer} joined as shard {slot}");
+        }
+        Ok(Some(Frame::Ready { shard })) => {
+            eprintln!(
+                "fleet front: {peer} identifies as shard {shard}, \
+                 expected {slot}"
+            );
+            member_gone(&shared, slot);
+            return;
+        }
+        Ok(Some(Frame::Fatal { msg })) => {
+            eprintln!("fleet worker {slot}: {msg}");
+            member_gone(&shared, slot);
+            return;
+        }
+        Ok(Some(other)) => {
+            eprintln!(
+                "fleet front: expected ready from shard {slot}, got '{}'",
+                other.kind()
+            );
+            member_gone(&shared, slot);
+            return;
+        }
+        Ok(None) => {
+            eprintln!(
+                "fleet front: {peer} disconnected before the ready \
+                 handshake"
+            );
+            member_gone(&shared, slot);
+            return;
+        }
+        Err(e) => {
+            eprintln!("fleet worker {slot}: {e}");
+            member_gone(&shared, slot);
+            return;
+        }
+    }
+
+    // -- steady state: every inbound frame is liveness
+    loop {
+        match wire::read_frame(&mut reader) {
+            Ok(Some(frame)) => {
+                shared.members.beat(slot);
+                match frame {
+                    Frame::Reply { id, result } => {
+                        let tx = lock(&handle.waiters).remove(&id);
+                        if let (Some(tx), Ok(ok)) = (tx, result) {
+                            let _ = tx.send(Response {
+                                id,
+                                output: ok.output,
+                                latency_us: ok.latency_us,
+                                batch_size: ok.batch_size,
+                            });
+                        }
+                        // an error reply just dropped the sender: the
+                        // caller's recv fails immediately
+                    }
+                    Frame::Heartbeat { .. } => {}
+                    Frame::Steal => shared.hub.mark_hungry(slot),
+                    frame @ Frame::Donate { .. } => {
+                        let ids: Vec<RequestId> = match &frame {
+                            Frame::Donate { requests, .. } => {
+                                requests.iter().map(|r| r.id).collect()
+                            }
+                            _ => Vec::new(),
+                        };
+                        mediate_donation(
+                            slot,
+                            &frame,
+                            &ids,
+                            &shared.hub,
+                            |s| {
+                                lock(&shared.slots)
+                                    .get(s)
+                                    .map(|t| t.handle.clone())
+                            },
+                        );
+                    }
+                    Frame::Leave { .. } => {
+                        shared.members.mark_draining(slot);
+                        shared.hub.forget(slot);
+                        eprintln!(
+                            "fleet front: shard {slot} is leaving; \
+                             re-hashing routes over the remaining members"
+                        );
+                    }
+                    Frame::MetricsSnapshot {
+                        streams,
+                        rejected,
+                        stolen,
+                        donated,
+                    } => {
+                        let streams: BTreeMap<StreamKey, Metrics> = streams
+                            .into_iter()
+                            .map(|(family, k, m)| {
+                                ((Arc::from(family.as_str()), k), m)
+                            })
+                            .collect();
+                        lock(&shared.reports).insert(
+                            slot,
+                            ShardReport {
+                                streams,
+                                rejected,
+                                stolen,
+                                donated,
+                            },
+                        );
+                        shared.members.mark_drained(slot);
+                    }
+                    Frame::Fatal { msg } => {
+                        eprintln!("fleet worker {slot}: {msg}");
+                        member_gone(&shared, slot);
+                        return;
+                    }
+                    other => {
+                        eprintln!(
+                            "fleet front: unexpected '{}' frame from \
+                             shard {slot}",
+                            other.kind()
+                        );
+                        member_gone(&shared, slot);
+                        return;
+                    }
+                }
+            }
+            Ok(None) => {
+                member_gone(&shared, slot);
+                return;
+            }
+            Err(e) => {
+                // a socket torn down after a clean drain is expected;
+                // anything else is worth a line in the log
+                if shared.members.state(slot) != Some(MemberState::Drained)
+                {
+                    eprintln!("fleet worker {slot}: {e}");
+                }
+                member_gone(&shared, slot);
+                return;
+            }
+        }
+    }
+}
+
+// ---- the worker side ----------------------------------------------------
+
+/// Entry point of `topkima fleet-worker --connect HOST:PORT`: dial the
+/// fleet front (retrying while it binds), run the join → init → ready
+/// handshake, then serve the shared worker event loop with heartbeats
+/// enabled until shutdown, EOF, or the voluntary `--leave-after-ms`
+/// departure.
+pub fn run_fleet_worker(
+    connect: &str,
+    leave_after: Option<Duration>,
+) -> Result<()> {
+    let deadline = Instant::now() + DIAL_RETRY_BUDGET;
+    let stream = loop {
+        match TcpStream::connect(connect) {
+            Ok(s) => break s,
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    bail!("dialing fleet front {connect}: {e}");
+                }
+                std::thread::sleep(Duration::from_millis(200));
+            }
+        }
+    };
+    let _ = stream.set_nodelay(true);
+    let writer_half = stream
+        .try_clone()
+        .map_err(|e| anyhow!("cloning socket: {e}"))?;
+    let mut out = BufWriter::new(writer_half);
+    wire::write_frame(&mut out, &Frame::Join { pid: std::process::id() })
+        .map_err(|e| anyhow!("join handshake: {e}"))?;
+    let rx = spawn_frame_forwarder(stream);
+
+    // -- init handshake (mirrors the pipe worker) -------------------------
+    let (shard, shards, synthetic, config) = match rx.recv() {
+        Ok(WorkerMsg::Frame(Frame::Init {
+            shard,
+            shards,
+            synthetic,
+            config,
+        })) => (shard, shards, synthetic, config),
+        Ok(WorkerMsg::Frame(other)) => {
+            let msg =
+                format!("expected init handshake, got '{}'", other.kind());
+            fatal(&mut out, &msg);
+            bail!("{msg}");
+        }
+        Ok(WorkerMsg::Bad(e)) => {
+            fatal(&mut out, &e.to_string());
+            bail!("{e}");
+        }
+        Err(_) => bail!("front closed the socket before the init handshake"),
+    };
+    if shards == 0 || shard >= shards {
+        let msg = format!("init names shard {shard} of {shards}");
+        fatal(&mut out, &msg);
+        bail!("{msg}");
+    }
+    let builder = match crate::pipeline::StackConfig::from_json(&config)
+        .and_then(|cfg| cfg.build())
+    {
+        Ok(b) => b,
+        Err(e) => {
+            let msg = format!("init config rejected: {e}");
+            fatal(&mut out, &msg);
+            bail!("{msg}");
+        }
+    };
+    // Unlike the pipe worker there is no `shards == fleet.shards` check,
+    // and *every* stream is registered: an elastic fleet re-hashes over
+    // the live member set, so any stream can be routed (or donated)
+    // here at some point in this worker's life.
+    let mut router = Router::new();
+    for def in builder.stream_defs() {
+        router.register_def(def);
+    }
+    let mut executor = match builder.build_fleet_worker_executor(synthetic) {
+        Ok(e) => e,
+        Err(e) => {
+            let msg = format!("fleet worker executor: {e}");
+            fatal(&mut out, &msg);
+            bail!("{msg}");
+        }
+    };
+    wire::write_frame(&mut out, &Frame::Ready { shard })
+        .map_err(|e| anyhow!("ready handshake: {e}"))?;
+
+    let hb = HeartbeatConfig {
+        interval_ms: builder.config().fleet.transport.heartbeat_ms,
+        miss_budget: builder.config().fleet.transport.miss_budget,
+    };
+    let steal = builder.config().fleet.steal;
+    let opts = WorkerOpts {
+        shard,
+        steal_enabled: steal.enabled,
+        min_backlog: steal.min_backlog.max(1),
+        heartbeat: Some(hb.interval()),
+        leave_after,
+    };
+    run_worker_loop(&rx, &mut router, executor.as_mut(), &mut out, &opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use crate::coordinator::request::InputData;
+    use crate::coordinator::transport::wire::ReplyOk;
+
+    fn bind_pending(expect: usize) -> Option<TcpPending> {
+        let opts = TcpOptions {
+            expect,
+            config: crate::pipeline::StackConfig::default().to_json(),
+            synthetic: true,
+            heartbeat: HeartbeatConfig::default(),
+        };
+        match TcpPending::bind("127.0.0.1:0", opts) {
+            Ok(p) => Some(p),
+            Err(e) => {
+                eprintln!("SKIP: cannot bind loopback in this sandbox: {e}");
+                None
+            }
+        }
+    }
+
+    #[test]
+    fn join_timeout_is_typed_and_names_the_dial_command() {
+        let Some(pending) = bind_pending(1) else { return };
+        let err = pending
+            .into_transport(Duration::from_millis(50))
+            .err()
+            .expect("no worker ever dials: timeout");
+        let msg = err.to_string();
+        assert!(msg.contains("fleet worker(s)"), "{msg}");
+        assert!(msg.contains("fleet-worker --connect"), "{msg}");
+    }
+
+    #[test]
+    fn wake_probe_without_join_allocates_no_slot() {
+        let Some(pending) = bind_pending(0) else { return };
+        let addr = pending.local_addr();
+        drop(TcpStream::connect(addr).expect("loopback dial"));
+        std::thread::sleep(Duration::from_millis(100));
+        assert_eq!(pending.shared.members.total(), 0);
+        let transport = pending
+            .into_transport(Duration::from_secs(1))
+            .expect("zero expected workers joins immediately");
+        assert_eq!(Box::new(transport).shutdown().len(), 0);
+    }
+
+    /// An in-process fake worker speaking the raw protocol: the full
+    /// join → init → ready → submit/reply → shutdown → snapshot cycle
+    /// over a real loopback socket, no subprocess needed.
+    #[test]
+    fn handshake_and_round_trip_over_loopback() {
+        let Some(pending) = bind_pending(1) else { return };
+        let addr = pending.local_addr();
+        let worker = std::thread::spawn(move || -> Result<(), WireError> {
+            let stream = TcpStream::connect(addr)
+                .map_err(|e| WireError::Io(e.to_string()))?;
+            let mut out = BufWriter::new(
+                stream
+                    .try_clone()
+                    .map_err(|e| WireError::Io(e.to_string()))?,
+            );
+            let mut reader = BufReader::new(stream);
+            wire::write_frame(&mut out, &Frame::Join { pid: 4242 })?;
+            let shard = match wire::read_frame(&mut reader)? {
+                Some(Frame::Init { shard, .. }) => shard,
+                other => {
+                    return Err(WireError::Protocol(format!(
+                        "expected init, got {other:?}"
+                    )))
+                }
+            };
+            wire::write_frame(&mut out, &Frame::Ready { shard })?;
+            loop {
+                match wire::read_frame(&mut reader)? {
+                    Some(Frame::Submit { id, k, .. }) => {
+                        wire::write_frame(
+                            &mut out,
+                            &Frame::Reply {
+                                id,
+                                result: Ok(ReplyOk {
+                                    output: vec![k as f32],
+                                    latency_us: 1.0,
+                                    batch_size: 1,
+                                }),
+                            },
+                        )?;
+                    }
+                    Some(Frame::Shutdown) => {
+                        wire::write_frame(
+                            &mut out,
+                            &Frame::MetricsSnapshot {
+                                streams: vec![(
+                                    "bert".to_string(),
+                                    5,
+                                    Metrics::default(),
+                                )],
+                                rejected: 0,
+                                stolen: 0,
+                                donated: 0,
+                            },
+                        )?;
+                        return Ok(());
+                    }
+                    Some(_) => {}
+                    None => return Ok(()),
+                }
+            }
+        });
+        let mut transport = pending
+            .into_transport(Duration::from_secs(10))
+            .expect("fake worker joins");
+        assert_eq!(transport.kind(), "tcp");
+        assert_eq!(transport.shard_count(), 1);
+        assert_eq!(transport.live_shards(), vec![0]);
+        assert_eq!(transport.worker_pid(0), Some(4242));
+        assert!(transport.membership_epoch() >= 1);
+        let rx = transport
+            .submit(
+                0,
+                Request::shared(
+                    9,
+                    Arc::from("bert"),
+                    5,
+                    Arc::new(InputData::I32(vec![1])),
+                ),
+            )
+            .expect("routable shard accepts");
+        let r = rx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("reply crosses the socket");
+        assert_eq!(r.output, vec![5.0]);
+        let reports = Box::new(transport).shutdown();
+        assert_eq!(reports.len(), 1);
+        assert!(reports[0].is_some(), "drained snapshot stashed");
+        worker
+            .join()
+            .expect("worker thread")
+            .expect("worker protocol clean");
+    }
+}

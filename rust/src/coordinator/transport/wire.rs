@@ -19,6 +19,7 @@
 //!
 //! | kind               | direction        | payload |
 //! |--------------------|------------------|---------|
+//! | `join`             | worker → front   | membership dial-in: worker pid (version-checked) |
 //! | `init`             | front → worker   | shard index/count, executor choice, full `StackConfig` JSON |
 //! | `ready`            | worker → front   | handshake ack (version-checked) |
 //! | `submit`           | front → worker   | request id + stream key + input payload |
@@ -26,15 +27,21 @@
 //! | `poke`             | front → worker   | advisory wake-up (steal protocol) |
 //! | `donate`           | either           | a formed batch relocated for execution (steal protocol) |
 //! | `steal`            | worker → front   | request for donated work (steal protocol) |
+//! | `heartbeat`        | worker → front   | periodic liveness beacon (membership) |
+//! | `leave`            | worker → front   | voluntary departure announcement; drain follows |
 //! | `metrics_snapshot` | worker → front   | final [`ShardReport`]: per-stream metrics + counters |
 //! | `shutdown`         | front → worker   | drain queues, snapshot, exit |
 //! | `fatal`            | either           | unrecoverable protocol failure, then close |
 //!
-//! `donate`/`steal`/`poke` define the stealing half of the protocol;
-//! the current process transport rejects steal-enabled configs at
-//! validation (`fleet.transport` × `fleet.steal`), so receiving one is
-//! a protocol error — the frames exist so a future transport-mediated
-//! stealing implementation is a behavior change, not a format break.
+//! `donate`/`steal`/`poke` define the stealing half of the protocol,
+//! mediated by the front (DESIGN.md §16): an idle worker announces
+//! hunger with `steal`, a loaded worker ships surplus formed batches as
+//! `donate`, and the front forwards each donation to a hungry worker —
+//! or straight back to the donor when nobody is hungry, so no request
+//! is ever lost in flight. `join`/`heartbeat`/`leave` are the elastic
+//! membership half used by the TCP transport; the pipe transport's
+//! workers are spawned, not dialed, so they skip `join` and never
+//! heartbeat (a pipe EOF is already a synchronous death signal).
 //!
 //! [`ShardReport`]: super::ShardReport
 
@@ -160,6 +167,11 @@ pub struct DonatedRequest {
 /// move-only by design — a shard's accounting has exactly one owner.)
 #[derive(Debug)]
 pub enum Frame {
+    /// Membership dial-in (first frame on a TCP member socket,
+    /// worker → front). Carries the worker's OS pid so the front can
+    /// report `worker_pid` for sockets the way the process transport
+    /// does for children.
+    Join { pid: u32 },
     /// Handshake + worker configuration (first frame, front → worker).
     Init {
         shard: usize,
@@ -199,6 +211,11 @@ pub enum Frame {
         requests: Vec<DonatedRequest>,
     },
     Steal,
+    /// Periodic liveness beacon (worker → front, membership layer).
+    Heartbeat { shard: usize },
+    /// Voluntary departure: the worker asks to be evicted from routing,
+    /// then drains and snapshots (worker → front, membership layer).
+    Leave { shard: usize },
     MetricsSnapshot {
         /// Per-stream metrics executed on this shard.
         streams: Vec<(String, usize, Metrics)>,
@@ -214,6 +231,7 @@ impl Frame {
     /// The frame's `kind` tag (diagnostics).
     pub fn kind(&self) -> &'static str {
         match self {
+            Frame::Join { .. } => "join",
             Frame::Init { .. } => "init",
             Frame::Ready { .. } => "ready",
             Frame::Submit { .. } => "submit",
@@ -221,6 +239,8 @@ impl Frame {
             Frame::Poke => "poke",
             Frame::Donate { .. } => "donate",
             Frame::Steal => "steal",
+            Frame::Heartbeat { .. } => "heartbeat",
+            Frame::Leave { .. } => "leave",
             Frame::MetricsSnapshot { .. } => "metrics_snapshot",
             Frame::Shutdown => "shutdown",
             Frame::Fatal { .. } => "fatal",
@@ -230,6 +250,12 @@ impl Frame {
     pub fn to_json(&self) -> Json {
         let kind = |k: &str| ("kind", Json::Str(k.to_string()));
         match self {
+            Frame::Join { pid } => Json::obj(vec![
+                kind("join"),
+                ("format", Json::Str(WIRE_FORMAT.to_string())),
+                ("version", Json::Num(WIRE_VERSION as f64)),
+                ("pid", Json::Num(*pid as f64)),
+            ]),
             Frame::Init { shard, shards, synthetic, config } => {
                 Json::obj(vec![
                     kind("init"),
@@ -305,6 +331,14 @@ impl Frame {
                 ),
             ]),
             Frame::Steal => Json::obj(vec![kind("steal")]),
+            Frame::Heartbeat { shard } => Json::obj(vec![
+                kind("heartbeat"),
+                ("shard", Json::Num(*shard as f64)),
+            ]),
+            Frame::Leave { shard } => Json::obj(vec![
+                kind("leave"),
+                ("shard", Json::Num(*shard as f64)),
+            ]),
             Frame::MetricsSnapshot { streams, rejected, stolen, donated } => {
                 Json::obj(vec![
                     kind("metrics_snapshot"),
@@ -357,7 +391,7 @@ impl Frame {
         // handshake frames get the version gate before field checks, so
         // a future revision that renames fields still reports "skew",
         // not "unknown field"
-        if matches!(kind, "init" | "ready") {
+        if matches!(kind, "init" | "ready" | "join") {
             let format = v.get("format").as_str().unwrap_or("?");
             let version = v.get("version").as_f64().unwrap_or(-1.0);
             if format != WIRE_FORMAT || version != WIRE_VERSION as f64 {
@@ -367,6 +401,23 @@ impl Frame {
             }
         }
         match kind {
+            "join" => {
+                let mut pid = None;
+                for (key, value) in obj {
+                    match key.as_str() {
+                        "kind" | "format" | "version" => {}
+                        "pid" => pid = Some(int(value, "pid")? as u32),
+                        other => {
+                            return Err(proto(format!(
+                                "unknown join field '{other}'"
+                            )))
+                        }
+                    }
+                }
+                Ok(Frame::Join {
+                    pid: pid.ok_or_else(|| proto("join needs pid"))?,
+                })
+            }
             "init" => {
                 let (mut shard, mut shards, mut synthetic, mut config) =
                     (None, None, None, None);
@@ -651,6 +702,10 @@ impl Frame {
                 only_kind(obj, "steal")?;
                 Ok(Frame::Steal)
             }
+            "heartbeat" => {
+                Ok(Frame::Heartbeat { shard: only_shard(obj, kind)? })
+            }
+            "leave" => Ok(Frame::Leave { shard: only_shard(obj, kind)? }),
             "metrics_snapshot" => {
                 let mut streams = None;
                 let (mut rejected, mut stolen, mut donated) =
@@ -800,6 +855,31 @@ impl Frame {
     }
 }
 
+/// Decode a frame whose only payload is a `shard` index (the membership
+/// beacons `heartbeat` / `leave`). Unknown fields are skew, as always.
+fn only_shard(
+    obj: &std::collections::BTreeMap<String, Json>,
+    kind: &str,
+) -> Result<usize, WireError> {
+    let mut shard = None;
+    for (key, value) in obj {
+        match key.as_str() {
+            "kind" => {}
+            "shard" => {
+                shard = Some(
+                    value.as_u64().ok_or_else(|| {
+                        proto("shard must be a non-negative integer")
+                    })? as usize,
+                )
+            }
+            other => {
+                return Err(proto(format!("unknown {kind} field '{other}'")))
+            }
+        }
+    }
+    shard.ok_or_else(|| proto(format!("{kind} needs shard")))
+}
+
 /// Reject any field except `kind` (payload-free frames).
 fn only_kind(
     obj: &std::collections::BTreeMap<String, Json>,
@@ -912,6 +992,9 @@ mod tests {
         // with tolerance by the metrics.rs roundtrip tests
         let metrics = Metrics::default();
         let frames = vec![
+            Frame::Join { pid: 4242 },
+            Frame::Heartbeat { shard: 2 },
+            Frame::Leave { shard: 2 },
             Frame::Init {
                 shard: 1,
                 shards: 4,
@@ -1012,6 +1095,18 @@ mod tests {
             Frame::from_json(&alien),
             Err(WireError::Version { .. })
         ));
+        // the membership dial-in is version-gated like init/ready: a
+        // worker from a future build is told "skew", not "bad field"
+        let join = Json::obj(vec![
+            ("kind", Json::Str("join".to_string())),
+            ("format", Json::Str(WIRE_FORMAT.to_string())),
+            ("version", Json::Num(2.0)),
+            ("pid", Json::Num(1.0)),
+        ]);
+        assert!(matches!(
+            Frame::from_json(&join),
+            Err(WireError::Version { .. })
+        ));
         // version skew reports as skew even when fields also changed
         let renamed = Json::obj(vec![
             ("kind", Json::Str("ready".to_string())),
@@ -1044,6 +1139,17 @@ mod tests {
         match Frame::from_json(&extra) {
             Err(WireError::Protocol(msg)) => {
                 assert!(msg.contains("urgency"), "{msg}")
+            }
+            other => panic!("expected protocol error, got {other:?}"),
+        }
+        let beat = Json::obj(vec![
+            ("kind", Json::Str("heartbeat".to_string())),
+            ("shard", Json::Num(0.0)),
+            ("rtt_us", Json::Num(9.0)),
+        ]);
+        match Frame::from_json(&beat) {
+            Err(WireError::Protocol(msg)) => {
+                assert!(msg.contains("rtt_us"), "{msg}")
             }
             other => panic!("expected protocol error, got {other:?}"),
         }

@@ -1,12 +1,19 @@
 //! lock-discipline: no `Mutex`/`RwLock` guard live across a channel
-//! `.send()` or blocking `recv` in the same scope.
+//! `.send()`, a blocking `recv`, or a wire `write_frame(..)` in the
+//! same scope.
 //!
 //! The steal deque (`StealShared::lock_queue`) and the process
 //! transport's waiter map are exactly where this deadlock would hide:
 //! a shard that pokes a peer while still holding the deque lock can
-//! deadlock against that peer draining the deque. The checker tracks
-//! `let`-bound guards per brace scope and flags any channel operation
-//! before the guard's scope closes (or an explicit `drop(guard)`).
+//! deadlock against that peer draining the deque. Socket writes joined
+//! the list with the TCP transport: `write_frame` on a `TcpStream` can
+//! block indefinitely on a stalled peer's TCP window, so a guard held
+//! across it converts one frozen worker into a front-wide stall (the
+//! one sanctioned site, `membership::send_locked`, carries the
+//! suppression explaining why its guard is the write serializer). The
+//! checker tracks `let`-bound guards per brace scope and flags any such
+//! operation before the guard's scope closes (or an explicit
+//! `drop(guard)`).
 //!
 //! A binding only counts as a guard when the lock call is the *end* of
 //! the right-hand side (optionally chained through
@@ -18,10 +25,16 @@
 use super::scan::{match_paren, SourceFile};
 use super::RawHit;
 
-/// Channel operations that must not run under a lock. `try_recv` is
-/// non-blocking and exempt.
-const CHANNEL_OPS: &[&str] =
-    &[".send(", ".recv()", ".recv_timeout(", ".recv_deadline("];
+/// Operations that must not run under a lock: channel sends, blocking
+/// receives, and wire writes (a socket write blocks on the peer's TCP
+/// window). `try_recv` is non-blocking and exempt.
+const CHANNEL_OPS: &[&str] = &[
+    ".send(",
+    ".recv()",
+    ".recv_timeout(",
+    ".recv_deadline(",
+    "write_frame(",
+];
 
 /// Lock acquisitions: (needle, the args between the parens must be
 /// empty). Empty-args disambiguates `Mutex::lock()` / `RwLock::read()`
@@ -58,9 +71,10 @@ pub(crate) fn check(file: &SourceFile) -> Vec<RawHit> {
                     idx,
                     "lock-discipline",
                     format!(
-                        "channel send/recv while lock guard `{}` (taken \
-                         at line {}) is still live — drop the guard \
-                         before touching the channel",
+                        "channel send/recv or wire write while lock \
+                         guard `{}` (taken at line {}) is still live — \
+                         drop the guard before touching the channel or \
+                         socket",
                         g.name, g.line_no
                     ),
                 ));
@@ -218,6 +232,26 @@ mod tests {
         assert_eq!(h.len(), 1);
         assert!(h[0].2.contains("`q`"));
         assert!(h[0].2.contains("line 2"));
+    }
+
+    #[test]
+    fn guard_across_wire_write_is_flagged() {
+        // the TCP-transport hazard: a socket write can block on the
+        // peer's TCP window while the guard starves every other thread
+        let h = hits(
+            "fn f() {\n    let slots = lock(&shared.slots);\n    \
+             wire::write_frame(&mut out, &Frame::Poke)?;\n}\n",
+        );
+        assert_eq!(h.len(), 1);
+        assert!(h[0].2.contains("`slots`"));
+        assert!(h[0].2.contains("line 2"));
+        // dropping the guard first is the sanctioned shape
+        assert!(hits(
+            "fn f() {\n    let slots = lock(&shared.slots);\n    \
+             drop(slots);\n    wire::write_frame(&mut out, \
+             &Frame::Poke)?;\n}\n"
+        )
+        .is_empty());
     }
 
     #[test]

@@ -257,7 +257,9 @@ fn flag_for(struct_name: &str, field: &str) -> Option<String> {
         ("FleetConfig", "streams" | "steal" | "transport") => None,
         ("StreamSpec", _) | ("BatchPolicy", _) => None,
         ("TransportConfig", "kind") => Some("transport".to_string()),
-        ("TransportConfig", f) => Some(format!("transport-{f}")),
+        ("TransportConfig", f) => {
+            Some(format!("transport-{}", f.replace('_', "-")))
+        }
         ("StealPolicy", "enabled") => Some("steal".to_string()),
         ("StealPolicy", f) => {
             Some(format!("steal-{}", f.replace('_', "-")))

@@ -15,8 +15,11 @@
 //!   [--limit N]` — re-check Fig 3 on the rust stack: run every exported
 //!   per-k executable over the eval split and print accuracy vs k.
 //! * `serve-fleet [--seed S] [--duration-ms D] [--out FILE]
-//!   [--shards N] [--transport local|process] [--transport-worker PATH]
-//!   [--transport-env K=V] [--steal on|off] [--steal-min-backlog N]
+//!   [--shards N] [--transport local|process|tcp]
+//!   [--transport-worker PATH] [--transport-env K=V]
+//!   [--transport-listen HOST:PORT] [--transport-heartbeat-ms MS]
+//!   [--transport-miss-budget N] [--steal on|off]
+//!   [--steal-min-backlog N]
 //!   [--steal-victim least-loaded|round-robin] [--trace FILE]
 //!   [--export-trace FILE] [--deterministic] [--behavioral]
 //!   [--config fleet.json]
@@ -27,10 +30,14 @@
 //!   trace (`--trace`; `--export-trace` writes the schedule actually
 //!   submitted, so traces are self-bootstrapping). `--transport process`
 //!   runs each shard as a `topkima shard-worker` subprocess speaking
-//!   the versioned wire protocol (DESIGN.md §11) — a deterministic
-//!   replay produces a byte-identical BENCH file on either transport,
-//!   which ci.sh asserts. `--steal on` lets overloaded shards donate
-//!   formed batches to idle peers (local transport only);
+//!   the versioned wire protocol (DESIGN.md §11); `--transport tcp`
+//!   binds `--transport-listen` and waits for `topkima fleet-worker
+//!   --connect` processes to dial in (cross-host, elastic membership —
+//!   DESIGN.md §16) — a deterministic replay produces a byte-identical
+//!   BENCH file on any transport, which ci.sh asserts. `--steal on`
+//!   lets overloaded shards donate formed batches to idle peers
+//!   (in-process on the local transport, front-mediated over the
+//!   `donate`/`steal` frames on process and tcp);
 //!   `--deterministic` replays with lifted deadlines and emits only
 //!   schedule-determined fields, so the same trace always produces a
 //!   byte-identical `BENCH_fleet.json`. `--behavioral` swaps the
@@ -44,6 +51,11 @@
 //!   counters land in `BENCH_fleet.json`.
 //! * `shard-worker` — internal: one fleet shard driven over
 //!   stdin/stdout by the process transport; never invoked by hand.
+//! * `fleet-worker --connect HOST:PORT [--leave-after-ms MS]` — one TCP
+//!   fleet shard: dial a `serve-fleet --transport tcp` front, handshake
+//!   (`join`/`init`/`ready`), then serve with heartbeats until
+//!   shutdown, eviction, or the optional voluntary leave. Runs on any
+//!   host that can reach the front.
 //! * `sweep-hw [--threads N] [--ks 1,2,5,10] [--seq-lens 128,384]
 //!   [--kinds conv,dtopk,topkima] [--noise-points ideal,default]
 //!   [--q-rows N] [--seed S] [--shard-index I --shard-count C]
@@ -99,6 +111,7 @@ fn main() -> Result<()> {
         "serve" => cmd_serve(rest),
         "serve-fleet" => cmd_serve_fleet(rest),
         "shard-worker" => topkima::coordinator::transport::run_shard_worker(),
+        "fleet-worker" => cmd_fleet_worker(rest),
         "sweep" => cmd_sweep(rest),
         "sweep-hw" => cmd_sweep_hw(rest),
         "sweep-merge" => cmd_sweep_merge(rest),
@@ -145,12 +158,18 @@ const SUBCOMMANDS: &[(&str, &str, &str)] = &[
         "serve-fleet",
         "sharded multi-stream fleet under synthetic or replayed load",
         "--shards N                 shard event loops (default: 2)\n\
-         --transport local|process  fleet\u{2194}shard transport (default: \
-         local)\n\
+         --transport local|process|tcp  fleet\u{2194}shard transport \
+         (default: local)\n\
          --transport-worker PATH    worker binary for the process \
          transport (default: this executable)\n\
          --transport-env K=V        extra env for worker subprocesses \
          (repeatable)\n\
+         --transport-listen HOST:PORT  tcp: address the front binds; \
+         workers dial it with `topkima fleet-worker --connect`\n\
+         --transport-heartbeat-ms MS   tcp: worker heartbeat cadence \
+         (default: 500)\n\
+         --transport-miss-budget N     tcp: silent heartbeat intervals \
+         before the front evicts a worker (default: 3)\n\
          --duration-ms D            synthetic load window (default: 400)\n\
          --seed S                   load-generator seed (default: 7)\n\
          --out FILE                 BENCH output (default: \
@@ -166,8 +185,9 @@ const SUBCOMMANDS: &[(&str, &str, &str)] = &[
          (behavioral only; default: 16384)\n\
          --long-chunk N             key columns streamed per tile \
          (behavioral only; default: 256)\n\
-         --steal on|off             batch-granular work-stealing (local \
-         transport only)\n\
+         --steal on|off             batch-granular work-stealing \
+         (in-process on local; front-mediated donate/steal frames on \
+         process and tcp)\n\
          --steal-min-backlog N      batches a donor keeps per round\n\
          --steal-victim least-loaded|round-robin\n\
          --ab A,B                   accelerator A/B study: replace the \
@@ -183,6 +203,15 @@ const SUBCOMMANDS: &[(&str, &str, &str)] = &[
          stdin/stdout",
         "(no flags — spawned by `serve-fleet --transport process`; \
          handshake arrives on stdin)",
+    ),
+    (
+        "fleet-worker",
+        "one TCP fleet shard: dial a `serve-fleet --transport tcp` front",
+        "--connect HOST:PORT    the front's --transport-listen address \
+         (required); retried for 10s while the front binds\n\
+         --leave-after-ms MS    announce a voluntary leave after MS, \
+         drain in-flight batches, and exit (scale-in hook; default: \
+         serve until front shutdown or eviction)",
     ),
     (
         "report",
@@ -553,7 +582,7 @@ fn cmd_serve_fleet(args: &[String]) -> Result<()> {
     use std::sync::Arc;
     use std::time::Instant;
 
-    use topkima::coordinator::trace::{Trace, TraceStream};
+    use topkima::coordinator::trace::{Trace, TraceReader, TraceStream};
     use topkima::coordinator::{InputData, StreamKey};
     use topkima::pipeline::StreamSpec;
     use topkima::util::json::{self, Json};
@@ -726,9 +755,49 @@ fn cmd_serve_fleet(args: &[String]) -> Result<()> {
     let default_len = |s: &StreamSpec| -> usize {
         if s.family() == "vit" { 48 } else { 64 }
     };
-    let trace = match &trace_in {
-        Some(path) => Trace::load(path)
-            .map_err(|e| anyhow::anyhow!("loading {path}: {e}"))?,
+    // Map every event onto its configured stream (loud failure for a
+    // trace that names a stream this fleet does not serve).
+    let spec_index: HashMap<(&str, usize), usize> = specs
+        .iter()
+        .enumerate()
+        .map(|(si, s)| ((s.family(), s.k), si))
+        .collect();
+    let lookup = |family: &str, k: usize| -> Result<usize> {
+        spec_index.get(&(family, k)).copied().ok_or_else(|| {
+            anyhow::anyhow!(
+                "trace stream {family}/k={k} is not in the fleet config"
+            )
+        })
+    };
+    let mut schedule: Vec<(u64, usize, usize)> = Vec::new();
+    match &trace_in {
+        Some(path) => {
+            // Replay streams the JSONL line-by-line: memory is bounded
+            // by the compact (t_us, stream, len) schedule tuples, never
+            // the raw file or its event structs. Re-exporting a
+            // replayed trace is the one case that still materializes.
+            let mut reader = TraceReader::open(path)
+                .map_err(|e| anyhow::anyhow!("loading {path}: {e}"))?;
+            let mut copy =
+                trace_out.as_ref().map(|_| Trace::default());
+            for ev in &mut reader {
+                let ev = ev
+                    .map_err(|e| anyhow::anyhow!("loading {path}: {e}"))?;
+                schedule.push((
+                    ev.t_us,
+                    lookup(&ev.family, ev.k)?,
+                    ev.input_len,
+                ));
+                if let Some(t) = &mut copy {
+                    t.events.push(ev);
+                }
+            }
+            if let (Some(t), Some(out)) = (copy, &trace_out) {
+                t.save(out)
+                    .map_err(|e| anyhow::anyhow!("writing {out}: {e}"))?;
+                println!("exported trace ({} events) → {out}", t.len());
+            }
+        }
         None => {
             let streams: Vec<TraceStream> = specs
                 .iter()
@@ -739,35 +808,25 @@ fn cmd_serve_fleet(args: &[String]) -> Result<()> {
                     rate_rps: s.rate_rps,
                 })
                 .collect();
-            Trace::poisson(&streams, seed, duration_ms)
+            let trace = Trace::poisson(&streams, seed, duration_ms);
+            if let Some(path) = &trace_out {
+                trace
+                    .save(path)
+                    .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+                println!(
+                    "exported trace ({} events) → {path}",
+                    trace.len()
+                );
+            }
+            schedule.reserve(trace.len());
+            for ev in &trace.events {
+                schedule.push((
+                    ev.t_us,
+                    lookup(&ev.family, ev.k)?,
+                    ev.input_len,
+                ));
+            }
         }
-    };
-    if let Some(path) = &trace_out {
-        trace
-            .save(path)
-            .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
-        println!("exported trace ({} events) → {path}", trace.len());
-    }
-    // Map every event onto its configured stream (loud failure for a
-    // trace that names a stream this fleet does not serve).
-    let spec_index: HashMap<(&str, usize), usize> = specs
-        .iter()
-        .enumerate()
-        .map(|(si, s)| ((s.family(), s.k), si))
-        .collect();
-    let mut schedule = Vec::with_capacity(trace.len());
-    for ev in &trace.events {
-        let si = spec_index
-            .get(&(ev.family.as_str(), ev.k))
-            .copied()
-            .ok_or_else(|| {
-                anyhow::anyhow!(
-                    "trace stream {}/k={} is not in the fleet config",
-                    ev.family,
-                    ev.k
-                )
-            })?;
-        schedule.push((ev.t_us, si, ev.input_len));
     }
     let source = if trace_in.is_some() { "trace" } else { "synthetic" };
     println!("load: {} requests scheduled ({source})", schedule.len());
@@ -1000,6 +1059,39 @@ fn cmd_serve_fleet(args: &[String]) -> Result<()> {
         bail!("{dropped} requests dropped under the {source} load");
     }
     Ok(())
+}
+
+/// `fleet-worker`: one TCP fleet shard. Dials the front, runs the
+/// `join` → `init` → `ready` handshake (the full `StackConfig` arrives
+/// in the init frame — nothing is configured locally), then serves the
+/// shared worker event loop with heartbeats until shutdown, EOF, or
+/// the optional voluntary leave.
+fn cmd_fleet_worker(args: &[String]) -> Result<()> {
+    let mut connect: Option<String> = None;
+    let mut leave_after: Option<Duration> = None;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--connect" => {
+                connect = Some(flag_value(args, i, "connect")?);
+                i += 2;
+            }
+            "--leave-after-ms" => {
+                let ms: u64 =
+                    flag_value(args, i, "leave-after-ms")?.parse()?;
+                leave_after = Some(Duration::from_millis(ms));
+                i += 2;
+            }
+            other => bail!("fleet-worker: unknown flag '{other}'"),
+        }
+    }
+    let connect = connect.ok_or_else(|| {
+        anyhow::anyhow!(
+            "fleet-worker needs --connect HOST:PORT (the front's \
+             --transport-listen address)"
+        )
+    })?;
+    topkima::coordinator::transport::run_fleet_worker(&connect, leave_after)
 }
 
 /// Decode one model output row and compare to the eval label.

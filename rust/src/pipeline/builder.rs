@@ -14,11 +14,13 @@ use std::time::Duration;
 use anyhow::Result;
 
 use crate::arch::ArchConfig;
-use crate::coordinator::transport::{ProcessOptions, ProcessTransport};
+use crate::coordinator::transport::{
+    ProcessOptions, ProcessTransport, TcpOptions, TcpPending,
+};
 use crate::coordinator::{
     shard_of, BatcherConfig, BehavioralExecutor, Coordinator, Executor,
-    ExecutorFactory, Fleet, PjrtExecutor, Router, StreamDef, StreamKey,
-    SyntheticExecutor,
+    ExecutorFactory, Fleet, HeartbeatConfig, PjrtExecutor, Router, StreamDef,
+    StreamKey, SyntheticExecutor,
 };
 use crate::crossbar::Crossbar;
 use crate::ima::ColumnNoise;
@@ -30,6 +32,12 @@ use crate::softmax::SoftmaxMacro;
 use crate::util::rng::Rng;
 
 use super::config::{ConfigError, StackConfig, StreamSpec, TransportKind};
+
+/// How long a TCP fleet front waits for its workers to dial in before
+/// startup fails loudly. Generous: workers may be launched by hand in a
+/// second terminal (the README quickstart), and a retrying worker dials
+/// every ~200 ms once it is up.
+const TCP_JOIN_TIMEOUT: Duration = Duration::from_secs(60);
 
 /// Assembles every layer of the stack from one validated config.
 #[derive(Clone, Debug)]
@@ -238,6 +246,7 @@ impl PipelineBuilder {
     pub fn start_fleet(&self) -> Result<Fleet, ConfigError> {
         match self.cfg.fleet.transport.kind {
             TransportKind::Process => self.start_fleet_process(false),
+            TransportKind::Tcp => self.start_fleet_tcp(false),
             TransportKind::Local => {
                 let manifest = Path::new(&self.cfg.serving.artifacts)
                     .join("manifest.json");
@@ -257,6 +266,7 @@ impl PipelineBuilder {
     pub fn start_fleet_synthetic(&self) -> Result<Fleet, ConfigError> {
         match self.cfg.fleet.transport.kind {
             TransportKind::Process => self.start_fleet_process(true),
+            TransportKind::Tcp => self.start_fleet_tcp(true),
             TransportKind::Local => self.start_fleet_local_synthetic(),
         }
     }
@@ -304,12 +314,53 @@ impl PipelineBuilder {
         ))
     }
 
+    /// Listen on `fleet.transport.listen` and wait for `fleet.shards`
+    /// `topkima fleet-worker` processes to dial in, then run the fleet
+    /// front over the membership-aware TCP transport (DESIGN.md §16).
+    /// Workers receive this exact config in the handshake, like the
+    /// process transport.
+    fn start_fleet_tcp(&self, synthetic: bool) -> Result<Fleet, ConfigError> {
+        let t = &self.cfg.fleet.transport;
+        // validation guarantees `listen` for the tcp kind; a missing
+        // address here is a typed error, not a panic
+        let listen = t.listen.clone().ok_or_else(|| ConfigError::Invalid {
+            field: "fleet.transport.listen".to_string(),
+            reason: "the tcp transport needs a host:port to listen on"
+                .to_string(),
+        })?;
+        let opts = TcpOptions {
+            expect: self.cfg.fleet.shards,
+            config: self.cfg.to_json(),
+            synthetic,
+            heartbeat: HeartbeatConfig {
+                interval_ms: t.heartbeat_ms,
+                miss_budget: t.miss_budget,
+            },
+        };
+        let pending = TcpPending::bind(&listen, opts)
+            .map_err(|e| ConfigError::Io(format!("tcp transport: {e}")))?;
+        eprintln!(
+            "fleet front listening on {} (waiting for {} worker(s): \
+             `topkima fleet-worker --connect {}`)",
+            pending.local_addr(),
+            self.cfg.fleet.shards,
+            pending.local_addr(),
+        );
+        let transport = pending
+            .into_transport(TCP_JOIN_TIMEOUT)
+            .map_err(|e| ConfigError::Io(format!("tcp transport: {e}")))?;
+        Ok(Fleet::start_transport(
+            &self.stream_defs(),
+            Box::new(transport),
+        ))
+    }
+
     /// Start the configured fleet over behavioral executors
     /// (`serve-fleet --behavioral`): every batch does real circuit-macro
     /// work — batched MAC + batched top-k conversion — instead of a
-    /// modeled sleep. Executors are in-process objects, so like
-    /// work-stealing this is local-transport only; the process
-    /// transport is a typed rejection, not a silent downgrade.
+    /// modeled sleep. Executors are in-process objects, so behavioral
+    /// mode is local-transport only; the process and tcp transports
+    /// are a typed rejection, not a silent downgrade.
     pub fn start_fleet_behavioral(&self) -> Result<Fleet, ConfigError> {
         self.start_fleet_behavioral_exec(self.behavioral_executor())
     }
@@ -323,7 +374,7 @@ impl PipelineBuilder {
         &self,
         exec: BehavioralExecutor,
     ) -> Result<Fleet, ConfigError> {
-        if self.cfg.fleet.transport.kind == TransportKind::Process {
+        if self.cfg.fleet.transport.kind != TransportKind::Local {
             return Err(ConfigError::Invalid {
                 field: "fleet.transport".to_string(),
                 reason: "behavioral executors run in-process (the wire \
@@ -401,6 +452,41 @@ impl PipelineBuilder {
                 let key: StreamKey = (Arc::from(spec.family()), spec.k);
                 shard_of(&key, shards) == shard
             })
+            .map(|spec| {
+                (
+                    spec.family().to_string(),
+                    spec.k,
+                    spec.policy.buckets.clone(),
+                )
+            })
+            .collect();
+        let engine = Engine::new(&self.cfg.serving.artifacts)
+            .map_err(|e| ConfigError::Io(format!("engine: {e}")))?;
+        let exec = PjrtExecutor::preload(&engine, &streams)
+            .map_err(|e| ConfigError::Io(format!("preload: {e}")))?;
+        Ok(Box::new(exec))
+    }
+
+    /// Build the executor for an *elastic* fleet worker (`topkima
+    /// fleet-worker`), in the calling thread. Unlike
+    /// [`Self::build_shard_executor`] this preloads **every** configured
+    /// stream: under elastic membership the front re-hashes routing over
+    /// the live member set whenever a host joins or leaves, so any
+    /// stream can land on any worker — a shard-filtered preload would
+    /// fault on the first re-hash (and donated batches from stealing
+    /// cross shard lines by design anyway).
+    pub fn build_fleet_worker_executor(
+        &self,
+        synthetic: bool,
+    ) -> Result<Box<dyn Executor>, ConfigError> {
+        let manifest =
+            Path::new(&self.cfg.serving.artifacts).join("manifest.json");
+        if synthetic || !manifest.exists() {
+            return Ok(Box::new(self.synthetic_executor()?));
+        }
+        let streams: Vec<(String, usize, Vec<usize>)> = self
+            .fleet_specs()
+            .iter()
             .map(|spec| {
                 (
                     spec.family().to_string(),

@@ -191,13 +191,16 @@ impl StreamSpec {
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum TransportKind {
     /// Shard event loops as threads in this process (channels + the
-    /// in-memory steal deque) — the default, and the only transport
-    /// that mediates work-stealing today.
+    /// in-memory steal deque) — the default.
     #[default]
     Local,
     /// One `topkima shard-worker` subprocess per shard, speaking the
     /// versioned length-prefixed JSONL wire protocol over pipes.
     Process,
+    /// Cross-host shards over length-prefixed JSONL sockets: workers
+    /// dial the front (`topkima fleet-worker --connect`), heartbeat,
+    /// and may join or leave under live load (DESIGN.md §16).
+    Tcp,
 }
 
 impl TransportKind {
@@ -206,6 +209,7 @@ impl TransportKind {
         match self {
             TransportKind::Local => "local",
             TransportKind::Process => "process",
+            TransportKind::Tcp => "tcp",
         }
     }
 
@@ -213,14 +217,16 @@ impl TransportKind {
         match s {
             "local" => Some(TransportKind::Local),
             "process" => Some(TransportKind::Process),
+            "tcp" => Some(TransportKind::Tcp),
             _ => None,
         }
     }
 }
 
 /// The `fleet.transport` config section: transport kind plus the
-/// process transport's knobs (worker binary, per-worker environment).
-#[derive(Clone, Debug, Default, PartialEq)]
+/// process transport's knobs (worker binary, per-worker environment)
+/// and the TCP transport's knobs (listen address, heartbeat contract).
+#[derive(Clone, Debug, PartialEq)]
 pub struct TransportConfig {
     pub kind: TransportKind,
     /// Worker binary path for the process transport; `None` spawns the
@@ -230,6 +236,28 @@ pub struct TransportConfig {
     /// Extra environment variables for every worker subprocess
     /// (sorted map — JSON round-trips are order-stable).
     pub env: std::collections::BTreeMap<String, String>,
+    /// TCP transport only: the `host:port` the front listens on for
+    /// dialing workers (port 0 picks an ephemeral port). Required when
+    /// `kind = tcp`; ignored otherwise.
+    pub listen: Option<String>,
+    /// TCP transport only: worker heartbeat cadence, milliseconds.
+    pub heartbeat_ms: u64,
+    /// TCP transport only: consecutive silent heartbeat intervals
+    /// before the front evicts a worker (DESIGN.md §16).
+    pub miss_budget: u32,
+}
+
+impl Default for TransportConfig {
+    fn default() -> Self {
+        TransportConfig {
+            kind: TransportKind::default(),
+            worker: None,
+            env: std::collections::BTreeMap::new(),
+            listen: None,
+            heartbeat_ms: 500,
+            miss_budget: 3,
+        }
+    }
 }
 
 /// The fleet section of the stack: shard count + stream list + the
@@ -246,11 +274,13 @@ pub struct FleetConfig {
     /// Stealing relocates *formed* batches only, so enabling it never
     /// changes request→batch composition; within a stream, completion
     /// order of neighboring batches may interleave (DESIGN.md §10).
-    /// Only the local transport mediates stealing — validation rejects
-    /// it combined with the process transport.
+    /// The local transport mediates it in-process; the process and tcp
+    /// transports mediate it at the front over the `donate`/`steal`
+    /// wire frames (DESIGN.md §16).
     pub steal: StealPolicy,
-    /// How requests reach the shards: in-process channels (default) or
-    /// `shard-worker` subprocesses (DESIGN.md §11).
+    /// How requests reach the shards: in-process channels (default),
+    /// `shard-worker` subprocesses (DESIGN.md §11), or dialed-in TCP
+    /// workers (DESIGN.md §16).
     pub transport: TransportConfig,
 }
 
@@ -577,15 +607,27 @@ impl StackConfig {
                  zero batches would idle itself and thrash the deque)",
             ));
         }
-        if self.fleet.steal.enabled
-            && self.fleet.transport.kind == TransportKind::Process
+        if self.fleet.transport.kind == TransportKind::Tcp
+            && self.fleet.transport.listen.is_none()
         {
             return Err(invalid(
-                "fleet.transport",
-                "work-stealing is not mediated over the process transport \
-                 (the wire protocol reserves donate/steal frames, but only \
-                 the local transport implements them) — disable \
-                 fleet.steal or use the local transport",
+                "fleet.transport.listen",
+                "the tcp transport needs a host:port to listen on \
+                 (--transport-listen; port 0 picks an ephemeral port)",
+            ));
+        }
+        if self.fleet.transport.heartbeat_ms == 0 {
+            return Err(invalid(
+                "fleet.transport.heartbeat_ms",
+                "must be ≥ 1 (a zero heartbeat cadence would evict every \
+                 worker instantly)",
+            ));
+        }
+        if self.fleet.transport.miss_budget == 0 {
+            return Err(invalid(
+                "fleet.transport.miss_budget",
+                "must be ≥ 1 (one missed interval is the tightest \
+                 eviction budget)",
             ));
         }
         if let Some(worker) = &self.fleet.transport.worker {
@@ -759,6 +801,28 @@ impl StackConfig {
                                             )
                                         })
                                         .collect(),
+                                ),
+                            ),
+                            (
+                                "listen",
+                                self.fleet
+                                    .transport
+                                    .listen
+                                    .as_ref()
+                                    .map_or(Json::Null, |l| {
+                                        Json::Str(l.clone())
+                                    }),
+                            ),
+                            (
+                                "heartbeat_ms",
+                                Json::Num(
+                                    self.fleet.transport.heartbeat_ms as f64,
+                                ),
+                            ),
+                            (
+                                "miss_budget",
+                                Json::Num(
+                                    self.fleet.transport.miss_budget as f64,
                                 ),
                             ),
                         ]),
@@ -1019,7 +1083,7 @@ impl StackConfig {
                 "transport" => {
                     cfg.fleet.transport.kind = TransportKind::parse(&val)
                         .ok_or_else(|| {
-                            bad_flag("transport", &val, "local|process")
+                            bad_flag("transport", &val, "local|process|tcp")
                         })?
                 }
                 "transport-worker" => {
@@ -1034,6 +1098,17 @@ impl StackConfig {
                         .transport
                         .env
                         .insert(k.to_string(), v.to_string());
+                }
+                "transport-listen" => {
+                    cfg.fleet.transport.listen = Some(val)
+                }
+                "transport-heartbeat-ms" => {
+                    cfg.fleet.transport.heartbeat_ms =
+                        parse_usize("transport-heartbeat-ms", &val)? as u64
+                }
+                "transport-miss-budget" => {
+                    cfg.fleet.transport.miss_budget =
+                        parse_usize("transport-miss-budget", &val)? as u32
                 }
                 other => {
                     return Err(ConfigError::UnknownFlag(format!("--{other}")))
@@ -1276,7 +1351,7 @@ fn transport_from(v: &Json) -> Result<TransportConfig, ConfigError> {
                 t.kind = TransportKind::parse(s).ok_or_else(|| {
                     invalid(
                         "fleet.transport.kind",
-                        format!("'{s}' unknown (local | process)"),
+                        format!("'{s}' unknown (local | process | tcp)"),
                     )
                 })?;
             }
@@ -1303,6 +1378,23 @@ fn transport_from(v: &Json) -> Result<TransportConfig, ConfigError> {
                         ))
                     })
                     .collect::<Result<_, ConfigError>>()?;
+            }
+            "listen" => {
+                t.listen = match value {
+                    Json::Null => None,
+                    other => Some(
+                        json_str(other, "fleet.transport.listen")?
+                            .to_string(),
+                    ),
+                }
+            }
+            "heartbeat_ms" => {
+                t.heartbeat_ms =
+                    json_usize(value, "fleet.transport.heartbeat_ms")? as u64
+            }
+            "miss_budget" => {
+                t.miss_budget =
+                    json_usize(value, "fleet.transport.miss_budget")? as u32
             }
             other => {
                 return Err(ConfigError::UnknownField(format!(
@@ -1809,6 +1901,7 @@ mod tests {
             kind: TransportKind::Process,
             worker: Some("/usr/bin/topkima".to_string()),
             env,
+            ..TransportConfig::default()
         });
         cfg.validate().unwrap();
         let back = StackConfig::from_json_str(&cfg.to_json_string()).unwrap();
@@ -1818,6 +1911,24 @@ mod tests {
             back.fleet.transport.env.get("RUST_LOG").map(String::as_str),
             Some("warn")
         );
+        // a fully-specified tcp transport round-trips too
+        let cfg = three_stream_config().with_transport(TransportConfig {
+            kind: TransportKind::Tcp,
+            listen: Some("127.0.0.1:7411".to_string()),
+            heartbeat_ms: 250,
+            miss_budget: 4,
+            ..TransportConfig::default()
+        });
+        cfg.validate().unwrap();
+        let back = StackConfig::from_json_str(&cfg.to_json_string()).unwrap();
+        assert_eq!(cfg, back);
+        assert_eq!(back.fleet.transport.kind, TransportKind::Tcp);
+        assert_eq!(
+            back.fleet.transport.listen.as_deref(),
+            Some("127.0.0.1:7411")
+        );
+        assert_eq!(back.fleet.transport.heartbeat_ms, 250);
+        assert_eq!(back.fleet.transport.miss_budget, 4);
         // absent transport section keeps the default
         let cfg =
             StackConfig::from_json_str(r#"{"fleet": {"shards": 2}}"#)
@@ -1827,30 +1938,46 @@ mod tests {
 
     #[test]
     fn transport_validation_and_unknown_fields() {
-        // stealing over the process transport is a typed rejection
-        let cfg = StackConfig::default()
-            .with_transport(TransportConfig {
-                kind: TransportKind::Process,
-                ..TransportConfig::default()
-            })
-            .with_steal(StealPolicy {
-                enabled: true,
-                min_backlog: 1,
-                victim: VictimSelect::LeastLoaded,
-            });
+        // stealing is wire-mediated now: valid on every transport
+        for kind in [TransportKind::Local, TransportKind::Process] {
+            let cfg = StackConfig::default()
+                .with_transport(TransportConfig {
+                    kind,
+                    ..TransportConfig::default()
+                })
+                .with_steal(StealPolicy {
+                    enabled: true,
+                    min_backlog: 1,
+                    victim: VictimSelect::LeastLoaded,
+                });
+            assert!(
+                cfg.validate().is_ok(),
+                "steal × {} must validate",
+                kind.key()
+            );
+        }
+        // tcp without a listen address is a typed rejection
+        let cfg = StackConfig::default().with_transport(TransportConfig {
+            kind: TransportKind::Tcp,
+            ..TransportConfig::default()
+        });
         let err = cfg.validate().unwrap_err();
         assert!(
             matches!(&err, ConfigError::Invalid { field, .. }
-                     if field == "fleet.transport"),
-            "steal × process must be typed: {err:?}"
+                     if field == "fleet.transport.listen"),
+            "tcp needs listen: {err:?}"
         );
-        // stealing over the local transport stays fine
-        let cfg = StackConfig::default().with_steal(StealPolicy {
-            enabled: true,
-            min_backlog: 1,
-            victim: VictimSelect::LeastLoaded,
+        // degenerate heartbeat contracts are typed rejections
+        let cfg = StackConfig::default().with_transport(TransportConfig {
+            heartbeat_ms: 0,
+            ..TransportConfig::default()
         });
-        assert!(cfg.validate().is_ok());
+        assert!(cfg.validate().is_err());
+        let cfg = StackConfig::default().with_transport(TransportConfig {
+            miss_budget: 0,
+            ..TransportConfig::default()
+        });
+        assert!(cfg.validate().is_err());
         // empty worker path is rejected (use null for current exe)
         let cfg = StackConfig::default().with_transport(TransportConfig {
             kind: TransportKind::Process,
@@ -1899,19 +2026,39 @@ mod tests {
             cfg.fleet.transport.env.get("B").map(String::as_str),
             Some("x=y")
         );
+        // tcp flags parse; listen is mandatory for the tcp kind
+        let cfg = StackConfig::from_args(&args(&[
+            "--transport", "tcp",
+            "--transport-listen", "127.0.0.1:0",
+            "--transport-heartbeat-ms", "200",
+            "--transport-miss-budget", "5",
+        ]))
+        .unwrap();
+        assert_eq!(cfg.fleet.transport.kind, TransportKind::Tcp);
+        assert_eq!(
+            cfg.fleet.transport.listen.as_deref(),
+            Some("127.0.0.1:0")
+        );
+        assert_eq!(cfg.fleet.transport.heartbeat_ms, 200);
+        assert_eq!(cfg.fleet.transport.miss_budget, 5);
         assert!(
-            StackConfig::from_args(&args(&["--transport", "tcp"])).is_err()
+            StackConfig::from_args(&args(&["--transport", "tcp"])).is_err(),
+            "tcp without --transport-listen is rejected"
+        );
+        assert!(
+            StackConfig::from_args(&args(&["--transport", "rdma"])).is_err()
         );
         assert!(StackConfig::from_args(&args(&[
             "--transport-env",
             "NOEQUALS"
         ]))
         .is_err());
-        // the steal × process rejection also fires from flags
-        assert!(StackConfig::from_args(&args(&[
+        // steal × process is wire-mediated now, not a rejection
+        let cfg = StackConfig::from_args(&args(&[
             "--transport", "process", "--steal", "on",
         ]))
-        .is_err());
+        .unwrap();
+        assert!(cfg.fleet.steal.enabled);
     }
 
     #[test]

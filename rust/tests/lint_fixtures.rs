@@ -127,6 +127,23 @@ fn lock_discipline_catches_a_guard_held_across_a_send() {
 }
 
 #[test]
+fn lock_discipline_catches_a_guard_held_across_a_socket_write() {
+    // the TCP membership hazard: a slots-table guard held across a
+    // frame write blocks every submitter on one stalled peer's socket
+    let set = single(
+        "rust/src/coordinator/transport/tcp.rs",
+        "fn poke(&self) -> Result<(), WireError> {\n    \
+         let slots = lock(&self.shared.slots);\n    \
+         wire::write_frame(&mut slots[0].writer, &Frame::Poke)\n}\n",
+    );
+    let report = run(&set);
+    assert_eq!(report.findings.len(), 1, "{:?}", report.findings);
+    assert_eq!(report.findings[0].checker, "lock-discipline");
+    assert!(report.findings[0].message.contains("`slots`"));
+    assert_eq!(report.findings[0].line, 3);
+}
+
+#[test]
 fn unknown_field_catches_a_decoder_that_ignores_unknown_keys() {
     let set = single(
         "rust/src/coordinator/trace.rs",

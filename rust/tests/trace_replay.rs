@@ -7,10 +7,11 @@
 //! whole `BENCH_fleet.json` files from the CLI replay path.
 
 use std::collections::{BTreeMap, HashMap};
+use std::io::{BufRead, Read};
 use std::sync::Arc;
 
 use anyhow::Result;
-use topkima::coordinator::trace::{Trace, TraceStream};
+use topkima::coordinator::trace::{Trace, TraceReader, TraceStream};
 use topkima::coordinator::{
     Executor, ExecutorFactory, InputData, StealPolicy, StreamKey,
     VictimSelect,
@@ -134,6 +135,97 @@ fn replay(
             )
         })
         .collect()
+}
+
+/// Lazy JSONL source: synthesizes a trace of `total` events one line
+/// at a time, so the "file" never exists in memory. `max_held` records
+/// the largest buffer `fill_buf` ever exposed — the streaming reader's
+/// true peak working set for the source side.
+struct LineGen {
+    next: usize,
+    total: usize,
+    buf: Vec<u8>,
+    pos: usize,
+    max_held: usize,
+}
+
+impl LineGen {
+    fn new(total: usize) -> LineGen {
+        LineGen { next: 0, total, buf: Vec::new(), pos: 0, max_held: 0 }
+    }
+
+    fn refill(&mut self) {
+        if self.pos < self.buf.len() || self.next > self.total {
+            return;
+        }
+        self.buf.clear();
+        self.pos = 0;
+        let line = if self.next == 0 {
+            format!(
+                "{{\"events\":{},\"format\":\"topkima-trace\",\
+                 \"version\":1}}\n",
+                self.total
+            )
+        } else {
+            format!(
+                "{{\"family\":\"bert\",\"input_len\":16,\"k\":5,\
+                 \"t_us\":{}}}\n",
+                self.next - 1
+            )
+        };
+        self.buf.extend_from_slice(line.as_bytes());
+        self.next += 1;
+        self.max_held = self.max_held.max(self.buf.len());
+    }
+}
+
+impl Read for LineGen {
+    fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+        let avail = self.fill_buf()?;
+        let n = avail.len().min(out.len());
+        out[..n].copy_from_slice(&avail[..n]);
+        self.consume(n);
+        Ok(n)
+    }
+}
+
+impl BufRead for LineGen {
+    fn fill_buf(&mut self) -> std::io::Result<&[u8]> {
+        self.refill();
+        Ok(&self.buf[self.pos..])
+    }
+
+    fn consume(&mut self, amt: usize) {
+        self.pos = (self.pos + amt).min(self.buf.len());
+    }
+}
+
+/// The replay path reads traces through `TraceReader`, one line at a
+/// time. Drive a quarter-million-event trace (≈15 MB as a file) from a
+/// generator that only ever materializes a single line, and assert the
+/// source was never asked to hold more than that one line — the
+/// bounded-memory contract `serve-fleet --trace` relies on.
+#[test]
+fn streaming_reader_holds_one_line_on_large_traces() {
+    const N: usize = 250_000;
+    let mut reader =
+        TraceReader::new(LineGen::new(N)).expect("valid header");
+    assert_eq!(reader.declared_events(), Some(N));
+    let (mut count, mut last_t) = (0usize, 0u64);
+    for ev in &mut reader {
+        let ev = ev.expect("valid event line");
+        assert_eq!(ev.family, "bert");
+        last_t = ev.t_us;
+        count += 1;
+    }
+    assert_eq!(count, N, "declared-count check passed at end of stream");
+    assert_eq!(last_t, (N - 1) as u64);
+    let src = reader.into_inner();
+    assert!(
+        src.max_held < 128,
+        "source never buffered more than one line (held {} bytes)",
+        src.max_held
+    );
 }
 
 #[test]

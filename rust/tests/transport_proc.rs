@@ -26,7 +26,7 @@ fn process_transport() -> TransportConfig {
     TransportConfig {
         kind: TransportKind::Process,
         worker: Some(worker_bin()),
-        env: Default::default(),
+        ..TransportConfig::default()
     }
 }
 
@@ -243,7 +243,7 @@ fn worker_dead_on_arrival_degrades_typed() {
     let cfg = live_config().with_transport(TransportConfig {
         kind: TransportKind::Process,
         worker: Some("/bin/true".to_string()),
-        env: Default::default(),
+        ..TransportConfig::default()
     });
     let b = cfg.build().expect("valid config");
     let mut fleet = b.start_fleet_synthetic().expect("spawn itself succeeds");
@@ -270,7 +270,7 @@ fn missing_worker_binary_fails_spawn_loudly() {
     let cfg = live_config().with_transport(TransportConfig {
         kind: TransportKind::Process,
         worker: Some("/nonexistent/topkima-worker".to_string()),
-        env: Default::default(),
+        ..TransportConfig::default()
     });
     let b = cfg.build().expect("config itself is valid");
     let err = b

@@ -1,0 +1,405 @@
+//! TCP-transport acceptance: the fleet front over `topkima
+//! fleet-worker` processes dialing in over loopback (DESIGN.md §16)
+//! must (a) form byte-identical batch compositions to the local
+//! transport under a deterministic load — with stealing on, since tcp
+//! stealing is front-mediated over the donate/steal frames, (b) drop
+//! waiters promptly and degrade to typed `RouteError::ShardDown` when
+//! a worker is killed mid-load, (c) conserve per-stream request counts
+//! across a scale-out, (d) drain gracefully (scale-in flushes in-flight
+//! batches before the socket closes), and (e) evict a frozen (SIGSTOP)
+//! worker on heartbeat misses and re-route around it.
+//!
+//! Every test binds `127.0.0.1:0`; a sandbox that cannot bind a
+//! loopback port SKIPs loudly instead of failing.
+
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+use topkima::coordinator::transport::{TcpOptions, TcpPending};
+use topkima::coordinator::{
+    shard_of, Fleet, FleetMetrics, HeartbeatConfig, InputData, RouteError,
+    StealPolicy, StreamKey, VictimSelect,
+};
+use topkima::pipeline::{
+    BatchPolicy, ModelKind, StackConfig, StreamSpec, TransportConfig,
+    TransportKind,
+};
+use topkima::softmax::SoftmaxKind;
+
+fn worker_bin() -> String {
+    env!("CARGO_BIN_EXE_topkima").to_string()
+}
+
+fn spawn_worker(addr: &str) -> Child {
+    Command::new(worker_bin())
+        .args(["fleet-worker", "--connect", addr])
+        .stdout(Stdio::null())
+        .spawn()
+        .expect("fleet-worker spawns")
+}
+
+fn tcp_transport(heartbeat_ms: u64) -> TransportConfig {
+    TransportConfig {
+        kind: TransportKind::Tcp,
+        listen: Some("127.0.0.1:0".to_string()),
+        heartbeat_ms,
+        ..TransportConfig::default()
+    }
+}
+
+/// Bind a front on an OS-assigned loopback port, dial `workers`
+/// fleet-worker subprocesses into it, and start the fleet. `None` (with
+/// a loud SKIP line) when the sandbox cannot bind a loopback port.
+fn start_tcp_fleet(
+    cfg: &StackConfig,
+    workers: usize,
+) -> Option<(Fleet, Vec<Child>, String)> {
+    let t = &cfg.fleet.transport;
+    let opts = TcpOptions {
+        expect: workers,
+        config: cfg.to_json(),
+        synthetic: true,
+        heartbeat: HeartbeatConfig {
+            interval_ms: t.heartbeat_ms,
+            miss_budget: t.miss_budget,
+        },
+    };
+    let pending = match TcpPending::bind("127.0.0.1:0", opts) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!(
+                "SKIP: sandbox cannot bind a loopback port ({e}) — the \
+                 tcp transport was NOT exercised by this test"
+            );
+            return None;
+        }
+    };
+    let addr = pending.local_addr().to_string();
+    let children: Vec<Child> =
+        (0..workers).map(|_| spawn_worker(&addr)).collect();
+    let transport = pending
+        .into_transport(Duration::from_secs(60))
+        .expect("workers dial in");
+    let b = cfg.clone().build().expect("valid config");
+    let fleet = Fleet::start_transport(&b.stream_defs(), Box::new(transport));
+    Some((fleet, children, addr))
+}
+
+fn reap(mut children: Vec<Child>) {
+    for child in &mut children {
+        let _ = child.kill();
+        let _ = child.wait();
+    }
+}
+
+/// Lifted deadlines and full-bucket-only forming (the
+/// fleet_determinism policy): batch composition is a pure function of
+/// per-stream arrival order, so local and tcp fleets must agree.
+fn deterministic_config() -> StackConfig {
+    let slow = |buckets: Vec<usize>| BatchPolicy {
+        buckets,
+        max_wait_us: 3_600_000_000,
+        max_queue: 0,
+    };
+    StackConfig::default()
+        .with_shards(2)
+        .with_steal(StealPolicy {
+            enabled: true,
+            min_backlog: 1,
+            victim: VictimSelect::LeastLoaded,
+        })
+        .with_stream(
+            StreamSpec::new(ModelKind::BertTiny, 5, SoftmaxKind::Topkima)
+                .with_policy(slow(vec![2, 4])),
+        )
+        .with_stream(
+            StreamSpec::new(ModelKind::BertTiny, 10, SoftmaxKind::Dtopk)
+                .with_policy(slow(vec![1, 2, 8])),
+        )
+        .with_stream(
+            StreamSpec::new(ModelKind::VitBase, 3, SoftmaxKind::Conventional)
+                .with_policy(slow(vec![4])),
+        )
+}
+
+/// One stream on a bucket the load never fills: its requests stay in
+/// flight until a flush (or a death) resolves them.
+fn stuck_bucket_config(heartbeat_ms: u64) -> StackConfig {
+    StackConfig::default()
+        .with_shards(2)
+        .with_stream(
+            StreamSpec::new(ModelKind::BertTiny, 5, SoftmaxKind::Topkima)
+                .with_policy(BatchPolicy {
+                    buckets: vec![8],
+                    max_wait_us: 3_600_000_000,
+                    max_queue: 0,
+                }),
+        )
+        .with_transport(tcp_transport(heartbeat_ms))
+}
+
+fn submit_interleaved(
+    fleet: &mut Fleet,
+    range: std::ops::Range<i32>,
+) -> Vec<std::sync::mpsc::Receiver<topkima::coordinator::Response>> {
+    let mut rxs = Vec::new();
+    for i in range {
+        let (family, k, input) = match i % 3 {
+            0 => ("bert", 5usize, InputData::I32(vec![i, 0])),
+            1 => ("bert", 10, InputData::I32(vec![i, 1])),
+            _ => ("vit", 3, InputData::F32(vec![i as f32])),
+        };
+        rxs.push(fleet.submit(family, k, input).expect("accepted"));
+    }
+    rxs
+}
+
+fn stream_tuples(
+    fm: &FleetMetrics,
+) -> Vec<(String, usize, usize, usize, f64, f64)> {
+    fm.per_stream
+        .iter()
+        .map(|(key, m)| {
+            (
+                key.0.to_string(),
+                key.1,
+                m.completed(),
+                m.batches(),
+                m.mean_batch_size(),
+                m.padding_fraction(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn deterministic_composition_matches_the_local_transport() {
+    // local leg (stealing on — trace_replay proves it metric-invariant)
+    let b = deterministic_config().build().expect("valid config");
+    let mut local = b.start_fleet_synthetic().expect("fleet starts");
+    let rxs = submit_interleaved(&mut local, 0..23);
+    let local_fm = local.shutdown().expect("healthy shutdown");
+    for rx in &rxs {
+        assert!(rx.try_recv().is_ok(), "every request answered");
+    }
+
+    // tcp leg: same load through two dialed-in worker processes
+    let cfg = deterministic_config()
+        .with_transport(tcp_transport(3_600_000));
+    let Some((mut fleet, children, _)) = start_tcp_fleet(&cfg, 2) else {
+        return;
+    };
+    assert_eq!(fleet.transport_kind(), "tcp");
+    assert_eq!(fleet.shard_count(), 2);
+    assert_eq!(fleet.live_shards(), vec![0, 1]);
+    for shard in 0..2 {
+        assert!(
+            fleet.worker_pid(shard).is_some(),
+            "tcp shards expose worker pids from the Join handshake"
+        );
+    }
+    let rxs = submit_interleaved(&mut fleet, 0..23);
+    let tcp_fm = fleet.shutdown().expect("healthy shutdown");
+    for rx in &rxs {
+        assert!(rx.try_recv().is_ok(), "every request answered");
+    }
+    assert_eq!(
+        stream_tuples(&local_fm),
+        stream_tuples(&tcp_fm),
+        "local and tcp transports must form identical batches"
+    );
+    reap(children);
+}
+
+#[test]
+fn killed_worker_drops_waiters_and_degrades_typed() {
+    // one worker: its death leaves no live member, so submissions hit
+    // the typed ShardDown path instead of re-hashing to a survivor
+    let cfg = stuck_bucket_config(3_600_000);
+    let Some((mut fleet, children, _)) = start_tcp_fleet(&cfg, 1) else {
+        return;
+    };
+    let rx = fleet
+        .submit("bert", 5, InputData::I32(vec![1, 0]))
+        .expect("accepted while the worker lives");
+    let pid = fleet.worker_pid(0).expect("worker pid");
+    let killed = Command::new("kill")
+        .args(["-9", &pid.to_string()])
+        .status()
+        .expect("kill runs");
+    assert!(killed.success(), "kill -9 {pid}");
+    // the session reader sees the broken socket and sweeps the waiters
+    // promptly — the pending receiver fails instead of hanging
+    assert!(
+        rx.recv_timeout(Duration::from_secs(10)).is_err(),
+        "pending request must fail, not hang"
+    );
+    let mut err = None;
+    for _ in 0..400 {
+        match fleet.submit("bert", 5, InputData::I32(vec![2, 0])) {
+            Err(e) => {
+                err = Some(e);
+                break;
+            }
+            Ok(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+    let err = err.expect("dead worker eventually rejects submissions");
+    assert!(
+        matches!(err, RouteError::ShardDown(_)),
+        "killed tcp worker surfaces as ShardDown: {err:?}"
+    );
+    // shutdown reports the dead shard like a panicked one — no hang,
+    // no front panic
+    let panic = fleet.shutdown().expect_err("dead worker surfaces");
+    assert!(
+        panic.shards.contains(&0),
+        "dead shard index reported: {:?}",
+        panic.shards
+    );
+    reap(children);
+}
+
+#[test]
+fn scale_out_mid_trace_conserves_per_stream_counts() {
+    // start with ONE worker, submit half the trace, dial a second
+    // worker in under load, submit the rest: re-hashing moves streams
+    // onto the newcomer, and the per-stream metrics merged across the
+    // move must account for every request exactly once
+    let cfg = deterministic_config()
+        .with_transport(tcp_transport(3_600_000));
+    let Some((mut fleet, mut children, addr)) = start_tcp_fleet(&cfg, 1)
+    else {
+        return;
+    };
+    assert_eq!(fleet.live_shards(), vec![0]);
+    let mut rxs = submit_interleaved(&mut fleet, 0..12);
+
+    children.push(spawn_worker(&addr));
+    let mut joined = false;
+    for _ in 0..2_000 {
+        if fleet.live_shards().len() == 2 {
+            joined = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(joined, "second worker joins the live set under load");
+    assert_eq!(fleet.shard_count(), 2);
+    rxs.extend(submit_interleaved(&mut fleet, 12..23));
+
+    let fm = fleet.shutdown().expect("healthy shutdown");
+    for rx in &rxs {
+        assert!(rx.try_recv().is_ok(), "every request answered");
+    }
+    // conservation: 23 interleaved requests = 8 bert/5, 8 bert/10,
+    // 7 vit/3 — independent of which member executed them
+    let completed: Vec<(String, usize, usize)> = fm
+        .per_stream
+        .iter()
+        .map(|(key, m)| (key.0.to_string(), key.1, m.completed()))
+        .collect();
+    assert_eq!(
+        completed,
+        vec![
+            ("bert".to_string(), 5, 8),
+            ("bert".to_string(), 10, 8),
+            ("vit".to_string(), 3, 7),
+        ],
+        "per-stream request counts conserved across the scale-out"
+    );
+    assert_eq!(fm.aggregate().completed(), 23);
+    assert_eq!(fm.aggregate().errors(), 0);
+    reap(children);
+}
+
+#[test]
+fn drain_shard_flushes_in_flight_then_reroutes() {
+    // scale-in under load: the drained member executes its queued
+    // partial batch before the socket closes, and later submissions
+    // re-hash onto the survivor
+    let cfg = stuck_bucket_config(3_600_000);
+    let Some((mut fleet, children, _)) = start_tcp_fleet(&cfg, 2) else {
+        return;
+    };
+    let victim = shard_of(&(std::sync::Arc::from("bert"), 5), 2);
+    let rx = fleet
+        .submit("bert", 5, InputData::I32(vec![3, 4]))
+        .expect("accepted before the drain");
+    assert!(fleet.drain_shard(victim), "live member accepts a drain");
+    assert!(!fleet.drain_shard(victim), "double-drain is a no-op");
+    // graceful: the in-flight request is answered, not dropped — the
+    // drain flush forms its partial batch ([sum, k] from the synthetic
+    // executor)
+    let r = rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("drain flushes in-flight batches before the socket closes");
+    assert_eq!(r.output, vec![7.0, 5.0]);
+    // the stream re-hashes onto the survivor and keeps serving
+    let rx2 = fleet
+        .submit("bert", 5, InputData::I32(vec![1, 1]))
+        .expect("survivor serves the re-hashed stream");
+    let fm = fleet.shutdown().expect("drained member is not a failure");
+    assert!(rx2.try_recv().is_ok(), "post-drain request answered");
+    let bert: StreamKey = (std::sync::Arc::from("bert"), 5);
+    assert_eq!(
+        fm.per_stream[&bert].completed(),
+        2,
+        "both requests accounted across the drained and surviving member"
+    );
+    reap(children);
+}
+
+#[test]
+fn frozen_worker_is_evicted_on_heartbeat_misses() {
+    // 100 ms beacons, miss budget 3: a SIGSTOPped worker goes silent
+    // and the front must evict it in ~300 ms, sweep its waiters, and
+    // re-route its streams to the survivor (the live worker keeps
+    // beating, so only the frozen one trips the budget)
+    let cfg = stuck_bucket_config(100);
+    let Some((mut fleet, children, _)) = start_tcp_fleet(&cfg, 2) else {
+        return;
+    };
+    let victim = shard_of(&(std::sync::Arc::from("bert"), 5), 2);
+    let rx = fleet
+        .submit("bert", 5, InputData::I32(vec![1, 0]))
+        .expect("accepted while the worker is live");
+    let pid = fleet.worker_pid(victim).expect("worker pid");
+    let stopped = Command::new("kill")
+        .args(["-STOP", &pid.to_string()])
+        .status()
+        .expect("kill -STOP runs");
+    assert!(stopped.success(), "kill -STOP {pid}");
+    let mut evicted = false;
+    for _ in 0..2_000 {
+        let live = fleet.live_shards();
+        if live.len() == 1 && !live.contains(&victim) {
+            evicted = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(evicted, "front evicts the silent member on heartbeat misses");
+    // eviction swept the waiters: the in-flight request fails promptly
+    assert!(
+        rx.recv_timeout(Duration::from_secs(10)).is_err(),
+        "waiters on the evicted member must fail, not hang"
+    );
+    // the stream re-hashes onto the survivor and keeps serving
+    let rx2 = fleet
+        .submit("bert", 5, InputData::I32(vec![2, 2]))
+        .expect("survivor serves after the eviction");
+    // un-freeze before shutdown so the OS can reap the process; its
+    // socket is already gone, so it plays no further part
+    let _ = Command::new("kill")
+        .args(["-CONT", &pid.to_string()])
+        .status();
+    let panic = fleet.shutdown().expect_err("evicted member is reported");
+    assert!(
+        panic.shards.contains(&victim),
+        "evicted shard index reported: {:?}",
+        panic.shards
+    );
+    assert!(rx2.try_recv().is_ok(), "survivor's flush answers the request");
+    reap(children);
+}
